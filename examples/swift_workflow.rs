@@ -1,0 +1,91 @@
+//! Swift-style dataflow workflow on live Falkon, with a mid-run failure
+//! and restart-log resume — §3.3's reliability story as a runnable demo.
+//!
+//! A two-stage screening pipeline: `dock` scores ligands (fan-out), then
+//! `summarize` aggregates (fan-in). The first run injects application
+//! failures into some dock tasks; the second run resumes from the restart
+//! log and only re-executes what didn't complete.
+//!
+//! ```text
+//! cargo run --release --example swift_workflow
+//! ```
+
+use falkon::falkon::dispatch::DispatchConfig;
+use falkon::falkon::exec::{spawn_fleet, DefaultRunner};
+use falkon::falkon::service::{Service, ServiceConfig};
+use falkon::falkon::task::TaskPayload;
+use falkon::swift::engine::{run, FalkonBackend, FileLog};
+use falkon::swift::script::Workflow;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const SCRIPT: &str = r#"
+# A miniature DOCK screening pipeline in the workflow DSL.
+app dock exec=0 read=30000 write=30000 objects=dock5.bin:5000000,static.dat:35000000
+app summarize exec=0 read=120000 write=2000
+sweep app=dock n=24 in=ligands/lig{}.mol2 out=scores/lig{}.score
+chain app=summarize in=scores/lig0.score,scores/lig1.score,scores/lig2.score out=report/top.txt
+"#;
+
+fn main() -> anyhow::Result<()> {
+    let wf = Workflow::parse(SCRIPT).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    println!("workflow: {} steps, {} external inputs", wf.steps.len(), wf.external_inputs().len());
+
+    let svc = Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        dispatch: DispatchConfig { bundle: 2, data_aware: false },
+        retry: Default::default(),
+    })?;
+    let fleet = spawn_fleet(&svc.addr().to_string(), 3, Arc::new(DefaultRunner), 1)?;
+    anyhow::ensure!(svc.wait_executors(3, Duration::from_secs(5)));
+
+    let log_path = std::env::temp_dir().join(format!("falkon-demo-restart-{}.log", std::process::id()));
+    let _ = std::fs::remove_file(&log_path);
+
+    // ---- Run 1: 5 dock tasks fail (application errors).
+    let failures = Arc::new(AtomicU32::new(5));
+    {
+        let mut log = FileLog::open(&log_path)?;
+        let f = failures.clone();
+        let mut backend = FalkonBackend::new(&svc, move |app, _step| {
+            if app.name == "dock" && f.fetch_sub(1, Ordering::SeqCst) > 0 && f.load(Ordering::SeqCst) < 5 {
+                // exit 9: simulated DOCK failure on this ligand
+                TaskPayload::Command {
+                    program: "/bin/sh".into(),
+                    args: vec!["-c".into(), "exit 9".into()],
+                }
+            } else {
+                TaskPayload::Sleep { secs: 0.0 }
+            }
+        });
+        let report = run(&wf, &mut backend, &mut log)?;
+        println!(
+            "run 1: executed {}, failed {} (injected), skipped {}",
+            report.executed, report.failed, report.skipped_from_log
+        );
+    }
+
+    // ---- Run 2: resume — only the failed/blocked steps re-execute.
+    {
+        let mut log = FileLog::open(&log_path)?;
+        let mut backend = FalkonBackend::new(&svc, |_app, _step| TaskPayload::Sleep { secs: 0.0 });
+        let report = run(&wf, &mut backend, &mut log)?;
+        println!(
+            "run 2 (resume): executed {}, failed {}, skipped {} from restart log",
+            report.executed, report.failed, report.skipped_from_log
+        );
+        anyhow::ensure!(report.failed == 0, "resume must complete the workflow");
+        println!(
+            "restart log at {} — 'check-pointing occurs inherently with every task that completes' (§3.3)",
+            log_path.display()
+        );
+    }
+
+    let _ = std::fs::remove_file(&log_path);
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,69 @@
+"""AOT lowering: JAX models -> HLO text artifacts for the Rust runtime.
+
+Interchange is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that the published xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot [--out-dir ../artifacts]
+
+Run via ``make artifacts`` — which skips the (slow) lowering when the
+outputs are newer than their inputs. Python never runs at request time.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a jittable fn to HLO text via StableHLO -> XlaComputation."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is LOAD-BEARING: the default printer
+    # elides big constants as `constant({...})`, which xla_extension
+    # 0.5.1's text parser silently materializes as zeros — the artifact
+    # then computes garbage with no error. (Found the hard way; the
+    # runtime_integration tests guard against regressions.)
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+ARTIFACTS = {
+    "mars_batch": (model.mars_batch, model.mars_example_args),
+    "dock_score": (model.dock_batch, model.dock_example_args),
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", choices=sorted(ARTIFACTS), help="lower one artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = [args.only] if args.only else sorted(ARTIFACTS)
+    for name in names:
+        fn, example = ARTIFACTS[name]
+        text = to_hlo_text(fn, example())
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+        print(f"wrote {path}: {len(text)} chars, sha256 {digest}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels: mars (refinery economics), dock (pose scoring), ref (oracles)."""

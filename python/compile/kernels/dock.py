@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: DOCK rigid-ligand grid scoring.
+
+DOCK 5 identifies low-energy binding poses of a ligand in a receptor's
+active site. The paper treats DOCK as a black box; we implement its inner
+scoring loop — the classic *energy grid* formulation — as the compute
+hot-spot so the live executors run real chemistry-shaped arithmetic.
+
+Hardware adaptation: neighbor-list scoring is sparse and branchy (bad for
+the MXU). The grid formulation is contraction-dense: for each pose, the
+pairwise squared distances between L ligand atoms and G receptor grid
+points decompose as
+
+    d2[l, g] = |x_l|^2 + |y_g|^2 - 2 * (X @ Y^T)[l, g]
+
+whose dominant term is an [L,3] @ [3,G] matmul, followed by elementwise
+Coulomb + Lennard-Jones terms and a reduction. The kernel tiles poses on
+the grid dimension of ``pallas_call``; each step keeps X [L,3], Y [G,3]
+and the charge vectors in VMEM.
+
+``interpret=True``: see mars.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default problem shape (per-pose scoring).
+LIG_ATOMS = 64      # ligand atoms
+GRID_POINTS = 128   # receptor grid points
+POSES = 32          # poses scored per call
+
+# Softening epsilon: keeps 1/d terms finite at grid contact.
+EPS = 0.25
+# Lennard-Jones coefficients (reduced units).
+LJ_A = 1.0e-2
+LJ_B = 2.0e-1
+
+
+def _score_kernel(pose_ref, ligq_ref, grid_ref, gridq_ref, out_ref):
+    """Score one pose.
+
+    pose_ref:  [1, L, 3] ligand atom coordinates for this pose
+    ligq_ref:  [1, L] ligand partial charges
+    grid_ref:  [G, 3] receptor grid coordinates (shared)
+    gridq_ref: [1, G] receptor grid charges (shared)
+    out_ref:   [1] pose energy
+    """
+    x = pose_ref[0]            # [L, 3]
+    y = grid_ref[...]          # [G, 3]
+    qx = ligq_ref[0]           # [L]
+    qy = gridq_ref[0]          # [G]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)        # [L, 1]
+    y2 = jnp.sum(y * y, axis=1, keepdims=True).T      # [1, G]
+    cross = x @ y.T                                   # [L, G] — the MXU term
+    d2 = x2 + y2 - 2.0 * cross + EPS
+    inv_d2 = 1.0 / d2
+    inv_d6 = inv_d2 * inv_d2 * inv_d2
+    coulomb = qx[:, None] * qy[None, :] * jnp.sqrt(inv_d2)
+    lj = LJ_A * inv_d6 * inv_d6 - LJ_B * inv_d6
+    out_ref[...] = jnp.sum(coulomb + lj).reshape(out_ref.shape)
+
+
+def dock_score(poses, lig_q, grid, grid_q):
+    """Score P poses: returns f32[P] energies.
+
+    poses: f32[P, L, 3]; lig_q: f32[P, L] (per-pose charges — identical
+    rows for a rigid ligand); grid: f32[G, 3]; grid_q: f32[G].
+    """
+    p, l, _ = poses.shape
+    g = grid.shape[0]
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, l, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((g, 3), lambda i: (0, 0)),
+            pl.BlockSpec((1, g), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), poses.dtype),
+        interpret=True,
+    )(poses, lig_q, grid, grid_q.reshape(1, g))
+
+
+@jax.jit
+def dock_score_jit(poses, lig_q, grid, grid_q):
+    return dock_score(poses, lig_q, grid, grid_q)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "l", "g"))
+def example_inputs(key, p=POSES, l=LIG_ATOMS, g=GRID_POINTS):
+    """Deterministic pseudo-chemistry inputs for tests and AOT examples."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    base = jax.random.normal(k1, (l, 3)) * 2.0
+    shifts = jax.random.normal(k2, (p, 1, 3)) * 0.5
+    poses = base[None, :, :] + shifts
+    lig_q = jnp.tile(jax.random.uniform(k3, (l,), minval=-0.5, maxval=0.5), (p, 1))
+    grid = jax.random.normal(k4, (g, 3)) * 4.0
+    grid_q = jnp.linspace(-0.3, 0.3, g)
+    return poses, lig_q, grid, grid_q.astype(jnp.float32)

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: the MARS refinery-economics hot spot.
+
+MARS (Hanson & Laitner, Argonne) evaluates ~20 refinery processes over 6
+crude grades and 8 products; one model run maps 2 floats (diesel yields
+from low-sulfur-light and medium-sulfur-heavy crude) to 1 float (the
+investment needed to maintain production capacity over four decades).
+The paper batches 144 runs per Falkon task.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the original MARS
+is scalar C. On a TPU-shaped machine the natural hot spot is the batched
+production contraction: for every run, production[products] =
+activity[grades*processes] @ yields[grades*processes, products]. We batch
+runs on the MXU's row dimension and keep both operands VMEM-resident:
+
+    production[B, 8] = activity[B, 120] @ yields[120, 8]
+    shortfall[B, 8]  = softplus(demand - production)
+
+The kernel tiles the batch dimension (``TILE_B`` rows per grid step); the
+feature dimensions (120, 8) are zero-padded to the 128-lane boundary by
+XLA's operand layout, and the whole working set per grid step —
+(TILE_B+8)*128 f32 — is a few hundred KB, far under the ~16 MB VMEM
+budget, leaving room for double buffering.
+
+``interpret=True`` everywhere: the CPU PJRT backend cannot execute Mosaic
+custom-calls; numerics are validated against ``ref.py`` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Model dimensions (fixed by the paper's description of MARS).
+GRADES = 6          # crude grades: LSL ... synthetic
+PROCESSES = 20      # primary + secondary refinery processes
+PRODUCTS = 8        # gasoline, diesel, jet fuel, ...
+FEATURES = GRADES * PROCESSES  # 120
+DECADES = 4         # "a 4-decade span"
+BATCH = 144         # model runs per Falkon task
+
+# Batch tile: 144 = 9 * 16 rows per grid step.
+TILE_B = 16
+
+
+def _production_kernel(act_ref, yld_ref, dem_ref, out_ref):
+    """One grid step: produce shortfall for TILE_B runs.
+
+    act_ref: [TILE_B, FEATURES] process activity for these runs
+    yld_ref: [FEATURES, PRODUCTS] yield matrix (shared)
+    dem_ref: [1, PRODUCTS] product demand this decade (shared)
+    out_ref: [TILE_B, PRODUCTS] softplus production shortfall
+    """
+    production = act_ref[...] @ yld_ref[...]
+    gap = dem_ref[...] - production
+    # Softplus keeps the investment differentiable and positive.
+    out_ref[...] = jnp.logaddexp(gap, 0.0)
+
+
+def production_shortfall(activity, yields, demand, *, tile_b=TILE_B):
+    """Batched shortfall: softplus(demand - activity @ yields).
+
+    activity: f32[B, FEATURES]; yields: f32[FEATURES, PRODUCTS];
+    demand: f32[PRODUCTS]. B must be a multiple of ``tile_b``.
+    """
+    b = activity.shape[0]
+    if b % tile_b != 0:
+        raise ValueError(f"batch {b} not a multiple of tile {tile_b}")
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        _production_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, FEATURES), lambda i: (i, 0)),
+            pl.BlockSpec((FEATURES, PRODUCTS), lambda i: (0, 0)),
+            pl.BlockSpec((1, PRODUCTS), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, PRODUCTS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, PRODUCTS), activity.dtype),
+        interpret=True,
+    )(activity, yields, demand.reshape(1, PRODUCTS))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def production_shortfall_jit(activity, yields, demand, tile_b=TILE_B):
+    """jit wrapper used by tests/benches."""
+    return production_shortfall(activity, yields, demand, tile_b=tile_b)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Everything here is deliberately the most direct possible translation of
+the math; pytest asserts the Pallas kernels match to float32 tolerance
+across shape/dtype sweeps (see python/tests/).
+"""
+
+import jax.numpy as jnp
+
+from . import dock as dock_kernel  # for the shared constants
+
+
+def production_shortfall_ref(activity, yields, demand):
+    """softplus(demand - activity @ yields), no tiling tricks."""
+    production = activity @ yields
+    return jnp.logaddexp(demand[None, :] - production, 0.0)
+
+
+def dock_score_ref(poses, lig_q, grid, grid_q):
+    """Per-pose grid score via explicit pairwise distances."""
+    # d2[p, l, g]
+    diff = poses[:, :, None, :] - grid[None, None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1) + dock_kernel.EPS
+    inv_d2 = 1.0 / d2
+    inv_d6 = inv_d2**3
+    coulomb = lig_q[:, :, None] * grid_q[None, None, :] * jnp.sqrt(inv_d2)
+    lj = dock_kernel.LJ_A * inv_d6**2 - dock_kernel.LJ_B * inv_d6
+    return jnp.sum(coulomb + lj, axis=(1, 2))

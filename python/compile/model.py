@@ -1,0 +1,114 @@
+"""L2: the JAX models lowered to the AOT artifacts.
+
+Two model functions, both calling the L1 Pallas kernels:
+
+* ``mars_batch(params[B, 2]) -> (investment[B],)`` — the MARS refinery
+  economics batch: builds per-run process activity from the two swept
+  yield parameters, then scans four decades of capacity evolution, each
+  decade's production shortfall computed by the Pallas kernel; the output
+  is the discounted total investment per run (the single float the paper's
+  MARS emits).
+* ``dock_batch(poses, lig_q, grid, grid_q) -> (energies[P],)`` — DOCK
+  pose scoring via the grid kernel.
+
+These run under ``jax.jit`` at build time only; ``aot.py`` lowers them to
+HLO text for the Rust runtime. Keep everything shape-static.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dock as dock_kernel
+from .kernels import mars as mars_kernel
+
+# ------------------------------------------------------------------ MARS
+
+# Deterministic model constants (a plausible refinery, not calibrated to
+# the real proprietary MARS data — DESIGN.md substitution table).
+def _mars_constants():
+    g, p, k = mars_kernel.GRADES, mars_kernel.PROCESSES, mars_kernel.PRODUCTS
+    key = jax.random.PRNGKey(20080417)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Base yields: each (grade, process) pair yields a mix of products.
+    yields = jax.random.uniform(k1, (g * p, k), minval=0.0, maxval=0.15)
+    # Crude mix across grades (sums to 1).
+    mix = jax.nn.softmax(jax.random.normal(k2, (g,)))
+    # Base process utilization profile.
+    util = jax.random.uniform(k3, (p,), minval=0.4, maxval=1.0)
+    # Product demand (relative units), diesel-heavy.
+    demand = jnp.array([1.0, 0.8, 1.4, 0.5, 0.3, 0.25, 0.2, 0.15], jnp.float32)
+    return yields.astype(jnp.float32), mix.astype(jnp.float32), util.astype(jnp.float32), demand
+
+
+_YIELDS, _MIX, _UTIL, _DEMAND = _mars_constants()
+
+# Diesel is product index 2; LSL is grade 0, MSH is grade 3.
+_DIESEL, _LSL, _MSH = 2, 0, 3
+_DEMAND_GROWTH = 1.22   # per decade (~2%/yr)
+_DISCOUNT = 0.75        # per-decade discount factor on investment
+_CAPACITY_RESPONSE = 0.6  # fraction of shortfall capitalized per decade
+
+
+def _activity(params):
+    """Per-run process activity [B, FEATURES] from the 2 swept params.
+
+    The two parameters scale diesel-producing activity for their grades;
+    everything else follows the base mix × utilization profile.
+    """
+    b = params.shape[0]
+    g, p = mars_kernel.GRADES, mars_kernel.PROCESSES
+    base = (_MIX[:, None] * _UTIL[None, :]).reshape(g * p)  # [120]
+    act = jnp.tile(base[None, :], (b, 1))                   # [B, 120]
+    # Scale the two swept grades' activity by their yield parameters.
+    scale = jnp.ones((b, g), params.dtype)
+    scale = scale.at[:, _LSL].set(0.5 + params[:, 0])
+    scale = scale.at[:, _MSH].set(0.5 + params[:, 1])
+    act = act.reshape(b, g, p) * scale[:, :, None]
+    return act.reshape(b, g * p)
+
+
+def mars_batch(params):
+    """MARS batch model: params f32[B, 2] -> (investment f32[B],)."""
+    act = _activity(params)
+    b = params.shape[0]
+
+    def decade(carry, t):
+        capacity, total = carry
+        demand_t = _DEMAND[None, :] * (_DEMAND_GROWTH**t)
+        # Production shortfall for this decade — the Pallas kernel.
+        shortfall = mars_kernel.production_shortfall(
+            act * capacity[:, None], _YIELDS, demand_t[0]
+        )  # [B, PRODUCTS]
+        invest = jnp.sum(shortfall, axis=1)  # [B]
+        discount = _DISCOUNT**t
+        capacity = capacity + _CAPACITY_RESPONSE * invest / (1.0 + invest)
+        return (capacity, total + discount * invest), None
+
+    capacity0 = jnp.ones((b,), params.dtype)
+    total0 = jnp.zeros((b,), params.dtype)
+    (_, total), _ = jax.lax.scan(
+        decade, (capacity0, total0), jnp.arange(mars_kernel.DECADES, dtype=jnp.float32)
+    )
+    return (total,)
+
+
+# ------------------------------------------------------------------ DOCK
+
+def dock_batch(poses, lig_q, grid, grid_q):
+    """DOCK pose scoring: -> (energies f32[P],)."""
+    return (dock_kernel.dock_score(poses, lig_q, grid, grid_q),)
+
+
+# ------------------------------------------------- example input shapes
+
+def mars_example_args(batch=mars_kernel.BATCH):
+    return (jax.ShapeDtypeStruct((batch, 2), jnp.float32),)
+
+
+def dock_example_args(p=dock_kernel.POSES, l=dock_kernel.LIG_ATOMS, g=dock_kernel.GRID_POINTS):
+    return (
+        jax.ShapeDtypeStruct((p, l, 3), jnp.float32),
+        jax.ShapeDtypeStruct((p, l), jnp.float32),
+        jax.ShapeDtypeStruct((g, 3), jnp.float32),
+        jax.ShapeDtypeStruct((g,), jnp.float32),
+    )

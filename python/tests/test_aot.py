@@ -1,0 +1,54 @@
+"""AOT path tests: HLO text generation is complete (no elided constants —
+the failure mode that silently zeroes weights in the 0.5.1 parser),
+deterministic, and structurally sane."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_all_artifacts_lower():
+    for name, (fn, example) in aot.ARTIFACTS.items():
+        text = aot.to_hlo_text(fn, example())
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_no_elided_constants():
+    # Regression guard: default printing elides large constants as
+    # `constant({...})` which xla_extension 0.5.1 parses as zeros.
+    for name, (fn, example) in aot.ARTIFACTS.items():
+        text = aot.to_hlo_text(fn, example())
+        assert "{...}" not in text, f"{name} contains elided constants"
+
+
+def test_lowering_deterministic():
+    fn, example = aot.ARTIFACTS["mars_batch"]
+    assert aot.to_hlo_text(fn, example()) == aot.to_hlo_text(fn, example())
+
+
+def test_mars_artifact_embeds_yield_matrix():
+    """The 120x8 yield matrix must appear as a literal constant."""
+    fn, example = aot.ARTIFACTS["mars_batch"]
+    text = aot.to_hlo_text(fn, example())
+    assert "f32[120,8]" in text
+
+
+def test_entry_layout_matches_examples():
+    fn, example = aot.ARTIFACTS["mars_batch"]
+    text = aot.to_hlo_text(fn, example())
+    assert "f32[144,2]" in text.splitlines()[0], "entry layout should carry the batch shape"
+
+
+def test_simple_roundtrip_through_hlo_parser():
+    """Lower a tiny fn and re-parse its text with the in-process parser to
+    confirm the text is valid HLO."""
+    from jax._src.lib import xla_client as xc
+
+    def f(x):
+        return (x * 2.0 + 1.0,)
+
+    text = aot.to_hlo_text(f, (jax.ShapeDtypeStruct((4,), jnp.float32),))
+    mod = xc._xla.hlo_module_from_text(text)
+    assert "f32[4]" in mod.to_string()

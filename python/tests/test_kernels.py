@@ -1,0 +1,124 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+This is the core numerical signal for the compute layer: every kernel
+must match its reference to float32 tolerance, across a hypothesis-driven
+sweep of shapes and input distributions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dock, mars, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------------ MARS
+
+def _mars_inputs(key, b):
+    k1, k2, k3 = jax.random.split(key, 3)
+    act = jax.random.uniform(k1, (b, mars.FEATURES), minval=0.0, maxval=2.0)
+    yld = jax.random.uniform(k2, (mars.FEATURES, mars.PRODUCTS), minval=0.0, maxval=0.2)
+    dem = jax.random.uniform(k3, (mars.PRODUCTS,), minval=0.1, maxval=2.0)
+    return act, yld, dem
+
+
+class TestMarsKernel:
+    def test_matches_ref_at_paper_batch(self):
+        act, yld, dem = _mars_inputs(jax.random.PRNGKey(0), mars.BATCH)
+        got = mars.production_shortfall(act, yld, dem)
+        want = ref.production_shortfall_ref(act, yld, dem)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("tiles", [1, 2, 4, 8])
+    def test_tile_count_invariance(self, tiles):
+        """Tiling must not change the result (per-tile vs whole-batch)."""
+        b = 16 * tiles
+        act, yld, dem = _mars_inputs(jax.random.PRNGKey(1), b)
+        tiled = mars.production_shortfall(act, yld, dem, tile_b=16)
+        whole = mars.production_shortfall(act, yld, dem, tile_b=b)
+        np.testing.assert_allclose(tiled, whole, rtol=1e-6)
+
+    def test_rejects_misaligned_batch(self):
+        act, yld, dem = _mars_inputs(jax.random.PRNGKey(2), 20)
+        with pytest.raises(ValueError, match="multiple"):
+            mars.production_shortfall(act, yld, dem, tile_b=16)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        tiles=st.integers(min_value=1, max_value=6),
+        tile_b=st.sampled_from([8, 16, 48]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, tiles, tile_b, seed):
+        b = tiles * tile_b
+        act, yld, dem = _mars_inputs(jax.random.PRNGKey(seed), b)
+        got = mars.production_shortfall(act, yld, dem, tile_b=tile_b)
+        want = ref.production_shortfall_ref(act, yld, dem)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_batch_rows_independent(self):
+        """Permuting batch rows permutes outputs identically."""
+        act, yld, dem = _mars_inputs(jax.random.PRNGKey(3), 48)
+        perm = jax.random.permutation(jax.random.PRNGKey(4), 48)
+        out = mars.production_shortfall(act, yld, dem)
+        out_perm = mars.production_shortfall(act[perm], yld, dem)
+        np.testing.assert_allclose(out_perm, out[perm], rtol=1e-6)
+
+    def test_output_nonnegative(self):
+        act, yld, dem = _mars_inputs(jax.random.PRNGKey(5), 32)
+        out = mars.production_shortfall(act, yld, dem, tile_b=16)
+        assert np.all(np.asarray(out) >= 0.0), "softplus output must be >= 0"
+
+
+# ------------------------------------------------------------------ DOCK
+
+class TestDockKernel:
+    def test_matches_ref_default_shape(self):
+        inputs = dock.example_inputs(jax.random.PRNGKey(0))
+        got = dock.dock_score(*inputs)
+        want = ref.dock_score_ref(*inputs)
+        # f32 reduction-order tolerance: the kernel reduces [L,G] = 8192
+        # terms in a different association than the oracle.
+        np.testing.assert_allclose(got, want, rtol=5e-3, atol=2e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        p=st.integers(min_value=1, max_value=12),
+        l=st.sampled_from([8, 16, 64]),
+        g=st.sampled_from([16, 128]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, p, l, g, seed):
+        inputs = dock.example_inputs(jax.random.PRNGKey(seed), p=p, l=l, g=g)
+        got = dock.dock_score(*inputs)
+        want = ref.dock_score_ref(*inputs)
+        assert got.shape == (p,)
+        np.testing.assert_allclose(got, want, rtol=5e-3, atol=2e-3)
+
+    def test_poses_scored_independently(self):
+        poses, lig_q, grid, grid_q = dock.example_inputs(jax.random.PRNGKey(1), p=8)
+        all_scores = dock.dock_score(poses, lig_q, grid, grid_q)
+        one = dock.dock_score(poses[3:4], lig_q[3:4], grid, grid_q)
+        np.testing.assert_allclose(one[0], all_scores[3], rtol=1e-5)
+
+    def test_translation_far_away_reduces_interaction(self):
+        """A pose moved very far from the grid scores ~0 (all terms decay)."""
+        poses, lig_q, grid, grid_q = dock.example_inputs(jax.random.PRNGKey(2), p=2)
+        far = poses.at[1].add(1e4)
+        scores = dock.dock_score(far, lig_q, grid, grid_q)
+        assert abs(float(scores[1])) < 1e-3, scores
+        assert abs(float(scores[0])) > 1e-3
+
+    def test_charge_sign_flips_coulomb(self):
+        """Flipping all ligand charges negates the Coulomb part. With LJ
+        coefficients zeroed via distance (use charges only, LJ is charge-
+        independent), check E(q) + E(-q) == 2 * LJ part."""
+        poses, lig_q, grid, grid_q = dock.example_inputs(jax.random.PRNGKey(3), p=4)
+        e_pos = dock.dock_score(poses, lig_q, grid, grid_q)
+        e_neg = dock.dock_score(poses, -lig_q, grid, grid_q)
+        e_nocharge = dock.dock_score(poses, jnp.zeros_like(lig_q), grid, grid_q)
+        np.testing.assert_allclose(e_pos + e_neg, 2 * e_nocharge, rtol=1e-3, atol=1e-4)

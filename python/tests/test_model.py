@@ -1,0 +1,86 @@
+"""L2 model tests: shapes, determinism, pinned oracle values (shared with
+the Rust runtime_integration tests), and economic sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import dock, mars
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def sweep_params(n=144):
+    xs = np.zeros((n, 2), np.float32)
+    for i in range(n):
+        x = 0.1 + 0.8 * (i / n)
+        xs[i] = [x, 1 - x]
+    return jnp.asarray(xs)
+
+
+class TestMarsModel:
+    def test_output_shape_and_finiteness(self):
+        (out,) = model.mars_batch(sweep_params())
+        assert out.shape == (mars.BATCH,)
+        assert np.all(np.isfinite(np.asarray(out)))
+        assert np.all(np.asarray(out) > 0)
+
+    def test_pinned_values_for_rust_crosscheck(self):
+        # These exact values are asserted (±5e-4) by
+        # rust/tests/runtime_integration.rs::mars_matches_python_oracle_values.
+        (out,) = model.mars_batch(sweep_params())
+        out = np.asarray(out)
+        np.testing.assert_allclose(out[0], 8.631977, atol=1e-4)
+        np.testing.assert_allclose(out[77], 8.698864, atol=1e-4)
+        np.testing.assert_allclose(out[143], 8.757997, atol=1e-4)
+
+    def test_deterministic(self):
+        a = np.asarray(model.mars_batch(sweep_params())[0])
+        b = np.asarray(model.mars_batch(sweep_params())[0])
+        np.testing.assert_array_equal(a, b)
+
+    def test_higher_yield_lowers_investment(self):
+        """Economics sanity: better diesel yields -> less capacity
+        shortfall -> lower required investment."""
+        low = jnp.full((mars.BATCH, 2), 0.1, jnp.float32)
+        high = jnp.full((mars.BATCH, 2), 0.9, jnp.float32)
+        inv_low = float(model.mars_batch(low)[0][0])
+        inv_high = float(model.mars_batch(high)[0][0])
+        assert inv_high < inv_low, (inv_low, inv_high)
+
+    def test_param_sensitivity_is_smooth(self):
+        """Neighbouring sweep points give close outputs (MARS is 'coarse,
+        without intensive numerics' — no chaotic jumps)."""
+        (out,) = model.mars_batch(sweep_params())
+        diffs = np.abs(np.diff(np.asarray(out)))
+        assert diffs.max() < 0.01, diffs.max()
+
+    @pytest.mark.parametrize("batch", [16, 144, 288])
+    def test_batch_sizes(self, batch):
+        p = jnp.linspace(0.1, 0.9, batch * 2, dtype=jnp.float32).reshape(batch, 2)
+        (out,) = model.mars_batch(p)
+        assert out.shape == (batch,)
+
+
+class TestDockModel:
+    def test_output_shape(self):
+        inputs = dock.example_inputs(jax.random.PRNGKey(7))
+        (out,) = model.dock_batch(*inputs)
+        assert out.shape == (dock.POSES,)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+    def test_pinned_values_for_rust_crosscheck(self):
+        inputs = dock.example_inputs(jax.random.PRNGKey(7))
+        (out,) = model.dock_batch(*inputs)
+        out = np.asarray(out)
+        np.testing.assert_allclose(out[0], -11.660493, atol=1e-3)
+        np.testing.assert_allclose(out[31], 11.300378, atol=1e-3)
+
+    def test_example_args_match_model_signature(self):
+        specs = model.dock_example_args()
+        inputs = dock.example_inputs(jax.random.PRNGKey(0))
+        for spec, arr in zip(specs, inputs):
+            assert spec.shape == arr.shape, (spec.shape, arr.shape)
+            assert spec.dtype == arr.dtype

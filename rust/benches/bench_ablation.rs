@@ -1,0 +1,191 @@
+//! Ablations over the design choices DESIGN.md calls out: each of the
+//! paper's three mechanisms (multi-level scheduling, streamlined
+//! dispatch, caching) switched off in turn, plus policy sweeps.
+
+use falkon::apps::dock;
+use falkon::falkon::provision::{ProvisionEvent, ProvisionPolicy, Provisioner};
+use falkon::falkon::simworld::{run_sleep_workload, SimTask, WireProto, World, WorldConfig};
+use falkon::lrm::cobalt::Cobalt;
+use falkon::lrm::{naive_serial_utilization, Granularity};
+use falkon::sim::machine::Machine;
+use falkon::util::bench::{banner, Table};
+
+fn quick() -> bool {
+    std::env::var("FALKON_BENCH_QUICK").is_ok()
+}
+
+fn main() {
+    let div = if quick() { 8 } else { 1 };
+
+    banner("Mechanism 1 — multi-level scheduling vs naive LRM use");
+    let mut t = Table::new(&["strategy", "utilization/efficiency"]);
+    t.row(&[
+        "naive: 1-thread job per Cobalt PSET".into(),
+        format!("{:.4} (paper: 1/256)", naive_serial_utilization(Granularity::Pset(64), 4, 1)),
+    ]);
+    t.row(&[
+        "naive: 4-thread job per Cobalt PSET".into(),
+        format!("{:.4} (paper: 1/64)", naive_serial_utilization(Granularity::Pset(64), 4, 4)),
+    ]);
+    // Naive-with-boot: every job pays the node boot.
+    let c = Cobalt::new(Machine::bgp());
+    let boot = c.boot_secs(64);
+    let job = 60.0;
+    t.row(&[
+        format!("naive + boot ({boot:.0}s) per 60s job"),
+        format!("{:.4}", job / (job + boot) / 256.0),
+    ]);
+    let camp = run_sleep_workload(Machine::bgp(), 2048, 16_000 / div, 4.0, WireProto::Tcp, 1);
+    t.row(&["multi-level (Falkon), 4s tasks".into(), format!("{:.4}", camp.efficiency())]);
+    t.print();
+
+    banner("Mechanism 2 — dispatch: protocol × bundling (ANL/UC-200, sleep 0)");
+    let mut t = Table::new(&["proto", "bundle", "tasks/s"]);
+    for (proto, bundle) in [
+        (WireProto::Ws, 1usize),
+        (WireProto::Ws, 10),
+        (WireProto::Tcp, 1),
+        (WireProto::Tcp, 10),
+    ] {
+        let c = run_sleep_workload(Machine::anluc(), 200, 40_000 / div, 0.0, proto, bundle);
+        t.row(&[format!("{proto:?}"), bundle.to_string(), format!("{:.0}", c.throughput())]);
+    }
+    t.print();
+
+    banner("Mechanism 3 — caching off/on (real DOCK working set: 40 MB objects/node)");
+    let mut t = Table::new(&["caching", "makespan s", "efficiency", "hit rate"]);
+    for caching in [false, true] {
+        let mut cfg = WorldConfig::new(Machine::sicortex(), 384);
+        cfg.caching = caching;
+        let mut w = World::new(cfg, dock::real_workload(3840 / div.min(2), 9));
+        w.run(u64::MAX);
+        t.row(&[
+            caching.to_string(),
+            format!("{:.0}", w.campaign().makespan_s()),
+            format!("{:.3}", w.campaign().efficiency()),
+            format!("{:.3}", w.cache().hit_rate()),
+        ]);
+    }
+    t.print();
+
+    banner("Output write-back flush threshold (64 KB .. 16 MB)");
+    let mut t = Table::new(&["flush bytes", "makespan s", "efficiency"]);
+    for shift in [16u32, 20, 24] {
+        let mut cfg = WorldConfig::new(Machine::sicortex(), 384);
+        cfg.caching = true;
+        cfg.flush_bytes = 1 << shift;
+        let tasks: Vec<SimTask> = (0..1536 / div.min(2))
+            .map(|_| SimTask {
+                exec_secs: 5.0,
+                write_bytes: 200_000,
+                desc_len: 64,
+                script_invokes: 1,
+                ..Default::default()
+            })
+            .collect();
+        let mut w = World::new(cfg, tasks);
+        w.run(u64::MAX);
+        t.row(&[
+            format!("{}", 1u64 << shift),
+            format!("{:.0}", w.campaign().makespan_s()),
+            format!("{:.3}", w.campaign().efficiency()),
+        ]);
+    }
+    t.print();
+
+    banner("Provisioning policy — static vs dynamic (bursty queue, SiCortex)");
+    let mut t = Table::new(&["policy", "node-hours held", "notes"]);
+    for (label, policy) in [
+        ("static 400 nodes × 2h", ProvisionPolicy::Static { nodes: 400, walltime_s: 7200.0 }),
+        (
+            "dynamic 1..400, release @60s idle",
+            ProvisionPolicy::Dynamic {
+                min_nodes: 1,
+                max_nodes: 400,
+                tasks_per_node: 10,
+                idle_release_s: 60.0,
+                walltime_s: 7200.0,
+            },
+        ),
+    ] {
+        let mut prov = Provisioner::new(policy, falkon::lrm::slurm::Slurm::new(Machine::sicortex()));
+        // Bursty load: 30 min busy, 90 min idle.
+        let mut node_secs = 0.0f64;
+        let step = 60u64;
+        for minute in 0..120u64 {
+            let busy = minute < 30;
+            let queue = if busy { 4000 } else { 0 };
+            let now = minute * step * falkon::sim::engine::SECS;
+            let _ev: Vec<ProvisionEvent> = prov.tick(now, queue, busy);
+            node_secs += prov.held_nodes() as f64 * step as f64;
+        }
+        t.row(&[
+            label.into(),
+            format!("{:.1}", node_secs / 3600.0),
+            if label.starts_with("static") { "holds idle nodes 90 min" } else { "releases after burst" }
+                .into(),
+        ]);
+    }
+    t.print();
+
+    banner("§6 future work, implemented — data-aware placement");
+    let mut t = Table::new(&["placement", "cache hit rate", "makespan s"]);
+    for (label, aware) in [("FIFO", false), ("data-aware (cache affinity)", true)] {
+        let n = 1200 / div.min(2);
+        let tasks: Vec<SimTask> = (0..n)
+            .map(|i| SimTask {
+                exec_secs: 3.0,
+                objects: vec![if i % 2 == 0 { ("setA", 20_000_000) } else { ("setB", 20_000_000) }],
+                desc_len: 64,
+                ..Default::default()
+            })
+            .collect();
+        let mut cfg = WorldConfig::new(Machine::sicortex(), 48);
+        cfg.caching = true;
+        cfg.data_aware = aware;
+        // Node ramdisk fits only ONE family: placement decides between
+        // affinity (hits) and thrash (refetch every task).
+        cfg.cache_capacity_bytes = 25_000_000;
+        let mut w = World::new(cfg, tasks);
+        w.run(u64::MAX);
+        t.row(&[
+            label.into(),
+            format!("{:.3}", w.cache().hit_rate()),
+            format!("{:.0}", w.campaign().makespan_s()),
+        ]);
+    }
+    t.print();
+
+    banner("§6 future work, implemented — task pre-fetching (credit depth)");
+    let mut t = Table::new(&["prefetch", "efficiency (I/O-heavy 2s tasks, 64 cores)"]);
+    for prefetch in [1u32, 2, 4] {
+        let mut cfg = WorldConfig::new(Machine::bgp(), 64);
+        cfg.prefetch = prefetch;
+        let tasks = vec![
+            SimTask { exec_secs: 2.0, read_bytes: 1_250_000, desc_len: 64, ..Default::default() };
+            2_000 / div.min(2)
+        ];
+        let mut w = World::new(cfg, tasks);
+        w.run(u64::MAX);
+        t.row(&[prefetch.to_string(), format!("{:.3}", w.campaign().efficiency())]);
+    }
+    t.print();
+
+    banner("§6 future work, implemented — 2-tier vs 3-tier at 160K cores");
+    let mut t = Table::new(&["architecture", "efficiency", "dispatch rate t/s"]);
+    for (label, forwarders) in [("2-tier (paper's current)", 0usize), ("3-tier, 64 forwarders", 64)] {
+        let mut cfg = WorldConfig::new(Machine::bgp_psets(640), 163_840);
+        cfg.forwarders = forwarders;
+        cfg.prefetch = 2;
+        let n = 400_000 / div.min(4);
+        let mut w = World::new(cfg, vec![SimTask::sleep(4.0); n]);
+        w.run(u64::MAX);
+        t.row(&[
+            label.into(),
+            format!("{:.3}", w.campaign().efficiency()),
+            format!("{:.0}", w.campaign().throughput()),
+        ]);
+    }
+    t.print();
+    println!("(§6: 'critical as we scale to the entire 160K-core BG/P')");
+}

@@ -1,0 +1,125 @@
+//! Figures 14, 15, 16 — the DOCK campaigns on the SiCortex.
+//!
+//! * Fig 14 (synthetic, 17.3 s jobs, I/O:compute 35× real): excellent
+//!   scaling to 1536 procs (98%), collapse below 70% at 3072 and below
+//!   40% at 5760; per-job time inflates 17.3 → 42.9 s (σ 0.336 → 12.6).
+//! * Figs 15–16 (real, 92K jobs, 5.8–4178 s durations): 3.5 h on 5760
+//!   cores, 1.94 CPU-years, 0 failures, speedup 5650× vs a 102-core
+//!   reference (98.2% efficiency) — with the binary + 35 MB static input
+//!   cached on ramdisk.
+
+use falkon::apps::dock;
+use falkon::falkon::simworld::{World, WorldConfig};
+use falkon::sim::engine::to_secs;
+use falkon::sim::machine::Machine;
+use falkon::util::bench::{banner, fmt_secs, Table};
+use falkon::util::stats::Summary;
+
+fn quick() -> bool {
+    std::env::var("FALKON_BENCH_QUICK").is_ok()
+}
+
+fn main() {
+    // ---------------------------------------------------- Figure 14
+    banner("Figure 14 — synthetic DOCK (17.3 s jobs) vs processors");
+    let scale = if quick() { 3 } else { 6 }; // tasks per core
+    let mut t = Table::new(&["procs", "efficiency", "exec mean s", "exec σ s", "paper eff"]);
+    for (procs, paper) in [
+        (6usize, "~1.0"),
+        (96, "~1.0"),
+        (384, "0.99"),
+        (768, "0.98"),
+        (1536, "0.98"),
+        (3072, "<0.70"),
+        (5760, "<0.40"),
+    ] {
+        let mut cfg = WorldConfig::new(Machine::sicortex(), procs);
+        cfg.caching = false; // pre-optimization configuration (§5.1)
+        let mut w = World::new(cfg, dock::synthetic_workload(procs * scale));
+        w.run(u64::MAX);
+        let c = w.campaign();
+        // Per-job time as the application experiences it (queue->result).
+        let total: Vec<f64> =
+            c.records.iter().map(|r| to_secs(r.result - r.dispatch)).collect();
+        let s = Summary::of(&total);
+        t.row(&[
+            procs.to_string(),
+            format!("{:.3}", c.efficiency()),
+            format!("{:.1}", s.mean),
+            format!("{:.2}", s.std),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+    println!("paper: exec inflates 17.3s (σ 0.336) @768p -> 42.9s (σ 12.6) @5760p");
+
+    // ------------------------------------------------ Figures 15-16
+    banner("Figures 15-16 — real DOCK campaign (lognormal 660±479 s)");
+    let (jobs, big_cores, ref_cores) = if quick() {
+        (4_600, 288, 102) // 20x scale-down
+    } else {
+        (92_000, 5_760, 102) // paper scale
+    };
+    let workload = dock::real_workload(jobs, 20080402);
+    let mut big_cfg = WorldConfig::new(Machine::sicortex(), big_cores);
+    big_cfg.caching = true;
+    let mut big = World::new(big_cfg, workload.clone());
+    big.run(u64::MAX);
+    let mut ref_cfg = WorldConfig::new(Machine::sicortex(), ref_cores);
+    ref_cfg.caching = true;
+    let mut reference = World::new(ref_cfg, workload);
+    reference.run(u64::MAX);
+
+    let (bc, rc) = (big.campaign(), reference.campaign());
+    let mut t = Table::new(&["metric", "measured", "paper"]);
+    let cpu_years = bc.busy_s() / (365.25 * 86_400.0);
+    t.row(&["jobs".into(), jobs.to_string(), "92,160".into()]);
+    t.row(&["processors".into(), big_cores.to_string(), "5,760".into()]);
+    t.row(&["makespan".into(), fmt_secs(bc.makespan_s()), "3.5h".into()]);
+    t.row(&["CPU-years".into(), format!("{cpu_years:.2}"), "1.94".into()]);
+    t.row(&["failures".into(), big.failed().to_string(), "0".into()]);
+    t.row(&[
+        "speedup vs reference".into(),
+        format!("{:.0} (ideal {})", bc.speedup_vs(rc), big_cores),
+        "5,650 (ideal 5,760)".into(),
+    ]);
+    t.row(&[
+        "efficiency vs reference".into(),
+        format!("{:.3}", bc.efficiency_vs(rc)),
+        "0.982".into(),
+    ]);
+    t.row(&["cache hit rate".into(), format!("{:.3}", big.cache().hit_rate()), "—".into()]);
+    t.print();
+
+    banner("Figure 15 (summary view): tasks executing over time (10 samples)");
+    let mut t = Table::new(&["t", "running"]);
+    for (ts, n) in bc.summary_view(10) {
+        t.row(&[fmt_secs(ts), n.to_string()]);
+    }
+    t.print();
+
+    banner("Figure 16 (per-processor view): busy-fraction distribution");
+    let fracs: Vec<f64> = bc.per_processor_view().iter().map(|(_, _, _, f)| *f).collect();
+    let s = Summary::of(&fracs);
+    println!(
+        "cores {} | busy fraction mean {:.3} σ {:.3} min {:.3} max {:.3}",
+        fracs.len(),
+        s.mean,
+        s.std,
+        s.min,
+        s.max
+    );
+    println!(
+        "(ramp-down tail: {:.1}% of the makespan the slowest 1% of cores sit idle — \n the paper's 'slow ramp-down from the wide range of job execution times')",
+        (1.0 - s.p50.min(s.mean)) * 100.0
+    );
+
+    banner("§5.1 magnitude: full screening space projection");
+    println!(
+        "92K jobs = 0.0092% of space => {:.0} CPU-years total (paper: 20,938);\n\
+         = {:.1} years on the 4K-core BG/P (paper: 4.9), {:.0} days on 160K cores (paper: 48).",
+        dock::full_space_cpu_years(92_000, 0.000092),
+        dock::full_space_cpu_years(92_000, 0.000092) / 4_096.0,
+        dock::full_space_cpu_years(92_000, 0.000092) / 163_840.0 * 365.25,
+    );
+}

@@ -1,0 +1,72 @@
+//! PJRT hot-path benchmark (not a paper figure — the L2/L1 compute the
+//! live executors run): artifact compile time, per-call latency, and
+//! micro-run throughput for the MARS batch and DOCK scoring artifacts.
+//!
+//! The paper's MARS costs 0.454 s/micro-run on an 850 MHz PPC450; our
+//! refinery batch kernel is the same *shape* of work executed through
+//! the identical dispatch path.
+
+use falkon::runtime::Registry;
+use falkon::util::bench::{banner, time, Table};
+use std::time::Instant;
+
+fn quick() -> bool {
+    std::env::var("FALKON_BENCH_QUICK").is_ok()
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/mars_batch.hlo.txt").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let reg = Registry::open("artifacts").unwrap();
+
+    banner("artifact compile time (one-time per process)");
+    let mut t = Table::new(&["artifact", "compile ms"]);
+    for name in reg.available() {
+        let t0 = Instant::now();
+        reg.get(&name).unwrap();
+        t.row(&[name.clone(), format!("{:.1}", t0.elapsed().as_secs_f64() * 1e3)]);
+    }
+    t.print();
+
+    let iters = if quick() { 20 } else { 200 };
+
+    banner("mars_batch — 144 micro-runs per call");
+    let engine = reg.get("mars_batch").unwrap();
+    let params: Vec<f32> = (0..288).map(|i| 0.1 + (i % 144) as f32 * 0.005).collect();
+    let m = time("mars_batch", 3, iters, || {
+        let out = engine.run_f32(&[(&params, &[144, 2])]).unwrap();
+        std::hint::black_box(out);
+    });
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["latency/call".into(), format!("{:.3} ms", m.mean.as_secs_f64() * 1e3)]);
+    t.row(&["micro-runs/s".into(), format!("{:.0}", m.rate(144.0))]);
+    t.row(&[
+        "vs paper PPC450 (0.454 s/micro-run)".into(),
+        format!("{:.0}x faster per micro-run", 0.454 * m.rate(144.0) / 144.0 * 144.0),
+    ]);
+    t.print();
+
+    banner("dock_score — 32 poses per call");
+    let engine = reg.get("dock_score").unwrap();
+    let (p, l, g) = (32usize, 64usize, 128usize);
+    let poses: Vec<f32> = (0..p * l * 3).map(|i| (i % 97) as f32 * 0.05 - 2.4).collect();
+    let lig_q: Vec<f32> = (0..p * l).map(|i| ((i % 17) as f32 - 8.0) / 20.0).collect();
+    let grid: Vec<f32> = (0..g * 3).map(|i| ((i * 31) % 89) as f32 * 0.1 - 4.4).collect();
+    let grid_q: Vec<f32> = (0..g).map(|i| (i as f32 / g as f32) * 0.6 - 0.3).collect();
+    let m = time("dock_score", 3, iters, || {
+        let out = engine
+            .run_f32(&[(&poses, &[p, l, 3]), (&lig_q, &[p, l]), (&grid, &[g, 3]), (&grid_q, &[g])])
+            .unwrap();
+        std::hint::black_box(out);
+    });
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["latency/call".into(), format!("{:.3} ms", m.mean.as_secs_f64() * 1e3)]);
+    t.row(&["poses/s".into(), format!("{:.0}", m.rate(p as f64))]);
+    t.row(&[
+        "pairwise terms/s".into(),
+        format!("{:.2e}", m.rate((p * l * g) as f64)),
+    ]);
+    t.print();
+}

@@ -1,0 +1,81 @@
+//! Figure 10 — throughput vs task description size (10 B → 10 KB echo
+//! strings) on the SiCortex with ~1K CPUs, plus the paper's bytes/task
+//! accounting, plus the live-loopback equivalent on this host.
+//!
+//! Paper anchors: 3184 t/s at 10 B ≈ sleep-0 rate; 3011 at 100 B; 2001 at
+//! 1 KB; 662 at 10 KB. Bytes/task: 934 B (10 B) → 22.3 KB (10 KB).
+
+use falkon::apps::sleep::{echo_live, echo_sim};
+use falkon::falkon::dispatch::DispatchConfig;
+use falkon::falkon::exec::{spawn_fleet, DefaultRunner};
+use falkon::falkon::service::{Service, ServiceConfig};
+use falkon::falkon::simworld::{WireProto, World, WorldConfig};
+use falkon::net::codec::{bytes_per_task, WsCodec};
+use falkon::sim::machine::Machine;
+use falkon::util::bench::{banner, Table};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn quick() -> bool {
+    std::env::var("FALKON_BENCH_QUICK").is_ok()
+}
+
+fn main() {
+    let sizes: &[(usize, f64)] = &[(10, 3184.0), (100, 3011.0), (1_000, 2001.0), (10_000, 662.0)];
+    let n = if quick() { 5_000 } else { 50_000 };
+
+    banner("Figure 10 — task description size vs throughput (simulated SiCortex, 1002 CPUs)");
+    let mut t = Table::new(&["desc", "measured t/s", "paper t/s", "bytes/task (model)", "paper bytes/task"]);
+    for &(size, paper) in sizes {
+        let mut cfg = WorldConfig::new(Machine::sicortex(), 1002);
+        cfg.proto = WireProto::Tcp;
+        let mut w = World::new(cfg, echo_sim(n, size));
+        w.run(u64::MAX);
+        let tput = w.campaign().throughput();
+        // The paper's accounting uses the WS submission + TCP dispatch
+        // stack; report the WS-codec estimate.
+        let bpt = bytes_per_task(&WsCodec, size, 1);
+        let paper_bpt = match size {
+            10 => "934",
+            10_000 => "22300",
+            _ => "—",
+        };
+        t.row(&[
+            format!("{size}B"),
+            format!("{tput:.0}"),
+            format!("{paper:.0}"),
+            format!("{bpt:.0}"),
+            paper_bpt.to_string(),
+        ]);
+    }
+    t.print();
+
+    banner("Live loopback — echo payload sweep (this host, 4 executors)");
+    let live_n = if quick() { 2_000 } else { 20_000 };
+    let mut t = Table::new(&["desc", "tasks/s", "MB/s app-bytes"]);
+    for &(size, _) in sizes {
+        let svc = Service::start(ServiceConfig {
+            bind: "127.0.0.1:0".into(),
+            dispatch: DispatchConfig::default(),
+            retry: Default::default(),
+        })
+        .unwrap();
+        let fleet = spawn_fleet(&svc.addr().to_string(), 4, Arc::new(DefaultRunner), 1).unwrap();
+        svc.wait_executors(4, Duration::from_secs(10));
+        let t0 = Instant::now();
+        svc.submit_many(echo_live(live_n, size));
+        svc.wait_all(Duration::from_secs(600)).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        for e in fleet {
+            e.stop();
+        }
+        svc.shutdown();
+        let tput = live_n as f64 / dt;
+        t.row(&[
+            format!("{size}B"),
+            format!("{tput:.0}"),
+            format!("{:.2}", tput * size as f64 / 1e6),
+        ]);
+    }
+    t.print();
+}

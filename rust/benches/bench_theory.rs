@@ -1,0 +1,66 @@
+//! Figures 1 & 2: theoretical resource efficiency of a small (4096-core)
+//! and large (160K-core) supercomputer executing 1M tasks at dispatch
+//! rates 1..10K tasks/s — plus a DES cross-validation of the closed form.
+//!
+//! Paper anchors (§3): at 10 tasks/s, ~520 s tasks for 90% on 4096 cores
+//! and ~30,000 s on 160K; at 1,000 tasks/s, 3.75 s and 256 s. Our model
+//! reproduces the ordering and order-of-magnitude of every anchor (the
+//! paper's exact closed form is unspecified; see falkon::theory docs).
+
+use falkon::falkon::simworld::{run_sleep_workload, WireProto};
+use falkon::falkon::theory::{efficiency, min_task_len_for, paper_task_lengths, TheoryParams, PAPER_RATES};
+use falkon::sim::machine::Machine;
+use falkon::util::bench::{banner, Table};
+
+fn quick() -> bool {
+    std::env::var("FALKON_BENCH_QUICK").is_ok()
+}
+
+fn main() {
+    for (label, procs) in [("Figure 1 — 4096 processors", 4_096u64), ("Figure 2 — 163,840 processors", 163_840)] {
+        banner(label);
+        let mut t = Table::new(&["task_len_s", "1/s", "10/s", "100/s", "1K/s", "10K/s"]);
+        for len in paper_task_lengths() {
+            let mut row = vec![format!("{len}")];
+            for rate in PAPER_RATES {
+                let p = TheoryParams { tasks: 1_000_000, processors: procs, dispatch_rate: rate };
+                row.push(format!("{:.3}", efficiency(p, len)));
+            }
+            t.row(&row);
+        }
+        t.print();
+    }
+
+    banner("90% crossover task lengths (paper text anchors)");
+    let mut t = Table::new(&["procs", "rate", "min L for 90% (model)", "paper anchor"]);
+    for (procs, rate, anchor) in [
+        (4_096u64, 10.0, "520 s"),
+        (163_840, 10.0, "30,000 s"),
+        (4_096, 1_000.0, "3.75 s"),
+        (163_840, 1_000.0, "256 s"),
+    ] {
+        let p = TheoryParams { tasks: 1_000_000, processors: procs, dispatch_rate: rate };
+        let l = min_task_len_for(p, 0.9).map(|x| format!("{x:.2} s")).unwrap_or("—".into());
+        t.row(&[procs.to_string(), format!("{rate}"), l, anchor.to_string()]);
+    }
+    t.print();
+
+    banner("DES cross-validation (model vs discrete-event simulation)");
+    let n = if quick() { 2_000 } else { 20_000 };
+    let mut t = Table::new(&["cores", "len_s", "theory", "DES", "|Δ|"]);
+    for (cores, len) in [(256usize, 0.5), (1024, 2.0), (2048, 4.0), (2048, 1.0)] {
+        let th = efficiency(
+            TheoryParams { tasks: n as u64, processors: cores as u64, dispatch_rate: 1758.0 },
+            len,
+        );
+        let des = run_sleep_workload(Machine::bgp(), cores, n, len, WireProto::Tcp, 1).efficiency();
+        t.row(&[
+            cores.to_string(),
+            format!("{len}"),
+            format!("{th:.3}"),
+            format!("{des:.3}"),
+            format!("{:.3}", (th - des).abs()),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,13 @@
+//! The paper's workloads.
+//!
+//! * [`sleep`] — the §4 micro-benchmark payloads (`sleep N`, `echo`);
+//! * [`dock`] — §5.1: DOCK 5 molecular docking on the SiCortex — a
+//!   synthetic fixed-duration screen and the real 92K-job campaign with
+//!   its heavy-tailed duration distribution and cached 40 MB working set;
+//! * [`mars`] — §5.2: the MARS refinery-economics parameter sweep on the
+//!   BG/P — 144 micro-runs batched per task, plus the mapping onto the
+//!   real JAX/Pallas compute artifact executed through PJRT.
+
+pub mod dock;
+pub mod mars;
+pub mod sleep;

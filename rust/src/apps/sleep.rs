@@ -1,0 +1,50 @@
+//! Sleep / echo micro-benchmark workloads (§4.2, Figs 6–10).
+
+use crate::falkon::simworld::SimTask;
+use crate::falkon::task::TaskPayload;
+
+/// `n` × `sleep len` simulated tasks (no I/O).
+pub fn sleep_sim(n: usize, len_s: f64) -> Vec<SimTask> {
+    vec![SimTask::sleep(len_s); n]
+}
+
+/// `n` × `sleep len` live payloads.
+pub fn sleep_live(n: usize, len_s: f64) -> Vec<TaskPayload> {
+    vec![TaskPayload::Sleep { secs: len_s }; n]
+}
+
+/// `n` echo tasks whose description is `desc_len` bytes (Fig 10).
+pub fn echo_sim(n: usize, desc_len: usize) -> Vec<SimTask> {
+    let mut t = SimTask::sleep(0.0);
+    t.desc_len = "/bin/echo ''".len() + desc_len;
+    vec![t; n]
+}
+
+/// `n` live echo payloads with `desc_len`-byte strings.
+pub fn echo_live(n: usize, desc_len: usize) -> Vec<TaskPayload> {
+    vec![TaskPayload::Echo { payload: vec![b'x'; desc_len] }; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sleep_sim_shape() {
+        let ts = sleep_sim(100, 4.0);
+        assert_eq!(ts.len(), 100);
+        assert_eq!(ts[0].exec_secs, 4.0);
+        assert_eq!(ts[0].desc_len, 12);
+        assert_eq!(ts[0].read_bytes, 0);
+    }
+
+    #[test]
+    fn echo_desc_len_tracks_payload() {
+        let ts = echo_sim(1, 10_000);
+        assert_eq!(ts[0].desc_len, 10_012);
+        match &echo_live(1, 10)[0] {
+            TaskPayload::Echo { payload } => assert_eq!(payload.len(), 10),
+            _ => unreachable!(),
+        }
+    }
+}

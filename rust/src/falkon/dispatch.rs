@@ -1,0 +1,148 @@
+//! Dispatch policy: credit-based flow control, bundling, and the
+//! (future-work) data-aware executor choice.
+//!
+//! Push vs pull (Table 1) collapse into one credit protocol: executors
+//! grant the service *credit* via `Ready` messages; the C executor grants
+//! 1 at a time (pull), the Java-style executor grants its core count up
+//! front (push). Bundling packs up to `bundle` tasks per message, which
+//! §4.2 shows lifts the ANL/UC Java path from 604 to 3773 tasks/s.
+
+use crate::falkon::task::{Task, TaskPayload};
+use crate::fs::cache::CacheManager;
+
+/// Dispatch tuning knobs.
+#[derive(Clone, Debug)]
+pub struct DispatchConfig {
+    /// Max tasks per dispatch message.
+    pub bundle: usize,
+    /// Prefer executors that already cache a task's objects (§6 "data
+    /// diffusion" direction; implemented as a first-class option).
+    pub data_aware: bool,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        DispatchConfig { bundle: 1, data_aware: false }
+    }
+}
+
+/// An executor able to receive work right now.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IdleExecutor {
+    pub executor_id: u64,
+    /// Dispatch credit (free slots granted via Ready).
+    pub credit: u32,
+    /// Node index for cache lookups.
+    pub node: usize,
+}
+
+/// One planned dispatch message.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub executor_id: u64,
+    pub tasks: Vec<Task>,
+}
+
+/// Score an executor for a task under data-aware placement: bytes of the
+/// task's objects already resident on the executor's node.
+pub fn cache_affinity(task: &Task, node: usize, cache: &CacheManager) -> u64 {
+    match &task.payload {
+        TaskPayload::SimApp { objects, .. } => objects
+            .iter()
+            .filter(|(k, _)| cache.contains(node, k))
+            .map(|(_, b)| *b)
+            .sum(),
+        _ => 0,
+    }
+}
+
+/// Choose the executor for the task at the head of the queue.
+///
+/// Without data-awareness this is FIFO over idle executors; with it, the
+/// idle executor with the highest cache affinity wins (ties: FIFO).
+pub fn choose_executor(
+    idle: &[IdleExecutor],
+    head: Option<&Task>,
+    cfg: &DispatchConfig,
+    cache: Option<&CacheManager>,
+) -> Option<usize> {
+    if idle.is_empty() {
+        return None;
+    }
+    if cfg.data_aware {
+        if let (Some(task), Some(cache)) = (head, cache) {
+            let best = idle
+                .iter()
+                .enumerate()
+                .max_by_key(|(i, e)| (cache_affinity(task, e.node, cache), usize::MAX - *i))
+                .map(|(i, _)| i);
+            return best;
+        }
+    }
+    Some(0)
+}
+
+/// Bundle size for an executor: limited by both policy and credit.
+pub fn bundle_for(credit: u32, cfg: &DispatchConfig) -> usize {
+    (credit as usize).min(cfg.bundle.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::falkon::task::Task;
+
+    fn idle(id: u64, credit: u32, node: usize) -> IdleExecutor {
+        IdleExecutor { executor_id: id, credit, node }
+    }
+
+    fn sim_task(id: u64, objects: Vec<(String, u64)>) -> Task {
+        Task::new(
+            id,
+            TaskPayload::SimApp { exec_secs: 1.0, read_bytes: 0, write_bytes: 0, objects },
+        )
+    }
+
+    #[test]
+    fn fifo_without_data_awareness() {
+        let cfg = DispatchConfig::default();
+        let idles = vec![idle(1, 1, 0), idle(2, 1, 1)];
+        assert_eq!(choose_executor(&idles, None, &cfg, None), Some(0));
+        assert_eq!(choose_executor(&[], None, &cfg, None), None);
+    }
+
+    #[test]
+    fn data_aware_prefers_cached_node() {
+        let cfg = DispatchConfig { bundle: 1, data_aware: true };
+        let mut cache = CacheManager::new(3, 1 << 30, 1 << 20);
+        cache.commit(2, "big.dat".into(), 1_000_000).unwrap();
+        let idles = vec![idle(1, 1, 0), idle(2, 1, 1), idle(3, 1, 2)];
+        let task = sim_task(1, vec![("big.dat".into(), 1_000_000)]);
+        assert_eq!(choose_executor(&idles, Some(&task), &cfg, Some(&cache)), Some(2));
+    }
+
+    #[test]
+    fn data_aware_ties_fall_back_to_fifo() {
+        let cfg = DispatchConfig { bundle: 1, data_aware: true };
+        let cache = CacheManager::new(2, 1 << 30, 1 << 20);
+        let idles = vec![idle(1, 1, 0), idle(2, 1, 1)];
+        let task = sim_task(1, vec![("x".into(), 10)]);
+        assert_eq!(choose_executor(&idles, Some(&task), &cfg, Some(&cache)), Some(0));
+    }
+
+    #[test]
+    fn bundle_limited_by_credit_and_config() {
+        let cfg = DispatchConfig { bundle: 10, data_aware: false };
+        assert_eq!(bundle_for(3, &cfg), 3);
+        assert_eq!(bundle_for(50, &cfg), 10);
+        let cfg1 = DispatchConfig { bundle: 0, data_aware: false };
+        assert_eq!(bundle_for(5, &cfg1), 1, "bundle 0 normalizes to 1");
+    }
+
+    #[test]
+    fn affinity_zero_for_non_simapp() {
+        let cache = CacheManager::new(1, 1 << 30, 1 << 20);
+        let t = Task::new(1, TaskPayload::Sleep { secs: 0.0 });
+        assert_eq!(cache_affinity(&t, 0, &cache), 0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Failure taxonomy and retry/suspension policy (paper §3.3).
+//!
+//! The paper distinguishes errors by *who should handle them*: Falkon
+//! retries transport-level failures and the known fail-fast "Stale NFS
+//! handle" (suspending nodes that fail too many tasks too quickly), while
+//! application errors propagate to the client (Swift) untouched.
+
+/// Why a task attempt failed.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum TaskError {
+    /// Communication failure between service and executor (connection
+    /// reset, timeout). Falkon always retries these (§3.3).
+    #[error("communication error")]
+    CommError,
+    /// The fail-fast shared-FS error the paper calls out by name.
+    #[error("stale NFS handle")]
+    StaleNfsHandle,
+    /// The executor's node died mid-task (MTBF events).
+    #[error("node lost")]
+    NodeLost,
+    /// The application itself exited non-zero — NOT retried by Falkon;
+    /// passed up to the client.
+    #[error("application error (exit {0})")]
+    AppError(i32),
+    /// The task exceeded the allocation's remaining walltime.
+    #[error("walltime exceeded")]
+    WalltimeExceeded,
+}
+
+impl TaskError {
+    /// Should Falkon itself retry this error? (§3.3: "Falkon retries any
+    /// jobs that failed due to communication errors … essentially any
+    /// errors not caused [by] the application or the shared file system";
+    /// stale-NFS is the named exception that *is* retried.)
+    pub fn falkon_retries(&self) -> bool {
+        match self {
+            TaskError::CommError | TaskError::NodeLost | TaskError::StaleNfsHandle => true,
+            TaskError::AppError(_) | TaskError::WalltimeExceeded => false,
+        }
+    }
+}
+
+/// Retry/suspension policy knobs.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Maximum dispatch attempts per task (1 = no retry).
+    pub max_attempts: u32,
+    /// Suspend a node after this many failed tasks in `failure_window_s`
+    /// (the stale-NFS fail-fast storm defence).
+    pub suspend_after_failures: u32,
+    /// Sliding window for failure counting, seconds.
+    pub failure_window_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, suspend_after_failures: 3, failure_window_s: 60.0 }
+    }
+}
+
+/// Per-node failure tracker implementing the suspension rule.
+#[derive(Debug, Default)]
+pub struct NodeHealth {
+    /// Recent failure timestamps (seconds), pruned to the window.
+    recent_failures: Vec<f64>,
+    pub suspended: bool,
+}
+
+impl NodeHealth {
+    /// Record a failure at `now_s`; returns true if the node should now be
+    /// suspended under `policy`.
+    pub fn record_failure(&mut self, now_s: f64, policy: &RetryPolicy) -> bool {
+        self.recent_failures.retain(|t| now_s - *t <= policy.failure_window_s);
+        self.recent_failures.push(now_s);
+        if self.recent_failures.len() as u32 >= policy.suspend_after_failures {
+            self.suspended = true;
+        }
+        self.suspended
+    }
+
+    /// Record a success: clears the failure streak (but not suspension —
+    /// a suspended node stays out until explicitly resumed).
+    pub fn record_success(&mut self) {
+        self.recent_failures.clear();
+    }
+
+    /// Administratively resume the node.
+    pub fn resume(&mut self) {
+        self.suspended = false;
+        self.recent_failures.clear();
+    }
+}
+
+/// Decide what to do with a failed attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureAction {
+    /// Re-queue the task for another attempt.
+    Retry,
+    /// Give up; surface the error to the client.
+    Fail,
+}
+
+/// Apply the policy to a failed attempt.
+pub fn on_failure(error: &TaskError, attempts: u32, policy: &RetryPolicy) -> FailureAction {
+    if error.falkon_retries() && attempts < policy.max_attempts {
+        FailureAction::Retry
+    } else {
+        FailureAction::Fail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_classification_matches_paper() {
+        assert!(TaskError::CommError.falkon_retries());
+        assert!(TaskError::StaleNfsHandle.falkon_retries());
+        assert!(TaskError::NodeLost.falkon_retries());
+        assert!(!TaskError::AppError(1).falkon_retries());
+        assert!(!TaskError::WalltimeExceeded.falkon_retries());
+    }
+
+    #[test]
+    fn retries_until_attempts_exhausted() {
+        let p = RetryPolicy { max_attempts: 3, ..Default::default() };
+        assert_eq!(on_failure(&TaskError::CommError, 1, &p), FailureAction::Retry);
+        assert_eq!(on_failure(&TaskError::CommError, 2, &p), FailureAction::Retry);
+        assert_eq!(on_failure(&TaskError::CommError, 3, &p), FailureAction::Fail);
+    }
+
+    #[test]
+    fn app_errors_never_retried() {
+        let p = RetryPolicy::default();
+        assert_eq!(on_failure(&TaskError::AppError(2), 1, &p), FailureAction::Fail);
+    }
+
+    #[test]
+    fn node_suspends_after_failure_storm() {
+        let p = RetryPolicy { suspend_after_failures: 3, failure_window_s: 10.0, ..Default::default() };
+        let mut h = NodeHealth::default();
+        assert!(!h.record_failure(0.0, &p));
+        assert!(!h.record_failure(1.0, &p));
+        assert!(h.record_failure(2.0, &p)); // 3rd in window -> suspend
+        assert!(h.suspended);
+    }
+
+    #[test]
+    fn old_failures_age_out_of_window() {
+        let p = RetryPolicy { suspend_after_failures: 3, failure_window_s: 10.0, ..Default::default() };
+        let mut h = NodeHealth::default();
+        h.record_failure(0.0, &p);
+        h.record_failure(1.0, &p);
+        // 20s later: the first two aged out.
+        assert!(!h.record_failure(20.0, &p));
+        assert!(!h.suspended);
+    }
+
+    #[test]
+    fn success_clears_streak_but_resume_clears_suspension() {
+        let p = RetryPolicy { suspend_after_failures: 2, failure_window_s: 10.0, ..Default::default() };
+        let mut h = NodeHealth::default();
+        h.record_failure(0.0, &p);
+        h.record_success();
+        assert!(!h.record_failure(1.0, &p), "streak should have reset");
+        h.record_failure(2.0, &p);
+        assert!(h.suspended);
+        h.record_success();
+        assert!(h.suspended, "success does not lift suspension");
+        h.resume();
+        assert!(!h.suspended);
+    }
+}

@@ -1,0 +1,262 @@
+//! The live executor — the paper's rewritten-in-C worker (§3.2.2,
+//! Table 1), here in Rust: a persistent TCP connection, credit-based work
+//! requests, and a small worker pool (1 thread per core).
+//!
+//! The executor is deliberately minimal: connect, `Register`, grant
+//! credit with `Ready`, execute whatever arrives, report `Result`, grant
+//! more credit. All heavy machinery (retries, suspension, bundling
+//! decisions) lives in the service.
+
+use crate::falkon::errors::TaskError;
+use crate::falkon::task::TaskPayload;
+use crate::net::proto::{Msg, WireTask};
+use crate::net::tcpcore::{Framed, Proto};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Executes task payloads on the worker node.
+pub trait TaskRunner: Send + Sync {
+    /// Run a payload; `Ok(exit_code)` or a transport/app error.
+    fn run(&self, payload: &TaskPayload) -> Result<i32, TaskError>;
+}
+
+/// The default runner: handles everything except `Compute` (which needs a
+/// PJRT engine — see [`crate::runtime::ComputeRunner`]).
+///
+/// `Sleep` occupies the core for the requested duration (spin-free). For
+/// throughput benchmarks `secs = 0` makes it a no-op, matching the
+/// paper's "sleep 0" tasks.
+#[derive(Debug, Default)]
+pub struct DefaultRunner;
+
+impl TaskRunner for DefaultRunner {
+    fn run(&self, payload: &TaskPayload) -> Result<i32, TaskError> {
+        match payload {
+            TaskPayload::Sleep { secs } => {
+                if *secs > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(*secs));
+                }
+                Ok(0)
+            }
+            TaskPayload::Echo { payload } => {
+                // /bin/echo: "write" the payload (we just touch it).
+                std::hint::black_box(payload.len());
+                Ok(0)
+            }
+            TaskPayload::Command { program, args } => {
+                match std::process::Command::new(program).args(args).output() {
+                    Ok(out) => Ok(out.status.code().unwrap_or(-1)),
+                    Err(_) => Err(TaskError::AppError(127)),
+                }
+            }
+            TaskPayload::Compute { .. } => Err(TaskError::AppError(125)), // needs ComputeRunner
+            TaskPayload::SimApp { exec_secs, .. } => {
+                // A SimApp payload reaching a live executor behaves like a
+                // sleep of its compute time (I/O is simulated elsewhere).
+                if *exec_secs > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(*exec_secs));
+                }
+                Ok(0)
+            }
+        }
+    }
+}
+
+/// Test hook: fail the first `fail_first` tasks with `error`, then defer
+/// to an inner runner. Reproduces fail-fast storms (stale NFS handle).
+pub struct FaultyRunner<R: TaskRunner> {
+    pub inner: R,
+    pub fail_first: AtomicU32,
+    pub error: TaskError,
+}
+
+impl<R: TaskRunner> TaskRunner for FaultyRunner<R> {
+    fn run(&self, payload: &TaskPayload) -> Result<i32, TaskError> {
+        let left = self.fail_first.load(Ordering::SeqCst);
+        if left > 0 && self.fail_first.compare_exchange(left, left - 1, Ordering::SeqCst, Ordering::SeqCst).is_ok() {
+            return Err(self.error.clone());
+        }
+        self.inner.run(payload)
+    }
+}
+
+/// Executor configuration.
+#[derive(Clone)]
+pub struct ExecutorConfig {
+    pub service_addr: String,
+    pub executor_id: u64,
+    /// Worker threads (= cores the executor owns).
+    pub cores: u32,
+    /// Wire protocol (TCP binary or WS envelope).
+    pub proto: Proto,
+    /// Initial credit granted to the service. The C executor grants 1
+    /// (strict pull); the Java-style executor grants `cores` (push-like).
+    pub initial_credit: u32,
+}
+
+impl ExecutorConfig {
+    /// C-style executor: single task outstanding, TCP protocol.
+    pub fn c_style(service_addr: String, executor_id: u64) -> ExecutorConfig {
+        ExecutorConfig { service_addr, executor_id, cores: 1, proto: Proto::Tcp, initial_credit: 1 }
+    }
+
+    /// Java-style executor: concurrent tasks, WS protocol, push-like credit.
+    pub fn java_style(service_addr: String, executor_id: u64, cores: u32) -> ExecutorConfig {
+        ExecutorConfig { service_addr, executor_id, cores, proto: Proto::Ws, initial_credit: cores }
+    }
+}
+
+/// A running executor (join/stop handle).
+pub struct Executor {
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    framed_shutdown: crate::net::tcpcore::WriteHandle,
+}
+
+impl Executor {
+    /// Connect to the service and start working.
+    pub fn start(config: ExecutorConfig, runner: Arc<dyn TaskRunner>) -> anyhow::Result<Executor> {
+        let mut framed = Framed::connect(&config.service_addr, config.proto)?;
+        framed.send(&Msg::Register { executor_id: config.executor_id, cores: config.cores })?;
+        framed.send(&Msg::Ready { executor_id: config.executor_id, slots: config.initial_credit })?;
+        let (mut read_half, write_half) = framed.split()?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<WireTask>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut threads = Vec::new();
+
+        // Worker threads.
+        for _ in 0..config.cores.max(1) {
+            let rx = rx.clone();
+            let write = write_half.clone();
+            let runner = runner.clone();
+            let stop = stop.clone();
+            let executor_id = config.executor_id;
+            threads.push(std::thread::spawn(move || loop {
+                let task = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv_timeout(Duration::from_millis(50))
+                };
+                match task {
+                    Ok(task) => {
+                        let (exit_code, error) = match runner.run(&task.payload) {
+                            Ok(code) => (code, None),
+                            Err(e) => (-1, Some(e)),
+                        };
+                        let _ = write.send(&Msg::Result { task_id: task.id, exit_code, error });
+                        let _ = write.send(&Msg::Ready { executor_id, slots: 1 });
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }));
+        }
+
+        // Reader thread: receives Dispatch bundles and feeds workers.
+        {
+            let stop = stop.clone();
+            threads.push(std::thread::spawn(move || {
+                loop {
+                    match read_half.recv() {
+                        Ok(Msg::Dispatch { tasks }) => {
+                            for t in tasks {
+                                if tx.send(t).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        Ok(Msg::Suspend { .. }) => {
+                            // Stop granting credit; drain and idle.
+                        }
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                        Ok(_) => {}
+                    }
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                stop.store(true, Ordering::SeqCst);
+            }));
+        }
+
+        Ok(Executor { stop, threads, framed_shutdown: write_half })
+    }
+
+    /// Stop the executor and join its threads.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.framed_shutdown.shutdown();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Spawn `n` C-style executors against `addr` (test/bench helper).
+pub fn spawn_fleet(
+    addr: &str,
+    n: usize,
+    runner: Arc<dyn TaskRunner>,
+    initial_credit: u32,
+) -> anyhow::Result<Vec<Executor>> {
+    (0..n)
+        .map(|i| {
+            let cfg = ExecutorConfig {
+                service_addr: addr.to_string(),
+                executor_id: i as u64,
+                cores: 1,
+                proto: Proto::Tcp,
+                initial_credit,
+            };
+            Executor::start(cfg, runner.clone())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_runner_handles_payloads() {
+        let r = DefaultRunner;
+        assert_eq!(r.run(&TaskPayload::Sleep { secs: 0.0 }).unwrap(), 0);
+        assert_eq!(r.run(&TaskPayload::Echo { payload: b"x".to_vec() }).unwrap(), 0);
+        assert!(matches!(
+            r.run(&TaskPayload::Compute { artifact: "m".into(), reps: 1, arg: [0.0, 0.0] }),
+            Err(TaskError::AppError(125))
+        ));
+    }
+
+    #[test]
+    fn command_runner_returns_exit_code() {
+        let r = DefaultRunner;
+        let code = r
+            .run(&TaskPayload::Command { program: "/bin/sh".into(), args: vec!["-c".into(), "exit 3".into()] })
+            .unwrap();
+        assert_eq!(code, 3);
+        assert!(matches!(
+            r.run(&TaskPayload::Command { program: "/no/such/bin".into(), args: vec![] }),
+            Err(TaskError::AppError(127))
+        ));
+    }
+
+    #[test]
+    fn faulty_runner_fails_first_n() {
+        let r = FaultyRunner {
+            inner: DefaultRunner,
+            fail_first: AtomicU32::new(2),
+            error: TaskError::StaleNfsHandle,
+        };
+        let p = TaskPayload::Sleep { secs: 0.0 };
+        assert!(r.run(&p).is_err());
+        assert!(r.run(&p).is_err());
+        assert!(r.run(&p).is_ok());
+    }
+}

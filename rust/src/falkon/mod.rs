@@ -1,0 +1,33 @@
+//! The Falkon task-execution framework — the paper's system contribution.
+//!
+//! Falkon sits between client frameworks (Swift, or any submitter) and raw
+//! machine resources: it acquires coarse allocations from the LRM
+//! ([`provision`]), registers one lightweight executor per node
+//! ([`exec`]), and dispatches single-core tasks to them at rates three
+//! orders of magnitude beyond a production LRM ([`service`], [`dispatch`]).
+//!
+//! Two fabrics execute the same policies:
+//! * [`service`] + [`exec`] — the **real** implementation: a threaded TCP
+//!   service with persistent sockets ([`crate::net::tcpcore`]), used for
+//!   live dispatch benchmarks and the end-to-end examples;
+//! * [`simworld`] — the **simulated** implementation: the same queues,
+//!   bundling, caching and retry policies driven by the discrete-event
+//!   engine against the machine models, used to replay the paper's
+//!   4096–160K-core experiments.
+//!
+//! Supporting pieces: [`task`] (lifecycle model), [`queue`] (wait/pending
+//! accounting with conservation invariants), [`errors`] (the §3.3 failure
+//! taxonomy and retry/suspension policy), [`theory`] (the Figure 1–2
+//! efficiency model).
+
+pub mod dispatch;
+pub mod errors;
+pub mod exec;
+pub mod provision;
+pub mod queue;
+pub mod service;
+pub mod simworld;
+pub mod task;
+pub mod theory;
+
+pub use task::{Task, TaskId, TaskPayload, TaskState};

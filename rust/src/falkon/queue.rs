@@ -1,0 +1,289 @@
+//! Service-side task queues with conservation accounting.
+//!
+//! The wait queue holds tasks ready for dispatch; the pending table tracks
+//! tasks that are out at executors. Conservation — every submitted task is
+//! in exactly one of {waiting, pending, done} — is an invariant the
+//! property tests exercise under randomized churn and failures.
+
+use crate::falkon::errors::TaskError;
+use crate::falkon::task::{Task, TaskId, TaskPayload, TaskState};
+use std::collections::{HashMap, VecDeque};
+
+/// Outcome of a finished task as reported to clients.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskOutcome {
+    pub id: TaskId,
+    pub exit_code: i32,
+    pub error: Option<TaskError>,
+    pub attempts: u32,
+}
+
+impl TaskOutcome {
+    pub fn ok(&self) -> bool {
+        self.error.is_none() && self.exit_code == 0
+    }
+}
+
+/// The service's task bookkeeping.
+#[derive(Debug, Default)]
+pub struct TaskQueues {
+    waiting: VecDeque<TaskId>,
+    tasks: HashMap<TaskId, Task>,
+    /// Task -> executor currently holding it.
+    pending: HashMap<TaskId, usize>,
+    done: Vec<TaskOutcome>,
+    next_id: TaskId,
+    submitted: u64,
+}
+
+impl TaskQueues {
+    pub fn new() -> TaskQueues {
+        TaskQueues::default()
+    }
+
+    /// Submit a payload; returns the assigned task id.
+    pub fn submit(&mut self, payload: TaskPayload) -> TaskId {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut task = Task::new(id, payload);
+        task.advance(TaskState::Queued).expect("Submitted->Queued");
+        self.tasks.insert(id, task);
+        self.waiting.push_back(id);
+        self.submitted += 1;
+        id
+    }
+
+    /// Number of tasks waiting for dispatch.
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Number of tasks out at executors.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Completed outcomes so far (drain with [`TaskQueues::drain_done`]).
+    pub fn done_len(&self) -> usize {
+        self.done.len()
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// True when every submitted task reached a terminal state.
+    pub fn all_done(&self) -> bool {
+        self.waiting.is_empty() && self.pending.is_empty()
+    }
+
+    /// Pop up to `n` tasks for dispatch to `executor`. Marks them
+    /// Dispatched and moves them to pending.
+    pub fn take_for_dispatch(&mut self, executor: usize, n: usize) -> Vec<Task> {
+        let mut out = Vec::with_capacity(n.min(self.waiting.len()));
+        for _ in 0..n {
+            let Some(id) = self.waiting.pop_front() else { break };
+            let task = self.tasks.get_mut(&id).expect("waiting task exists");
+            task.advance(TaskState::Dispatched).expect("Queued->Dispatched");
+            self.pending.insert(id, executor);
+            out.push(task.clone());
+        }
+        out
+    }
+
+    /// Record a successful completion from an executor.
+    pub fn complete(&mut self, id: TaskId, exit_code: i32) {
+        let Some(_) = self.pending.remove(&id) else {
+            // Duplicate/unknown result (e.g. a retried task's first attempt
+            // raced the retry): ignore — the first terminal result wins.
+            return;
+        };
+        let task = self.tasks.get_mut(&id).expect("pending task exists");
+        // Executors report Running implicitly; normalize the transition.
+        if task.state == TaskState::Dispatched {
+            task.advance(TaskState::Running).unwrap();
+        }
+        if exit_code == 0 {
+            task.advance(TaskState::Completed { exit_code }).unwrap();
+            self.done.push(TaskOutcome { id, exit_code, error: None, attempts: task.attempts });
+        } else {
+            // Non-zero exit is an application error: terminal, not retried.
+            let error = TaskError::AppError(exit_code);
+            task.advance(TaskState::Failed { error: error.clone(), attempts: task.attempts })
+                .unwrap();
+            self.done.push(TaskOutcome { id, exit_code, error: Some(error), attempts: task.attempts });
+        }
+        self.tasks.remove(&id);
+    }
+
+    /// Record a failed attempt; either re-queues (retry) or finalizes.
+    /// Returns true if the task was re-queued.
+    pub fn fail_attempt(
+        &mut self,
+        id: TaskId,
+        error: TaskError,
+        policy: &crate::falkon::errors::RetryPolicy,
+    ) -> bool {
+        let Some(_) = self.pending.remove(&id) else { return false };
+        let task = self.tasks.get_mut(&id).expect("pending task exists");
+        let attempts = task.attempts;
+        match crate::falkon::errors::on_failure(&error, attempts, policy) {
+            crate::falkon::errors::FailureAction::Retry => {
+                task.advance(TaskState::Retrying { attempt: attempts, error }).unwrap();
+                task.advance(TaskState::Queued).unwrap();
+                self.waiting.push_back(id);
+                true
+            }
+            crate::falkon::errors::FailureAction::Fail => {
+                task.advance(TaskState::Failed { error: error.clone(), attempts }).unwrap();
+                self.done.push(TaskOutcome {
+                    id,
+                    exit_code: -1,
+                    error: Some(error),
+                    attempts,
+                });
+                self.tasks.remove(&id);
+                false
+            }
+        }
+    }
+
+    /// All tasks currently pending on `executor` (for node-loss handling).
+    pub fn pending_on(&self, executor: usize) -> Vec<TaskId> {
+        self.pending
+            .iter()
+            .filter(|(_, e)| **e == executor)
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    /// Drain accumulated outcomes.
+    pub fn drain_done(&mut self) -> Vec<TaskOutcome> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Conservation check: submitted == waiting + pending + done (+drained).
+    pub fn conserved(&self, drained: u64) -> bool {
+        self.submitted
+            == self.waiting.len() as u64 + self.pending.len() as u64 + self.done.len() as u64 + drained
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::falkon::errors::RetryPolicy;
+
+    fn sleep0() -> TaskPayload {
+        TaskPayload::Sleep { secs: 0.0 }
+    }
+
+    #[test]
+    fn submit_dispatch_complete_flow() {
+        let mut q = TaskQueues::new();
+        let id = q.submit(sleep0());
+        assert_eq!(q.waiting_len(), 1);
+        let batch = q.take_for_dispatch(0, 10);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(q.pending_len(), 1);
+        q.complete(id, 0);
+        assert_eq!(q.pending_len(), 0);
+        let done = q.drain_done();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].ok());
+        assert!(q.all_done());
+    }
+
+    #[test]
+    fn dispatch_respects_bundle_size_and_fifo() {
+        let mut q = TaskQueues::new();
+        let ids: Vec<TaskId> = (0..5).map(|_| q.submit(sleep0())).collect();
+        let batch = q.take_for_dispatch(1, 3);
+        assert_eq!(batch.iter().map(|t| t.id).collect::<Vec<_>>(), ids[..3]);
+        assert_eq!(q.waiting_len(), 2);
+        assert_eq!(q.pending_len(), 3);
+    }
+
+    #[test]
+    fn comm_error_requeues_then_exhausts() {
+        let mut q = TaskQueues::new();
+        let policy = RetryPolicy { max_attempts: 2, ..Default::default() };
+        let id = q.submit(sleep0());
+        q.take_for_dispatch(0, 1);
+        assert!(q.fail_attempt(id, TaskError::CommError, &policy)); // attempt 1 -> retry
+        assert_eq!(q.waiting_len(), 1);
+        q.take_for_dispatch(0, 1);
+        assert!(!q.fail_attempt(id, TaskError::CommError, &policy)); // attempt 2 -> fail
+        let done = q.drain_done();
+        assert_eq!(done[0].error, Some(TaskError::CommError));
+        assert_eq!(done[0].attempts, 2);
+    }
+
+    #[test]
+    fn app_error_is_terminal_via_exit_code() {
+        let mut q = TaskQueues::new();
+        let id = q.submit(sleep0());
+        q.take_for_dispatch(0, 1);
+        q.complete(id, 3);
+        let done = q.drain_done();
+        assert_eq!(done[0].exit_code, 3);
+        assert_eq!(done[0].error, Some(TaskError::AppError(3)));
+    }
+
+    #[test]
+    fn duplicate_results_ignored() {
+        let mut q = TaskQueues::new();
+        let id = q.submit(sleep0());
+        q.take_for_dispatch(0, 1);
+        q.complete(id, 0);
+        q.complete(id, 0); // duplicate
+        assert_eq!(q.drain_done().len(), 1);
+    }
+
+    #[test]
+    fn pending_on_tracks_executor() {
+        let mut q = TaskQueues::new();
+        let a = q.submit(sleep0());
+        let b = q.submit(sleep0());
+        q.take_for_dispatch(7, 1);
+        q.take_for_dispatch(9, 1);
+        assert_eq!(q.pending_on(7), vec![a]);
+        assert_eq!(q.pending_on(9), vec![b]);
+    }
+
+    #[test]
+    fn conservation_through_churn() {
+        let mut q = TaskQueues::new();
+        let policy = RetryPolicy::default();
+        let mut rng = crate::util::rng::Rng::new(31);
+        let mut drained = 0u64;
+        for step in 0..2000 {
+            match rng.below(4) {
+                0 => {
+                    q.submit(sleep0());
+                }
+                1 => {
+                    let exec = rng.below(8) as usize;
+                    for t in q.take_for_dispatch(exec, rng.range(1, 4) as usize) {
+                        // Half complete, half fail with a random error.
+                        if rng.chance(0.5) {
+                            q.complete(t.id, if rng.chance(0.9) { 0 } else { 1 });
+                        } else {
+                            let err = if rng.chance(0.5) {
+                                TaskError::CommError
+                            } else {
+                                TaskError::AppError(9)
+                            };
+                            q.fail_attempt(t.id, err, &policy);
+                        }
+                    }
+                }
+                2 => {
+                    drained += q.drain_done().len() as u64;
+                }
+                _ => {}
+            }
+            assert!(q.conserved(drained), "conservation broken at step {step}");
+        }
+    }
+}

@@ -1,0 +1,492 @@
+//! The live Falkon service: a threaded TCP dispatcher with persistent
+//! sockets, credit-based flow control, bundling, retry and node
+//! suspension. This is the real (non-simulated) fabric used by the
+//! dispatch-rate benchmarks (Figs 6, 7, 10) and the end-to-end examples.
+//!
+//! Thread structure (cf. paper Fig 3):
+//! ```text
+//!   acceptor ──▶ per-connection reader threads ──▶ shared State
+//!                                                     │ condvar
+//!   client submit ──▶ State.queues ──▶ dispatcher ────┘
+//!                                        │ writes via Registry (persistent sockets)
+//! ```
+
+use crate::falkon::dispatch::{bundle_for, DispatchConfig, IdleExecutor};
+use crate::falkon::errors::{NodeHealth, RetryPolicy, TaskError};
+use crate::falkon::queue::{TaskOutcome, TaskQueues};
+use crate::falkon::task::{TaskId, TaskPayload};
+use crate::net::proto::{Msg, WireTask};
+use crate::net::tcpcore::{Framed, Registry};
+use std::collections::{HashMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Bind address, e.g. "127.0.0.1:0" (0 = ephemeral port).
+    pub bind: String,
+    pub dispatch: DispatchConfig,
+    pub retry: RetryPolicy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            bind: "127.0.0.1:0".into(),
+            dispatch: DispatchConfig::default(),
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+/// Per-stage CPU time accounting for the Fig 7 profiling bench.
+#[derive(Debug, Default)]
+pub struct Profile {
+    pub encode_ns: AtomicU64,
+    pub socket_ns: AtomicU64,
+    pub queue_ns: AtomicU64,
+    pub notify_ns: AtomicU64,
+    pub tasks: AtomicU64,
+}
+
+impl Profile {
+    /// Per-task mean (stage -> milliseconds).
+    pub fn per_task_ms(&self) -> Vec<(&'static str, f64)> {
+        let n = self.tasks.load(Ordering::Relaxed).max(1) as f64;
+        let f = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64 / n / 1e6;
+        vec![
+            ("queue", f(&self.queue_ns)),
+            ("encode", f(&self.encode_ns)),
+            ("socket", f(&self.socket_ns)),
+            ("notify", f(&self.notify_ns)),
+        ]
+    }
+}
+
+#[derive(Debug)]
+struct ExecMeta {
+    credit: u32,
+    node: usize,
+    health: NodeHealth,
+    /// Executor announced this many cores at registration.
+    #[allow(dead_code)]
+    cores: u32,
+}
+
+#[derive(Default)]
+struct State {
+    queues: TaskQueues,
+    execs: HashMap<u64, ExecMeta>,
+    /// Executors with credit > 0, FIFO.
+    idle: VecDeque<u64>,
+    outcomes: Vec<TaskOutcome>,
+    drained: u64,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// Wakes the dispatcher (work or credit arrived).
+    work_cv: Condvar,
+    /// Wakes client waiters (outcomes arrived).
+    done_cv: Condvar,
+    registry: Registry,
+    config: ServiceConfig,
+    shutdown: AtomicBool,
+    profile: Profile,
+}
+
+/// Handle to a running service.
+pub struct Service {
+    inner: Arc<Inner>,
+    addr: std::net::SocketAddr,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the service (binds, spawns acceptor + dispatcher).
+    pub fn start(config: ServiceConfig) -> anyhow::Result<Service> {
+        let listener = TcpListener::bind(&config.bind)?;
+        let addr = listener.local_addr()?;
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State::default()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            registry: Registry::new(),
+            config,
+            shutdown: AtomicBool::new(false),
+            profile: Profile::default(),
+        });
+
+        let mut threads = Vec::new();
+        {
+            let inner = inner.clone();
+            threads.push(std::thread::spawn(move || acceptor_loop(listener, inner)));
+        }
+        {
+            let inner = inner.clone();
+            threads.push(std::thread::spawn(move || dispatcher_loop(inner)));
+        }
+        Ok(Service { inner, addr, threads })
+    }
+
+    /// Address executors should connect to.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Submit one task; returns its id.
+    pub fn submit(&self, payload: TaskPayload) -> TaskId {
+        let t0 = Instant::now();
+        let id = {
+            let mut st = self.inner.state.lock().unwrap();
+            st.queues.submit(payload)
+        };
+        self.inner.profile.queue_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.inner.work_cv.notify_one();
+        id
+    }
+
+    /// Submit many tasks at once (one lock acquisition).
+    pub fn submit_many(&self, payloads: impl IntoIterator<Item = TaskPayload>) -> Vec<TaskId> {
+        let t0 = Instant::now();
+        let ids: Vec<TaskId> = {
+            let mut st = self.inner.state.lock().unwrap();
+            payloads.into_iter().map(|p| st.queues.submit(p)).collect()
+        };
+        self.inner.profile.queue_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.inner.work_cv.notify_all();
+        ids
+    }
+
+    /// Number of registered executors.
+    pub fn executors(&self) -> usize {
+        self.inner.state.lock().unwrap().execs.len()
+    }
+
+    /// Block until `n` executors have registered (with timeout).
+    pub fn wait_executors(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.executors() >= n {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        false
+    }
+
+    /// Wait until all submitted tasks are terminal; drains outcomes.
+    pub fn wait_all(&self, timeout: Duration) -> anyhow::Result<Vec<TaskOutcome>> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            // Collect anything finished so far.
+            let newly = st.queues.drain_done();
+            st.outcomes.extend(newly);
+            if st.queues.all_done() {
+                st.drained += st.outcomes.len() as u64;
+                return Ok(std::mem::take(&mut st.outcomes));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                anyhow::bail!(
+                    "wait_all timed out: {} waiting, {} pending",
+                    st.queues.waiting_len(),
+                    st.queues.pending_len()
+                );
+            }
+            let (g, _) = self
+                .inner
+                .done_cv
+                .wait_timeout(st, deadline - now)
+                .map_err(|_| anyhow::anyhow!("poisoned"))?;
+            st = g;
+        }
+    }
+
+    /// Block until at least one task outcome is available (or `timeout`),
+    /// then drain and return everything finished so far. Used by
+    /// incremental clients like the Swift engine.
+    pub fn poll_outcomes(&self, timeout: Duration) -> Vec<TaskOutcome> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            let newly = st.queues.drain_done();
+            if !newly.is_empty() {
+                st.drained += newly.len() as u64;
+                return newly;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Vec::new();
+            }
+            let (g, _) = self
+                .inner
+                .done_cv
+                .wait_timeout(st, deadline - now)
+                .expect("state poisoned");
+            st = g;
+        }
+    }
+
+    /// Stage-time profile (Fig 7).
+    pub fn profile(&self) -> &Profile {
+        &self.inner.profile
+    }
+
+    /// Stop the service and all connections.
+    pub fn shutdown(mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.registry.broadcast(&Msg::Shutdown);
+        self.inner.work_cv.notify_all();
+        // Unblock the acceptor with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn acceptor_loop(listener: TcpListener, inner: Arc<Inner>) {
+    loop {
+        let Ok((stream, _)) = listener.accept() else { break };
+        if inner.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let inner = inner.clone();
+        std::thread::spawn(move || {
+            if let Ok(framed) = Framed::accept(stream) {
+                reader_loop(framed, inner);
+            }
+        });
+    }
+}
+
+/// Per-connection reader: handles Register, then Ready/Result/Heartbeat.
+fn reader_loop(framed: Framed, inner: Arc<Inner>) {
+    let Ok((mut read_half, write_half)) = framed.split() else { return };
+    // First message must be Register.
+    let executor_id = match read_half.recv() {
+        Ok(Msg::Register { executor_id, cores }) => {
+            inner.registry.insert(executor_id, write_half);
+            let mut st = inner.state.lock().unwrap();
+            st.execs.insert(
+                executor_id,
+                ExecMeta {
+                    credit: 0,
+                    node: executor_id as usize,
+                    health: NodeHealth::default(),
+                    cores,
+                },
+            );
+            executor_id
+        }
+        _ => return,
+    };
+
+    loop {
+        match read_half.recv() {
+            Ok(Msg::Ready { executor_id: _, slots }) => {
+                let mut st = inner.state.lock().unwrap();
+                if let Some(meta) = st.execs.get_mut(&executor_id) {
+                    if meta.health.suspended {
+                        continue; // no credit for suspended nodes
+                    }
+                    let was_zero = meta.credit == 0;
+                    meta.credit += slots;
+                    if was_zero {
+                        st.idle.push_back(executor_id);
+                    }
+                }
+                drop(st);
+                inner.work_cv.notify_one();
+            }
+            Ok(Msg::Result { task_id, exit_code, error }) => {
+                handle_result(&inner, executor_id, task_id, exit_code, error);
+            }
+            Ok(Msg::Heartbeat { .. }) => {}
+            Ok(_) | Err(_) => break, // protocol violation or disconnect
+        }
+        if inner.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+
+    // Connection lost: retry everything pending on this executor.
+    inner.registry.remove(executor_id);
+    let mut st = inner.state.lock().unwrap();
+    st.execs.remove(&executor_id);
+    st.idle.retain(|e| *e != executor_id);
+    let lost = st.queues.pending_on(executor_id as usize);
+    for id in lost {
+        st.queues.fail_attempt(id, TaskError::CommError, &inner.config.retry);
+    }
+    drop(st);
+    inner.work_cv.notify_all();
+    inner.done_cv.notify_all();
+}
+
+fn handle_result(
+    inner: &Arc<Inner>,
+    executor_id: u64,
+    task_id: TaskId,
+    exit_code: i32,
+    error: Option<TaskError>,
+) {
+    let t0 = Instant::now();
+    let mut st = inner.state.lock().unwrap();
+    let now_s = t0.elapsed().as_secs_f64(); // monotonic enough for windows
+    match error {
+        None => {
+            st.queues.complete(task_id, exit_code);
+            if let Some(meta) = st.execs.get_mut(&executor_id) {
+                meta.health.record_success();
+            }
+        }
+        Some(err) => {
+            st.queues.fail_attempt(task_id, err, &inner.config.retry);
+            let policy = inner.config.retry.clone();
+            let mut suspend = false;
+            if let Some(meta) = st.execs.get_mut(&executor_id) {
+                suspend = meta.health.record_failure(now_s, &policy);
+            }
+            if suspend {
+                st.idle.retain(|e| *e != executor_id);
+                if let Some(h) = inner.registry.get(executor_id) {
+                    let _ = h.send(&Msg::Suspend { reason: "failure storm".into() });
+                }
+            }
+        }
+    }
+    drop(st);
+    inner.profile.notify_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    inner.profile.tasks.fetch_add(1, Ordering::Relaxed);
+    inner.done_cv.notify_all();
+    inner.work_cv.notify_one(); // completions may free retried work
+}
+
+/// The dispatcher: matches queued tasks to executor credit.
+fn dispatcher_loop(inner: Arc<Inner>) {
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // Phase 1 (locked): plan one dispatch.
+        let planned = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if st.queues.waiting_len() > 0 && !st.idle.is_empty() {
+                    break;
+                }
+                let (g, _) = inner
+                    .work_cv
+                    .wait_timeout(st, Duration::from_millis(50))
+                    .expect("state poisoned");
+                st = g;
+            }
+            plan_one(&mut st, &inner.config.dispatch)
+        };
+        // Phase 2 (unlocked): encode + write.
+        if let Some((executor_id, tasks)) = planned {
+            let t0 = Instant::now();
+            let wire: Vec<WireTask> =
+                tasks.iter().map(|t| WireTask { id: t.id, payload: t.payload.clone() }).collect();
+            let msg = Msg::Dispatch { tasks: wire };
+            inner.profile.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let t1 = Instant::now();
+            let ok = match inner.registry.get(executor_id) {
+                Some(h) => h.send(&msg).is_ok(),
+                None => false,
+            };
+            inner.profile.socket_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            if !ok {
+                // Connection died between planning and writing: retry tasks.
+                let mut st = inner.state.lock().unwrap();
+                for t in &tasks {
+                    st.queues.fail_attempt(t.id, TaskError::CommError, &inner.config.retry);
+                }
+                drop(st);
+                inner.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Pop one (executor, bundle) assignment from the state. FIFO over idle
+/// executors; honors credit and bundle config.
+fn plan_one(
+    st: &mut State,
+    cfg: &DispatchConfig,
+) -> Option<(u64, Vec<crate::falkon::task::Task>)> {
+    while let Some(&exec_id) = st.idle.front() {
+        let Some(meta) = st.execs.get_mut(&exec_id) else {
+            st.idle.pop_front();
+            continue;
+        };
+        if meta.credit == 0 || meta.health.suspended {
+            st.idle.pop_front();
+            continue;
+        }
+        let n = bundle_for(meta.credit, cfg);
+        let tasks = st.queues.take_for_dispatch(exec_id as usize, n);
+        if tasks.is_empty() {
+            return None;
+        }
+        meta.credit -= tasks.len() as u32;
+        if meta.credit == 0 {
+            st.idle.pop_front();
+        }
+        return Some((exec_id, tasks));
+    }
+    None
+}
+
+/// Snapshot used by `choose_executor`-style policies and tests.
+pub fn idle_snapshot(svc: &Service) -> Vec<IdleExecutor> {
+    let st = svc.inner.state.lock().unwrap();
+    st.idle
+        .iter()
+        .filter_map(|id| {
+            st.execs.get(id).map(|m| IdleExecutor {
+                executor_id: *id,
+                credit: m.credit,
+                node: m.node,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_starts_and_shuts_down() {
+        let svc = Service::start(ServiceConfig::default()).unwrap();
+        assert_eq!(svc.executors(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_assigns_monotone_ids() {
+        let svc = Service::start(ServiceConfig::default()).unwrap();
+        let a = svc.submit(TaskPayload::Sleep { secs: 0.0 });
+        let b = svc.submit(TaskPayload::Sleep { secs: 0.0 });
+        assert!(b > a);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn wait_all_times_out_without_executors() {
+        let svc = Service::start(ServiceConfig::default()).unwrap();
+        svc.submit(TaskPayload::Sleep { secs: 0.0 });
+        assert!(svc.wait_all(Duration::from_millis(100)).is_err());
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,1149 @@
+//! The simulated Falkon fabric: service + executors + shared FS + caches
+//! on the discrete-event engine, able to replay the paper's experiments at
+//! full machine scale (4096-core BG/P, 5832-core SiCortex, the projected
+//! 160K-core ALCF BG/P) on one host.
+//!
+//! The same *policies* as the live fabric apply — credit-based dispatch,
+//! bundling, retry, node suspension, ramdisk caching — but time is
+//! virtual and costs come from the calibrated [`Machine`] profiles:
+//!
+//! * the **service** is a single FIFO server whose per-message cost is
+//!   `a + n·b + c·wire_bytes` (per-message envelope, per-task marshalling,
+//!   per-byte handling), calibrated so that 1-task messages reproduce the
+//!   Fig 6 end-to-end rates and bundle-10 WS messages reproduce the
+//!   604 → 3773 tasks/s jump;
+//! * **executor cores** run one task at a time: stage-in (cache-aware
+//!   shared-FS reads, script invocation, wrapper mkdirs) → compute →
+//!   stage-out (direct or buffered writes) → result notification;
+//! * the **shared FS** is [`SharedFs`]; node-local ramdisk is a cost
+//!   model; the [`CacheManager`] decides what hits where.
+
+use crate::falkon::errors::{RetryPolicy, TaskError};
+use crate::fs::cache::CacheManager;
+use crate::fs::ramdisk::RamdiskModel;
+use crate::fs::shared::{FsOp, OpId, SharedFs};
+use crate::metrics::{Campaign, TaskTimes};
+use crate::net::codec::{bytes_per_task, Codec, TcpCodec, WsCodec};
+use crate::sim::engine::{secs, Scheduler, Time};
+use crate::sim::machine::Machine;
+use crate::util::rng::Rng;
+use std::collections::{HashMap, VecDeque};
+
+/// A simulated task: compute plus an explicit I/O profile.
+#[derive(Clone, Debug, Default)]
+pub struct SimTask {
+    /// Pure compute seconds on one core.
+    pub exec_secs: f64,
+    /// Per-task input read from the shared FS (not cacheable).
+    pub read_bytes: u64,
+    /// Per-task output written to the shared FS.
+    pub write_bytes: u64,
+    /// Task description length on the wire (Fig 10).
+    pub desc_len: usize,
+    /// Cacheable objects: (key, bytes) — binary, static input.
+    pub objects: Vec<(&'static str, u64)>,
+    /// Shared-FS mkdir+rm pairs per task (the Swift wrapper's workdir).
+    pub mkdirs: u32,
+    /// Script invocations per task (wrapper + app launch).
+    pub script_invokes: u32,
+    /// Shared-FS status-log appends per task (Swift wrapper; small
+    /// writes that pay the per-op server cost).
+    pub log_appends: u32,
+}
+
+impl SimTask {
+    /// The paper's `sleep N` benchmark task.
+    pub fn sleep(secs: f64) -> SimTask {
+        SimTask { exec_secs: secs, desc_len: 12, ..Default::default() }
+    }
+}
+
+/// Which wire protocol the (simulated) deployment uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireProto {
+    /// C executor / compact TCP.
+    Tcp,
+    /// Java executor / WS envelope.
+    Ws,
+}
+
+/// World configuration.
+#[derive(Clone, Debug)]
+pub struct WorldConfig {
+    pub machine: Machine,
+    /// Cores to use (≤ machine.cores()).
+    pub cores: usize,
+    pub proto: WireProto,
+    /// Tasks per dispatch message.
+    pub bundle: usize,
+    /// Ramdisk caching of objects + buffered output write-back (§3 mech 3).
+    pub caching: bool,
+    /// Invoke wrapper scripts from ramdisk instead of the shared FS
+    /// (Swift optimization #1/#3).
+    pub scripts_from_ramdisk: bool,
+    /// Wrapper mkdirs on ramdisk instead of the shared FS.
+    pub mkdirs_on_ramdisk: bool,
+    /// Output write-back flush threshold, bytes.
+    pub flush_bytes: u64,
+    pub retry: RetryPolicy,
+    pub seed: u64,
+    /// Optional per-node MTBF (exponential) for failure injection.
+    pub node_mtbf_s: Option<f64>,
+    /// Per-node ramdisk cache budget, bytes.
+    pub cache_capacity_bytes: u64,
+    /// Task pre-fetching (§6 future work, implemented): dispatch credit
+    /// per core. 1 = the C executor's strict pull; 2+ overlaps the next
+    /// task's dispatch+staging with the current execution.
+    pub prefetch: u32,
+    /// Data-aware placement (§6, implemented): prefer idle cores whose
+    /// node already caches the head task's objects (bounded scan).
+    pub data_aware: bool,
+    /// 3-tier dispatch (§6, implemented): number of intermediate
+    /// forwarders (0 = the paper's current 2-tier architecture). The
+    /// service ships large bundles to forwarders (one per PSET/ION
+    /// class), which fan tasks out to their cores in parallel —
+    /// multiplying the sustainable dispatch rate.
+    pub forwarders: usize,
+}
+
+impl WorldConfig {
+    pub fn new(machine: Machine, cores: usize) -> WorldConfig {
+        let machine = machine.with_cores(cores);
+        WorldConfig {
+            machine,
+            cores,
+            proto: WireProto::Tcp,
+            bundle: 1,
+            caching: true,
+            scripts_from_ramdisk: true,
+            mkdirs_on_ramdisk: true,
+            flush_bytes: 1 << 20,
+            retry: RetryPolicy::default(),
+            seed: 0,
+            node_mtbf_s: None,
+            cache_capacity_bytes: 1 << 31,
+            prefetch: 1,
+            data_aware: false,
+            forwarders: 0,
+        }
+    }
+}
+
+/// Service cost model: cost(message with n tasks, w wire bytes) =
+/// `per_msg + n·per_task + w·per_byte`.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceModel {
+    pub per_msg_s: f64,
+    pub per_task_s: f64,
+    pub per_byte_s: f64,
+    pub nic_bps: f64,
+}
+
+impl ServiceModel {
+    /// Calibrated from the paper (§4.2): WS fractions from the bundling
+    /// measurements (604 → 3773 tasks/s at bundle 10 ⇒ per-message term
+    /// dominates at 93%), TCP assumed leaner per-message share (60%,
+    /// DESIGN.md assumption A2), per-byte cost from Fig 10's 10 KB point.
+    pub fn for_machine(machine: &Machine, proto: WireProto) -> ServiceModel {
+        let (base, msg_frac) = match proto {
+            WireProto::Tcp => (machine.dispatch_tcp_secs, 0.60),
+            WireProto::Ws => (
+                machine
+                    .dispatch_ws_secs
+                    .expect("WS protocol unsupported on this machine (no Java)"),
+                0.933,
+            ),
+        };
+        ServiceModel {
+            per_msg_s: base * msg_frac,
+            per_task_s: base * (1.0 - msg_frac),
+            per_byte_s: 5.36e-8,
+            nic_bps: 100e6,
+        }
+    }
+
+    /// CPU seconds to process one dispatch of `n` tasks totalling
+    /// `wire_bytes` beyond the minimal sleep-0 message.
+    pub fn dispatch_cost_s(&self, n: usize, extra_bytes: f64) -> f64 {
+        self.per_msg_s + n as f64 * self.per_task_s + extra_bytes * self.per_byte_s
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Stage {
+    StageIn,
+    StageOut,
+    /// A status-log append (stage-out side op).
+    LogAppend,
+}
+
+#[derive(Debug)]
+enum Ev {
+    /// Service becomes free / should try to dispatch.
+    TryDispatch,
+    /// A dispatch message reaches a core.
+    Deliver { core: usize, tasks: Vec<usize> },
+    /// A service->forwarder bundle reaches forwarder `fwd` (3-tier).
+    FwdDeliver { fwd: usize, assignments: Vec<(usize, usize)> },
+    /// A core finished the compute phase of a task.
+    ExecDone { core: usize, task: usize },
+    /// A result notification reaches the service.
+    Result { core: usize, task: usize, error: Option<TaskError> },
+    /// Shared-FS progress wakeup (deduplicated via `fs_wake_target`).
+    FsWake,
+    /// A node dies (failure injection).
+    NodeFail { node: usize },
+}
+
+#[derive(Debug, Default, Clone)]
+struct TaskState {
+    attempts: u32,
+    /// Outstanding FS ops for the current phase (stage-in reads, or
+    /// stage-out log appends).
+    stage_ops: u32,
+    /// Stage-out: main output write still in flight.
+    awaiting_write: bool,
+    submit: Time,
+    dispatch: Time,
+    start_exec: Time,
+    end_exec: Time,
+    done: bool,
+}
+
+#[derive(Debug)]
+struct CoreState {
+    /// Tasks fully staged (input local) awaiting the core.
+    staged: VecDeque<usize>,
+    /// Tasks currently in their stage-in phase on this core's node.
+    staging: u32,
+    /// Task currently occupying the core's compute.
+    current: Option<usize>,
+    /// Dispatch credit (pre-fetch depth remaining).
+    credit: u32,
+    alive: bool,
+}
+
+/// The simulated world. Build, [`World::run`], then read
+/// [`World::campaign`].
+pub struct World {
+    cfg: WorldConfig,
+    model: ServiceModel,
+    sched: Scheduler<Ev>,
+    fs: SharedFs,
+    ram: RamdiskModel,
+    cache: CacheManager,
+    rng: Rng,
+    tasks: Vec<SimTask>,
+    tstate: Vec<TaskState>,
+    waiting: VecDeque<usize>,
+    cores: Vec<CoreState>,
+    /// Cores with dispatch credit, FIFO.
+    idle: VecDeque<usize>,
+    /// Per-forwarder FIFO busy horizon (3-tier mode).
+    fwd_busy_until: Vec<Time>,
+    service_busy_until: Time,
+    dispatch_scheduled: bool,
+    /// fs OpId -> (core, task, stage that just finished when op completes)
+    fs_ops: HashMap<OpId, (usize, usize, Stage)>,
+    /// Earliest outstanding FsWake event time (dedup: without this, every
+    /// FS submit armed its own wake and the population of live wake
+    /// events scaled with in-flight ops — EXPERIMENTS.md §Perf L3-2).
+    fs_wake_target: Option<Time>,
+    campaign: Campaign,
+    completed: usize,
+    failed: usize,
+    /// Wire-byte baseline of a sleep-0 dispatch (per task).
+    base_wire_bytes: f64,
+    /// Event counts by kind (TryDispatch, Deliver, ExecDone, Result,
+    /// FsWake, NodeFail, FwdDeliver) — cheap observability for perf work.
+    pub event_tally: [u64; 7],
+}
+
+impl World {
+    pub fn new(cfg: WorldConfig, tasks: Vec<SimTask>) -> World {
+        let cores = cfg.cores.min(cfg.machine.cores());
+        let model = ServiceModel::for_machine(&cfg.machine, cfg.proto);
+        let span_psets = match cfg.machine.nodes_per_pset {
+            Some(npp) => cfg.machine.nodes > npp,
+            None => false,
+        };
+        let fs = SharedFs::new(cfg.machine.fs.clone(), span_psets);
+        let nodes = cfg.machine.nodes;
+        let cache = CacheManager::new(nodes, cfg.cache_capacity_bytes, cfg.flush_bytes);
+        let codec: &dyn Codec = match cfg.proto {
+            WireProto::Tcp => &TcpCodec,
+            WireProto::Ws => &WsCodec,
+        };
+        let base_wire_bytes = bytes_per_task(codec, 12, 1);
+        let n = tasks.len();
+        let mut w = World {
+            model,
+            sched: Scheduler::new(),
+            fs,
+            ram: RamdiskModel::new(),
+            cache,
+            rng: Rng::new(cfg.seed),
+            tstate: vec![TaskState::default(); n],
+            waiting: (0..n).collect(),
+            cores: (0..cores)
+                .map(|_| CoreState {
+                    staged: VecDeque::new(),
+                    staging: 0,
+                    current: None,
+                    // Bundling implies pre-fetch: a bundle parks tasks at
+                    // the executor beyond its free cores (the paper's
+                    // executors unbundle into a local queue).
+                    credit: cfg.prefetch.max(cfg.bundle as u32).max(1),
+                    alive: true,
+                })
+                .collect(),
+            idle: (0..cores).collect(),
+            fwd_busy_until: vec![0; cfg.forwarders],
+            service_busy_until: 0,
+            dispatch_scheduled: false,
+            fs_ops: HashMap::new(),
+            fs_wake_target: None,
+            campaign: Campaign::new(cores),
+            completed: 0,
+            failed: 0,
+            base_wire_bytes,
+            event_tally: [0; 7],
+            tasks,
+            cfg,
+        };
+        // All tasks submitted at t=0 (the paper submits whole workloads).
+        for t in &mut w.tstate {
+            t.submit = 0;
+        }
+        if let Some(mtbf) = w.cfg.node_mtbf_s {
+            for node in 0..w.cfg.machine.nodes {
+                let at = w.rng.exp(mtbf);
+                w.sched.after_secs(at, Ev::NodeFail { node });
+            }
+        }
+        w.sched.at(0, Ev::TryDispatch);
+        w.dispatch_scheduled = true;
+        w
+    }
+
+    fn node_of(&self, core: usize) -> usize {
+        core / self.cfg.machine.cores_per_node
+    }
+
+    fn codec_wire_bytes(&self, desc_len: usize, bundle: usize) -> f64 {
+        let codec: &dyn Codec = match self.cfg.proto {
+            WireProto::Tcp => &TcpCodec,
+            WireProto::Ws => &WsCodec,
+        };
+        bytes_per_task(codec, desc_len, bundle) * bundle as f64
+    }
+
+    /// Schedule the shared-FS wakeup, keeping at most one outstanding
+    /// event at the earliest interesting time.
+    fn arm_fs_wake(&mut self) {
+        if let Some(t) = self.fs.next_event() {
+            let t = t.max(self.sched.now());
+            match self.fs_wake_target {
+                Some(armed) if armed <= t => {} // an earlier wake covers it
+                _ => {
+                    self.fs_wake_target = Some(t);
+                    self.sched.at(t, Ev::FsWake);
+                }
+            }
+        }
+    }
+
+    /// Pop the next target core honoring liveness, credit, and (if
+    /// enabled) data-aware placement: among the first 32 idle cores, pick
+    /// the one whose node caches the most bytes of the head task's
+    /// objects (bounded scan keeps dispatch O(1)-ish).
+    fn pick_core(&mut self) -> Option<usize> {
+        // Drop dead/creditless entries at the front.
+        loop {
+            match self.idle.front() {
+                None => return None,
+                Some(&c) if !self.cores[c].alive || self.cores[c].credit == 0 => {
+                    self.idle.pop_front();
+                }
+                _ => break,
+            }
+        }
+        if self.cfg.data_aware {
+            if let Some(&head) = self.waiting.front() {
+                let objs = &self.tasks[head].objects;
+                if !objs.is_empty() {
+                    let scan = self.idle.len().min(32);
+                    let mut best = (0usize, 0u64);
+                    for i in 0..scan {
+                        let c = self.idle[i];
+                        if !self.cores[c].alive || self.cores[c].credit == 0 {
+                            continue;
+                        }
+                        let node = c / self.cfg.machine.cores_per_node;
+                        let bytes: u64 = objs
+                            .iter()
+                            .filter(|(k, _)| self.cache.contains(node, k))
+                            .map(|(_, b)| *b)
+                            .sum();
+                        if bytes > best.1 {
+                            best = (i, bytes);
+                        }
+                    }
+                    let c = self.idle.remove(best.0).unwrap();
+                    return Some(c);
+                }
+            }
+        }
+        self.idle.pop_front()
+    }
+
+    /// Try to dispatch from the service (event handler).
+    fn try_dispatch(&mut self, now: Time) {
+        self.dispatch_scheduled = false;
+        if self.waiting.is_empty() {
+            return;
+        }
+        if self.service_busy_until > now {
+            self.sched.at(self.service_busy_until, Ev::TryDispatch);
+            self.dispatch_scheduled = true;
+            return;
+        }
+        if self.cfg.forwarders > 0 {
+            self.try_dispatch_3tier(now);
+        } else {
+            self.try_dispatch_2tier(now);
+        }
+        // Keep dispatching while there is work and credit.
+        if !self.waiting.is_empty() && !self.idle.is_empty() {
+            self.sched.at(self.service_busy_until, Ev::TryDispatch);
+            self.dispatch_scheduled = true;
+        }
+    }
+
+    fn try_dispatch_2tier(&mut self, now: Time) {
+        let Some(core) = self.pick_core() else { return };
+        // Data-aware scheduling also works in the other direction (the
+        // common steady-state regime has ONE free core and many waiting
+        // tasks): pick the waiting task whose objects this core's node
+        // already caches (bounded scan of the queue head).
+        if self.cfg.data_aware {
+            let node = core / self.cfg.machine.cores_per_node;
+            let scan = self.waiting.len().min(32);
+            let mut best: (usize, u64) = (0, 0);
+            for i in 0..scan {
+                let t = self.waiting[i];
+                let bytes: u64 = self.tasks[t]
+                    .objects
+                    .iter()
+                    .filter(|(k, _)| self.cache.contains(node, k))
+                    .map(|(_, b)| *b)
+                    .sum();
+                if bytes > best.1 {
+                    best = (i, bytes);
+                }
+            }
+            if best.0 > 0 {
+                let t = self.waiting.remove(best.0).unwrap();
+                self.waiting.push_front(t);
+            }
+        }
+        let credit = self.cores[core].credit as usize;
+        let n = self.cfg.bundle.max(1).min(credit).min(self.waiting.len());
+        let batch: Vec<usize> = (0..n).filter_map(|_| self.waiting.pop_front()).collect();
+        self.cores[core].credit -= batch.len() as u32;
+        if self.cores[core].credit > 0 {
+            self.idle.push_back(core); // still has credit: stay eligible
+        }
+        let desc_len = batch.iter().map(|&t| self.tasks[t].desc_len).max().unwrap_or(12);
+        let wire = self.codec_wire_bytes(desc_len.max(12), batch.len());
+        let extra = (wire - self.base_wire_bytes * batch.len() as f64).max(0.0);
+        let cost = self.model.dispatch_cost_s(batch.len(), extra);
+        self.service_busy_until = now + secs(cost);
+        for &t in &batch {
+            self.tstate[t].dispatch = self.service_busy_until;
+            self.tstate[t].attempts += 1;
+        }
+        // Network: half RTT + transmission.
+        let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
+        let deliver_at = self.service_busy_until + secs(latency);
+        self.sched.at(deliver_at, Ev::Deliver { core, tasks: batch });
+    }
+
+    /// 3-tier dispatch: the service packs up to 64 (core, task)
+    /// assignments into ONE message to a forwarder, paying bundle-style
+    /// cost once; the forwarder then fans tasks to its cores in parallel
+    /// with the other forwarders. Cores are owned by forwarder
+    /// `core % forwarders`.
+    fn try_dispatch_3tier(&mut self, now: Time) {
+        const FWD_BUNDLE: usize = 64;
+        let nf = self.cfg.forwarders;
+        // Gather assignments for the forwarder of the first eligible core.
+        let Some(first) = self.pick_core() else { return };
+        let fwd = first % nf;
+        let mut assignments: Vec<(usize, usize)> = Vec::with_capacity(FWD_BUNDLE);
+        let push = |world: &mut World, core: usize, assignments: &mut Vec<(usize, usize)>| {
+            let credit = world.cores[core].credit as usize;
+            let take = world.cfg.bundle.max(1).min(credit).min(world.waiting.len());
+            for _ in 0..take {
+                if assignments.len() >= FWD_BUNDLE {
+                    break;
+                }
+                let t = world.waiting.pop_front().unwrap();
+                world.cores[core].credit -= 1;
+                assignments.push((core, t));
+            }
+            if world.cores[core].credit > 0 {
+                world.idle.push_back(core);
+            }
+        };
+        push(self, first, &mut assignments);
+        // Fill the bundle with more cores of the SAME forwarder.
+        let mut rotated = 0;
+        while assignments.len() < FWD_BUNDLE && !self.waiting.is_empty() && rotated < self.idle.len() {
+            let Some(&cand) = self.idle.front() else { break };
+            if !self.cores[cand].alive || self.cores[cand].credit == 0 {
+                self.idle.pop_front();
+                continue;
+            }
+            if cand % nf == fwd {
+                let core = self.idle.pop_front().unwrap();
+                push(self, core, &mut assignments);
+            } else {
+                // Rotate non-matching core to the back (bounded).
+                let c = self.idle.pop_front().unwrap();
+                self.idle.push_back(c);
+                rotated += 1;
+            }
+        }
+        if assignments.is_empty() {
+            return;
+        }
+        let n = assignments.len();
+        let desc_len =
+            assignments.iter().map(|&(_, t)| self.tasks[t].desc_len).max().unwrap_or(12);
+        let wire = self.codec_wire_bytes(desc_len.max(12), n);
+        // 3-tier moves per-task protocol handling OFF the service (§6:
+        // "distribution of the currently centralized management
+        // component"): the service memcpys task descriptions into one
+        // block write; per-task cost is bytes + a small marshal constant.
+        let cost = self.model.per_msg_s
+            + n as f64 * (5e-6 + 2.0 * desc_len.max(12) as f64 * self.model.per_byte_s)
+            + wire * self.model.per_byte_s;
+        self.service_busy_until = now + secs(cost);
+        for &(_, t) in &assignments {
+            self.tstate[t].dispatch = self.service_busy_until;
+            self.tstate[t].attempts += 1;
+        }
+        let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
+        self.sched.at(
+            self.service_busy_until + secs(latency),
+            Ev::FwdDeliver { fwd, assignments },
+        );
+    }
+
+    /// Forwarder fan-out: pays its own per-task dispatch cost (same class
+    /// of host as the service), in parallel with other forwarders.
+    fn fwd_deliver(&mut self, now: Time, fwd: usize, assignments: Vec<(usize, usize)>) {
+        let per_task = secs(self.model.per_msg_s + self.model.per_task_s);
+        let mut busy = self.fwd_busy_until[fwd].max(now);
+        let latency = secs(self.cfg.machine.net_rtt_secs / 2.0);
+        for (core, task) in assignments {
+            busy += per_task;
+            self.sched.at(busy + latency, Ev::Deliver { core, tasks: vec![task] });
+        }
+        self.fwd_busy_until[fwd] = busy;
+    }
+
+    fn wake_dispatch(&mut self, now: Time) {
+        if !self.dispatch_scheduled && !self.waiting.is_empty() && !self.idle.is_empty() {
+            self.sched.at(now.max(self.service_busy_until), Ev::TryDispatch);
+            self.dispatch_scheduled = true;
+        }
+    }
+
+    /// Start the next fully-staged task on a free core.
+    fn core_next(&mut self, now: Time, core: usize) {
+        if self.cores[core].current.is_some() || !self.cores[core].alive {
+            return;
+        }
+        let Some(task) = self.cores[core].staged.pop_front() else { return };
+        self.cores[core].current = Some(task);
+        self.begin_exec(now, core, task);
+    }
+
+    /// A task finished staging: run it now or park it as staged.
+    fn stage_done(&mut self, now: Time, core: usize, task: usize) {
+        self.cores[core].staging = self.cores[core].staging.saturating_sub(1);
+        if self.cores[core].current.is_none() {
+            self.cores[core].current = Some(task);
+            self.begin_exec(now, core, task);
+        } else {
+            self.cores[core].staged.push_back(task);
+        }
+    }
+
+    /// Stage-in: wrapper script invocation(s), workdir mkdirs, input reads.
+    fn begin_stage_in(&mut self, now: Time, core: usize, task: usize) {
+        let node = self.node_of(core);
+        let t = self.tasks[task].clone();
+        // Ramdisk-side costs are deterministic; accumulate them.
+        let mut local_s = self.cfg.machine.exec_overhead_secs;
+        // Script invocations.
+        let mut shared_invokes = 0;
+        if self.cfg.scripts_from_ramdisk {
+            local_s += t.script_invokes as f64 * self.ram.script_invoke_secs();
+        } else {
+            shared_invokes = t.script_invokes;
+        }
+        // Workdir mkdirs.
+        let mut shared_mkdirs = 0;
+        if self.cfg.mkdirs_on_ramdisk {
+            local_s += t.mkdirs as f64 * self.ram.mkdir_rm_secs();
+        } else {
+            shared_mkdirs = t.mkdirs;
+        }
+        // Input bytes from the shared FS: per-task reads plus object misses.
+        let mut shared_read = t.read_bytes;
+        if self.cfg.caching {
+            let objs: Vec<(String, u64)> =
+                t.objects.iter().map(|(k, b)| (k.to_string(), *b)).collect();
+            let plan = self.cache.plan(node, &objs);
+            local_s += self.ram.read_secs(plan.hit_bytes);
+            for (k, b) in plan.fetch {
+                shared_read += b;
+                let _ = self.cache.commit(node, k, b);
+            }
+        } else {
+            shared_read += t.objects.iter().map(|(_, b)| *b).sum::<u64>();
+        }
+
+        // Chain: shared ops (if any) then exec. We fold the serial shared
+        // ops into one submission each; the FS sim serializes per ION.
+        let mut pending = Vec::new();
+        for _ in 0..shared_invokes {
+            pending.push(FsOp::ScriptInvoke { bytes: 16 << 10 });
+        }
+        for _ in 0..shared_mkdirs {
+            pending.push(FsOp::MkdirRm);
+        }
+        if shared_read > 0 {
+            pending.push(FsOp::Read { bytes: shared_read });
+        }
+        let start_after = now + secs(local_s);
+        if pending.is_empty() {
+            self.stage_done(start_after, core, task);
+        } else {
+            // Submit the whole chain; exec starts when EVERY op is done
+            // (data ops serialize FIFO per ION; metadata ops serialize on
+            // the global server — a task is delayed by whichever of its
+            // ops finishes last, which is how wrapper mkdir storms stall
+            // whole campaigns in §5.2).
+            self.tstate[task].stage_ops = pending.len() as u32;
+            for op in pending {
+                let id = self.fs.submit(start_after, core, op);
+                self.fs_ops.insert(id, (core, task, Stage::StageIn));
+            }
+            self.arm_fs_wake();
+        }
+    }
+
+    fn begin_exec(&mut self, now: Time, core: usize, task: usize) {
+        self.tstate[task].start_exec = now;
+        let dur = self.tasks[task].exec_secs;
+        self.sched.at(now + secs(dur), Ev::ExecDone { core, task });
+    }
+
+    fn begin_stage_out(&mut self, now: Time, core: usize, task: usize) {
+        let node = self.node_of(core);
+        let wb = self.tasks[task].write_bytes;
+        // Status-log appends (Swift wrapper, un-optimized): one small
+        // shared-FS write per state change, each paying the per-op cost.
+        let appends = self.tasks[task].log_appends;
+        if appends > 0 {
+            self.tstate[task].stage_ops = appends; // reuse the op counter
+            for _ in 0..appends {
+                let op = self.fs.submit(now, core, FsOp::Write { bytes: 1024 });
+                self.fs_ops.insert(op, (core, task, Stage::LogAppend));
+            }
+            self.arm_fs_wake();
+        }
+        if wb == 0 {
+            if appends == 0 {
+                self.finish_task(now, core, task, None);
+            } else {
+                self.tstate[task].awaiting_write = false;
+            }
+            return;
+        }
+        self.tstate[task].awaiting_write = true;
+        if self.cfg.caching {
+            // Buffer on ramdisk; flush to shared FS when threshold crossed.
+            let local = self.ram.write_secs(wb);
+            match self.cache.buffer_output(node, wb) {
+                Some(flush) => {
+                    let op = self.fs.submit(now + secs(local), core, FsOp::Write { bytes: flush });
+                    self.fs_ops.insert(op, (core, task, Stage::StageOut));
+                    self.arm_fs_wake();
+                }
+                None => self.stageout_write_done(now + secs(local), core, task),
+            }
+        } else {
+            let op = self.fs.submit(now, core, FsOp::Write { bytes: wb });
+            self.fs_ops.insert(op, (core, task, Stage::StageOut));
+            self.arm_fs_wake();
+        }
+    }
+
+    /// The main output write finished; the task completes when the log
+    /// appends (if any) are also done.
+    fn stageout_write_done(&mut self, now: Time, core: usize, task: usize) {
+        self.tstate[task].awaiting_write = false;
+        if self.tstate[task].stage_ops == 0 {
+            self.finish_task(now, core, task, None);
+        }
+    }
+
+    fn finish_task(&mut self, now: Time, core: usize, task: usize, error: Option<TaskError>) {
+        let latency = self.cfg.machine.net_rtt_secs / 2.0;
+        self.sched.at(now + secs(latency), Ev::Result { core, task, error });
+        // The core is free as soon as the result is sent (C executor sends
+        // Result + Ready back-to-back); start the next staged task.
+        self.cores[core].current = None;
+        self.core_next(now, core);
+    }
+
+    fn handle_result(&mut self, now: Time, core: usize, task: usize, error: Option<TaskError>) {
+        match error {
+            None => {
+                let st = &mut self.tstate[task];
+                st.done = true;
+                self.completed += 1;
+                self.campaign.record(TaskTimes {
+                    submit: st.submit,
+                    dispatch: st.dispatch,
+                    start: st.start_exec,
+                    end: st.end_exec,
+                    result: now,
+                    core: core as u32,
+                    exit_code: 0,
+                });
+            }
+            Some(err) => {
+                let attempts = self.tstate[task].attempts;
+                match crate::falkon::errors::on_failure(&err, attempts, &self.cfg.retry) {
+                    crate::falkon::errors::FailureAction::Retry => {
+                        self.waiting.push_back(task);
+                    }
+                    crate::falkon::errors::FailureAction::Fail => {
+                        self.failed += 1;
+                        self.tstate[task].done = true;
+                    }
+                }
+            }
+        }
+        // Credit returns with the result.
+        if self.cores[core].alive {
+            self.cores[core].credit += 1;
+            if self.cores[core].credit == 1 {
+                self.idle.push_back(core); // newly eligible
+            }
+        }
+        self.wake_dispatch(now);
+    }
+
+    fn handle_node_fail(&mut self, _now: Time, node: usize) {
+        let cpn = self.cfg.machine.cores_per_node;
+        let first = node * cpn;
+        for core in first..(first + cpn).min(self.cores.len()) {
+            if !self.cores[core].alive {
+                continue;
+            }
+            self.cores[core].alive = false;
+            // Everything on this core is lost; the service sees NodeLost.
+            let mut lost: Vec<usize> = self.cores[core].staged.drain(..).collect();
+            if let Some(cur) = self.cores[core].current.take() {
+                lost.push(cur);
+            }
+            // Tasks still in their stage-in phase on this core.
+            let staging: Vec<(OpId, usize)> = self
+                .fs_ops
+                .iter()
+                .filter(|(_, (c, _, stage))| *c == core && *stage == Stage::StageIn)
+                .map(|(op, (_, t, _))| (*op, *t))
+                .collect();
+            let mut seen = std::collections::HashSet::new();
+            for (op, t) in staging {
+                self.fs_ops.remove(&op);
+                if seen.insert(t) {
+                    lost.push(t);
+                }
+            }
+            self.cores[core].staging = 0;
+            for task in lost {
+                self.sched.after_secs(
+                    self.cfg.machine.net_rtt_secs,
+                    Ev::Result { core, task, error: Some(TaskError::NodeLost) },
+                );
+            }
+        }
+        self.cache.invalidate_node(node);
+    }
+
+    /// Run to completion (or until `max_events`). Returns events processed.
+    pub fn run(&mut self, max_events: u64) -> u64 {
+        let start = self.sched.processed();
+        while self.sched.processed() - start < max_events {
+            // Completion condition: all tasks terminal.
+            if self.completed + self.failed == self.tasks.len() {
+                break;
+            }
+            let Some((now, ev)) = self.sched.next() else {
+                // Drained without completing. If no capacity remains (all
+                // nodes dead), waiting + stranded tasks can never run:
+                // they fail terminally (Falkon would hold them for new
+                // executors; a finite campaign has none coming).
+                if self.cores.iter().all(|c| !c.alive) {
+                    let stranded = self.waiting.len();
+                    self.waiting.clear();
+                    self.failed += stranded;
+                    // Tasks still marked non-terminal (on dead cores'
+                    // queues) were already drained by handle_node_fail.
+                    let unaccounted =
+                        self.tasks.len() - self.completed - self.failed;
+                    self.failed += unaccounted;
+                }
+                break;
+            };
+            self.event_tally[match &ev {
+                Ev::TryDispatch => 0,
+                Ev::Deliver { .. } => 1,
+                Ev::ExecDone { .. } => 2,
+                Ev::Result { .. } => 3,
+                Ev::FsWake { .. } => 4,
+                Ev::NodeFail { .. } => 5,
+                Ev::FwdDeliver { .. } => 6,
+            }] += 1;
+            match ev {
+                Ev::TryDispatch => self.try_dispatch(now),
+                Ev::Deliver { core, tasks } => {
+                    if self.cores[core].alive {
+                        // Stage-in starts immediately — pre-fetched tasks
+                        // overlap their staging with the current task's
+                        // execution (§6 task pre-fetching).
+                        for t in tasks {
+                            self.cores[core].staging += 1;
+                            self.begin_stage_in(now, core, t);
+                        }
+                    } else {
+                        // Delivered into the void: comm error, retry.
+                        for task in tasks {
+                            self.sched.after_secs(
+                                self.cfg.machine.net_rtt_secs,
+                                Ev::Result { core, task, error: Some(TaskError::CommError) },
+                            );
+                        }
+                    }
+                }
+                Ev::ExecDone { core, task } => {
+                    if self.cores[core].alive {
+                        self.tstate[task].end_exec = now;
+                        self.begin_stage_out(now, core, task);
+                    }
+                }
+                Ev::Result { core, task, error } => self.handle_result(now, core, task, error),
+                Ev::FwdDeliver { fwd, assignments } => self.fwd_deliver(now, fwd, assignments),
+                Ev::FsWake => {
+                    if self.fs_wake_target == Some(now) {
+                        self.fs_wake_target = None;
+                    }
+                    for op in self.fs.advance(now) {
+                        if let Some((core, task, stage)) = self.fs_ops.remove(&op) {
+                            if !self.cores[core].alive {
+                                continue;
+                            }
+                            match stage {
+                                Stage::StageIn => {
+                                    self.tstate[task].stage_ops -= 1;
+                                    if self.tstate[task].stage_ops == 0 {
+                                        self.stage_done(now, core, task);
+                                    }
+                                }
+                                Stage::StageOut => {
+                                    self.stageout_write_done(now, core, task)
+                                }
+                                Stage::LogAppend => {
+                                    self.tstate[task].stage_ops -= 1;
+                                    if self.tstate[task].stage_ops == 0
+                                        && !self.tstate[task].awaiting_write
+                                    {
+                                        self.finish_task(now, core, task, None);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    self.arm_fs_wake();
+                }
+                Ev::NodeFail { node } => self.handle_node_fail(now, node),
+            }
+        }
+        self.sched.processed() - start
+    }
+
+    pub fn campaign(&self) -> &Campaign {
+        &self.campaign
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    pub fn failed(&self) -> usize {
+        self.failed
+    }
+
+    pub fn cache(&self) -> &CacheManager {
+        &self.cache
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.sched.processed()
+    }
+
+    /// Virtual time now (campaign end after `run`).
+    pub fn now(&self) -> Time {
+        self.sched.now()
+    }
+}
+
+/// Convenience: run `n` sleep-`len` tasks on `cores` of `machine` with
+/// protocol/bundle settings; returns the campaign (Figs 6, 8, 9).
+pub fn run_sleep_workload(
+    machine: Machine,
+    cores: usize,
+    n_tasks: usize,
+    task_len_s: f64,
+    proto: WireProto,
+    bundle: usize,
+) -> Campaign {
+    let mut cfg = WorldConfig::new(machine, cores);
+    cfg.proto = proto;
+    cfg.bundle = bundle;
+    let tasks = vec![SimTask::sleep(task_len_s); n_tasks];
+    let mut world = World::new(cfg, tasks);
+    world.run(u64::MAX);
+    world.campaign().clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sleep0_throughput_matches_calibration_bgp() {
+        // Fig 6: BG/P C/TCP peak throughput 1758 tasks/s (measured with
+        // 100K tasks; we use 20K for test speed — steady-state dominated).
+        let c = run_sleep_workload(Machine::bgp(), 2048, 20_000, 0.0, WireProto::Tcp, 1);
+        let tput = c.throughput();
+        assert!((tput - 1758.0).abs() / 1758.0 < 0.08, "BG/P tput {tput}");
+    }
+
+    #[test]
+    fn sleep0_throughput_matches_calibration_sicortex() {
+        let c = run_sleep_workload(Machine::sicortex(), 5760, 20_000, 0.0, WireProto::Tcp, 1);
+        let tput = c.throughput();
+        assert!((tput - 3186.0).abs() / 3186.0 < 0.08, "SiCortex tput {tput}");
+    }
+
+    #[test]
+    fn ws_slower_than_tcp_and_bundling_recovers() {
+        // ANL/UC: WS 604/s, TCP 2534/s, WS bundle-10 3773/s.
+        let ws = run_sleep_workload(Machine::anluc(), 200, 5_000, 0.0, WireProto::Ws, 1);
+        let tcp = run_sleep_workload(Machine::anluc(), 200, 5_000, 0.0, WireProto::Tcp, 1);
+        let wsb = run_sleep_workload(Machine::anluc(), 200, 20_000, 0.0, WireProto::Ws, 10);
+        assert!((ws.throughput() - 604.0).abs() / 604.0 < 0.1, "ws {}", ws.throughput());
+        assert!((tcp.throughput() - 2534.0).abs() / 2534.0 < 0.1, "tcp {}", tcp.throughput());
+        assert!(
+            (wsb.throughput() - 3773.0).abs() / 3773.0 < 0.15,
+            "ws bundled {}",
+            wsb.throughput()
+        );
+        assert!(wsb.throughput() > tcp.throughput());
+    }
+
+    #[test]
+    fn efficiency_rises_with_task_length() {
+        // Fig 8 shape: on BG/P 2048 cores, 4 s tasks ≈ 94% efficiency.
+        let short = run_sleep_workload(Machine::bgp(), 2048, 8_000, 1.0, WireProto::Tcp, 1);
+        let four = run_sleep_workload(Machine::bgp(), 2048, 8_000, 4.0, WireProto::Tcp, 1);
+        assert!(four.efficiency() > short.efficiency());
+        assert!(
+            (four.efficiency() - 0.94).abs() < 0.05,
+            "BG/P 4s efficiency {}",
+            four.efficiency()
+        );
+    }
+
+    #[test]
+    fn small_cluster_high_efficiency_with_1s_tasks() {
+        // Fig 8: ANL/UC 200 CPUs reach 95%+ with 1 s tasks (C executor).
+        let c = run_sleep_workload(Machine::anluc(), 200, 4_000, 1.0, WireProto::Tcp, 1);
+        assert!(c.efficiency() > 0.93, "efficiency {}", c.efficiency());
+    }
+
+    #[test]
+    fn all_tasks_complete_exactly_once() {
+        let cfg = WorldConfig::new(Machine::anluc(), 16);
+        let tasks = vec![SimTask::sleep(0.1); 500];
+        let mut w = World::new(cfg, tasks);
+        w.run(u64::MAX);
+        assert_eq!(w.completed(), 500);
+        assert_eq!(w.failed(), 0);
+        assert_eq!(w.campaign().len(), 500);
+    }
+
+    #[test]
+    fn caching_beats_no_caching_with_shared_objects() {
+        // DOCK-like: multi-MB binary + static input per task.
+        let mk_tasks = || {
+            (0..400)
+                .map(|_| SimTask {
+                    exec_secs: 5.0,
+                    read_bytes: 10_000,
+                    write_bytes: 10_000,
+                    desc_len: 64,
+                    objects: vec![("dock5.bin", 5_000_000), ("static.dat", 35_000_000)],
+                    mkdirs: 0,
+                    script_invokes: 1,
+                    ..Default::default()
+                })
+                .collect::<Vec<_>>()
+        };
+        let mut cached_cfg = WorldConfig::new(Machine::sicortex(), 96);
+        cached_cfg.caching = true;
+        let mut uncached_cfg = cached_cfg.clone();
+        uncached_cfg.caching = false;
+        let mut wc = World::new(cached_cfg, mk_tasks());
+        wc.run(u64::MAX);
+        let mut wu = World::new(uncached_cfg, mk_tasks());
+        wu.run(u64::MAX);
+        assert!(
+            wc.campaign().makespan_s() < 0.5 * wu.campaign().makespan_s(),
+            "cached {} vs uncached {}",
+            wc.campaign().makespan_s(),
+            wu.campaign().makespan_s()
+        );
+        assert!(wc.cache().hit_rate() > 0.9);
+    }
+
+    #[test]
+    fn node_failures_retry_and_complete() {
+        let mut cfg = WorldConfig::new(Machine::sicortex(), 60);
+        cfg.node_mtbf_s = Some(3000.0);
+        cfg.retry = RetryPolicy { max_attempts: 10, ..Default::default() };
+        let tasks = vec![SimTask::sleep(5.0); 1000];
+        let mut w = World::new(cfg, tasks);
+        w.run(u64::MAX);
+        // Everything terminal; with a generous retry budget nearly all complete
+        // (tasks stuck on dead nodes get NodeLost and are re-run elsewhere).
+        assert_eq!(w.completed() + w.failed(), 1000);
+        assert!(w.completed() >= 990, "completed {}", w.completed());
+    }
+
+    #[test]
+    fn prefetch_overlaps_staging_with_exec() {
+        // Tasks with substantial stage-in I/O: with credit 1 the core
+        // idles through every staging phase; credit 2 (§6 task
+        // pre-fetching) stages the next task while the current executes.
+        let run = |prefetch: u32| {
+            let mut cfg = WorldConfig::new(Machine::bgp(), 64);
+            cfg.prefetch = prefetch;
+            let tasks = vec![
+                SimTask {
+                    exec_secs: 2.0,
+                    read_bytes: 1_250_000, // 10 Mb ≈ 1.6 s at the per-client cap
+                    desc_len: 64,
+                    ..Default::default()
+                };
+                1_000
+            ];
+            let mut w = World::new(cfg, tasks);
+            w.run(u64::MAX);
+            w.campaign().efficiency()
+        };
+        let e1 = run(1);
+        let e2 = run(2);
+        assert!(e1 < 0.75, "credit-1 must idle during staging: {e1}");
+        assert!(e2 > e1 + 0.15, "prefetch must overlap staging: {e1} -> {e2}");
+    }
+
+    #[test]
+    fn data_aware_placement_raises_hit_rate() {
+        // Two object families interleaved; 48 cores. FIFO placement
+        // thrashes node caches, data-aware converges to family affinity.
+        let mk_tasks = || -> Vec<SimTask> {
+            (0..1200)
+                .map(|i| SimTask {
+                    exec_secs: 2.0,
+                    objects: vec![if i % 2 == 0 {
+                        ("famA.dat", 30_000_000)
+                    } else {
+                        ("famB.dat", 30_000_000)
+                    }],
+                    desc_len: 64,
+                    ..Default::default()
+                })
+                .collect()
+        };
+        let run = |aware: bool| {
+            let mut cfg = WorldConfig::new(Machine::sicortex(), 48);
+            cfg.data_aware = aware;
+            // Tiny per-node cache: only ONE family fits, so scheduling
+            // decides between thrash (re-fetch) and affinity (hits).
+            cfg.cache_capacity_bytes = 35_000_000;
+            let mut w = World::new(cfg, mk_tasks());
+            w.run(u64::MAX);
+            (w.cache().hit_rate(), w.campaign().makespan_s())
+        };
+        let (hit_fifo, ms_fifo) = run(false);
+        let (hit_aware, ms_aware) = run(true);
+        assert!(
+            hit_aware > hit_fifo + 0.3,
+            "data-aware hit rate {hit_aware} vs fifo {hit_fifo}"
+        );
+        assert!(ms_aware < ms_fifo, "makespan {ms_aware} vs {ms_fifo}");
+    }
+
+    #[test]
+    fn three_tier_beats_two_tier_at_160k_cores() {
+        // §6: "evolving Falkon from 2-Tier to 3-Tier... critical as we
+        // scale to the entire 160K-core BG/P". 4 s tasks on 163,840
+        // cores: a single dispatcher (1758 t/s) can feed at most ~7K
+        // cores; 64 forwarders multiply the fan-out.
+        let run = |forwarders: usize| {
+            let mut cfg = WorldConfig::new(Machine::bgp_psets(640), 163_840);
+            cfg.forwarders = forwarders;
+            cfg.prefetch = 2;
+            let mut w = World::new(cfg, vec![SimTask::sleep(4.0); 400_000]);
+            w.run(u64::MAX);
+            w.campaign().efficiency()
+        };
+        let two_tier = run(0);
+        let three_tier = run(64);
+        assert!(two_tier < 0.15, "2-tier must be dispatch-bound: {two_tier}");
+        assert!(three_tier > 0.5, "3-tier must recover: {three_tier}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let mut cfg = WorldConfig::new(Machine::anluc(), 8);
+            cfg.seed = 7;
+            cfg.node_mtbf_s = Some(500.0);
+            let mut w = World::new(cfg, vec![SimTask::sleep(1.0); 200]);
+            w.run(u64::MAX);
+            (w.completed(), w.failed(), w.campaign().makespan_s())
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -1,0 +1,196 @@
+//! Task model and lifecycle.
+//!
+//! A Falkon task is the unit the service dispatches: one serial program
+//! invocation (or a bundle member). The paper's workloads map onto
+//! [`TaskPayload`] variants; the lifecycle state machine is shared by the
+//! real service and the simulator so metrics mean the same thing in both.
+
+use crate::falkon::errors::TaskError;
+
+/// Task identifier (unique per service instance).
+pub type TaskId = u64;
+
+/// What the task actually does when it reaches an executor core.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TaskPayload {
+    /// `sleep N` — the paper's no-I/O micro-benchmark payload. In the
+    /// simulator it occupies a core for `secs`; the real executor sleeps.
+    Sleep { secs: f64 },
+    /// `/bin/echo '<payload>'` — the task-description-size benchmark
+    /// (Fig 10). The payload travels in the task description.
+    Echo { payload: Vec<u8> },
+    /// Run a real subprocess (live executors only).
+    Command { program: String, args: Vec<String> },
+    /// Execute an AOT-compiled artifact via PJRT (live executors): the
+    /// MARS / DOCK compute path. `reps` micro-tasks per invocation.
+    Compute { artifact: String, reps: u32, arg: [f64; 2] },
+    /// Simulated application task with an explicit compute + I/O profile
+    /// (used by the DES world for DOCK/MARS campaigns).
+    SimApp {
+        /// Pure compute seconds on one core.
+        exec_secs: f64,
+        /// Per-task input read from shared FS (after cache).
+        read_bytes: u64,
+        /// Per-task output written to shared FS.
+        write_bytes: u64,
+        /// Cacheable objects (binary, static input): (key, bytes).
+        objects: Vec<(String, u64)>,
+    },
+}
+
+impl TaskPayload {
+    /// Approximate task-description length in bytes as it would travel on
+    /// the wire (used by Fig 10 and the simulator's cost model).
+    pub fn description_len(&self) -> usize {
+        match self {
+            TaskPayload::Sleep { .. } => 12, // "/bin/sleep 0" — paper's figure
+            TaskPayload::Echo { payload } => "/bin/echo ''".len() + payload.len(),
+            TaskPayload::Command { program, args } => {
+                program.len() + args.iter().map(|a| a.len() + 1).sum::<usize>()
+            }
+            TaskPayload::Compute { artifact, .. } => artifact.len() + 24,
+            TaskPayload::SimApp { objects, .. } => {
+                48 + objects.iter().map(|(k, _)| k.len() + 12).sum::<usize>()
+            }
+        }
+    }
+}
+
+/// Lifecycle states. Legal transitions are enforced by [`Task::advance`]:
+///
+/// ```text
+/// Submitted -> Queued -> Dispatched -> Running -> Completed
+///                ^            |           |
+///                |        (comm err)  (task err)
+///                +---- Retrying <---------+
+///                             |
+///                          Failed (retries exhausted / fatal)
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub enum TaskState {
+    Submitted,
+    Queued,
+    Dispatched,
+    Running,
+    Completed { exit_code: i32 },
+    Retrying { attempt: u32, error: TaskError },
+    Failed { error: TaskError, attempts: u32 },
+}
+
+impl TaskState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TaskState::Completed { .. } | TaskState::Failed { .. })
+    }
+}
+
+/// A task plus its lifecycle bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: TaskId,
+    pub payload: TaskPayload,
+    pub state: TaskState,
+    /// Dispatch attempts so far (1 = first try).
+    pub attempts: u32,
+}
+
+/// Error for illegal lifecycle transitions.
+#[derive(Debug, thiserror::Error)]
+#[error("illegal task transition: {from:?} -> {to:?} (task {id})")]
+pub struct BadTransition {
+    pub id: TaskId,
+    pub from: TaskState,
+    pub to: TaskState,
+}
+
+impl Task {
+    pub fn new(id: TaskId, payload: TaskPayload) -> Task {
+        Task { id, payload, state: TaskState::Submitted, attempts: 0 }
+    }
+
+    /// Advance the lifecycle, enforcing legal transitions.
+    pub fn advance(&mut self, to: TaskState) -> Result<(), BadTransition> {
+        use TaskState::*;
+        let ok = matches!(
+            (&self.state, &to),
+            (Submitted, Queued)
+                | (Queued, Dispatched)
+                | (Dispatched, Running)
+                | (Running, Completed { .. })
+                | (Dispatched, Retrying { .. }) // lost before start (comm)
+                | (Running, Retrying { .. })    // failed mid-run
+                | (Dispatched, Failed { .. })
+                | (Running, Failed { .. })
+                | (Retrying { .. }, Queued)     // re-queued for another attempt
+        );
+        if !ok {
+            return Err(BadTransition { id: self.id, from: self.state.clone(), to });
+        }
+        if matches!(to, Dispatched) {
+            self.attempts += 1;
+        }
+        self.state = to;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::falkon::errors::TaskError;
+
+    fn sleep0(id: TaskId) -> Task {
+        Task::new(id, TaskPayload::Sleep { secs: 0.0 })
+    }
+
+    #[test]
+    fn happy_path_transitions() {
+        let mut t = sleep0(1);
+        t.advance(TaskState::Queued).unwrap();
+        t.advance(TaskState::Dispatched).unwrap();
+        t.advance(TaskState::Running).unwrap();
+        t.advance(TaskState::Completed { exit_code: 0 }).unwrap();
+        assert!(t.state.is_terminal());
+        assert_eq!(t.attempts, 1);
+    }
+
+    #[test]
+    fn retry_loop_counts_attempts() {
+        let mut t = sleep0(2);
+        t.advance(TaskState::Queued).unwrap();
+        for attempt in 1..=3 {
+            t.advance(TaskState::Dispatched).unwrap();
+            t.advance(TaskState::Retrying { attempt, error: TaskError::CommError }).unwrap();
+            t.advance(TaskState::Queued).unwrap();
+        }
+        t.advance(TaskState::Dispatched).unwrap();
+        t.advance(TaskState::Running).unwrap();
+        t.advance(TaskState::Completed { exit_code: 0 }).unwrap();
+        assert_eq!(t.attempts, 4);
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut t = sleep0(3);
+        assert!(t.advance(TaskState::Running).is_err());
+        t.advance(TaskState::Queued).unwrap();
+        assert!(t.advance(TaskState::Completed { exit_code: 0 }).is_err());
+        // Terminal states are sticky.
+        t.advance(TaskState::Dispatched).unwrap();
+        t.advance(TaskState::Running).unwrap();
+        t.advance(TaskState::Completed { exit_code: 0 }).unwrap();
+        assert!(t.advance(TaskState::Queued).is_err());
+    }
+
+    #[test]
+    fn sleep_description_is_papers_12_bytes() {
+        // §4.2: "the task '/bin/sleep 0' requires only 12 bytes".
+        assert_eq!(TaskPayload::Sleep { secs: 0.0 }.description_len(), 12);
+    }
+
+    #[test]
+    fn echo_description_scales_with_payload() {
+        let d10 = TaskPayload::Echo { payload: vec![b'x'; 10] }.description_len();
+        let d10k = TaskPayload::Echo { payload: vec![b'x'; 10_000] }.description_len();
+        assert_eq!(d10k - d10, 9_990);
+    }
+}

@@ -1,0 +1,161 @@
+//! The Figure 1/2 theoretical efficiency model.
+//!
+//! The paper motivates high dispatch rates by plotting the efficiency of
+//! executing 1M tasks of length `L` on `P` processors when the scheduler
+//! sustains `R` tasks/s. We model the makespan explicitly:
+//!
+//! * **dispatch-bound** (`P/L > R`): processors outrun the dispatcher;
+//!   the run takes `N/R` to feed plus the tail task: `N/R + L`.
+//! * **compute-bound**: the dispatcher keeps up; the run takes the ideal
+//!   `N·L/P` plus the initial fill ramp `min(P,N)/R`.
+//!
+//! `E = ideal / makespan` with `ideal = N·L/P`. The exact anchor values in
+//! the paper's Fig 1–2 text (e.g. "520 s for 90% at 10 tasks/s, 4096
+//! processors") come from curves whose closed form the paper does not
+//! give; our model reproduces the claims that matter downstream — the
+//! ordering of the curves in `R`, their monotonicity in `L`, the shift of
+//! the 90% crossover right as `P` grows and left as `R` grows — and is
+//! cross-validated against the discrete-event simulator in
+//! `bench_theory` (the DES and this closed form agree within a few
+//! percent; see EXPERIMENTS.md).
+
+/// Parameters of a theoretical run.
+#[derive(Clone, Copy, Debug)]
+pub struct TheoryParams {
+    /// Number of tasks in the workload (the paper uses 1M).
+    pub tasks: u64,
+    /// Processor cores.
+    pub processors: u64,
+    /// Sustained dispatch throughput, tasks/s.
+    pub dispatch_rate: f64,
+}
+
+/// Predicted makespan for tasks of `task_len_s` seconds.
+pub fn makespan_s(p: TheoryParams, task_len_s: f64) -> f64 {
+    let n = p.tasks as f64;
+    let procs = p.processors as f64;
+    let ideal = n * task_len_s / procs;
+    let dispatch_bound = n / p.dispatch_rate + task_len_s;
+    let fill = procs.min(n) / p.dispatch_rate;
+    let compute_bound = ideal + fill;
+    dispatch_bound.max(compute_bound)
+}
+
+/// Predicted efficiency (= ideal speedup fraction) for tasks of
+/// `task_len_s`.
+pub fn efficiency(p: TheoryParams, task_len_s: f64) -> f64 {
+    if task_len_s <= 0.0 {
+        return 0.0;
+    }
+    let ideal = p.tasks as f64 * task_len_s / p.processors as f64;
+    (ideal / makespan_s(p, task_len_s)).clamp(0.0, 1.0)
+}
+
+/// Minimum task length to reach `target` efficiency (bisection).
+pub fn min_task_len_for(p: TheoryParams, target: f64) -> Option<f64> {
+    assert!((0.0..1.0).contains(&target));
+    let (mut lo, mut hi) = (1e-3, 1e7);
+    if efficiency(p, hi) < target {
+        return None;
+    }
+    for _ in 0..200 {
+        let mid = (lo * hi).sqrt(); // geometric: L spans decades
+        if efficiency(p, mid) >= target {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// The task lengths the paper sweeps (0.1 … 256 s, doubling grid plus the
+/// sub-second point).
+pub fn paper_task_lengths() -> Vec<f64> {
+    let mut v = vec![0.1];
+    let mut l = 1.0;
+    while l <= 256.0 {
+        v.push(l);
+        l *= 2.0;
+    }
+    v
+}
+
+/// The dispatch rates Fig 1–2 sweep.
+pub const PAPER_RATES: [f64; 5] = [1.0, 10.0, 100.0, 1_000.0, 10_000.0];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(procs: u64, rate: f64) -> TheoryParams {
+        TheoryParams { tasks: 1_000_000, processors: procs, dispatch_rate: rate }
+    }
+
+    #[test]
+    fn efficiency_monotone_in_task_length() {
+        let params = p(4096, 10.0);
+        let mut last = 0.0;
+        for l in paper_task_lengths() {
+            let e = efficiency(params, l);
+            assert!(e >= last - 1e-12, "efficiency dipped at L={l}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn higher_rate_never_hurts() {
+        for l in paper_task_lengths() {
+            let e10 = efficiency(p(4096, 10.0), l);
+            let e1000 = efficiency(p(4096, 1000.0), l);
+            assert!(e1000 >= e10 - 1e-12, "rate ordering broken at L={l}");
+        }
+    }
+
+    #[test]
+    fn more_processors_need_longer_tasks() {
+        // The paper's headline: the 90% crossover moves right with P.
+        let small = min_task_len_for(p(4096, 10.0), 0.9).unwrap();
+        let large = min_task_len_for(p(163_840, 10.0), 0.9).unwrap();
+        assert!(large > 10.0 * small, "small={small} large={large}");
+    }
+
+    #[test]
+    fn falkon_rates_allow_short_tasks() {
+        // With 1000 tasks/s (Falkon-class), the 90% task length on 4096
+        // procs is seconds, not hundreds of seconds (paper: 3.75 s vs
+        // 520 s at 10 tasks/s).
+        let falkon = min_task_len_for(p(4096, 1000.0), 0.9).unwrap();
+        let lrm = min_task_len_for(p(4096, 10.0), 0.9).unwrap();
+        assert!(falkon < 10.0, "falkon-class 90% length {falkon}");
+        assert!(lrm > 100.0, "LRM-class 90% length {lrm}");
+        assert!(lrm / falkon > 50.0);
+    }
+
+    #[test]
+    fn dispatch_bound_regime_formula() {
+        // Tiny tasks on many procs: makespan -> N/R.
+        let params = p(4096, 100.0);
+        let m = makespan_s(params, 0.1);
+        assert!((m - (1e6 / 100.0 + 0.1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compute_bound_regime_formula() {
+        // Long tasks: makespan -> N*L/P + P/R.
+        let params = p(256, 1000.0);
+        let m = makespan_s(params, 100.0);
+        assert!((m - (1e6 * 100.0 / 256.0 + 0.256)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_task_len_none_when_unreachable() {
+        // 1 task/s on 160K procs: even huge tasks stay dispatch-bound
+        // below ~(P/R) ... actually long tasks always win; target 0.999999
+        // with tiny N is unreachable within the search bound.
+        let params = TheoryParams { tasks: 10, processors: 160_000, dispatch_rate: 1.0 };
+        // 10 tasks on 160k procs: ideal = 10L/160000, makespan >= 10/1+L.
+        // E <= 10L/160000 / L -> tiny. Unreachable.
+        assert!(min_task_len_for(params, 0.9).is_none());
+    }
+}

@@ -1,0 +1,228 @@
+//! Caching policy — the paper's mechanism 3 (§3) and the optimizations
+//! that made DOCK and MARS scale (§5).
+//!
+//! Tracks, per compute node, which objects (application binaries, static
+//! input files) are already resident on the node-local ramdisk, and
+//! buffers output so many small writes to the shared FS become one large
+//! write ("until enough data is collected to allow efficient writes").
+//! The same policy object drives both the simulator (cost accounting) and
+//! live executors (real staging decisions).
+
+use std::collections::{HashMap, HashSet};
+
+/// Identifies a cacheable object (e.g. "dock5.bin", "static/params.dat").
+pub type ObjectKey = String;
+
+/// What a task needs staged before it can run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StagePlan {
+    /// Objects that must be fetched from the shared FS (cache misses).
+    pub fetch: Vec<(ObjectKey, u64)>,
+    /// Bytes served from the node-local cache (hits).
+    pub hit_bytes: u64,
+}
+
+/// Per-node cache state + output write-back buffer.
+#[derive(Debug, Default)]
+pub struct NodeCache {
+    resident: HashMap<ObjectKey, u64>,
+    resident_bytes: u64,
+    /// Buffered output bytes not yet flushed to the shared FS.
+    pending_output: u64,
+}
+
+/// Cache manager for a set of nodes.
+#[derive(Debug)]
+pub struct CacheManager {
+    nodes: Vec<NodeCache>,
+    /// Per-node capacity in bytes (BG/P nodes have 2 GB total RAM; the
+    /// paper caches multi-MB binaries + 35 MB static data comfortably).
+    capacity_bytes: u64,
+    /// Output flush threshold: buffer until this many bytes accumulate.
+    flush_threshold: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl CacheManager {
+    pub fn new(nodes: usize, capacity_bytes: u64, flush_threshold: u64) -> CacheManager {
+        CacheManager {
+            nodes: (0..nodes).map(|_| NodeCache::default()).collect(),
+            capacity_bytes,
+            flush_threshold,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Plan staging for a task on `node` that needs `objects`.
+    /// Records hits/misses; the caller performs the fetches and then calls
+    /// [`CacheManager::commit`] for each fetched object.
+    pub fn plan(&mut self, node: usize, objects: &[(ObjectKey, u64)]) -> StagePlan {
+        let cache = &self.nodes[node];
+        let mut plan = StagePlan { fetch: Vec::new(), hit_bytes: 0 };
+        let mut seen: HashSet<&str> = HashSet::new();
+        for (key, bytes) in objects {
+            if !seen.insert(key.as_str()) {
+                continue; // duplicate request within one task
+            }
+            if cache.resident.contains_key(key) {
+                self.hits += 1;
+                plan.hit_bytes += bytes;
+            } else {
+                self.misses += 1;
+                plan.fetch.push((key.clone(), *bytes));
+            }
+        }
+        plan
+    }
+
+    /// Record that `key` is now resident on `node`. Evicts nothing — the
+    /// paper's working sets fit; overflow is an error surfaced to the
+    /// caller so campaigns are sized consciously.
+    pub fn commit(&mut self, node: usize, key: ObjectKey, bytes: u64) -> Result<(), CacheFull> {
+        let cache = &mut self.nodes[node];
+        if cache.resident.contains_key(&key) {
+            return Ok(());
+        }
+        if cache.resident_bytes + bytes > self.capacity_bytes {
+            return Err(CacheFull { node, need: bytes, free: self.capacity_bytes - cache.resident_bytes });
+        }
+        cache.resident_bytes += bytes;
+        cache.resident.insert(key, bytes);
+        Ok(())
+    }
+
+    /// True if `key` is resident on `node`.
+    pub fn contains(&self, node: usize, key: &str) -> bool {
+        self.nodes[node].resident.contains_key(key)
+    }
+
+    /// Buffer `bytes` of task output on `node`; returns `Some(flush_bytes)`
+    /// when the buffer crossed the threshold and must be written to the
+    /// shared FS as one large write.
+    pub fn buffer_output(&mut self, node: usize, bytes: u64) -> Option<u64> {
+        let cache = &mut self.nodes[node];
+        cache.pending_output += bytes;
+        if cache.pending_output >= self.flush_threshold {
+            Some(std::mem::take(&mut cache.pending_output))
+        } else {
+            None
+        }
+    }
+
+    /// Force-flush a node's output buffer (end of allocation / campaign).
+    pub fn flush_output(&mut self, node: usize) -> u64 {
+        std::mem::take(&mut self.nodes[node].pending_output)
+    }
+
+    /// Drop everything cached on `node` (node failure / deallocation —
+    /// ramdisk contents do not survive reboot).
+    pub fn invalidate_node(&mut self, node: usize) {
+        self.nodes[node] = NodeCache::default();
+    }
+
+    /// Nodes that already hold `key` (input to data-aware scheduling).
+    pub fn nodes_with(&self, key: &str) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.resident.contains_key(key))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Error: a node's ramdisk budget is exhausted.
+#[derive(Debug, thiserror::Error)]
+#[error("node {node} cache full: need {need} bytes, {free} free")]
+pub struct CacheFull {
+    pub node: usize,
+    pub need: u64,
+    pub free: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keyed(k: &str, b: u64) -> (ObjectKey, u64) {
+        (k.to_string(), b)
+    }
+
+    #[test]
+    fn first_access_misses_then_hits() {
+        let mut cm = CacheManager::new(2, 1 << 30, 1 << 20);
+        let objs = [keyed("dock5.bin", 5_000_000), keyed("static.dat", 35_000_000)];
+        let plan = cm.plan(0, &objs);
+        assert_eq!(plan.fetch.len(), 2);
+        assert_eq!(plan.hit_bytes, 0);
+        for (k, b) in plan.fetch {
+            cm.commit(0, k, b).unwrap();
+        }
+        let plan2 = cm.plan(0, &objs);
+        assert!(plan2.fetch.is_empty());
+        assert_eq!(plan2.hit_bytes, 40_000_000);
+        assert!((cm.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn caches_are_per_node() {
+        let mut cm = CacheManager::new(2, 1 << 30, 1 << 20);
+        cm.commit(0, "bin".into(), 100).unwrap();
+        assert!(cm.contains(0, "bin"));
+        assert!(!cm.contains(1, "bin"));
+        assert_eq!(cm.nodes_with("bin"), vec![0]);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut cm = CacheManager::new(1, 100, 1 << 20);
+        cm.commit(0, "a".into(), 80).unwrap();
+        let err = cm.commit(0, "b".into(), 30).unwrap_err();
+        assert_eq!(err.free, 20);
+        // Same key re-commit is a no-op, not an overflow.
+        cm.commit(0, "a".into(), 80).unwrap();
+    }
+
+    #[test]
+    fn output_buffering_flushes_at_threshold() {
+        let mut cm = CacheManager::new(1, 1 << 30, 1000);
+        assert_eq!(cm.buffer_output(0, 400), None);
+        assert_eq!(cm.buffer_output(0, 400), None);
+        assert_eq!(cm.buffer_output(0, 400), Some(1200));
+        assert_eq!(cm.flush_output(0), 0);
+        assert_eq!(cm.buffer_output(0, 10), None);
+        assert_eq!(cm.flush_output(0), 10);
+    }
+
+    #[test]
+    fn invalidate_clears_node() {
+        let mut cm = CacheManager::new(1, 1 << 30, 1 << 20);
+        cm.commit(0, "bin".into(), 100).unwrap();
+        cm.buffer_output(0, 10);
+        cm.invalidate_node(0);
+        assert!(!cm.contains(0, "bin"));
+        assert_eq!(cm.flush_output(0), 0);
+    }
+
+    #[test]
+    fn duplicate_objects_in_one_plan_counted_once() {
+        let mut cm = CacheManager::new(1, 1 << 30, 1 << 20);
+        let plan = cm.plan(0, &[keyed("x", 10), keyed("x", 10)]);
+        assert_eq!(plan.fetch.len(), 1);
+    }
+}

@@ -1,0 +1,18 @@
+//! Filesystem substrates.
+//!
+//! The paper's third enabling mechanism is *extensive caching to avoid
+//! shared infrastructure*: compute nodes have no disks, so every naive
+//! file access hits GPFS (BG/P) or NFS (SiCortex), whose contention
+//! behaviour §4.3 measures in detail. This module provides:
+//!
+//! * [`shared`] — the shared-filesystem simulator (per-ION funnels, a
+//!   metadata server, and a processor-sharing data link), calibrated to
+//!   the paper's Figures 11–13;
+//! * [`ramdisk`] — the node-local RAM filesystem: a cost model for the
+//!   simulator and a real tmpfs-backed implementation for live executors;
+//! * [`cache`] — the caching policy layered on both: binary + static input
+//!   caching and buffered output write-back (§3 mechanism 3, §5.1).
+
+pub mod cache;
+pub mod ramdisk;
+pub mod shared;

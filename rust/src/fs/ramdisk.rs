@@ -1,0 +1,212 @@
+//! Node-local RAM filesystem.
+//!
+//! Two faces:
+//! * [`RamdiskModel`] — the cost model used by the simulator (node-local,
+//!   so no cross-node contention; the paper measures >1700 script
+//!   invocations/s and millisecond-class mkdir from ramdisk);
+//! * [`Ramdisk`] — a real directory-backed implementation (pointed at
+//!   tmpfs in production) used by live executors to cache binaries,
+//!   static input, and to buffer output — the three §5 optimizations.
+
+use crate::sim::machine::FsProfile;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Cost model for node-local ramdisk operations (simulator side).
+#[derive(Clone, Debug)]
+pub struct RamdiskModel {
+    profile: FsProfile,
+}
+
+impl Default for RamdiskModel {
+    fn default() -> Self {
+        RamdiskModel { profile: FsProfile::ramdisk() }
+    }
+}
+
+impl RamdiskModel {
+    pub fn new() -> RamdiskModel {
+        Self::default()
+    }
+
+    /// Seconds to read `bytes` from ramdisk.
+    pub fn read_secs(&self, bytes: u64) -> f64 {
+        self.profile.op_latency_s + bytes as f64 * 8.0 / self.profile.per_client_bps
+    }
+
+    /// Seconds to write `bytes` to ramdisk.
+    pub fn write_secs(&self, bytes: u64) -> f64 {
+        self.read_secs(bytes)
+    }
+
+    /// Seconds to invoke a script resident on ramdisk (paper: >1700/s).
+    pub fn script_invoke_secs(&self) -> f64 {
+        1.0 / self.profile.script_invoke_per_ion_per_s
+    }
+
+    /// Seconds for a mkdir+rm pair on ramdisk (millisecond class).
+    pub fn mkdir_rm_secs(&self) -> f64 {
+        1.0 / self.profile.mkdir_rm_per_s
+    }
+}
+
+/// A real node-local scratch filesystem rooted at a directory.
+///
+/// Live executors use this for the paper's three wrapper optimizations:
+/// per-task work directories, cached input staging, and log buffering.
+#[derive(Debug)]
+pub struct Ramdisk {
+    root: PathBuf,
+}
+
+impl Ramdisk {
+    /// Open (creating) a ramdisk rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> std::io::Result<Ramdisk> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(Ramdisk { root })
+    }
+
+    /// Open a fresh uniquely-named ramdisk under the system temp dir.
+    pub fn open_temp(tag: &str) -> std::io::Result<Ramdisk> {
+        let pid = std::process::id();
+        let nonce = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0);
+        Ramdisk::open(std::env::temp_dir().join(format!("falkon-{tag}-{pid}-{nonce}")))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn resolve(&self, rel: &str) -> PathBuf {
+        assert!(
+            !rel.starts_with('/') && !rel.split('/').any(|c| c == ".."),
+            "ramdisk paths must be relative and traversal-free: {rel:?}"
+        );
+        self.root.join(rel)
+    }
+
+    /// Write a file (creating parent dirs).
+    pub fn write(&self, rel: &str, data: &[u8]) -> std::io::Result<()> {
+        let path = self.resolve(rel);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(data)
+    }
+
+    /// Read a file fully.
+    pub fn read(&self, rel: &str) -> std::io::Result<Vec<u8>> {
+        std::fs::read(self.resolve(rel))
+    }
+
+    pub fn exists(&self, rel: &str) -> bool {
+        self.resolve(rel).exists()
+    }
+
+    /// Create a per-task working directory.
+    pub fn mkdir(&self, rel: &str) -> std::io::Result<PathBuf> {
+        let path = self.resolve(rel);
+        std::fs::create_dir_all(&path)?;
+        Ok(path)
+    }
+
+    /// Remove a file or directory tree.
+    pub fn remove(&self, rel: &str) -> std::io::Result<()> {
+        let path = self.resolve(rel);
+        if path.is_dir() {
+            std::fs::remove_dir_all(path)
+        } else {
+            std::fs::remove_file(path)
+        }
+    }
+
+    /// Total bytes stored under the root (for cache budget accounting).
+    pub fn used_bytes(&self) -> u64 {
+        fn walk(p: &Path) -> u64 {
+            let mut total = 0;
+            if let Ok(entries) = std::fs::read_dir(p) {
+                for e in entries.flatten() {
+                    let path = e.path();
+                    if path.is_dir() {
+                        total += walk(&path);
+                    } else if let Ok(md) = e.metadata() {
+                        total += md.len();
+                    }
+                }
+            }
+            total
+        }
+        walk(&self.root)
+    }
+}
+
+impl Drop for Ramdisk {
+    fn drop(&mut self) {
+        // Best-effort cleanup of temp-rooted disks only.
+        if self.root.starts_with(std::env::temp_dir()) {
+            let _ = std::fs::remove_dir_all(&self.root);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_script_rate_matches_paper() {
+        let m = RamdiskModel::new();
+        let rate = 1.0 / m.script_invoke_secs();
+        assert!(rate >= 1700.0, "ramdisk script rate {rate}");
+    }
+
+    #[test]
+    fn model_mkdir_is_millisecond_class() {
+        let m = RamdiskModel::new();
+        assert!(m.mkdir_rm_secs() < 1e-3);
+    }
+
+    #[test]
+    fn model_read_scales_with_bytes() {
+        let m = RamdiskModel::new();
+        assert!(m.read_secs(100_000_000) > m.read_secs(1));
+    }
+
+    #[test]
+    fn real_write_read_roundtrip() {
+        let rd = Ramdisk::open_temp("test-rw").unwrap();
+        rd.write("cache/input.dat", b"static input").unwrap();
+        assert!(rd.exists("cache/input.dat"));
+        assert_eq!(rd.read("cache/input.dat").unwrap(), b"static input");
+    }
+
+    #[test]
+    fn real_mkdir_remove() {
+        let rd = Ramdisk::open_temp("test-dir").unwrap();
+        let p = rd.mkdir("jobs/task-1").unwrap();
+        assert!(p.is_dir());
+        rd.write("jobs/task-1/out.log", b"x").unwrap();
+        rd.remove("jobs/task-1").unwrap();
+        assert!(!rd.exists("jobs/task-1"));
+    }
+
+    #[test]
+    fn used_bytes_counts_tree() {
+        let rd = Ramdisk::open_temp("test-used").unwrap();
+        rd.write("a/b", &[0u8; 100]).unwrap();
+        rd.write("c", &[0u8; 50]).unwrap();
+        assert_eq!(rd.used_bytes(), 150);
+    }
+
+    #[test]
+    #[should_panic(expected = "traversal-free")]
+    fn rejects_path_traversal() {
+        let rd = Ramdisk::open_temp("test-trav").unwrap();
+        let _ = rd.read("../etc/passwd");
+    }
+}

@@ -1,0 +1,453 @@
+//! Shared-filesystem simulator (GPFS / NFS), calibrated to §4.3.
+//!
+//! Model structure (what produces the paper's curves, rather than fitted
+//! splines):
+//!
+//! * every operation passes through its client's **I/O node** (GPFS has
+//!   one ION per PSET; NFS has a single server) — a FIFO server with a
+//!   deterministic per-op service time. Script invocation is ION-bound:
+//!   Fig 13 measures 109 invokes/s with 1 PSET scaling ~linearly to 823/s
+//!   with 8 IONs, so the ION is the bottleneck, not GPFS.
+//! * **metadata mutations** (mkdir/rm) serialize on a global metadata
+//!   server whose throughput *collapses* when the allocation spans more
+//!   than one PSET (44/s → 10/s in Fig 13, distributed-lock revocation).
+//! * **data** moves on a processor-sharing link ([`SharedLink`]) with a
+//!   per-client cap; mixing writes with reads drops the aggregate
+//!   capacity from `read_bps` (775 Mb/s measured) to `readwrite_bps`
+//!   (326 Mb/s). Small accesses never saturate the link because each op
+//!   pays the ION service + latency floor first — this reproduces the
+//!   rising throughput-vs-access-size shape of Fig 11.
+//!
+//! DES integration follows the same pattern as [`SharedLink`]: submit ops,
+//! poll [`SharedFs::next_event`], then [`SharedFs::advance`] to collect
+//! completions. Generation stamping invalidates stale scheduled events.
+
+use crate::sim::engine::{secs, Time};
+use crate::sim::link::{FlowId, SharedLink};
+use crate::sim::machine::FsProfile;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
+
+/// Operation id returned by [`SharedFs::submit`].
+pub type OpId = u64;
+
+/// A filesystem operation issued by a (simulated) client.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FsOp {
+    /// Read `bytes` from the shared FS.
+    Read { bytes: u64 },
+    /// Write `bytes` to the shared FS.
+    Write { bytes: u64 },
+    /// Read then write (the paper's read+write benchmark).
+    ReadWrite { read_bytes: u64, write_bytes: u64 },
+    /// Invoke a script: open + stat + read of a small file, dominated by
+    /// ION service (Fig 13 left columns).
+    ScriptInvoke { bytes: u64 },
+    /// Create and remove a directory (Fig 13 right columns).
+    MkdirRm,
+}
+
+impl FsOp {
+    fn read_bytes(&self) -> u64 {
+        match *self {
+            FsOp::Read { bytes } => bytes,
+            FsOp::ReadWrite { read_bytes, .. } => read_bytes,
+            FsOp::ScriptInvoke { bytes } => bytes,
+            _ => 0,
+        }
+    }
+
+    fn write_bytes(&self) -> u64 {
+        match *self {
+            FsOp::Write { bytes } => bytes,
+            FsOp::ReadWrite { write_bytes, .. } => write_bytes,
+            _ => 0,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct PendingOp {
+    op: FsOp,
+    /// Remaining data phases: bits left to move (read first, then write).
+    phase: Phase,
+}
+
+#[derive(Debug)]
+enum Phase {
+    /// Waiting for ION/metadata service to finish at this time.
+    Meta { done_at: Time },
+    /// Data moving on the link (read phase; `write_pending` follows).
+    Data { write_pending: u64 },
+    /// Write data moving on the link (second phase of ReadWrite).
+    WriteData,
+}
+
+/// The shared-filesystem simulator.
+#[derive(Debug)]
+pub struct SharedFs {
+    profile: FsProfile,
+    /// Allocation size in clients (cores) — determines metadata collapse.
+    clients_span_psets: bool,
+    /// FIFO busy-horizon per ION.
+    ion_busy_until: Vec<Time>,
+    /// FIFO busy-horizon of the metadata server.
+    meta_busy_until: Time,
+    /// Data link (capacity switches between read-only and mixed mode).
+    link: SharedLink,
+    /// Count of active flows that include writes (for capacity mode).
+    active_writes: usize,
+    ops: BTreeMap<OpId, PendingOp>,
+    /// Min-heap of meta-phase completions: (done_at, op). Entries whose
+    /// op left the meta phase are skipped lazily.
+    meta_heap: BinaryHeap<Reverse<(Time, OpId)>>,
+    flow_to_op: HashMap<FlowId, OpId>,
+    next_op: OpId,
+    generation: u64,
+    /// Completed op ids awaiting collection.
+    done: Vec<OpId>,
+}
+
+impl SharedFs {
+    /// Build for an allocation served by `profile`, with `span_psets` true
+    /// when the allocation crosses a PSET boundary (metadata collapse).
+    pub fn new(profile: FsProfile, span_psets: bool) -> SharedFs {
+        let link = SharedLink::new(profile.read_bps, profile.per_client_bps);
+        let ions = profile.ions.min(4096).max(1);
+        SharedFs {
+            clients_span_psets: span_psets,
+            ion_busy_until: vec![0; ions],
+            meta_busy_until: 0,
+            link,
+            active_writes: 0,
+            ops: BTreeMap::new(),
+            meta_heap: BinaryHeap::new(),
+            flow_to_op: HashMap::new(),
+            next_op: 0,
+            generation: 0,
+            done: Vec::new(),
+            profile,
+        }
+    }
+
+    pub fn profile(&self) -> &FsProfile {
+        &self.profile
+    }
+
+    /// Generation counter for stale-event detection.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Number of ops in flight.
+    pub fn in_flight(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Service time an op spends on its ION / the metadata server.
+    fn meta_service_secs(&self, op: &FsOp) -> f64 {
+        match op {
+            FsOp::ScriptInvoke { .. } => 1.0 / self.profile.script_invoke_per_ion_per_s,
+            FsOp::MkdirRm => {
+                let rate = self.profile.mkdir_rm_per_s
+                    * if self.clients_span_psets {
+                        self.profile.metadata_cross_pset_factor
+                    } else {
+                        1.0
+                    };
+                1.0 / rate
+            }
+            // Plain data ops pay the open/latency floor on their ION.
+            _ => self.profile.op_latency_s,
+        }
+    }
+
+    /// Submit an op from client core `client` at time `now`.
+    pub fn submit(&mut self, now: Time, client: usize, op: FsOp) -> OpId {
+        let id = self.next_op;
+        self.next_op += 1;
+        let service = secs(self.meta_service_secs(&op));
+        let done_at = match op {
+            FsOp::MkdirRm => {
+                // Global metadata server FIFO.
+                let start = self.meta_busy_until.max(now);
+                self.meta_busy_until = start + service;
+                self.meta_busy_until
+            }
+            _ => {
+                // Per-ION FIFO.
+                let ion = client % self.ion_busy_until.len();
+                let start = self.ion_busy_until[ion].max(now);
+                self.ion_busy_until[ion] = start + service;
+                self.ion_busy_until[ion]
+            }
+        };
+        self.ops.insert(id, PendingOp { op, phase: Phase::Meta { done_at } });
+        self.meta_heap.push(Reverse((done_at, id)));
+        self.generation += 1;
+        id
+    }
+
+    /// Update the data-link capacity for the current read/write mix.
+    fn refresh_capacity(&mut self, now: Time) {
+        let target = if self.active_writes > 0 {
+            self.profile.readwrite_bps
+        } else {
+            self.profile.read_bps
+        };
+        if (self.link.capacity_bps() - target).abs() > 1.0 {
+            self.link.advance(now);
+            // Rebuild link with new capacity but same flows is invasive;
+            // SharedLink supports capacity switching via a dedicated call.
+            self.link.set_capacity(target);
+            self.generation += 1;
+        }
+    }
+
+    /// Earliest time anything changes (meta completion or data completion).
+    pub fn next_event(&mut self) -> Option<Time> {
+        self.drop_stale_meta_top();
+        let meta_next = self.meta_heap.peek().map(|Reverse((t, _))| *t);
+        match (meta_next, self.link.next_completion()) {
+            (None, x) => x,
+            (x, None) => x,
+            (Some(a), Some(b)) => Some(a.min(b)),
+        }
+    }
+
+    /// Pop heap entries whose op is no longer in the meta phase.
+    fn drop_stale_meta_top(&mut self) {
+        while let Some(Reverse((t, id))) = self.meta_heap.peek() {
+            match self.ops.get(id) {
+                Some(PendingOp { phase: Phase::Meta { done_at }, .. }) if done_at == t => break,
+                _ => {
+                    self.meta_heap.pop();
+                }
+            }
+        }
+    }
+
+    /// Advance to `now`: move ops between phases, collect completions.
+    pub fn advance(&mut self, now: Time) -> Vec<OpId> {
+        // 1. Meta-phase ops whose service completed start their data phase.
+        let mut ready = Vec::new();
+        loop {
+            self.drop_stale_meta_top();
+            match self.meta_heap.peek() {
+                Some(Reverse((t, _))) if *t <= now => {
+                    let Reverse((_, id)) = self.meta_heap.pop().unwrap();
+                    ready.push(id);
+                }
+                _ => break,
+            }
+        }
+        for id in ready {
+            let p = self.ops.get_mut(&id).unwrap();
+            let (rb, wb) = (p.op.read_bytes(), p.op.write_bytes());
+            if rb == 0 && wb == 0 {
+                // Pure metadata op: complete now.
+                self.ops.remove(&id);
+                self.done.push(id);
+                self.generation += 1;
+                continue;
+            }
+            if rb > 0 {
+                let (flow, _g) = self.link.start(now, rb as f64 * 8.0);
+                self.flow_to_op.insert(flow, id);
+                p.phase = Phase::Data { write_pending: wb };
+            } else {
+                let (flow, _g) = self.link.start(now, wb as f64 * 8.0);
+                self.flow_to_op.insert(flow, id);
+                self.active_writes += 1;
+                p.phase = Phase::WriteData;
+            }
+        }
+        self.refresh_capacity(now);
+
+        // 2. Drain completed flows.
+        for flow in self.link.take_completed(now) {
+            let Some(op_id) = self.flow_to_op.remove(&flow) else { continue };
+            let p = self.ops.get_mut(&op_id).unwrap();
+            match p.phase {
+                Phase::Data { write_pending } if write_pending > 0 => {
+                    let (wflow, _g) = self.link.start(now, write_pending as f64 * 8.0);
+                    self.flow_to_op.insert(wflow, op_id);
+                    self.active_writes += 1;
+                    p.phase = Phase::WriteData;
+                }
+                Phase::Data { .. } => {
+                    self.ops.remove(&op_id);
+                    self.done.push(op_id);
+                }
+                Phase::WriteData => {
+                    self.active_writes -= 1;
+                    self.ops.remove(&op_id);
+                    self.done.push(op_id);
+                }
+                Phase::Meta { .. } => unreachable!("flow completed for meta-phase op"),
+            }
+            self.generation += 1;
+        }
+        self.refresh_capacity(now);
+        std::mem::take(&mut self.done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{to_secs, SECS};
+    use crate::sim::machine::FsProfile;
+
+    /// Drive a SharedFs until all submitted ops complete; returns
+    /// (completion times by op id, final time).
+    fn drain(fs: &mut SharedFs) -> (HashMap<OpId, Time>, Time) {
+        let mut done = HashMap::new();
+        let mut now = 0;
+        let mut guard = 0;
+        while fs.in_flight() > 0 {
+            guard += 1;
+            assert!(guard < 1_000_000, "drain stuck");
+            let t = fs.next_event().expect("ops in flight but no next event");
+            now = t.max(now);
+            for id in fs.advance(now) {
+                done.insert(id, now);
+            }
+        }
+        (done, now)
+    }
+
+    #[test]
+    fn single_small_read_costs_latency_floor() {
+        let mut fs = SharedFs::new(FsProfile::gpfs(1), false);
+        let id = fs.submit(0, 0, FsOp::Read { bytes: 1 });
+        let (done, _) = drain(&mut fs);
+        let t = to_secs(done[&id]);
+        // 1 byte: dominated by the 1 ms op latency, plus negligible data.
+        assert!(t >= 1e-3 && t < 2.5e-3, "t={t}");
+    }
+
+    #[test]
+    fn large_read_approaches_link_bandwidth() {
+        let mut fs = SharedFs::new(FsProfile::gpfs(8), false);
+        // 256 clients × 10 MB reads: per-client caps no longer bind
+        // (256 × 6.2 Mb/s >> 775 Mb/s), so the aggregate link saturates.
+        let n = 256;
+        for c in 0..n {
+            fs.submit(0, c, FsOp::Read { bytes: 10_000_000 });
+        }
+        let (_, end) = drain(&mut fs);
+        let total_bits = n as f64 * 10_000_000.0 * 8.0;
+        let rate = total_bits / to_secs(end);
+        assert!(rate > 0.85 * 775e6, "aggregate rate {:.1} Mb/s", rate / 1e6);
+        assert!(rate <= 775e6 * 1.01);
+    }
+
+    #[test]
+    fn mixed_write_halves_capacity() {
+        // Writes active the whole run => the link runs in mixed mode
+        // (326 Mb/s) throughout.
+        let mut fs = SharedFs::new(FsProfile::gpfs(8), false);
+        let n = 256;
+        for c in 0..n {
+            fs.submit(0, c, FsOp::Write { bytes: 10_000_000 });
+        }
+        let (_, end) = drain(&mut fs);
+        let total_bits = n as f64 * 10_000_000.0 * 8.0;
+        let rate = total_bits / to_secs(end);
+        assert!(rate <= 326e6 * 1.05, "mixed rate {:.1} Mb/s", rate / 1e6);
+        assert!(rate > 0.85 * 326e6, "mixed rate {:.1} Mb/s", rate / 1e6);
+    }
+
+    #[test]
+    fn script_invocation_rate_matches_fig13() {
+        // 256 clients / 1 ION: paper measures ~109 invokes/s.
+        let mut fs = SharedFs::new(FsProfile::gpfs(1), false);
+        let n = 256;
+        for c in 0..n {
+            fs.submit(0, c, FsOp::ScriptInvoke { bytes: 512 });
+        }
+        let (_, end) = drain(&mut fs);
+        let rate = n as f64 / to_secs(end);
+        assert!((rate - 109.0).abs() < 15.0, "invoke rate {rate}");
+    }
+
+    #[test]
+    fn script_invocation_scales_with_ions() {
+        // 2048 clients / 8 IONs: paper measures 823/s (~linear in IONs).
+        let mut fs = SharedFs::new(FsProfile::gpfs(8), true);
+        let n = 2048;
+        for c in 0..n {
+            fs.submit(0, c, FsOp::ScriptInvoke { bytes: 512 });
+        }
+        let (_, end) = drain(&mut fs);
+        let rate = n as f64 / to_secs(end);
+        assert!((rate - 8.0 * 109.0).abs() < 120.0, "invoke rate {rate}");
+    }
+
+    #[test]
+    fn mkdir_collapses_across_psets() {
+        // Within a PSET: ~44/s. Across PSETs: ~10/s.
+        for (span, expect) in [(false, 44.0), (true, 10.5)] {
+            let mut fs = SharedFs::new(FsProfile::gpfs(8), span);
+            let n = 200;
+            for c in 0..n {
+                fs.submit(0, c, FsOp::MkdirRm);
+            }
+            let (_, end) = drain(&mut fs);
+            let rate = n as f64 / to_secs(end);
+            assert!((rate - expect).abs() / expect < 0.15, "span={span} rate={rate}");
+        }
+    }
+
+    #[test]
+    fn ops_complete_in_fifo_order_per_ion() {
+        let mut fs = SharedFs::new(FsProfile::gpfs(1), false);
+        let a = fs.submit(0, 0, FsOp::ScriptInvoke { bytes: 0 });
+        let b = fs.submit(0, 0, FsOp::ScriptInvoke { bytes: 0 });
+        let (done, _) = drain(&mut fs);
+        assert!(done[&a] <= done[&b]);
+    }
+
+    #[test]
+    fn next_event_none_when_idle() {
+        let mut fs = SharedFs::new(FsProfile::nfs(), false);
+        assert_eq!(fs.next_event(), None);
+        assert_eq!(fs.in_flight(), 0);
+    }
+
+    #[test]
+    fn nfs_single_server_cap() {
+        let mut fs = SharedFs::new(FsProfile::nfs(), false);
+        let n = 128;
+        for c in 0..n {
+            fs.submit(0, c, FsOp::Read { bytes: 1_000_000 });
+        }
+        let (_, end) = drain(&mut fs);
+        let rate = n as f64 * 8e6 / to_secs(end);
+        assert!(rate <= 320e6 * 1.01, "nfs rate {:.1} Mb/s", rate / 1e6);
+    }
+
+    #[test]
+    fn generation_changes_on_submit_and_completion() {
+        let mut fs = SharedFs::new(FsProfile::gpfs(1), false);
+        let g0 = fs.generation();
+        fs.submit(0, 0, FsOp::MkdirRm);
+        assert!(fs.generation() > g0);
+        let g1 = fs.generation();
+        let t = fs.next_event().unwrap();
+        fs.advance(t);
+        assert!(fs.generation() > g1);
+    }
+
+    #[test]
+    fn advance_is_idempotent_at_same_time() {
+        let mut fs = SharedFs::new(FsProfile::gpfs(1), false);
+        fs.submit(0, 0, FsOp::Read { bytes: 100 });
+        let t = fs.next_event().unwrap();
+        let d1 = fs.advance(t);
+        let d2 = fs.advance(t);
+        assert!(d2.is_empty() || d1.is_empty());
+        let _ = SECS; // silence unused import in some cfg
+    }
+}

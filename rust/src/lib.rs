@@ -1,0 +1,48 @@
+//! # falkon — loosely-coupled serial job execution on petascale machines
+//!
+//! A production-quality reproduction of *"Enabling Loosely-Coupled Serial
+//! Job Execution on the IBM BlueGene/P Supercomputer and the SiCortex
+//! SC5832"* (Raicu, Zhang, Wilde, Foster; 2008).
+//!
+//! The crate rebuilds the paper's entire stack:
+//!
+//! * [`falkon`] — the Falkon task-execution service: multi-level
+//!   scheduling, streamlined TCP dispatch, bundling, error handling. Two
+//!   interchangeable fabrics run the same policies: a **real** threaded
+//!   TCP service ([`falkon::service`], [`falkon::exec`]) and a
+//!   **discrete-event simulated** world ([`falkon::simworld`]) able to
+//!   replay the paper's 4096–160K-core campaigns on one host.
+//! * [`sim`] — the discrete-event engine and shared-link contention model.
+//! * [`lrm`] — Cobalt (BG/P, PSET granularity) and SLURM (SiCortex)
+//!   local-resource-manager simulators with boot-cost models.
+//! * [`fs`] — GPFS/NFS shared-filesystem models (bandwidth + metadata
+//!   contention) and the node-local ramdisk cache the paper uses to avoid
+//!   them.
+//! * [`swift`] — a miniature dataflow workflow engine with the paper's
+//!   wrapper-script cost model and its three ramdisk optimizations.
+//! * [`apps`] — the paper's workloads: sleep/echo micro-benchmarks, DOCK
+//!   molecular docking, and MARS refinery economics.
+//! * [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`), so executors run *real* compute.
+//! * [`metrics`] — per-task lifecycle records and the paper's
+//!   efficiency/speedup/summary views.
+//! * [`util`] — self-contained substrate (PRNG, stats, CLI, config, JSON,
+//!   bench harness, property testing) — the offline registry lacks the
+//!   usual crates, so these are implemented here.
+//!
+//! See `DESIGN.md` for the experiment index mapping every figure and table
+//! of the paper to a bench target, and `EXPERIMENTS.md` for results.
+
+pub mod apps;
+pub mod falkon;
+pub mod fs;
+pub mod lrm;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod swift;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,253 @@
+//! Cobalt LRM simulator (BG/P): PSET-granularity allocation + boot model.
+//!
+//! Cobalt [17] allocates whole PSETs — 64 compute nodes (256 cores) plus
+//! one I/O node. Compute nodes are powered off when idle and boot by
+//! reading a ZeptoOS/Linux image from the shared filesystem; booting one
+//! node costs seconds, booting many concurrently serializes on the image
+//! read and costs "hundreds of seconds". Multi-level scheduling amortizes
+//! this cost over an entire campaign (§3).
+
+use super::{AllocId, AllocReady, AllocRequest, Granularity, Lrm};
+use crate::sim::engine::{secs, to_secs, Time};
+use crate::sim::machine::Machine;
+use std::collections::{BTreeMap, VecDeque};
+
+#[derive(Debug)]
+struct QueuedReq {
+    id: AllocId,
+    req: AllocRequest,
+    submitted: Time,
+}
+
+#[derive(Debug)]
+struct ActiveAlloc {
+    nodes: Vec<usize>,
+    /// Hard stop at walltime (the LRM kills the allocation).
+    kill_at: Time,
+}
+
+/// The Cobalt simulator.
+#[derive(Debug)]
+pub struct Cobalt {
+    machine: Machine,
+    free_psets: Vec<usize>, // pset indices, LIFO for locality
+    queue: VecDeque<QueuedReq>,
+    /// Allocations granted but still booting: ready_at -> entry.
+    booting: BTreeMap<AllocId, (AllocReady, Time)>,
+    active: BTreeMap<AllocId, ActiveAlloc>,
+    next_id: AllocId,
+    /// Total core-seconds granted (for utilization accounting).
+    pub granted_core_secs: f64,
+}
+
+impl Cobalt {
+    pub fn new(machine: Machine) -> Cobalt {
+        assert!(machine.nodes_per_pset.is_some(), "Cobalt requires a PSET machine");
+        let psets = machine.psets();
+        Cobalt {
+            machine,
+            free_psets: (0..psets).rev().collect(),
+            queue: VecDeque::new(),
+            booting: BTreeMap::new(),
+            active: BTreeMap::new(),
+            next_id: 0,
+            granted_core_secs: 0.0,
+        }
+    }
+
+    fn nodes_per_pset(&self) -> usize {
+        self.machine.nodes_per_pset.unwrap()
+    }
+
+    /// PSETs needed to satisfy a request of `nodes` nodes (rounded up).
+    pub fn psets_for(&self, nodes: usize) -> usize {
+        nodes.div_ceil(self.nodes_per_pset()).max(1)
+    }
+
+    /// Boot duration for `nodes` nodes booting concurrently: a base per-node
+    /// boot plus the serialized shared-FS image-read component.
+    pub fn boot_secs(&self, nodes: usize) -> f64 {
+        if nodes == 0 {
+            return 0.0;
+        }
+        self.machine.node_boot_secs + self.machine.boot_serial_per_node_secs * nodes as f64
+    }
+
+    /// Try to start queued requests (FIFO, no backfill — Cobalt on the
+    /// early BG/P ran FIFO).
+    fn try_start(&mut self, now: Time) {
+        while let Some(front) = self.queue.front() {
+            let want = self.psets_for(front.req.nodes);
+            if want > self.free_psets.len() {
+                break;
+            }
+            let q = self.queue.pop_front().unwrap();
+            let npp = self.nodes_per_pset();
+            let mut nodes = Vec::with_capacity(want * npp);
+            for _ in 0..want {
+                let pset = self.free_psets.pop().unwrap();
+                nodes.extend((pset * npp)..(pset + 1) * npp);
+            }
+            let boot_s = self.boot_secs(nodes.len());
+            let ready_at = now + secs(boot_s);
+            let cores = nodes.len() * self.machine.cores_per_node;
+            let ready = AllocReady {
+                id: q.id,
+                cores,
+                nodes: nodes.clone(),
+                ready_at,
+                queue_wait_s: to_secs(now - q.submitted),
+                boot_s,
+            };
+            let kill_at = ready_at + secs(q.req.walltime_s);
+            self.booting.insert(q.id, (ready, kill_at));
+        }
+    }
+
+    /// Allocations whose walltime expired by `now` (killed by the LRM).
+    pub fn expired(&self, now: Time) -> Vec<AllocId> {
+        self.active
+            .iter()
+            .filter(|(_, a)| a.kill_at <= now)
+            .map(|(id, _)| *id)
+            .collect()
+    }
+}
+
+impl Lrm for Cobalt {
+    fn submit(&mut self, now: Time, req: AllocRequest) -> AllocId {
+        assert!(req.nodes > 0 && req.walltime_s > 0.0);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(QueuedReq { id, req, submitted: now });
+        self.try_start(now);
+        id
+    }
+
+    fn release(&mut self, now: Time, id: AllocId) {
+        if let Some(a) = self.active.remove(&id) {
+            let npp = self.nodes_per_pset();
+            for chunk in a.nodes.chunks(npp) {
+                self.free_psets.push(chunk[0] / npp);
+            }
+            self.try_start(now);
+        }
+    }
+
+    fn next_event(&self) -> Option<Time> {
+        self.booting.values().map(|(r, _)| r.ready_at).min()
+    }
+
+    fn advance(&mut self, now: Time) -> Vec<AllocReady> {
+        let ready_ids: Vec<AllocId> = self
+            .booting
+            .iter()
+            .filter(|(_, (r, _))| r.ready_at <= now)
+            .map(|(id, _)| *id)
+            .collect();
+        let mut out = Vec::with_capacity(ready_ids.len());
+        for id in ready_ids {
+            let (ready, kill_at) = self.booting.remove(&id).unwrap();
+            self.granted_core_secs +=
+                ready.cores as f64 * to_secs(kill_at.saturating_sub(ready.ready_at));
+            self.active.insert(id, ActiveAlloc { nodes: ready.nodes.clone(), kill_at });
+            out.push(ready);
+        }
+        out
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Pset(self.nodes_per_pset())
+    }
+
+    fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    fn free_nodes(&self) -> usize {
+        self.free_psets.len() * self.nodes_per_pset()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::SECS;
+
+    fn bgp_cobalt() -> Cobalt {
+        Cobalt::new(Machine::bgp())
+    }
+
+    #[test]
+    fn rounds_up_to_pset_granularity() {
+        let mut c = bgp_cobalt();
+        // Ask for 1 node: get a whole 64-node PSET.
+        let id = c.submit(0, AllocRequest { nodes: 1, walltime_s: 3600.0 });
+        let t = c.next_event().unwrap();
+        let ready = c.advance(t);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].id, id);
+        assert_eq!(ready[0].nodes.len(), 64);
+        assert_eq!(ready[0].cores, 256);
+    }
+
+    #[test]
+    fn boot_cost_scales_with_allocation_size() {
+        let c = bgp_cobalt();
+        let one = c.boot_secs(1);
+        let full = c.boot_secs(1024);
+        assert!(one >= 5.0 && one < 6.0, "single-node boot {one}");
+        assert!(full > 100.0, "mass boot should be hundreds of seconds: {full}");
+    }
+
+    #[test]
+    fn fifo_queue_when_machine_full() {
+        let mut c = bgp_cobalt();
+        // Take the whole machine (16 PSETs).
+        let a = c.submit(0, AllocRequest { nodes: 1024, walltime_s: 100.0 });
+        let t = c.next_event().unwrap();
+        c.advance(t);
+        assert_eq!(c.free_nodes(), 0);
+        // Second request queues.
+        let _b = c.submit(t, AllocRequest { nodes: 64, walltime_s: 100.0 });
+        assert!(c.next_event().is_none(), "b cannot start yet");
+        // Release a: b starts booting.
+        c.release(t + 10 * SECS, a);
+        let tb = c.next_event().expect("b should start after release");
+        let ready = c.advance(tb);
+        assert_eq!(ready.len(), 1);
+        assert!(ready[0].queue_wait_s > 0.0);
+    }
+
+    #[test]
+    fn multiple_psets_in_one_request() {
+        let mut c = bgp_cobalt();
+        let _ = c.submit(0, AllocRequest { nodes: 512, walltime_s: 60.0 });
+        let t = c.next_event().unwrap();
+        let r = &c.advance(t)[0];
+        assert_eq!(r.nodes.len(), 512);
+        assert_eq!(c.free_nodes(), 512);
+    }
+
+    #[test]
+    fn release_allows_reuse() {
+        let mut c = bgp_cobalt();
+        let a = c.submit(0, AllocRequest { nodes: 1024, walltime_s: 60.0 });
+        let t = c.next_event().unwrap();
+        c.advance(t);
+        c.release(t, a);
+        assert_eq!(c.free_nodes(), 1024);
+        let _b = c.submit(t, AllocRequest { nodes: 1024, walltime_s: 60.0 });
+        assert!(c.next_event().is_some());
+    }
+
+    #[test]
+    fn expiry_tracked() {
+        let mut c = bgp_cobalt();
+        let a = c.submit(0, AllocRequest { nodes: 64, walltime_s: 10.0 });
+        let t = c.next_event().unwrap();
+        c.advance(t);
+        assert!(c.expired(t).is_empty());
+        assert_eq!(c.expired(t + 11 * SECS), vec![a]);
+    }
+}

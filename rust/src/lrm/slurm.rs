@@ -1,0 +1,169 @@
+//! SLURM LRM simulator (SiCortex): node-granularity allocation, no boot
+//! cost (nodes stay up), FIFO queue.
+
+use super::{AllocId, AllocReady, AllocRequest, Granularity, Lrm};
+use crate::sim::engine::{secs, to_secs, Time};
+use crate::sim::machine::Machine;
+use std::collections::{BTreeMap, VecDeque};
+
+#[derive(Debug)]
+struct QueuedReq {
+    id: AllocId,
+    req: AllocRequest,
+    submitted: Time,
+}
+
+/// The SLURM simulator.
+#[derive(Debug)]
+pub struct Slurm {
+    machine: Machine,
+    free_nodes: Vec<usize>,
+    queue: VecDeque<QueuedReq>,
+    /// Granted allocations not yet collected by `advance`.
+    pending_ready: Vec<AllocReady>,
+    active: BTreeMap<AllocId, (Vec<usize>, Time)>,
+    next_id: AllocId,
+}
+
+impl Slurm {
+    pub fn new(machine: Machine) -> Slurm {
+        let nodes = machine.nodes;
+        Slurm {
+            machine,
+            free_nodes: (0..nodes).rev().collect(),
+            queue: VecDeque::new(),
+            pending_ready: Vec::new(),
+            active: BTreeMap::new(),
+            next_id: 0,
+        }
+    }
+
+    fn try_start(&mut self, now: Time) {
+        while let Some(front) = self.queue.front() {
+            if front.req.nodes > self.free_nodes.len() {
+                break;
+            }
+            let q = self.queue.pop_front().unwrap();
+            let nodes: Vec<usize> =
+                (0..q.req.nodes).map(|_| self.free_nodes.pop().unwrap()).collect();
+            let cores = nodes.len() * self.machine.cores_per_node;
+            let kill_at = now + secs(q.req.walltime_s);
+            self.active.insert(q.id, (nodes.clone(), kill_at));
+            self.pending_ready.push(AllocReady {
+                id: q.id,
+                cores,
+                nodes,
+                ready_at: now,
+                queue_wait_s: to_secs(now - q.submitted),
+                boot_s: 0.0,
+            });
+        }
+    }
+
+    /// Allocations whose walltime expired by `now`.
+    pub fn expired(&self, now: Time) -> Vec<AllocId> {
+        self.active
+            .iter()
+            .filter(|(_, (_, kill))| *kill <= now)
+            .map(|(id, _)| *id)
+            .collect()
+    }
+}
+
+impl Lrm for Slurm {
+    fn submit(&mut self, now: Time, req: AllocRequest) -> AllocId {
+        assert!(req.nodes > 0 && req.nodes <= self.machine.nodes && req.walltime_s > 0.0);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(QueuedReq { id, req, submitted: now });
+        self.try_start(now);
+        id
+    }
+
+    fn release(&mut self, now: Time, id: AllocId) {
+        if let Some((nodes, _)) = self.active.remove(&id) {
+            self.free_nodes.extend(nodes);
+            self.try_start(now);
+        }
+    }
+
+    fn next_event(&self) -> Option<Time> {
+        // Grants are immediate (no boot): anything pending is ready "now";
+        // we signal with the earliest ready_at among pending grants.
+        self.pending_ready.iter().map(|r| r.ready_at).min()
+    }
+
+    fn advance(&mut self, _now: Time) -> Vec<AllocReady> {
+        std::mem::take(&mut self.pending_ready)
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Node
+    }
+
+    fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    fn free_nodes(&self) -> usize {
+        self.free_nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::SECS;
+
+    #[test]
+    fn grants_exact_node_count_immediately() {
+        let mut s = Slurm::new(Machine::sicortex());
+        let id = s.submit(0, AllocRequest { nodes: 960, walltime_s: 3600.0 });
+        let ready = s.advance(0);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].id, id);
+        assert_eq!(ready[0].nodes.len(), 960);
+        assert_eq!(ready[0].cores, 5760); // the paper's experiment size
+        assert_eq!(ready[0].boot_s, 0.0);
+    }
+
+    #[test]
+    fn queues_when_full_and_starts_on_release() {
+        let mut s = Slurm::new(Machine::sicortex());
+        let a = s.submit(0, AllocRequest { nodes: 972, walltime_s: 60.0 });
+        s.advance(0);
+        let _b = s.submit(0, AllocRequest { nodes: 10, walltime_s: 60.0 });
+        assert!(s.advance(0).is_empty());
+        s.release(30 * SECS, a);
+        let ready = s.advance(30 * SECS);
+        assert_eq!(ready.len(), 1);
+        assert!((ready[0].queue_wait_s - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_oversized_request() {
+        let mut s = Slurm::new(Machine::sicortex());
+        s.submit(0, AllocRequest { nodes: 10_000, walltime_s: 60.0 });
+    }
+
+    #[test]
+    fn expiry_tracked() {
+        let mut s = Slurm::new(Machine::sicortex());
+        let a = s.submit(0, AllocRequest { nodes: 1, walltime_s: 5.0 });
+        s.advance(0);
+        assert!(s.expired(4 * SECS).is_empty());
+        assert_eq!(s.expired(5 * SECS), vec![a]);
+    }
+
+    #[test]
+    fn free_nodes_accounting() {
+        let mut s = Slurm::new(Machine::sicortex());
+        assert_eq!(s.free_nodes(), 972);
+        let a = s.submit(0, AllocRequest { nodes: 100, walltime_s: 60.0 });
+        s.advance(0);
+        assert_eq!(s.free_nodes(), 872);
+        s.release(0, a);
+        assert_eq!(s.free_nodes(), 972);
+    }
+}

@@ -1,0 +1,197 @@
+//! `falkon` — the launcher.
+//!
+//! Subcommands:
+//! * `service`   — run a live Falkon dispatch service
+//! * `executor`  — run a live executor against a service
+//! * `sim`       — replay a paper experiment on the simulator
+//! * `theory`    — print the Fig 1/2 theoretical efficiency curves
+//! * `artifacts` — list/inspect AOT artifacts
+//!
+//! Example (two shells):
+//! ```text
+//! falkon service --bind 127.0.0.1:50100 --bundle 4
+//! falkon executor --connect 127.0.0.1:50100 --id 0 --cores 1 --compute
+//! ```
+
+use falkon::falkon::dispatch::DispatchConfig;
+use falkon::falkon::exec::{DefaultRunner, Executor, ExecutorConfig};
+use falkon::falkon::service::{Service, ServiceConfig};
+use falkon::falkon::simworld::{run_sleep_workload, WireProto};
+use falkon::falkon::theory::{self, TheoryParams};
+use falkon::sim::machine::Machine;
+use falkon::util::cli::{usage, Args, OptSpec};
+use std::sync::Arc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_default();
+    let args = falkon::util::cli::parse(argv.into_iter().skip(1), &["compute", "help", "ws"]);
+    let code = match cmd.as_str() {
+        "service" => cmd_service(&args),
+        "executor" => cmd_executor(&args),
+        "sim" => cmd_sim(&args),
+        "theory" => cmd_theory(&args),
+        "artifacts" => cmd_artifacts(&args),
+        _ => {
+            eprintln!(
+                "falkon — loosely-coupled serial job execution (Raicu et al. 2008 reproduction)\n\n\
+                 USAGE: falkon <service|executor|sim|theory|artifacts> [OPTIONS]\n\
+                 Run `falkon <cmd> --help` for options; see README.md and examples/."
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_service(args: &Args) -> i32 {
+    if args.flag("help") {
+        print!("{}", usage("falkon service", "Run a live Falkon dispatch service", &[
+            OptSpec { name: "bind", help: "listen address", default: Some("127.0.0.1:50100") },
+            OptSpec { name: "bundle", help: "tasks per dispatch message", default: Some("1") },
+        ]));
+        return 0;
+    }
+    let config = ServiceConfig {
+        bind: args.get_or("bind", "127.0.0.1:50100").to_string(),
+        dispatch: DispatchConfig { bundle: args.parse_or("bundle", 1usize), data_aware: false },
+        retry: Default::default(),
+    };
+    match Service::start(config) {
+        Ok(svc) => {
+            println!("falkon service listening on {}", svc.addr());
+            println!("(ctrl-c to stop)");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("service failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_executor(args: &Args) -> i32 {
+    if args.flag("help") {
+        print!("{}", usage("falkon executor", "Run a live executor", &[
+            OptSpec { name: "connect", help: "service address", default: Some("127.0.0.1:50100") },
+            OptSpec { name: "id", help: "executor id", default: Some("0") },
+            OptSpec { name: "cores", help: "worker threads", default: Some("1") },
+            OptSpec { name: "compute", help: "enable PJRT compute payloads (flag)", default: None },
+        ]));
+        return 0;
+    }
+    let addr = args.get_or("connect", "127.0.0.1:50100").to_string();
+    let cfg = ExecutorConfig {
+        service_addr: addr.clone(),
+        executor_id: args.parse_or("id", 0u64),
+        cores: args.parse_or("cores", 1u32),
+        proto: falkon::net::tcpcore::Proto::Tcp,
+        initial_credit: args.parse_or("cores", 1u32),
+    };
+    let runner: Arc<dyn falkon::falkon::exec::TaskRunner> = if args.flag("compute") {
+        match falkon::runtime::Registry::open_default() {
+            Ok(reg) => Arc::new(falkon::runtime::ComputeRunner::new(reg)),
+            Err(e) => {
+                eprintln!("cannot open artifact registry: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        Arc::new(DefaultRunner)
+    };
+    match Executor::start(cfg, runner) {
+        Ok(_exec) => {
+            println!("executor connected to {addr}");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("executor failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_sim(args: &Args) -> i32 {
+    if args.flag("help") {
+        print!("{}", usage("falkon sim", "Replay a sleep-task experiment on the simulator", &[
+            OptSpec { name: "machine", help: "bgp | sicortex | anluc", default: Some("bgp") },
+            OptSpec { name: "cores", help: "processor cores", default: Some("2048") },
+            OptSpec { name: "tasks", help: "number of tasks", default: Some("20000") },
+            OptSpec { name: "len", help: "task length seconds", default: Some("0") },
+            OptSpec { name: "bundle", help: "tasks per message", default: Some("1") },
+            OptSpec { name: "ws", help: "use the WS protocol (flag)", default: None },
+        ]));
+        return 0;
+    }
+    let machine = match args.get_or("machine", "bgp") {
+        "bgp" => Machine::bgp(),
+        "sicortex" => Machine::sicortex(),
+        "anluc" => Machine::anluc(),
+        m => {
+            eprintln!("unknown machine {m:?}");
+            return 2;
+        }
+    };
+    let proto = if args.flag("ws") { WireProto::Ws } else { WireProto::Tcp };
+    let campaign = run_sleep_workload(
+        machine,
+        args.parse_or("cores", 2048usize),
+        args.parse_or("tasks", 20_000usize),
+        args.parse_or("len", 0.0f64),
+        proto,
+        args.parse_or("bundle", 1usize),
+    );
+    println!("{}", campaign.to_json().to_string_compact());
+    0
+}
+
+fn cmd_theory(args: &Args) -> i32 {
+    if args.flag("help") {
+        print!("{}", usage("falkon theory", "Fig 1/2 theoretical efficiency model", &[
+            OptSpec { name: "procs", help: "processor count", default: Some("4096") },
+            OptSpec { name: "tasks", help: "workload size", default: Some("1000000") },
+        ]));
+        return 0;
+    }
+    let procs = args.parse_or("procs", 4096u64);
+    let tasks = args.parse_or("tasks", 1_000_000u64);
+    let mut table = falkon::util::bench::Table::new(&["task_len_s", "1/s", "10/s", "100/s", "1K/s", "10K/s"]);
+    for len in theory::paper_task_lengths() {
+        let mut row = vec![format!("{len}")];
+        for rate in theory::PAPER_RATES {
+            let p = TheoryParams { tasks, processors: procs, dispatch_rate: rate };
+            row.push(format!("{:.3}", theory::efficiency(p, len)));
+        }
+        table.row(&row);
+    }
+    println!("Theoretical efficiency, {procs} processors, {tasks} tasks:");
+    table.print();
+    0
+}
+
+fn cmd_artifacts(args: &Args) -> i32 {
+    let dir = args.get_or("dir", "artifacts");
+    match falkon::runtime::Registry::open(dir) {
+        Ok(reg) => {
+            let names = reg.available();
+            if names.is_empty() {
+                println!("no artifacts in {dir}/ — run `make artifacts`");
+            }
+            for n in names {
+                match reg.get(&n) {
+                    Ok(e) => println!("{:<16} compiles OK ({})", n, e.name()),
+                    Err(err) => println!("{n:<16} FAILS: {err:#}"),
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    }
+}

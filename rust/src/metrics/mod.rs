@@ -1,0 +1,280 @@
+//! Per-task lifecycle metrics and the paper's reporting views.
+//!
+//! Every fabric (real or simulated) records a [`TaskTimes`] per task;
+//! [`Campaign`] aggregates them into the numbers the paper reports:
+//! makespan, throughput, efficiency (both definitions), the summary view
+//! (Figs 15/17 — tasks in flight over time) and the per-processor view
+//! (Figs 16/18 — per-core busy fraction), plus CSV emission for offline
+//! plotting.
+
+use crate::sim::engine::{to_secs, Time};
+use crate::util::stats::{self, Summary};
+
+/// Lifecycle timestamps of one task (virtual or wall time, ns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskTimes {
+    pub submit: Time,
+    pub dispatch: Time,
+    pub start: Time,
+    pub end: Time,
+    /// When the result notification reached the service.
+    pub result: Time,
+    /// Core index that ran the task.
+    pub core: u32,
+    /// 0 = success.
+    pub exit_code: i32,
+}
+
+impl TaskTimes {
+    pub fn exec_secs(&self) -> f64 {
+        to_secs(self.end.saturating_sub(self.start))
+    }
+
+    pub fn queue_secs(&self) -> f64 {
+        to_secs(self.dispatch.saturating_sub(self.submit))
+    }
+
+    /// Dispatch → start latency (network + staging).
+    pub fn overhead_secs(&self) -> f64 {
+        to_secs(self.start.saturating_sub(self.dispatch))
+    }
+}
+
+/// Aggregated campaign metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Campaign {
+    pub records: Vec<TaskTimes>,
+    pub processors: usize,
+    /// Campaign start (first submit).
+    pub t0: Time,
+}
+
+impl Campaign {
+    pub fn new(processors: usize) -> Campaign {
+        Campaign { records: Vec::new(), processors, t0: Time::MAX }
+    }
+
+    pub fn record(&mut self, t: TaskTimes) {
+        self.t0 = self.t0.min(t.submit);
+        self.records.push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// End-to-end makespan in seconds (first submit → last result).
+    pub fn makespan_s(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let end = self.records.iter().map(|r| r.result.max(r.end)).max().unwrap();
+        to_secs(end - self.t0)
+    }
+
+    /// Total core-busy seconds.
+    pub fn busy_s(&self) -> f64 {
+        self.records.iter().map(|r| r.exec_secs()).sum()
+    }
+
+    /// CPU time consumed, in CPU-hours (the paper reports 894 CPU-hours
+    /// for MARS, 1.94 CPU-years for DOCK).
+    pub fn cpu_hours(&self) -> f64 {
+        self.busy_s() / 3600.0
+    }
+
+    /// Tasks per second over the makespan.
+    pub fn throughput(&self) -> f64 {
+        let m = self.makespan_s();
+        if m <= 0.0 {
+            0.0
+        } else {
+            self.records.len() as f64 / m
+        }
+    }
+
+    /// Efficiency = busy / (P × makespan) — the micro-benchmark definition.
+    pub fn efficiency(&self) -> f64 {
+        stats::efficiency_busy(self.busy_s(), self.processors, self.makespan_s())
+    }
+
+    /// Efficiency vs a reference run of the same workload (§5 definition).
+    pub fn efficiency_vs(&self, reference: &Campaign) -> f64 {
+        stats::efficiency_vs_reference(
+            reference.makespan_s(),
+            reference.processors,
+            self.makespan_s(),
+            self.processors,
+        )
+    }
+
+    /// Speedup vs a reference run of the same workload.
+    pub fn speedup_vs(&self, reference: &Campaign) -> f64 {
+        stats::speedup_vs_reference(reference.makespan_s(), reference.processors, self.makespan_s())
+    }
+
+    /// Distribution of per-task execution times.
+    pub fn exec_summary(&self) -> Summary {
+        Summary::of(&self.records.iter().map(|r| r.exec_secs()).collect::<Vec<_>>())
+    }
+
+    /// The summary view (Figs 15/17): number of tasks executing at each of
+    /// `bins` time points across the makespan.
+    pub fn summary_view(&self, bins: usize) -> Vec<(f64, usize)> {
+        if self.records.is_empty() || bins == 0 {
+            return Vec::new();
+        }
+        let m = self.makespan_s();
+        (0..bins)
+            .map(|i| {
+                let t_s = m * (i as f64 + 0.5) / bins as f64;
+                let t = self.t0 + crate::sim::engine::secs(t_s);
+                let running =
+                    self.records.iter().filter(|r| r.start <= t && t < r.end).count();
+                (t_s, running)
+            })
+            .collect()
+    }
+
+    /// The per-processor view (Figs 16/18): per-core (tasks, busy seconds,
+    /// busy fraction of the makespan).
+    pub fn per_processor_view(&self) -> Vec<(u32, usize, f64, f64)> {
+        use std::collections::BTreeMap;
+        let m = self.makespan_s().max(1e-12);
+        let mut per: BTreeMap<u32, (usize, f64)> = BTreeMap::new();
+        for r in &self.records {
+            let e = per.entry(r.core).or_default();
+            e.0 += 1;
+            e.1 += r.exec_secs();
+        }
+        per.into_iter().map(|(core, (n, busy))| (core, n, busy, busy / m)).collect()
+    }
+
+    /// Emit a CSV of per-task records (secs relative to campaign start).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("task,core,submit_s,dispatch_s,start_s,end_s,result_s,exit\n");
+        for (i, r) in self.records.iter().enumerate() {
+            s.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{}\n",
+                i,
+                r.core,
+                to_secs(r.submit - self.t0),
+                to_secs(r.dispatch - self.t0),
+                to_secs(r.start - self.t0),
+                to_secs(r.end - self.t0),
+                to_secs(r.result - self.t0),
+                r.exit_code
+            ));
+        }
+        s
+    }
+
+    /// JSON summary object for EXPERIMENTS.md extraction.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let exec = self.exec_summary();
+        let mut j = Json::obj();
+        j.set("tasks", Json::Num(self.records.len() as f64))
+            .set("processors", Json::Num(self.processors as f64))
+            .set("makespan_s", Json::Num(self.makespan_s()))
+            .set("throughput_tps", Json::Num(self.throughput()))
+            .set("efficiency", Json::Num(self.efficiency()))
+            .set("cpu_hours", Json::Num(self.cpu_hours()))
+            .set("exec_mean_s", Json::Num(exec.mean))
+            .set("exec_std_s", Json::Num(exec.std));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::secs;
+
+    fn rec(core: u32, submit: f64, start: f64, end: f64) -> TaskTimes {
+        TaskTimes {
+            submit: secs(submit),
+            dispatch: secs(submit),
+            start: secs(start),
+            end: secs(end),
+            result: secs(end),
+            core,
+            exit_code: 0,
+        }
+    }
+
+    fn two_core_campaign() -> Campaign {
+        let mut c = Campaign::new(2);
+        c.record(rec(0, 0.0, 0.0, 10.0));
+        c.record(rec(1, 0.0, 0.0, 10.0));
+        c.record(rec(0, 0.0, 10.0, 20.0));
+        c
+    }
+
+    #[test]
+    fn basic_aggregates() {
+        let c = two_core_campaign();
+        assert!((c.makespan_s() - 20.0).abs() < 1e-9);
+        assert!((c.busy_s() - 30.0).abs() < 1e-9);
+        assert!((c.efficiency() - 0.75).abs() < 1e-9);
+        assert!((c.throughput() - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_vs_reference() {
+        // Reference: same 30s of work on 1 core takes 30s.
+        let mut reference = Campaign::new(1);
+        reference.record(rec(0, 0.0, 0.0, 30.0));
+        let c = two_core_campaign();
+        // speedup = 30*1/20 = 1.5; efficiency = 1.5/2 = 0.75.
+        assert!((c.speedup_vs(&reference) - 1.5).abs() < 1e-9);
+        assert!((c.efficiency_vs(&reference) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_view_counts_running() {
+        let c = two_core_campaign();
+        let v = c.summary_view(4);
+        // Bins at 2.5, 7.5, 12.5, 17.5 s: 2, 2, 1, 1 running.
+        assert_eq!(v.iter().map(|(_, n)| *n).collect::<Vec<_>>(), vec![2, 2, 1, 1]);
+    }
+
+    #[test]
+    fn per_processor_view_aggregates() {
+        let c = two_core_campaign();
+        let v = c.per_processor_view();
+        assert_eq!(v.len(), 2);
+        let (core0, n0, busy0, frac0) = v[0];
+        assert_eq!((core0, n0), (0, 2));
+        assert!((busy0 - 20.0).abs() < 1e-9);
+        assert!((frac0 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let c = two_core_campaign();
+        let csv = c.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("task,core,"));
+    }
+
+    #[test]
+    fn json_summary_fields() {
+        let c = two_core_campaign();
+        let j = c.to_json();
+        assert_eq!(j.get("tasks").unwrap().as_f64(), Some(3.0));
+        assert!((j.get("efficiency").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_campaign_is_safe() {
+        let c = Campaign::new(4);
+        assert_eq!(c.makespan_s(), 0.0);
+        assert_eq!(c.efficiency(), 0.0);
+        assert!(c.summary_view(10).is_empty());
+    }
+}

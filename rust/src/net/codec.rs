@@ -1,0 +1,244 @@
+//! Pluggable message encodings: the lean TCP binary codec vs the heavy
+//! WS/SOAP-style envelope — Table 1's "Communication Protocol" row.
+//!
+//! Both encode the same [`Msg`] set; [`WsCodec`] wraps the content in an
+//! XML/SOAP envelope with base64 payloads to reproduce the GT4 WS stack's
+//! wire weight (and, in the simulator, its CPU weight). `wire_overhead`
+//! exposes the per-message byte accounting the paper derives in §4.2
+//! (934 bytes/task at 10 B descriptions → 22.3 KB/task at 10 KB).
+
+use super::proto::{DecodeError, Msg};
+
+/// A message encoding.
+pub trait Codec: Send + Sync {
+    /// Encode a message body (framing added by the transport).
+    fn encode(&self, msg: &Msg) -> Vec<u8>;
+    /// Decode a message body.
+    fn decode(&self, buf: &[u8]) -> Result<Msg, DecodeError>;
+    /// Short name for reports ("TCP", "WS").
+    fn name(&self) -> &'static str;
+    /// Estimated extra CPU seconds per *message* the encoding costs the
+    /// service beyond the binary baseline (XML build/parse). Used by the
+    /// simulator's service cost model, calibrated to Fig 7's profiling
+    /// (WS communication ≈ 4.2 ms vs TCP ≈ sub-millisecond per task).
+    fn cpu_overhead_secs(&self) -> f64;
+}
+
+/// The compact binary codec (the "C executor / TCP" path).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TcpCodec;
+
+impl Codec for TcpCodec {
+    fn encode(&self, msg: &Msg) -> Vec<u8> {
+        msg.encode()
+    }
+
+    fn decode(&self, buf: &[u8]) -> Result<Msg, DecodeError> {
+        Msg::decode(buf)
+    }
+
+    fn name(&self) -> &'static str {
+        "TCP"
+    }
+
+    fn cpu_overhead_secs(&self) -> f64 {
+        0.0
+    }
+}
+
+/// The WS/SOAP-style codec (the "Java executor / WS" path): an XML
+/// envelope holding the base64 of the binary body. Faithful in *weight*
+/// (bytes and CPU), not in schema.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WsCodec;
+
+const SOAP_PRE: &str = "<?xml version=\"1.0\" encoding=\"UTF-8\"?>\
+<soapenv:Envelope xmlns:soapenv=\"http://schemas.xmlsoap.org/soap/envelope/\" \
+xmlns:falkon=\"http://falkon.globus.org/schema/2008\">\
+<soapenv:Header><falkon:notificationConsumer>\
+https://service:50001/wsrf/services/NotificationConsumerService\
+</falkon:notificationConsumer></soapenv:Header>\
+<soapenv:Body><falkon:message><falkon:content encoding=\"base64\">";
+const SOAP_POST: &str = "</falkon:content></falkon:message></soapenv:Body></soapenv:Envelope>";
+
+impl Codec for WsCodec {
+    fn encode(&self, msg: &Msg) -> Vec<u8> {
+        let body = base64_encode(&msg.encode());
+        let mut out = String::with_capacity(SOAP_PRE.len() + body.len() + SOAP_POST.len());
+        out.push_str(SOAP_PRE);
+        out.push_str(&body);
+        out.push_str(SOAP_POST);
+        out.into_bytes()
+    }
+
+    fn decode(&self, buf: &[u8]) -> Result<Msg, DecodeError> {
+        let text = std::str::from_utf8(buf).map_err(|_| DecodeError::BadUtf8)?;
+        let start = text.find("base64\">").ok_or(DecodeError::Truncated(0))? + "base64\">".len();
+        let end = text[start..].find('<').ok_or(DecodeError::Truncated(start))? + start;
+        let body = base64_decode(&text[start..end]).ok_or(DecodeError::BadUtf8)?;
+        Msg::decode(&body)
+    }
+
+    fn name(&self) -> &'static str {
+        "WS"
+    }
+
+    fn cpu_overhead_secs(&self) -> f64 {
+        // Fig 7: WS-path communication costs ~4.2 ms/task vs the TCP
+        // path's ~0.4 ms; the difference is XML/SOAP/HTTP processing.
+        3.8e-3
+    }
+}
+
+/// Per-task wire-byte estimate for the §4.2 accounting: the task travels
+/// twice (client→service, service→executor) plus a result notification
+/// each way, plus TCP/IP headers per packet (~40 B, MTU 1500).
+pub fn bytes_per_task(codec: &dyn Codec, desc_len: usize, bundle: usize) -> f64 {
+    use crate::falkon::task::TaskPayload;
+    use crate::net::proto::WireTask;
+    let bundle = bundle.max(1);
+    let tasks: Vec<WireTask> = (0..bundle)
+        .map(|i| WireTask {
+            id: i as u64,
+            payload: TaskPayload::Echo { payload: vec![b'x'; desc_len] },
+        })
+        .collect();
+    let dispatch = codec.encode(&Msg::Dispatch { tasks }).len() as f64 / bundle as f64;
+    let result = codec
+        .encode(&Msg::Result { task_id: 0, exit_code: 0, error: None })
+        .len() as f64;
+    // Task desc travels twice (in + out of the service), results twice
+    // (executor->service, service->client).
+    let app_bytes = 2.0 * dispatch + 2.0 * result;
+    let packets = (app_bytes / 1460.0).ceil().max(4.0); // >=4 packets/task observed
+    app_bytes + packets * 40.0
+}
+
+// ------------------------------------------------------------- base64
+
+const B64: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 (with padding).
+pub fn base64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = u32::from_be_bytes([0, b[0], b[1], b[2]]);
+        out.push(B64[(n >> 18) as usize & 63] as char);
+        out.push(B64[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Standard base64 decode; `None` on malformed input.
+pub fn base64_decode(s: &str) -> Option<Vec<u8>> {
+    fn val(c: u8) -> Option<u32> {
+        match c {
+            b'A'..=b'Z' => Some((c - b'A') as u32),
+            b'a'..=b'z' => Some((c - b'a' + 26) as u32),
+            b'0'..=b'9' => Some((c - b'0' + 52) as u32),
+            b'+' => Some(62),
+            b'/' => Some(63),
+            _ => None,
+        }
+    }
+    let s = s.trim_end_matches('=').as_bytes();
+    let mut out = Vec::with_capacity(s.len() * 3 / 4);
+    for chunk in s.chunks(4) {
+        if chunk.len() == 1 {
+            return None;
+        }
+        let mut n: u32 = 0;
+        for (i, &c) in chunk.iter().enumerate() {
+            n |= val(c)? << (18 - 6 * i);
+        }
+        out.push((n >> 16) as u8);
+        if chunk.len() > 2 {
+            out.push((n >> 8) as u8);
+        }
+        if chunk.len() > 3 {
+            out.push(n as u8);
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::falkon::task::TaskPayload;
+    use crate::net::proto::WireTask;
+
+    fn sample_msgs() -> Vec<Msg> {
+        vec![
+            Msg::Register { executor_id: 1, cores: 4 },
+            Msg::Dispatch {
+                tasks: vec![WireTask { id: 1, payload: TaskPayload::Sleep { secs: 0.0 } }],
+            },
+            Msg::Result { task_id: 1, exit_code: 0, error: None },
+            Msg::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn tcp_codec_roundtrips() {
+        let c = TcpCodec;
+        for m in sample_msgs() {
+            assert_eq!(c.decode(&c.encode(&m)).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn ws_codec_roundtrips() {
+        let c = WsCodec;
+        for m in sample_msgs() {
+            assert_eq!(c.decode(&c.encode(&m)).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn ws_is_much_heavier_than_tcp() {
+        let m = Msg::Dispatch {
+            tasks: vec![WireTask { id: 1, payload: TaskPayload::Sleep { secs: 0.0 } }],
+        };
+        let tcp = TcpCodec.encode(&m).len();
+        let ws = WsCodec.encode(&m).len();
+        assert!(ws > 10 * tcp, "ws={ws} tcp={tcp}");
+        assert!(WsCodec.cpu_overhead_secs() > TcpCodec.cpu_overhead_secs());
+    }
+
+    #[test]
+    fn base64_roundtrip_all_lengths() {
+        for len in 0..50 {
+            let data: Vec<u8> = (0..len).map(|i| (i * 37 + 11) as u8).collect();
+            let enc = base64_encode(&data);
+            assert_eq!(base64_decode(&enc).unwrap(), data, "len {len}");
+        }
+    }
+
+    #[test]
+    fn base64_known_vector() {
+        assert_eq!(base64_encode(b"Man"), "TWFu");
+        assert_eq!(base64_encode(b"Ma"), "TWE=");
+        assert_eq!(base64_encode(b"M"), "TQ==");
+        assert_eq!(base64_decode("TWFu").unwrap(), b"Man");
+        assert!(base64_decode("!!").is_none());
+    }
+
+    #[test]
+    fn bytes_per_task_in_papers_ballpark() {
+        // Paper §4.2: ~934 bytes/task for 10 B descriptions over the
+        // TCP+WS submission stack; 22.3 KB/task for 10 KB descriptions.
+        // Our estimate combines a TCP dispatch path with WS submission
+        // overhead implicitly via the codec choice; check orders.
+        let small = bytes_per_task(&WsCodec, 10, 1);
+        assert!((500.0..2500.0).contains(&small), "small {small}");
+        let big = bytes_per_task(&WsCodec, 10_000, 1);
+        assert!((20_000.0..40_000.0).contains(&big), "big {big}");
+        // Bundling amortizes the envelope.
+        let bundled = bytes_per_task(&WsCodec, 10, 10);
+        assert!(bundled < small, "bundled {bundled} < {small}");
+    }
+}

@@ -1,0 +1,20 @@
+//! Wire protocol + persistent-socket transport.
+//!
+//! The paper's §3.2.2 replaced the GT4 WS/SOAP stack with a hand-rolled
+//! persistent-TCP protocol ("TCPCore", Fig 3) to reach multi-thousand
+//! tasks/s dispatch rates. This module implements both sides of that
+//! comparison:
+//!
+//! * [`proto`] — the message set and a compact binary encoding (the "C
+//!   executor / TCP" path);
+//! * [`codec`] — pluggable encodings: [`codec::TcpCodec`] (binary) and
+//!   [`codec::WsCodec`] (an XML/SOAP-style envelope reproducing the weight
+//!   of the WS path, including base64 payload inflation) with wire-size
+//!   accounting used by both the live service and the simulator's cost
+//!   model (Figs 6, 7, 10);
+//! * [`tcpcore`] — framing over `std::net::TcpStream` plus the
+//!   persistent-connection registry keyed by executor id.
+
+pub mod codec;
+pub mod proto;
+pub mod tcpcore;

@@ -1,0 +1,284 @@
+//! TCPCore — persistent-socket transport (paper Fig 3).
+//!
+//! The paper's TCPCore replaced GT4 WS-Core: a pool of threads in the
+//! service JVM managing *persistent* TCP sockets to every executor, keyed
+//! by executor id. Here: [`Framed`] adds 4-byte length framing + codec
+//! negotiation over `std::net::TcpStream`, and [`Registry`] is the
+//! connection table the dispatcher writes to.
+
+use super::codec::{Codec, TcpCodec, WsCodec};
+use super::proto::Msg;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+/// Magic bytes negotiating the per-connection codec.
+const MAGIC_TCP: &[u8; 4] = b"FKT1";
+const MAGIC_WS: &[u8; 4] = b"FKW1";
+
+/// Which codec a connection speaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Proto {
+    Tcp,
+    Ws,
+}
+
+impl Proto {
+    pub fn codec(&self) -> Box<dyn Codec> {
+        match self {
+            Proto::Tcp => Box::new(TcpCodec),
+            Proto::Ws => Box::new(WsCodec),
+        }
+    }
+}
+
+/// A framed, codec-aware message stream over TCP.
+pub struct Framed {
+    stream: TcpStream,
+    proto: Proto,
+    /// Bytes sent/received (for the Fig 10 accounting).
+    pub sent_bytes: u64,
+    pub recv_bytes: u64,
+}
+
+impl Framed {
+    /// Client side: connect and negotiate `proto`.
+    pub fn connect(addr: &str, proto: Proto) -> std::io::Result<Framed> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.write_all(match proto {
+            Proto::Tcp => MAGIC_TCP,
+            Proto::Ws => MAGIC_WS,
+        })?;
+        Ok(Framed { stream, proto, sent_bytes: 4, recv_bytes: 0 })
+    }
+
+    /// Server side: accept an incoming stream and read its magic.
+    pub fn accept(mut stream: TcpStream) -> std::io::Result<Framed> {
+        stream.set_nodelay(true)?;
+        let mut magic = [0u8; 4];
+        stream.read_exact(&mut magic)?;
+        let proto = match &magic {
+            m if m == MAGIC_TCP => Proto::Tcp,
+            m if m == MAGIC_WS => Proto::Ws,
+            _ => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "bad protocol magic",
+                ))
+            }
+        };
+        Ok(Framed { stream, proto, sent_bytes: 0, recv_bytes: 4 })
+    }
+
+    pub fn proto(&self) -> Proto {
+        self.proto
+    }
+
+    /// Send one message (length-framed).
+    pub fn send(&mut self, msg: &Msg) -> std::io::Result<()> {
+        let body = self.proto.codec().encode(msg);
+        let len = (body.len() as u32).to_le_bytes();
+        self.stream.write_all(&len)?;
+        self.stream.write_all(&body)?;
+        self.sent_bytes += 4 + body.len() as u64;
+        Ok(())
+    }
+
+    /// Receive one message (blocking).
+    pub fn recv(&mut self) -> std::io::Result<Msg> {
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len)?;
+        let n = u32::from_le_bytes(len) as usize;
+        if n > 64 << 20 {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "frame too large"));
+        }
+        let mut body = vec![0u8; n];
+        self.stream.read_exact(&mut body)?;
+        self.recv_bytes += 4 + n as u64;
+        self.proto
+            .codec()
+            .decode(&body)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+    }
+
+    /// Split into a read half (this) and a locked write handle sharing the
+    /// same socket — the reader thread keeps `self`, the dispatcher writes
+    /// through the [`WriteHandle`].
+    pub fn split(self) -> std::io::Result<(Framed, WriteHandle)> {
+        let write_stream = self.stream.try_clone()?;
+        let handle = WriteHandle {
+            inner: Arc::new(Mutex::new(Framed {
+                stream: write_stream,
+                proto: self.proto,
+                sent_bytes: 0,
+                recv_bytes: 0,
+            })),
+        };
+        Ok((self, handle))
+    }
+
+    /// Shut down both directions (unblocks a reader in `recv`).
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Cloneable, locked write half of a connection.
+#[derive(Clone)]
+pub struct WriteHandle {
+    inner: Arc<Mutex<Framed>>,
+}
+
+impl WriteHandle {
+    pub fn send(&self, msg: &Msg) -> std::io::Result<()> {
+        self.inner.lock().expect("write handle poisoned").send(msg)
+    }
+
+    pub fn shutdown(&self) {
+        self.inner.lock().expect("write handle poisoned").shutdown();
+    }
+}
+
+/// The persistent-connection registry: executor id -> write handle.
+/// (The paper stores sockets "in a hash table based on executor ID".)
+#[derive(Clone, Default)]
+pub struct Registry {
+    conns: Arc<Mutex<HashMap<u64, WriteHandle>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn insert(&self, executor_id: u64, handle: WriteHandle) {
+        self.conns.lock().unwrap().insert(executor_id, handle);
+    }
+
+    pub fn remove(&self, executor_id: u64) -> Option<WriteHandle> {
+        self.conns.lock().unwrap().remove(&executor_id)
+    }
+
+    pub fn get(&self, executor_id: u64) -> Option<WriteHandle> {
+        self.conns.lock().unwrap().get(&executor_id).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.conns.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Broadcast (e.g. Shutdown) to all connections.
+    pub fn broadcast(&self, msg: &Msg) {
+        for handle in self.conns.lock().unwrap().values() {
+            let _ = handle.send(msg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair(proto: Proto) -> (Framed, Framed) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let client = std::thread::spawn(move || Framed::connect(&addr, proto).unwrap());
+        let (server_stream, _) = listener.accept().unwrap();
+        let server = Framed::accept(server_stream).unwrap();
+        (client.join().unwrap(), server)
+    }
+
+    #[test]
+    fn send_recv_roundtrip_tcp() {
+        let (mut c, mut s) = pair(Proto::Tcp);
+        c.send(&Msg::Register { executor_id: 42, cores: 4 }).unwrap();
+        assert_eq!(s.recv().unwrap(), Msg::Register { executor_id: 42, cores: 4 });
+        s.send(&Msg::Shutdown).unwrap();
+        assert_eq!(c.recv().unwrap(), Msg::Shutdown);
+    }
+
+    #[test]
+    fn ws_negotiated_by_magic() {
+        let (mut c, mut s) = pair(Proto::Ws);
+        assert_eq!(s.proto(), Proto::Ws);
+        c.send(&Msg::Heartbeat { executor_id: 1 }).unwrap();
+        assert_eq!(s.recv().unwrap(), Msg::Heartbeat { executor_id: 1 });
+    }
+
+    #[test]
+    fn many_messages_in_order() {
+        let (mut c, mut s) = pair(Proto::Tcp);
+        for i in 0..500u64 {
+            c.send(&Msg::Result { task_id: i, exit_code: 0, error: None }).unwrap();
+        }
+        for i in 0..500u64 {
+            match s.recv().unwrap() {
+                Msg::Result { task_id, .. } => assert_eq!(task_id, i),
+                m => panic!("unexpected {m:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn split_allows_concurrent_write() {
+        let (c, mut s) = pair(Proto::Tcp);
+        let (mut c_read, c_write) = c.split().unwrap();
+        let w2 = c_write.clone();
+        let t1 = std::thread::spawn(move || {
+            for _ in 0..100 {
+                c_write.send(&Msg::Heartbeat { executor_id: 1 }).unwrap();
+            }
+        });
+        let t2 = std::thread::spawn(move || {
+            for _ in 0..100 {
+                w2.send(&Msg::Heartbeat { executor_id: 2 }).unwrap();
+            }
+        });
+        let mut count = 0;
+        while count < 200 {
+            match s.recv().unwrap() {
+                Msg::Heartbeat { .. } => count += 1,
+                m => panic!("unexpected {m:?}"),
+            }
+        }
+        t1.join().unwrap();
+        t2.join().unwrap();
+        // The read half stays usable.
+        s.send(&Msg::Shutdown).unwrap();
+        assert_eq!(c_read.recv().unwrap(), Msg::Shutdown);
+    }
+
+    #[test]
+    fn registry_tracks_connections() {
+        let (c, _s) = pair(Proto::Tcp);
+        let (_read, write) = c.split().unwrap();
+        let reg = Registry::new();
+        reg.insert(5, write);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get(5).is_some());
+        assert!(reg.get(6).is_none());
+        reg.remove(5).unwrap();
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            use std::io::Write as _;
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"EVIL").unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        assert!(Framed::accept(stream).is_err());
+        t.join().unwrap();
+    }
+}

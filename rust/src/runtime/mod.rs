@@ -1,0 +1,226 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the live request path.
+//!
+//! Python/JAX runs only at build time (`make artifacts` →
+//! `artifacts/*.hlo.txt`); this module is the *only* consumer of those
+//! files. The interchange format is HLO **text**, not serialized protos —
+//! jax ≥ 0.5 emits 64-bit instruction ids that the crate's xla_extension
+//! 0.5.1 rejects, while the text parser reassigns ids (see
+//! DESIGN.md §Substitutions and /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled artifact: one PJRT executable per model variant.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+// The xla crate's handles are raw pointers without Send/Sync markers; the
+// PJRT CPU client is thread-safe for execution, and we additionally gate
+// all calls behind a Mutex in `ComputeRunner`/`Registry`.
+unsafe impl Send for Engine {}
+
+impl Engine {
+    /// Load and compile an HLO-text artifact on the CPU PJRT client.
+    pub fn load(client: &xla::PjRtClient, path: &Path, name: &str) -> anyhow::Result<Engine> {
+        anyhow::ensure!(path.exists(), "artifact not found: {} (run `make artifacts`)", path.display());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Engine { exe, name: name.to_string() })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 tensor inputs, returning the flattened f32 outputs
+    /// of the (single-tuple) result.
+    ///
+    /// `inputs`: (data, dims) pairs; dims follow the artifact's exported
+    /// signature.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims_i64)?);
+        }
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // jax lowerings in this repo use return_tuple=True.
+        let tuple = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(t.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Artifact registry: name → engine, loaded lazily from a directory.
+pub struct Registry {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    engines: Mutex<HashMap<String, &'static Engine>>,
+}
+
+// See `Engine`'s safety note.
+unsafe impl Send for Registry {}
+unsafe impl Sync for Registry {}
+
+impl Registry {
+    /// Open a registry over `dir` (usually `artifacts/`).
+    pub fn open(dir: impl Into<PathBuf>) -> anyhow::Result<Registry> {
+        Ok(Registry {
+            dir: dir.into(),
+            client: xla::PjRtClient::cpu()?,
+            engines: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact dir: `$FALKON_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> anyhow::Result<Registry> {
+        let dir = std::env::var("FALKON_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Registry::open(dir)
+    }
+
+    /// Get (loading + compiling on first use) the artifact `name`,
+    /// expected at `<dir>/<name>.hlo.txt`. Engines are compiled once and
+    /// leaked (they live for the process — one compile per variant).
+    pub fn get(&self, name: &str) -> anyhow::Result<&'static Engine> {
+        let mut map = self.engines.lock().unwrap();
+        if let Some(e) = map.get(name) {
+            return Ok(e);
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let engine = Box::leak(Box::new(Engine::load(&self.client, &path, name)?));
+        map.insert(name.to_string(), engine);
+        Ok(engine)
+    }
+
+    /// Artifact names available on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut v: Vec<String> = std::fs::read_dir(&self.dir)
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter_map(|e| {
+                e.file_name()
+                    .to_str()
+                    .and_then(|n| n.strip_suffix(".hlo.txt").map(String::from))
+            })
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// [`crate::falkon::exec::TaskRunner`] that executes `Compute` payloads
+/// through the PJRT registry and defers everything else to the default
+/// runner. This is the live executor's hot path: Python is *not* involved.
+pub struct ComputeRunner {
+    registry: Registry,
+    fallback: crate::falkon::exec::DefaultRunner,
+    /// Lock serializing executions (the CPU client is one device).
+    gate: Mutex<()>,
+    /// MARS batch size expected by the artifact.
+    pub mars_batch: usize,
+}
+
+impl ComputeRunner {
+    pub fn new(registry: Registry) -> ComputeRunner {
+        ComputeRunner {
+            registry,
+            fallback: crate::falkon::exec::DefaultRunner,
+            gate: Mutex::new(()),
+            mars_batch: crate::apps::mars::BATCH as usize,
+        }
+    }
+
+    /// Expand a task's (base arg, reps) into the batched parameter grid the
+    /// MARS artifact consumes: `reps` points marching from the base cell.
+    pub fn expand_args(&self, arg: [f64; 2], reps: u32) -> Vec<f32> {
+        let mut params = Vec::with_capacity(reps as usize * 2);
+        let side = (reps as f64).sqrt().ceil() as u32;
+        for i in 0..reps {
+            let (dx, dy) = (i % side, i / side);
+            params.push((arg[0] + dx as f64 * 1e-3) as f32);
+            params.push((arg[1] + dy as f64 * 1e-3) as f32);
+        }
+        params
+    }
+}
+
+impl crate::falkon::exec::TaskRunner for ComputeRunner {
+    fn run(
+        &self,
+        payload: &crate::falkon::task::TaskPayload,
+    ) -> Result<i32, crate::falkon::errors::TaskError> {
+        use crate::falkon::errors::TaskError;
+        use crate::falkon::task::TaskPayload;
+        match payload {
+            TaskPayload::Compute { artifact, reps, arg } => {
+                let engine = self
+                    .registry
+                    .get(artifact)
+                    .map_err(|_| TaskError::AppError(125))?;
+                let params = self.expand_args(*arg, *reps);
+                let n = *reps as usize;
+                let _g = self.gate.lock().unwrap();
+                let out = engine
+                    .run_f32(&[(&params, &[n, 2])])
+                    .map_err(|_| TaskError::AppError(120))?;
+                // Sanity: one output vector of n investments, all finite.
+                if out.is_empty() || out[0].len() != n || out[0].iter().any(|x| !x.is_finite()) {
+                    return Err(TaskError::AppError(121));
+                }
+                Ok(0)
+            }
+            other => self.fallback.run(other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lists_available_artifacts() {
+        let dir = std::env::temp_dir().join(format!("falkon-art-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m1.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("notes.md"), "x").unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.available(), vec!["m1".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn get_missing_artifact_errors_helpfully() {
+        let dir = std::env::temp_dir().join(format!("falkon-art2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = Registry::open(&dir).unwrap();
+        let err = match reg.get("nope") { Err(e) => e.to_string(), Ok(_) => panic!("expected error") };
+        assert!(err.contains("make artifacts"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn expand_args_covers_reps() {
+        let dir = std::env::temp_dir().join(format!("falkon-art3-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let runner = ComputeRunner::new(Registry::open(&dir).unwrap());
+        let params = runner.expand_args([0.3, 0.5], 144);
+        assert_eq!(params.len(), 288);
+        assert!((params[0] - 0.3).abs() < 1e-6);
+        // Distinct sub-points.
+        assert!(params.chunks(2).any(|c| (c[0] - 0.3).abs() > 1e-6));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,409 @@
+//! Processor-sharing shared link: the fluid-flow contention model behind
+//! the GPFS/NFS and interconnect simulations.
+//!
+//! `n` concurrent flows share `capacity` bits/s, each additionally capped
+//! at `per_flow` bits/s (the paper's per-processor ceiling: at 2048 CPUs
+//! the measured GPFS read share was 0.379 Mb/s/core). All active flows
+//! progress at the same instantaneous rate `min(per_flow, capacity/n)`.
+//!
+//! ## Implementation: uniform-progress accumulator, O(log n) per op
+//!
+//! Because every active flow progresses at the *same* rate, we track one
+//! scalar — `progress`, the integrated per-flow bits delivered since the
+//! link was created — and give each flow a completion *threshold*
+//! (`progress at start + flow bits`). Advancing time is O(1); the next
+//! completion is the smallest threshold (a min-heap); completions pop in
+//! O(log n). This replaced a per-flow O(n)-per-advance design that made
+//! 5760-core campaigns quadratic (EXPERIMENTS.md §Perf, L3-1).
+//!
+//! Owners advance the model to the current virtual time whenever
+//! membership changes and re-plan their completion event using the
+//! generation counter to invalidate stale ones.
+
+use super::engine::Time;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::HashMap;
+
+/// Identifier of an in-flight transfer.
+pub type FlowId = u64;
+
+/// Residual below which a flow counts as complete (bits).
+const EPS_BITS: f64 = 1e-6;
+
+/// Heap key ordered by completion threshold (ties by id for determinism).
+#[derive(PartialEq, Debug)]
+struct HeapEntry {
+    threshold: f64,
+    id: FlowId,
+}
+
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.threshold
+            .total_cmp(&other.threshold)
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+/// A processor-sharing link.
+#[derive(Debug)]
+pub struct SharedLink {
+    capacity_bps: f64,
+    per_flow_bps: f64,
+    /// Integrated per-flow bits since creation.
+    progress: f64,
+    /// Active flows: id -> completion threshold (progress units).
+    flows: HashMap<FlowId, f64>,
+    /// Min-heap of (threshold, id); entries for aborted flows are stale
+    /// and skipped lazily.
+    heap: BinaryHeap<Reverse<HeapEntry>>,
+    last: Time,
+    next_id: FlowId,
+    generation: u64,
+    /// Total bits actually delivered (for conservation checks).
+    delivered_bits: f64,
+}
+
+impl Clone for SharedLink {
+    fn clone(&self) -> Self {
+        SharedLink {
+            capacity_bps: self.capacity_bps,
+            per_flow_bps: self.per_flow_bps,
+            progress: self.progress,
+            flows: self.flows.clone(),
+            heap: self
+                .flows
+                .iter()
+                .map(|(&id, &threshold)| Reverse(HeapEntry { threshold, id }))
+                .collect(),
+            last: self.last,
+            next_id: self.next_id,
+            generation: self.generation,
+            delivered_bits: self.delivered_bits,
+        }
+    }
+}
+
+impl SharedLink {
+    /// A link with aggregate capacity `capacity_bps` and per-flow cap
+    /// `per_flow_bps` (use `f64::INFINITY` for no per-flow cap).
+    pub fn new(capacity_bps: f64, per_flow_bps: f64) -> SharedLink {
+        assert!(capacity_bps > 0.0);
+        assert!(per_flow_bps > 0.0);
+        SharedLink {
+            capacity_bps,
+            per_flow_bps,
+            progress: 0.0,
+            flows: HashMap::new(),
+            heap: BinaryHeap::new(),
+            last: 0,
+            next_id: 0,
+            generation: 0,
+            delivered_bits: 0.0,
+        }
+    }
+
+    pub fn capacity_bps(&self) -> f64 {
+        self.capacity_bps
+    }
+
+    /// Change the aggregate capacity (callers must [`SharedLink::advance`]
+    /// to the current time first so past progress is applied at the old
+    /// rate). Bumps the generation: completion events must be re-planned.
+    pub fn set_capacity(&mut self, capacity_bps: f64) {
+        assert!(capacity_bps > 0.0);
+        self.capacity_bps = capacity_bps;
+        self.generation += 1;
+    }
+
+    /// Number of active flows.
+    pub fn active(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Generation counter: bumped on every membership change. Events that
+    /// carry an older generation are stale and must be ignored.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Total bits delivered across all completed + partial flows.
+    pub fn delivered_bits(&self) -> f64 {
+        self.delivered_bits
+    }
+
+    /// Instantaneous per-flow rate.
+    pub fn per_flow_rate(&self) -> f64 {
+        if self.flows.is_empty() {
+            return 0.0;
+        }
+        self.per_flow_bps.min(self.capacity_bps / self.flows.len() as f64)
+    }
+
+    /// Advance the fluid model to `now`, applying progress to every flow.
+    /// O(1): one scalar update.
+    pub fn advance(&mut self, now: Time) {
+        assert!(now >= self.last, "link time must be monotone");
+        let dt = (now - self.last) as f64 / super::engine::SECS as f64;
+        self.last = now;
+        if dt == 0.0 || self.flows.is_empty() {
+            return;
+        }
+        let rate = self.per_flow_rate();
+        self.progress += rate * dt;
+        // Flows whose threshold was passed stopped early; the overshoot
+        // correction happens when they are drained in `take_completed`.
+        self.delivered_bits += rate * dt * self.flows.len() as f64;
+    }
+
+    /// Start a new flow of `bits` at time `now`. Returns its id and the new
+    /// generation (schedule your completion event stamped with it).
+    pub fn start(&mut self, now: Time, bits: f64) -> (FlowId, u64) {
+        assert!(bits >= 0.0);
+        self.advance(now);
+        let id = self.next_id;
+        self.next_id += 1;
+        let threshold = self.progress + bits;
+        self.flows.insert(id, threshold);
+        self.heap.push(Reverse(HeapEntry { threshold, id }));
+        self.generation += 1;
+        (id, self.generation)
+    }
+
+    /// Earliest completion time at current rates (None if idle).
+    pub fn next_completion(&mut self) -> Option<Time> {
+        self.drop_stale_heap_top();
+        let rate = self.per_flow_rate();
+        if rate <= 0.0 {
+            return None;
+        }
+        let Reverse(top) = self.heap.peek()?;
+        let remaining = (top.threshold - self.progress).max(0.0);
+        let dt_s = remaining / rate;
+        Some(self.last + super::engine::secs(dt_s).max(if remaining > EPS_BITS { 1 } else { 0 }))
+    }
+
+    fn drop_stale_heap_top(&mut self) {
+        while let Some(Reverse(top)) = self.heap.peek() {
+            match self.flows.get(&top.id) {
+                Some(&t) if t == top.threshold => break,
+                _ => {
+                    self.heap.pop();
+                }
+            }
+        }
+    }
+
+    /// Advance to `now` and drain all flows that have completed. Bumps the
+    /// generation iff any flow completed.
+    pub fn take_completed(&mut self, now: Time) -> Vec<FlowId> {
+        self.advance(now);
+        let mut done = Vec::new();
+        loop {
+            self.drop_stale_heap_top();
+            let Some(Reverse(top)) = self.heap.peek() else { break };
+            if top.threshold - self.progress > EPS_BITS {
+                break;
+            }
+            let Reverse(entry) = self.heap.pop().unwrap();
+            self.flows.remove(&entry.id);
+            // Overshoot correction: the flow stopped at its threshold,
+            // not at the advanced progress.
+            self.delivered_bits -= (self.progress - entry.threshold).max(0.0);
+            done.push(entry.id);
+        }
+        if !done.is_empty() {
+            self.generation += 1;
+        }
+        done
+    }
+
+    /// Abort a flow (e.g. failed node); returns true if it was active.
+    pub fn abort(&mut self, now: Time, id: FlowId) -> bool {
+        self.advance(now);
+        match self.flows.remove(&id) {
+            Some(threshold) => {
+                // The flow delivered min(progress, threshold) - start; the
+                // accumulator over-counts by any overshoot past threshold.
+                self.delivered_bits -= (self.progress - threshold).max(0.0);
+                self.generation += 1;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{secs, SECS};
+
+    #[test]
+    fn single_flow_runs_at_per_flow_cap() {
+        // 100 bits over a link with capacity 1000 b/s but per-flow cap 10 b/s.
+        let mut l = SharedLink::new(1000.0, 10.0);
+        let (_id, _g) = l.start(0, 100.0);
+        let t = l.next_completion().unwrap();
+        assert_eq!(t, secs(10.0));
+        let done = l.take_completed(t);
+        assert_eq!(done.len(), 1);
+    }
+
+    #[test]
+    fn capacity_shared_equally() {
+        // Two equal flows on a 100 b/s link: each gets 50 b/s.
+        let mut l = SharedLink::new(100.0, f64::INFINITY);
+        l.start(0, 100.0);
+        l.start(0, 100.0);
+        let t = l.next_completion().unwrap();
+        assert_eq!(t, secs(2.0));
+        assert_eq!(l.take_completed(t).len(), 2);
+    }
+
+    #[test]
+    fn membership_change_replans() {
+        // Flow A (100 bits) alone on a 100 b/s link; B (100 bits) joins at
+        // t=0.5s. A done at 1.5s; B at 2.0s.
+        let mut l = SharedLink::new(100.0, f64::INFINITY);
+        let (a, _) = l.start(0, 100.0);
+        let (_b, _) = l.start(secs(0.5), 100.0);
+        let t1 = l.next_completion().unwrap();
+        assert_eq!(t1, secs(1.5));
+        let done = l.take_completed(t1);
+        assert_eq!(done, vec![a]);
+        let t2 = l.next_completion().unwrap();
+        assert_eq!(t2, secs(2.0));
+        assert_eq!(l.take_completed(t2).len(), 1);
+    }
+
+    #[test]
+    fn generation_bumps_on_changes() {
+        let mut l = SharedLink::new(10.0, 10.0);
+        let g0 = l.generation();
+        let (id, g1) = l.start(0, 10.0);
+        assert!(g1 > g0);
+        assert!(l.abort(0, id));
+        assert!(l.generation() > g1);
+        assert!(!l.abort(0, id));
+    }
+
+    #[test]
+    fn conservation_under_churn() {
+        // Total delivered bits can never exceed capacity × elapsed.
+        let mut l = SharedLink::new(1_000.0, 400.0);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut t: Time = 0;
+        for _ in 0..200 {
+            t += rng.range(1, SECS);
+            if rng.chance(0.7) {
+                l.start(t, rng.uniform(1.0, 5_000.0));
+            }
+            l.take_completed(t);
+        }
+        l.advance(t);
+        let elapsed_s = t as f64 / SECS as f64;
+        assert!(
+            l.delivered_bits() <= 1_000.0 * elapsed_s + 1e-3,
+            "delivered {} > cap {}",
+            l.delivered_bits(),
+            1_000.0 * elapsed_s
+        );
+    }
+
+    #[test]
+    fn zero_byte_flow_completes_immediately() {
+        let mut l = SharedLink::new(100.0, 100.0);
+        l.start(secs(1.0), 0.0);
+        let t = l.next_completion().unwrap();
+        assert_eq!(t, secs(1.0));
+        assert_eq!(l.take_completed(t).len(), 1);
+    }
+
+    #[test]
+    fn per_flow_rate_respects_both_caps() {
+        let mut l = SharedLink::new(100.0, 30.0);
+        l.start(0, 1e9);
+        assert!((l.per_flow_rate() - 30.0).abs() < 1e-9); // capped per-flow
+        for _ in 0..9 {
+            l.start(0, 1e9);
+        }
+        assert!((l.per_flow_rate() - 10.0).abs() < 1e-9); // capacity/10
+    }
+
+    #[test]
+    fn delivered_bits_exact_for_completed_flows() {
+        let mut l = SharedLink::new(100.0, f64::INFINITY);
+        l.start(0, 100.0);
+        l.start(0, 300.0);
+        // Drive to full drain.
+        while l.active() > 0 {
+            let t = l.next_completion().unwrap();
+            l.take_completed(t);
+        }
+        assert!((l.delivered_bits() - 400.0).abs() < 1e-6, "{}", l.delivered_bits());
+    }
+
+    #[test]
+    fn abort_keeps_partial_delivery_accounting() {
+        let mut l = SharedLink::new(100.0, f64::INFINITY);
+        let (a, _) = l.start(0, 1_000.0);
+        l.abort(secs(2.0), a); // delivered 200 of 1000 bits
+        assert!((l.delivered_bits() - 200.0).abs() < 1e-6);
+        assert_eq!(l.active(), 0);
+        assert!(l.next_completion().is_none());
+    }
+
+    #[test]
+    fn many_flows_complete_in_threshold_order() {
+        let mut l = SharedLink::new(1_000.0, f64::INFINITY);
+        let mut ids = Vec::new();
+        for i in 1..=10u64 {
+            let (id, _) = l.start(0, 100.0 * i as f64);
+            ids.push(id);
+        }
+        let mut order = Vec::new();
+        while l.active() > 0 {
+            let t = l.next_completion().unwrap();
+            order.extend(l.take_completed(t));
+        }
+        assert_eq!(order, ids, "completion follows size order for same start");
+    }
+
+    /// Perf guard for the O(log n) design: 20K flows with heavy churn
+    /// must drain in well under a second (the old O(n)-per-advance design
+    /// took minutes at this scale).
+    #[test]
+    fn scales_to_tens_of_thousands_of_flows() {
+        let t0 = std::time::Instant::now();
+        let mut l = SharedLink::new(775e6, 6.2e6);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut t: Time = 0;
+        let mut completed = 0usize;
+        for i in 0..20_000u64 {
+            t += rng.range(1, SECS / 100);
+            l.start(t, rng.uniform(1e3, 1e7));
+            if i % 4 == 0 {
+                if let Some(next) = l.next_completion() {
+                    if next <= t {
+                        completed += l.take_completed(t).len();
+                    }
+                }
+            }
+        }
+        while l.active() > 0 {
+            let next = l.next_completion().unwrap();
+            t = t.max(next);
+            completed += l.take_completed(t).len();
+        }
+        assert_eq!(completed, 20_000);
+        assert!(t0.elapsed().as_millis() < 2_000, "took {:?}", t0.elapsed());
+    }
+}

@@ -1,0 +1,300 @@
+//! Machine topology descriptions — the paper's Table 2 testbeds, plus the
+//! calibration constants measured in §4 that parameterize the simulators.
+//!
+//! Everything here is *data*: the dynamics live in `fs::shared` (file
+//! system), `lrm::*` (allocation) and `falkon::simworld` (dispatch).
+
+/// Shared-filesystem flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsKind {
+    /// IBM GPFS behind per-PSET I/O nodes (BG/P).
+    Gpfs,
+    /// Single-server NFS (SiCortex).
+    Nfs,
+    /// Node-local disk/ram (ANL/UC workers, login hosts).
+    Local,
+}
+
+/// Shared-filesystem calibration profile (paper §4.3, Figs 11–13).
+#[derive(Clone, Debug)]
+pub struct FsProfile {
+    pub kind: FsKind,
+    /// Aggregate read capacity, bits/s (BG/P GPFS measured peak: 775 Mb/s).
+    pub read_bps: f64,
+    /// Aggregate capacity when reads and writes mix (measured 326 Mb/s).
+    pub readwrite_bps: f64,
+    /// Per-client (per-core) cap, bits/s.
+    pub per_client_bps: f64,
+    /// Number of I/O nodes funneling traffic (GPFS: 1 per PSET).
+    pub ions: usize,
+    /// Script invocations (open+stat+exec of a small script) per second
+    /// that one I/O node can serve (Fig 13: 109/s at 1 PSET).
+    pub script_invoke_per_ion_per_s: f64,
+    /// Metadata mutations (mkdir+rm pair) per second the metadata server
+    /// serves inside one PSET (Fig 13: ~44/s).
+    pub mkdir_rm_per_s: f64,
+    /// Collapse factor applied to metadata throughput when clients span
+    /// more than one PSET (Fig 13: 41/s -> 10/s going 256 -> 2048 procs).
+    pub metadata_cross_pset_factor: f64,
+    /// Fixed per-operation latency floor, seconds.
+    pub op_latency_s: f64,
+}
+
+impl FsProfile {
+    /// BG/P GPFS, calibrated to §4.3. `ions` scales with the allocation
+    /// (one I/O node per PSET).
+    pub fn gpfs(ions: usize) -> FsProfile {
+        FsProfile {
+            kind: FsKind::Gpfs,
+            read_bps: 775e6,
+            readwrite_bps: 326e6,
+            per_client_bps: 6.2e6, // saturates aggregate at ~128 clients
+            ions: ions.max(1),
+            script_invoke_per_ion_per_s: 109.0,
+            mkdir_rm_per_s: 44.0,
+            metadata_cross_pset_factor: 0.24, // 41 -> 10 tasks/s
+            op_latency_s: 1e-3,
+        }
+    }
+
+    /// SiCortex NFS: one server, 320 Mb/s read. The single server also
+    /// caps *request rate*: ~250 data ops/s (4 ms service each) — this,
+    /// not raw bandwidth, is what folds the synthetic DOCK screen at
+    /// ~3K processors: 2 ops/job x 3072 procs / 17.3 s ≈ 355 ops/s
+    /// crosses the cap between 1536 and 3072, exactly where Fig 14's
+    /// efficiency falls (DESIGN.md assumption A4).
+    pub fn nfs() -> FsProfile {
+        FsProfile {
+            kind: FsKind::Nfs,
+            read_bps: 320e6,
+            readwrite_bps: 200e6,
+            per_client_bps: 8e6,
+            ions: 1,
+            script_invoke_per_ion_per_s: 150.0,
+            mkdir_rm_per_s: 60.0,
+            metadata_cross_pset_factor: 1.0, // no PSET structure
+            op_latency_s: 4.0e-3,
+        }
+    }
+
+    /// ANL/UC cluster GPFS (3.4 Gb/s, Table 2).
+    pub fn cluster_gpfs() -> FsProfile {
+        FsProfile {
+            kind: FsKind::Gpfs,
+            read_bps: 3.4e9,
+            readwrite_bps: 1.7e9,
+            per_client_bps: 100e6,
+            ions: 4,
+            script_invoke_per_ion_per_s: 500.0,
+            mkdir_rm_per_s: 200.0,
+            metadata_cross_pset_factor: 1.0,
+            op_latency_s: 0.3e-3,
+        }
+    }
+
+    /// Node-local ramdisk: effectively unconstrained relative to GPFS
+    /// (the paper measures >1700 script invocations/s from ramdisk).
+    pub fn ramdisk() -> FsProfile {
+        FsProfile {
+            kind: FsKind::Local,
+            read_bps: 800e9,
+            readwrite_bps: 800e9,
+            per_client_bps: 8e9,
+            ions: usize::MAX,
+            script_invoke_per_ion_per_s: 1700.0, // per *node*, not shared
+            mkdir_rm_per_s: 50_000.0,
+            metadata_cross_pset_factor: 1.0,
+            op_latency_s: 20e-6,
+        }
+    }
+}
+
+/// A machine testbed (Table 2) plus §4 calibration constants.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub name: String,
+    pub nodes: usize,
+    pub cores_per_node: usize,
+    /// Allocation granularity: BG/P allocates PSETs of 64 nodes.
+    pub nodes_per_pset: Option<usize>,
+    /// Shared filesystem profile for a full-machine allocation.
+    pub fs: FsProfile,
+    /// Seconds to boot one compute node in isolation (§3: "multiple
+    /// seconds").
+    pub node_boot_secs: f64,
+    /// Additional serialized per-node boot cost when many nodes boot
+    /// concurrently (kernel image read contention on the shared FS —
+    /// "hundreds of seconds" for large allocations).
+    pub boot_serial_per_node_secs: f64,
+    /// Service-host CPU seconds per task dispatched over the C/TCP path
+    /// (Fig 6: BG/P 1758/s on BG/P.Login, SiCortex 3186/s on GTO.CI).
+    pub dispatch_tcp_secs: f64,
+    /// Service-host CPU seconds per task over the Java/WS path (604/s on
+    /// ANL/UC; unsupported — `None` — on BG/P and SiCortex compute nodes).
+    pub dispatch_ws_secs: Option<f64>,
+    /// Network round-trip between service and executors, seconds.
+    pub net_rtt_secs: f64,
+    /// Executor-side overhead to fork+exec a trivial task, seconds.
+    pub exec_overhead_secs: f64,
+}
+
+impl Machine {
+    /// Total processor cores.
+    pub fn cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+
+    /// Number of PSETs (1 if the machine has no PSET structure).
+    pub fn psets(&self) -> usize {
+        match self.nodes_per_pset {
+            Some(npp) => self.nodes.div_ceil(npp),
+            None => 1,
+        }
+    }
+
+    /// I/O nodes backing an allocation of `nodes` compute nodes.
+    pub fn ions_for(&self, nodes: usize) -> usize {
+        match self.nodes_per_pset {
+            Some(npp) => nodes.div_ceil(npp).max(1),
+            None => 1,
+        }
+    }
+
+    /// The reference BG/P available to the authors: 16 PSETs = 1024 nodes
+    /// = 4096 cores (quad-core PPC450 @ 850 MHz), GPFS, Cobalt.
+    pub fn bgp() -> Machine {
+        Machine::bgp_psets(16)
+    }
+
+    /// A BG/P sized to `psets` PSETs (640 = the full 160K-core ALCF
+    /// machine the paper projects to).
+    pub fn bgp_psets(psets: usize) -> Machine {
+        let nodes = psets * 64;
+        Machine {
+            name: format!("BG/P-{}c", nodes * 4),
+            nodes,
+            cores_per_node: 4,
+            nodes_per_pset: Some(64),
+            fs: FsProfile::gpfs(psets),
+            node_boot_secs: 5.0,
+            boot_serial_per_node_secs: 0.12,
+            dispatch_tcp_secs: 1.0 / 1758.0, // BG/P.Login: 4-core PPC 2.5 GHz
+            dispatch_ws_secs: None,          // no Java on BG/P compute nodes
+            net_rtt_secs: 150e-6,
+            exec_overhead_secs: 1.5e-3,
+        }
+    }
+
+    /// The SiCortex SC5832: 972 nodes × 6 MIPS64 cores, SLURM, NFS.
+    pub fn sicortex() -> Machine {
+        Machine {
+            name: "SiCortex-5832c".into(),
+            nodes: 972,
+            cores_per_node: 6,
+            nodes_per_pset: None,
+            fs: FsProfile::nfs(),
+            node_boot_secs: 0.0, // nodes stay up; SLURM allocates running nodes
+            boot_serial_per_node_secs: 0.0,
+            dispatch_tcp_secs: 1.0 / 3186.0, // service on GTO.CI (8-core Xeon)
+            dispatch_ws_secs: None,          // no Java on MIPS64 compute side
+            net_rtt_secs: 300e-6,
+            exec_overhead_secs: 1.0e-3,
+        }
+    }
+
+    /// The ANL/UC TeraGrid Linux cluster (200 usable CPUs in §4.2).
+    pub fn anluc() -> Machine {
+        Machine {
+            name: "ANL/UC-200c".into(),
+            nodes: 100,
+            cores_per_node: 2,
+            nodes_per_pset: None,
+            fs: FsProfile::cluster_gpfs(),
+            node_boot_secs: 0.0,
+            boot_serial_per_node_secs: 0.0,
+            dispatch_tcp_secs: 1.0 / 2534.0, // C executor / TCP, GTO.CI host
+            dispatch_ws_secs: Some(1.0 / 604.0), // Java executor / WS
+            net_rtt_secs: 200e-6,
+            exec_overhead_secs: 1.0e-3,
+        }
+    }
+
+    /// Restrict the machine to `cores` processor cores (whole nodes), as
+    /// the paper does when sweeping 1..2048 processors on the BG/P.
+    pub fn with_cores(&self, cores: usize) -> Machine {
+        let nodes = cores.div_ceil(self.cores_per_node).max(1);
+        let mut m = self.clone();
+        m.nodes = nodes;
+        // GPFS: I/O nodes scale with the allocation (1 per PSET).
+        if m.fs.kind == FsKind::Gpfs && self.nodes_per_pset.is_some() {
+            m.fs.ions = m.ions_for(nodes);
+        }
+        m.name = format!("{}[{}c]", self.name, cores.min(nodes * self.cores_per_node));
+        m
+    }
+}
+
+/// Render the Table 2 testbed summary (used by `bench_efficiency`).
+pub fn table2() -> Vec<Machine> {
+    vec![Machine::bgp(), Machine::sicortex(), Machine::anluc()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bgp_reference_shape() {
+        let m = Machine::bgp();
+        assert_eq!(m.nodes, 1024);
+        assert_eq!(m.cores(), 4096);
+        assert_eq!(m.psets(), 16);
+        assert_eq!(m.fs.ions, 16);
+        assert_eq!(m.fs.kind, FsKind::Gpfs);
+    }
+
+    #[test]
+    fn full_bgp_projection() {
+        let m = Machine::bgp_psets(640);
+        assert_eq!(m.cores(), 163_840); // the 160K-core ALCF machine
+    }
+
+    #[test]
+    fn sicortex_shape() {
+        let m = Machine::sicortex();
+        assert_eq!(m.cores(), 5832);
+        assert_eq!(m.psets(), 1);
+        assert_eq!(m.fs.kind, FsKind::Nfs);
+    }
+
+    #[test]
+    fn dispatch_rates_match_fig6_calibration() {
+        assert!((1.0 / Machine::bgp().dispatch_tcp_secs - 1758.0).abs() < 1.0);
+        assert!((1.0 / Machine::sicortex().dispatch_tcp_secs - 3186.0).abs() < 1.0);
+        assert!((1.0 / Machine::anluc().dispatch_tcp_secs - 2534.0).abs() < 1.0);
+        assert!((1.0 / Machine::anluc().dispatch_ws_secs.unwrap() - 604.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn with_cores_scales_ions() {
+        let m = Machine::bgp().with_cores(2048); // 512 nodes = 8 PSETs
+        assert_eq!(m.nodes, 512);
+        assert_eq!(m.fs.ions, 8);
+        let m1 = Machine::bgp().with_cores(4); // 1 node, still 1 ION
+        assert_eq!(m1.fs.ions, 1);
+    }
+
+    #[test]
+    fn ions_for_partial_psets() {
+        let m = Machine::bgp();
+        assert_eq!(m.ions_for(1), 1);
+        assert_eq!(m.ions_for(64), 1);
+        assert_eq!(m.ions_for(65), 2);
+        assert_eq!(m.ions_for(1024), 16);
+    }
+
+    #[test]
+    fn table2_lists_three_testbeds() {
+        assert_eq!(table2().len(), 3);
+    }
+}

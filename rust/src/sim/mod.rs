@@ -1,0 +1,16 @@
+//! Discrete-event simulation substrate.
+//!
+//! The paper's experiments run on machines we do not have (a 4096-core
+//! BG/P, a 5832-core SiCortex). Everything scale-dependent in this repo is
+//! therefore reproduced on a discrete-event simulator: [`engine`] is the
+//! event core, [`link`] the processor-sharing bandwidth model used for the
+//! shared-filesystem and network contention, and [`machine`] the machine
+//! topology descriptions from the paper's Table 2.
+
+pub mod engine;
+pub mod link;
+pub mod machine;
+
+pub use engine::{Scheduler, Time, SECS};
+pub use link::SharedLink;
+pub use machine::Machine;

@@ -1,0 +1,302 @@
+//! Dataflow execution engine with a persistent restart log.
+//!
+//! The engine repeatedly submits all *ready* steps (inputs available) to
+//! a [`Backend`], marks outputs as produced on success, and records
+//! completions in a restart log. Re-running a half-finished workflow
+//! re-executes only uncompleted steps — the paper's §3.3 point that with
+//! Swift "check-pointing occurs inherently with every task that
+//! completes".
+
+use crate::swift::script::Workflow;
+use std::collections::HashSet;
+use std::io::Write as _;
+use std::path::PathBuf;
+
+/// Where completed-step ids are durably recorded.
+pub trait RestartLog {
+    fn record(&mut self, step_id: &str);
+    fn completed(&self) -> HashSet<String>;
+}
+
+/// In-memory log (tests).
+#[derive(Default)]
+pub struct MemLog {
+    done: HashSet<String>,
+}
+
+impl RestartLog for MemLog {
+    fn record(&mut self, step_id: &str) {
+        self.done.insert(step_id.to_string());
+    }
+    fn completed(&self) -> HashSet<String> {
+        self.done.clone()
+    }
+}
+
+/// File-backed log: one step id per line, append-only, fsync-free (a lost
+/// tail only means re-executing a task — idempotent by design).
+pub struct FileLog {
+    path: PathBuf,
+    file: std::fs::File,
+    done: HashSet<String>,
+}
+
+impl FileLog {
+    pub fn open(path: impl Into<PathBuf>) -> std::io::Result<FileLog> {
+        let path = path.into();
+        let done: HashSet<String> = match std::fs::read_to_string(&path) {
+            Ok(text) => text.lines().map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect(),
+            Err(_) => HashSet::new(),
+        };
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(FileLog { path, file, done })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl RestartLog for FileLog {
+    fn record(&mut self, step_id: &str) {
+        if self.done.insert(step_id.to_string()) {
+            let _ = writeln!(self.file, "{step_id}");
+        }
+    }
+    fn completed(&self) -> HashSet<String> {
+        self.done.clone()
+    }
+}
+
+/// Execution backend: where steps actually run.
+pub trait Backend {
+    /// Submit the step at `idx` of the workflow.
+    fn submit(&mut self, wf: &Workflow, idx: usize);
+    /// Block until at least one submitted step finishes (or a backend
+    /// timeout elapses); returns (step index, success) pairs.
+    fn wait(&mut self) -> Vec<(usize, bool)>;
+}
+
+/// Result of running a workflow.
+#[derive(Debug, PartialEq)]
+pub struct RunReport {
+    pub executed: usize,
+    pub skipped_from_log: usize,
+    pub failed: usize,
+}
+
+/// Run `wf` over `backend`, resuming from `log`.
+pub fn run(
+    wf: &Workflow,
+    backend: &mut dyn Backend,
+    log: &mut dyn RestartLog,
+) -> anyhow::Result<RunReport> {
+    anyhow::ensure!(wf.is_dag(), "workflow has a dependency cycle");
+    let deps = wf.deps();
+    let already = log.completed();
+    let mut produced: HashSet<String> = wf.external_inputs();
+    let mut done = vec![false; wf.steps.len()];
+    let mut failed = vec![false; wf.steps.len()];
+    let mut submitted = vec![false; wf.steps.len()];
+    let mut skipped = 0;
+
+    // Replay the log.
+    for (i, s) in wf.steps.iter().enumerate() {
+        if already.contains(&s.id) {
+            done[i] = true;
+            skipped += 1;
+            for o in &s.outputs {
+                produced.insert(o.clone());
+            }
+        }
+    }
+
+    let mut executed = 0;
+    let mut in_flight = 0usize;
+    loop {
+        // Submit everything ready.
+        for i in 0..wf.steps.len() {
+            if done[i] || failed[i] || submitted[i] {
+                continue;
+            }
+            let ready = deps[i].iter().all(|&d| done[d])
+                && wf.steps[i].inputs.iter().all(|f| produced.contains(f));
+            if ready {
+                backend.submit(wf, i);
+                submitted[i] = true;
+                in_flight += 1;
+            }
+        }
+        if in_flight == 0 {
+            break;
+        }
+        // Collect completions.
+        let finished = backend.wait();
+        anyhow::ensure!(!finished.is_empty(), "backend stalled with {in_flight} steps in flight");
+        for (i, ok) in finished {
+            in_flight -= 1;
+            if ok {
+                done[i] = true;
+                executed += 1;
+                log.record(&wf.steps[i].id);
+                for o in &wf.steps[i].outputs {
+                    produced.insert(o.clone());
+                }
+            } else {
+                failed[i] = true;
+            }
+        }
+    }
+    Ok(RunReport {
+        executed,
+        skipped_from_log: skipped,
+        failed: failed.iter().filter(|f| **f).count(),
+    })
+}
+
+/// Test/bench backend: completes instantly, optionally failing chosen
+/// steps, recording submission order.
+#[derive(Default)]
+pub struct InstantBackend {
+    pub order: Vec<usize>,
+    pub fail_steps: HashSet<String>,
+    queue: Vec<(usize, bool)>,
+}
+
+impl Backend for InstantBackend {
+    fn submit(&mut self, wf: &Workflow, idx: usize) {
+        self.order.push(idx);
+        let ok = !self.fail_steps.contains(&wf.steps[idx].id);
+        self.queue.push((idx, ok));
+    }
+    fn wait(&mut self) -> Vec<(usize, bool)> {
+        std::mem::take(&mut self.queue)
+    }
+}
+
+/// Live backend: submits steps to a running Falkon [`Service`], mapping
+/// each app invocation to a payload via `to_payload`.
+pub struct FalkonBackend<'a> {
+    pub service: &'a crate::falkon::service::Service,
+    pub to_payload: Box<
+        dyn Fn(&crate::swift::script::AppDecl, &crate::swift::script::Step) -> crate::falkon::task::TaskPayload
+            + 'a,
+    >,
+    pub timeout: std::time::Duration,
+    task_to_step: std::collections::HashMap<crate::falkon::task::TaskId, usize>,
+}
+
+impl<'a> FalkonBackend<'a> {
+    pub fn new(
+        service: &'a crate::falkon::service::Service,
+        to_payload: impl Fn(&crate::swift::script::AppDecl, &crate::swift::script::Step) -> crate::falkon::task::TaskPayload
+            + 'a,
+    ) -> FalkonBackend<'a> {
+        FalkonBackend {
+            service,
+            to_payload: Box::new(to_payload),
+            timeout: std::time::Duration::from_secs(60),
+            task_to_step: Default::default(),
+        }
+    }
+}
+
+impl Backend for FalkonBackend<'_> {
+    fn submit(&mut self, wf: &Workflow, idx: usize) {
+        let step = &wf.steps[idx];
+        let app = &wf.apps[&step.app];
+        let id = self.service.submit((self.to_payload)(app, step));
+        self.task_to_step.insert(id, idx);
+    }
+    fn wait(&mut self) -> Vec<(usize, bool)> {
+        let outcomes = self.service.poll_outcomes(self.timeout);
+        outcomes
+            .into_iter()
+            .filter_map(|o| self.task_to_step.remove(&o.id).map(|idx| (idx, o.ok())))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::swift::script::Workflow;
+
+    const WF: &str = r#"
+app gen exec=1 write=100
+app consume exec=1 read=100 write=10
+task g1 app=gen out=data/a
+task g2 app=gen out=data/b
+task c1 app=consume in=data/a,data/b out=out/final
+"#;
+
+    #[test]
+    fn respects_dataflow_order() {
+        let wf = Workflow::parse(WF).unwrap();
+        let mut be = InstantBackend::default();
+        let mut log = MemLog::default();
+        let report = run(&wf, &mut be, &mut log).unwrap();
+        assert_eq!(report.executed, 3);
+        // c1 (index 2) must come after both producers.
+        assert_eq!(be.order.last(), Some(&2));
+    }
+
+    #[test]
+    fn restart_skips_completed_steps() {
+        let wf = Workflow::parse(WF).unwrap();
+        let mut log = MemLog::default();
+        log.record("g1");
+        let mut be = InstantBackend::default();
+        let report = run(&wf, &mut be, &mut log).unwrap();
+        assert_eq!(report.skipped_from_log, 1);
+        assert_eq!(report.executed, 2);
+        assert!(!be.order.contains(&0));
+    }
+
+    #[test]
+    fn failure_blocks_dependents_only() {
+        let wf = Workflow::parse(WF).unwrap();
+        let mut be = InstantBackend::default();
+        be.fail_steps.insert("g1".into());
+        let mut log = MemLog::default();
+        let report = run(&wf, &mut be, &mut log).unwrap();
+        assert_eq!(report.failed, 1);
+        // g2 executed; c1 never ready.
+        assert_eq!(report.executed, 1);
+        assert!(!log.completed().contains("c1"));
+    }
+
+    #[test]
+    fn file_log_persists_across_runs() {
+        let dir = std::env::temp_dir().join(format!("falkon-swiftlog-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("restart.log");
+        let _ = std::fs::remove_file(&path);
+        let wf = Workflow::parse(WF).unwrap();
+        {
+            let mut log = FileLog::open(&path).unwrap();
+            let mut be = InstantBackend::default();
+            be.fail_steps.insert("g2".into());
+            let r = run(&wf, &mut be, &mut log).unwrap();
+            assert_eq!(r.executed, 1); // only g1 (c1 blocked)
+        }
+        {
+            let mut log = FileLog::open(&path).unwrap();
+            let mut be = InstantBackend::default();
+            let r = run(&wf, &mut be, &mut log).unwrap();
+            assert_eq!(r.skipped_from_log, 1);
+            assert_eq!(r.executed, 2); // g2 then c1
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_cyclic_workflow() {
+        let wf =
+            Workflow::parse("app a exec=1\ntask t1 app=a in=y out=x\ntask t2 app=a in=x out=y")
+                .unwrap();
+        let mut be = InstantBackend::default();
+        let mut log = MemLog::default();
+        assert!(run(&wf, &mut be, &mut log).is_err());
+    }
+}

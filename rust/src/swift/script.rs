@@ -1,0 +1,328 @@
+//! Workflow specification: apps, steps, file dataflow — plus a compact
+//! text DSL for scripting sweeps (SwiftScript's role, radically reduced).
+//!
+//! DSL grammar (one statement per line, `#` comments):
+//!
+//! ```text
+//! app dock exec=660 read=10000 write=20000 objects=dock5.bin:5000000,static.dat:35000000
+//! task t1 app=dock in=input/lig1.mol2 out=out/lig1.score
+//! sweep app=dock n=100 in=input/lig{}.mol2 out=out/lig{}.score
+//! chain app=summarize in=out/lig0.score,out/lig1.score out=final/report.txt
+//! ```
+//!
+//! `sweep` expands `{}` with 0..n; files create edges: a step becomes
+//! ready when all its inputs exist (initially-external inputs are assumed
+//! present).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// An application declaration with its execution profile.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppDecl {
+    pub name: String,
+    /// Mean compute seconds (the engine/backends may randomize around it).
+    pub exec_secs: f64,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    /// Cacheable objects (binary + static data): (name, bytes).
+    pub objects: Vec<(String, u64)>,
+}
+
+/// One step: an app invocation consuming/producing files.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Step {
+    pub id: String,
+    pub app: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// A parsed workflow.
+#[derive(Clone, Debug, Default)]
+pub struct Workflow {
+    pub apps: BTreeMap<String, AppDecl>,
+    pub steps: Vec<Step>,
+}
+
+/// Parse error with line context.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+/// Parse `key=value` fields from whitespace-separated tokens.
+fn fields(tokens: &[&str], line: usize) -> Result<HashMap<String, String>, ParseError> {
+    tokens
+        .iter()
+        .map(|t| {
+            t.split_once('=')
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .ok_or_else(|| err(line, format!("expected key=value, got {t:?}")))
+        })
+        .collect()
+}
+
+impl Workflow {
+    /// Parse the DSL.
+    pub fn parse(text: &str) -> Result<Workflow, ParseError> {
+        let mut wf = Workflow::default();
+        let mut auto_id = 0usize;
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let tokens: Vec<&str> = line.split_whitespace().collect();
+            match tokens[0] {
+                "app" => {
+                    let name = tokens.get(1).ok_or_else(|| err(line_no, "app needs a name"))?;
+                    if name.contains('=') {
+                        return Err(err(line_no, "app needs a name before fields"));
+                    }
+                    let f = fields(&tokens[2..], line_no)?;
+                    let objects = f
+                        .get("objects")
+                        .map(|s| {
+                            s.split(',')
+                                .filter(|p| !p.is_empty())
+                                .map(|p| {
+                                    let (k, b) = p
+                                        .split_once(':')
+                                        .ok_or_else(|| err(line_no, "objects need name:bytes"))?;
+                                    Ok((
+                                        k.to_string(),
+                                        b.parse::<u64>()
+                                            .map_err(|_| err(line_no, "bad object bytes"))?,
+                                    ))
+                                })
+                                .collect::<Result<Vec<_>, ParseError>>()
+                        })
+                        .transpose()?
+                        .unwrap_or_default();
+                    let parse_num = |key: &str, default: f64| -> Result<f64, ParseError> {
+                        f.get(key)
+                            .map(|v| v.parse::<f64>().map_err(|_| err(line_no, format!("bad {key}"))))
+                            .unwrap_or(Ok(default))
+                    };
+                    wf.apps.insert(
+                        name.to_string(),
+                        AppDecl {
+                            name: name.to_string(),
+                            exec_secs: parse_num("exec", 0.0)?,
+                            read_bytes: parse_num("read", 0.0)? as u64,
+                            write_bytes: parse_num("write", 0.0)? as u64,
+                            objects,
+                        },
+                    );
+                }
+                "task" | "chain" => {
+                    let (id, rest) = if tokens[0] == "task" {
+                        let id =
+                            tokens.get(1).ok_or_else(|| err(line_no, "task needs an id"))?;
+                        if id.contains('=') {
+                            return Err(err(line_no, "task needs an id before fields"));
+                        }
+                        (id.to_string(), &tokens[2..])
+                    } else {
+                        auto_id += 1;
+                        (format!("chain-{auto_id}"), &tokens[1..])
+                    };
+                    let f = fields(rest, line_no)?;
+                    let app = f.get("app").ok_or_else(|| err(line_no, "missing app="))?;
+                    if !wf.apps.contains_key(app) {
+                        return Err(err(line_no, format!("unknown app {app:?}")));
+                    }
+                    let split = |k: &str| -> Vec<String> {
+                        f.get(k)
+                            .map(|s| s.split(',').filter(|x| !x.is_empty()).map(String::from).collect())
+                            .unwrap_or_default()
+                    };
+                    wf.steps.push(Step {
+                        id,
+                        app: app.clone(),
+                        inputs: split("in"),
+                        outputs: split("out"),
+                    });
+                }
+                "sweep" => {
+                    let f = fields(&tokens[1..], line_no)?;
+                    let app = f.get("app").ok_or_else(|| err(line_no, "missing app="))?;
+                    if !wf.apps.contains_key(app) {
+                        return Err(err(line_no, format!("unknown app {app:?}")));
+                    }
+                    let n: usize = f
+                        .get("n")
+                        .ok_or_else(|| err(line_no, "missing n="))?
+                        .parse()
+                        .map_err(|_| err(line_no, "bad n"))?;
+                    let pat_in = f.get("in").cloned().unwrap_or_default();
+                    let pat_out = f.get("out").cloned().unwrap_or_default();
+                    for k in 0..n {
+                        let sub = |p: &str| -> Vec<String> {
+                            if p.is_empty() {
+                                vec![]
+                            } else {
+                                vec![p.replace("{}", &k.to_string())]
+                            }
+                        };
+                        wf.steps.push(Step {
+                            id: format!("{app}-{k}"),
+                            app: app.clone(),
+                            inputs: sub(&pat_in),
+                            outputs: sub(&pat_out),
+                        });
+                    }
+                }
+                other => return Err(err(line_no, format!("unknown statement {other:?}"))),
+            }
+        }
+        wf.validate()?;
+        Ok(wf)
+    }
+
+    /// Check step-id uniqueness and single-producer file discipline.
+    fn validate(&self) -> Result<(), ParseError> {
+        let mut ids = HashSet::new();
+        let mut producers: HashMap<&str, &str> = HashMap::new();
+        for s in &self.steps {
+            if !ids.insert(&s.id) {
+                return Err(err(0, format!("duplicate step id {:?}", s.id)));
+            }
+            for o in &s.outputs {
+                if let Some(prev) = producers.insert(o, &s.id) {
+                    return Err(err(
+                        0,
+                        format!("file {o:?} produced by both {prev:?} and {:?}", s.id),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Files consumed but never produced (assumed to exist externally).
+    pub fn external_inputs(&self) -> HashSet<String> {
+        let produced: HashSet<&String> = self.steps.iter().flat_map(|s| &s.outputs).collect();
+        self.steps
+            .iter()
+            .flat_map(|s| &s.inputs)
+            .filter(|f| !produced.contains(f))
+            .cloned()
+            .collect()
+    }
+
+    /// Dependency edges: step index -> indices it depends on.
+    pub fn deps(&self) -> Vec<Vec<usize>> {
+        let producer: HashMap<&String, usize> = self
+            .steps
+            .iter()
+            .enumerate()
+            .flat_map(|(i, s)| s.outputs.iter().map(move |o| (o, i)))
+            .collect();
+        self.steps
+            .iter()
+            .map(|s| {
+                s.inputs
+                    .iter()
+                    .filter_map(|f| producer.get(f).copied())
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// True if the dependency graph is acyclic.
+    pub fn is_dag(&self) -> bool {
+        let deps = self.deps();
+        let n = deps.len();
+        let mut state = vec![0u8; n]; // 0 unvisited, 1 in-stack, 2 done
+        fn visit(i: usize, deps: &[Vec<usize>], state: &mut [u8]) -> bool {
+            match state[i] {
+                1 => return false,
+                2 => return true,
+                _ => {}
+            }
+            state[i] = 1;
+            for &d in &deps[i] {
+                if !visit(d, deps, state) {
+                    return false;
+                }
+            }
+            state[i] = 2;
+            true
+        }
+        (0..n).all(|i| visit(i, &deps, &mut state))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOCK_WF: &str = r#"
+# DOCK campaign
+app dock exec=660 read=10000 write=20000 objects=dock5.bin:5000000,static.dat:35000000
+sweep app=dock n=10 in=input/lig{}.mol2 out=out/lig{}.score
+app summarize exec=5 read=0 write=1000
+chain app=summarize in=out/lig0.score,out/lig1.score out=final/report.txt
+"#;
+
+    #[test]
+    fn parses_apps_and_sweep() {
+        let wf = Workflow::parse(DOCK_WF).unwrap();
+        assert_eq!(wf.apps.len(), 2);
+        assert_eq!(wf.steps.len(), 11);
+        let dock = &wf.apps["dock"];
+        assert_eq!(dock.exec_secs, 660.0);
+        assert_eq!(dock.objects.len(), 2);
+        assert_eq!(dock.objects[1], ("static.dat".to_string(), 35_000_000));
+    }
+
+    #[test]
+    fn dataflow_edges_derived_from_files() {
+        let wf = Workflow::parse(DOCK_WF).unwrap();
+        let deps = wf.deps();
+        // The chain step depends on dock-0 and dock-1.
+        let chain_idx = wf.steps.iter().position(|s| s.app == "summarize").unwrap();
+        assert_eq!(deps[chain_idx].len(), 2);
+        assert!(wf.is_dag());
+        // lig inputs are external.
+        assert!(wf.external_inputs().contains("input/lig3.mol2"));
+    }
+
+    #[test]
+    fn rejects_unknown_app_and_dup_producer() {
+        assert!(Workflow::parse("task t1 app=nope").is_err());
+        let dup = "app a exec=1\ntask t1 app=a out=x\ntask t2 app=a out=x";
+        let e = Workflow::parse(dup).unwrap_err();
+        assert!(e.msg.contains("produced by both"), "{e}");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Workflow::parse("frobnicate x").is_err());
+        assert!(Workflow::parse("app").is_err());
+        assert!(Workflow::parse("app a exec=notanumber").is_err());
+        assert!(Workflow::parse("sweep app=a n=2").is_err()); // unknown app
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let wf = Workflow::parse("# nothing\n\napp a exec=1 # trailing\n").unwrap();
+        assert_eq!(wf.apps.len(), 1);
+        assert!(wf.steps.is_empty());
+    }
+
+    #[test]
+    fn detects_cycles() {
+        let cyclic = "app a exec=1\ntask t1 app=a in=y out=x\ntask t2 app=a in=x out=y";
+        let wf = Workflow::parse(cyclic).unwrap();
+        assert!(!wf.is_dag());
+    }
+}

@@ -1,0 +1,182 @@
+//! The Swift wrapper-script cost model (§5.2).
+//!
+//! Every Swift task runs inside a wrapper that (1) creates a per-task
+//! working directory, (2) stages input data in and output data out, and
+//! (3) maintains per-task status log files. With default settings all
+//! three hit the shared filesystem — the paper measured MARS at only
+//! **20%** efficiency on 2048 cores. Three optimizations move them to the
+//! node-local ramdisk and lift efficiency to **70%**:
+//!
+//! 1. temporary (working) directories on ramdisk, not the shared FS;
+//! 2. input data copied to ramdisk once per job, so the application's
+//!    (possibly repeated) reads are local;
+//! 3. status logs written on ramdisk and copied back once at completion
+//!    instead of appending to a shared-FS file at every state change.
+
+use crate::falkon::simworld::{SimTask, WorldConfig};
+use crate::swift::script::AppDecl;
+
+/// Wrapper placement choices (true = the §5.2 optimization is ON).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WrapperConfig {
+    /// Optimization 1: per-task workdir on ramdisk.
+    pub workdir_on_ramdisk: bool,
+    /// Optimization 2: stage input to ramdisk once per job.
+    pub stage_input_to_ramdisk: bool,
+    /// Optimization 3: logs on ramdisk, copied back at completion.
+    pub logs_on_ramdisk: bool,
+}
+
+impl WrapperConfig {
+    /// Swift's default behaviour (everything on the shared FS) — the 20%
+    /// configuration.
+    pub fn default_shared() -> WrapperConfig {
+        WrapperConfig {
+            workdir_on_ramdisk: false,
+            stage_input_to_ramdisk: false,
+            logs_on_ramdisk: false,
+        }
+    }
+
+    /// All three optimizations on — the 70% configuration.
+    pub fn optimized() -> WrapperConfig {
+        WrapperConfig {
+            workdir_on_ramdisk: true,
+            stage_input_to_ramdisk: true,
+            logs_on_ramdisk: true,
+        }
+    }
+}
+
+/// Status-log writes per task when logging to the shared FS (submit /
+/// active / done appends).
+pub const LOG_APPENDS_SHARED: u32 = 3;
+/// Bytes per status append.
+pub const LOG_APPEND_BYTES: u64 = 1024;
+/// Re-read factor for unstaged input: the app reads its input from the
+/// shared FS with non-sequential access, costing ~2× the staged copy
+/// (DESIGN.md assumption A3).
+pub const UNSTAGED_REREAD_FACTOR: u64 = 2;
+/// Wrapper busywork measured by the paper (§5.2): per-micro-run time
+/// inflates 0.454 s → 0.602 s under the *optimized* wrapper — local
+/// sandbox setup, data copies, status handling on the compute node.
+pub const WRAPPER_COMPUTE_FACTOR: f64 = 0.602 / 0.454;
+
+/// Wrap an app invocation into the [`SimTask`] the simulator executes,
+/// applying the wrapper cost model under `cfg`.
+pub fn wrap_task(app: &AppDecl, cfg: WrapperConfig) -> SimTask {
+    let mut t = SimTask {
+        exec_secs: app.exec_secs,
+        read_bytes: app.read_bytes,
+        write_bytes: app.write_bytes,
+        desc_len: 64 + app.name.len(),
+        // Objects are cache-managed by the world (keys must be 'static:
+        // we intern app object names).
+        objects: app
+            .objects
+            .iter()
+            .map(|(k, b)| (intern(k), *b))
+            .collect(),
+        mkdirs: 2,          // sandbox create + cleanup (two metadata mutations)
+        script_invokes: 2,  // wrapper script + application launch
+        ..Default::default()
+    };
+    // Wrapper busywork occupies the core regardless of placement (§5.2's
+    // measured 0.454 → 0.602 s micro-run inflation).
+    t.exec_secs *= WRAPPER_COMPUTE_FACTOR;
+    if !cfg.stage_input_to_ramdisk {
+        t.read_bytes *= UNSTAGED_REREAD_FACTOR;
+    }
+    if !cfg.logs_on_ramdisk {
+        // One small shared-FS write per status change, each paying the
+        // per-op server cost.
+        t.log_appends = LOG_APPENDS_SHARED;
+    } else {
+        // One copy-back of the final log, folded into write_bytes.
+        t.write_bytes += LOG_APPEND_BYTES;
+    }
+    t
+}
+
+/// Apply wrapper placement to the world configuration (where the wrapper's
+/// mkdirs and script invocations land).
+pub fn apply_to_world(cfg: WrapperConfig, world: &mut WorldConfig) {
+    world.mkdirs_on_ramdisk = cfg.workdir_on_ramdisk;
+    world.scripts_from_ramdisk = cfg.workdir_on_ramdisk;
+    world.caching = cfg.stage_input_to_ramdisk;
+}
+
+/// Intern object-name strings (SimTask wants `&'static str` keys so the
+/// hot path never clones).
+fn intern(s: &str) -> &'static str {
+    use std::collections::HashSet;
+    use std::sync::{Mutex, OnceLock};
+    static POOL: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+    let pool = POOL.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut guard = pool.lock().unwrap();
+    if let Some(&existing) = guard.get(s) {
+        return existing;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    guard.insert(leaked);
+    leaked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mars_app() -> AppDecl {
+        AppDecl {
+            name: "mars".into(),
+            exec_secs: 65.4,
+            read_bytes: 1024,
+            write_bytes: 1024,
+            objects: vec![("mars.bin".into(), 500_000), ("static.dat".into(), 15_000)],
+        }
+    }
+
+    #[test]
+    fn optimized_wrapper_minimizes_shared_ops() {
+        let t = wrap_task(&mars_app(), WrapperConfig::optimized());
+        assert_eq!(t.read_bytes, 1024, "staged input reads once");
+        assert_eq!(t.mkdirs, 2);
+        assert_eq!(t.log_appends, 0);
+        assert_eq!(t.write_bytes, 1024 + LOG_APPEND_BYTES);
+        // Busywork factor applied: 65.4 s -> ~86.7 s.
+        assert!((t.exec_secs - 65.4 * WRAPPER_COMPUTE_FACTOR).abs() < 1e-6);
+    }
+
+    #[test]
+    fn default_wrapper_pays_shared_costs() {
+        let t = wrap_task(&mars_app(), WrapperConfig::default_shared());
+        assert_eq!(t.read_bytes, 1024 * UNSTAGED_REREAD_FACTOR);
+        assert_eq!(t.mkdirs, 2);
+        assert_eq!(t.log_appends, LOG_APPENDS_SHARED);
+        assert_eq!(t.write_bytes, 1024);
+    }
+
+    #[test]
+    fn objects_survive_wrapping() {
+        let t = wrap_task(&mars_app(), WrapperConfig::optimized());
+        assert_eq!(t.objects.len(), 2);
+        assert_eq!(t.objects[0].0, "mars.bin");
+        assert_eq!(t.objects[1].1, 15_000);
+    }
+
+    #[test]
+    fn interning_is_stable() {
+        let a = intern("same-key");
+        let b = intern("same-key");
+        assert!(std::ptr::eq(a, b));
+    }
+
+    #[test]
+    fn world_flags_follow_wrapper() {
+        let mut w = WorldConfig::new(crate::sim::machine::Machine::bgp(), 64);
+        apply_to_world(WrapperConfig::default_shared(), &mut w);
+        assert!(!w.mkdirs_on_ramdisk && !w.scripts_from_ramdisk && !w.caching);
+        apply_to_world(WrapperConfig::optimized(), &mut w);
+        assert!(w.mkdirs_on_ramdisk && w.scripts_from_ramdisk && w.caching);
+    }
+}

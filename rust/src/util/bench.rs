@@ -1,0 +1,195 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iteration with mean/std/throughput reporting,
+//! and table helpers so every bench binary prints the paper's rows next to
+//! our measured ones in a consistent format that EXPERIMENTS.md records.
+
+use std::time::{Duration, Instant};
+
+/// Result of one timed measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    /// Events-per-second for a measurement of `events` events per iter.
+    pub fn rate(&self, events: f64) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            return 0.0;
+        }
+        events / self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs and `iters` measured runs.
+pub fn time<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, &samples)
+}
+
+/// Run `f` repeatedly until `budget` elapses (at least once); returns stats.
+pub fn time_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Measurement {
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if start.elapsed() >= budget {
+            break;
+        }
+    }
+    summarize(name, &samples)
+}
+
+fn summarize(name: &str, samples: &[Duration]) -> Measurement {
+    let secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+    let mean = crate::util::stats::mean(&secs);
+    let std = crate::util::stats::std_dev(&secs);
+    let min = secs.iter().cloned().fold(f64::INFINITY, f64::min);
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len() as u32,
+        mean: Duration::from_secs_f64(mean),
+        std: Duration::from_secs_f64(std),
+        min: Duration::from_secs_f64(if min.is_finite() { min } else { 0.0 }),
+    }
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&line(&self.headers, &w));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format seconds human-readably for tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.2}h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.1}m", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Section banner used by every bench binary.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_counts_iters() {
+        let mut n = 0u32;
+        let m = time("noop", 2, 5, || n += 1);
+        assert_eq!(m.iters, 5);
+        assert_eq!(n, 7); // warmup + iters
+        assert!(m.mean >= m.min);
+    }
+
+    #[test]
+    fn rate_math() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(100),
+            std: Duration::ZERO,
+            min: Duration::from_millis(100),
+        };
+        assert!((m.rate(1000.0) - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["sys", "tasks/s"]);
+        t.row(&["BG/P".into(), "1758".into()]);
+        t.row(&["SiCortex".into(), "3186".into()]);
+        let s = t.render();
+        assert!(s.contains("BG/P"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_width() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(7200.0), "2.00h");
+        assert_eq!(fmt_secs(90.0), "1.5m");
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.004), "4.00ms");
+        assert_eq!(fmt_secs(0.0000042), "4.2us");
+    }
+}

@@ -1,0 +1,166 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declared option for usage rendering.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parse an argv-style iterator (not including the program name).
+///
+/// An argument `--k` followed by a value that does not start with `--` is
+/// treated as `--k value` when `k` is not in `known_flags`; otherwise it is
+/// a bare flag.
+pub fn parse<I: IntoIterator<Item = String>>(argv: I, known_flags: &[&str]) -> Args {
+    let mut out = Args::default();
+    let mut it = argv.into_iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(body) = a.strip_prefix("--") {
+            if let Some((k, v)) = body.split_once('=') {
+                out.opts.insert(k.to_string(), v.to_string());
+            } else if known_flags.contains(&body) {
+                out.flags.push(body.to_string());
+            } else if let Some(next) = it.peek() {
+                if next.starts_with("--") {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                }
+            } else {
+                out.flags.push(body.to_string());
+            }
+        } else {
+            out.positional.push(a);
+        }
+    }
+    out
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping program name).
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Typed getter with default; exits with a message on a malformed value
+    /// (CLI surface — not used by library code).
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{name} expects a {}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Fallible typed getter (library-friendly).
+    pub fn try_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse {s:?}")),
+        }
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(cmd: &str, about: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUSAGE: {cmd} [OPTIONS]\n\nOPTIONS:\n");
+    for o in opts {
+        let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  --{:<22} {}{}\n", o.name, o.help, d));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = parse(argv(&["--procs", "2048", "--len=4.5"]), &[]);
+        assert_eq!(a.get("procs"), Some("2048"));
+        assert_eq!(a.get("len"), Some("4.5"));
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = parse(argv(&["run", "--verbose", "--n", "5", "x.hlo"]), &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "x.hlo".to_string()]);
+        assert_eq!(a.get("n"), Some("5"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(argv(&["--fast"]), &[]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(argv(&["--a", "--b", "1"]), &[]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("1"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(argv(&["--n", "7"]), &[]);
+        assert_eq!(a.parse_or("n", 0usize), 7);
+        assert_eq!(a.parse_or("missing", 3usize), 3);
+        assert_eq!(a.try_parse::<f64>("n").unwrap(), Some(7.0));
+        assert!(a.try_parse::<f64>("missing").unwrap().is_none());
+    }
+
+    #[test]
+    fn usage_renders_defaults() {
+        let u = usage(
+            "falkon bench",
+            "Run a bench",
+            &[OptSpec { name: "procs", help: "processor count", default: Some("2048") }],
+        );
+        assert!(u.contains("--procs"));
+        assert!(u.contains("[default: 2048]"));
+    }
+}

@@ -1,0 +1,196 @@
+//! Minimal layered configuration: a TOML-subset parser (sections,
+//! `key = value` with string/number/bool/string-array values, `#` comments)
+//! plus typed accessors and override merging. Used by the launcher to load
+//! machine/service profiles (`configs/*.toml`).
+
+use std::collections::BTreeMap;
+
+/// A parsed configuration: `section.key -> raw value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<String>),
+}
+
+impl Config {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = sec.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            cfg.values.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    /// Merge `other` over `self` (other wins).
+    pub fn merge(&mut self, other: Config) {
+        self.values.extend(other.values);
+    }
+
+    /// Apply a `--set section.key=value` style override.
+    pub fn set_override(&mut self, spec: &str) -> Result<(), String> {
+        let (k, v) = spec.split_once('=').ok_or("override must be key=value")?;
+        self.values.insert(k.trim().to_string(), parse_value(v.trim(), 0)?);
+        Ok(())
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn num(&self, key: &str) -> Option<f64> {
+        match self.values.get(key) {
+            Some(Value::Num(x)) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn int(&self, key: &str) -> Option<i64> {
+        self.num(key).map(|x| x as i64)
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.values.get(key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn list(&self, key: &str) -> Option<&[String]> {
+        match self.values.get(key) {
+            Some(Value::List(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<Value, String> {
+    if let Some(body) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(Value::Str(body.to_string()));
+    }
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let items = body
+            .split(',')
+            .map(|s| s.trim().trim_matches('"').to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        return Ok(Value::List(items));
+    }
+    v.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("line {lineno}: cannot parse value {v:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# machine profile
+name = "bgp"
+[machine]
+nodes = 1024
+cores_per_node = 4
+ion_per_pset = 1        # one I/O node per PSET
+shared_fs = "gpfs"
+debug = false
+tags = ["pset", "zeptos"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(DOC).unwrap();
+        assert_eq!(c.str("name"), Some("bgp"));
+        assert_eq!(c.int("machine.nodes"), Some(1024));
+        assert_eq!(c.num("machine.cores_per_node"), Some(4.0));
+        assert_eq!(c.bool("machine.debug"), Some(false));
+        assert_eq!(c.str("machine.shared_fs"), Some("gpfs"));
+        assert_eq!(c.list("machine.tags").unwrap(), &["pset", "zeptos"]);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let c = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(c.str("k"), Some("a#b"));
+    }
+
+    #[test]
+    fn merge_and_override() {
+        let mut a = Config::parse("x = 1\ny = 2").unwrap();
+        let b = Config::parse("y = 3").unwrap();
+        a.merge(b);
+        assert_eq!(c2i(&a, "x"), 1);
+        assert_eq!(c2i(&a, "y"), 3);
+        a.set_override("y=4").unwrap();
+        assert_eq!(c2i(&a, "y"), 4);
+        a.set_override("z=\"s\"").unwrap();
+        assert_eq!(a.str("z"), Some("s"));
+    }
+
+    fn c2i(c: &Config, k: &str) -> i64 {
+        c.int(k).unwrap()
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("just words").is_err());
+        assert!(Config::parse("k = @@").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-contained substrate utilities.
+//!
+//! The build environment is fully offline and its registry cache lacks the
+//! usual ecosystem crates (`rand`, `clap`, `serde`, `criterion`,
+//! `proptest`). Everything those crates would have provided is implemented
+//! here, scoped to what the rest of the crate needs.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,142 @@
+//! Property-based testing helper (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` random inputs produced by a
+//! generator closure. On failure it *shrinks*: the generator is re-invoked
+//! with progressively smaller `size` hints and the failure with the
+//! smallest size is reported, along with the seed needed to replay it.
+//!
+//! ```
+//! use falkon::util::prop::{check, Gen};
+//! check("sort is idempotent", 200, |g| {
+//!     let mut v: Vec<u32> = (0..g.size_range(0, 50)).map(|_| g.rng.next_u64() as u32).collect();
+//!     v.sort(); let w = { let mut w = v.clone(); w.sort(); w };
+//!     if v != w { return Err("double sort differs".into()); }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Generator context handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint in `[0, 1]`; shrinking replays failures at smaller sizes.
+    pub size: f64,
+    pub case: u32,
+}
+
+impl Gen {
+    /// An integer in `[lo, hi]` scaled by the current size hint: at
+    /// `size=1` the full range, at `size=0` just `lo`.
+    pub fn size_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).round() as u64;
+        self.rng.range(lo, lo + span)
+    }
+
+    /// A float in `[lo, hi)`.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Vector of `n` items from `f` where `n` is size-scaled in `[0, max]`.
+    pub fn vec_of<T>(&mut self, max: u64, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.size_range(0, max);
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of a failed case used in reporting.
+#[derive(Debug)]
+pub struct Failure {
+    pub case: u32,
+    pub seed: u64,
+    pub size: f64,
+    pub message: String,
+}
+
+/// Run `prop` over `cases` generated inputs; panics with a replayable
+/// report on failure. Seed comes from `FALKON_PROP_SEED` if set (replay),
+/// else a fixed default so CI is deterministic.
+pub fn check<F>(name: &str, cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = std::env::var("FALKON_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFA1C0Du64);
+    if let Some(fail) = run_all(base_seed, cases, &mut prop) {
+        // Shrink: replay the failing case at smaller sizes, keep smallest.
+        let mut best = fail;
+        for step in 1..=8 {
+            let size = best.size * (1.0 - step as f64 / 10.0);
+            let mut g = Gen { rng: Rng::new(case_seed(base_seed, best.case)), size, case: best.case };
+            if let Err(message) = prop(&mut g) {
+                best = Failure { case: best.case, seed: base_seed, size, message };
+            }
+        }
+        panic!(
+            "property '{name}' failed (case {}, seed {}, size {:.2}): {}\n  replay: FALKON_PROP_SEED={}",
+            best.case, best.seed, best.size, best.message, best.seed
+        );
+    }
+}
+
+fn case_seed(base: u64, case: u32) -> u64 {
+    base.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64)
+}
+
+fn run_all<F>(base_seed: u64, cases: u32, prop: &mut F) -> Option<Failure>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // Ramp size up over the first half of the cases, then full size.
+        let size = ((case + 1) as f64 / (cases as f64 / 2.0)).min(1.0);
+        let mut g = Gen { rng: Rng::new(case_seed(base_seed, case)), size, case };
+        if let Err(message) = prop(&mut g) {
+            return Some(Failure { case, seed: base_seed, size, message });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("rng below stays below", 100, |g| {
+            let n = g.size_range(1, 1000);
+            let x = g.rng.below(n);
+            if x < n { Ok(()) } else { Err(format!("{x} >= {n}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failure_with_seed() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        // Early cases must be small: collect sizes.
+        let mut max_early = 0u64;
+        let mut saw_large = false;
+        check("observe sizes", 100, |g| {
+            let v = g.size_range(0, 1000);
+            if g.case < 5 {
+                max_early = max_early.max(v);
+            }
+            if v > 800 {
+                saw_large = true;
+            }
+            Ok(())
+        });
+        assert!(max_early <= 200, "early case too large: {max_early}");
+        assert!(saw_large, "never generated large values");
+    }
+}

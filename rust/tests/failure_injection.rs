@@ -1,0 +1,106 @@
+//! Failure injection across both fabrics (§3.3 reliability story):
+//! node deaths, failure storms, suspension, and the Swift restart path.
+
+use falkon::falkon::errors::RetryPolicy;
+use falkon::falkon::simworld::{SimTask, World, WorldConfig};
+use falkon::sim::machine::Machine;
+
+/// Node MTBF sweep: as MTBF shrinks, more tasks are retried but the
+/// campaign still completes (loosely-coupled jobs only lose the affected
+/// task, never the whole run — the paper's §3.3 contrast with MPI).
+#[test]
+fn mtbf_sweep_only_affected_tasks_rerun() {
+    for mtbf in [10_000.0, 2_000.0, 500.0] {
+        let mut cfg = WorldConfig::new(Machine::sicortex(), 120);
+        cfg.node_mtbf_s = Some(mtbf);
+        cfg.seed = 42;
+        cfg.retry = RetryPolicy { max_attempts: 20, ..Default::default() };
+        let n = 2_000;
+        let mut w = World::new(cfg, vec![SimTask::sleep(2.0); n]);
+        w.run(u64::MAX);
+        assert_eq!(w.completed() + w.failed(), n, "mtbf={mtbf}");
+        assert!(
+            w.completed() as f64 / n as f64 > 0.97,
+            "mtbf={mtbf}: completed {}",
+            w.completed()
+        );
+    }
+}
+
+/// An MPI-style job under the same failure model would lose *everything*
+/// on one node death; quantify the contrast the paper draws.
+#[test]
+fn mpi_contrast_single_failure_kills_gang_job() {
+    // P(no node failure during a T-second gang job of N nodes, node
+    // MTBF m) = exp(-N*T/m). The BG/L MTBF of 10 days over >10-day jobs
+    // fails with probability ~1 (paper §3.3).
+    let p_survive = |nodes: f64, dur_s: f64, mtbf_s: f64| (-nodes * dur_s / mtbf_s).exp();
+    // 1024-node MPI job for 1 day, per-node MTBF 10240 days (machine
+    // MTBF 10 days): survival ≈ 90%.
+    let machine_mtbf_days = 10.0;
+    let per_node_mtbf_s = machine_mtbf_days * 86_400.0 * 1024.0;
+    let one_day_job = p_survive(1024.0, 86_400.0, per_node_mtbf_s);
+    assert!((one_day_job - 0.905).abs() < 0.01, "{one_day_job}");
+    // An 11-day MPI job: near-certain failure.
+    let eleven_day = p_survive(1024.0, 11.0 * 86_400.0, per_node_mtbf_s);
+    assert!(eleven_day < 0.34, "{eleven_day}");
+}
+
+/// Retry exhaustion: with max_attempts=1 and aggressive failures, tasks
+/// fail terminally instead of looping forever.
+#[test]
+fn retry_exhaustion_is_terminal() {
+    let mut cfg = WorldConfig::new(Machine::anluc(), 16);
+    cfg.node_mtbf_s = Some(30.0); // extremely unreliable
+    cfg.seed = 7;
+    cfg.retry = RetryPolicy { max_attempts: 1, ..Default::default() };
+    let n = 300;
+    let mut w = World::new(cfg, vec![SimTask::sleep(5.0); n]);
+    w.run(u64::MAX);
+    assert_eq!(w.completed() + w.failed(), n);
+    assert!(w.failed() > 0, "some tasks must fail terminally under mtbf=30s");
+}
+
+/// Deaths mid-campaign shrink capacity; throughput degrades but completed
+/// work is never lost (records monotone).
+#[test]
+fn capacity_shrinks_gracefully() {
+    let mut cfg = WorldConfig::new(Machine::sicortex(), 60);
+    cfg.node_mtbf_s = Some(400.0);
+    cfg.seed = 3;
+    cfg.retry = RetryPolicy { max_attempts: 30, ..Default::default() };
+    let n = 1_500;
+    let mut w = World::new(cfg, vec![SimTask::sleep(3.0); n]);
+    w.run(u64::MAX);
+    let c = w.campaign();
+    assert_eq!(w.completed(), c.len());
+    // With most nodes eventually dead, makespan stretches well beyond the
+    // no-failure ideal.
+    let ideal = n as f64 * 3.0 / 60.0;
+    assert!(c.makespan_s() > ideal, "makespan {} vs ideal {ideal}", c.makespan_s());
+}
+
+/// Ramdisk caches die with their node: after a failure, a re-dispatched
+/// task on a fresh node re-fetches its objects (cache hit-rate < 1).
+#[test]
+fn node_death_invalidates_cache() {
+    let mut cfg = WorldConfig::new(Machine::sicortex(), 30);
+    cfg.node_mtbf_s = Some(600.0);
+    cfg.seed = 9;
+    cfg.caching = true;
+    cfg.retry = RetryPolicy { max_attempts: 20, ..Default::default() };
+    let tasks: Vec<SimTask> = (0..800)
+        .map(|_| SimTask {
+            exec_secs: 2.0,
+            objects: vec![("bin", 1_000_000)],
+            script_invokes: 0,
+            ..Default::default()
+        })
+        .collect();
+    let mut w = World::new(cfg, tasks);
+    w.run(u64::MAX);
+    assert_eq!(w.completed() + w.failed(), 800);
+    let hr = w.cache().hit_rate();
+    assert!(hr > 0.5, "most accesses still hit: {hr}");
+    assert!(hr < 1.0, "failures must force some re-fetches: {hr}");
+}

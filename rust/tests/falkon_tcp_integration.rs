@@ -1,0 +1,181 @@
+//! Live-fabric integration: service + executors over real loopback TCP.
+
+use falkon::falkon::dispatch::DispatchConfig;
+use falkon::falkon::errors::{RetryPolicy, TaskError};
+use falkon::falkon::exec::{spawn_fleet, DefaultRunner, Executor, ExecutorConfig, FaultyRunner};
+use falkon::falkon::service::{Service, ServiceConfig};
+use falkon::falkon::task::TaskPayload;
+use falkon::net::tcpcore::Proto;
+use std::sync::atomic::AtomicU32;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn service(bundle: usize) -> Service {
+    Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        dispatch: DispatchConfig { bundle, data_aware: false },
+        retry: RetryPolicy::default(),
+    })
+    .expect("service start")
+}
+
+#[test]
+fn sleep0_tasks_complete_over_tcp() {
+    let svc = service(1);
+    let addr = svc.addr().to_string();
+    let fleet = spawn_fleet(&addr, 4, Arc::new(DefaultRunner), 1).unwrap();
+    assert!(svc.wait_executors(4, Duration::from_secs(5)));
+    let n = 500;
+    svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(30)).expect("all done");
+    assert_eq!(outcomes.len(), n);
+    assert!(outcomes.iter().all(|o| o.ok()));
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn bundling_preserves_all_tasks() {
+    let svc = service(10);
+    let addr = svc.addr().to_string();
+    // Grant enough credit that bundles actually form.
+    let fleet = spawn_fleet(&addr, 2, Arc::new(DefaultRunner), 16).unwrap();
+    assert!(svc.wait_executors(2, Duration::from_secs(5)));
+    let n = 300;
+    let ids = svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    assert_eq!(ids.len(), n);
+    let outcomes = svc.wait_all(Duration::from_secs(30)).unwrap();
+    // Exactly-once: every id exactly one outcome.
+    let mut seen: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
+    seen.sort_unstable();
+    let mut want = ids.clone();
+    want.sort_unstable();
+    assert_eq!(seen, want);
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn echo_and_command_payloads() {
+    let svc = service(1);
+    let addr = svc.addr().to_string();
+    let fleet = spawn_fleet(&addr, 2, Arc::new(DefaultRunner), 1).unwrap();
+    assert!(svc.wait_executors(2, Duration::from_secs(5)));
+    svc.submit(TaskPayload::Echo { payload: vec![b'x'; 10_000] });
+    svc.submit(TaskPayload::Command {
+        program: "/bin/sh".into(),
+        args: vec!["-c".into(), "exit 0".into()],
+    });
+    svc.submit(TaskPayload::Command {
+        program: "/bin/sh".into(),
+        args: vec!["-c".into(), "exit 7".into()],
+    });
+    let outcomes = svc.wait_all(Duration::from_secs(30)).unwrap();
+    assert_eq!(outcomes.len(), 3);
+    let exit7 = outcomes.iter().find(|o| o.exit_code == 7).expect("exit 7 surfaced");
+    assert_eq!(exit7.error, Some(TaskError::AppError(7)));
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn ws_protocol_executor_works() {
+    let svc = service(1);
+    let addr = svc.addr().to_string();
+    let exec = Executor::start(
+        ExecutorConfig {
+            service_addr: addr,
+            executor_id: 0,
+            cores: 2,
+            proto: Proto::Ws,
+            initial_credit: 2,
+        },
+        Arc::new(DefaultRunner),
+    )
+    .unwrap();
+    assert!(svc.wait_executors(1, Duration::from_secs(5)));
+    svc.submit_many((0..50).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(30)).unwrap();
+    assert_eq!(outcomes.len(), 50);
+    assert!(outcomes.iter().all(|o| o.ok()));
+    exec.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn stale_nfs_failures_are_retried_on_other_executors() {
+    let svc = Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        dispatch: DispatchConfig::default(),
+        retry: RetryPolicy { max_attempts: 5, suspend_after_failures: 100, ..Default::default() },
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+    // Executor 0 fails its first 10 tasks with the stale-NFS error;
+    // executor 1 is healthy.
+    let faulty = Executor::start(
+        ExecutorConfig::c_style(addr.clone(), 0),
+        Arc::new(FaultyRunner {
+            inner: DefaultRunner,
+            fail_first: AtomicU32::new(10),
+            error: TaskError::StaleNfsHandle,
+        }),
+    )
+    .unwrap();
+    let healthy = Executor::start(ExecutorConfig::c_style(addr, 1), Arc::new(DefaultRunner)).unwrap();
+    assert!(svc.wait_executors(2, Duration::from_secs(5)));
+    let n = 100;
+    svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(30)).unwrap();
+    assert_eq!(outcomes.len(), n);
+    assert!(outcomes.iter().all(|o| o.ok()), "stale-NFS must be retried to success");
+    assert!(outcomes.iter().any(|o| o.attempts > 1), "some tasks should have retried");
+    faulty.stop();
+    healthy.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn executor_disconnect_requeues_pending_tasks() {
+    let svc = service(1);
+    let addr = svc.addr().to_string();
+    // Slow executor holds a task, then dies; a healthy one finishes.
+    let slow = Executor::start(
+        ExecutorConfig::c_style(addr.clone(), 0),
+        Arc::new(DefaultRunner),
+    )
+    .unwrap();
+    assert!(svc.wait_executors(1, Duration::from_secs(5)));
+    svc.submit_many((0..10).map(|_| TaskPayload::Sleep { secs: 0.2 }));
+    std::thread::sleep(Duration::from_millis(100)); // let it pick up work
+    slow.stop(); // connection drops; pending tasks -> CommError -> retry
+    let healthy = Executor::start(ExecutorConfig::c_style(addr, 1), Arc::new(DefaultRunner)).unwrap();
+    let outcomes = svc.wait_all(Duration::from_secs(30)).unwrap();
+    assert_eq!(outcomes.len(), 10);
+    assert!(outcomes.iter().all(|o| o.ok()));
+    healthy.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn profile_accumulates_stage_times() {
+    let svc = service(1);
+    let addr = svc.addr().to_string();
+    let fleet = spawn_fleet(&addr, 2, Arc::new(DefaultRunner), 1).unwrap();
+    assert!(svc.wait_executors(2, Duration::from_secs(5)));
+    svc.submit_many((0..200).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    svc.wait_all(Duration::from_secs(30)).unwrap();
+    let per_task = svc.profile().per_task_ms();
+    let total: f64 = per_task.iter().map(|(_, ms)| ms).sum();
+    assert!(total > 0.0, "profile should be non-empty: {per_task:?}");
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+}

@@ -1,0 +1,229 @@
+//! Property tests over coordinator invariants (own shrinking harness —
+//! proptest is unavailable offline; see util::prop).
+
+use falkon::falkon::errors::{RetryPolicy, TaskError};
+use falkon::falkon::queue::TaskQueues;
+use falkon::falkon::simworld::{SimTask, World, WorldConfig};
+use falkon::falkon::task::TaskPayload;
+use falkon::fs::cache::CacheManager;
+use falkon::sim::engine::Scheduler;
+use falkon::sim::link::SharedLink;
+use falkon::sim::machine::Machine;
+use falkon::util::prop::{check, Gen};
+
+/// Queue conservation: under arbitrary submit/dispatch/complete/fail
+/// interleavings, every task is in exactly one of waiting/pending/done.
+#[test]
+fn prop_queue_conservation() {
+    check("queue conservation", 300, |g: &mut Gen| {
+        let mut q = TaskQueues::new();
+        let policy = RetryPolicy {
+            max_attempts: g.rng.range(1, 4) as u32,
+            ..Default::default()
+        };
+        let steps = g.size_range(1, 120);
+        let mut drained = 0u64;
+        for step in 0..steps {
+            match g.rng.below(5) {
+                0 | 1 => {
+                    q.submit(TaskPayload::Sleep { secs: 0.0 });
+                }
+                2 => {
+                    let exec = g.rng.below(4) as usize;
+                    let n = g.rng.range(1, 10) as usize;
+                    for t in q.take_for_dispatch(exec, n) {
+                        match g.rng.below(3) {
+                            0 => q.complete(t.id, 0),
+                            1 => q.complete(t.id, 1),
+                            _ => {
+                                let errs = [
+                                    TaskError::CommError,
+                                    TaskError::StaleNfsHandle,
+                                    TaskError::NodeLost,
+                                ];
+                                let err = g.rng.pick(&errs).clone();
+                                q.fail_attempt(t.id, err, &policy);
+                            }
+                        }
+                    }
+                }
+                3 => drained += q.drain_done().len() as u64,
+                _ => {}
+            }
+            if !q.conserved(drained) {
+                return Err(format!("conservation broken at step {step}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Exactly-once completion in the simulated world: every submitted task
+/// reaches a terminal state exactly once regardless of bundling, protocol
+/// and failure injection.
+#[test]
+fn prop_simworld_exactly_once() {
+    check("simworld exactly-once", 40, |g: &mut Gen| {
+        let cores = g.size_range(1, 64).max(1) as usize;
+        let n = g.size_range(1, 400).max(1) as usize;
+        let mut cfg = WorldConfig::new(Machine::anluc(), cores);
+        cfg.bundle = g.rng.range(1, 12) as usize;
+        cfg.seed = g.rng.next_u64();
+        cfg.retry = RetryPolicy { max_attempts: 8, ..Default::default() };
+        if g.rng.chance(0.4) {
+            cfg.node_mtbf_s = Some(g.f64_range(200.0, 5_000.0));
+        }
+        let tasks = vec![SimTask::sleep(g.f64_range(0.0, 3.0)); n];
+        let mut w = World::new(cfg, tasks);
+        w.run(50_000_000);
+        let terminal = w.completed() + w.failed();
+        if terminal != n {
+            return Err(format!("{terminal} terminal of {n} submitted"));
+        }
+        if w.campaign().len() != w.completed() {
+            return Err("campaign records != completions".into());
+        }
+        Ok(())
+    });
+}
+
+/// Makespan sanity: never shorter than the critical path (ideal work/P)
+/// and never absurdly longer under no-failure conditions.
+#[test]
+fn prop_simworld_makespan_bounds() {
+    check("simworld makespan bounds", 40, |g: &mut Gen| {
+        let cores = g.size_range(1, 128).max(1) as usize;
+        let n = g.size_range(1, 300).max(1) as usize;
+        let len = g.f64_range(0.1, 5.0);
+        let mut cfg = WorldConfig::new(Machine::anluc(), cores);
+        let bundle = g.rng.range(1, 4) as usize;
+        cfg.bundle = bundle;
+        let mut w = World::new(cfg, vec![SimTask::sleep(len); n]);
+        w.run(u64::MAX);
+        let makespan = w.campaign().makespan_s();
+        let ideal = (n as f64 * len / cores.min(n) as f64).max(len);
+        if makespan < ideal * 0.999 {
+            return Err(format!("makespan {makespan} < ideal {ideal}"));
+        }
+        // Generous upper bound: ideal + worst-case bundling imbalance
+        // (one core can queue a whole bundle) + dispatch serialization.
+        let bound = ideal + bundle as f64 * len + n as f64 / 2_000.0 + 2.0;
+        if makespan > bound {
+            return Err(format!("makespan {makespan} > bound {bound}"));
+        }
+        Ok(())
+    });
+}
+
+/// Shared link conservation under random churn: delivered bits never
+/// exceed capacity × time, and all flows eventually complete.
+#[test]
+fn prop_link_conservation_and_progress() {
+    check("link conservation", 150, |g: &mut Gen| {
+        let cap = g.f64_range(1e3, 1e9);
+        let per_flow = g.f64_range(cap / 100.0, cap * 2.0);
+        let mut link = SharedLink::new(cap, per_flow);
+        let mut t = 0u64;
+        let mut started = 0usize;
+        let mut completed = 0usize;
+        for _ in 0..g.size_range(1, 60) {
+            t += g.rng.range(1, 2 * falkon::sim::engine::SECS);
+            if g.rng.chance(0.8) {
+                link.start(t, g.f64_range(0.0, 1e7));
+                started += 1;
+            }
+            completed += link.take_completed(t).len();
+        }
+        // Drain.
+        let mut guard = 0;
+        while link.active() > 0 {
+            guard += 1;
+            if guard > 10_000 {
+                return Err("link never drains".into());
+            }
+            let next = link.next_completion().ok_or("active flows but no completion")?;
+            t = t.max(next);
+            completed += link.take_completed(t).len();
+        }
+        if completed != started {
+            return Err(format!("{completed} completed of {started}"));
+        }
+        let elapsed = t as f64 / falkon::sim::engine::SECS as f64;
+        if link.delivered_bits() > cap * elapsed * (1.0 + 1e-9) + 1.0 {
+            return Err("over-delivered".into());
+        }
+        Ok(())
+    });
+}
+
+/// Scheduler determinism + monotonicity under random scheduling patterns.
+#[test]
+fn prop_scheduler_deterministic_and_monotone() {
+    check("scheduler determinism", 200, |g: &mut Gen| {
+        let seed = g.rng.next_u64();
+        let run = |seed: u64| {
+            let mut rng = falkon::util::rng::Rng::new(seed);
+            let mut s: Scheduler<u64> = Scheduler::new();
+            for i in 0..50 {
+                s.at(rng.range(0, 1000), i);
+            }
+            let mut order = Vec::new();
+            let mut last = 0;
+            while let Some((t, ev)) = s.next() {
+                if t < last {
+                    panic!("time went backwards");
+                }
+                last = t;
+                order.push(ev);
+            }
+            order
+        };
+        if run(seed) != run(seed) {
+            return Err("non-deterministic order".into());
+        }
+        Ok(())
+    });
+}
+
+/// Cache invariants: a hit implies a previous commit; invalidation clears;
+/// planned fetch + hits exactly cover the request set.
+#[test]
+fn prop_cache_coherence() {
+    check("cache coherence", 200, |g: &mut Gen| {
+        let nodes = g.size_range(1, 8).max(1) as usize;
+        let mut cm = CacheManager::new(nodes, u64::MAX, 1 << 20);
+        let keys = ["a", "b", "c", "d"];
+        let mut model: Vec<std::collections::HashSet<&str>> =
+            vec![Default::default(); nodes];
+        for _ in 0..g.size_range(1, 100) {
+            let node = g.rng.below(nodes as u64) as usize;
+            match g.rng.below(3) {
+                0 => {
+                    let k = *g.rng.pick(&keys);
+                    let objs = vec![(k.to_string(), 100u64)];
+                    let plan = cm.plan(node, &objs);
+                    let expect_hit = model[node].contains(k);
+                    if expect_hit != plan.fetch.is_empty() {
+                        return Err(format!("hit mismatch for {k} on {node}"));
+                    }
+                    for (key, b) in plan.fetch {
+                        cm.commit(node, key, b).map_err(|e| e.to_string())?;
+                        model[node].insert(k);
+                    }
+                }
+                1 => {
+                    cm.invalidate_node(node);
+                    model[node].clear();
+                }
+                _ => {
+                    for k in keys {
+                        if cm.contains(node, k) != model[node].contains(k) {
+                            return Err(format!("contains() mismatch for {k}"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,117 @@
+//! Integration: load the AOT artifacts through PJRT and check numerics
+//! against values the Python oracle pins down (see python/tests).
+//!
+//! Requires `make artifacts` to have run; tests are skipped (not failed)
+//! when the artifacts are absent so `cargo test` works on a fresh tree.
+
+use falkon::runtime::{ComputeRunner, Registry};
+
+fn registry() -> Option<Registry> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("mars_batch.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Registry::open(dir).expect("registry"))
+}
+
+#[test]
+fn mars_artifact_loads_and_runs() {
+    let Some(reg) = registry() else { return };
+    let engine = reg.get("mars_batch").expect("compile mars_batch");
+    // 144 runs × 2 params.
+    let params: Vec<f32> = (0..144)
+        .flat_map(|i| {
+            let x = 0.1 + 0.8 * (i as f32 / 144.0);
+            [x, 1.0 - x]
+        })
+        .collect();
+    let out = engine.run_f32(&[(&params, &[144, 2])]).expect("execute");
+    assert_eq!(out.len(), 1, "one output tensor");
+    assert_eq!(out[0].len(), 144, "one investment per run");
+    assert!(out[0].iter().all(|x| x.is_finite() && *x > 0.0), "investments positive/finite");
+    // Different parameters must give different investments.
+    let distinct: std::collections::BTreeSet<u32> =
+        out[0].iter().map(|x| x.to_bits()).collect();
+    assert!(distinct.len() > 100, "outputs too uniform: {}", distinct.len());
+}
+
+#[test]
+fn mars_artifact_is_deterministic() {
+    let Some(reg) = registry() else { return };
+    let engine = reg.get("mars_batch").unwrap();
+    let params = vec![0.5f32; 288];
+    let a = engine.run_f32(&[(&params, &[144, 2])]).unwrap();
+    let b = engine.run_f32(&[(&params, &[144, 2])]).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn dock_artifact_loads_and_runs() {
+    let Some(reg) = registry() else { return };
+    let engine = reg.get("dock_score").expect("compile dock_score");
+    let (p, l, g) = (32usize, 64usize, 128usize);
+    // Deterministic synthetic pose cloud.
+    let poses: Vec<f32> = (0..p * l * 3)
+        .map(|i| ((i.wrapping_mul(2654435761)) as u32 as f32 / u32::MAX as f32) * 4.0 - 2.0)
+        .collect();
+    let lig_q: Vec<f32> = (0..p * l).map(|i| ((i % 17) as f32 - 8.0) / 20.0).collect();
+    let grid: Vec<f32> = (0..g * 3).map(|i| ((i * 40503) % 997) as f32 / 100.0 - 5.0).collect();
+    let grid_q: Vec<f32> = (0..g).map(|i| (i as f32 / g as f32) * 0.6 - 0.3).collect();
+    let out = engine
+        .run_f32(&[
+            (&poses, &[p, l, 3]),
+            (&lig_q, &[p, l]),
+            (&grid, &[g, 3]),
+            (&grid_q, &[g]),
+        ])
+        .expect("execute dock");
+    assert_eq!(out[0].len(), p);
+    assert!(out[0].iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn compute_runner_executes_mars_payload() {
+    if registry().is_none() {
+        return;
+    }
+    use falkon::falkon::exec::TaskRunner;
+    let runner = ComputeRunner::new(Registry::open("artifacts").unwrap());
+    let payload = falkon::falkon::task::TaskPayload::Compute {
+        artifact: "mars_batch".into(),
+        reps: 144,
+        arg: [0.3, 0.6],
+    };
+    assert_eq!(runner.run(&payload).unwrap(), 0);
+    // Unknown artifact -> app error, not panic.
+    let bad = falkon::falkon::task::TaskPayload::Compute {
+        artifact: "missing".into(),
+        reps: 144,
+        arg: [0.0, 0.0],
+    };
+    assert!(runner.run(&bad).is_err());
+}
+
+#[test]
+fn mars_matches_python_oracle_values() {
+    // Values pinned from python/compile/model.py on the same inputs (see
+    // python/tests/test_model.py::test_pinned_values) — this asserts the
+    // HLO-text interchange preserves numerics end-to-end.
+    let Some(reg) = registry() else { return };
+    let engine = reg.get("mars_batch").unwrap();
+    let mut params = vec![0f32; 288];
+    for i in 0..144 {
+        let x = 0.1 + 0.8 * (i as f32 / 144.0);
+        params[2 * i] = x;
+        params[2 * i + 1] = 1.0 - x;
+    }
+    let out = engine.run_f32(&[(&params, &[144, 2])]).unwrap();
+    let expect = [(0usize, 8.631977f32), (77, 8.698864), (143, 8.757997)];
+    for (idx, want) in expect {
+        let got = out[0][idx];
+        assert!(
+            (got - want).abs() < 5e-4,
+            "mars[{idx}] = {got}, python oracle {want}"
+        );
+    }
+}

@@ -1,0 +1,125 @@
+//! Cross-module simulator integration: LRM → provisioner → world, and
+//! DES-vs-theory cross-validation.
+
+use falkon::falkon::provision::{ProvisionEvent, ProvisionPolicy, Provisioner};
+use falkon::falkon::simworld::{run_sleep_workload, SimTask, WireProto, World, WorldConfig};
+use falkon::falkon::theory::{self, TheoryParams};
+use falkon::lrm::cobalt::Cobalt;
+use falkon::sim::machine::Machine;
+
+/// Full multi-level-scheduling flow: Cobalt grants PSETs (with boot), the
+/// campaign then runs on the granted cores — boot is amortized over the
+/// whole campaign exactly as §3 argues.
+#[test]
+fn multi_level_scheduling_amortizes_boot() {
+    let machine = Machine::bgp();
+    let mut prov = Provisioner::new(
+        ProvisionPolicy::Static { nodes: 256, walltime_s: 7200.0 },
+        Cobalt::new(machine.clone()),
+    );
+    prov.tick(0, 0, false);
+    let boot_done = prov.next_event().expect("booting");
+    let events = prov.tick(boot_done, 0, false);
+    let ready = events
+        .iter()
+        .find_map(|e| match e {
+            ProvisionEvent::Ready(r) => Some(r.clone()),
+            _ => None,
+        })
+        .expect("allocation ready");
+    assert_eq!(ready.cores, 1024);
+    assert!(ready.boot_s > 30.0, "mass boot should cost tens of seconds: {}", ready.boot_s);
+
+    // Run a 20K-task campaign on the granted cores; boot is a one-time
+    // cost, so efficiency including boot stays high.
+    let campaign = run_sleep_workload(machine, ready.cores, 20_000, 4.0, WireProto::Tcp, 1);
+    let makespan_with_boot = campaign.makespan_s() + ready.boot_s;
+    let eff_with_boot = campaign.busy_s() / (ready.cores as f64 * makespan_with_boot);
+    assert!(eff_with_boot > 0.55, "amortized efficiency {eff_with_boot}");
+    // Versus the naive LRM use: one boot per task would dominate
+    // (boot ~36s per 4s task => <10% utilization even at 1 node/job).
+    let naive_per_task = 4.0 / (4.0 + ready.boot_s);
+    assert!(naive_per_task < 0.15);
+}
+
+/// The DES and the closed-form theory model must agree on efficiency for
+/// configurations inside the theory's assumptions (no I/O, no failures).
+#[test]
+fn des_matches_theory_within_tolerance() {
+    for (cores, len) in [(256, 1.0), (1024, 2.0), (2048, 4.0)] {
+        let n = 8_000;
+        let campaign =
+            run_sleep_workload(Machine::bgp(), cores, n, len, WireProto::Tcp, 1);
+        let des_eff = campaign.efficiency();
+        let th = theory::efficiency(
+            TheoryParams { tasks: n as u64, processors: cores as u64, dispatch_rate: 1758.0 },
+            len,
+        );
+        assert!(
+            (des_eff - th).abs() < 0.08,
+            "cores={cores} len={len}: DES {des_eff:.3} vs theory {th:.3}"
+        );
+    }
+}
+
+/// Fig 9 shape: with 4-second tasks, efficiency stays high from 1 to 2048
+/// processors; with 1-second tasks it degrades beyond ~512.
+#[test]
+fn fig9_processor_scaling_shape() {
+    let eff = |cores: usize, len: f64| {
+        run_sleep_workload(Machine::bgp(), cores, (cores * 6).max(512), len, WireProto::Tcp, 1)
+            .efficiency()
+    };
+    assert!(eff(256, 4.0) > 0.9);
+    assert!(eff(2048, 4.0) > 0.9);
+    let e1_512 = eff(512, 1.0);
+    let e1_2048 = eff(2048, 1.0);
+    assert!(e1_512 > 0.85, "512 cores, 1s tasks: {e1_512}");
+    assert!(e1_2048 < e1_512, "1s tasks should degrade at 2048: {e1_2048} vs {e1_512}");
+}
+
+/// GPFS contention: uncached script invocation from the shared FS caps
+/// task throughput at the ION limit (Fig 13), ramdisk does not.
+#[test]
+fn script_invocation_location_dominates_small_tasks() {
+    let machine = Machine::bgp();
+    let mk = |ramdisk: bool| {
+        let mut cfg = WorldConfig::new(machine.clone(), 256);
+        cfg.scripts_from_ramdisk = ramdisk;
+        let tasks = vec![
+            SimTask {
+                exec_secs: 0.0,
+                script_invokes: 1,
+                desc_len: 32,
+                ..Default::default()
+            };
+            2_000
+        ];
+        let mut w = World::new(cfg, tasks);
+        w.run(u64::MAX);
+        w.campaign().throughput()
+    };
+    let shared = mk(false);
+    let ram = mk(true);
+    // Paper: 109/s from GPFS (1 ION) vs >1700/s from ramdisk.
+    assert!((shared - 109.0).abs() < 20.0, "shared-FS invoke rate {shared}");
+    assert!(ram > 5.0 * shared, "ramdisk {ram} vs shared {shared}");
+}
+
+/// Large campaigns replay fast: the DES must process paper-scale
+/// workloads (92K tasks, 5760 cores) in seconds of wall time.
+#[test]
+fn des_handles_paper_scale() {
+    let t0 = std::time::Instant::now();
+    let campaign = run_sleep_workload(
+        Machine::sicortex(),
+        5760,
+        92_000,
+        660.0,
+        WireProto::Tcp,
+        1,
+    );
+    assert_eq!(campaign.len(), 92_000);
+    assert!(campaign.efficiency() > 0.95);
+    assert!(t0.elapsed().as_secs() < 30, "DES too slow: {:?}", t0.elapsed());
+}
