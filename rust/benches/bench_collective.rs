@@ -1,0 +1,174 @@
+//! Collective data staging — the broadcast-vs-GPFS crossover and the
+//! gather-path op collapse (arXiv:0808.3540 Fig 5-class results and
+//! arXiv:0901.0134's CIO model, replayed on this repo's calibrated
+//! machine models).
+//!
+//! Emits `BENCH_collective.json` so the perf trajectory is tracked
+//! across PRs (tasks/s, efficiency, staging throughput, FS op counts).
+
+use falkon::collective::bcast;
+use falkon::falkon::simworld::{CollectiveConfig, SimTask, World, WorldConfig};
+use falkon::sim::machine::Machine;
+use falkon::util::bench::{banner, emit_json, Table};
+use falkon::util::json::Json;
+
+fn quick() -> bool {
+    std::env::var("FALKON_BENCH_QUICK").is_ok()
+}
+
+fn dock_objects() -> Vec<(String, u64)> {
+    vec![("dock5.bin".into(), 5_000_000), ("static.dat".into(), 35_000_000)]
+}
+
+/// Tree staging measured inside simworld (events, caches, barrier).
+fn world_staging(machine: &Machine, cores: usize) -> (f64, f64, u64) {
+    let mut cfg = WorldConfig::new(machine.clone(), cores);
+    cfg.collective = Some(CollectiveConfig::for_machine(&cfg.machine));
+    let tasks: Vec<SimTask> = vec![
+        SimTask {
+            exec_secs: 1.0,
+            desc_len: 64,
+            objects: vec![("dock5.bin", 5_000_000), ("static.dat", 35_000_000)],
+            ..Default::default()
+        };
+        16
+    ];
+    let mut w = World::new(cfg, tasks);
+    w.run(u64::MAX);
+    let secs = w.staging_done_secs().expect("staging ran");
+    (secs, w.staged_bytes() as f64 / secs, w.shared_fs_ops())
+}
+
+fn main() {
+    let mut summary = Json::obj();
+
+    banner("Tree broadcast vs naive per-node GPFS staging (40 MB working set)");
+    let mut t = Table::new(&[
+        "nodes", "naive s", "naive MB/s", "tree s", "tree MB/s", "speedup", "fs ops naive->tree",
+    ]);
+    // BG/P allocations up to its full 1024-node testbed, plus the paper's
+    // 5760-core SiCortex point (960 × 6-core nodes behind single-server NFS).
+    let testbeds: Vec<(Machine, usize)> = if quick() {
+        vec![(Machine::bgp().with_cores(256), 4), (Machine::bgp(), 4)]
+    } else {
+        vec![
+            (Machine::bgp().with_cores(4), 4),
+            (Machine::bgp().with_cores(256), 4),
+            (Machine::bgp().with_cores(1024), 4),
+            (Machine::bgp(), 4),
+            (Machine::sicortex().with_cores(5760), 6),
+        ]
+    };
+    let mut staging_rows = Vec::new();
+    for (machine, cores_per_node) in testbeds {
+        let nodes = machine.nodes;
+        let span = machine.nodes_per_pset.map(|npp| nodes > npp).unwrap_or(false);
+        let naive =
+            bcast::naive_staging(machine.fs.clone(), span, nodes, cores_per_node, &dock_objects());
+        let (tree_s, tree_bps, tree_ops) = world_staging(&machine, nodes * cores_per_node);
+        let speedup = tree_bps / naive.landed_bps;
+        t.row(&[
+            nodes.to_string(),
+            format!("{:.1}", naive.makespan_s),
+            format!("{:.1}", naive.landed_bps / 1e6),
+            format!("{tree_s:.1}"),
+            format!("{:.1}", tree_bps / 1e6),
+            format!("{speedup:.1}x"),
+            format!("{} -> {}", naive.fs_ops, tree_ops),
+        ]);
+        let mut row = Json::obj();
+        row.set("nodes", Json::Num(nodes as f64))
+            .set("naive_s", Json::Num(naive.makespan_s))
+            .set("naive_bps", Json::Num(naive.landed_bps))
+            .set("tree_s", Json::Num(tree_s))
+            .set("tree_bps", Json::Num(tree_bps))
+            .set("speedup", Json::Num(speedup));
+        staging_rows.push(row);
+    }
+    t.print();
+    println!("(acceptance: >=10x aggregate staging throughput at >=1024 nodes)");
+    summary.set("staging", Json::Arr(staging_rows));
+
+    banner("Gather/IFS: shared-FS ops for a 10K-task campaign (BG/P, 4096 cores)");
+    let n_tasks = if quick() { 2_000 } else { 10_000 };
+    let mk_tasks = |n: usize| -> Vec<SimTask> {
+        vec![
+            SimTask {
+                exec_secs: 2.0,
+                write_bytes: 10_000,
+                desc_len: 64,
+                objects: vec![("dock5.bin", 5_000_000), ("static.dat", 35_000_000)],
+                log_appends: 2,
+                ..Default::default()
+            };
+            n
+        ]
+    };
+    let base = WorldConfig::new(Machine::bgp(), 4096);
+    let mut coll_cfg = base.clone();
+    coll_cfg.collective = Some(CollectiveConfig::for_machine(&coll_cfg.machine));
+    let mut naive_w = World::new(base, mk_tasks(n_tasks));
+    naive_w.run(u64::MAX);
+    let mut coll_w = World::new(coll_cfg, mk_tasks(n_tasks));
+    coll_w.run(u64::MAX);
+    let reduction = naive_w.shared_fs_ops() as f64 / coll_w.shared_fs_ops().max(1) as f64;
+    let mut t = Table::new(&["path", "fs ops", "tasks/s", "efficiency", "makespan"]);
+    for (name, w) in [("per-task (seed)", &naive_w), ("collective IFS", &coll_w)] {
+        t.row(&[
+            name.to_string(),
+            w.shared_fs_ops().to_string(),
+            format!("{:.0}", w.campaign().throughput()),
+            format!("{:.3}", w.campaign().efficiency()),
+            format!("{:.1}s", w.campaign().makespan_s()),
+        ]);
+    }
+    t.print();
+    println!("op reduction: {reduction:.0}x (acceptance: >=100x at 10K tasks)");
+    let mut gather = Json::obj();
+    gather
+        .set("tasks", Json::Num(n_tasks as f64))
+        .set("ops_naive", Json::Num(naive_w.shared_fs_ops() as f64))
+        .set("ops_collective", Json::Num(coll_w.shared_fs_ops() as f64))
+        .set("reduction", Json::Num(reduction));
+    summary.set("gather", gather);
+
+    banner("Campaign crossover: tasks/s and efficiency vs node count (I/O-heavy DOCK)");
+    let mut t = Table::new(&[
+        "nodes", "seed tasks/s", "seed eff", "coll tasks/s", "coll eff",
+    ]);
+    let sweep: &[usize] = if quick() { &[256] } else { &[64, 256, 1024] };
+    let mut campaign_rows = Vec::new();
+    for &nodes in sweep {
+        let machine = Machine::bgp().with_cores(nodes * 4);
+        let n = (nodes * 16).min(16_384);
+        let run = |collective: bool| {
+            let mut cfg = WorldConfig::new(machine.clone(), nodes * 4);
+            if collective {
+                cfg.collective = Some(CollectiveConfig::for_machine(&cfg.machine));
+            }
+            let mut w = World::new(cfg, mk_tasks(n));
+            w.run(u64::MAX);
+            (w.campaign().throughput(), w.campaign().efficiency())
+        };
+        let (seed_tps, seed_eff) = run(false);
+        let (coll_tps, coll_eff) = run(true);
+        t.row(&[
+            nodes.to_string(),
+            format!("{seed_tps:.0}"),
+            format!("{seed_eff:.3}"),
+            format!("{coll_tps:.0}"),
+            format!("{coll_eff:.3}"),
+        ]);
+        let mut row = Json::obj();
+        row.set("nodes", Json::Num(nodes as f64))
+            .set("seed_tps", Json::Num(seed_tps))
+            .set("seed_eff", Json::Num(seed_eff))
+            .set("coll_tps", Json::Num(coll_tps))
+            .set("coll_eff", Json::Num(coll_eff));
+        campaign_rows.push(row);
+    }
+    t.print();
+    summary.set("campaign", Json::Arr(campaign_rows));
+
+    emit_json("collective", &summary).expect("write BENCH_collective.json");
+}

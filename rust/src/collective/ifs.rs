@@ -1,0 +1,161 @@
+//! Intermediate filesystem (IFS): per-partition output aggregation.
+//!
+//! arXiv:0901.0134's collective-IO model interposes a partition-local
+//! collector between executors and the shared FS: tasks hand their
+//! (usually tiny) outputs to the collector over the interconnect, and the
+//! collector writes them back in large batches. The shared FS then sees
+//! `total_bytes / flush_threshold` archive writes instead of one write
+//! (plus log appends) per task — orders of magnitude fewer operations,
+//! which is exactly what its metadata path cannot sustain (§4.3, Fig 13).
+//!
+//! [`FlushPolicy`] + [`PartitionCollector`] are plain state machines so
+//! the *same* policy drives both fabrics: the simulator owns one
+//! collector per partition (`falkon::simworld`), and a live deployment
+//! can wrap one around a [`crate::collective::gather::GatherBuffer`].
+
+/// When a collector must write its batch back to the shared FS.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlushPolicy {
+    /// Flush once this many bytes are pending.
+    pub max_bytes: u64,
+    /// Flush once this many task records are pending.
+    pub max_records: u32,
+}
+
+impl Default for FlushPolicy {
+    fn default() -> Self {
+        // 8 MB batches: large enough to ride the rising part of the
+        // throughput-vs-access-size curve (Fig 11 saturates near 1–10 MB),
+        // small enough to bound data-loss exposure per collector.
+        FlushPolicy { max_bytes: 8 << 20, max_records: 1024 }
+    }
+}
+
+impl FlushPolicy {
+    /// Should a collector holding (`bytes`, `records`) flush now?
+    pub fn should_flush(&self, bytes: u64, records: u32) -> bool {
+        bytes >= self.max_bytes || records >= self.max_records
+    }
+}
+
+/// One partition's output collector: pending batch + lifetime stats.
+#[derive(Clone, Debug, Default)]
+pub struct PartitionCollector {
+    policy: FlushPolicy,
+    pending_bytes: u64,
+    pending_records: u32,
+    /// Batched write-backs issued so far.
+    pub flushes: u64,
+    /// Bytes written back so far (excludes the pending batch).
+    pub flushed_bytes: u64,
+    /// Task records absorbed so far (including the pending batch).
+    pub absorbed_records: u64,
+    /// Bytes absorbed so far (including the pending batch).
+    pub absorbed_bytes: u64,
+}
+
+impl PartitionCollector {
+    pub fn new(policy: FlushPolicy) -> PartitionCollector {
+        PartitionCollector { policy, ..Default::default() }
+    }
+
+    pub fn policy(&self) -> FlushPolicy {
+        self.policy
+    }
+
+    pub fn pending_bytes(&self) -> u64 {
+        self.pending_bytes
+    }
+
+    pub fn pending_records(&self) -> u32 {
+        self.pending_records
+    }
+
+    /// Absorb one task record of `bytes`; returns `Some(batch_bytes)` when
+    /// the policy requires a write-back *now* (the caller issues exactly
+    /// one shared-FS write of that size).
+    pub fn add(&mut self, bytes: u64) -> Option<u64> {
+        self.pending_bytes += bytes;
+        self.pending_records += 1;
+        self.absorbed_records += 1;
+        self.absorbed_bytes += bytes;
+        if self.policy.should_flush(self.pending_bytes, self.pending_records) {
+            Some(self.take_batch())
+        } else {
+            None
+        }
+    }
+
+    /// Drain whatever is pending (end of campaign / partition teardown);
+    /// `None` if the collector is empty.
+    pub fn flush(&mut self) -> Option<u64> {
+        if self.pending_bytes == 0 && self.pending_records == 0 {
+            None
+        } else {
+            Some(self.take_batch())
+        }
+    }
+
+    fn take_batch(&mut self) -> u64 {
+        let batch = self.pending_bytes;
+        self.pending_bytes = 0;
+        self.pending_records = 0;
+        self.flushes += 1;
+        self.flushed_bytes += batch;
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_on_byte_threshold() {
+        let mut c = PartitionCollector::new(FlushPolicy { max_bytes: 1000, max_records: 1 << 30 });
+        assert_eq!(c.add(400), None);
+        assert_eq!(c.add(400), None);
+        assert_eq!(c.add(400), Some(1200));
+        assert_eq!(c.pending_bytes(), 0);
+        assert_eq!(c.flushes, 1);
+        assert_eq!(c.flushed_bytes, 1200);
+    }
+
+    #[test]
+    fn flushes_on_record_threshold() {
+        let mut c = PartitionCollector::new(FlushPolicy { max_bytes: u64::MAX, max_records: 3 });
+        assert_eq!(c.add(1), None);
+        assert_eq!(c.add(1), None);
+        assert_eq!(c.add(1), Some(3));
+    }
+
+    #[test]
+    fn final_flush_drains_residue() {
+        let mut c = PartitionCollector::new(FlushPolicy { max_bytes: 1000, max_records: 100 });
+        c.add(10);
+        assert_eq!(c.flush(), Some(10));
+        assert_eq!(c.flush(), None);
+    }
+
+    #[test]
+    fn zero_byte_records_still_count() {
+        // Status-log-append-like records: bytes may round to 0 but the
+        // record threshold still bounds batch latency.
+        let mut c = PartitionCollector::new(FlushPolicy { max_bytes: 1 << 20, max_records: 2 });
+        assert_eq!(c.add(0), None);
+        assert_eq!(c.add(0), Some(0));
+        assert_eq!(c.flush(), None);
+    }
+
+    #[test]
+    fn conservation_absorbed_equals_flushed_plus_pending() {
+        let mut c = PartitionCollector::new(FlushPolicy { max_bytes: 5000, max_records: 7 });
+        let mut rng = crate::util::rng::Rng::new(42);
+        for _ in 0..500 {
+            c.add(rng.below(2000));
+        }
+        assert_eq!(c.absorbed_bytes, c.flushed_bytes + c.pending_bytes());
+        c.flush();
+        assert_eq!(c.absorbed_bytes, c.flushed_bytes);
+    }
+}

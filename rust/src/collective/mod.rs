@@ -1,0 +1,43 @@
+//! Collective data staging — the scale-opening I/O model of the paper's
+//! follow-ups (*Towards Loosely-Coupled Programming on Petascale Systems*,
+//! arXiv:0808.3540, and *Design and Evaluation of a Collective IO Model
+//! for Loosely Coupled Petascale Programming*, arXiv:0901.0134).
+//!
+//! The seed reproduction moves every byte point-to-point between a
+//! compute node and the shared filesystem; §4.3 of the source paper shows
+//! that contention collapsing long before the dispatcher saturates. This
+//! subsystem adds the three mechanisms that let the authors' follow-up
+//! work scale the same workloads to 160K cores:
+//!
+//! * [`tree`] — **tree broadcast**: common objects (application binaries,
+//!   static input such as the DOCK receptor or MARS base data) are read
+//!   from the shared FS *once per partition* and fanned out node-to-node
+//!   over a configurable k-ary spanning tree, so one shared-FS read
+//!   serves N nodes;
+//! * [`ifs`] — the **intermediate filesystem**: per-partition collectors
+//!   that absorb per-task outputs (and wrapper status-log appends) on the
+//!   fast interconnect and write them back to the shared FS in large
+//!   batches under a [`ifs::FlushPolicy`], eliminating the per-task
+//!   metadata storm;
+//! * [`gather`] — **output gather/merge**: the archive record format the
+//!   collectors (and live executors) use to pack many small task outputs
+//!   into one large write, plus the parser used to unpack campaign
+//!   results afterwards;
+//! * [`bcast`] — standalone discrete-event models of the naive and tree
+//!   staging phases, used by `bench_collective` to reproduce the
+//!   broadcast-vs-GPFS crossover without spinning up a whole world.
+//!
+//! Both fabrics use this module: [`crate::falkon::simworld`] drives the
+//! staging phase and collectors through the discrete-event engine
+//! (`WorldConfig::collective`), and the live TCP fabric pushes objects to
+//! executor ramdisks with the `net::proto` staging messages
+//! (`Service::stage_object` → executor ramdisk → `StageAck`), which
+//! `falkon::dispatch`'s data-aware placement then scores against.
+
+pub mod bcast;
+pub mod gather;
+pub mod ifs;
+pub mod tree;
+
+pub use ifs::{FlushPolicy, PartitionCollector};
+pub use tree::BroadcastTree;

@@ -1,0 +1,161 @@
+//! k-ary spanning broadcast tree over the nodes of one partition.
+//!
+//! Node 0 is the partition head (the only node that touches the shared
+//! FS); node `i > 0` hangs under parent `(i-1)/k`. Parents forward
+//! store-and-forward over their single uplink, so the j-th child of a
+//! parent receives the object `(j+1)` transfer times after the parent
+//! itself holds it. Total broadcast latency is therefore
+//! `O(k · log_k N)` transfer times instead of the naive `O(N)` shared-FS
+//! reads — the arXiv:0901.0134 CIO broadcast shape.
+
+/// A k-ary spanning tree over `n` partition-local node indices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BroadcastTree {
+    n: usize,
+    arity: usize,
+}
+
+impl BroadcastTree {
+    /// Tree over `n` nodes with fan-out `arity` (≥ 1).
+    pub fn new(n: usize, arity: usize) -> BroadcastTree {
+        assert!(n > 0, "a broadcast tree needs at least the head node");
+        assert!(arity >= 1, "tree arity must be at least 1");
+        BroadcastTree { n, arity }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // n >= 1 by construction
+    }
+
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// Parent of `node` (None for the head).
+    pub fn parent(&self, node: usize) -> Option<usize> {
+        assert!(node < self.n);
+        if node == 0 {
+            None
+        } else {
+            Some((node - 1) / self.arity)
+        }
+    }
+
+    /// Children of `node`, in forwarding order.
+    pub fn children(&self, node: usize) -> Vec<usize> {
+        assert!(node < self.n);
+        let first = node * self.arity + 1;
+        (first..first + self.arity).filter(|&c| c < self.n).collect()
+    }
+
+    /// Hops from the head to `node`.
+    pub fn depth_of(&self, node: usize) -> usize {
+        let mut d = 0;
+        let mut cur = node;
+        while let Some(p) = self.parent(cur) {
+            cur = p;
+            d += 1;
+        }
+        d
+    }
+
+    /// Maximum depth of the tree.
+    pub fn depth(&self) -> usize {
+        // Level-order numbering: the last index is always deepest.
+        self.depth_of(self.n - 1)
+    }
+
+    /// Seconds after the head holds the object at which each node has
+    /// fully received it, with serialized store-and-forward sends taking
+    /// `xfer_secs` per hop. Parents always have a smaller index than
+    /// their children, so a single forward pass suffices.
+    pub fn completion_secs(&self, xfer_secs: f64) -> Vec<f64> {
+        assert!(xfer_secs >= 0.0);
+        let mut t = vec![0.0f64; self.n];
+        for node in 0..self.n {
+            for (j, child) in self.children(node).into_iter().enumerate() {
+                t[child] = t[node] + (j as f64 + 1.0) * xfer_secs;
+            }
+        }
+        t
+    }
+
+    /// Broadcast makespan: the last node's completion time.
+    pub fn makespan_secs(&self, xfer_secs: f64) -> f64 {
+        self.completion_secs(xfer_secs)
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_tree_shape() {
+        let t = BroadcastTree::new(7, 2);
+        assert_eq!(t.parent(0), None);
+        assert_eq!(t.parent(1), Some(0));
+        assert_eq!(t.parent(2), Some(0));
+        assert_eq!(t.parent(6), Some(2));
+        assert_eq!(t.children(0), vec![1, 2]);
+        assert_eq!(t.children(2), vec![5, 6]);
+        assert_eq!(t.children(3), Vec::<usize>::new());
+        assert_eq!(t.depth(), 2);
+    }
+
+    #[test]
+    fn every_node_reachable_exactly_once() {
+        for (n, k) in [(1usize, 2usize), (2, 2), (64, 2), (64, 4), (100, 3), (5, 8)] {
+            let t = BroadcastTree::new(n, k);
+            let mut seen = vec![false; n];
+            let mut stack = vec![0usize];
+            while let Some(v) = stack.pop() {
+                assert!(!seen[v], "node {v} reached twice (n={n}, k={k})");
+                seen[v] = true;
+                stack.extend(t.children(v));
+            }
+            assert!(seen.iter().all(|&s| s), "unreached nodes (n={n}, k={k})");
+        }
+    }
+
+    #[test]
+    fn completion_times_respect_serialized_sends() {
+        // 3 nodes, arity 2: head sends to child 1 then child 2.
+        let t = BroadcastTree::new(3, 2);
+        let c = t.completion_secs(1.0);
+        assert_eq!(c, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn makespan_is_logarithmic_not_linear() {
+        let xfer = 1.0;
+        let linear = 1024.0 * xfer;
+        let t = BroadcastTree::new(1024, 2);
+        let m = t.makespan_secs(xfer);
+        // Binary store-and-forward: ~2·log2(N) transfers.
+        assert!(m <= 2.5 * 10.0 * xfer, "makespan {m}");
+        assert!(m < linear / 20.0);
+    }
+
+    #[test]
+    fn higher_arity_trades_depth_for_uplink_serialization() {
+        let t2 = BroadcastTree::new(256, 2).makespan_secs(1.0);
+        let t16 = BroadcastTree::new(256, 16).makespan_secs(1.0);
+        // Both finite and positive; arity 2 wins for store-and-forward.
+        assert!(t2 > 0.0 && t16 > 0.0);
+        assert!(t2 < t16, "k=2 {t2} vs k=16 {t16}");
+    }
+
+    #[test]
+    fn single_node_tree_is_instant() {
+        let t = BroadcastTree::new(1, 4);
+        assert_eq!(t.makespan_secs(10.0), 0.0);
+        assert_eq!(t.depth(), 0);
+    }
+}

@@ -58,8 +58,16 @@ pub fn cache_affinity(task: &Task, node: usize, cache: &CacheManager) -> u64 {
 
 /// Choose the executor for the task at the head of the queue.
 ///
-/// Without data-awareness this is FIFO over idle executors; with it, the
-/// idle executor with the highest cache affinity wins (ties: FIFO).
+/// Without data-awareness this is FIFO over idle executors. With it, the
+/// idle executor whose node holds the most bytes of the head task's
+/// objects wins; affinity ties (including all-zero) keep FIFO order.
+///
+/// Affinities are precomputed once per call, per *distinct idle node*
+/// (many idle executors share a node), then the idle set is scanned in a
+/// single pass with an explicit `>` comparator — replacing the old
+/// O(idle × objects) per-executor rescoring (and its `usize::MAX - i`
+/// tuple-ordering trick). Cost is O(distinct_nodes × objects + idle),
+/// never a full-fleet scan.
 pub fn choose_executor(
     idle: &[IdleExecutor],
     head: Option<&Task>,
@@ -69,17 +77,39 @@ pub fn choose_executor(
     if idle.is_empty() {
         return None;
     }
-    if cfg.data_aware {
-        if let (Some(task), Some(cache)) = (head, cache) {
-            let best = idle
-                .iter()
-                .enumerate()
-                .max_by_key(|(i, e)| (cache_affinity(task, e.node, cache), usize::MAX - *i))
-                .map(|(i, _)| i);
-            return best;
+    if !cfg.data_aware {
+        return Some(0);
+    }
+    let (Some(task), Some(cache)) = (head, cache) else { return Some(0) };
+    let TaskPayload::SimApp { objects, .. } = &task.payload else { return Some(0) };
+    if objects.is_empty() {
+        return Some(0);
+    }
+    // Precompute node → resident bytes of this task's working set, once
+    // per distinct idle node (the one scoring rule, [`cache_affinity`]).
+    // Nodes the cache has never seen (registered executor, nothing
+    // staged yet) score 0.
+    let mut affinity: std::collections::HashMap<usize, u64> = std::collections::HashMap::new();
+    for e in idle {
+        affinity.entry(e.node).or_insert_with(|| {
+            if e.node < cache.node_count() {
+                cache_affinity(task, e.node, cache)
+            } else {
+                0
+            }
+        });
+    }
+    // Single pass; strict `>` keeps the earliest (FIFO) executor on ties.
+    let mut best_idx = 0usize;
+    let mut best_bytes = affinity.get(&idle[0].node).copied().unwrap_or(0);
+    for (i, e) in idle.iter().enumerate().skip(1) {
+        let bytes = affinity.get(&e.node).copied().unwrap_or(0);
+        if bytes > best_bytes {
+            best_idx = i;
+            best_bytes = bytes;
         }
     }
-    Some(0)
+    Some(best_idx)
 }
 
 /// Bundle size for an executor: limited by both policy and credit.
@@ -137,6 +167,44 @@ mod tests {
         assert_eq!(bundle_for(50, &cfg), 10);
         let cfg1 = DispatchConfig { bundle: 0, data_aware: false };
         assert_eq!(bundle_for(5, &cfg1), 1, "bundle 0 normalizes to 1");
+    }
+
+    #[test]
+    fn data_aware_nonzero_affinity_ties_keep_fifo_order() {
+        // Regression for the single-pass rewrite: when several executors
+        // tie at the SAME nonzero affinity, the earliest idle entry must
+        // win (strict `>` comparator), exactly like the FIFO baseline —
+        // not the last maximum, and not any index arithmetic artifact.
+        let cfg = DispatchConfig { bundle: 1, data_aware: true };
+        let mut cache = CacheManager::new(4, 1 << 30, 1 << 20);
+        cache.commit(1, "big.dat".into(), 1_000_000).unwrap();
+        cache.commit(2, "big.dat".into(), 1_000_000).unwrap();
+        cache.commit(3, "big.dat".into(), 1_000_000).unwrap();
+        let task = sim_task(1, vec![("big.dat".into(), 1_000_000)]);
+        // Nodes 1, 2, 3 all tie; executor at idle index 1 (node 1) is the
+        // first with the max and must be chosen over indices 2 and 3.
+        let idles =
+            vec![idle(10, 1, 0), idle(11, 1, 1), idle(12, 1, 2), idle(13, 1, 3)];
+        assert_eq!(choose_executor(&idles, Some(&task), &cfg, Some(&cache)), Some(1));
+        // A strictly better executor later in the queue still wins.
+        cache.commit(3, "extra.dat".into(), 500).unwrap();
+        let task2 = sim_task(
+            2,
+            vec![("big.dat".into(), 1_000_000), ("extra.dat".into(), 500)],
+        );
+        assert_eq!(choose_executor(&idles, Some(&task2), &cfg, Some(&cache)), Some(3));
+    }
+
+    #[test]
+    fn data_aware_multiple_objects_sum_affinities() {
+        let cfg = DispatchConfig { bundle: 1, data_aware: true };
+        let mut cache = CacheManager::new(3, 1 << 30, 1 << 20);
+        cache.commit(0, "a".into(), 600).unwrap();
+        cache.commit(1, "a".into(), 600).unwrap();
+        cache.commit(1, "b".into(), 500).unwrap();
+        let task = sim_task(1, vec![("a".into(), 600), ("b".into(), 500)]);
+        let idles = vec![idle(1, 1, 0), idle(2, 1, 1), idle(3, 1, 2)];
+        assert_eq!(choose_executor(&idles, Some(&task), &cfg, Some(&cache)), Some(1));
     }
 
     #[test]

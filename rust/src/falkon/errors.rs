@@ -6,26 +6,35 @@
 //! application errors propagate to the client (Swift) untouched.
 
 /// Why a task attempt failed.
-#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum TaskError {
     /// Communication failure between service and executor (connection
     /// reset, timeout). Falkon always retries these (§3.3).
-    #[error("communication error")]
     CommError,
     /// The fail-fast shared-FS error the paper calls out by name.
-    #[error("stale NFS handle")]
     StaleNfsHandle,
     /// The executor's node died mid-task (MTBF events).
-    #[error("node lost")]
     NodeLost,
     /// The application itself exited non-zero — NOT retried by Falkon;
     /// passed up to the client.
-    #[error("application error (exit {0})")]
     AppError(i32),
     /// The task exceeded the allocation's remaining walltime.
-    #[error("walltime exceeded")]
     WalltimeExceeded,
 }
+
+impl std::fmt::Display for TaskError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TaskError::CommError => write!(f, "communication error"),
+            TaskError::StaleNfsHandle => write!(f, "stale NFS handle"),
+            TaskError::NodeLost => write!(f, "node lost"),
+            TaskError::AppError(code) => write!(f, "application error (exit {code})"),
+            TaskError::WalltimeExceeded => write!(f, "walltime exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for TaskError {}
 
 impl TaskError {
     /// Should Falkon itself retry this error? (§3.3: "Falkon retries any

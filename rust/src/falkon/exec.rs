@@ -9,6 +9,7 @@
 
 use crate::falkon::errors::TaskError;
 use crate::falkon::task::TaskPayload;
+use crate::fs::ramdisk::Ramdisk;
 use crate::net::proto::{Msg, WireTask};
 use crate::net::tcpcore::{Framed, Proto};
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
@@ -115,8 +116,21 @@ pub struct Executor {
 }
 
 impl Executor {
-    /// Connect to the service and start working.
+    /// Connect to the service and start working (no staging ramdisk:
+    /// `StagePut` messages are refused with `ok = false`).
     pub fn start(config: ExecutorConfig, runner: Arc<dyn TaskRunner>) -> anyhow::Result<Executor> {
+        Executor::start_with_ramdisk(config, runner, None)
+    }
+
+    /// Connect with a node-local ramdisk attached: the service can then
+    /// push common objects (`Msg::StagePut`) into `<ramdisk>/cache/<key>`
+    /// before dispatch, and tasks read them locally instead of from the
+    /// shared FS — the live half of the collective staging subsystem.
+    pub fn start_with_ramdisk(
+        config: ExecutorConfig,
+        runner: Arc<dyn TaskRunner>,
+        ramdisk: Option<Arc<Ramdisk>>,
+    ) -> anyhow::Result<Executor> {
         let mut framed = Framed::connect(&config.service_addr, config.proto)?;
         framed.send(&Msg::Register { executor_id: config.executor_id, cores: config.cores })?;
         framed.send(&Msg::Ready { executor_id: config.executor_id, slots: config.initial_credit })?;
@@ -158,9 +172,12 @@ impl Executor {
             }));
         }
 
-        // Reader thread: receives Dispatch bundles and feeds workers.
+        // Reader thread: receives Dispatch bundles and feeds workers;
+        // handles staging pushes inline (writes are ramdisk-fast).
         {
             let stop = stop.clone();
+            let ack_write = write_half.clone();
+            let executor_id = config.executor_id;
             threads.push(std::thread::spawn(move || {
                 loop {
                     match read_half.recv() {
@@ -170,6 +187,20 @@ impl Executor {
                                     return;
                                 }
                             }
+                        }
+                        Ok(Msg::StagePut { key, data }) => {
+                            let ok = match (&ramdisk, stage_key_ok(&key)) {
+                                (Some(rd), true) => {
+                                    rd.write(&format!("cache/{key}"), &data).is_ok()
+                                }
+                                _ => false,
+                            };
+                            let _ = ack_write.send(&Msg::StageAck {
+                                executor_id,
+                                key,
+                                bytes: data.len() as u64,
+                                ok,
+                            });
                         }
                         Ok(Msg::Suspend { .. }) => {
                             // Stop granting credit; drain and idle.
@@ -196,6 +227,15 @@ impl Executor {
             let _ = t.join();
         }
     }
+}
+
+/// A staging key must stay inside the ramdisk's cache/ subtree: relative,
+/// no traversal components (the Ramdisk would panic on violation; the
+/// executor refuses with `ok = false` instead).
+fn stage_key_ok(key: &str) -> bool {
+    !key.is_empty()
+        && !key.starts_with('/')
+        && !key.split('/').any(|c| c.is_empty() || c == "." || c == "..")
 }
 
 /// Spawn `n` C-style executors against `addr` (test/bench helper).
@@ -245,6 +285,18 @@ mod tests {
             r.run(&TaskPayload::Command { program: "/no/such/bin".into(), args: vec![] }),
             Err(TaskError::AppError(127))
         ));
+    }
+
+    #[test]
+    fn stage_keys_validated() {
+        assert!(stage_key_ok("dock5.bin"));
+        assert!(stage_key_ok("static/params.dat"));
+        assert!(!stage_key_ok(""));
+        assert!(!stage_key_ok("/etc/passwd"));
+        assert!(!stage_key_ok("../escape"));
+        assert!(!stage_key_ok("a/../b"));
+        assert!(!stage_key_ok("a//b"));
+        assert!(!stage_key_ok("./x"));
     }
 
     #[test]

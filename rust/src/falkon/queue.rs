@@ -77,6 +77,12 @@ impl TaskQueues {
         self.waiting.is_empty() && self.pending.is_empty()
     }
 
+    /// The task at the head of the wait queue (what data-aware placement
+    /// scores executors against), without dequeuing it.
+    pub fn peek_waiting(&self) -> Option<&Task> {
+        self.waiting.front().and_then(|id| self.tasks.get(id))
+    }
+
     /// Pop up to `n` tasks for dispatch to `executor`. Marks them
     /// Dispatched and moves them to pending.
     pub fn take_for_dispatch(&mut self, executor: usize, n: usize) -> Vec<Task> {

@@ -11,10 +11,11 @@
 //!                                        │ writes via Registry (persistent sockets)
 //! ```
 
-use crate::falkon::dispatch::{bundle_for, DispatchConfig, IdleExecutor};
+use crate::falkon::dispatch::{bundle_for, choose_executor, DispatchConfig, IdleExecutor};
 use crate::falkon::errors::{NodeHealth, RetryPolicy, TaskError};
 use crate::falkon::queue::{TaskOutcome, TaskQueues};
 use crate::falkon::task::{TaskId, TaskPayload};
+use crate::fs::cache::CacheManager;
 use crate::net::proto::{Msg, WireTask};
 use crate::net::tcpcore::{Framed, Registry};
 use std::collections::{HashMap, VecDeque};
@@ -76,7 +77,6 @@ struct ExecMeta {
     cores: u32,
 }
 
-#[derive(Default)]
 struct State {
     queues: TaskQueues,
     execs: HashMap<u64, ExecMeta>,
@@ -84,6 +84,27 @@ struct State {
     idle: VecDeque<u64>,
     outcomes: Vec<TaskOutcome>,
     drained: u64,
+    /// Staged-object residency by node (fed by `StageAck`s): what the
+    /// data-aware dispatch policy scores executors against.
+    staged: CacheManager,
+    /// (executor, key) → ok, for `wait_staged` rendezvous.
+    stage_acks: HashMap<(u64, String), bool>,
+}
+
+impl Default for State {
+    fn default() -> State {
+        State {
+            queues: TaskQueues::default(),
+            execs: HashMap::new(),
+            idle: VecDeque::new(),
+            outcomes: Vec::new(),
+            drained: 0,
+            // Grown lazily as executors register; per-node budget matches
+            // the simulator's default ramdisk cache size.
+            staged: CacheManager::new(0, 1 << 31, 1 << 20),
+            stage_acks: HashMap::new(),
+        }
+    }
 }
 
 struct Inner {
@@ -97,6 +118,27 @@ struct Inner {
     shutdown: AtomicBool,
     profile: Profile,
 }
+
+/// Receivers reject frames over 64 MB (`Framed::recv`); an oversized
+/// staged object would silently tear down the executor's connection, so
+/// refuse it at the send side with a real error instead.
+fn check_stage_size(key: &str, data: &[u8]) -> anyhow::Result<()> {
+    const FRAME_CAP: usize = 64 << 20;
+    // Envelope: tag + two length prefixes + the key.
+    anyhow::ensure!(
+        data.len() + key.len() + 64 < FRAME_CAP,
+        "staged object {key:?} is {} bytes; the wire frame cap is {FRAME_CAP} — split it \
+         into chunks or stage via the shared FS",
+        data.len()
+    );
+    Ok(())
+}
+
+/// Upper bound on node indices tracked for staged residency. Executor
+/// ids come off the wire; without a cap a single bogus `Register` with
+/// `executor_id: u64::MAX` would size an allocation. Ids at or above the
+/// cap still execute tasks — they just never score data-aware affinity.
+const MAX_TRACKED_NODES: usize = 1 << 17;
 
 /// Handle to a running service.
 pub struct Service {
@@ -232,6 +274,76 @@ impl Service {
         }
     }
 
+    /// Push a common object into one executor's ramdisk cache
+    /// (collective staging, live fabric). The executor acknowledges with
+    /// `StageAck`; rendezvous with [`Service::wait_staged`]. Any earlier
+    /// *recorded* ack for the same (executor, key) is cleared first.
+    /// Caveat: acks carry no push identity, so an ack still in flight
+    /// from a previous push of the same key can satisfy `wait_staged`;
+    /// callers re-pushing changed content under the same key should use
+    /// versioned keys (e.g. `params.v2.dat`) when that matters.
+    pub fn stage_object(&self, executor_id: u64, key: &str, data: &[u8]) -> anyhow::Result<()> {
+        check_stage_size(key, data)?;
+        let handle = self
+            .inner
+            .registry
+            .get(executor_id)
+            .ok_or_else(|| anyhow::anyhow!("executor {executor_id} not connected"))?;
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .stage_acks
+            .remove(&(executor_id, key.to_string()));
+        handle.send(&Msg::StagePut { key: key.to_string(), data: data.to_vec() })?;
+        Ok(())
+    }
+
+    /// Push an object to every connected executor (the loopback fabric's
+    /// one-hop "tree": the service is the partition head). Returns how
+    /// many executors the send actually succeeded on — only those are
+    /// worth a [`Service::wait_staged`] rendezvous. Pending acks for the
+    /// key are cleared first, as in [`Service::stage_object`].
+    pub fn stage_fleet(&self, key: &str, data: &[u8]) -> anyhow::Result<usize> {
+        check_stage_size(key, data)?;
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.stage_acks.retain(|(_, k), _| k != key);
+        }
+        Ok(self
+            .inner
+            .registry
+            .send_all(&Msg::StagePut { key: key.to_string(), data: data.to_vec() }))
+    }
+
+    /// Wait until `executor_id` acknowledged object `key`; returns the
+    /// ack's `ok` flag, or `None` on timeout.
+    pub fn wait_staged(&self, executor_id: u64, key: &str, timeout: Duration) -> Option<bool> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(&ok) = st.stage_acks.get(&(executor_id, key.to_string())) {
+                return Some(ok);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _) = self
+                .inner
+                .done_cv
+                .wait_timeout(st, deadline - now)
+                .expect("state poisoned");
+            st = g;
+        }
+    }
+
+    /// Nodes currently holding staged object `key` (data-aware placement
+    /// input; mirrors the simulator's `CacheManager::nodes_with`).
+    pub fn staged_nodes(&self, key: &str) -> Vec<usize> {
+        self.inner.state.lock().unwrap().staged.nodes_with(key)
+    }
+
     /// Stage-time profile (Fig 7).
     pub fn profile(&self) -> &Profile {
         &self.inner.profile
@@ -273,6 +385,10 @@ fn reader_loop(framed: Framed, inner: Arc<Inner>) {
         Ok(Msg::Register { executor_id, cores }) => {
             inner.registry.insert(executor_id, write_half);
             let mut st = inner.state.lock().unwrap();
+            let node = executor_id as usize;
+            if node < MAX_TRACKED_NODES {
+                st.staged.ensure_nodes(node + 1);
+            }
             st.execs.insert(
                 executor_id,
                 ExecMeta {
@@ -307,6 +423,25 @@ fn reader_loop(framed: Framed, inner: Arc<Inner>) {
             Ok(Msg::Result { task_id, exit_code, error }) => {
                 handle_result(&inner, executor_id, task_id, exit_code, error);
             }
+            Ok(Msg::StageAck { executor_id: _, key, bytes, ok }) => {
+                let mut st = inner.state.lock().unwrap();
+                // An object only counts as staged if the residency commit
+                // also succeeds — otherwise wait_staged and data-aware
+                // placement would disagree about this node.
+                let node = st
+                    .execs
+                    .get(&executor_id)
+                    .map(|m| m.node)
+                    .unwrap_or(executor_id as usize);
+                let resident = ok && node < MAX_TRACKED_NODES && {
+                    st.staged.ensure_nodes(node + 1);
+                    st.staged.commit(node, key.clone(), bytes).is_ok()
+                };
+                st.stage_acks.insert((executor_id, key), resident);
+                drop(st);
+                inner.done_cv.notify_all();
+                inner.work_cv.notify_one();
+            }
             Ok(Msg::Heartbeat { .. }) => {}
             Ok(_) | Err(_) => break, // protocol violation or disconnect
         }
@@ -318,8 +453,18 @@ fn reader_loop(framed: Framed, inner: Arc<Inner>) {
     // Connection lost: retry everything pending on this executor.
     inner.registry.remove(executor_id);
     let mut st = inner.state.lock().unwrap();
+    let node = st.execs.get(&executor_id).map(|m| m.node);
     st.execs.remove(&executor_id);
     st.idle.retain(|e| *e != executor_id);
+    // Its ramdisk died with it: drop staged residency and pending acks so
+    // data-aware placement stops steering work at objects that are gone
+    // (the simulator's invalidate_node, live side).
+    if let Some(node) = node {
+        if node < st.staged.node_count() {
+            st.staged.invalidate_node(node);
+        }
+    }
+    st.stage_acks.retain(|(e, _), _| *e != executor_id);
     let lost = st.queues.pending_on(executor_id as usize);
     for id in lost {
         st.queues.fail_attempt(id, TaskError::CommError, &inner.config.retry);
@@ -419,11 +564,15 @@ fn dispatcher_loop(inner: Arc<Inner>) {
 }
 
 /// Pop one (executor, bundle) assignment from the state. FIFO over idle
-/// executors; honors credit and bundle config.
+/// executors; with `data_aware`, the head task is scored against staged
+/// residency via [`choose_executor`] so pre-staged nodes win placement.
 fn plan_one(
     st: &mut State,
     cfg: &DispatchConfig,
 ) -> Option<(u64, Vec<crate::falkon::task::Task>)> {
+    if cfg.data_aware {
+        return plan_one_data_aware(st, cfg);
+    }
     while let Some(&exec_id) = st.idle.front() {
         let Some(meta) = st.execs.get_mut(&exec_id) else {
             st.idle.pop_front();
@@ -445,6 +594,54 @@ fn plan_one(
         return Some((exec_id, tasks));
     }
     None
+}
+
+/// Data-aware planning: snapshot the eligible idle set, pick via
+/// [`choose_executor`] against the staged-residency cache, then dispatch.
+fn plan_one_data_aware(
+    st: &mut State,
+    cfg: &DispatchConfig,
+) -> Option<(u64, Vec<crate::falkon::task::Task>)> {
+    // Prune dead / creditless / suspended entries so the deque cannot
+    // accumulate stale ids while we bypass the FIFO pop.
+    {
+        let State { ref mut idle, ref execs, .. } = *st;
+        idle.retain(|id| {
+            execs
+                .get(id)
+                .map(|m| m.credit > 0 && !m.health.suspended)
+                .unwrap_or(false)
+        });
+    }
+    if st.idle.is_empty() {
+        return None;
+    }
+    let idles: Vec<IdleExecutor> = st
+        .idle
+        .iter()
+        .map(|id| {
+            let m = &st.execs[id];
+            IdleExecutor { executor_id: *id, credit: m.credit, node: m.node }
+        })
+        .collect();
+    // Scope the immutable borrows so the head task is NOT cloned on the
+    // dispatch hot path.
+    let pick = {
+        let head = st.queues.peek_waiting();
+        choose_executor(&idles, head, cfg, Some(&st.staged))
+    }?;
+    let exec_id = idles[pick].executor_id;
+    let n = bundle_for(idles[pick].credit, cfg);
+    let tasks = st.queues.take_for_dispatch(exec_id as usize, n);
+    if tasks.is_empty() {
+        return None;
+    }
+    let meta = st.execs.get_mut(&exec_id).expect("picked executor exists");
+    meta.credit -= tasks.len() as u32;
+    if meta.credit == 0 {
+        let _ = st.idle.remove(pick);
+    }
+    Some((exec_id, tasks))
 }
 
 /// Snapshot used by `choose_executor`-style policies and tests.

@@ -18,16 +18,18 @@
 //! * the **shared FS** is [`SharedFs`]; node-local ramdisk is a cost
 //!   model; the [`CacheManager`] decides what hits where.
 
+use crate::collective::ifs::{FlushPolicy, PartitionCollector};
+use crate::collective::tree::BroadcastTree;
 use crate::falkon::errors::{RetryPolicy, TaskError};
 use crate::fs::cache::CacheManager;
 use crate::fs::ramdisk::RamdiskModel;
 use crate::fs::shared::{FsOp, OpId, SharedFs};
 use crate::metrics::{Campaign, TaskTimes};
 use crate::net::codec::{bytes_per_task, Codec, TcpCodec, WsCodec};
-use crate::sim::engine::{secs, Scheduler, Time};
+use crate::sim::engine::{secs, to_secs, Scheduler, Time};
 use crate::sim::machine::Machine;
 use crate::util::rng::Rng;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 /// A simulated task: compute plus an explicit I/O profile.
 #[derive(Clone, Debug, Default)]
@@ -55,6 +57,43 @@ impl SimTask {
     /// The paper's `sleep N` benchmark task.
     pub fn sleep(secs: f64) -> SimTask {
         SimTask { exec_secs: secs, desc_len: 12, ..Default::default() }
+    }
+}
+
+/// Collective data-staging configuration (arXiv:0808.3540 / 0901.0134):
+/// tree broadcast of common objects before dispatch, and per-partition
+/// intermediate-FS aggregation of task outputs.
+#[derive(Clone, Copy, Debug)]
+pub struct CollectiveConfig {
+    /// Fan-out arity of the broadcast spanning tree.
+    pub arity: usize,
+    /// Nodes per staging partition (BG/P: one per PSET).
+    pub partition_nodes: usize,
+    /// Parallel chunk reads a partition head issues per object (striped
+    /// shared-FS reads saturate the link with few clients).
+    pub stripes: u32,
+    /// Node-to-node interconnect bandwidth for tree hops and collector
+    /// traffic, bits/s.
+    pub link_bps: f64,
+    /// Route task outputs through per-partition collectors instead of
+    /// per-task shared-FS writes.
+    pub ifs: bool,
+    /// Collector write-back policy.
+    pub ifs_flush: FlushPolicy,
+}
+
+impl CollectiveConfig {
+    /// Defaults calibrated to `machine`: PSET-sized partitions, binary
+    /// tree, 4-way striped head reads, the machine's interconnect links.
+    pub fn for_machine(machine: &Machine) -> CollectiveConfig {
+        CollectiveConfig {
+            arity: 2,
+            partition_nodes: machine.nodes_per_pset.unwrap_or(64),
+            stripes: 4,
+            link_bps: machine.node_link_bps,
+            ifs: true,
+            ifs_flush: FlushPolicy::default(),
+        }
     }
 }
 
@@ -104,6 +143,11 @@ pub struct WorldConfig {
     /// class), which fan tasks out to their cores in parallel —
     /// multiplying the sustainable dispatch rate.
     pub forwarders: usize,
+    /// Collective data staging: `Some` pre-stages every cacheable object
+    /// via tree broadcast before dispatch and (if `ifs`) aggregates task
+    /// outputs in per-partition collectors. `None` = the seed's
+    /// point-to-point shared-FS paths.
+    pub collective: Option<CollectiveConfig>,
 }
 
 impl WorldConfig {
@@ -125,6 +169,7 @@ impl WorldConfig {
             prefetch: 1,
             data_aware: false,
             forwarders: 0,
+            collective: None,
         }
     }
 }
@@ -175,6 +220,11 @@ enum Stage {
     StageOut,
     /// A status-log append (stage-out side op).
     LogAppend,
+    /// A striped partition-head read of a broadcast object (the carried
+    /// task index is the object index).
+    Bcast,
+    /// A collector's batched write-back (write-behind: no task waits).
+    IfsFlush,
 }
 
 #[derive(Debug)]
@@ -193,6 +243,12 @@ enum Ev {
     FsWake,
     /// A node dies (failure injection).
     NodeFail { node: usize },
+    /// Tree broadcast: `node` finished receiving staged object `obj`
+    /// from its parent and will forward it down its subtree.
+    BcastRecv { node: usize, obj: usize },
+    /// An IFS output record (task output + absorbed log appends) reaches
+    /// its partition collector.
+    IfsArrive { core: usize, task: usize, bytes: u64 },
 }
 
 #[derive(Debug, Default, Clone)]
@@ -254,9 +310,32 @@ pub struct World {
     failed: usize,
     /// Wire-byte baseline of a sleep-0 dispatch (per task).
     base_wire_bytes: f64,
+    /// Collective staging state (None when disabled or nothing to stage).
+    stage: Option<StageState>,
+    /// Per-partition IFS output collectors (empty when IFS is off).
+    collectors: Vec<PartitionCollector>,
     /// Event counts by kind (TryDispatch, Deliver, ExecDone, Result,
-    /// FsWake, NodeFail, FwdDeliver) — cheap observability for perf work.
-    pub event_tally: [u64; 7],
+    /// FsWake, NodeFail, FwdDeliver, BcastRecv, IfsArrive) — cheap
+    /// observability for perf work.
+    pub event_tally: [u64; 9],
+}
+
+/// In-flight broadcast bookkeeping.
+#[derive(Debug)]
+struct StageState {
+    /// Nodes covered by the broadcast (the allocation, not the machine).
+    nodes: usize,
+    /// Objects being staged (dedup union of all task objects).
+    objects: Vec<(&'static str, u64)>,
+    /// (node, object) deliveries still outstanding.
+    remaining: usize,
+    /// Striped head reads outstanding per (partition, object).
+    head_pending: HashMap<(usize, usize), u32>,
+    /// Per-node uplink busy horizon: a node has ONE interconnect uplink,
+    /// so its forwards serialize across children AND across objects.
+    uplink_free: HashMap<usize, Time>,
+    /// Virtual time staging completed.
+    done_at: Option<Time>,
 }
 
 impl World {
@@ -307,7 +386,9 @@ impl World {
             completed: 0,
             failed: 0,
             base_wire_bytes,
-            event_tally: [0; 7],
+            stage: None,
+            collectors: Vec::new(),
+            event_tally: [0; 9],
             tasks,
             cfg,
         };
@@ -321,9 +402,137 @@ impl World {
                 w.sched.after_secs(at, Ev::NodeFail { node });
             }
         }
+        w.init_collective();
         w.sched.at(0, Ev::TryDispatch);
         w.dispatch_scheduled = true;
         w
+    }
+
+    /// Set up collective staging: per-partition collectors, and the
+    /// striped partition-head reads that seed the broadcast trees.
+    fn init_collective(&mut self) {
+        let Some(cc) = self.cfg.collective else { return };
+        assert!(cc.partition_nodes >= 1, "collective.partition_nodes must be >= 1");
+        assert!(cc.arity >= 1, "collective.arity must be >= 1");
+        assert!(cc.stripes >= 1, "collective.stripes must be >= 1");
+        assert!(cc.link_bps > 0.0, "collective.link_bps must be positive");
+        let cpn = self.cfg.machine.cores_per_node;
+        // Stage only the allocation. `WorldConfig::new` already trims the
+        // machine to the requested cores; the min guards hand-built
+        // configs whose `cores` undershoots the machine.
+        let nodes = self.cfg.machine.nodes.min(self.cores.len().div_ceil(cpn));
+        let n_parts = nodes.div_ceil(cc.partition_nodes);
+        if cc.ifs {
+            self.collectors = (0..n_parts)
+                .map(|_| PartitionCollector::new(cc.ifs_flush))
+                .collect();
+        }
+        // Dedup union of every task's cacheable objects, submission order.
+        let mut objects: Vec<(&'static str, u64)> = Vec::new();
+        let mut seen: HashSet<&'static str> = HashSet::new();
+        for t in &self.tasks {
+            for &(k, b) in &t.objects {
+                if seen.insert(k) {
+                    objects.push((k, b));
+                }
+            }
+        }
+        if objects.is_empty() || !self.cfg.caching {
+            return;
+        }
+        let mut head_pending = HashMap::new();
+        for part in 0..n_parts {
+            let head_core = part * cc.partition_nodes * cpn;
+            for (obj, &(_, bytes)) in objects.iter().enumerate() {
+                head_pending.insert((part, obj), cc.stripes);
+                let chunk = (bytes / cc.stripes as u64).max(1);
+                for s in 0..cc.stripes {
+                    let b = if s == cc.stripes - 1 {
+                        bytes.saturating_sub(chunk * (cc.stripes as u64 - 1)).max(1)
+                    } else {
+                        chunk
+                    };
+                    let id = self.fs.submit(0, head_core, FsOp::Read { bytes: b });
+                    // The "task" slot carries the object index for Bcast ops.
+                    self.fs_ops.insert(id, (head_core, obj, Stage::Bcast));
+                }
+            }
+        }
+        self.stage = Some(StageState {
+            nodes,
+            remaining: nodes * objects.len(),
+            objects,
+            head_pending,
+            uplink_free: HashMap::new(),
+            done_at: None,
+        });
+        self.arm_fs_wake();
+    }
+
+    /// True while the pre-dispatch broadcast is still in flight.
+    fn staging_active(&self) -> bool {
+        self.stage.as_ref().is_some_and(|s| s.remaining > 0)
+    }
+
+    /// `node` now holds staged object `obj`: commit it to the node cache
+    /// and forward it down the partition-local spanning tree.
+    fn bcast_received(&mut self, now: Time, node: usize, obj: usize) {
+        let Some(cc) = self.cfg.collective else { return };
+        let ((key, bytes), total_nodes) = match self.stage.as_ref() {
+            Some(s) => (s.objects[obj], s.nodes),
+            None => return,
+        };
+        let _ = self.cache.commit(node, key.to_string(), bytes);
+        let base = (node / cc.partition_nodes) * cc.partition_nodes;
+        let size = cc.partition_nodes.min(total_nodes - base);
+        let tree = BroadcastTree::new(size, cc.arity);
+        let xfer = secs(bytes as f64 * 8.0 / cc.link_bps);
+        // Store-and-forward on ONE uplink: this node's sends serialize
+        // across its children and across any other objects it is still
+        // forwarding (the busy horizon persists between objects).
+        let st = self.stage.as_mut().expect("staging state");
+        let mut free = st.uplink_free.get(&node).copied().unwrap_or(0).max(now);
+        for child in tree.children(node - base) {
+            free += xfer;
+            self.sched.at(free, Ev::BcastRecv { node: base + child, obj });
+        }
+        st.uplink_free.insert(node, free);
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            st.done_at = Some(now);
+            self.wake_dispatch(now);
+        }
+    }
+
+    /// A task's output record lands at its partition collector.
+    fn ifs_arrive(&mut self, now: Time, core: usize, task: usize, bytes: u64) {
+        if !self.cores[core].alive {
+            return; // the node died mid-hop; NodeLost handling owns the task
+        }
+        let cc = self.cfg.collective.expect("IfsArrive without collective config");
+        let part = self.node_of(core) / cc.partition_nodes;
+        if let Some(flush) = self.collectors[part].add(bytes) {
+            let head_core = part * cc.partition_nodes * self.cfg.machine.cores_per_node;
+            let op = self.fs.submit(now, head_core, FsOp::Write { bytes: flush });
+            self.fs_ops.insert(op, (head_core, usize::MAX, Stage::IfsFlush));
+            self.arm_fs_wake();
+        }
+        self.stageout_write_done(now, core, task);
+    }
+
+    /// End of campaign: drain collector residues as one batched write
+    /// each (write-behind — does not extend the campaign makespan).
+    fn flush_collectors(&mut self) {
+        let Some(cc) = self.cfg.collective else { return };
+        let now = self.sched.now();
+        let cpn = self.cfg.machine.cores_per_node;
+        for part in 0..self.collectors.len() {
+            if let Some(flush) = self.collectors[part].flush() {
+                let head_core = part * cc.partition_nodes * cpn;
+                let op = self.fs.submit(now, head_core, FsOp::Write { bytes: flush });
+                self.fs_ops.insert(op, (head_core, usize::MAX, Stage::IfsFlush));
+            }
+        }
     }
 
     fn node_of(&self, core: usize) -> usize {
@@ -401,6 +610,12 @@ impl World {
     fn try_dispatch(&mut self, now: Time) {
         self.dispatch_scheduled = false;
         if self.waiting.is_empty() {
+            return;
+        }
+        // Collective staging barrier: hold dispatch until every node holds
+        // the broadcast working set (the staging phase precedes the
+        // campaign, as in arXiv:0901.0134). `bcast_received` re-wakes us.
+        if self.staging_active() {
             return;
         }
         if self.service_busy_until > now {
@@ -654,6 +869,23 @@ impl World {
     }
 
     fn begin_stage_out(&mut self, now: Time, core: usize, task: usize) {
+        // IFS path: the output record (plus absorbed status-log appends)
+        // rides the interconnect to the partition collector; the shared FS
+        // only sees the collector's batched write-backs.
+        if let Some(cc) = self.cfg.collective.filter(|c| c.ifs) {
+            let wb = self.tasks[task].write_bytes;
+            let appends = self.tasks[task].log_appends;
+            let payload = wb + appends as u64 * 1024;
+            if payload == 0 {
+                self.finish_task(now, core, task, None);
+                return;
+            }
+            let local = self.ram.write_secs(wb);
+            let hop = self.cfg.machine.net_rtt_secs / 2.0 + payload as f64 * 8.0 / cc.link_bps;
+            self.tstate[task].awaiting_write = true;
+            self.sched.at(now + secs(local + hop), Ev::IfsArrive { core, task, bytes: payload });
+            return;
+        }
         let node = self.node_of(core);
         let wb = self.tasks[task].write_bytes;
         // Status-log appends (Swift wrapper, un-optimized): one small
@@ -795,6 +1027,7 @@ impl World {
         while self.sched.processed() - start < max_events {
             // Completion condition: all tasks terminal.
             if self.completed + self.failed == self.tasks.len() {
+                self.flush_collectors();
                 break;
             }
             let Some((now, ev)) = self.sched.next() else {
@@ -822,6 +1055,8 @@ impl World {
                 Ev::FsWake { .. } => 4,
                 Ev::NodeFail { .. } => 5,
                 Ev::FwdDeliver { .. } => 6,
+                Ev::BcastRecv { .. } => 7,
+                Ev::IfsArrive { .. } => 8,
             }] += 1;
             match ev {
                 Ev::TryDispatch => self.try_dispatch(now),
@@ -852,12 +1087,39 @@ impl World {
                 }
                 Ev::Result { core, task, error } => self.handle_result(now, core, task, error),
                 Ev::FwdDeliver { fwd, assignments } => self.fwd_deliver(now, fwd, assignments),
+                Ev::BcastRecv { node, obj } => self.bcast_received(now, node, obj),
+                Ev::IfsArrive { core, task, bytes } => self.ifs_arrive(now, core, task, bytes),
                 Ev::FsWake => {
                     if self.fs_wake_target == Some(now) {
                         self.fs_wake_target = None;
                     }
                     for op in self.fs.advance(now) {
                         if let Some((core, task, stage)) = self.fs_ops.remove(&op) {
+                            if stage == Stage::Bcast {
+                                // One striped head-read chunk finished; the
+                                // head holds the object when all stripes do.
+                                let node = self.node_of(core);
+                                let part = node
+                                    / self.cfg.collective.expect("bcast without config").partition_nodes;
+                                let head_ready = match self.stage.as_mut() {
+                                    Some(st) => {
+                                        let left = st
+                                            .head_pending
+                                            .get_mut(&(part, task))
+                                            .expect("unknown bcast stripe");
+                                        *left -= 1;
+                                        *left == 0
+                                    }
+                                    None => false,
+                                };
+                                if head_ready {
+                                    self.bcast_received(now, node, task);
+                                }
+                                continue;
+                            }
+                            if stage == Stage::IfsFlush {
+                                continue; // write-behind: nothing waits on it
+                            }
                             if !self.cores[core].alive {
                                 continue;
                             }
@@ -878,6 +1140,9 @@ impl World {
                                     {
                                         self.finish_task(now, core, task, None);
                                     }
+                                }
+                                Stage::Bcast | Stage::IfsFlush => {
+                                    unreachable!("handled before the liveness check")
                                 }
                             }
                         }
@@ -908,6 +1173,31 @@ impl World {
 
     pub fn events_processed(&self) -> u64 {
         self.sched.processed()
+    }
+
+    /// Seconds the pre-dispatch broadcast took (None: staging disabled,
+    /// nothing to stage, or still in flight).
+    pub fn staging_done_secs(&self) -> Option<f64> {
+        self.stage.as_ref().and_then(|s| s.done_at).map(to_secs)
+    }
+
+    /// Bytes the broadcast landed on node ramdisks (nodes × working set).
+    pub fn staged_bytes(&self) -> u64 {
+        match &self.stage {
+            Some(s) => s.objects.iter().map(|(_, b)| *b).sum::<u64>() * s.nodes as u64,
+            None => 0,
+        }
+    }
+
+    /// Total shared-FS operations the campaign issued (staging reads,
+    /// per-task ops, collector write-backs — everything).
+    pub fn shared_fs_ops(&self) -> u64 {
+        self.fs.submitted()
+    }
+
+    /// Per-partition IFS collectors (empty when IFS is off).
+    pub fn collectors(&self) -> &[PartitionCollector] {
+        &self.collectors
     }
 
     /// Virtual time now (campaign end after `run`).
@@ -1132,6 +1422,62 @@ mod tests {
         let three_tier = run(64);
         assert!(two_tier < 0.15, "2-tier must be dispatch-bound: {two_tier}");
         assert!(three_tier > 0.5, "3-tier must recover: {three_tier}");
+    }
+
+    #[test]
+    fn collective_staging_prestages_caches_and_cuts_fs_ops() {
+        // DOCK-like campaign on one BG/P PSET (64 nodes / 256 cores):
+        // tree broadcast must pre-warm every node cache (no misses at
+        // all), and the IFS gather path must collapse the per-task
+        // shared-FS write/append storm into a few batched archive writes.
+        let mk_tasks = || -> Vec<SimTask> {
+            vec![
+                SimTask {
+                    exec_secs: 1.0,
+                    write_bytes: 10_000,
+                    desc_len: 64,
+                    objects: vec![("dock5.bin", 5_000_000), ("static.dat", 35_000_000)],
+                    log_appends: 2,
+                    ..Default::default()
+                };
+                400
+            ]
+        };
+        let base = WorldConfig::new(Machine::bgp(), 256);
+        let mut coll_cfg = base.clone();
+        coll_cfg.collective = Some(CollectiveConfig::for_machine(&coll_cfg.machine));
+        let mut naive = World::new(base, mk_tasks());
+        naive.run(u64::MAX);
+        let mut coll = World::new(coll_cfg, mk_tasks());
+        coll.run(u64::MAX);
+        assert_eq!(coll.completed(), 400);
+        assert_eq!(naive.completed(), 400);
+        // Staging happened before dispatch and warmed every cache.
+        assert!(coll.staging_done_secs().is_some());
+        assert!(coll.cache().hit_rate() > 0.99, "hit rate {}", coll.cache().hit_rate());
+        // Gather: far fewer shared-FS ops (object reads collapse to
+        // striped head reads; writes + log appends to batched archives).
+        assert!(
+            coll.shared_fs_ops() * 10 < naive.shared_fs_ops(),
+            "collective {} vs naive {} ops",
+            coll.shared_fs_ops(),
+            naive.shared_fs_ops()
+        );
+        // Nothing buffered is lost: collectors absorbed every record and
+        // flushed every byte by campaign end.
+        let absorbed: u64 = coll.collectors().iter().map(|c| c.absorbed_records).sum();
+        assert_eq!(absorbed, 400);
+        let pending: u64 = coll.collectors().iter().map(|c| c.pending_bytes()).sum();
+        assert_eq!(pending, 0);
+        // And the campaign is faster end-to-end, even though its makespan
+        // already includes the staging phase (submits happen at t=0).
+        assert!(
+            coll.campaign().makespan_s() < naive.campaign().makespan_s(),
+            "collective {} (staging {}) vs naive {}",
+            coll.campaign().makespan_s(),
+            coll.staging_done_secs().unwrap(),
+            naive.campaign().makespan_s()
+        );
     }
 
     #[test]

@@ -94,13 +94,20 @@ pub struct Task {
 }
 
 /// Error for illegal lifecycle transitions.
-#[derive(Debug, thiserror::Error)]
-#[error("illegal task transition: {from:?} -> {to:?} (task {id})")]
+#[derive(Debug)]
 pub struct BadTransition {
     pub id: TaskId,
     pub from: TaskState,
     pub to: TaskState,
 }
+
+impl std::fmt::Display for BadTransition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "illegal task transition: {:?} -> {:?} (task {})", self.from, self.to, self.id)
+    }
+}
+
+impl std::error::Error for BadTransition {}
 
 impl Task {
     pub fn new(id: TaskId, payload: TaskPayload) -> Task {

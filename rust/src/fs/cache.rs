@@ -59,6 +59,29 @@ impl CacheManager {
         self.nodes.len()
     }
 
+    /// Grow to cover at least `n` nodes (live services learn the fleet
+    /// incrementally as executors register; the simulator sizes up front).
+    pub fn ensure_nodes(&mut self, n: usize) {
+        while self.nodes.len() < n {
+            self.nodes.push(NodeCache::default());
+        }
+    }
+
+    /// Bytes of objects resident on `node`.
+    pub fn resident_bytes(&self, node: usize) -> u64 {
+        self.nodes[node].resident_bytes
+    }
+
+    /// Bytes of task output buffered (not yet flushed) on `node`.
+    pub fn pending_output_bytes(&self, node: usize) -> u64 {
+        self.nodes[node].pending_output
+    }
+
+    /// Per-node capacity budget.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -147,13 +170,20 @@ impl CacheManager {
 }
 
 /// Error: a node's ramdisk budget is exhausted.
-#[derive(Debug, thiserror::Error)]
-#[error("node {node} cache full: need {need} bytes, {free} free")]
+#[derive(Debug)]
 pub struct CacheFull {
     pub node: usize,
     pub need: u64,
     pub free: u64,
 }
+
+impl std::fmt::Display for CacheFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "node {} cache full: need {} bytes, {} free", self.node, self.need, self.free)
+    }
+}
+
+impl std::error::Error for CacheFull {}
 
 #[cfg(test)]
 mod tests {

@@ -144,6 +144,12 @@ impl SharedFs {
         self.ops.len()
     }
 
+    /// Total operations ever submitted — the shared-FS op count the
+    /// collective gather path exists to shrink (ids are dense from 0).
+    pub fn submitted(&self) -> u64 {
+        self.next_op
+    }
+
     /// Service time an op spends on its ION / the metadata server.
     fn meta_service_secs(&self, op: &FsOp) -> f64 {
         match op {

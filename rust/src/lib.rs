@@ -12,6 +12,11 @@
 //!   TCP service ([`falkon::service`], [`falkon::exec`]) and a
 //!   **discrete-event simulated** world ([`falkon::simworld`]) able to
 //!   replay the paper's 4096–160K-core campaigns on one host.
+//! * [`collective`] — the collective data-staging subsystem (tree
+//!   broadcast of common input, per-partition intermediate-FS output
+//!   aggregation, and gather/merge archives) following the authors'
+//!   follow-up work (arXiv:0808.3540, arXiv:0901.0134); wired into both
+//!   the simulated and the live fabric.
 //! * [`sim`] — the discrete-event engine and shared-link contention model.
 //! * [`lrm`] — Cobalt (BG/P, PSET granularity) and SLURM (SiCortex)
 //!   local-resource-manager simulators with boot-cost models.
@@ -34,6 +39,7 @@
 //! of the paper to a bench target, and `EXPERIMENTS.md` for results.
 
 pub mod apps;
+pub mod collective;
 pub mod falkon;
 pub mod fs;
 pub mod lrm;

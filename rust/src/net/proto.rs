@@ -37,6 +37,14 @@ pub enum Msg {
     Suspend { reason: String },
     /// Orderly shutdown.
     Shutdown,
+    /// Collective staging: push a common object (binary, static input)
+    /// into the executor's ramdisk cache *before* dispatching the tasks
+    /// that need it (arXiv:0901.0134's broadcast, service→executor hop).
+    StagePut { key: String, data: Vec<u8> },
+    /// Executor acknowledges a staged object. `ok = false` when the
+    /// executor has no ramdisk or rejected the key; the service only
+    /// counts `ok` objects as resident for data-aware placement.
+    StageAck { executor_id: u64, key: String, bytes: u64, ok: bool },
 }
 
 // ---------------------------------------------------------------- wire io
@@ -79,15 +87,24 @@ pub struct Reader<'a> {
 }
 
 /// Decoding error.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum DecodeError {
-    #[error("message truncated at byte {0}")]
     Truncated(usize),
-    #[error("bad tag {0}")]
     BadTag(u8),
-    #[error("invalid utf-8 in string field")]
     BadUtf8,
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated(at) => write!(f, "message truncated at byte {at}"),
+            DecodeError::BadTag(tag) => write!(f, "bad tag {tag}"),
+            DecodeError::BadUtf8 => write!(f, "invalid utf-8 in string field"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 impl<'a> Reader<'a> {
     pub fn new(buf: &'a [u8]) -> Reader<'a> {
@@ -265,6 +282,18 @@ impl Msg {
                 w.str(reason);
             }
             Msg::Shutdown => w.u8(6),
+            Msg::StagePut { key, data } => {
+                w.u8(7);
+                w.str(key);
+                w.bytes(data);
+            }
+            Msg::StageAck { executor_id, key, bytes, ok } => {
+                w.u8(8);
+                w.u64(*executor_id);
+                w.str(key);
+                w.u64(*bytes);
+                w.u8(u8::from(*ok));
+            }
         }
         w.buf
     }
@@ -288,6 +317,13 @@ impl Msg {
             4 => Msg::Heartbeat { executor_id: r.u64()? },
             5 => Msg::Suspend { reason: r.str()? },
             6 => Msg::Shutdown,
+            7 => Msg::StagePut { key: r.str()?, data: r.bytes()?.to_vec() },
+            8 => Msg::StageAck {
+                executor_id: r.u64()?,
+                key: r.str()?,
+                bytes: r.u64()?,
+                ok: r.u8()? != 0,
+            },
             t => return Err(DecodeError::BadTag(t)),
         };
         if !r.done() {
@@ -346,6 +382,13 @@ mod tests {
         roundtrip(Msg::Heartbeat { executor_id: 1 });
         roundtrip(Msg::Suspend { reason: "too many stale NFS failures".into() });
         roundtrip(Msg::Shutdown);
+        roundtrip(Msg::StagePut { key: "cache/dock5.bin".into(), data: vec![7u8; 1000] });
+        roundtrip(Msg::StageAck {
+            executor_id: 3,
+            key: "cache/dock5.bin".into(),
+            bytes: 1000,
+            ok: true,
+        });
     }
 
     #[test]

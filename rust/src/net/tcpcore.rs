@@ -175,9 +175,15 @@ impl Registry {
 
     /// Broadcast (e.g. Shutdown) to all connections.
     pub fn broadcast(&self, msg: &Msg) {
-        for handle in self.conns.lock().unwrap().values() {
-            let _ = handle.send(msg);
-        }
+        self.send_all(msg);
+    }
+
+    /// Broadcast, returning how many connections the send succeeded on
+    /// (half-dead sockets silently drop messages otherwise — callers who
+    /// rendezvous per-recipient need the honest count).
+    pub fn send_all(&self, msg: &Msg) -> usize {
+        let handles: Vec<WriteHandle> = self.conns.lock().unwrap().values().cloned().collect();
+        handles.iter().filter(|h| h.send(msg).is_ok()).count()
     }
 }
 

@@ -7,14 +7,100 @@
 //! jax ≥ 0.5 emits 64-bit instruction ids that the crate's xla_extension
 //! 0.5.1 rejects, while the text parser reassigns ids (see
 //! DESIGN.md §Substitutions and /opt/xla-example/README.md).
+//!
+//! The `xla` crate is not present in the offline registry, so the real
+//! backend is behind the `pjrt` cargo feature. The default build compiles
+//! a stub backend whose [`Registry`] still lists artifacts and produces
+//! the same "run `make artifacts`" diagnostics, but errors at compile/run
+//! time — the rest of the crate (and all its tests) never needs PJRT.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
+/// The real PJRT backend (requires the external `xla` crate).
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::path::Path;
+
+    pub struct Client(xla::PjRtClient);
+
+    pub struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Client {
+        pub fn cpu() -> anyhow::Result<Client> {
+            Ok(Client(xla::PjRtClient::cpu()?))
+        }
+
+        /// Load and compile an HLO-text artifact on the CPU PJRT client.
+        pub fn compile(&self, path: &Path) -> anyhow::Result<Compiled> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(Compiled { exe: self.0.compile(&comp)? })
+        }
+    }
+
+    impl Compiled {
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                literals.push(lit.reshape(&dims_i64)?);
+            }
+            let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+            // jax lowerings in this repo use return_tuple=True.
+            let tuple = result.decompose_tuple()?;
+            let mut out = Vec::with_capacity(tuple.len());
+            for t in tuple {
+                out.push(t.to_vec::<f32>()?);
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Stub backend: artifact listing and path diagnostics work, execution
+/// does not (build with `--features pjrt` + the `xla` crate for that).
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::Path;
+
+    pub struct Client;
+
+    pub struct Compiled;
+
+    impl Client {
+        pub fn cpu() -> anyhow::Result<Client> {
+            Ok(Client)
+        }
+
+        pub fn compile(&self, path: &Path) -> anyhow::Result<Compiled> {
+            anyhow::bail!(
+                "PJRT backend unavailable for {}: add the `xla` crate to rust/Cargo.toml \
+                 (unavailable in the offline registry) and rebuild with `--features pjrt` \
+                 — see DESIGN.md §Substitutions",
+                path.display()
+            )
+        }
+    }
+
+    impl Compiled {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
+            anyhow::bail!(
+                "PJRT backend unavailable: add the `xla` crate and rebuild with `--features pjrt`"
+            )
+        }
+    }
+}
+
 /// A compiled artifact: one PJRT executable per model variant.
 pub struct Engine {
-    exe: xla::PjRtLoadedExecutable,
+    exe: backend::Compiled,
     name: String,
 }
 
@@ -25,14 +111,9 @@ unsafe impl Send for Engine {}
 
 impl Engine {
     /// Load and compile an HLO-text artifact on the CPU PJRT client.
-    pub fn load(client: &xla::PjRtClient, path: &Path, name: &str) -> anyhow::Result<Engine> {
+    fn load(client: &backend::Client, path: &Path, name: &str) -> anyhow::Result<Engine> {
         anyhow::ensure!(path.exists(), "artifact not found: {} (run `make artifacts`)", path.display());
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        Ok(Engine { exe, name: name.to_string() })
+        Ok(Engine { exe: client.compile(path)?, name: name.to_string() })
     }
 
     pub fn name(&self) -> &str {
@@ -45,27 +126,14 @@ impl Engine {
     /// `inputs`: (data, dims) pairs; dims follow the artifact's exported
     /// signature.
     pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let lit = xla::Literal::vec1(data);
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            literals.push(lit.reshape(&dims_i64)?);
-        }
-        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // jax lowerings in this repo use return_tuple=True.
-        let tuple = result.decompose_tuple()?;
-        let mut out = Vec::with_capacity(tuple.len());
-        for t in tuple {
-            out.push(t.to_vec::<f32>()?);
-        }
-        Ok(out)
+        self.exe.run_f32(inputs)
     }
 }
 
 /// Artifact registry: name → engine, loaded lazily from a directory.
 pub struct Registry {
     dir: PathBuf,
-    client: xla::PjRtClient,
+    client: backend::Client,
     engines: Mutex<HashMap<String, &'static Engine>>,
 }
 
@@ -78,7 +146,7 @@ impl Registry {
     pub fn open(dir: impl Into<PathBuf>) -> anyhow::Result<Registry> {
         Ok(Registry {
             dir: dir.into(),
-            client: xla::PjRtClient::cpu()?,
+            client: backend::Client::cpu()?,
             engines: Mutex::new(HashMap::new()),
         })
     }

@@ -136,6 +136,10 @@ pub struct Machine {
     pub net_rtt_secs: f64,
     /// Executor-side overhead to fork+exec a trivial task, seconds.
     pub exec_overhead_secs: f64,
+    /// Node-to-node interconnect bandwidth, bits/s (one link): the fabric
+    /// the collective broadcast/gather paths ride instead of the shared
+    /// FS (BG/P 3D torus: 6×425 MB/s links, one used per tree hop).
+    pub node_link_bps: f64,
 }
 
 impl Machine {
@@ -182,6 +186,7 @@ impl Machine {
             dispatch_ws_secs: None,          // no Java on BG/P compute nodes
             net_rtt_secs: 150e-6,
             exec_overhead_secs: 1.5e-3,
+            node_link_bps: 3.4e9, // one torus link: 425 MB/s
         }
     }
 
@@ -199,6 +204,7 @@ impl Machine {
             dispatch_ws_secs: None,          // no Java on MIPS64 compute side
             net_rtt_secs: 300e-6,
             exec_overhead_secs: 1.0e-3,
+            node_link_bps: 2e9, // Kautz-graph fabric, ~2 Gb/s usable per link
         }
     }
 
@@ -216,6 +222,7 @@ impl Machine {
             dispatch_ws_secs: Some(1.0 / 604.0), // Java executor / WS
             net_rtt_secs: 200e-6,
             exec_overhead_secs: 1.0e-3,
+            node_link_bps: 1e9, // gigabit Ethernet
         }
     }
 

@@ -45,12 +45,19 @@ pub struct Workflow {
 }
 
 /// Parse error with line context.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("line {line}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn err(line: usize, msg: impl Into<String>) -> ParseError {
     ParseError { line, msg: msg.into() }

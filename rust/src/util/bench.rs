@@ -142,6 +142,17 @@ pub fn banner(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Write a machine-readable bench summary to `BENCH_<name>.json` in the
+/// working directory (compact JSON), so the perf trajectory is tracked
+/// across PRs; returns the path written. Benches call this at the end
+/// with whatever structure their figures need.
+pub fn emit_json(name: &str, summary: &crate::util::json::Json) -> std::io::Result<String> {
+    let path = format!("BENCH_{name}.json");
+    std::fs::write(&path, summary.to_string_compact())?;
+    println!("\nwrote {path}");
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

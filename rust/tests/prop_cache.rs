@@ -1,0 +1,156 @@
+//! Property tests for `fs::cache` conservation invariants (via the
+//! in-crate `util::prop` harness): output buffering never loses or
+//! double-counts a byte, and the per-node capacity budget is never
+//! exceeded no matter the commit/invalidate churn.
+
+use falkon::fs::cache::CacheManager;
+use falkon::util::prop::check;
+
+#[test]
+fn buffer_and_flush_conserve_bytes() {
+    check("buffer/flush conserves bytes", 150, |g| {
+        let nodes = g.size_range(1, 8) as usize + 1;
+        let threshold = g.size_range(1, 1 << 20) + 1;
+        let mut cm = CacheManager::new(nodes, 1 << 40, threshold);
+        let mut buffered = vec![0u64; nodes]; // ground truth per node
+        let mut flushed = vec![0u64; nodes];
+        let steps = g.size_range(1, 400);
+        for _ in 0..steps {
+            let node = g.rng.below(nodes as u64) as usize;
+            match g.rng.below(3) {
+                0 | 1 => {
+                    let bytes = g.rng.below(threshold * 2);
+                    buffered[node] += bytes;
+                    if let Some(batch) = cm.buffer_output(node, bytes) {
+                        if batch < threshold {
+                            return Err(format!(
+                                "flush of {batch} below threshold {threshold}"
+                            ));
+                        }
+                        flushed[node] += batch;
+                    }
+                }
+                _ => {
+                    flushed[node] += cm.flush_output(node);
+                }
+            }
+            for n in 0..nodes {
+                let pending = cm.pending_output_bytes(n);
+                if pending >= threshold {
+                    return Err(format!(
+                        "node {n} pending {pending} at/over threshold {threshold} \
+                         without a flush"
+                    ));
+                }
+                if flushed[n] + pending != buffered[n] {
+                    return Err(format!(
+                        "node {n}: flushed {} + pending {} != buffered {}",
+                        flushed[n], pending, buffered[n]
+                    ));
+                }
+            }
+        }
+        // Final drain accounts for every remaining byte exactly once.
+        for n in 0..nodes {
+            flushed[n] += cm.flush_output(n);
+            if flushed[n] != buffered[n] {
+                return Err(format!(
+                    "node {n} final: flushed {} != buffered {}",
+                    flushed[n], buffered[n]
+                ));
+            }
+            if cm.flush_output(n) != 0 {
+                return Err(format!("node {n}: double flush returned bytes"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn commits_never_exceed_capacity() {
+    check("resident bytes respect capacity", 150, |g| {
+        let capacity = g.size_range(1, 1 << 24) + 1;
+        let nodes = g.size_range(1, 4) as usize + 1;
+        let mut cm = CacheManager::new(nodes, capacity, 1 << 20);
+        let mut expected = vec![0u64; nodes]; // resident bytes per node
+        let steps = g.size_range(1, 300);
+        for step in 0..steps {
+            let node = g.rng.below(nodes as u64) as usize;
+            if g.rng.chance(0.05) {
+                cm.invalidate_node(node);
+                expected[node] = 0;
+                continue;
+            }
+            let key = format!("obj-{}", g.rng.below(40));
+            let bytes = g.rng.below(capacity / 2 + 1);
+            let already = cm.contains(node, &key);
+            match cm.commit(node, key.clone(), bytes) {
+                Ok(()) => {
+                    if !already {
+                        expected[node] += bytes;
+                    }
+                }
+                Err(full) => {
+                    if already {
+                        return Err(format!("step {step}: re-commit of resident key errored"));
+                    }
+                    if expected[node] + bytes <= capacity {
+                        return Err(format!(
+                            "step {step}: spurious CacheFull (need {bytes}, used {}, cap \
+                             {capacity}): {full}",
+                            expected[node]
+                        ));
+                    }
+                }
+            }
+            for n in 0..nodes {
+                if cm.resident_bytes(n) != expected[n] {
+                    return Err(format!(
+                        "node {n}: resident {} != expected {}",
+                        cm.resident_bytes(n),
+                        expected[n]
+                    ));
+                }
+                if cm.resident_bytes(n) > cm.capacity_bytes() {
+                    return Err(format!("node {n} over capacity"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_commit_roundtrip_accounts_every_byte() {
+    check("plan/commit accounts bytes once", 100, |g| {
+        let mut cm = CacheManager::new(2, 1 << 40, 1 << 20);
+        let objects: Vec<(String, u64)> = (0..g.size_range(1, 12) + 1)
+            .map(|i| (format!("o{i}"), g.rng.below(1 << 20) + 1))
+            .collect();
+        let total: u64 = objects.iter().map(|(_, b)| *b).sum();
+        // First touch: everything misses, nothing hits.
+        let plan = cm.plan(0, &objects);
+        let fetch_total: u64 = plan.fetch.iter().map(|(_, b)| *b).sum();
+        if fetch_total != total || plan.hit_bytes != 0 {
+            return Err(format!("first plan: fetch {fetch_total} hits {}", plan.hit_bytes));
+        }
+        for (k, b) in plan.fetch {
+            cm.commit(0, k, b).map_err(|e| e.to_string())?;
+        }
+        // Second touch: everything hits, nothing fetches.
+        let plan2 = cm.plan(0, &objects);
+        if !plan2.fetch.is_empty() || plan2.hit_bytes != total {
+            return Err(format!(
+                "second plan: {} fetches, hits {} != {total}",
+                plan2.fetch.len(),
+                plan2.hit_bytes
+            ));
+        }
+        // The other node is untouched.
+        if cm.resident_bytes(1) != 0 {
+            return Err("cross-node leakage".into());
+        }
+        Ok(())
+    });
+}

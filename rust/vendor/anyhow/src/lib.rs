@@ -1,0 +1,208 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment's registry lacks the ecosystem crates, so this
+//! vendored shim provides the subset the repo uses: [`Error`] (an opaque,
+//! `Send + Sync` error value), [`Result`], and the [`anyhow!`], [`bail!`]
+//! and [`ensure!`] macros. Like the real crate, `Error` deliberately does
+//! *not* implement `std::error::Error` itself, which is what allows the
+//! blanket `From<E: std::error::Error>` conversion behind `?`.
+//!
+//! Formatting matches the real crate closely enough for our call sites:
+//! `{}` prints the top-level message, `{:#}` appends the source chain
+//! (`a: b: c`), and `{:?}` prints the message plus a `Caused by` list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque error: either a constructed message or a wrapped source.
+pub struct Error {
+    msg: Option<String>,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` produces).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: Some(message.to_string()), source: None }
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: None, source: Some(Box::new(error)) }
+    }
+
+    /// Attach context, keeping the original as the source.
+    pub fn context<M: fmt::Display>(self, message: M) -> Error {
+        match self.source {
+            Some(src) => Error { msg: Some(message.to_string()), source: Some(src) },
+            None => Error {
+                msg: Some(format!("{}: {}", message, self.msg.unwrap_or_default())),
+                source: None,
+            },
+        }
+    }
+
+    /// The chain root as a `&dyn Error`, if this wraps one.
+    pub fn source_ref(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_ref().map(|s| s.as_ref() as &(dyn StdError + 'static))
+    }
+
+    fn head(&self) -> String {
+        match (&self.msg, &self.source) {
+            (Some(m), _) => m.clone(),
+            (None, Some(s)) => s.to_string(),
+            (None, None) => "unknown error".to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.head())?;
+        if f.alternate() {
+            // {:#}: append the source chain. When msg is None the head
+            // already printed the wrapped error; start from its source.
+            let mut next: Option<&(dyn StdError + 'static)> = match (&self.msg, &self.source) {
+                (Some(_), Some(s)) => Some(s.as_ref()),
+                (None, Some(s)) => s.source(),
+                _ => None,
+            };
+            while let Some(err) = next {
+                write!(f, ": {err}")?;
+                next = err.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.head())?;
+        let mut next: Option<&(dyn StdError + 'static)> = match (&self.msg, &self.source) {
+            (Some(_), Some(s)) => Some(s.as_ref()),
+            (None, Some(s)) => s.source(),
+            _ => None,
+        };
+        let mut first = true;
+        while let Some(err) = next {
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {err}")?;
+            next = err.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: `", stringify!($cond), "`")));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn message_error_displays() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(12).unwrap_err().to_string().contains("too big: 12"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+    }
+
+    #[test]
+    fn ensure_without_message_names_condition() {
+        fn f(ok: bool) -> Result<()> {
+            ensure!(ok);
+            Ok(())
+        }
+        assert!(f(false).unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn anyhow_accepts_non_literal_expr() {
+        let s = String::from("dynamic");
+        let e: Error = anyhow!(s);
+        assert_eq!(e.to_string(), "dynamic");
+    }
+
+    #[test]
+    fn alternate_prints_chain() {
+        let e = Error::new(io_err()).context("while opening");
+        let s = format!("{e:#}");
+        assert!(s.starts_with("while opening"), "{s}");
+        assert!(s.contains("gone"), "{s}");
+    }
+}
