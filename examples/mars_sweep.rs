@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         bind: "127.0.0.1:0".into(),
         dispatch: DispatchConfig { bundle: 2, data_aware: false },
         retry: Default::default(),
+        ..Default::default()
     })?;
 
     // Executors with the PJRT compute runner: each loads the AOT artifact
@@ -47,6 +48,7 @@ fn main() -> anyhow::Result<()> {
                 cores: 1,
                 proto: falkon::net::tcpcore::Proto::Tcp,
                 initial_credit: 1,
+                partition: 0,
             },
             runner,
         )?);

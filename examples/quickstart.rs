@@ -20,6 +20,7 @@ fn main() -> anyhow::Result<()> {
         bind: "127.0.0.1:0".into(),
         dispatch: DispatchConfig { bundle: 4, data_aware: false },
         retry: Default::default(),
+        ..Default::default()
     })?;
     println!("service on {}", svc.addr());
 

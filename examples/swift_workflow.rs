@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         bind: "127.0.0.1:0".into(),
         dispatch: DispatchConfig { bundle: 2, data_aware: false },
         retry: Default::default(),
+        ..Default::default()
     })?;
     let fleet = spawn_fleet(&svc.addr().to_string(), 3, Arc::new(DefaultRunner), 1)?;
     anyhow::ensure!(svc.wait_executors(3, Duration::from_secs(5)));

@@ -1,21 +1,26 @@
 //! Figure 6 + Table 1 + the §4.2 bundling result: peak task dispatch and
 //! execution throughput for trivial tasks ("sleep 0").
 //!
-//! Two measurement paths:
+//! Measurement paths:
 //! * **simulated** — the calibrated machine models reproduce the paper's
 //!   numbers (that is what the calibration asserts);
+//! * **simulated, hierarchical** — the multi-dispatcher core: sustained
+//!   sleep-0 dispatch for 1, 4 and 16 partition dispatchers at 4096
+//!   BG/P nodes, emitted to `BENCH_dispatch.json`;
 //! * **live** — the real Rust service + executors over loopback TCP on
 //!   *this* host: our own achieved dispatch rate, the honest measurement
 //!   of the reimplementation. (The paper's service hosts were a 4-core
 //!   2.5 GHz PPC and an 8-core 2.33 GHz Xeon; this host: 1 CPU.)
 
+use falkon::falkon::coordinator::HierarchyConfig;
 use falkon::falkon::dispatch::DispatchConfig;
-use falkon::falkon::exec::{spawn_fleet, DefaultRunner};
+use falkon::falkon::exec::{spawn_fleet_partitioned, DefaultRunner};
 use falkon::falkon::service::{Service, ServiceConfig};
-use falkon::falkon::simworld::{run_sleep_workload, WireProto};
+use falkon::falkon::simworld::{run_sleep_workload, SimTask, WireProto, World, WorldConfig};
 use falkon::falkon::task::TaskPayload;
 use falkon::sim::machine::Machine;
-use falkon::util::bench::{banner, Table};
+use falkon::util::bench::{banner, emit_json, Table};
+use falkon::util::json::Json;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -23,14 +28,23 @@ fn quick() -> bool {
     std::env::var("FALKON_BENCH_QUICK").is_ok()
 }
 
-fn live_throughput(n_exec: usize, n_tasks: usize, bundle: usize, credit: u32) -> f64 {
+fn live_throughput(
+    n_exec: usize,
+    n_tasks: usize,
+    bundle: usize,
+    credit: u32,
+    partitions: usize,
+) -> f64 {
     let svc = Service::start(ServiceConfig {
         bind: "127.0.0.1:0".into(),
         dispatch: DispatchConfig { bundle, data_aware: false },
         retry: Default::default(),
+        hierarchy: HierarchyConfig { partitions, ..Default::default() },
     })
     .unwrap();
-    let fleet = spawn_fleet(&svc.addr().to_string(), n_exec, Arc::new(DefaultRunner), credit).unwrap();
+    let fleet =
+        spawn_fleet_partitioned(&svc.addr().to_string(), n_exec, Arc::new(DefaultRunner), credit, partitions)
+            .unwrap();
     svc.wait_executors(n_exec, Duration::from_secs(10));
     let t0 = Instant::now();
     svc.submit_many((0..n_tasks).map(|_| TaskPayload::Sleep { secs: 0.0 }));
@@ -42,6 +56,19 @@ fn live_throughput(n_exec: usize, n_tasks: usize, bundle: usize, credit: u32) ->
     }
     svc.shutdown();
     n_tasks as f64 / dt
+}
+
+/// Sustained simulated dispatch throughput at 4096 BG/P nodes with
+/// `dispatchers` partition dispatchers.
+fn sharded_sim_throughput(dispatchers: usize, n_tasks: usize) -> f64 {
+    let machine = Machine::bgp_psets(64); // 4096 nodes / 16384 cores
+    let cores = machine.cores();
+    let mut cfg = WorldConfig::new(machine, cores);
+    cfg.dispatchers = dispatchers;
+    let mut w = World::new(cfg, vec![SimTask::sleep(0.0); n_tasks]);
+    w.run(u64::MAX);
+    assert_eq!(w.completed(), n_tasks, "bench run must conserve tasks");
+    w.campaign().throughput()
 }
 
 fn main() {
@@ -72,14 +99,74 @@ fn main() {
     }
     t.print();
 
-    banner("Live loopback TCP — this host (reimplementation measurement)");
-    let live_n = if quick() { 5_000 } else { 50_000 };
-    let mut t = Table::new(&["executors", "bundle", "credit", "tasks/s"]);
-    for (execs, bundle, credit) in [(4usize, 1usize, 1u32), (4, 10, 16), (8, 1, 1), (8, 10, 16)] {
-        let tput = live_throughput(execs, live_n, bundle, credit);
-        t.row(&[execs.to_string(), bundle.to_string(), credit.to_string(), format!("{tput:.0}")]);
+    banner("Hierarchical dispatch — sustained t/s at 4096 BG/P nodes (simulated)");
+    let shard_n = if quick() { 10_000 } else { 100_000 };
+    let mut t = Table::new(&["dispatchers", "tasks/s", "speedup vs 1"]);
+    let mut shard_rows = Vec::new();
+    let mut tput_by_shards = std::collections::HashMap::new();
+    for shards in [1usize, 4, 16] {
+        let tput = sharded_sim_throughput(shards, shard_n);
+        tput_by_shards.insert(shards, tput);
+        let base = tput_by_shards[&1];
+        t.row(&[shards.to_string(), format!("{tput:.0}"), format!("{:.2}x", tput / base)]);
+        let mut row = Json::obj();
+        row.set("shards", Json::Num(shards as f64))
+            .set("tasks_per_s", Json::Num(tput))
+            .set("speedup", Json::Num(tput / base));
+        shard_rows.push(row);
     }
     t.print();
+    // Regression gate (also enforced by tests/sharded_dispatch_integration):
+    // the hierarchy must scale, and the condvar-driven service loop must
+    // not have cost the single-dispatcher baseline its calibration.
+    let single = tput_by_shards[&1];
+    assert!(
+        (single - 1758.0).abs() / 1758.0 < 0.08,
+        "single-dispatcher baseline drifted: {single:.0} t/s"
+    );
+    assert!(
+        tput_by_shards[&16] >= 4.0 * single,
+        "16 shards must sustain >= 4x: {} vs {single}",
+        tput_by_shards[&16]
+    );
+
+    banner("Live loopback TCP — this host (reimplementation measurement)");
+    let live_n = if quick() { 5_000 } else { 50_000 };
+    let mut t = Table::new(&["executors", "bundle", "credit", "partitions", "tasks/s"]);
+    let mut live_rows = Vec::new();
+    for (execs, bundle, credit, parts) in [
+        (4usize, 1usize, 1u32, 1usize),
+        (4, 10, 16, 1),
+        (8, 1, 1, 1),
+        (8, 1, 1, 4),
+        (8, 10, 16, 1),
+        (8, 10, 16, 4),
+    ] {
+        let tput = live_throughput(execs, live_n, bundle, credit, parts);
+        t.row(&[
+            execs.to_string(),
+            bundle.to_string(),
+            credit.to_string(),
+            parts.to_string(),
+            format!("{tput:.0}"),
+        ]);
+        let mut row = Json::obj();
+        row.set("executors", Json::Num(execs as f64))
+            .set("bundle", Json::Num(bundle as f64))
+            .set("credit", Json::Num(credit as f64))
+            .set("partitions", Json::Num(parts as f64))
+            .set("tasks_per_s", Json::Num(tput));
+        live_rows.push(row);
+    }
+    t.print();
+
+    let mut summary = Json::obj();
+    summary
+        .set("nodes", Json::Num(4096.0))
+        .set("tasks", Json::Num(shard_n as f64))
+        .set("sharded_sim", Json::Arr(shard_rows))
+        .set("live", Json::Arr(live_rows));
+    emit_json("dispatch", &summary).expect("write BENCH_dispatch.json");
 
     banner("§4.2 bundling sweep (simulated ANL/UC, WS protocol)");
     let mut t = Table::new(&["bundle", "tasks/s", "speedup vs bundle=1"]);

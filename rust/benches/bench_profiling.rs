@@ -28,6 +28,7 @@ fn profile_live(proto: Proto, n: usize) -> Vec<(&'static str, f64)> {
         bind: "127.0.0.1:0".into(),
         dispatch: DispatchConfig::default(),
         retry: Default::default(),
+        ..Default::default()
     })
     .unwrap();
     let addr = svc.addr().to_string();
@@ -40,6 +41,7 @@ fn profile_live(proto: Proto, n: usize) -> Vec<(&'static str, f64)> {
                     cores: 1,
                     proto,
                     initial_credit: 1,
+                    partition: 0,
                 },
                 Arc::new(DefaultRunner),
             )
@@ -73,6 +75,7 @@ fn main() {
 
     banner("Codec cost microbenchmark (encode+decode one sleep-0 dispatch)");
     let msg = Msg::Dispatch {
+        shard: 0,
         tasks: vec![WireTask { id: 1, payload: TaskPayload::Sleep { secs: 0.0 } }],
     };
     let iters = if quick() { 20_000 } else { 200_000 };

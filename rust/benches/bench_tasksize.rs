@@ -58,6 +58,7 @@ fn main() {
             bind: "127.0.0.1:0".into(),
             dispatch: DispatchConfig::default(),
             retry: Default::default(),
+            ..Default::default()
         })
         .unwrap();
         let fleet = spawn_fleet(&svc.addr().to_string(), 4, Arc::new(DefaultRunner), 1).unwrap();

@@ -1,0 +1,279 @@
+//! Hierarchical dispatch core: a coordinator admitting submissions over N
+//! per-partition queue shards, with work stealing between shards.
+//!
+//! The follow-up work "Towards Loosely-Coupled Programming on Petascale
+//! Systems" (arXiv:0808.3540) scales Falkon on the BG/P by distributing
+//! dispatch across per-pset dispatchers. This module holds the pieces of
+//! that refactor the fabrics share by *construction*, not by import:
+//! [`HierarchyConfig`] and [`ShardStat`] are used directly by the live
+//! service, and [`ShardedQueues`] is the single-threaded **reference
+//! composition** of the shard/steal semantics — the same
+//! `TaskQueues::{submit_with_id, steal_back, inject}` primitives and
+//! transfer accounting the live service stripes across per-partition
+//! mutexes ([`crate::falkon::service`]). The property tests hammer the
+//! global conservation invariant here, where arbitrary interleavings can
+//! be driven deterministically; the simulator models the same policies
+//! over task indices in its event loop ([`crate::falkon::simworld`]).
+
+use crate::falkon::errors::RetryPolicy;
+use crate::falkon::queue::{TaskOutcome, TaskQueues};
+use crate::falkon::task::{Task, TaskId, TaskPayload};
+
+/// Shape of the dispatch hierarchy.
+#[derive(Clone, Copy, Debug)]
+pub struct HierarchyConfig {
+    /// Number of partition dispatchers (queue shards). 1 = the classic
+    /// single central dispatcher.
+    pub partitions: usize,
+    /// Max queued tasks moved per work-steal.
+    pub steal_batch: usize,
+}
+
+impl Default for HierarchyConfig {
+    fn default() -> Self {
+        HierarchyConfig { partitions: 1, steal_batch: 32 }
+    }
+}
+
+impl HierarchyConfig {
+    /// Normalized partition count (at least 1).
+    pub fn shards(&self) -> usize {
+        self.partitions.max(1)
+    }
+}
+
+/// Per-shard observability counters (dispatch rate inputs, steal counts,
+/// imbalance — surfaced by `Service::shard_stats` and the dispatch bench).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardStat {
+    pub shard: usize,
+    /// Tasks this shard ever dispatched to an executor.
+    pub dispatched: u64,
+    /// Queued tasks stolen into this shard.
+    pub stolen_in: u64,
+    /// Queued tasks stolen away from this shard.
+    pub stolen_out: u64,
+    /// Currently waiting.
+    pub waiting: usize,
+    /// Currently out at executors.
+    pub pending: usize,
+}
+
+/// N queue shards behind one id space: the single-threaded composition
+/// used by the simulator and the property tests. (The live service holds
+/// each shard behind its own mutex instead — same semantics, striped
+/// locking.)
+#[derive(Debug)]
+pub struct ShardedQueues {
+    shards: Vec<TaskQueues>,
+    dispatched: Vec<u64>,
+    next_id: TaskId,
+    /// Steal *events* (not tasks) — a drained shard pulling one batch.
+    steal_events: u64,
+}
+
+impl ShardedQueues {
+    pub fn new(cfg: HierarchyConfig) -> ShardedQueues {
+        let n = cfg.shards();
+        ShardedQueues {
+            shards: (0..n).map(|_| TaskQueues::new()).collect(),
+            dispatched: vec![0; n],
+            next_id: 0,
+            steal_events: 0,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Direct shard access (read-only views, e.g. `peek_waiting`).
+    pub fn shard(&self, s: usize) -> &TaskQueues {
+        &self.shards[s]
+    }
+
+    /// Submit into shard `s` under a globally-unique id.
+    pub fn submit_to(&mut self, s: usize, payload: TaskPayload) -> TaskId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.shards[s].submit_with_id(id, payload);
+        id
+    }
+
+    /// Pop up to `n` tasks from shard `s` for dispatch to `executor`.
+    pub fn take_for_dispatch(&mut self, s: usize, executor: usize, n: usize) -> Vec<Task> {
+        let out = self.shards[s].take_for_dispatch(executor, n);
+        self.dispatched[s] += out.len() as u64;
+        out
+    }
+
+    /// Record a completion on shard `s`.
+    pub fn complete(&mut self, s: usize, id: TaskId, exit_code: i32) {
+        self.shards[s].complete(id, exit_code);
+    }
+
+    /// Record a failed attempt on shard `s`; true if re-queued there.
+    pub fn fail_attempt(
+        &mut self,
+        s: usize,
+        id: TaskId,
+        error: crate::falkon::errors::TaskError,
+        policy: &RetryPolicy,
+    ) -> bool {
+        self.shards[s].fail_attempt(id, error, policy)
+    }
+
+    /// Move up to `n` queued tasks from `victim` to `thief`. Returns how
+    /// many moved (0 = nothing to steal; no event recorded).
+    pub fn steal(&mut self, victim: usize, thief: usize, n: usize) -> usize {
+        assert_ne!(victim, thief, "a shard cannot steal from itself");
+        let tasks = self.shards[victim].steal_back(n);
+        let moved = tasks.len();
+        for t in tasks {
+            self.shards[thief].inject(t);
+        }
+        if moved > 0 {
+            self.steal_events += 1;
+        }
+        moved
+    }
+
+    /// The most-loaded shard by waiting length, if any task is waiting
+    /// anywhere (the steal-victim policy).
+    pub fn most_loaded(&self) -> Option<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, q)| q.waiting_len())
+            .filter(|(_, q)| q.waiting_len() > 0)
+            .map(|(s, _)| s)
+    }
+
+    pub fn steal_events(&self) -> u64 {
+        self.steal_events
+    }
+
+    pub fn waiting_total(&self) -> usize {
+        self.shards.iter().map(|q| q.waiting_len()).sum()
+    }
+
+    pub fn pending_total(&self) -> usize {
+        self.shards.iter().map(|q| q.pending_len()).sum()
+    }
+
+    pub fn submitted_total(&self) -> u64 {
+        self.shards.iter().map(|q| q.submitted()).sum()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.shards.iter().all(|q| q.all_done())
+    }
+
+    /// Drain finished outcomes from every shard.
+    pub fn drain_done(&mut self) -> Vec<TaskOutcome> {
+        let mut out = Vec::new();
+        for q in &mut self.shards {
+            out.extend(q.drain_done());
+        }
+        out
+    }
+
+    /// Per-shard counters snapshot.
+    pub fn stats(&self) -> Vec<ShardStat> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(s, q)| ShardStat {
+                shard: s,
+                dispatched: self.dispatched[s],
+                stolen_in: q.transferred_in(),
+                stolen_out: q.transferred_out(),
+                waiting: q.waiting_len(),
+                pending: q.pending_len(),
+            })
+            .collect()
+    }
+
+    /// Global conservation: every submitted task is waiting, pending,
+    /// done, or drained — *across* shards — and cross-shard transfers
+    /// balance (total stolen in == total stolen out). A steal that drops
+    /// or duplicates a task breaks one or the other.
+    pub fn conserved(&self, drained: u64) -> bool {
+        let transfers_balance = self.shards.iter().map(|q| q.transferred_in()).sum::<u64>()
+            == self.shards.iter().map(|q| q.transferred_out()).sum::<u64>();
+        let global = self.submitted_total()
+            == self.waiting_total() as u64
+                + self.pending_total() as u64
+                + self.shards.iter().map(|q| q.done_len()).sum::<usize>() as u64
+                + drained;
+        transfers_balance && global
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::falkon::errors::TaskError;
+
+    fn sleep0() -> TaskPayload {
+        TaskPayload::Sleep { secs: 0.0 }
+    }
+
+    #[test]
+    fn ids_unique_across_shards() {
+        let mut sq = ShardedQueues::new(HierarchyConfig { partitions: 4, steal_batch: 8 });
+        let mut ids = Vec::new();
+        for i in 0..40 {
+            ids.push(sq.submit_to(i % 4, sleep0()));
+        }
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 40, "ids must be globally unique");
+        assert_eq!(sq.waiting_total(), 40);
+        assert!(sq.conserved(0));
+    }
+
+    #[test]
+    fn steal_rebalances_and_conserves() {
+        let mut sq = ShardedQueues::new(HierarchyConfig { partitions: 2, steal_batch: 8 });
+        for _ in 0..10 {
+            sq.submit_to(0, sleep0());
+        }
+        assert_eq!(sq.most_loaded(), Some(0));
+        let moved = sq.steal(0, 1, 4);
+        assert_eq!(moved, 4);
+        assert_eq!(sq.steal_events(), 1);
+        assert_eq!(sq.shard(0).waiting_len(), 6);
+        assert_eq!(sq.shard(1).waiting_len(), 4);
+        assert!(sq.conserved(0));
+        // Steal from an empty victim is a no-op, not an event.
+        let moved = sq.steal(1, 0, 100);
+        assert_eq!(moved, 4);
+        assert_eq!(sq.steal(1, 0, 1), 0);
+        assert_eq!(sq.steal_events(), 2);
+        assert!(sq.conserved(0));
+    }
+
+    #[test]
+    fn stolen_task_fail_attempt_accounts_on_thief() {
+        let mut sq = ShardedQueues::new(HierarchyConfig { partitions: 2, steal_batch: 8 });
+        let policy = RetryPolicy { max_attempts: 1, ..Default::default() };
+        let id = sq.submit_to(0, sleep0());
+        assert_eq!(sq.steal(0, 1, 1), 1);
+        let batch = sq.take_for_dispatch(1, 7, 1);
+        assert_eq!(batch[0].id, id);
+        assert!(!sq.fail_attempt(1, id, TaskError::NodeLost, &policy));
+        assert!(sq.conserved(0));
+        let mut drained = 0;
+        let done = sq.drain_done();
+        drained += done.len() as u64;
+        assert_eq!(done.len(), 1);
+        assert!(sq.conserved(drained));
+        assert!(sq.all_done());
+        let stats = sq.stats();
+        assert_eq!(stats[0].stolen_out, 1);
+        assert_eq!(stats[1].stolen_in, 1);
+        assert_eq!(stats[1].dispatched, 1);
+    }
+}

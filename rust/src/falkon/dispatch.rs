@@ -99,7 +99,18 @@ pub fn choose_executor(
             }
         });
     }
-    // Single pass; strict `>` keeps the earliest (FIFO) executor on ties.
+    Some(choose_executor_scored(idle, &affinity))
+}
+
+/// The single-pass pick over an idle set given a precomputed
+/// node → affinity-bytes map; strict `>` keeps the earliest (FIFO)
+/// executor on ties. Shared by [`choose_executor`] and the live per-shard
+/// dispatchers, which compute the score map from a coordinator snapshot
+/// instead of a borrowed `CacheManager`.
+pub fn choose_executor_scored(
+    idle: &[IdleExecutor],
+    affinity: &std::collections::HashMap<usize, u64>,
+) -> usize {
     let mut best_idx = 0usize;
     let mut best_bytes = affinity.get(&idle[0].node).copied().unwrap_or(0);
     for (i, e) in idle.iter().enumerate().skip(1) {
@@ -109,7 +120,48 @@ pub fn choose_executor(
             best_bytes = bytes;
         }
     }
-    Some(best_idx)
+    best_idx
+}
+
+/// A shard as seen by the coordinator's routing/steal policy — exactly
+/// the inputs [`choose_shard`] consults.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardLoad {
+    pub shard: usize,
+    /// Outstanding tasks owned by the shard (waiting + in flight to it).
+    pub queued: usize,
+    /// Bytes of the head task's working set resident in the shard's
+    /// partition (0 when data-aware placement is off).
+    pub affinity: u64,
+    /// Shards with no live executors never win (dead partition).
+    pub alive: bool,
+}
+
+/// Coordinator shard selection: **affinity first, then least loaded**.
+///
+/// The shard whose partition caches the most bytes of the task's working
+/// set wins; among affinity ties (including the common all-zero case) the
+/// least-loaded shard wins; remaining ties go to the lowest shard index,
+/// so routing is deterministic. Dead shards (no live executors) are
+/// skipped; `None` only when every shard is dead.
+pub fn choose_shard(loads: &[ShardLoad]) -> Option<usize> {
+    let mut best: Option<&ShardLoad> = None;
+    for l in loads {
+        if !l.alive {
+            continue;
+        }
+        best = Some(match best {
+            None => l,
+            Some(b) => {
+                if l.affinity > b.affinity || (l.affinity == b.affinity && l.queued < b.queued) {
+                    l
+                } else {
+                    b
+                }
+            }
+        });
+    }
+    best.map(|l| l.shard)
 }
 
 /// Bundle size for an executor: limited by both policy and credit.
@@ -212,5 +264,60 @@ mod tests {
         let cache = CacheManager::new(1, 1 << 30, 1 << 20);
         let t = Task::new(1, TaskPayload::Sleep { secs: 0.0 });
         assert_eq!(cache_affinity(&t, 0, &cache), 0);
+    }
+
+    fn load(shard: usize, queued: usize, affinity: u64) -> ShardLoad {
+        ShardLoad { shard, queued, affinity, alive: true }
+    }
+
+    #[test]
+    fn choose_shard_affinity_beats_load() {
+        // A shard whose partition caches the working set wins even when
+        // it is more loaded than the others.
+        let loads = [load(0, 0, 0), load(1, 500, 1_000_000), load(2, 0, 0)];
+        assert_eq!(choose_shard(&loads), Some(1));
+    }
+
+    #[test]
+    fn choose_shard_falls_back_to_least_loaded() {
+        let loads = [load(0, 9, 0), load(1, 3, 0), load(2, 7, 0)];
+        assert_eq!(choose_shard(&loads), Some(1));
+    }
+
+    #[test]
+    fn choose_shard_ties_keep_lowest_index() {
+        // Mirrors `data_aware_nonzero_affinity_ties_keep_fifo_order`: on
+        // full ties (same affinity, same load) the FIRST shard wins —
+        // deterministic routing, no index arithmetic artifacts.
+        let loads = [load(3, 5, 10), load(1, 5, 10), load(2, 5, 10)];
+        assert_eq!(choose_shard(&loads), Some(3));
+        // Affinity ties break by load before index.
+        let loads = [load(0, 5, 10), load(1, 4, 10)];
+        assert_eq!(choose_shard(&loads), Some(1));
+    }
+
+    #[test]
+    fn choose_shard_skips_dead_partitions() {
+        let mut loads = [load(0, 0, 9999), load(1, 50, 0)];
+        loads[0].alive = false;
+        assert_eq!(choose_shard(&loads), Some(1));
+        loads[1].alive = false;
+        assert_eq!(choose_shard(&loads), None);
+    }
+
+    #[test]
+    fn scored_pick_matches_choose_executor() {
+        // choose_executor_scored is the shared inner pass: feeding it the
+        // same affinity map must reproduce choose_executor's pick.
+        let cfg = DispatchConfig { bundle: 1, data_aware: true };
+        let mut cache = CacheManager::new(3, 1 << 30, 1 << 20);
+        cache.commit(2, "big.dat".into(), 1_000_000).unwrap();
+        let idles = vec![idle(1, 1, 0), idle(2, 1, 1), idle(3, 1, 2)];
+        let task = sim_task(1, vec![("big.dat".into(), 1_000_000)]);
+        let via_cache = choose_executor(&idles, Some(&task), &cfg, Some(&cache)).unwrap();
+        let mut scores = std::collections::HashMap::new();
+        scores.insert(2usize, 1_000_000u64);
+        assert_eq!(choose_executor_scored(&idles, &scores), via_cache);
+        assert_eq!(via_cache, 2);
     }
 }

@@ -94,17 +94,34 @@ pub struct ExecutorConfig {
     /// Initial credit granted to the service. The C executor grants 1
     /// (strict pull); the Java-style executor grants `cores` (push-like).
     pub initial_credit: u32,
+    /// Machine partition (BG/P pset) this executor's node belongs to;
+    /// the service maps it onto a queue shard (modulo its shard count).
+    pub partition: u32,
 }
 
 impl ExecutorConfig {
     /// C-style executor: single task outstanding, TCP protocol.
     pub fn c_style(service_addr: String, executor_id: u64) -> ExecutorConfig {
-        ExecutorConfig { service_addr, executor_id, cores: 1, proto: Proto::Tcp, initial_credit: 1 }
+        ExecutorConfig {
+            service_addr,
+            executor_id,
+            cores: 1,
+            proto: Proto::Tcp,
+            initial_credit: 1,
+            partition: 0,
+        }
     }
 
     /// Java-style executor: concurrent tasks, WS protocol, push-like credit.
     pub fn java_style(service_addr: String, executor_id: u64, cores: u32) -> ExecutorConfig {
-        ExecutorConfig { service_addr, executor_id, cores, proto: Proto::Ws, initial_credit: cores }
+        ExecutorConfig {
+            service_addr,
+            executor_id,
+            cores,
+            proto: Proto::Ws,
+            initial_credit: cores,
+            partition: 0,
+        }
     }
 }
 
@@ -132,7 +149,11 @@ impl Executor {
         ramdisk: Option<Arc<Ramdisk>>,
     ) -> anyhow::Result<Executor> {
         let mut framed = Framed::connect(&config.service_addr, config.proto)?;
-        framed.send(&Msg::Register { executor_id: config.executor_id, cores: config.cores })?;
+        framed.send(&Msg::Register {
+            executor_id: config.executor_id,
+            cores: config.cores,
+            partition: config.partition,
+        })?;
         framed.send(&Msg::Ready { executor_id: config.executor_id, slots: config.initial_credit })?;
         let (mut read_half, write_half) = framed.split()?;
 
@@ -181,14 +202,14 @@ impl Executor {
             threads.push(std::thread::spawn(move || {
                 loop {
                     match read_half.recv() {
-                        Ok(Msg::Dispatch { tasks }) => {
+                        Ok(Msg::Dispatch { shard: _, tasks }) => {
                             for t in tasks {
                                 if tx.send(t).is_err() {
                                     return;
                                 }
                             }
                         }
-                        Ok(Msg::StagePut { key, data }) => {
+                        Ok(Msg::StagePut { key, data, gen }) => {
                             let ok = match (&ramdisk, stage_key_ok(&key)) {
                                 (Some(rd), true) => {
                                     rd.write(&format!("cache/{key}"), &data).is_ok()
@@ -200,6 +221,7 @@ impl Executor {
                                 key,
                                 bytes: data.len() as u64,
                                 ok,
+                                gen,
                             });
                         }
                         Ok(Msg::Suspend { .. }) => {
@@ -238,13 +260,28 @@ fn stage_key_ok(key: &str) -> bool {
         && !key.split('/').any(|c| c.is_empty() || c == "." || c == "..")
 }
 
-/// Spawn `n` C-style executors against `addr` (test/bench helper).
+/// Spawn `n` C-style executors against `addr` (test/bench helper), all
+/// on partition 0 (the single-dispatcher layout).
 pub fn spawn_fleet(
     addr: &str,
     n: usize,
     runner: Arc<dyn TaskRunner>,
     initial_credit: u32,
 ) -> anyhow::Result<Vec<Executor>> {
+    spawn_fleet_partitioned(addr, n, runner, initial_credit, 1)
+}
+
+/// Spawn `n` C-style executors spread round-robin over `partitions`
+/// machine partitions (executor `i` registers on partition
+/// `i % partitions`), for driving a sharded service.
+pub fn spawn_fleet_partitioned(
+    addr: &str,
+    n: usize,
+    runner: Arc<dyn TaskRunner>,
+    initial_credit: u32,
+    partitions: usize,
+) -> anyhow::Result<Vec<Executor>> {
+    let parts = partitions.max(1) as u64;
     (0..n)
         .map(|i| {
             let cfg = ExecutorConfig {
@@ -253,6 +290,7 @@ pub fn spawn_fleet(
                 cores: 1,
                 proto: Proto::Tcp,
                 initial_credit,
+                partition: (i as u64 % parts) as u32,
             };
             Executor::start(cfg, runner.clone())
         })

@@ -15,11 +15,21 @@
 //!   engine against the machine models, used to replay the paper's
 //!   4096–160K-core experiments.
 //!
+//! Since the hierarchical-dispatch refactor both fabrics run a two-level
+//! core: a coordinator admits submissions and shards them over N
+//! per-partition dispatchers (one per machine partition), each owning its
+//! own queue shard and idle-executor set, with work stealing between
+//! shards when a partition drains. The shard-selection policy lives in
+//! [`dispatch`]; [`coordinator`] holds the hierarchy config, per-shard
+//! stats, and the reference sharded-queue composition the property tests
+//! verify conservation against.
+//!
 //! Supporting pieces: [`task`] (lifecycle model), [`queue`] (wait/pending
 //! accounting with conservation invariants), [`errors`] (the §3.3 failure
 //! taxonomy and retry/suspension policy), [`theory`] (the Figure 1–2
 //! efficiency model).
 
+pub mod coordinator;
 pub mod dispatch;
 pub mod errors;
 pub mod exec;

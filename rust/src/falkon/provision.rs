@@ -176,6 +176,77 @@ impl<L: Lrm> Provisioner<L> {
     }
 }
 
+/// Per-partition provisioning for the hierarchical dispatcher: one
+/// [`Provisioner`] per partition dispatcher, each driven by *its shard's*
+/// queue depth rather than the global one, so a partition whose shard
+/// backs up grows independently while drained partitions release.
+pub struct PartitionedProvisioner<L: Lrm> {
+    parts: Vec<Provisioner<L>>,
+}
+
+impl<L: Lrm> PartitionedProvisioner<L> {
+    /// One provisioner per partition (callers build each over the LRM
+    /// slice that owns that partition's nodes).
+    pub fn new(parts: Vec<Provisioner<L>>) -> PartitionedProvisioner<L> {
+        assert!(!parts.is_empty(), "at least one partition");
+        PartitionedProvisioner { parts }
+    }
+
+    pub fn partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn partition(&self, p: usize) -> &Provisioner<L> {
+        &self.parts[p]
+    }
+
+    /// Nodes currently held across all partitions.
+    pub fn held_nodes_total(&self) -> usize {
+        self.parts.iter().map(|p| p.held_nodes()).sum()
+    }
+
+    /// Earliest boot-completion event across partitions.
+    pub fn next_event(&self) -> Option<Time> {
+        self.parts.iter().filter_map(|p| p.next_event()).min()
+    }
+
+    /// Advance every partition with its own (queue_len, busy) load;
+    /// returns (partition, events) for every partition that did anything.
+    /// `loads` must have one entry per partition.
+    pub fn tick(&mut self, now: Time, loads: &[(usize, bool)]) -> Vec<(usize, Vec<ProvisionEvent>)> {
+        assert_eq!(loads.len(), self.parts.len(), "one load per partition");
+        self.parts
+            .iter_mut()
+            .zip(loads)
+            .enumerate()
+            .filter_map(|(i, (p, &(queue_len, busy)))| {
+                let ev = p.tick(now, queue_len, busy);
+                if ev.is_empty() {
+                    None
+                } else {
+                    Some((i, ev))
+                }
+            })
+            .collect()
+    }
+
+    /// Release everything in every partition.
+    pub fn release_all(&mut self, now: Time) -> Vec<(usize, Vec<ProvisionEvent>)> {
+        self.parts
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, p)| {
+                let ev = p.release_all(now);
+                if ev.is_empty() {
+                    None
+                } else {
+                    Some((i, ev))
+                }
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +335,42 @@ mod tests {
         let ev = p.tick(45 * SECS, 0, false);
         assert!(ev.iter().any(|e| matches!(e, ProvisionEvent::Released { .. })));
         assert!(p.held_nodes() >= 1, "keeps the floor");
+    }
+
+    #[test]
+    fn partitioned_provisioner_scales_per_shard_load() {
+        // Two partitions under dynamic policy: only the loaded shard's
+        // partition grows; the idle one stays at its floor and releases.
+        let dynamic = |max: usize| ProvisionPolicy::Dynamic {
+            min_nodes: 1,
+            max_nodes: max,
+            tasks_per_node: 10,
+            idle_release_s: 30.0,
+            walltime_s: 3600.0,
+        };
+        let mut pp = PartitionedProvisioner::new(vec![
+            Provisioner::new(dynamic(50), Slurm::new(Machine::sicortex())),
+            Provisioner::new(dynamic(50), Slurm::new(Machine::sicortex())),
+        ]);
+        assert_eq!(pp.partitions(), 2);
+        // Shard 0 backed up (400 queued), shard 1 idle.
+        let ev = pp.tick(0, &[(400, true), (0, false)]);
+        assert!(ev.iter().any(|(p, _)| *p == 0));
+        assert_eq!(pp.partition(0).held_nodes(), 40);
+        assert_eq!(pp.partition(1).held_nodes(), 1, "idle shard keeps the floor");
+        assert_eq!(pp.held_nodes_total(), 41);
+        // Shard 0 drains; past the idle window it releases down to its
+        // floor while shard 1 now grows.
+        pp.tick(10 * SECS, &[(0, false), (200, true)]);
+        let ev = pp.tick(45 * SECS, &[(0, false), (200, true)]);
+        assert!(ev
+            .iter()
+            .any(|(p, evs)| *p == 0
+                && evs.iter().any(|e| matches!(e, ProvisionEvent::Released { .. }))));
+        assert_eq!(pp.partition(1).held_nodes(), 20);
+        // End of campaign: everything released everywhere.
+        pp.release_all(60 * SECS);
+        assert_eq!(pp.held_nodes_total(), 0);
     }
 
     #[test]

@@ -4,6 +4,13 @@
 //! tasks that are out at executors. Conservation — every submitted task is
 //! in exactly one of {waiting, pending, done} — is an invariant the
 //! property tests exercise under randomized churn and failures.
+//!
+//! Since the hierarchical-dispatch refactor a `TaskQueues` is one *shard*
+//! of the service's queue: ids are assigned by the coordinator
+//! ([`TaskQueues::submit_with_id`]), and shards exchange queued tasks via
+//! [`TaskQueues::steal_back`] / [`TaskQueues::inject`]. Cross-shard moves
+//! are tracked by transfer counters so conservation stays checkable both
+//! per shard and globally (see `falkon::coordinator::ShardedQueues`).
 
 use crate::falkon::errors::TaskError;
 use crate::falkon::task::{Task, TaskId, TaskPayload, TaskState};
@@ -34,6 +41,10 @@ pub struct TaskQueues {
     done: Vec<TaskOutcome>,
     next_id: TaskId,
     submitted: u64,
+    /// Queued tasks stolen away by another shard.
+    transferred_out: u64,
+    /// Queued tasks injected from another shard.
+    transferred_in: u64,
 }
 
 impl TaskQueues {
@@ -45,12 +56,21 @@ impl TaskQueues {
     pub fn submit(&mut self, payload: TaskPayload) -> TaskId {
         let id = self.next_id;
         self.next_id += 1;
+        self.submit_with_id(id, payload);
+        id
+    }
+
+    /// Submit a payload under an externally-assigned id (the coordinator
+    /// allocates globally unique ids across shards). `id` must be unique
+    /// within this shard.
+    pub fn submit_with_id(&mut self, id: TaskId, payload: TaskPayload) {
+        debug_assert!(!self.tasks.contains_key(&id), "duplicate task id {id}");
+        self.next_id = self.next_id.max(id + 1);
         let mut task = Task::new(id, payload);
         task.advance(TaskState::Queued).expect("Submitted->Queued");
         self.tasks.insert(id, task);
         self.waiting.push_back(id);
         self.submitted += 1;
-        id
     }
 
     /// Number of tasks waiting for dispatch.
@@ -168,10 +188,53 @@ impl TaskQueues {
         std::mem::take(&mut self.done)
     }
 
-    /// Conservation check: submitted == waiting + pending + done (+drained).
+    /// Remove up to `n` tasks from the *back* of the wait queue for
+    /// transfer to another shard (work stealing steals the coldest work,
+    /// preserving the victim's FIFO head). The tasks keep their ids,
+    /// attempt counts and `Queued` state.
+    pub fn steal_back(&mut self, n: usize) -> Vec<Task> {
+        let k = n.min(self.waiting.len());
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let id = self.waiting.pop_back().expect("len checked");
+            let task = self.tasks.remove(&id).expect("waiting task exists");
+            self.transferred_out += 1;
+            out.push(task);
+        }
+        // Stolen oldest-first, so the thief's push order keeps FIFO.
+        out.reverse();
+        out
+    }
+
+    /// Accept a task stolen from another shard: it joins the back of this
+    /// shard's wait queue, keeping its id and attempt history.
+    pub fn inject(&mut self, task: Task) {
+        debug_assert!(task.state == TaskState::Queued, "inject requires a queued task");
+        debug_assert!(!self.tasks.contains_key(&task.id), "duplicate injected id {}", task.id);
+        self.waiting.push_back(task.id);
+        self.tasks.insert(task.id, task);
+        self.transferred_in += 1;
+    }
+
+    /// Queued tasks this shard gave up to work stealing.
+    pub fn transferred_out(&self) -> u64 {
+        self.transferred_out
+    }
+
+    /// Queued tasks this shard received from work stealing.
+    pub fn transferred_in(&self) -> u64 {
+        self.transferred_in
+    }
+
+    /// Conservation check: every task that entered the shard (submitted or
+    /// stolen in) is waiting, pending, done, drained, or was stolen away.
     pub fn conserved(&self, drained: u64) -> bool {
-        self.submitted
-            == self.waiting.len() as u64 + self.pending.len() as u64 + self.done.len() as u64 + drained
+        self.submitted + self.transferred_in
+            == self.waiting.len() as u64
+                + self.pending.len() as u64
+                + self.done.len() as u64
+                + drained
+                + self.transferred_out
     }
 }
 
@@ -255,6 +318,57 @@ mod tests {
         q.take_for_dispatch(9, 1);
         assert_eq!(q.pending_on(7), vec![a]);
         assert_eq!(q.pending_on(9), vec![b]);
+    }
+
+    #[test]
+    fn steal_moves_coldest_work_and_preserves_order() {
+        let mut victim = TaskQueues::new();
+        let mut thief = TaskQueues::new();
+        let ids: Vec<TaskId> = (0..5).map(|_| victim.submit(sleep0())).collect();
+        let stolen = victim.steal_back(2);
+        // The two COLDEST tasks move, oldest-first, so the thief appends
+        // them in FIFO order; the victim's head is untouched.
+        assert_eq!(stolen.iter().map(|t| t.id).collect::<Vec<_>>(), ids[3..]);
+        assert_eq!(victim.waiting_len(), 3);
+        assert_eq!(victim.transferred_out(), 2);
+        for t in stolen {
+            thief.inject(t);
+        }
+        assert_eq!(thief.transferred_in(), 2);
+        let batch = thief.take_for_dispatch(0, 10);
+        assert_eq!(batch.iter().map(|t| t.id).collect::<Vec<_>>(), ids[3..]);
+        // Both shards stay individually conserved.
+        assert!(victim.conserved(0));
+        assert!(thief.conserved(0));
+    }
+
+    #[test]
+    fn stolen_task_keeps_attempt_history() {
+        let policy = RetryPolicy { max_attempts: 3, ..Default::default() };
+        let mut victim = TaskQueues::new();
+        let id = victim.submit(sleep0());
+        victim.take_for_dispatch(0, 1);
+        assert!(victim.fail_attempt(id, TaskError::CommError, &policy)); // attempt 1
+        let stolen = victim.steal_back(1);
+        assert_eq!(stolen[0].attempts, 1);
+        let mut thief = TaskQueues::new();
+        thief.inject(stolen.into_iter().next().unwrap());
+        thief.take_for_dispatch(9, 1); // attempt 2 on the thief
+        assert!(thief.fail_attempt(id, TaskError::CommError, &policy)); // -> retry
+        thief.take_for_dispatch(9, 1); // attempt 3
+        assert!(!thief.fail_attempt(id, TaskError::CommError, &policy)); // exhausted
+        assert_eq!(thief.drain_done()[0].attempts, 3);
+        assert!(victim.conserved(0));
+        assert!(thief.conserved(1));
+    }
+
+    #[test]
+    fn steal_back_bounded_by_waiting() {
+        let mut q = TaskQueues::new();
+        q.submit(sleep0());
+        q.take_for_dispatch(0, 1); // nothing waiting, one pending
+        assert!(q.steal_back(4).is_empty());
+        assert!(q.conserved(0));
     }
 
     #[test]

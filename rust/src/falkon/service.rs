@@ -3,24 +3,41 @@
 //! suspension. This is the real (non-simulated) fabric used by the
 //! dispatch-rate benchmarks (Figs 6, 7, 10) and the end-to-end examples.
 //!
+//! Since the hierarchical-dispatch refactor the service is a two-level
+//! hierarchy (cf. arXiv:0808.3540's per-pset dispatchers): a coordinator
+//! facade admits submissions and routes them over N partition shards
+//! (affinity-first, then least-loaded — [`choose_shard`]); each shard owns
+//! its own [`TaskQueues`], idle-executor set and dispatcher thread behind
+//! its own mutex (lock striping), and steals queued work from the most
+//! loaded shard when it drains. `partitions = 1` is the paper's original
+//! central dispatcher.
+//!
 //! Thread structure (cf. paper Fig 3):
 //! ```text
-//!   acceptor ──▶ per-connection reader threads ──▶ shared State
-//!                                                     │ condvar
-//!   client submit ──▶ State.queues ──▶ dispatcher ────┘
-//!                                        │ writes via Registry (persistent sockets)
+//!   acceptor ──▶ per-connection reader threads ──▶ shard state (striped)
+//!                                                      │ per-shard condvar
+//!   client submit ─▶ route ─▶ shard queues ─▶ dispatcher[0..N] ──┘
+//!                                   ▲   │ writes via Registry (persistent sockets)
+//!                                   └───┘ work stealing between shards
 //! ```
+//!
+//! Lock order: the coordinator mutex may be taken alone or *before* a
+//! shard mutex, never after one; at most one shard mutex is held at a
+//! time (stealing locks the victim, releases it, then locks the thief).
 
-use crate::falkon::dispatch::{bundle_for, choose_executor, DispatchConfig, IdleExecutor};
+use crate::falkon::coordinator::{HierarchyConfig, ShardStat};
+use crate::falkon::dispatch::{
+    bundle_for, choose_executor_scored, choose_shard, DispatchConfig, IdleExecutor, ShardLoad,
+};
 use crate::falkon::errors::{NodeHealth, RetryPolicy, TaskError};
 use crate::falkon::queue::{TaskOutcome, TaskQueues};
-use crate::falkon::task::{TaskId, TaskPayload};
+use crate::falkon::task::{Task, TaskId, TaskPayload};
 use crate::fs::cache::CacheManager;
 use crate::net::proto::{Msg, WireTask};
 use crate::net::tcpcore::{Framed, Registry};
 use std::collections::{HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -31,6 +48,8 @@ pub struct ServiceConfig {
     pub bind: String,
     pub dispatch: DispatchConfig,
     pub retry: RetryPolicy,
+    /// Dispatch hierarchy: number of partition shards and steal batch.
+    pub hierarchy: HierarchyConfig,
 }
 
 impl Default for ServiceConfig {
@@ -39,6 +58,7 @@ impl Default for ServiceConfig {
             bind: "127.0.0.1:0".into(),
             dispatch: DispatchConfig::default(),
             retry: RetryPolicy::default(),
+            hierarchy: HierarchyConfig::default(),
         }
     }
 }
@@ -77,46 +97,139 @@ struct ExecMeta {
     cores: u32,
 }
 
-struct State {
+/// One partition dispatcher's queue shard + executor set.
+#[derive(Default)]
+struct ShardState {
     queues: TaskQueues,
     execs: HashMap<u64, ExecMeta>,
     /// Executors with credit > 0, FIFO.
     idle: VecDeque<u64>,
+}
+
+/// A shard: striped lock + its dispatcher's condvar + lock-free hints the
+/// router and thieves read without taking the lock (resynced from the
+/// real state whenever it is locked — approximate in between, exact at
+/// rest).
+struct Shard {
+    state: Mutex<ShardState>,
+    /// Wakes this shard's dispatcher (work or credit arrived).
+    work_cv: Condvar,
+    /// ≈ waiting_len (steal-victim selection).
+    queued_hint: AtomicUsize,
+    /// ≈ waiting + pending (least-loaded routing).
+    load_hint: AtomicUsize,
+    /// Registered executors (shard liveness for routing).
+    execs_up: AtomicUsize,
+    /// Tasks this shard dispatched to executors.
+    dispatched: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            state: Mutex::new(ShardState::default()),
+            work_cv: Condvar::new(),
+            queued_hint: AtomicUsize::new(0),
+            load_hint: AtomicUsize::new(0),
+            execs_up: AtomicUsize::new(0),
+            dispatched: AtomicU64::new(0),
+        }
+    }
+
+    fn sync_hints(&self, st: &ShardState) {
+        let waiting = st.queues.waiting_len();
+        self.queued_hint.store(waiting, Ordering::Relaxed);
+        self.load_hint.store(waiting + st.queues.pending_len(), Ordering::Relaxed);
+    }
+}
+
+/// Coordinator-level state: client-facing outcome buffer plus the staging
+/// residency the data-aware policies score against.
+struct CoordState {
     outcomes: Vec<TaskOutcome>,
     drained: u64,
     /// Staged-object residency by node (fed by `StageAck`s): what the
     /// data-aware dispatch policy scores executors against.
     staged: CacheManager,
-    /// (executor, key) → ok, for `wait_staged` rendezvous.
+    /// (executor, key) → ok, for `wait_staged` rendezvous. Only acks
+    /// whose generation matches `stage_expect` are recorded.
     stage_acks: HashMap<(u64, String), bool>,
+    /// (executor, key) → generation of the newest push; stale in-flight
+    /// acks (earlier generation) are dropped, fixing the ack-identity
+    /// race where a slow ack for an old push of the same key could
+    /// satisfy a newer push's rendezvous.
+    stage_expect: HashMap<(u64, String), u64>,
+    /// Currently registered executors (all shards).
+    registered: usize,
+    /// node → shard, for affinity routing.
+    node_shard: HashMap<usize, usize>,
+    /// Bumped on every state change a client waiter might care about
+    /// (results, registrations, disconnects) — lets waiters check shard
+    /// state without holding the coordinator lock and still never miss a
+    /// wakeup.
+    events: u64,
 }
 
-impl Default for State {
-    fn default() -> State {
-        State {
-            queues: TaskQueues::default(),
-            execs: HashMap::new(),
-            idle: VecDeque::new(),
+impl Default for CoordState {
+    fn default() -> CoordState {
+        CoordState {
             outcomes: Vec::new(),
             drained: 0,
             // Grown lazily as executors register; per-node budget matches
             // the simulator's default ramdisk cache size.
             staged: CacheManager::new(0, 1 << 31, 1 << 20),
             stage_acks: HashMap::new(),
+            stage_expect: HashMap::new(),
+            registered: 0,
+            node_shard: HashMap::new(),
+            events: 0,
         }
     }
 }
 
 struct Inner {
-    state: Mutex<State>,
-    /// Wakes the dispatcher (work or credit arrived).
-    work_cv: Condvar,
-    /// Wakes client waiters (outcomes arrived).
+    shards: Vec<Shard>,
+    coord: Mutex<CoordState>,
+    /// Wakes client waiters (outcomes, registrations, stage acks).
     done_cv: Condvar,
     registry: Registry,
     config: ServiceConfig,
     shutdown: AtomicBool,
     profile: Profile,
+    /// Globally-unique task ids across shards.
+    next_task_id: AtomicU64,
+    /// Staging push generations (see `CoordState::stage_expect`).
+    stage_gen: AtomicU64,
+    /// Steals currently holding tasks outside any shard (between the
+    /// victim's `steal_back` and the thief's `inject`). `wait_all` must
+    /// treat the system as not-done while this is non-zero, or a steal
+    /// racing the final completions could make its cargo invisible to
+    /// the all-shards scan and let `wait_all` return early.
+    steals_in_transit: AtomicUsize,
+    /// Service start time: the clock `NodeHealth`'s failure window is
+    /// measured on.
+    epoch: Instant,
+}
+
+impl Inner {
+    /// Record a client-visible event: bump the generation under the
+    /// coordinator lock, then wake waiters. Never call with a shard lock
+    /// held.
+    fn signal_done(&self) {
+        let mut co = self.coord.lock().expect("coord poisoned");
+        co.events += 1;
+        drop(co);
+        self.done_cv.notify_all();
+    }
+}
+
+/// Reusable routing buffers: one per submission batch, so per-task
+/// routing does no heap allocation (the dispatch benches measure this
+/// path).
+#[derive(Default)]
+struct RouteScratch {
+    affinity: Vec<u64>,
+    shard_loads: Vec<ShardLoad>,
 }
 
 /// Receivers reject frames over 64 MB (`Framed::recv`); an oversized
@@ -148,18 +261,24 @@ pub struct Service {
 }
 
 impl Service {
-    /// Start the service (binds, spawns acceptor + dispatcher).
+    /// Start the service (binds, spawns acceptor + one dispatcher thread
+    /// per partition shard).
     pub fn start(config: ServiceConfig) -> anyhow::Result<Service> {
         let listener = TcpListener::bind(&config.bind)?;
         let addr = listener.local_addr()?;
+        let n_shards = config.hierarchy.shards();
         let inner = Arc::new(Inner {
-            state: Mutex::new(State::default()),
-            work_cv: Condvar::new(),
+            shards: (0..n_shards).map(|_| Shard::new()).collect(),
+            coord: Mutex::new(CoordState::default()),
             done_cv: Condvar::new(),
             registry: Registry::new(),
             config,
             shutdown: AtomicBool::new(false),
             profile: Profile::default(),
+            next_task_id: AtomicU64::new(0),
+            stage_gen: AtomicU64::new(0),
+            steals_in_transit: AtomicUsize::new(0),
+            epoch: Instant::now(),
         });
 
         let mut threads = Vec::new();
@@ -167,9 +286,9 @@ impl Service {
             let inner = inner.clone();
             threads.push(std::thread::spawn(move || acceptor_loop(listener, inner)));
         }
-        {
+        for shard_idx in 0..n_shards {
             let inner = inner.clone();
-            threads.push(std::thread::spawn(move || dispatcher_loop(inner)));
+            threads.push(std::thread::spawn(move || dispatcher_loop(inner, shard_idx)));
         }
         Ok(Service { inner, addr, threads })
     }
@@ -179,73 +298,205 @@ impl Service {
         self.addr
     }
 
+    /// Pick the shard for a payload: affinity-first (bytes of the task's
+    /// objects staged in a shard's partition, scored against `staged` —
+    /// a coordinator-state borrow the caller acquires once per
+    /// submission batch), then least-loaded, among shards that have
+    /// executors. Falls back to `id % shards` while no executor has
+    /// registered anywhere. `scratch` buffers are reused across the
+    /// batch so the per-task routing hot path allocates nothing.
+    fn route_shard(
+        &self,
+        id: TaskId,
+        payload: &TaskPayload,
+        loads: &mut [usize],
+        staged: Option<&CoordState>,
+        scratch: &mut RouteScratch,
+    ) -> usize {
+        let inner = &self.inner;
+        let n = inner.shards.len();
+        if n == 1 {
+            return 0;
+        }
+        let RouteScratch { affinity, shard_loads } = scratch;
+        affinity.clear();
+        affinity.resize(n, 0);
+        if let Some(co) = staged {
+            if let TaskPayload::SimApp { objects, .. } = payload {
+                for (key, bytes) in objects {
+                    for node in co.staged.nodes_with(key) {
+                        if let Some(&s) = co.node_shard.get(&node) {
+                            affinity[s] += bytes;
+                        }
+                    }
+                }
+            }
+        }
+        shard_loads.clear();
+        shard_loads.extend((0..n).map(|s| ShardLoad {
+            shard: s,
+            queued: loads[s],
+            affinity: affinity[s],
+            alive: inner.shards[s].execs_up.load(Ordering::Relaxed) > 0,
+        }));
+        let s = choose_shard(shard_loads).unwrap_or((id as usize) % n);
+        loads[s] += 1;
+        s
+    }
+
+    fn load_snapshot(&self) -> Vec<usize> {
+        self.inner.shards.iter().map(|s| s.load_hint.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Lock the coordinator for affinity routing — only when data-aware
+    /// placement is on and there is more than one shard to choose from.
+    fn routing_guard(&self) -> Option<std::sync::MutexGuard<'_, CoordState>> {
+        if self.inner.config.dispatch.data_aware && self.inner.shards.len() > 1 {
+            Some(self.inner.coord.lock().expect("coord poisoned"))
+        } else {
+            None
+        }
+    }
+
     /// Submit one task; returns its id.
     pub fn submit(&self, payload: TaskPayload) -> TaskId {
         let t0 = Instant::now();
-        let id = {
-            let mut st = self.inner.state.lock().unwrap();
-            st.queues.submit(payload)
+        let id = self.inner.next_task_id.fetch_add(1, Ordering::Relaxed);
+        // Single-shard (the default): straight to shard 0, no routing
+        // state at all — the pre-refactor allocation-free hot path.
+        let s = if self.inner.shards.len() == 1 {
+            0
+        } else {
+            let mut loads = self.load_snapshot();
+            let mut scratch = RouteScratch::default();
+            let guard = self.routing_guard();
+            self.route_shard(id, &payload, &mut loads, guard.as_deref(), &mut scratch)
         };
+        {
+            let shard = &self.inner.shards[s];
+            let mut st = shard.state.lock().expect("shard poisoned");
+            st.queues.submit_with_id(id, payload);
+            shard.sync_hints(&st);
+        }
         self.inner.profile.queue_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.inner.work_cv.notify_one();
+        self.inner.shards[s].work_cv.notify_one();
         id
     }
 
-    /// Submit many tasks at once (one lock acquisition).
+    /// Submit many tasks at once: the coordinator lock is taken at most
+    /// once for the whole batch (affinity routing), and each target
+    /// shard's lock once.
     pub fn submit_many(&self, payloads: impl IntoIterator<Item = TaskPayload>) -> Vec<TaskId> {
         let t0 = Instant::now();
-        let ids: Vec<TaskId> = {
-            let mut st = self.inner.state.lock().unwrap();
-            payloads.into_iter().map(|p| st.queues.submit(p)).collect()
-        };
+        let n_shards = self.inner.shards.len();
+        let mut loads = self.load_snapshot();
+        let mut ids = Vec::new();
+        let mut per_shard: Vec<Vec<(TaskId, TaskPayload)>> = vec![Vec::new(); n_shards];
+        {
+            let guard = self.routing_guard();
+            let mut scratch = RouteScratch::default();
+            for payload in payloads {
+                let id = self.inner.next_task_id.fetch_add(1, Ordering::Relaxed);
+                let s =
+                    self.route_shard(id, &payload, &mut loads, guard.as_deref(), &mut scratch);
+                per_shard[s].push((id, payload));
+                ids.push(id);
+            }
+        }
+        for (s, batch) in per_shard.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let shard = &self.inner.shards[s];
+            {
+                let mut st = shard.state.lock().expect("shard poisoned");
+                for (id, payload) in batch {
+                    st.queues.submit_with_id(id, payload);
+                }
+                shard.sync_hints(&st);
+            }
+            shard.work_cv.notify_all();
+        }
         self.inner.profile.queue_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.inner.work_cv.notify_all();
         ids
     }
 
     /// Number of registered executors.
     pub fn executors(&self) -> usize {
-        self.inner.state.lock().unwrap().execs.len()
+        self.inner.coord.lock().expect("coord poisoned").registered
     }
 
     /// Block until `n` executors have registered (with timeout).
+    /// Notification-driven: registrations signal the coordinator condvar
+    /// (no polling sleep).
     pub fn wait_executors(&self, n: usize, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
-        while Instant::now() < deadline {
-            if self.executors() >= n {
+        let mut co = self.inner.coord.lock().expect("coord poisoned");
+        loop {
+            if co.registered >= n {
                 return true;
             }
-            std::thread::sleep(Duration::from_millis(2));
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = self
+                .inner
+                .done_cv
+                .wait_timeout(co, deadline - now)
+                .expect("coord poisoned");
+            co = g;
         }
-        false
     }
 
     /// Wait until all submitted tasks are terminal; drains outcomes.
     pub fn wait_all(&self, timeout: Duration) -> anyhow::Result<Vec<TaskOutcome>> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.inner.state.lock().unwrap();
+        let mut co = self.inner.coord.lock().expect("coord poisoned");
         loop {
-            // Collect anything finished so far.
-            let newly = st.queues.drain_done();
-            st.outcomes.extend(newly);
-            if st.queues.all_done() {
-                st.drained += st.outcomes.len() as u64;
-                return Ok(std::mem::take(&mut st.outcomes));
+            let gen = co.events;
+            drop(co);
+            // Collect anything finished so far (shard locks only; the
+            // event generation catches completions racing this scan).
+            let mut newly = Vec::new();
+            let mut all_done = true;
+            let mut waiting = 0usize;
+            let mut pending = 0usize;
+            for shard in &self.inner.shards {
+                let mut st = shard.state.lock().expect("shard poisoned");
+                newly.extend(st.queues.drain_done());
+                all_done &= st.queues.all_done();
+                waiting += st.queues.waiting_len();
+                pending += st.queues.pending_len();
+            }
+            co = self.inner.coord.lock().expect("coord poisoned");
+            co.outcomes.extend(newly);
+            // A steal in transit holds tasks outside every shard; its
+            // completion bumps `events` (signal_done) before the counter
+            // drops. Declaring done therefore requires ALL THREE: every
+            // shard drained, no steal mid-flight, and no event since the
+            // scan began — a steal that lands between our scan and this
+            // relock shows up as either the counter or the generation.
+            if all_done
+                && co.events == gen
+                && self.inner.steals_in_transit.load(Ordering::SeqCst) == 0
+            {
+                co.drained += co.outcomes.len() as u64;
+                return Ok(std::mem::take(&mut co.outcomes));
+            }
+            if co.events != gen {
+                continue; // something changed mid-scan: recheck
             }
             let now = Instant::now();
             if now >= deadline {
-                anyhow::bail!(
-                    "wait_all timed out: {} waiting, {} pending",
-                    st.queues.waiting_len(),
-                    st.queues.pending_len()
-                );
+                anyhow::bail!("wait_all timed out: {waiting} waiting, {pending} pending");
             }
             let (g, _) = self
                 .inner
                 .done_cv
-                .wait_timeout(st, deadline - now)
+                .wait_timeout(co, deadline - now)
                 .map_err(|_| anyhow::anyhow!("poisoned"))?;
-            st = g;
+            co = g;
         }
     }
 
@@ -254,12 +505,22 @@ impl Service {
     /// incremental clients like the Swift engine.
     pub fn poll_outcomes(&self, timeout: Duration) -> Vec<TaskOutcome> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.inner.state.lock().unwrap();
+        let mut co = self.inner.coord.lock().expect("coord poisoned");
         loop {
-            let newly = st.queues.drain_done();
+            let gen = co.events;
+            drop(co);
+            let mut newly = Vec::new();
+            for shard in &self.inner.shards {
+                let mut st = shard.state.lock().expect("shard poisoned");
+                newly.extend(st.queues.drain_done());
+            }
+            co = self.inner.coord.lock().expect("coord poisoned");
             if !newly.is_empty() {
-                st.drained += newly.len() as u64;
+                co.drained += newly.len() as u64;
                 return newly;
+            }
+            if co.events != gen {
+                continue;
             }
             let now = Instant::now();
             if now >= deadline {
@@ -268,20 +529,18 @@ impl Service {
             let (g, _) = self
                 .inner
                 .done_cv
-                .wait_timeout(st, deadline - now)
-                .expect("state poisoned");
-            st = g;
+                .wait_timeout(co, deadline - now)
+                .expect("coord poisoned");
+            co = g;
         }
     }
 
     /// Push a common object into one executor's ramdisk cache
     /// (collective staging, live fabric). The executor acknowledges with
-    /// `StageAck`; rendezvous with [`Service::wait_staged`]. Any earlier
-    /// *recorded* ack for the same (executor, key) is cleared first.
-    /// Caveat: acks carry no push identity, so an ack still in flight
-    /// from a previous push of the same key can satisfy `wait_staged`;
-    /// callers re-pushing changed content under the same key should use
-    /// versioned keys (e.g. `params.v2.dat`) when that matters.
+    /// `StageAck`; rendezvous with [`Service::wait_staged`]. Every push
+    /// carries a fresh generation number and the ack echoes it, so an ack
+    /// still in flight from an earlier push of the same key can never
+    /// satisfy this push's rendezvous (stale-generation acks are dropped).
     pub fn stage_object(&self, executor_id: u64, key: &str, data: &[u8]) -> anyhow::Result<()> {
         check_stage_size(key, data)?;
         let handle = self
@@ -289,40 +548,64 @@ impl Service {
             .registry
             .get(executor_id)
             .ok_or_else(|| anyhow::anyhow!("executor {executor_id} not connected"))?;
-        self.inner
-            .state
-            .lock()
-            .unwrap()
-            .stage_acks
-            .remove(&(executor_id, key.to_string()));
-        handle.send(&Msg::StagePut { key: key.to_string(), data: data.to_vec() })?;
+        // Generation allocation and expectation recording happen under
+        // ONE coordinator lock: concurrent pushes of the same key then
+        // serialize, so the LATEST generation always wins the expect
+        // table (allocated outside the lock, a later push could record
+        // first and be overwritten by the earlier one's smaller gen).
+        let gen;
+        {
+            let mut co = self.inner.coord.lock().expect("coord poisoned");
+            gen = self.inner.stage_gen.fetch_add(1, Ordering::Relaxed) + 1;
+            co.stage_acks.remove(&(executor_id, key.to_string()));
+            co.stage_expect.insert((executor_id, key.to_string()), gen);
+        }
+        handle.send(&Msg::StagePut { key: key.to_string(), data: data.to_vec(), gen })?;
         Ok(())
     }
 
-    /// Push an object to every connected executor (the loopback fabric's
-    /// one-hop "tree": the service is the partition head). Returns how
-    /// many executors the send actually succeeded on — only those are
-    /// worth a [`Service::wait_staged`] rendezvous. Pending acks for the
-    /// key are cleared first, as in [`Service::stage_object`].
+    /// Push an object to every executor connected at the moment of the
+    /// call (the loopback fabric's one-hop "tree": the service is the
+    /// partition head). Returns how many executors the send actually
+    /// succeeded on — only those are worth a [`Service::wait_staged`]
+    /// rendezvous. All recipients share one fresh push generation;
+    /// earlier acks for the key are stale. The send set is exactly the
+    /// snapshot whose ack generations were recorded — an executor
+    /// connecting mid-call is simply not part of this push (it would
+    /// otherwise receive a `StagePut` whose ack no expectation matches,
+    /// making its rendezvous hang forever).
     pub fn stage_fleet(&self, key: &str, data: &[u8]) -> anyhow::Result<usize> {
         check_stage_size(key, data)?;
+        let ids = self.inner.registry.ids();
+        // Gen allocated under the coordinator lock — see stage_object.
+        let gen;
         {
-            let mut st = self.inner.state.lock().unwrap();
-            st.stage_acks.retain(|(_, k), _| k != key);
+            let mut co = self.inner.coord.lock().expect("coord poisoned");
+            gen = self.inner.stage_gen.fetch_add(1, Ordering::Relaxed) + 1;
+            co.stage_acks.retain(|(_, k), _| k != key);
+            for id in &ids {
+                co.stage_expect.insert((*id, key.to_string()), gen);
+            }
         }
-        Ok(self
-            .inner
-            .registry
-            .send_all(&Msg::StagePut { key: key.to_string(), data: data.to_vec() }))
+        let msg = Msg::StagePut { key: key.to_string(), data: data.to_vec(), gen };
+        let mut sent = 0usize;
+        for id in ids {
+            if let Some(h) = self.inner.registry.get(id) {
+                if h.send(&msg).is_ok() {
+                    sent += 1;
+                }
+            }
+        }
+        Ok(sent)
     }
 
-    /// Wait until `executor_id` acknowledged object `key`; returns the
-    /// ack's `ok` flag, or `None` on timeout.
+    /// Wait until `executor_id` acknowledged the *newest* push of object
+    /// `key`; returns the ack's `ok` flag, or `None` on timeout.
     pub fn wait_staged(&self, executor_id: u64, key: &str, timeout: Duration) -> Option<bool> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.inner.state.lock().unwrap();
+        let mut co = self.inner.coord.lock().expect("coord poisoned");
         loop {
-            if let Some(&ok) = st.stage_acks.get(&(executor_id, key.to_string())) {
+            if let Some(&ok) = co.stage_acks.get(&(executor_id, key.to_string())) {
                 return Some(ok);
             }
             let now = Instant::now();
@@ -332,16 +615,37 @@ impl Service {
             let (g, _) = self
                 .inner
                 .done_cv
-                .wait_timeout(st, deadline - now)
-                .expect("state poisoned");
-            st = g;
+                .wait_timeout(co, deadline - now)
+                .expect("coord poisoned");
+            co = g;
         }
     }
 
     /// Nodes currently holding staged object `key` (data-aware placement
     /// input; mirrors the simulator's `CacheManager::nodes_with`).
     pub fn staged_nodes(&self, key: &str) -> Vec<usize> {
-        self.inner.state.lock().unwrap().staged.nodes_with(key)
+        self.inner.coord.lock().expect("coord poisoned").staged.nodes_with(key)
+    }
+
+    /// Per-shard dispatch counters (dispatched, stolen in/out, queue
+    /// depths) — the live fabric's shard observability.
+    pub fn shard_stats(&self) -> Vec<ShardStat> {
+        self.inner
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, shard)| {
+                let st = shard.state.lock().expect("shard poisoned");
+                ShardStat {
+                    shard: s,
+                    dispatched: shard.dispatched.load(Ordering::Relaxed),
+                    stolen_in: st.queues.transferred_in(),
+                    stolen_out: st.queues.transferred_out(),
+                    waiting: st.queues.waiting_len(),
+                    pending: st.queues.pending_len(),
+                }
+            })
+            .collect()
     }
 
     /// Stage-time profile (Fig 7).
@@ -353,7 +657,10 @@ impl Service {
     pub fn shutdown(mut self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
         self.inner.registry.broadcast(&Msg::Shutdown);
-        self.inner.work_cv.notify_all();
+        for shard in &self.inner.shards {
+            shard.work_cv.notify_all();
+        }
+        self.inner.done_cv.notify_all();
         // Unblock the acceptor with a dummy connection.
         let _ = TcpStream::connect(self.addr);
         for t in self.threads.drain(..) {
@@ -380,33 +687,41 @@ fn acceptor_loop(listener: TcpListener, inner: Arc<Inner>) {
 /// Per-connection reader: handles Register, then Ready/Result/Heartbeat.
 fn reader_loop(framed: Framed, inner: Arc<Inner>) {
     let Ok((mut read_half, write_half)) = framed.split() else { return };
-    // First message must be Register.
-    let executor_id = match read_half.recv() {
-        Ok(Msg::Register { executor_id, cores }) => {
+    // First message must be Register; it pins the connection to a shard.
+    let (executor_id, shard_idx) = match read_half.recv() {
+        Ok(Msg::Register { executor_id, cores, partition }) => {
+            let shard_idx = (partition as usize) % inner.shards.len();
             inner.registry.insert(executor_id, write_half);
-            let mut st = inner.state.lock().unwrap();
             let node = executor_id as usize;
-            if node < MAX_TRACKED_NODES {
-                st.staged.ensure_nodes(node + 1);
+            {
+                let shard = &inner.shards[shard_idx];
+                let mut st = shard.state.lock().expect("shard poisoned");
+                st.execs.insert(
+                    executor_id,
+                    ExecMeta { credit: 0, node, health: NodeHealth::default(), cores },
+                );
+                shard.execs_up.store(st.execs.len(), Ordering::Relaxed);
             }
-            st.execs.insert(
-                executor_id,
-                ExecMeta {
-                    credit: 0,
-                    node: executor_id as usize,
-                    health: NodeHealth::default(),
-                    cores,
-                },
-            );
-            executor_id
+            {
+                let mut co = inner.coord.lock().expect("coord poisoned");
+                if node < MAX_TRACKED_NODES {
+                    co.staged.ensure_nodes(node + 1);
+                }
+                co.node_shard.insert(node, shard_idx);
+                co.registered += 1;
+                co.events += 1;
+            }
+            inner.done_cv.notify_all();
+            (executor_id, shard_idx)
         }
         _ => return,
     };
+    let shard = &inner.shards[shard_idx];
 
     loop {
         match read_half.recv() {
             Ok(Msg::Ready { executor_id: _, slots }) => {
-                let mut st = inner.state.lock().unwrap();
+                let mut st = shard.state.lock().expect("shard poisoned");
                 if let Some(meta) = st.execs.get_mut(&executor_id) {
                     if meta.health.suspended {
                         continue; // no credit for suspended nodes
@@ -418,29 +733,33 @@ fn reader_loop(framed: Framed, inner: Arc<Inner>) {
                     }
                 }
                 drop(st);
-                inner.work_cv.notify_one();
+                shard.work_cv.notify_one();
             }
             Ok(Msg::Result { task_id, exit_code, error }) => {
-                handle_result(&inner, executor_id, task_id, exit_code, error);
+                handle_result(&inner, shard_idx, executor_id, task_id, exit_code, error);
             }
-            Ok(Msg::StageAck { executor_id: _, key, bytes, ok }) => {
-                let mut st = inner.state.lock().unwrap();
+            Ok(Msg::StageAck { executor_id: _, key, bytes, ok, gen }) => {
+                let node = executor_id as usize;
+                let mut co = inner.coord.lock().expect("coord poisoned");
+                // Stale generation: an ack for an older push of this key.
+                // Dropping it (rather than recording it) is the fix for
+                // the ack-identity race — only the newest push's ack can
+                // complete the rendezvous.
+                if co.stage_expect.get(&(executor_id, key.clone())) != Some(&gen) {
+                    continue;
+                }
                 // An object only counts as staged if the residency commit
                 // also succeeds — otherwise wait_staged and data-aware
                 // placement would disagree about this node.
-                let node = st
-                    .execs
-                    .get(&executor_id)
-                    .map(|m| m.node)
-                    .unwrap_or(executor_id as usize);
                 let resident = ok && node < MAX_TRACKED_NODES && {
-                    st.staged.ensure_nodes(node + 1);
-                    st.staged.commit(node, key.clone(), bytes).is_ok()
+                    co.staged.ensure_nodes(node + 1);
+                    co.staged.commit(node, key.clone(), bytes).is_ok()
                 };
-                st.stage_acks.insert((executor_id, key), resident);
-                drop(st);
+                co.stage_acks.insert((executor_id, key), resident);
+                co.events += 1;
+                drop(co);
                 inner.done_cv.notify_all();
-                inner.work_cv.notify_one();
+                shard.work_cv.notify_one();
             }
             Ok(Msg::Heartbeat { .. }) => {}
             Ok(_) | Err(_) => break, // protocol violation or disconnect
@@ -452,38 +771,53 @@ fn reader_loop(framed: Framed, inner: Arc<Inner>) {
 
     // Connection lost: retry everything pending on this executor.
     inner.registry.remove(executor_id);
-    let mut st = inner.state.lock().unwrap();
-    let node = st.execs.get(&executor_id).map(|m| m.node);
-    st.execs.remove(&executor_id);
-    st.idle.retain(|e| *e != executor_id);
-    // Its ramdisk died with it: drop staged residency and pending acks so
-    // data-aware placement stops steering work at objects that are gone
-    // (the simulator's invalidate_node, live side).
-    if let Some(node) = node {
-        if node < st.staged.node_count() {
-            st.staged.invalidate_node(node);
+    let node;
+    {
+        let mut st = shard.state.lock().expect("shard poisoned");
+        node = st.execs.get(&executor_id).map(|m| m.node);
+        st.execs.remove(&executor_id);
+        st.idle.retain(|e| *e != executor_id);
+        shard.execs_up.store(st.execs.len(), Ordering::Relaxed);
+        let lost = st.queues.pending_on(executor_id as usize);
+        for id in lost {
+            st.queues.fail_attempt(id, TaskError::CommError, &inner.config.retry);
         }
+        shard.sync_hints(&st);
     }
-    st.stage_acks.retain(|(e, _), _| *e != executor_id);
-    let lost = st.queues.pending_on(executor_id as usize);
-    for id in lost {
-        st.queues.fail_attempt(id, TaskError::CommError, &inner.config.retry);
+    {
+        let mut co = inner.coord.lock().expect("coord poisoned");
+        // Its ramdisk died with it: drop staged residency and pending
+        // acks so data-aware placement stops steering work at objects
+        // that are gone (the simulator's invalidate_node, live side).
+        if let Some(node) = node {
+            if node < co.staged.node_count() {
+                co.staged.invalidate_node(node);
+            }
+            co.node_shard.remove(&node);
+        }
+        co.stage_acks.retain(|(e, _), _| *e != executor_id);
+        co.stage_expect.retain(|(e, _), _| *e != executor_id);
+        co.registered = co.registered.saturating_sub(1);
+        co.events += 1;
     }
-    drop(st);
-    inner.work_cv.notify_all();
+    shard.work_cv.notify_all();
     inner.done_cv.notify_all();
 }
 
 fn handle_result(
     inner: &Arc<Inner>,
+    shard_idx: usize,
     executor_id: u64,
     task_id: TaskId,
     exit_code: i32,
     error: Option<TaskError>,
 ) {
     let t0 = Instant::now();
-    let mut st = inner.state.lock().unwrap();
-    let now_s = t0.elapsed().as_secs_f64(); // monotonic enough for windows
+    let shard = &inner.shards[shard_idx];
+    let mut st = shard.state.lock().expect("shard poisoned");
+    // Failure timestamps on the service epoch, so the suspension
+    // policy's sliding window actually slides.
+    let now_s = inner.epoch.elapsed().as_secs_f64();
     match error {
         None => {
             st.queues.complete(task_id, exit_code);
@@ -506,43 +840,30 @@ fn handle_result(
             }
         }
     }
+    shard.sync_hints(&st);
     drop(st);
     inner.profile.notify_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     inner.profile.tasks.fetch_add(1, Ordering::Relaxed);
-    inner.done_cv.notify_all();
-    inner.work_cv.notify_one(); // completions may free retried work
+    inner.signal_done();
+    shard.work_cv.notify_one(); // completions may free retried work
 }
 
-/// The dispatcher: matches queued tasks to executor credit.
-fn dispatcher_loop(inner: Arc<Inner>) {
+/// One partition dispatcher: matches its shard's queued tasks to its
+/// shard's executor credit, stealing from the most loaded shard when its
+/// own queue drains while it still has idle executors.
+fn dispatcher_loop(inner: Arc<Inner>, shard_idx: usize) {
+    let shard = &inner.shards[shard_idx];
     loop {
         if inner.shutdown.load(Ordering::SeqCst) {
             break;
         }
-        // Phase 1 (locked): plan one dispatch.
-        let planned = {
-            let mut st = inner.state.lock().unwrap();
-            loop {
-                if inner.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                if st.queues.waiting_len() > 0 && !st.idle.is_empty() {
-                    break;
-                }
-                let (g, _) = inner
-                    .work_cv
-                    .wait_timeout(st, Duration::from_millis(50))
-                    .expect("state poisoned");
-                st = g;
-            }
-            plan_one(&mut st, &inner.config.dispatch)
-        };
-        // Phase 2 (unlocked): encode + write.
-        if let Some((executor_id, tasks)) = planned {
+        // Phase 1: plan one dispatch from this shard.
+        if let Some((executor_id, tasks)) = plan_shard(&inner, shard_idx) {
+            // Phase 2 (unlocked): encode + write, with shard provenance.
             let t0 = Instant::now();
             let wire: Vec<WireTask> =
                 tasks.iter().map(|t| WireTask { id: t.id, payload: t.payload.clone() }).collect();
-            let msg = Msg::Dispatch { tasks: wire };
+            let msg = Msg::Dispatch { shard: shard_idx as u32, tasks: wire };
             inner.profile.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             let t1 = Instant::now();
             let ok = match inner.registry.get(executor_id) {
@@ -550,29 +871,84 @@ fn dispatcher_loop(inner: Arc<Inner>) {
                 None => false,
             };
             inner.profile.socket_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            if !ok {
+            if ok {
+                shard.dispatched.fetch_add(tasks.len() as u64, Ordering::Relaxed);
+            } else {
                 // Connection died between planning and writing: retry tasks.
-                let mut st = inner.state.lock().unwrap();
+                let mut st = shard.state.lock().expect("shard poisoned");
                 for t in &tasks {
                     st.queues.fail_attempt(t.id, TaskError::CommError, &inner.config.retry);
                 }
+                shard.sync_hints(&st);
                 drop(st);
-                inner.done_cv.notify_all();
+                inner.signal_done();
             }
+            continue;
+        }
+        // Nothing plannable locally: steal from the most loaded shard if
+        // this shard has usable idle credit.
+        if try_steal(&inner, shard_idx) {
+            continue;
+        }
+        // Wait for work/credit (bounded so shutdown and missed steal
+        // opportunities are re-examined).
+        let st = shard.state.lock().expect("shard poisoned");
+        if st.queues.waiting_len() == 0 || st.idle.is_empty() {
+            let _ = shard
+                .work_cv
+                .wait_timeout(st, Duration::from_millis(50))
+                .expect("shard poisoned");
         }
     }
 }
 
-/// Pop one (executor, bundle) assignment from the state. FIFO over idle
-/// executors; with `data_aware`, the head task is scored against staged
-/// residency via [`choose_executor`] so pre-staged nodes win placement.
-fn plan_one(
-    st: &mut State,
-    cfg: &DispatchConfig,
-) -> Option<(u64, Vec<crate::falkon::task::Task>)> {
-    if cfg.data_aware {
-        return plan_one_data_aware(st, cfg);
-    }
+/// Plan one (executor, bundle) assignment from shard `shard_idx`. With
+/// `data_aware`, the head task is scored against the coordinator's staged
+/// residency via an affinity snapshot taken *without* holding the shard
+/// lock (lock order: coordinator before shard, never after).
+fn plan_shard(inner: &Arc<Inner>, shard_idx: usize) -> Option<(u64, Vec<Task>)> {
+    let cfg = &inner.config.dispatch;
+    let shard = &inner.shards[shard_idx];
+    // Affinity snapshot for the head task (data-aware only).
+    let snapshot: Option<(TaskId, HashMap<usize, u64>)> = if cfg.data_aware {
+        let head = {
+            let st = shard.state.lock().expect("shard poisoned");
+            st.queues.peek_waiting().and_then(|t| match &t.payload {
+                TaskPayload::SimApp { objects, .. } if !objects.is_empty() => {
+                    Some((t.id, objects.clone()))
+                }
+                _ => None,
+            })
+        };
+        head.map(|(id, objects)| {
+            let co = inner.coord.lock().expect("coord poisoned");
+            let mut scores: HashMap<usize, u64> = HashMap::new();
+            for (key, bytes) in &objects {
+                for node in co.staged.nodes_with(key) {
+                    *scores.entry(node).or_insert(0) += bytes;
+                }
+            }
+            (id, scores)
+        })
+    } else {
+        None
+    };
+
+    let mut st = shard.state.lock().expect("shard poisoned");
+    let planned = match snapshot {
+        Some((head_id, scores))
+            if st.queues.peek_waiting().map(|t| t.id) == Some(head_id) =>
+        {
+            plan_one_scored(&mut st, cfg, &scores)
+        }
+        _ => plan_one_fifo(&mut st, cfg),
+    };
+    shard.sync_hints(&st);
+    planned
+}
+
+/// FIFO planning over the shard's idle executors.
+fn plan_one_fifo(st: &mut ShardState, cfg: &DispatchConfig) -> Option<(u64, Vec<Task>)> {
     while let Some(&exec_id) = st.idle.front() {
         let Some(meta) = st.execs.get_mut(&exec_id) else {
             st.idle.pop_front();
@@ -587,6 +963,7 @@ fn plan_one(
         if tasks.is_empty() {
             return None;
         }
+        let meta = st.execs.get_mut(&exec_id).expect("still present");
         meta.credit -= tasks.len() as u32;
         if meta.credit == 0 {
             st.idle.pop_front();
@@ -596,16 +973,18 @@ fn plan_one(
     None
 }
 
-/// Data-aware planning: snapshot the eligible idle set, pick via
-/// [`choose_executor`] against the staged-residency cache, then dispatch.
-fn plan_one_data_aware(
-    st: &mut State,
+/// Data-aware planning: prune the idle deque, then pick the idle executor
+/// whose node scores the most staged bytes for the head task (FIFO on
+/// ties, exactly like [`choose_executor_scored`]'s strict `>`).
+fn plan_one_scored(
+    st: &mut ShardState,
     cfg: &DispatchConfig,
-) -> Option<(u64, Vec<crate::falkon::task::Task>)> {
+    scores: &HashMap<usize, u64>,
+) -> Option<(u64, Vec<Task>)> {
     // Prune dead / creditless / suspended entries so the deque cannot
     // accumulate stale ids while we bypass the FIFO pop.
     {
-        let State { ref mut idle, ref execs, .. } = *st;
+        let ShardState { ref mut idle, ref execs, .. } = *st;
         idle.retain(|id| {
             execs
                 .get(id)
@@ -624,12 +1003,7 @@ fn plan_one_data_aware(
             IdleExecutor { executor_id: *id, credit: m.credit, node: m.node }
         })
         .collect();
-    // Scope the immutable borrows so the head task is NOT cloned on the
-    // dispatch hot path.
-    let pick = {
-        let head = st.queues.peek_waiting();
-        choose_executor(&idles, head, cfg, Some(&st.staged))
-    }?;
+    let pick = choose_executor_scored(&idles, scores);
     let exec_id = idles[pick].executor_id;
     let n = bundle_for(idles[pick].credit, cfg);
     let tasks = st.queues.take_for_dispatch(exec_id as usize, n);
@@ -644,19 +1018,84 @@ fn plan_one_data_aware(
     Some((exec_id, tasks))
 }
 
-/// Snapshot used by `choose_executor`-style policies and tests.
-pub fn idle_snapshot(svc: &Service) -> Vec<IdleExecutor> {
-    let st = svc.inner.state.lock().unwrap();
-    st.idle
+/// Work stealing: when shard `thief_idx` has usable idle credit but an
+/// empty queue, pull a batch of cold queued tasks from the shard whose
+/// queue is deepest. Locks victim and thief strictly one at a time.
+fn try_steal(inner: &Arc<Inner>, thief_idx: usize) -> bool {
+    let thief = &inner.shards[thief_idx];
+    {
+        let st = thief.state.lock().expect("shard poisoned");
+        let has_idle = st.idle.iter().any(|id| {
+            st.execs
+                .get(id)
+                .map(|m| m.credit > 0 && !m.health.suspended)
+                .unwrap_or(false)
+        });
+        if !has_idle || st.queues.waiting_len() > 0 {
+            return false;
+        }
+    }
+    // Victim: deepest queue by hint (approximate is fine — an empty
+    // victim just yields a no-op steal).
+    let victim_idx = inner
+        .shards
         .iter()
-        .filter_map(|id| {
+        .enumerate()
+        .filter(|(s, _)| *s != thief_idx)
+        .max_by_key(|(_, sh)| sh.queued_hint.load(Ordering::Relaxed))
+        .filter(|(_, sh)| sh.queued_hint.load(Ordering::Relaxed) > 0)
+        .map(|(s, _)| s);
+    let Some(victim_idx) = victim_idx else { return false };
+    let victim = &inner.shards[victim_idx];
+    // Tasks are out of every shard between steal_back and inject; the
+    // in-transit counter (raised BEFORE the removal, dropped AFTER the
+    // inject has been signalled) keeps wait_all from declaring the
+    // system done while we hold them.
+    inner.steals_in_transit.fetch_add(1, Ordering::SeqCst);
+    let tasks = {
+        let mut vs = victim.state.lock().expect("shard poisoned");
+        let tasks = vs.queues.steal_back(inner.config.hierarchy.steal_batch.max(1));
+        victim.sync_hints(&vs);
+        tasks
+    };
+    if tasks.is_empty() {
+        inner.steals_in_transit.fetch_sub(1, Ordering::SeqCst);
+        // A waiter may have seen the transient counter and gone back to
+        // sleep; make sure it rechecks.
+        inner.signal_done();
+        return false;
+    }
+    {
+        let mut st = thief.state.lock().expect("shard poisoned");
+        for t in tasks {
+            st.queues.inject(t);
+        }
+        thief.sync_hints(&st);
+    }
+    // Order matters: bump the event generation while the counter is
+    // still raised, so a waiter observing counter == 0 is guaranteed to
+    // also observe the generation change (and rescan the shards, now
+    // holding the injected tasks).
+    inner.signal_done();
+    inner.steals_in_transit.fetch_sub(1, Ordering::SeqCst);
+    true
+}
+
+/// Snapshot used by `choose_executor`-style policies and tests
+/// (aggregated across shards, shard-major order).
+pub fn idle_snapshot(svc: &Service) -> Vec<IdleExecutor> {
+    let mut out = Vec::new();
+    for shard in &svc.inner.shards {
+        let st = shard.state.lock().expect("shard poisoned");
+        out.extend(st.idle.iter().filter_map(|id| {
             st.execs.get(id).map(|m| IdleExecutor {
                 executor_id: *id,
                 credit: m.credit,
                 node: m.node,
             })
-        })
-        .collect()
+        }));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -671,11 +1110,40 @@ mod tests {
     }
 
     #[test]
+    fn sharded_service_starts_and_shuts_down() {
+        let svc = Service::start(ServiceConfig {
+            hierarchy: HierarchyConfig { partitions: 4, steal_batch: 8 },
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(svc.shard_stats().len(), 4);
+        svc.shutdown();
+    }
+
+    #[test]
     fn submit_assigns_monotone_ids() {
         let svc = Service::start(ServiceConfig::default()).unwrap();
         let a = svc.submit(TaskPayload::Sleep { secs: 0.0 });
         let b = svc.submit(TaskPayload::Sleep { secs: 0.0 });
         assert!(b > a);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_submit_ids_unique() {
+        let svc = Service::start(ServiceConfig {
+            hierarchy: HierarchyConfig { partitions: 3, steal_batch: 8 },
+            ..Default::default()
+        })
+        .unwrap();
+        let mut ids = svc.submit_many((0..30).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 30);
+        // With no executors, routing falls back to id % shards — every
+        // shard sees some waiting work.
+        let stats = svc.shard_stats();
+        assert!(stats.iter().all(|s| s.waiting > 0), "{stats:?}");
         svc.shutdown();
     }
 

@@ -20,6 +20,7 @@
 
 use crate::collective::ifs::{FlushPolicy, PartitionCollector};
 use crate::collective::tree::BroadcastTree;
+use crate::falkon::dispatch::{choose_shard, ShardLoad};
 use crate::falkon::errors::{RetryPolicy, TaskError};
 use crate::fs::cache::CacheManager;
 use crate::fs::ramdisk::RamdiskModel;
@@ -148,6 +149,20 @@ pub struct WorldConfig {
     /// outputs in per-partition collectors. `None` = the seed's
     /// point-to-point shared-FS paths.
     pub collective: Option<CollectiveConfig>,
+    /// Hierarchical dispatch (arXiv:0808.3540's per-pset dispatchers):
+    /// number of partition dispatchers, each owning a contiguous slice of
+    /// nodes (aligned to `collective.partition_nodes` when staging is
+    /// on), its own queue shard and busy horizon. A coordinator admits
+    /// tasks and forwards bundles to shards (affinity-first, then
+    /// least-loaded), paying [`ServiceModel`]'s forwarding cost; drained
+    /// shards steal queued work from the deepest shard. `1` = the paper's
+    /// single central dispatcher (the exact pre-refactor path).
+    pub dispatchers: usize,
+    /// Max tasks moved per cross-shard work-steal.
+    pub steal_batch: usize,
+    /// Deterministic failure injection: (virtual seconds, node) pairs —
+    /// each kills a node at an exact time (unlike `node_mtbf_s` draws).
+    pub fail_nodes_at: Vec<(f64, usize)>,
 }
 
 impl WorldConfig {
@@ -170,6 +185,9 @@ impl WorldConfig {
             data_aware: false,
             forwarders: 0,
             collective: None,
+            dispatchers: 1,
+            steal_batch: 64,
+            fail_nodes_at: Vec::new(),
         }
     }
 }
@@ -182,6 +200,14 @@ pub struct ServiceModel {
     pub per_task_s: f64,
     pub per_byte_s: f64,
     pub nic_bps: f64,
+    /// Coordinator→dispatcher forwarding, per bundle: the coordinator
+    /// block-copies task descriptions into one message (no per-task
+    /// protocol handling — that moved to the partition dispatchers).
+    pub fwd_per_msg_s: f64,
+    /// Coordinator CPU per forwarded task beyond bytes: a small marshal
+    /// constant, ~50× leaner than full dispatch (same class of saving as
+    /// the 3-tier forwarder path).
+    pub fwd_per_task_s: f64,
 }
 
 impl ServiceModel {
@@ -204,6 +230,8 @@ impl ServiceModel {
             per_task_s: base * (1.0 - msg_frac),
             per_byte_s: 5.36e-8,
             nic_bps: 100e6,
+            fwd_per_msg_s: base * msg_frac,
+            fwd_per_task_s: 5e-6,
         }
     }
 
@@ -211,6 +239,12 @@ impl ServiceModel {
     /// `wire_bytes` beyond the minimal sleep-0 message.
     pub fn dispatch_cost_s(&self, n: usize, extra_bytes: f64) -> f64 {
         self.per_msg_s + n as f64 * self.per_task_s + extra_bytes * self.per_byte_s
+    }
+
+    /// Coordinator CPU seconds to forward a bundle of `n` tasks totalling
+    /// `wire_bytes` to a partition dispatcher.
+    pub fn forward_cost_s(&self, n: usize, wire_bytes: f64) -> f64 {
+        self.fwd_per_msg_s + n as f64 * self.fwd_per_task_s + wire_bytes * self.per_byte_s
     }
 }
 
@@ -249,6 +283,14 @@ enum Ev {
     /// An IFS output record (task output + absorbed log appends) reaches
     /// its partition collector.
     IfsArrive { core: usize, task: usize, bytes: u64 },
+    /// Hierarchical mode: the coordinator is free to forward a bundle to
+    /// a partition dispatcher.
+    CoordForward,
+    /// Hierarchical mode: a forwarded (or stolen) bundle reaches shard
+    /// `shard`'s dispatcher queue.
+    ShardArrive { shard: usize, tasks: Vec<usize> },
+    /// Hierarchical mode: shard `shard` tries to dispatch from its queue.
+    ShardDispatch { shard: usize },
 }
 
 #[derive(Debug, Default, Clone)]
@@ -314,10 +356,41 @@ pub struct World {
     stage: Option<StageState>,
     /// Per-partition IFS output collectors (empty when IFS is off).
     collectors: Vec<PartitionCollector>,
+    /// Hierarchical mode (dispatchers > 1): per-partition dispatcher
+    /// state. Empty in classic single-dispatcher mode.
+    shards: Vec<SimShard>,
+    /// Nodes per dispatch shard (hierarchical mode).
+    shard_nodes: usize,
+    /// Coordinator admission queue (hierarchical mode).
+    coord_q: VecDeque<usize>,
+    coord_busy_until: Time,
+    coord_scheduled: bool,
+    /// Outstanding tasks owned by each shard (waiting + in flight).
+    shard_load: Vec<usize>,
+    /// Live (not failed) cores per shard, for routing around dead
+    /// partitions.
+    shard_live_cores: Vec<usize>,
+    steal_events_n: u64,
+    stolen_tasks_n: u64,
     /// Event counts by kind (TryDispatch, Deliver, ExecDone, Result,
-    /// FsWake, NodeFail, FwdDeliver, BcastRecv, IfsArrive) — cheap
-    /// observability for perf work.
-    pub event_tally: [u64; 9],
+    /// FsWake, NodeFail, FwdDeliver, BcastRecv, IfsArrive, CoordForward,
+    /// ShardArrive, ShardDispatch) — cheap observability for perf work.
+    pub event_tally: [u64; 12],
+}
+
+/// One partition dispatcher in the simulated fabric: its queue shard,
+/// idle-core set (cores with dispatch credit, FIFO) and busy horizon.
+#[derive(Debug, Default)]
+struct SimShard {
+    waiting: VecDeque<usize>,
+    idle: VecDeque<usize>,
+    busy_until: Time,
+    scheduled: bool,
+    dispatched: u64,
+    /// A stolen batch is in flight to this shard: don't issue another
+    /// steal until it lands (one outstanding steal per thief, matching
+    /// the live dispatcher's synchronous steal-then-replan loop).
+    steal_pending: bool,
 }
 
 /// In-flight broadcast bookkeeping.
@@ -355,6 +428,16 @@ impl World {
         };
         let base_wire_bytes = bytes_per_task(codec, 12, 1);
         let n = tasks.len();
+        let sharded = cfg.dispatchers > 1;
+        // Shard geometry: contiguous node slices, aligned up to the
+        // collective staging partition when one is configured so a
+        // dispatch shard never splits a staging partition.
+        let alloc_nodes = nodes.min(cores.div_ceil(cfg.machine.cores_per_node)).max(1);
+        let mut shard_nodes = alloc_nodes.div_ceil(cfg.dispatchers.max(1)).max(1);
+        if let Some(cc) = cfg.collective {
+            shard_nodes = shard_nodes.div_ceil(cc.partition_nodes) * cc.partition_nodes;
+        }
+        let n_shards = if sharded { alloc_nodes.div_ceil(shard_nodes) } else { 0 };
         let mut w = World {
             model,
             sched: Scheduler::new(),
@@ -363,7 +446,7 @@ impl World {
             cache,
             rng: Rng::new(cfg.seed),
             tstate: vec![TaskState::default(); n],
-            waiting: (0..n).collect(),
+            waiting: if sharded { VecDeque::new() } else { (0..n).collect() },
             cores: (0..cores)
                 .map(|_| CoreState {
                     staged: VecDeque::new(),
@@ -376,7 +459,7 @@ impl World {
                     alive: true,
                 })
                 .collect(),
-            idle: (0..cores).collect(),
+            idle: if sharded { VecDeque::new() } else { (0..cores).collect() },
             fwd_busy_until: vec![0; cfg.forwarders],
             service_busy_until: 0,
             dispatch_scheduled: false,
@@ -388,10 +471,26 @@ impl World {
             base_wire_bytes,
             stage: None,
             collectors: Vec::new(),
-            event_tally: [0; 9],
+            shards: (0..n_shards).map(|_| SimShard::default()).collect(),
+            shard_nodes,
+            coord_q: if sharded { (0..n).collect() } else { VecDeque::new() },
+            coord_busy_until: 0,
+            coord_scheduled: false,
+            shard_load: vec![0; n_shards],
+            shard_live_cores: vec![0; n_shards],
+            steal_events_n: 0,
+            stolen_tasks_n: 0,
+            event_tally: [0; 12],
             tasks,
             cfg,
         };
+        if sharded {
+            for core in 0..cores {
+                let s = w.shard_of_core(core);
+                w.shards[s].idle.push_back(core);
+                w.shard_live_cores[s] += 1;
+            }
+        }
         // All tasks submitted at t=0 (the paper submits whole workloads).
         for t in &mut w.tstate {
             t.submit = 0;
@@ -402,10 +501,28 @@ impl World {
                 w.sched.after_secs(at, Ev::NodeFail { node });
             }
         }
+        let injected = w.cfg.fail_nodes_at.clone();
+        for (at_s, node) in injected {
+            w.sched.at(secs(at_s), Ev::NodeFail { node });
+        }
         w.init_collective();
-        w.sched.at(0, Ev::TryDispatch);
-        w.dispatch_scheduled = true;
+        if sharded {
+            w.sched.at(0, Ev::CoordForward);
+            w.coord_scheduled = true;
+        } else {
+            w.sched.at(0, Ev::TryDispatch);
+            w.dispatch_scheduled = true;
+        }
         w
+    }
+
+    fn sharded(&self) -> bool {
+        !self.shards.is_empty()
+    }
+
+    fn shard_of_core(&self, core: usize) -> usize {
+        ((core / self.cfg.machine.cores_per_node) / self.shard_nodes)
+            .min(self.shards.len().saturating_sub(1))
     }
 
     /// Set up collective staging: per-partition collectors, and the
@@ -770,10 +887,241 @@ impl World {
     }
 
     fn wake_dispatch(&mut self, now: Time) {
+        if self.sharded() {
+            self.wake_coord(now);
+            for d in 0..self.shards.len() {
+                self.wake_shard(d, now);
+            }
+            return;
+        }
         if !self.dispatch_scheduled && !self.waiting.is_empty() && !self.idle.is_empty() {
             self.sched.at(now.max(self.service_busy_until), Ev::TryDispatch);
             self.dispatch_scheduled = true;
         }
+    }
+
+    // ------------------------------------------------ hierarchical mode
+
+    fn wake_coord(&mut self, now: Time) {
+        if !self.coord_scheduled && !self.coord_q.is_empty() {
+            self.sched.at(now.max(self.coord_busy_until), Ev::CoordForward);
+            self.coord_scheduled = true;
+        }
+    }
+
+    /// Wake shard `d`'s dispatcher if it could make progress: it has idle
+    /// credit and either its own queued work or (steal opportunity) some
+    /// other shard's.
+    fn wake_shard(&mut self, d: usize, now: Time) {
+        if self.shards[d].scheduled || self.shards[d].idle.is_empty() {
+            return;
+        }
+        let stealable = || self.shards.iter().enumerate().any(|(v, s)| v != d && !s.waiting.is_empty());
+        if !self.shards[d].waiting.is_empty() || stealable() {
+            self.sched.at(now.max(self.shards[d].busy_until), Ev::ShardDispatch { shard: d });
+            self.shards[d].scheduled = true;
+        }
+    }
+
+    /// Coordinator admission: forward one bundle of queued tasks to a
+    /// shard chosen affinity-first, then least-loaded ([`choose_shard`]),
+    /// paying the modeled coordinator→dispatcher forwarding cost.
+    fn coord_forward(&mut self, now: Time) {
+        const FWD_BUNDLE: usize = 64;
+        self.coord_scheduled = false;
+        if self.coord_q.is_empty() || self.staging_active() {
+            return; // staging completion re-wakes us via wake_dispatch
+        }
+        if self.coord_busy_until > now {
+            self.sched.at(self.coord_busy_until, Ev::CoordForward);
+            self.coord_scheduled = true;
+            return;
+        }
+        // Affinity of the head task's working set per shard (bytes of its
+        // objects cached in each shard's node slice).
+        let mut affinity = vec![0u64; self.shards.len()];
+        if self.cfg.data_aware {
+            if let Some(&head) = self.coord_q.front() {
+                for (key, bytes) in &self.tasks[head].objects {
+                    for node in self.cache.nodes_with(key) {
+                        affinity[(node / self.shard_nodes).min(self.shards.len() - 1)] += bytes;
+                    }
+                }
+            }
+        }
+        let loads: Vec<ShardLoad> = (0..self.shards.len())
+            .map(|d| ShardLoad {
+                shard: d,
+                queued: self.shard_load[d],
+                affinity: affinity[d],
+                alive: self.shard_live_cores[d] > 0,
+            })
+            .collect();
+        let Some(dst) = choose_shard(&loads) else { return }; // all partitions dead
+        let n = FWD_BUNDLE.min(self.coord_q.len());
+        let batch: Vec<usize> = (0..n).filter_map(|_| self.coord_q.pop_front()).collect();
+        self.shard_load[dst] += batch.len();
+        let desc_len =
+            batch.iter().map(|&t| self.tasks[t].desc_len).max().unwrap_or(12).max(12);
+        let wire = self.codec_wire_bytes(desc_len, batch.len());
+        let cost = self.model.forward_cost_s(batch.len(), wire);
+        self.coord_busy_until = now + secs(cost);
+        let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
+        self.sched.at(
+            self.coord_busy_until + secs(latency),
+            Ev::ShardArrive { shard: dst, tasks: batch },
+        );
+        if !self.coord_q.is_empty() {
+            self.sched.at(self.coord_busy_until, Ev::CoordForward);
+            self.coord_scheduled = true;
+        }
+    }
+
+    /// A forwarded or stolen bundle lands in shard `d`'s queue. A bundle
+    /// in flight to a partition that lost its last core bounces back to
+    /// the coordinator for re-routing (otherwise it would strand: no
+    /// result ever wakes a dead shard).
+    fn shard_arrive(&mut self, now: Time, d: usize, tasks: Vec<usize>) {
+        if self.shard_live_cores[d] == 0 {
+            self.shards[d].steal_pending = false;
+            self.shard_load[d] = self.shard_load[d].saturating_sub(tasks.len());
+            self.coord_q.extend(tasks);
+            self.wake_coord(now);
+            return;
+        }
+        self.shards[d].steal_pending = false;
+        self.shards[d].waiting.extend(tasks);
+        self.wake_shard(d, now);
+    }
+
+    /// Shard `d`'s dispatcher: one dispatch from its own queue, mirroring
+    /// the classic 2-tier path but against the shard's busy horizon and
+    /// idle set; steals from the deepest shard when its queue is dry.
+    fn shard_dispatch(&mut self, now: Time, d: usize) {
+        self.shards[d].scheduled = false;
+        if self.staging_active() {
+            return;
+        }
+        if self.shards[d].busy_until > now {
+            self.sched.at(self.shards[d].busy_until, Ev::ShardDispatch { shard: d });
+            self.shards[d].scheduled = true;
+            return;
+        }
+        if self.shards[d].waiting.is_empty() {
+            self.try_steal_sim(now, d);
+            return;
+        }
+        // Pick a core: drop dead/creditless entries at the front, then
+        // (data-aware) a bounded scan for the node caching the head
+        // task's objects — the same policy as the classic path, scoped to
+        // this shard's idle set.
+        let mut idle = std::mem::take(&mut self.shards[d].idle);
+        loop {
+            match idle.front() {
+                None => break,
+                Some(&c) if !self.cores[c].alive || self.cores[c].credit == 0 => {
+                    idle.pop_front();
+                }
+                _ => break,
+            }
+        }
+        if idle.is_empty() {
+            self.shards[d].idle = idle;
+            return;
+        }
+        let mut pick = 0usize;
+        if self.cfg.data_aware {
+            if let Some(&head) = self.shards[d].waiting.front() {
+                let objs = &self.tasks[head].objects;
+                if !objs.is_empty() {
+                    let scan = idle.len().min(32);
+                    let mut best = (0usize, 0u64);
+                    for (i, &c) in idle.iter().take(scan).enumerate() {
+                        if !self.cores[c].alive || self.cores[c].credit == 0 {
+                            continue;
+                        }
+                        let node = c / self.cfg.machine.cores_per_node;
+                        let bytes: u64 = objs
+                            .iter()
+                            .filter(|(k, _)| self.cache.contains(node, k))
+                            .map(|(_, b)| *b)
+                            .sum();
+                        if bytes > best.1 {
+                            best = (i, bytes);
+                        }
+                    }
+                    pick = best.0;
+                }
+            }
+        }
+        let core = idle.remove(pick).expect("picked idle core");
+        self.shards[d].idle = idle;
+
+        let credit = self.cores[core].credit as usize;
+        let n = self.cfg.bundle.max(1).min(credit).min(self.shards[d].waiting.len());
+        let batch: Vec<usize> =
+            (0..n).filter_map(|_| self.shards[d].waiting.pop_front()).collect();
+        self.cores[core].credit -= batch.len() as u32;
+        if self.cores[core].credit > 0 {
+            self.shards[d].idle.push_back(core); // still has credit
+        }
+        let desc_len = batch.iter().map(|&t| self.tasks[t].desc_len).max().unwrap_or(12);
+        let wire = self.codec_wire_bytes(desc_len.max(12), batch.len());
+        let extra = (wire - self.base_wire_bytes * batch.len() as f64).max(0.0);
+        let cost = self.model.dispatch_cost_s(batch.len(), extra);
+        self.shards[d].busy_until = now + secs(cost);
+        self.shards[d].dispatched += batch.len() as u64;
+        for &t in &batch {
+            self.tstate[t].dispatch = self.shards[d].busy_until;
+            self.tstate[t].attempts += 1;
+        }
+        let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
+        let deliver_at = self.shards[d].busy_until + secs(latency);
+        self.sched.at(deliver_at, Ev::Deliver { core, tasks: batch });
+        // Keep dispatching while there is work and credit.
+        if !self.shards[d].waiting.is_empty() && !self.shards[d].idle.is_empty() {
+            self.sched.at(self.shards[d].busy_until, Ev::ShardDispatch { shard: d });
+            self.shards[d].scheduled = true;
+        }
+    }
+
+    /// Work stealing: shard `d` (idle credit, dry queue) pulls a batch of
+    /// the coldest queued tasks from the deepest other shard. The batch
+    /// rides one coordinator-bounced interconnect hop.
+    fn try_steal_sim(&mut self, now: Time, d: usize) {
+        if self.shards[d].steal_pending {
+            return; // one outstanding steal per thief
+        }
+        let usable = self.shards[d]
+            .idle
+            .iter()
+            .any(|&c| self.cores[c].alive && self.cores[c].credit > 0);
+        if !usable {
+            return;
+        }
+        let victim = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(v, s)| *v != d && !s.waiting.is_empty())
+            .max_by_key(|(_, s)| s.waiting.len())
+            .map(|(v, _)| v);
+        let Some(v) = victim else { return };
+        let len = self.shards[v].waiting.len();
+        let k = self.cfg.steal_batch.max(1).min(len.div_ceil(2));
+        let tasks: Vec<usize> = (0..k)
+            .filter_map(|_| self.shards[v].waiting.pop_back())
+            .collect();
+        // Stolen coldest-first so the thief's queue keeps global FIFO-ish
+        // order among the stolen run.
+        let tasks: Vec<usize> = tasks.into_iter().rev().collect();
+        self.shard_load[v] = self.shard_load[v].saturating_sub(tasks.len());
+        self.shard_load[d] += tasks.len();
+        self.steal_events_n += 1;
+        self.stolen_tasks_n += tasks.len() as u64;
+        self.shards[d].steal_pending = true;
+        let hop = secs(self.cfg.machine.net_rtt_secs); // victim → coord → thief
+        self.sched.at(now + hop, Ev::ShardArrive { shard: d, tasks });
     }
 
     /// Start the next fully-staged task on a free core.
@@ -945,6 +1293,12 @@ impl World {
     }
 
     fn handle_result(&mut self, now: Time, core: usize, task: usize, error: Option<TaskError>) {
+        let shard = if self.sharded() { Some(self.shard_of_core(core)) } else { None };
+        if let Some(d) = shard {
+            // One outstanding attempt ended in this shard (re-admissions
+            // below go through the coordinator again).
+            self.shard_load[d] = self.shard_load[d].saturating_sub(1);
+        }
         match error {
             None => {
                 let st = &mut self.tstate[task];
@@ -957,6 +1311,7 @@ impl World {
                     end: st.end_exec,
                     result: now,
                     core: core as u32,
+                    shard: shard.unwrap_or(0) as u32,
                     exit_code: 0,
                 });
             }
@@ -964,7 +1319,15 @@ impl World {
                 let attempts = self.tstate[task].attempts;
                 match crate::falkon::errors::on_failure(&err, attempts, &self.cfg.retry) {
                     crate::falkon::errors::FailureAction::Retry => {
-                        self.waiting.push_back(task);
+                        if self.sharded() {
+                            // Re-admit via the coordinator so a retried
+                            // task is re-routed (a dead partition's tasks
+                            // land on live shards).
+                            self.coord_q.push_back(task);
+                            self.wake_coord(now);
+                        } else {
+                            self.waiting.push_back(task);
+                        }
                     }
                     crate::falkon::errors::FailureAction::Fail => {
                         self.failed += 1;
@@ -977,13 +1340,19 @@ impl World {
         if self.cores[core].alive {
             self.cores[core].credit += 1;
             if self.cores[core].credit == 1 {
-                self.idle.push_back(core); // newly eligible
+                match shard {
+                    Some(d) => self.shards[d].idle.push_back(core),
+                    None => self.idle.push_back(core), // newly eligible
+                }
             }
         }
-        self.wake_dispatch(now);
+        match shard {
+            Some(d) => self.wake_shard(d, now),
+            None => self.wake_dispatch(now),
+        }
     }
 
-    fn handle_node_fail(&mut self, _now: Time, node: usize) {
+    fn handle_node_fail(&mut self, now: Time, node: usize) {
         let cpn = self.cfg.machine.cores_per_node;
         let first = node * cpn;
         for core in first..(first + cpn).min(self.cores.len()) {
@@ -991,6 +1360,10 @@ impl World {
                 continue;
             }
             self.cores[core].alive = false;
+            if self.sharded() {
+                let d = self.shard_of_core(core);
+                self.shard_live_cores[d] = self.shard_live_cores[d].saturating_sub(1);
+            }
             // Everything on this core is lost; the service sees NodeLost.
             let mut lost: Vec<usize> = self.cores[core].staged.drain(..).collect();
             if let Some(cur) = self.cores[core].current.take() {
@@ -1019,6 +1392,18 @@ impl World {
             }
         }
         self.cache.invalidate_node(node);
+        // A shard whose last live core just died can never be woken by
+        // its own results again: hand its queue back to the coordinator
+        // for re-routing (its in-flight bundles bounce in shard_arrive).
+        if self.sharded() && first < self.cores.len() {
+            let d = self.shard_of_core(first);
+            if self.shard_live_cores[d] == 0 && !self.shards[d].waiting.is_empty() {
+                let tasks: Vec<usize> = self.shards[d].waiting.drain(..).collect();
+                self.shard_load[d] = self.shard_load[d].saturating_sub(tasks.len());
+                self.coord_q.extend(tasks);
+                self.wake_coord(now);
+            }
+        }
     }
 
     /// Run to completion (or until `max_events`). Returns events processed.
@@ -1036,8 +1421,13 @@ impl World {
                 // they fail terminally (Falkon would hold them for new
                 // executors; a finite campaign has none coming).
                 if self.cores.iter().all(|c| !c.alive) {
-                    let stranded = self.waiting.len();
+                    let mut stranded = self.waiting.len() + self.coord_q.len();
                     self.waiting.clear();
+                    self.coord_q.clear();
+                    for s in &mut self.shards {
+                        stranded += s.waiting.len();
+                        s.waiting.clear();
+                    }
                     self.failed += stranded;
                     // Tasks still marked non-terminal (on dead cores'
                     // queues) were already drained by handle_node_fail.
@@ -1057,6 +1447,9 @@ impl World {
                 Ev::FwdDeliver { .. } => 6,
                 Ev::BcastRecv { .. } => 7,
                 Ev::IfsArrive { .. } => 8,
+                Ev::CoordForward => 9,
+                Ev::ShardArrive { .. } => 10,
+                Ev::ShardDispatch { .. } => 11,
             }] += 1;
             match ev {
                 Ev::TryDispatch => self.try_dispatch(now),
@@ -1150,6 +1543,9 @@ impl World {
                     self.arm_fs_wake();
                 }
                 Ev::NodeFail { node } => self.handle_node_fail(now, node),
+                Ev::CoordForward => self.coord_forward(now),
+                Ev::ShardArrive { shard, tasks } => self.shard_arrive(now, shard, tasks),
+                Ev::ShardDispatch { shard } => self.shard_dispatch(now, shard),
             }
         }
         self.sched.processed() - start
@@ -1198,6 +1594,26 @@ impl World {
     /// Per-partition IFS collectors (empty when IFS is off).
     pub fn collectors(&self) -> &[PartitionCollector] {
         &self.collectors
+    }
+
+    /// Cross-shard work-steal events (hierarchical mode; 0 otherwise).
+    pub fn steal_events(&self) -> u64 {
+        self.steal_events_n
+    }
+
+    /// Tasks moved by work stealing (hierarchical mode; 0 otherwise).
+    pub fn stolen_tasks(&self) -> u64 {
+        self.stolen_tasks_n
+    }
+
+    /// Tasks dispatched per partition shard (empty in classic mode).
+    pub fn shard_dispatched(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.dispatched).collect()
+    }
+
+    /// Cores still alive.
+    pub fn live_cores(&self) -> usize {
+        self.cores.iter().filter(|c| c.alive).count()
     }
 
     /// Virtual time now (campaign end after `run`).
@@ -1478,6 +1894,65 @@ mod tests {
             coll.staging_done_secs().unwrap(),
             naive.campaign().makespan_s()
         );
+    }
+
+    #[test]
+    fn sharded_dispatch_completes_all_tasks_across_shards() {
+        let mut cfg = WorldConfig::new(Machine::bgp(), 1024);
+        cfg.dispatchers = 4;
+        let mut w = World::new(cfg, vec![SimTask::sleep(0.5); 4_000]);
+        w.run(u64::MAX);
+        assert_eq!(w.completed(), 4_000);
+        assert_eq!(w.failed(), 0);
+        assert_eq!(w.campaign().len(), 4_000);
+        // Every shard dispatched work, and the per-shard accounting
+        // covers the whole campaign (steals move tasks between shards
+        // before dispatch, so dispatch totals still sum to the campaign).
+        let per = w.shard_dispatched();
+        assert_eq!(per.len(), 4);
+        assert!(per.iter().all(|&n| n > 0), "{per:?}");
+        assert_eq!(per.iter().sum::<u64>(), 4_000);
+        assert!(w.campaign().shard_imbalance() < 2.0);
+    }
+
+    #[test]
+    fn sharded_mode_beats_single_dispatcher_on_sleep0() {
+        // The whole point of the refactor: sleep-0 throughput at scale is
+        // dispatch-bound, and 4 partition dispatchers should push well
+        // past the single central dispatcher's calibrated ceiling.
+        let run = |dispatchers: usize| {
+            let mut cfg = WorldConfig::new(Machine::bgp(), 4096);
+            cfg.dispatchers = dispatchers;
+            let mut w = World::new(cfg, vec![SimTask::sleep(0.0); 20_000]);
+            w.run(u64::MAX);
+            assert_eq!(w.completed(), 20_000);
+            w.campaign().throughput()
+        };
+        let single = run(1);
+        let sharded = run(4);
+        assert!(
+            sharded > 2.5 * single,
+            "4 shards {sharded:.0} t/s vs single {single:.0} t/s"
+        );
+    }
+
+    #[test]
+    fn sharded_deterministic_injected_failures_retry_and_complete() {
+        let mk = || {
+            let mut cfg = WorldConfig::new(Machine::bgp(), 256);
+            cfg.dispatchers = 4;
+            cfg.steal_batch = 8;
+            // Kill shard 3's nodes (48..64) mid-campaign.
+            cfg.fail_nodes_at = (48..64).map(|n| (2.0, n)).collect();
+            cfg.retry = RetryPolicy { max_attempts: 5, ..Default::default() };
+            let mut w = World::new(cfg, vec![SimTask::sleep(1.0); 2_000]);
+            w.run(u64::MAX);
+            (w.completed(), w.failed(), w.steal_events(), w.campaign().makespan_s())
+        };
+        let (completed, failed, _steals, _) = mk();
+        assert_eq!(completed + failed, 2_000);
+        assert_eq!(completed, 2_000, "NodeLost work must be re-routed and finish");
+        assert_eq!(mk(), mk(), "sharded mode stays deterministic");
     }
 
     #[test]

@@ -49,6 +49,7 @@ fn cmd_service(args: &Args) -> i32 {
         print!("{}", usage("falkon service", "Run a live Falkon dispatch service", &[
             OptSpec { name: "bind", help: "listen address", default: Some("127.0.0.1:50100") },
             OptSpec { name: "bundle", help: "tasks per dispatch message", default: Some("1") },
+            OptSpec { name: "partitions", help: "partition dispatchers (queue shards)", default: Some("1") },
         ]));
         return 0;
     }
@@ -56,6 +57,10 @@ fn cmd_service(args: &Args) -> i32 {
         bind: args.get_or("bind", "127.0.0.1:50100").to_string(),
         dispatch: DispatchConfig { bundle: args.parse_or("bundle", 1usize), data_aware: false },
         retry: Default::default(),
+        hierarchy: falkon::falkon::coordinator::HierarchyConfig {
+            partitions: args.parse_or("partitions", 1usize),
+            ..Default::default()
+        },
     };
     match Service::start(config) {
         Ok(svc) => {
@@ -78,6 +83,7 @@ fn cmd_executor(args: &Args) -> i32 {
             OptSpec { name: "connect", help: "service address", default: Some("127.0.0.1:50100") },
             OptSpec { name: "id", help: "executor id", default: Some("0") },
             OptSpec { name: "cores", help: "worker threads", default: Some("1") },
+            OptSpec { name: "partition", help: "machine partition (maps to a service shard)", default: Some("0") },
             OptSpec { name: "compute", help: "enable PJRT compute payloads (flag)", default: None },
         ]));
         return 0;
@@ -89,6 +95,7 @@ fn cmd_executor(args: &Args) -> i32 {
         cores: args.parse_or("cores", 1u32),
         proto: falkon::net::tcpcore::Proto::Tcp,
         initial_credit: args.parse_or("cores", 1u32),
+        partition: args.parse_or("partition", 0u32),
     };
     let runner: Arc<dyn falkon::falkon::exec::TaskRunner> = if args.flag("compute") {
         match falkon::runtime::Registry::open_default() {

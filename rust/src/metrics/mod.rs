@@ -21,6 +21,9 @@ pub struct TaskTimes {
     pub result: Time,
     /// Core index that ran the task.
     pub core: u32,
+    /// Partition dispatcher (queue shard) that dispatched the task
+    /// (0 in single-dispatcher mode).
+    pub shard: u32,
     /// 0 = success.
     pub exit_code: i32,
 }
@@ -154,6 +157,35 @@ impl Campaign {
         per.into_iter().map(|(core, (n, busy))| (core, n, busy, busy / m)).collect()
     }
 
+    /// Per-shard view (hierarchical dispatch): (shard, tasks, sustained
+    /// dispatch rate in tasks/s over the makespan).
+    pub fn per_shard_view(&self) -> Vec<(u32, usize, f64)> {
+        use std::collections::BTreeMap;
+        let m = self.makespan_s().max(1e-12);
+        let mut per: BTreeMap<u32, usize> = BTreeMap::new();
+        for r in &self.records {
+            *per.entry(r.shard).or_default() += 1;
+        }
+        per.into_iter().map(|(shard, n)| (shard, n, n as f64 / m)).collect()
+    }
+
+    /// Shard imbalance: max shard task count over the mean (1.0 =
+    /// perfectly balanced; 0.0 for an empty campaign). Work stealing
+    /// should keep this near 1 even under skewed routing.
+    pub fn shard_imbalance(&self) -> f64 {
+        let per = self.per_shard_view();
+        if per.is_empty() {
+            return 0.0;
+        }
+        let max = per.iter().map(|(_, n, _)| *n).max().unwrap_or(0) as f64;
+        let mean = self.records.len() as f64 / per.len() as f64;
+        if mean <= 0.0 {
+            0.0
+        } else {
+            max / mean
+        }
+    }
+
     /// Emit a CSV of per-task records (secs relative to campaign start).
     pub fn to_csv(&self) -> String {
         let mut s = String::from("task,core,submit_s,dispatch_s,start_s,end_s,result_s,exit\n");
@@ -203,6 +235,7 @@ mod tests {
             end: secs(end),
             result: secs(end),
             core,
+            shard: core % 2,
             exit_code: 0,
         }
     }
@@ -252,6 +285,20 @@ mod tests {
         assert_eq!((core0, n0), (0, 2));
         assert!((busy0 - 20.0).abs() < 1e-9);
         assert!((frac0 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_shard_view_rates_and_imbalance() {
+        // two_core_campaign: cores 0,0,1 → shards 0,0,1; makespan 20 s.
+        let c = two_core_campaign();
+        let v = c.per_shard_view();
+        assert_eq!(v.len(), 2);
+        assert_eq!((v[0].0, v[0].1), (0, 2));
+        assert_eq!((v[1].0, v[1].1), (1, 1));
+        assert!((v[0].2 - 0.1).abs() < 1e-9, "2 tasks / 20 s");
+        // max 2 over mean 1.5 → 4/3.
+        assert!((c.shard_imbalance() - 4.0 / 3.0).abs() < 1e-9);
+        assert_eq!(Campaign::new(1).shard_imbalance(), 0.0);
     }
 
     #[test]

@@ -103,7 +103,7 @@ pub fn bytes_per_task(codec: &dyn Codec, desc_len: usize, bundle: usize) -> f64 
             payload: TaskPayload::Echo { payload: vec![b'x'; desc_len] },
         })
         .collect();
-    let dispatch = codec.encode(&Msg::Dispatch { tasks }).len() as f64 / bundle as f64;
+    let dispatch = codec.encode(&Msg::Dispatch { shard: 0, tasks }).len() as f64 / bundle as f64;
     let result = codec
         .encode(&Msg::Result { task_id: 0, exit_code: 0, error: None })
         .len() as f64;
@@ -173,8 +173,9 @@ mod tests {
 
     fn sample_msgs() -> Vec<Msg> {
         vec![
-            Msg::Register { executor_id: 1, cores: 4 },
+            Msg::Register { executor_id: 1, cores: 4, partition: 0 },
             Msg::Dispatch {
+                shard: 0,
                 tasks: vec![WireTask { id: 1, payload: TaskPayload::Sleep { secs: 0.0 } }],
             },
             Msg::Result { task_id: 1, exit_code: 0, error: None },
@@ -201,6 +202,7 @@ mod tests {
     #[test]
     fn ws_is_much_heavier_than_tcp() {
         let m = Msg::Dispatch {
+            shard: 0,
             tasks: vec![WireTask { id: 1, payload: TaskPayload::Sleep { secs: 0.0 } }],
         };
         let tcp = TcpCodec.encode(&m).len();

@@ -22,12 +22,16 @@ pub struct WireTask {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Executor announces itself (persistent connection established).
-    Register { executor_id: u64, cores: u32 },
+    /// `partition` is the machine partition (BG/P pset) the executor's
+    /// node belongs to; the service maps it onto a queue shard.
+    Register { executor_id: u64, cores: u32, partition: u32 },
     /// Pull-model work request: executor has `slots` free cores.
     Ready { executor_id: u64, slots: u32 },
     /// A bundle of tasks for the executor (bundling amortizes per-message
-    /// cost — §4.2 measured 604 → 3773 tasks/s with bundle=10).
-    Dispatch { tasks: Vec<WireTask> },
+    /// cost — §4.2 measured 604 → 3773 tasks/s with bundle=10). `shard`
+    /// is the partition dispatcher that planned the bundle (provenance
+    /// for debugging cross-shard steals; the executor echoes nothing).
+    Dispatch { shard: u32, tasks: Vec<WireTask> },
     /// Per-task completion notification.
     Result { task_id: TaskId, exit_code: i32, error: Option<TaskError> },
     /// Liveness probe.
@@ -40,11 +44,15 @@ pub enum Msg {
     /// Collective staging: push a common object (binary, static input)
     /// into the executor's ramdisk cache *before* dispatching the tasks
     /// that need it (arXiv:0901.0134's broadcast, service→executor hop).
-    StagePut { key: String, data: Vec<u8> },
+    /// `gen` is the push generation: the ack echoes it, so a stale ack
+    /// from an earlier push of the same key can never satisfy a newer
+    /// push's rendezvous.
+    StagePut { key: String, data: Vec<u8>, gen: u64 },
     /// Executor acknowledges a staged object. `ok = false` when the
     /// executor has no ramdisk or rejected the key; the service only
-    /// counts `ok` objects as resident for data-aware placement.
-    StageAck { executor_id: u64, key: String, bytes: u64, ok: bool },
+    /// counts `ok` objects as resident for data-aware placement. `gen`
+    /// echoes the triggering `StagePut`'s generation.
+    StageAck { executor_id: u64, key: String, bytes: u64, ok: bool, gen: u64 },
 }
 
 // ---------------------------------------------------------------- wire io
@@ -249,18 +257,20 @@ impl Msg {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::default();
         match self {
-            Msg::Register { executor_id, cores } => {
+            Msg::Register { executor_id, cores, partition } => {
                 w.u8(0);
                 w.u64(*executor_id);
                 w.u32(*cores);
+                w.u32(*partition);
             }
             Msg::Ready { executor_id, slots } => {
                 w.u8(1);
                 w.u64(*executor_id);
                 w.u32(*slots);
             }
-            Msg::Dispatch { tasks } => {
+            Msg::Dispatch { shard, tasks } => {
                 w.u8(2);
+                w.u32(*shard);
                 w.u32(tasks.len() as u32);
                 for t in tasks {
                     w.u64(t.id);
@@ -282,17 +292,19 @@ impl Msg {
                 w.str(reason);
             }
             Msg::Shutdown => w.u8(6),
-            Msg::StagePut { key, data } => {
+            Msg::StagePut { key, data, gen } => {
                 w.u8(7);
                 w.str(key);
                 w.bytes(data);
+                w.u64(*gen);
             }
-            Msg::StageAck { executor_id, key, bytes, ok } => {
+            Msg::StageAck { executor_id, key, bytes, ok, gen } => {
                 w.u8(8);
                 w.u64(*executor_id);
                 w.str(key);
                 w.u64(*bytes);
                 w.u8(u8::from(*ok));
+                w.u64(*gen);
             }
         }
         w.buf
@@ -302,27 +314,29 @@ impl Msg {
     pub fn decode(buf: &[u8]) -> Result<Msg, DecodeError> {
         let mut r = Reader::new(buf);
         let msg = match r.u8()? {
-            0 => Msg::Register { executor_id: r.u64()?, cores: r.u32()? },
+            0 => Msg::Register { executor_id: r.u64()?, cores: r.u32()?, partition: r.u32()? },
             1 => Msg::Ready { executor_id: r.u64()?, slots: r.u32()? },
             2 => {
+                let shard = r.u32()?;
                 let n = r.u32()?;
                 let tasks = (0..n)
                     .map(|_| {
                         Ok::<_, DecodeError>(WireTask { id: r.u64()?, payload: decode_payload(&mut r)? })
                     })
                     .collect::<Result<_, _>>()?;
-                Msg::Dispatch { tasks }
+                Msg::Dispatch { shard, tasks }
             }
             3 => Msg::Result { task_id: r.u64()?, exit_code: r.i32()?, error: decode_error(&mut r)? },
             4 => Msg::Heartbeat { executor_id: r.u64()? },
             5 => Msg::Suspend { reason: r.str()? },
             6 => Msg::Shutdown,
-            7 => Msg::StagePut { key: r.str()?, data: r.bytes()?.to_vec() },
+            7 => Msg::StagePut { key: r.str()?, data: r.bytes()?.to_vec(), gen: r.u64()? },
             8 => Msg::StageAck {
                 executor_id: r.u64()?,
                 key: r.str()?,
                 bytes: r.u64()?,
                 ok: r.u8()? != 0,
+                gen: r.u64()?,
             },
             t => return Err(DecodeError::BadTag(t)),
         };
@@ -344,9 +358,10 @@ mod tests {
 
     #[test]
     fn roundtrip_all_variants() {
-        roundtrip(Msg::Register { executor_id: 7, cores: 4 });
+        roundtrip(Msg::Register { executor_id: 7, cores: 4, partition: 3 });
         roundtrip(Msg::Ready { executor_id: 7, slots: 2 });
         roundtrip(Msg::Dispatch {
+            shard: 5,
             tasks: vec![
                 WireTask { id: 1, payload: TaskPayload::Sleep { secs: 4.0 } },
                 WireTask { id: 2, payload: TaskPayload::Echo { payload: b"hello".to_vec() } },
@@ -382,27 +397,30 @@ mod tests {
         roundtrip(Msg::Heartbeat { executor_id: 1 });
         roundtrip(Msg::Suspend { reason: "too many stale NFS failures".into() });
         roundtrip(Msg::Shutdown);
-        roundtrip(Msg::StagePut { key: "cache/dock5.bin".into(), data: vec![7u8; 1000] });
+        roundtrip(Msg::StagePut { key: "cache/dock5.bin".into(), data: vec![7u8; 1000], gen: 9 });
         roundtrip(Msg::StageAck {
             executor_id: 3,
             key: "cache/dock5.bin".into(),
             bytes: 1000,
             ok: true,
+            gen: 9,
         });
     }
 
     #[test]
     fn sleep_dispatch_is_compact() {
         let m = Msg::Dispatch {
+            shard: 0,
             tasks: vec![WireTask { id: 1, payload: TaskPayload::Sleep { secs: 0.0 } }],
         };
-        // tag(1) + count(4) + id(8) + payload tag(1) + f64(8) = 22 bytes.
-        assert_eq!(m.encode().len(), 22);
+        // tag(1) + shard(4) + count(4) + id(8) + payload tag(1) + f64(8)
+        // = 26 bytes.
+        assert_eq!(m.encode().len(), 26);
     }
 
     #[test]
     fn decode_rejects_truncation_and_trailing() {
-        let enc = Msg::Register { executor_id: 1, cores: 4 }.encode();
+        let enc = Msg::Register { executor_id: 1, cores: 4, partition: 0 }.encode();
         assert!(matches!(Msg::decode(&enc[..enc.len() - 1]), Err(DecodeError::Truncated(_))));
         let mut extended = enc.clone();
         extended.push(0);

@@ -165,6 +165,12 @@ impl Registry {
         self.conns.lock().unwrap().get(&executor_id).cloned()
     }
 
+    /// Ids of currently connected executors (snapshot). Fleet-wide
+    /// staging records its expected ack generation per connected id.
+    pub fn ids(&self) -> Vec<u64> {
+        self.conns.lock().unwrap().keys().copied().collect()
+    }
+
     pub fn len(&self) -> usize {
         self.conns.lock().unwrap().len()
     }
@@ -204,8 +210,8 @@ mod tests {
     #[test]
     fn send_recv_roundtrip_tcp() {
         let (mut c, mut s) = pair(Proto::Tcp);
-        c.send(&Msg::Register { executor_id: 42, cores: 4 }).unwrap();
-        assert_eq!(s.recv().unwrap(), Msg::Register { executor_id: 42, cores: 4 });
+        c.send(&Msg::Register { executor_id: 42, cores: 4, partition: 1 }).unwrap();
+        assert_eq!(s.recv().unwrap(), Msg::Register { executor_id: 42, cores: 4, partition: 1 });
         s.send(&Msg::Shutdown).unwrap();
         assert_eq!(c.recv().unwrap(), Msg::Shutdown);
     }
@@ -268,6 +274,7 @@ mod tests {
         let reg = Registry::new();
         reg.insert(5, write);
         assert_eq!(reg.len(), 1);
+        assert_eq!(reg.ids(), vec![5]);
         assert!(reg.get(5).is_some());
         assert!(reg.get(6).is_none());
         reg.remove(5).unwrap();

@@ -102,18 +102,23 @@ mod backend {
 pub struct Engine {
     exe: backend::Compiled,
     name: String,
+    /// Serializes executions *of this artifact* (the PJRT handles are not
+    /// re-entrant). Striped per engine — with the hierarchical dispatcher
+    /// several shards feed one executor process, and a global gate would
+    /// serialize unrelated artifacts against each other.
+    gate: Mutex<()>,
 }
 
 // The xla crate's handles are raw pointers without Send/Sync markers; the
 // PJRT CPU client is thread-safe for execution, and we additionally gate
-// all calls behind a Mutex in `ComputeRunner`/`Registry`.
+// all executions behind the engine's own mutex (`Engine::gate`).
 unsafe impl Send for Engine {}
 
 impl Engine {
     /// Load and compile an HLO-text artifact on the CPU PJRT client.
     fn load(client: &backend::Client, path: &Path, name: &str) -> anyhow::Result<Engine> {
         anyhow::ensure!(path.exists(), "artifact not found: {} (run `make artifacts`)", path.display());
-        Ok(Engine { exe: client.compile(path)?, name: name.to_string() })
+        Ok(Engine { exe: client.compile(path)?, name: name.to_string(), gate: Mutex::new(()) })
     }
 
     pub fn name(&self) -> &str {
@@ -121,11 +126,10 @@ impl Engine {
     }
 
     /// Execute with f32 tensor inputs, returning the flattened f32 outputs
-    /// of the (single-tuple) result.
-    ///
-    /// `inputs`: (data, dims) pairs; dims follow the artifact's exported
-    /// signature.
+    /// of the (single-tuple) result. Executions of the *same* engine are
+    /// serialized behind its gate; different artifacts run concurrently.
     pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let _g = self.gate.lock().expect("engine gate poisoned");
         self.exe.run_f32(inputs)
     }
 }
@@ -194,8 +198,6 @@ impl Registry {
 pub struct ComputeRunner {
     registry: Registry,
     fallback: crate::falkon::exec::DefaultRunner,
-    /// Lock serializing executions (the CPU client is one device).
-    gate: Mutex<()>,
     /// MARS batch size expected by the artifact.
     pub mars_batch: usize,
 }
@@ -205,7 +207,6 @@ impl ComputeRunner {
         ComputeRunner {
             registry,
             fallback: crate::falkon::exec::DefaultRunner,
-            gate: Mutex::new(()),
             mars_batch: crate::apps::mars::BATCH as usize,
         }
     }
@@ -239,7 +240,6 @@ impl crate::falkon::exec::TaskRunner for ComputeRunner {
                     .map_err(|_| TaskError::AppError(125))?;
                 let params = self.expand_args(*arg, *reps);
                 let n = *reps as usize;
-                let _g = self.gate.lock().unwrap();
                 let out = engine
                     .run_f32(&[(&params, &[n, 2])])
                     .map_err(|_| TaskError::AppError(120))?;

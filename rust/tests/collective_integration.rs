@@ -24,6 +24,7 @@ fn live_fabric_roundtrips_staged_object_to_task() {
         bind: "127.0.0.1:0".into(),
         dispatch: DispatchConfig { bundle: 1, data_aware: true },
         retry: RetryPolicy::default(),
+        ..Default::default()
     })
     .unwrap();
     let addr = svc.addr().to_string();

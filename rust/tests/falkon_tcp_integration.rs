@@ -1,11 +1,15 @@
 //! Live-fabric integration: service + executors over real loopback TCP.
 
+use falkon::falkon::coordinator::HierarchyConfig;
 use falkon::falkon::dispatch::DispatchConfig;
 use falkon::falkon::errors::{RetryPolicy, TaskError};
-use falkon::falkon::exec::{spawn_fleet, DefaultRunner, Executor, ExecutorConfig, FaultyRunner};
+use falkon::falkon::exec::{
+    spawn_fleet, spawn_fleet_partitioned, DefaultRunner, Executor, ExecutorConfig, FaultyRunner,
+};
 use falkon::falkon::service::{Service, ServiceConfig};
 use falkon::falkon::task::TaskPayload;
-use falkon::net::tcpcore::Proto;
+use falkon::net::proto::Msg;
+use falkon::net::tcpcore::{Framed, Proto};
 use std::sync::atomic::AtomicU32;
 use std::sync::Arc;
 use std::time::Duration;
@@ -15,6 +19,7 @@ fn service(bundle: usize) -> Service {
         bind: "127.0.0.1:0".into(),
         dispatch: DispatchConfig { bundle, data_aware: false },
         retry: RetryPolicy::default(),
+        ..Default::default()
     })
     .expect("service start")
 }
@@ -95,6 +100,7 @@ fn ws_protocol_executor_works() {
             cores: 2,
             proto: Proto::Ws,
             initial_credit: 2,
+            partition: 0,
         },
         Arc::new(DefaultRunner),
     )
@@ -114,6 +120,7 @@ fn stale_nfs_failures_are_retried_on_other_executors() {
         bind: "127.0.0.1:0".into(),
         dispatch: DispatchConfig::default(),
         retry: RetryPolicy { max_attempts: 5, suspend_after_failures: 100, ..Default::default() },
+        ..Default::default()
     })
     .unwrap();
     let addr = svc.addr().to_string();
@@ -160,6 +167,130 @@ fn executor_disconnect_requeues_pending_tasks() {
     assert_eq!(outcomes.len(), 10);
     assert!(outcomes.iter().all(|o| o.ok()));
     healthy.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn sharded_service_completes_across_partitions() {
+    // 4 partition dispatchers, 8 executors spread over the partitions:
+    // submissions route least-loaded across shards and every task
+    // completes exactly once.
+    let svc = Service::start(ServiceConfig {
+        hierarchy: HierarchyConfig { partitions: 4, steal_batch: 8 },
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+    let fleet = spawn_fleet_partitioned(&addr, 8, Arc::new(DefaultRunner), 1, 4).unwrap();
+    assert!(svc.wait_executors(8, Duration::from_secs(5)));
+    let n = 400;
+    let ids = svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(30)).unwrap();
+    let mut seen: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
+    seen.sort_unstable();
+    let mut want = ids.clone();
+    want.sort_unstable();
+    assert_eq!(seen, want, "exactly-once across shards");
+    // Dispatch totals conserve the campaign across shards (stealing may
+    // rebalance who dispatches, never how much in total).
+    let stats = svc.shard_stats();
+    assert_eq!(stats.len(), 4);
+    let dispatched: u64 = stats.iter().map(|s| s.dispatched).sum();
+    assert_eq!(dispatched, n as u64, "{stats:?}");
+    assert!(stats.iter().filter(|s| s.dispatched > 0).count() >= 2, "{stats:?}");
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn sharded_service_steals_for_executor_less_partitions() {
+    // Submit BEFORE any executor registers: routing falls back to
+    // id % partitions, loading all 4 shards. Then executors appear only
+    // on partition 0 — its dispatcher must steal the other shards'
+    // queues to finish the campaign.
+    let svc = Service::start(ServiceConfig {
+        hierarchy: HierarchyConfig { partitions: 4, steal_batch: 8 },
+        ..Default::default()
+    })
+    .unwrap();
+    let n = 200;
+    svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let stats = svc.shard_stats();
+    assert!(stats.iter().all(|s| s.waiting > 0), "all shards loaded: {stats:?}");
+    let fleet = spawn_fleet(&svc.addr().to_string(), 2, Arc::new(DefaultRunner), 1).unwrap();
+    assert!(svc.wait_executors(2, Duration::from_secs(5)));
+    let outcomes = svc.wait_all(Duration::from_secs(30)).unwrap();
+    assert_eq!(outcomes.len(), n);
+    assert!(outcomes.iter().all(|o| o.ok()));
+    let stats = svc.shard_stats();
+    // Shards 1..3 each held ~n/4 tasks; all of them had to be stolen
+    // into shard 0 (the only one with executors).
+    assert_eq!(stats[0].dispatched, n as u64, "{stats:?}");
+    assert!(stats[0].stolen_in as usize >= n / 2, "{stats:?}");
+    let stolen_out: u64 = stats.iter().map(|s| s.stolen_out).sum();
+    assert_eq!(stolen_out, stats[0].stolen_in, "transfer books must balance");
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn stale_stage_ack_cannot_satisfy_newer_push() {
+    // Regression for the stage_object/wait_staged ack-identity race: a
+    // raw "executor" receives two pushes of the same key and acks the
+    // FIRST one only — the rendezvous for the newer push must not accept
+    // that stale ack, but must accept the matching one.
+    let svc = service(1);
+    let addr = svc.addr().to_string();
+    let mut fake = Framed::connect(&addr, Proto::Tcp).unwrap();
+    fake.send(&Msg::Register { executor_id: 0, cores: 1, partition: 0 }).unwrap();
+    assert!(svc.wait_executors(1, Duration::from_secs(5)));
+
+    svc.stage_object(0, "params.dat", b"v1").unwrap();
+    let gen1 = match fake.recv().unwrap() {
+        Msg::StagePut { gen, .. } => gen,
+        m => panic!("expected StagePut, got {m:?}"),
+    };
+    // Re-push changed content under the same key before the first ack
+    // arrives (the in-flight-ack race).
+    svc.stage_object(0, "params.dat", b"v2").unwrap();
+    let gen2 = match fake.recv().unwrap() {
+        Msg::StagePut { gen, .. } => gen,
+        m => panic!("expected StagePut, got {m:?}"),
+    };
+    assert!(gen2 > gen1, "each push must get a fresh generation");
+
+    // The stale ack (v1's) arrives late: it must NOT satisfy the newer
+    // push's rendezvous.
+    fake.send(&Msg::StageAck {
+        executor_id: 0,
+        key: "params.dat".into(),
+        bytes: 2,
+        ok: true,
+        gen: gen1,
+    })
+    .unwrap();
+    assert_eq!(
+        svc.wait_staged(0, "params.dat", Duration::from_millis(300)),
+        None,
+        "stale-generation ack must be dropped"
+    );
+    assert!(svc.staged_nodes("params.dat").is_empty(), "stale ack must not commit residency");
+
+    // The matching ack completes it.
+    fake.send(&Msg::StageAck {
+        executor_id: 0,
+        key: "params.dat".into(),
+        bytes: 2,
+        ok: true,
+        gen: gen2,
+    })
+    .unwrap();
+    assert_eq!(svc.wait_staged(0, "params.dat", Duration::from_secs(5)), Some(true));
+    assert_eq!(svc.staged_nodes("params.dat"), vec![0]);
     svc.shutdown();
 }
 

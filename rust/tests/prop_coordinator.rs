@@ -1,6 +1,7 @@
 //! Property tests over coordinator invariants (own shrinking harness —
 //! proptest is unavailable offline; see util::prop).
 
+use falkon::falkon::coordinator::{HierarchyConfig, ShardedQueues};
 use falkon::falkon::errors::{RetryPolicy, TaskError};
 use falkon::falkon::queue::TaskQueues;
 use falkon::falkon::simworld::{SimTask, World, WorldConfig};
@@ -52,6 +53,98 @@ fn prop_queue_conservation() {
             }
             if !q.conserved(drained) {
                 return Err(format!("conservation broken at step {step}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Cross-shard conservation: under arbitrary interleavings of submits,
+/// dispatches, completions, failures (including `fail_attempt` on tasks
+/// that were just stolen), work steals and drains, every task that ever
+/// entered the sharded queues is in exactly one place — globally, with
+/// cross-shard transfers balancing out.
+#[test]
+fn prop_sharded_conservation_under_stealing_and_failure() {
+    check("sharded conservation", 300, |g: &mut Gen| {
+        let n_shards = g.rng.range(2, 6) as usize;
+        let mut sq = ShardedQueues::new(HierarchyConfig {
+            partitions: n_shards,
+            steal_batch: g.rng.range(1, 16) as usize,
+        });
+        let policy = RetryPolicy {
+            max_attempts: g.rng.range(1, 4) as u32,
+            ..Default::default()
+        };
+        let steps = g.size_range(1, 150);
+        let mut drained = 0u64;
+        for step in 0..steps {
+            let s = g.rng.below(n_shards as u64) as usize;
+            match g.rng.below(6) {
+                0 | 1 => {
+                    sq.submit_to(s, TaskPayload::Sleep { secs: 0.0 });
+                }
+                2 => {
+                    // Dispatch a batch on shard `s`, then resolve each
+                    // task — completions, app errors, or transport
+                    // failures that re-queue or exhaust.
+                    let exec = g.rng.below(8) as usize;
+                    let n = g.rng.range(1, 8) as usize;
+                    for t in sq.take_for_dispatch(s, exec, n) {
+                        match g.rng.below(3) {
+                            0 => sq.complete(s, t.id, 0),
+                            1 => sq.complete(s, t.id, 1),
+                            _ => {
+                                let errs = [
+                                    TaskError::CommError,
+                                    TaskError::StaleNfsHandle,
+                                    TaskError::NodeLost,
+                                ];
+                                let err = g.rng.pick(&errs).clone();
+                                sq.fail_attempt(s, t.id, err, &policy);
+                            }
+                        }
+                    }
+                }
+                3 => {
+                    // Steal into shard `s` from the deepest other shard,
+                    // then (executor failure on stolen work) sometimes
+                    // dispatch + fail a freshly stolen task immediately.
+                    if let Some(victim) = sq.most_loaded() {
+                        if victim != s {
+                            let moved =
+                                sq.steal(victim, s, g.rng.range(1, 16) as usize);
+                            if moved > 0 && g.rng.chance(0.5) {
+                                for t in sq.take_for_dispatch(s, 99, moved) {
+                                    sq.fail_attempt(
+                                        s,
+                                        t.id,
+                                        TaskError::NodeLost,
+                                        &policy,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                4 => drained += sq.drain_done().len() as u64,
+                _ => {}
+            }
+            if !sq.conserved(drained) {
+                return Err(format!(
+                    "cross-shard conservation broken at step {step}: {:?}",
+                    sq.stats()
+                ));
+            }
+        }
+        // Per-shard books must close too: a shard can never hold more
+        // live tasks than it ever received (submits + steals in).
+        for s in 0..n_shards {
+            let q = sq.shard(s);
+            if q.transferred_in() + q.submitted()
+                < (q.waiting_len() + q.pending_len()) as u64
+            {
+                return Err(format!("shard {s} holds more than it ever received"));
             }
         }
         Ok(())

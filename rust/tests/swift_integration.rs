@@ -24,6 +24,7 @@ fn live_service() -> Service {
         bind: "127.0.0.1:0".into(),
         dispatch: DispatchConfig { bundle: 2, data_aware: false },
         retry: Default::default(),
+        ..Default::default()
     })
     .unwrap()
 }
