@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     // L3 service.
     let svc = Service::start(ServiceConfig {
         bind: "127.0.0.1:0".into(),
-        dispatch: DispatchConfig { bundle: 2, data_aware: false },
+        dispatch: DispatchConfig { bundle: 2, data_aware: false, ..Default::default() },
         retry: Default::default(),
         ..Default::default()
     })?;
@@ -42,14 +42,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..n_exec {
         let runner = Arc::new(ComputeRunner::new(Registry::open("artifacts")?));
         fleet.push(Executor::start(
-            ExecutorConfig {
-                service_addr: addr.clone(),
-                executor_id: i as u64,
-                cores: 1,
-                proto: falkon::net::tcpcore::Proto::Tcp,
-                initial_credit: 1,
-                partition: 0,
-            },
+            ExecutorConfig::c_style(addr.clone(), i as u64),
             runner,
         )?);
     }

@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     //    persistent sockets and credit-based flow control.
     let svc = Service::start(ServiceConfig {
         bind: "127.0.0.1:0".into(),
-        dispatch: DispatchConfig { bundle: 4, data_aware: false },
+        dispatch: DispatchConfig { bundle: 4, data_aware: false, ..Default::default() },
         retry: Default::default(),
         ..Default::default()
     })?;

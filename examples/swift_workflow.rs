@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
 
     let svc = Service::start(ServiceConfig {
         bind: "127.0.0.1:0".into(),
-        dispatch: DispatchConfig { bundle: 2, data_aware: false },
+        dispatch: DispatchConfig { bundle: 2, data_aware: false, ..Default::default() },
         retry: Default::default(),
         ..Default::default()
     })?;

@@ -14,9 +14,11 @@
 
 use falkon::falkon::coordinator::HierarchyConfig;
 use falkon::falkon::dispatch::DispatchConfig;
-use falkon::falkon::exec::{spawn_fleet_partitioned, DefaultRunner};
+use falkon::falkon::exec::{spawn_fleet_with, DefaultRunner};
 use falkon::falkon::service::{Service, ServiceConfig};
-use falkon::falkon::simworld::{run_sleep_workload, SimTask, WireProto, World, WorldConfig};
+use falkon::falkon::simworld::{
+    run_sleep_workload, run_wire_workload, SimTask, WireProto, World, WorldConfig,
+};
 use falkon::falkon::task::TaskPayload;
 use falkon::sim::machine::Machine;
 use falkon::util::bench::{banner, emit_json, Table};
@@ -28,23 +30,38 @@ fn quick() -> bool {
     std::env::var("FALKON_BENCH_QUICK").is_ok()
 }
 
-fn live_throughput(
+/// One live loopback run. `adaptive_cap > 0` turns on adaptive bundle
+/// sizing (overriding `bundle`); `result_batch <= 1` is the classic
+/// per-task `Result` wire path.
+#[allow(clippy::too_many_arguments)]
+fn live_wire_throughput(
     n_exec: usize,
     n_tasks: usize,
     bundle: usize,
+    adaptive_cap: usize,
     credit: u32,
     partitions: usize,
+    result_batch: usize,
 ) -> f64 {
     let svc = Service::start(ServiceConfig {
         bind: "127.0.0.1:0".into(),
-        dispatch: DispatchConfig { bundle, data_aware: false },
+        dispatch: DispatchConfig { bundle, data_aware: false, adaptive_cap },
         retry: Default::default(),
         hierarchy: HierarchyConfig { partitions, ..Default::default() },
     })
     .unwrap();
-    let fleet =
-        spawn_fleet_partitioned(&svc.addr().to_string(), n_exec, Arc::new(DefaultRunner), credit, partitions)
-            .unwrap();
+    let fleet = spawn_fleet_with(
+        &svc.addr().to_string(),
+        n_exec,
+        Arc::new(DefaultRunner),
+        credit,
+        partitions,
+        |mut cfg| {
+            cfg.result_batch = result_batch;
+            cfg
+        },
+    )
+    .unwrap();
     svc.wait_executors(n_exec, Duration::from_secs(10));
     let t0 = Instant::now();
     svc.submit_many((0..n_tasks).map(|_| TaskPayload::Sleep { secs: 0.0 }));
@@ -56,6 +73,16 @@ fn live_throughput(
     }
     svc.shutdown();
     n_tasks as f64 / dt
+}
+
+fn live_throughput(
+    n_exec: usize,
+    n_tasks: usize,
+    bundle: usize,
+    credit: u32,
+    partitions: usize,
+) -> f64 {
+    live_wire_throughput(n_exec, n_tasks, bundle, 0, credit, partitions, 16)
 }
 
 /// Sustained simulated dispatch throughput at 4096 BG/P nodes with
@@ -71,7 +98,67 @@ fn sharded_sim_throughput(dispatchers: usize, n_tasks: usize) -> f64 {
     w.campaign().throughput()
 }
 
+/// Batched wire hot path: bundle × result-batch sweep → BENCH_wire.json.
+/// Standalone so CI's smoke step (`FALKON_BENCH_WIRE_ONLY=1`) can run it
+/// without the full suite's calibration assertions.
+fn wire_sweep() {
+    banner("Batched wire hot path — bundle × result-batch sweep (BENCH_wire.json)");
+    // Live loopback: bundle {1, 4, 16, adaptive} × result batching
+    // {off, on}. Credit 16 everywhere so bundles can actually form; the
+    // (1, off) row is the unbatched baseline the ≥2× acceptance gate in
+    // tests/wire_batching_integration.rs measures against.
+    let wire_n = if quick() { 3_000 } else { 30_000 };
+    let mut t = Table::new(&["bundle", "result batch", "live tasks/s", "sim tasks/s"]);
+    let mut wire_rows = Vec::new();
+    let sim_wire_n = if quick() { 4_000 } else { 20_000 };
+    for (label, bundle, adaptive) in
+        [("1", 1usize, 0usize), ("4", 4, 0), ("16", 16, 0), ("adaptive", 1, 16)]
+    {
+        for (rb_label, rb) in [("off", 1usize), ("on", 16usize)] {
+            let live = live_wire_throughput(4, wire_n, bundle, adaptive, 16, 1, rb);
+            // Simulated twin of the row (ANL/UC WS — the §4.2 fabric):
+            // result_batch 1 = modeled-but-unbatched, 16 = batched.
+            let sim = run_wire_workload(
+                Machine::anluc(),
+                200,
+                sim_wire_n,
+                WireProto::Ws,
+                bundle,
+                adaptive,
+                rb,
+            )
+            .throughput();
+            t.row(&[
+                label.to_string(),
+                rb_label.to_string(),
+                format!("{live:.0}"),
+                format!("{sim:.0}"),
+            ]);
+            let mut row = Json::obj();
+            row.set("bundle", Json::Str(label.to_string()))
+                .set("result_batch", Json::Str(rb_label.to_string()))
+                .set("live_tasks_per_s", Json::Num(live))
+                .set("sim_tasks_per_s", Json::Num(sim));
+            wire_rows.push(row);
+        }
+    }
+    t.print();
+    let mut wire_summary = Json::obj();
+    wire_summary
+        .set("executors", Json::Num(4.0))
+        .set("tasks", Json::Num(wire_n as f64))
+        .set("sim_machine", Json::Str("anluc-ws".into()))
+        .set("sweep", Json::Arr(wire_rows));
+    emit_json("wire", &wire_summary).expect("write BENCH_wire.json");
+}
+
 fn main() {
+    // Wire-sweep-only mode: what CI's smoke step runs — no calibration
+    // assertions from the other sections can fail it.
+    if std::env::var("FALKON_BENCH_WIRE_ONLY").is_ok() {
+        wire_sweep();
+        return;
+    }
     let sim_n = if quick() { 5_000 } else { 100_000 };
 
     banner("Figure 6 — peak throughput, simulated machines (paper calibration)");
@@ -167,6 +254,8 @@ fn main() {
         .set("sharded_sim", Json::Arr(shard_rows))
         .set("live", Json::Arr(live_rows));
     emit_json("dispatch", &summary).expect("write BENCH_dispatch.json");
+
+    wire_sweep();
 
     banner("§4.2 bundling sweep (simulated ANL/UC, WS protocol)");
     let mut t = Table::new(&["bundle", "tasks/s", "speedup vs bundle=1"]);

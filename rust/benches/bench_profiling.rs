@@ -35,14 +35,7 @@ fn profile_live(proto: Proto, n: usize) -> Vec<(&'static str, f64)> {
     let execs: Vec<Executor> = (0..4)
         .map(|i| {
             Executor::start(
-                ExecutorConfig {
-                    service_addr: addr.clone(),
-                    executor_id: i,
-                    cores: 1,
-                    proto,
-                    initial_credit: 1,
-                    partition: 0,
-                },
+                ExecutorConfig { proto, ..ExecutorConfig::c_style(addr.clone(), i) },
                 Arc::new(DefaultRunner),
             )
             .unwrap()

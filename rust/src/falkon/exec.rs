@@ -10,11 +10,11 @@
 use crate::falkon::errors::TaskError;
 use crate::falkon::task::TaskPayload;
 use crate::fs::ramdisk::Ramdisk;
-use crate::net::proto::{Msg, WireTask};
-use crate::net::tcpcore::{Framed, Proto};
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use crate::net::proto::{Msg, WireResult, WireTask};
+use crate::net::tcpcore::{Framed, Proto, WriteHandle};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Executes task payloads on the worker node.
 pub trait TaskRunner: Send + Sync {
@@ -97,6 +97,19 @@ pub struct ExecutorConfig {
     /// Machine partition (BG/P pset) this executor's node belongs to;
     /// the service maps it onto a queue shard (modulo its shard count).
     pub partition: u32,
+    /// Max completions coalesced into one `ResultBatch` frame. The
+    /// batcher flushes immediately whenever the executor goes idle (so a
+    /// lone sleep-0 result pays zero extra latency) and otherwise at this
+    /// count or after `batch_window`, whichever first. `<= 1` disables
+    /// batching: each completion ships as a classic `Result` frame.
+    pub result_batch: usize,
+    /// Max time a completed result may sit buffered while other tasks
+    /// are still running (the time half of the flush window).
+    pub batch_window: Duration,
+    /// Liveness heartbeat period. `None` disables heartbeats. Heartbeats
+    /// are *suppressed* while the connection is already carrying results
+    /// within the interval — results are proof of liveness.
+    pub heartbeat: Option<Duration>,
 }
 
 impl ExecutorConfig {
@@ -109,6 +122,9 @@ impl ExecutorConfig {
             proto: Proto::Tcp,
             initial_credit: 1,
             partition: 0,
+            result_batch: 16,
+            batch_window: Duration::from_millis(2),
+            heartbeat: None,
         }
     }
 
@@ -121,6 +137,140 @@ impl ExecutorConfig {
             proto: Proto::Ws,
             initial_credit: cores,
             partition: 0,
+            result_batch: 16,
+            batch_window: Duration::from_millis(2),
+            heartbeat: None,
+        }
+    }
+}
+
+/// Executor-side completion coalescer: workers push finished results
+/// here; batches flush as one `[ResultBatch, Ready]` gathered write.
+///
+/// Flush policy (the latency/throughput trade the wire refactor hinges
+/// on): flush immediately when the executor has no task left in flight
+/// (sleep-0 latency unhurt — the common strict-pull case always flushes
+/// a batch of 1 right away), at `cap` results (deep pipelines amortize),
+/// or after `window` (bounds how long a result can hide behind a
+/// long-running neighbor task).
+struct ResultBatcher {
+    write: WriteHandle,
+    executor_id: u64,
+    cap: usize,
+    window: Duration,
+    buf: Mutex<Vec<WireResult>>,
+    /// Wakes the window-flusher when the first result lands in `buf`.
+    cv: Condvar,
+    /// Tasks received but not yet completed (flush-on-idle trigger).
+    inflight: AtomicU32,
+    /// Millis (since `epoch`) of the last result/batch actually sent —
+    /// what the heartbeat loop consults to suppress redundant beats.
+    last_send_ms: AtomicU64,
+    epoch: Instant,
+    stop: AtomicBool,
+}
+
+impl ResultBatcher {
+    fn new(write: WriteHandle, executor_id: u64, cap: usize, window: Duration) -> ResultBatcher {
+        ResultBatcher {
+            write,
+            executor_id,
+            cap: cap.max(1),
+            window,
+            buf: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            inflight: AtomicU32::new(0),
+            last_send_ms: AtomicU64::new(0),
+            epoch: Instant::now(),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    fn task_received(&self, n: u32) {
+        self.inflight.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// A worker finished a task: buffer its result and flush if the
+    /// executor just went idle or the batch is full; otherwise leave it
+    /// for the window flusher.
+    fn complete(&self, r: WireResult) {
+        let idle = self.inflight.fetch_sub(1, Ordering::SeqCst) == 1;
+        let full;
+        {
+            let mut buf = self.buf.lock().expect("batcher poisoned");
+            buf.push(r);
+            full = buf.len() >= self.cap;
+        }
+        if idle || full {
+            self.flush();
+        } else {
+            self.cv.notify_one(); // arm the window flusher
+        }
+    }
+
+    /// Drain the buffer and ship it: one gathered write carrying the
+    /// results and the matching credit grant. No-op when empty.
+    fn flush(&self) {
+        let batch = {
+            let mut buf = self.buf.lock().expect("batcher poisoned");
+            if buf.is_empty() {
+                return;
+            }
+            std::mem::take(&mut *buf)
+        };
+        let slots = batch.len() as u32;
+        let sent = if self.cap <= 1 {
+            // Batching off: classic per-task frames (one Result + one
+            // Ready each — usually a single pair; workers racing a flush
+            // can briefly buffer more), each pair wired individually.
+            let mut msgs = Vec::with_capacity(batch.len() * 2);
+            for r in batch {
+                msgs.push(Msg::Result {
+                    task_id: r.task_id,
+                    exit_code: r.exit_code,
+                    error: r.error,
+                });
+                msgs.push(Msg::Ready { executor_id: self.executor_id, slots: 1 });
+            }
+            self.write.send_many(&msgs)
+        } else {
+            self.write.send_many(&[
+                Msg::ResultBatch { results: batch },
+                Msg::Ready { executor_id: self.executor_id, slots },
+            ])
+        };
+        if sent.is_ok() {
+            self.last_send_ms
+                .store(self.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Millis since the connection last carried results.
+    fn since_last_send(&self) -> u64 {
+        (self.epoch.elapsed().as_millis() as u64)
+            .saturating_sub(self.last_send_ms.load(Ordering::Relaxed))
+    }
+
+    /// Window flusher body: wait for a buffered result, give the batch
+    /// `window` to fill, then flush whatever is there.
+    fn run_flusher(&self) {
+        loop {
+            {
+                let mut buf = self.buf.lock().expect("batcher poisoned");
+                while buf.is_empty() && !self.stop.load(Ordering::SeqCst) {
+                    let (g, _) = self
+                        .cv
+                        .wait_timeout(buf, Duration::from_millis(50))
+                        .expect("batcher poisoned");
+                    buf = g;
+                }
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                self.flush(); // ship any tail before exiting
+                return;
+            }
+            std::thread::sleep(self.window);
+            self.flush();
         }
     }
 }
@@ -129,7 +279,10 @@ impl ExecutorConfig {
 pub struct Executor {
     stop: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
-    framed_shutdown: crate::net::tcpcore::WriteHandle,
+    framed_shutdown: WriteHandle,
+    batcher: Arc<ResultBatcher>,
+    /// Heartbeats actually sent (suppressed ones never count).
+    heartbeats: Arc<AtomicU64>,
 }
 
 impl Executor {
@@ -149,26 +302,35 @@ impl Executor {
         ramdisk: Option<Arc<Ramdisk>>,
     ) -> anyhow::Result<Executor> {
         let mut framed = Framed::connect(&config.service_addr, config.proto)?;
-        framed.send(&Msg::Register {
-            executor_id: config.executor_id,
-            cores: config.cores,
-            partition: config.partition,
-        })?;
-        framed.send(&Msg::Ready { executor_id: config.executor_id, slots: config.initial_credit })?;
+        // Registration + initial credit ride one gathered write.
+        framed.send_many(&[
+            Msg::Register {
+                executor_id: config.executor_id,
+                cores: config.cores,
+                partition: config.partition,
+            },
+            Msg::Ready { executor_id: config.executor_id, slots: config.initial_credit },
+        ])?;
         let (mut read_half, write_half) = framed.split()?;
 
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = mpsc::channel::<WireTask>();
         let rx = Arc::new(Mutex::new(rx));
         let mut threads = Vec::new();
+        let batcher = Arc::new(ResultBatcher::new(
+            write_half.clone(),
+            config.executor_id,
+            config.result_batch,
+            config.batch_window,
+        ));
+        let heartbeats = Arc::new(AtomicU64::new(0));
 
         // Worker threads.
         for _ in 0..config.cores.max(1) {
             let rx = rx.clone();
-            let write = write_half.clone();
+            let batcher = batcher.clone();
             let runner = runner.clone();
             let stop = stop.clone();
-            let executor_id = config.executor_id;
             threads.push(std::thread::spawn(move || loop {
                 let task = {
                     let guard = rx.lock().unwrap();
@@ -180,8 +342,7 @@ impl Executor {
                             Ok(code) => (code, None),
                             Err(e) => (-1, Some(e)),
                         };
-                        let _ = write.send(&Msg::Result { task_id: task.id, exit_code, error });
-                        let _ = write.send(&Msg::Ready { executor_id, slots: 1 });
+                        batcher.complete(WireResult { task_id: task.id, exit_code, error });
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {
                         if stop.load(Ordering::SeqCst) {
@@ -193,16 +354,61 @@ impl Executor {
             }));
         }
 
+        // Window flusher: bounds how long a completed result can wait
+        // behind still-running neighbors (flush-on-idle handles the
+        // latency-critical empty-pipeline case inline). With batching
+        // off, complete() always flushes inline — no thread needed.
+        if config.result_batch > 1 {
+            let batcher = batcher.clone();
+            threads.push(std::thread::spawn(move || batcher.run_flusher()));
+        }
+
+        // Heartbeat thread (optional): beat only when the connection has
+        // NOT carried results within the interval — a `ResultBatch` is
+        // already proof of liveness, so beats alongside steady result
+        // traffic are pure overhead.
+        if let Some(period) = config.heartbeat {
+            let batcher = batcher.clone();
+            let write = write_half.clone();
+            let stop = stop.clone();
+            let heartbeats = heartbeats.clone();
+            let executor_id = config.executor_id;
+            threads.push(std::thread::spawn(move || {
+                // Tick is capped so stop() never blocks long joining this
+                // thread, even with minutes-long heartbeat periods.
+                let tick = (period / 2)
+                    .clamp(Duration::from_millis(1), Duration::from_millis(50));
+                let mut last_beat = Instant::now();
+                loop {
+                    std::thread::sleep(tick);
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if batcher.since_last_send() >= period.as_millis() as u64
+                        && last_beat.elapsed() >= period
+                    {
+                        if write.send(&Msg::Heartbeat { executor_id }).is_err() {
+                            break;
+                        }
+                        heartbeats.fetch_add(1, Ordering::Relaxed);
+                        last_beat = Instant::now();
+                    }
+                }
+            }));
+        }
+
         // Reader thread: receives Dispatch bundles and feeds workers;
         // handles staging pushes inline (writes are ramdisk-fast).
         {
             let stop = stop.clone();
             let ack_write = write_half.clone();
+            let batcher = batcher.clone();
             let executor_id = config.executor_id;
             threads.push(std::thread::spawn(move || {
                 loop {
                     match read_half.recv() {
                         Ok(Msg::Dispatch { shard: _, tasks }) => {
+                            batcher.task_received(tasks.len() as u32);
                             for t in tasks {
                                 if tx.send(t).is_err() {
                                     return;
@@ -238,12 +444,20 @@ impl Executor {
             }));
         }
 
-        Ok(Executor { stop, threads, framed_shutdown: write_half })
+        Ok(Executor { stop, threads, framed_shutdown: write_half, batcher, heartbeats })
+    }
+
+    /// Heartbeats actually sent on the wire so far (suppressed beats are
+    /// never counted) — observability for the suppression policy.
+    pub fn heartbeats_sent(&self) -> u64 {
+        self.heartbeats.load(Ordering::Relaxed)
     }
 
     /// Stop the executor and join its threads.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        self.batcher.stop.store(true, Ordering::SeqCst);
+        self.batcher.cv.notify_all();
         self.framed_shutdown.shutdown();
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -281,18 +495,29 @@ pub fn spawn_fleet_partitioned(
     initial_credit: u32,
     partitions: usize,
 ) -> anyhow::Result<Vec<Executor>> {
+    spawn_fleet_with(addr, n, runner, initial_credit, partitions, |cfg| cfg)
+}
+
+/// Spawn `n` C-style executors with a per-executor config hook (wire
+/// tuning: result-batch cap/window, heartbeats). The base config is
+/// `c_style` with `initial_credit` credit on partition `i % partitions`.
+pub fn spawn_fleet_with(
+    addr: &str,
+    n: usize,
+    runner: Arc<dyn TaskRunner>,
+    initial_credit: u32,
+    partitions: usize,
+    tune: impl Fn(ExecutorConfig) -> ExecutorConfig,
+) -> anyhow::Result<Vec<Executor>> {
     let parts = partitions.max(1) as u64;
     (0..n)
         .map(|i| {
             let cfg = ExecutorConfig {
-                service_addr: addr.to_string(),
-                executor_id: i as u64,
-                cores: 1,
-                proto: Proto::Tcp,
                 initial_credit,
                 partition: (i as u64 % parts) as u32,
+                ..ExecutorConfig::c_style(addr.to_string(), i as u64)
             };
-            Executor::start(cfg, runner.clone())
+            Executor::start(tune(cfg), runner.clone())
         })
         .collect()
 }

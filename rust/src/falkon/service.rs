@@ -27,13 +27,14 @@
 
 use crate::falkon::coordinator::{HierarchyConfig, ShardStat};
 use crate::falkon::dispatch::{
-    bundle_for, choose_executor_scored, choose_shard, DispatchConfig, IdleExecutor, ShardLoad,
+    bundle_for_depth, choose_executor_scored, choose_shard, DispatchConfig, IdleExecutor,
+    ShardLoad,
 };
 use crate::falkon::errors::{NodeHealth, RetryPolicy, TaskError};
 use crate::falkon::queue::{TaskOutcome, TaskQueues};
 use crate::falkon::task::{Task, TaskId, TaskPayload};
 use crate::fs::cache::CacheManager;
-use crate::net::proto::{Msg, WireTask};
+use crate::net::proto::{Msg, WireResult, WireTask};
 use crate::net::tcpcore::{Framed, Registry};
 use std::collections::{HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
@@ -234,14 +235,20 @@ struct RouteScratch {
 
 /// Receivers reject frames over 64 MB (`Framed::recv`); an oversized
 /// staged object would silently tear down the executor's connection, so
-/// refuse it at the send side with a real error instead.
+/// refuse it at the send side with a real error instead. The cap is
+/// checked against the WORST-case encoding — a WS connection base64-
+/// expands the binary body (×4/3) inside a SOAP envelope — because the
+/// service cannot know here which protocol each recipient negotiated.
 fn check_stage_size(key: &str, data: &[u8]) -> anyhow::Result<()> {
     const FRAME_CAP: usize = 64 << 20;
-    // Envelope: tag + two length prefixes + the key.
+    // Binary body: tag + two length prefixes + key + data (+ slack);
+    // WS frame: base64 of that body plus the ~700-byte envelope.
+    let body = data.len() + key.len() + 64;
+    let ws_frame = body.div_ceil(3) * 4 + 1024;
     anyhow::ensure!(
-        data.len() + key.len() + 64 < FRAME_CAP,
-        "staged object {key:?} is {} bytes; the wire frame cap is {FRAME_CAP} — split it \
-         into chunks or stage via the shared FS",
+        ws_frame < FRAME_CAP,
+        "staged object {key:?} is {} bytes ({ws_frame} bytes as a worst-case WS frame); \
+         the wire frame cap is {FRAME_CAP} — split it into chunks or stage via the shared FS",
         data.len()
     );
     Ok(())
@@ -736,7 +743,15 @@ fn reader_loop(framed: Framed, inner: Arc<Inner>) {
                 shard.work_cv.notify_one();
             }
             Ok(Msg::Result { task_id, exit_code, error }) => {
-                handle_result(&inner, shard_idx, executor_id, task_id, exit_code, error);
+                handle_results(
+                    &inner,
+                    shard_idx,
+                    executor_id,
+                    &[WireResult { task_id, exit_code, error }],
+                );
+            }
+            Ok(Msg::ResultBatch { results }) => {
+                handle_results(&inner, shard_idx, executor_id, &results);
             }
             Ok(Msg::StageAck { executor_id: _, key, bytes, ok, gen }) => {
                 let node = executor_id as usize;
@@ -804,46 +819,59 @@ fn reader_loop(framed: Framed, inner: Arc<Inner>) {
     inner.done_cv.notify_all();
 }
 
-fn handle_result(
+/// Ingest a batch of completions from one executor under ONE shard lock
+/// (the per-shard completion path): per-task bookkeeping is identical to
+/// the old per-message handler, but lock/hint/notify costs are paid once
+/// per batch instead of once per task. A batch of 1 (the `Msg::Result`
+/// compatibility path) degenerates to exactly the old behavior.
+fn handle_results(
     inner: &Arc<Inner>,
     shard_idx: usize,
     executor_id: u64,
-    task_id: TaskId,
-    exit_code: i32,
-    error: Option<TaskError>,
+    results: &[WireResult],
 ) {
+    if results.is_empty() {
+        return;
+    }
     let t0 = Instant::now();
     let shard = &inner.shards[shard_idx];
-    let mut st = shard.state.lock().expect("shard poisoned");
-    // Failure timestamps on the service epoch, so the suspension
-    // policy's sliding window actually slides.
-    let now_s = inner.epoch.elapsed().as_secs_f64();
-    match error {
-        None => {
-            st.queues.complete(task_id, exit_code);
-            if let Some(meta) = st.execs.get_mut(&executor_id) {
-                meta.health.record_success();
-            }
-        }
-        Some(err) => {
-            st.queues.fail_attempt(task_id, err, &inner.config.retry);
-            let policy = inner.config.retry.clone();
-            let mut suspend = false;
-            if let Some(meta) = st.execs.get_mut(&executor_id) {
-                suspend = meta.health.record_failure(now_s, &policy);
-            }
-            if suspend {
-                st.idle.retain(|e| *e != executor_id);
-                if let Some(h) = inner.registry.get(executor_id) {
-                    let _ = h.send(&Msg::Suspend { reason: "failure storm".into() });
+    let mut suspend = false;
+    {
+        let mut st = shard.state.lock().expect("shard poisoned");
+        // Failure timestamps on the service epoch, so the suspension
+        // policy's sliding window actually slides. Errors inside one
+        // batch share a timestamp — at most a flush window (~ms) apart
+        // from their true times, so suspension timing is unchanged.
+        let now_s = inner.epoch.elapsed().as_secs_f64();
+        let policy = inner.config.retry.clone();
+        for r in results {
+            match &r.error {
+                None => {
+                    st.queues.complete(r.task_id, r.exit_code);
+                    if let Some(meta) = st.execs.get_mut(&executor_id) {
+                        meta.health.record_success();
+                    }
+                }
+                Some(err) => {
+                    st.queues.fail_attempt(r.task_id, err.clone(), &inner.config.retry);
+                    if let Some(meta) = st.execs.get_mut(&executor_id) {
+                        suspend |= meta.health.record_failure(now_s, &policy);
+                    }
                 }
             }
         }
+        if suspend {
+            st.idle.retain(|e| *e != executor_id);
+        }
+        shard.sync_hints(&st);
     }
-    shard.sync_hints(&st);
-    drop(st);
+    if suspend {
+        if let Some(h) = inner.registry.get(executor_id) {
+            let _ = h.send(&Msg::Suspend { reason: "failure storm".into() });
+        }
+    }
     inner.profile.notify_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-    inner.profile.tasks.fetch_add(1, Ordering::Relaxed);
+    inner.profile.tasks.fetch_add(results.len() as u64, Ordering::Relaxed);
     inner.signal_done();
     shard.work_cv.notify_one(); // completions may free retried work
 }
@@ -958,7 +986,8 @@ fn plan_one_fifo(st: &mut ShardState, cfg: &DispatchConfig) -> Option<(u64, Vec<
             st.idle.pop_front();
             continue;
         }
-        let n = bundle_for(meta.credit, cfg);
+        let credit = meta.credit;
+        let n = bundle_for_depth(credit, st.queues.waiting_len(), st.idle.len(), cfg);
         let tasks = st.queues.take_for_dispatch(exec_id as usize, n);
         if tasks.is_empty() {
             return None;
@@ -1005,7 +1034,7 @@ fn plan_one_scored(
         .collect();
     let pick = choose_executor_scored(&idles, scores);
     let exec_id = idles[pick].executor_id;
-    let n = bundle_for(idles[pick].credit, cfg);
+    let n = bundle_for_depth(idles[pick].credit, st.queues.waiting_len(), st.idle.len(), cfg);
     let tasks = st.queues.take_for_dispatch(exec_id as usize, n);
     if tasks.is_empty() {
         return None;

@@ -163,6 +163,25 @@ pub struct WorldConfig {
     /// Deterministic failure injection: (virtual seconds, node) pairs —
     /// each kills a node at an exact time (unlike `node_mtbf_s` draws).
     pub fail_nodes_at: Vec<(f64, usize)>,
+    /// Result-direction modeling + batching (the wire hot-path refactor).
+    /// `0` = the legacy calibration: result notifications are free and
+    /// their cost is folded into the dispatch per-task constant. `k >= 1`
+    /// = the service pays an explicit per-result-message cost
+    /// ([`ServiceModel::result_cost_s`], carved out of the dispatch
+    /// per-task constant so `k = 1` totals exactly match the legacy
+    /// model) and executors coalesce up to `k` completions per message,
+    /// flushing immediately whenever the core has nothing queued — the
+    /// same flush-on-idle policy as the live executor.
+    pub result_batch: usize,
+    /// Adaptive dispatch-bundle cap: `0` keeps the fixed `bundle` policy;
+    /// `> 0` sizes each bundle from queue depth over idle slots, capped
+    /// here (deep queue → large bundles, drain tail → singles).
+    pub adaptive_bundle_cap: usize,
+    /// Result-batch flush window, seconds (mirrors the live executor's
+    /// `batch_window`): a buffered completion ships at latest this long
+    /// after it was buffered, even while longer tasks keep the core
+    /// busy. Only meaningful when `result_batch >= 2`.
+    pub result_window_s: f64,
 }
 
 impl WorldConfig {
@@ -188,6 +207,9 @@ impl WorldConfig {
             dispatchers: 1,
             steal_batch: 64,
             fail_nodes_at: Vec::new(),
+            result_batch: 0,
+            adaptive_bundle_cap: 0,
+            result_window_s: 0.002,
         }
     }
 }
@@ -208,6 +230,14 @@ pub struct ServiceModel {
     /// constant, ~50× leaner than full dispatch (same class of saving as
     /// the 3-tier forwarder path).
     pub fwd_per_task_s: f64,
+    /// Result-direction costs, carved OUT of `per_task_s` (the legacy
+    /// calibration folds result handling into the dispatch per-task
+    /// constant): per result *message* — the share batching amortizes —
+    /// and per result inside a message. The split identity
+    /// `split-dispatch + res_per_msg + res_per_task = per_task_s` keeps
+    /// every §4.2 calibration anchor exact at result-batch 1.
+    pub res_per_msg_s: f64,
+    pub res_per_task_s: f64,
 }
 
 impl ServiceModel {
@@ -225,20 +255,42 @@ impl ServiceModel {
                 0.933,
             ),
         };
+        let per_task = base * (1.0 - msg_frac);
         ServiceModel {
             per_msg_s: base * msg_frac,
-            per_task_s: base * (1.0 - msg_frac),
+            per_task_s: per_task,
             per_byte_s: 5.36e-8,
             nic_bps: 100e6,
             fwd_per_msg_s: base * msg_frac,
             fwd_per_task_s: 5e-6,
+            // Result notifications are ~40% of the per-task residual
+            // (Fig 7 puts "notification" on par with the other per-task
+            // stages); 3/4 of that is per-message envelope — the part
+            // result batching amortizes.
+            res_per_msg_s: per_task * 0.3,
+            res_per_task_s: per_task * 0.1,
         }
     }
 
     /// CPU seconds to process one dispatch of `n` tasks totalling
-    /// `wire_bytes` beyond the minimal sleep-0 message.
+    /// `wire_bytes` beyond the minimal sleep-0 message (legacy model:
+    /// result-direction handling folded into `per_task_s`).
     pub fn dispatch_cost_s(&self, n: usize, extra_bytes: f64) -> f64 {
         self.per_msg_s + n as f64 * self.per_task_s + extra_bytes * self.per_byte_s
+    }
+
+    /// Dispatch cost with the result share carved out (used when the
+    /// result direction is modeled explicitly): at result-batch 1 the
+    /// sum of this and [`ServiceModel::result_cost_s`]`(1)` per task is
+    /// exactly [`ServiceModel::dispatch_cost_s`].
+    pub fn dispatch_cost_split_s(&self, n: usize, extra_bytes: f64) -> f64 {
+        let per_task = self.per_task_s - self.res_per_msg_s - self.res_per_task_s;
+        self.per_msg_s + n as f64 * per_task + extra_bytes * self.per_byte_s
+    }
+
+    /// CPU seconds to ingest one result message carrying `k` completions.
+    pub fn result_cost_s(&self, k: usize) -> f64 {
+        self.res_per_msg_s + k as f64 * self.res_per_task_s
     }
 
     /// Coordinator CPU seconds to forward a bundle of `n` tasks totalling
@@ -273,6 +325,14 @@ enum Ev {
     ExecDone { core: usize, task: usize },
     /// A result notification reaches the service.
     Result { core: usize, task: usize, error: Option<TaskError> },
+    /// A batched result message (result-direction modeling on): `k`
+    /// successful completions from one core in one wire message; the
+    /// service pays [`ServiceModel::result_cost_s`]`(k)` once.
+    ResultMsg { core: usize, results: Vec<usize> },
+    /// Result-batch window expiry for `core`: flush whatever completions
+    /// are still buffered (armed when the first result lands in an empty
+    /// buffer — the sim twin of the live window flusher thread).
+    ResultFlush { core: usize },
     /// Shared-FS progress wakeup (deduplicated via `fs_wake_target`).
     FsWake,
     /// A node dies (failure injection).
@@ -318,6 +378,9 @@ struct CoreState {
     current: Option<usize>,
     /// Dispatch credit (pre-fetch depth remaining).
     credit: u32,
+    /// Completed-but-unsent results (result batching; flushed on idle,
+    /// on reaching the batch cap, and lost if the node dies first).
+    result_buf: Vec<usize>,
     alive: bool,
 }
 
@@ -374,8 +437,9 @@ pub struct World {
     stolen_tasks_n: u64,
     /// Event counts by kind (TryDispatch, Deliver, ExecDone, Result,
     /// FsWake, NodeFail, FwdDeliver, BcastRecv, IfsArrive, CoordForward,
-    /// ShardArrive, ShardDispatch) — cheap observability for perf work.
-    pub event_tally: [u64; 12],
+    /// ShardArrive, ShardDispatch, ResultMsg, ResultFlush) — cheap
+    /// observability for perf work.
+    pub event_tally: [u64; 14],
 }
 
 /// One partition dispatcher in the simulated fabric: its queue shard,
@@ -454,8 +518,14 @@ impl World {
                     current: None,
                     // Bundling implies pre-fetch: a bundle parks tasks at
                     // the executor beyond its free cores (the paper's
-                    // executors unbundle into a local queue).
-                    credit: cfg.prefetch.max(cfg.bundle as u32).max(1),
+                    // executors unbundle into a local queue). Adaptive
+                    // bundles need credit up to their cap to form.
+                    credit: cfg
+                        .prefetch
+                        .max(cfg.bundle as u32)
+                        .max(cfg.adaptive_bundle_cap as u32)
+                        .max(1),
+                    result_buf: Vec::new(),
                     alive: true,
                 })
                 .collect(),
@@ -480,7 +550,7 @@ impl World {
             shard_live_cores: vec![0; n_shards],
             steal_events_n: 0,
             stolen_tasks_n: 0,
-            event_tally: [0; 12],
+            event_tally: [0; 14],
             tasks,
             cfg,
         };
@@ -664,6 +734,27 @@ impl World {
         bytes_per_task(codec, desc_len, bundle) * bundle as f64
     }
 
+    /// Dispatch bundle target before credit/queue clamping: fixed policy,
+    /// or adaptive from queue depth over idle slots (same rule as the
+    /// live `bundle_for_depth`).
+    fn bundle_target(&self, queued: usize, idle_slots: usize) -> usize {
+        if self.cfg.adaptive_bundle_cap == 0 {
+            self.cfg.bundle.max(1)
+        } else {
+            queued.div_ceil(idle_slots.max(1)).clamp(1, self.cfg.adaptive_bundle_cap)
+        }
+    }
+
+    /// Service CPU for one dispatch: the legacy folded model, or the
+    /// split model when the result direction is charged explicitly.
+    fn dispatch_cost(&self, n: usize, extra_bytes: f64) -> f64 {
+        if self.cfg.result_batch == 0 {
+            self.model.dispatch_cost_s(n, extra_bytes)
+        } else {
+            self.model.dispatch_cost_split_s(n, extra_bytes)
+        }
+    }
+
     /// Schedule the shared-FS wakeup, keeping at most one outstanding
     /// event at the earliest interesting time.
     fn arm_fs_wake(&mut self) {
@@ -780,7 +871,10 @@ impl World {
             }
         }
         let credit = self.cores[core].credit as usize;
-        let n = self.cfg.bundle.max(1).min(credit).min(self.waiting.len());
+        let n = self
+            .bundle_target(self.waiting.len(), self.idle.len() + 1)
+            .min(credit)
+            .min(self.waiting.len());
         let batch: Vec<usize> = (0..n).filter_map(|_| self.waiting.pop_front()).collect();
         self.cores[core].credit -= batch.len() as u32;
         if self.cores[core].credit > 0 {
@@ -789,7 +883,7 @@ impl World {
         let desc_len = batch.iter().map(|&t| self.tasks[t].desc_len).max().unwrap_or(12);
         let wire = self.codec_wire_bytes(desc_len.max(12), batch.len());
         let extra = (wire - self.base_wire_bytes * batch.len() as f64).max(0.0);
-        let cost = self.model.dispatch_cost_s(batch.len(), extra);
+        let cost = self.dispatch_cost(batch.len(), extra);
         self.service_busy_until = now + secs(cost);
         for &t in &batch {
             self.tstate[t].dispatch = self.service_busy_until;
@@ -1058,7 +1152,10 @@ impl World {
         self.shards[d].idle = idle;
 
         let credit = self.cores[core].credit as usize;
-        let n = self.cfg.bundle.max(1).min(credit).min(self.shards[d].waiting.len());
+        let n = self
+            .bundle_target(self.shards[d].waiting.len(), self.shards[d].idle.len() + 1)
+            .min(credit)
+            .min(self.shards[d].waiting.len());
         let batch: Vec<usize> =
             (0..n).filter_map(|_| self.shards[d].waiting.pop_front()).collect();
         self.cores[core].credit -= batch.len() as u32;
@@ -1068,7 +1165,7 @@ impl World {
         let desc_len = batch.iter().map(|&t| self.tasks[t].desc_len).max().unwrap_or(12);
         let wire = self.codec_wire_bytes(desc_len.max(12), batch.len());
         let extra = (wire - self.base_wire_bytes * batch.len() as f64).max(0.0);
-        let cost = self.model.dispatch_cost_s(batch.len(), extra);
+        let cost = self.dispatch_cost(batch.len(), extra);
         self.shards[d].busy_until = now + secs(cost);
         self.shards[d].dispatched += batch.len() as u64;
         for &t in &batch {
@@ -1284,12 +1381,76 @@ impl World {
     }
 
     fn finish_task(&mut self, now: Time, core: usize, task: usize, error: Option<TaskError>) {
-        let latency = self.cfg.machine.net_rtt_secs / 2.0;
-        self.sched.at(now + secs(latency), Ev::Result { core, task, error });
-        // The core is free as soon as the result is sent (C executor sends
-        // Result + Ready back-to-back); start the next staged task.
+        let latency = secs(self.cfg.machine.net_rtt_secs / 2.0);
+        // Errors (and the legacy model) ship per-task, immediately.
+        if self.cfg.result_batch == 0 || error.is_some() {
+            self.sched.at(now + latency, Ev::Result { core, task, error });
+            // The core is free as soon as the result is sent (C executor
+            // sends Result + Ready back-to-back); start the next task.
+            self.cores[core].current = None;
+            self.core_next(now, core);
+            return;
+        }
+        // Result batching: buffer the completion, start the next task,
+        // then flush when the batch is full or the core went idle (the
+        // flush-on-idle rule that keeps sleep-0 latency unhurt — a core
+        // with nothing left to run always flushes right away).
+        self.cores[core].result_buf.push(task);
         self.cores[core].current = None;
         self.core_next(now, core);
+        let idle = self.cores[core].current.is_none();
+        if idle || self.cores[core].result_buf.len() >= self.cfg.result_batch {
+            let results = std::mem::take(&mut self.cores[core].result_buf);
+            self.sched.at(now + latency, Ev::ResultMsg { core, results });
+        } else if self.cores[core].result_buf.len() == 1 {
+            // First completion in an empty buffer while the core stays
+            // busy: arm the window so it cannot hide behind a
+            // long-running neighbor (live `batch_window` twin).
+            self.sched
+                .after_secs(self.cfg.result_window_s.max(0.0), Ev::ResultFlush { core });
+        }
+    }
+
+    /// The result-batch window expired: ship whatever is buffered (no-op
+    /// when a full/idle flush, node death, or an earlier window already
+    /// drained the buffer).
+    fn result_window_flush(&mut self, now: Time, core: usize) {
+        if self.cores[core].result_buf.is_empty() {
+            return;
+        }
+        let latency = secs(self.cfg.machine.net_rtt_secs / 2.0);
+        let results = std::mem::take(&mut self.cores[core].result_buf);
+        self.sched.at(now + latency, Ev::ResultMsg { core, results });
+    }
+
+    /// Advance the (shard's) service busy horizon by the ingest cost of
+    /// one result message carrying `k` completions (split model only).
+    fn charge_result_cost(&mut self, now: Time, core: usize, k: usize) {
+        if self.cfg.result_batch == 0 {
+            return; // legacy: folded into the dispatch per-task constant
+        }
+        if self.cfg.forwarders > 0 {
+            // 3-tier keeps its own custom dispatch formula, which never
+            // paid the per_task_s constant the result share is carved
+            // from — charging here would double-bill (A6 identity).
+            return;
+        }
+        let cost = secs(self.model.result_cost_s(k));
+        if self.sharded() {
+            let d = self.shard_of_core(core);
+            self.shards[d].busy_until = self.shards[d].busy_until.max(now) + cost;
+        } else {
+            self.service_busy_until = self.service_busy_until.max(now) + cost;
+        }
+    }
+
+    /// A batched result message reaches the service: pay the message's
+    /// ingest cost once, then run the per-completion bookkeeping.
+    fn handle_result_msg(&mut self, now: Time, core: usize, results: Vec<usize>) {
+        self.charge_result_cost(now, core, results.len());
+        for task in results {
+            self.handle_result(now, core, task, None);
+        }
     }
 
     fn handle_result(&mut self, now: Time, core: usize, task: usize, error: Option<TaskError>) {
@@ -1365,7 +1526,12 @@ impl World {
                 self.shard_live_cores[d] = self.shard_live_cores[d].saturating_sub(1);
             }
             // Everything on this core is lost; the service sees NodeLost.
+            // That includes completed-but-unflushed buffered results:
+            // their completions never reached the service, so the tasks
+            // must be retried elsewhere (exactly-once is preserved — the
+            // service never saw the first completion).
             let mut lost: Vec<usize> = self.cores[core].staged.drain(..).collect();
+            lost.extend(self.cores[core].result_buf.drain(..));
             if let Some(cur) = self.cores[core].current.take() {
                 lost.push(cur);
             }
@@ -1450,6 +1616,8 @@ impl World {
                 Ev::CoordForward => 9,
                 Ev::ShardArrive { .. } => 10,
                 Ev::ShardDispatch { .. } => 11,
+                Ev::ResultMsg { .. } => 12,
+                Ev::ResultFlush { .. } => 13,
             }] += 1;
             match ev {
                 Ev::TryDispatch => self.try_dispatch(now),
@@ -1478,7 +1646,15 @@ impl World {
                         self.begin_stage_out(now, core, task);
                     }
                 }
-                Ev::Result { core, task, error } => self.handle_result(now, core, task, error),
+                Ev::Result { core, task, error } => {
+                    // Per-task result frames pay their message cost too
+                    // when the result direction is modeled (failure
+                    // notifications always ship unbatched).
+                    self.charge_result_cost(now, core, 1);
+                    self.handle_result(now, core, task, error)
+                }
+                Ev::ResultMsg { core, results } => self.handle_result_msg(now, core, results),
+                Ev::ResultFlush { core } => self.result_window_flush(now, core),
                 Ev::FwdDeliver { fwd, assignments } => self.fwd_deliver(now, fwd, assignments),
                 Ev::BcastRecv { node, obj } => self.bcast_received(now, node, obj),
                 Ev::IfsArrive { core, task, bytes } => self.ifs_arrive(now, core, task, bytes),
@@ -1638,6 +1814,31 @@ pub fn run_sleep_workload(
     let tasks = vec![SimTask::sleep(task_len_s); n_tasks];
     let mut world = World::new(cfg, tasks);
     world.run(u64::MAX);
+    world.campaign().clone()
+}
+
+/// Convenience: the wire-path sweep runner (BENCH_wire.json rows) — a
+/// sleep-0 campaign with explicit bundling/result-batching knobs.
+/// `adaptive_cap > 0` overrides `bundle`; `result_batch` as in
+/// [`WorldConfig::result_batch`].
+pub fn run_wire_workload(
+    machine: Machine,
+    cores: usize,
+    n_tasks: usize,
+    proto: WireProto,
+    bundle: usize,
+    adaptive_cap: usize,
+    result_batch: usize,
+) -> Campaign {
+    let mut cfg = WorldConfig::new(machine, cores);
+    cfg.proto = proto;
+    cfg.bundle = bundle;
+    cfg.adaptive_bundle_cap = adaptive_cap;
+    cfg.result_batch = result_batch;
+    let tasks = vec![SimTask::sleep(0.0); n_tasks];
+    let mut world = World::new(cfg, tasks);
+    world.run(u64::MAX);
+    assert_eq!(world.completed(), n_tasks, "wire sweep must conserve tasks");
     world.campaign().clone()
 }
 
@@ -1953,6 +2154,70 @@ mod tests {
         assert_eq!(completed + failed, 2_000);
         assert_eq!(completed, 2_000, "NodeLost work must be re-routed and finish");
         assert_eq!(mk(), mk(), "sharded mode stays deterministic");
+    }
+
+    #[test]
+    fn split_result_model_matches_legacy_calibration_at_batch_1() {
+        // The split identity: carving the result share out of the
+        // dispatch per-task constant and charging it per result message
+        // must leave steady-state throughput at the calibrated anchors
+        // when nothing is batched (result_batch = 1).
+        let legacy =
+            run_wire_workload(Machine::anluc(), 200, 5_000, WireProto::Ws, 1, 0, 0).throughput();
+        let split =
+            run_wire_workload(Machine::anluc(), 200, 5_000, WireProto::Ws, 1, 0, 1).throughput();
+        assert!(
+            (split - legacy).abs() / legacy < 0.05,
+            "split {split:.0} vs legacy {legacy:.0}"
+        );
+    }
+
+    #[test]
+    fn bundling_curve_monotone_with_result_path_modeled() {
+        // §4.2 shape: throughput must rise monotonically from bundle 1
+        // to 10 with the result direction explicitly modeled.
+        let t = |bundle| {
+            run_wire_workload(Machine::anluc(), 200, 8_000, WireProto::Ws, bundle, 0, 1)
+                .throughput()
+        };
+        let (t1, t2, t5, t10) = (t(1), t(2), t(5), t(10));
+        assert!(t1 < t2 && t2 < t5 && t5 < t10, "curve {t1:.0} {t2:.0} {t5:.0} {t10:.0}");
+        // And the bundle-10 gain stays in the §4.2 ballpark (~6x).
+        assert!(t10 / t1 > 4.0, "bundle-10 speedup {:.2}", t10 / t1);
+    }
+
+    #[test]
+    fn result_batching_amortizes_the_result_direction() {
+        // Batching results on top of dispatch bundling must add a
+        // strictly positive gain (the res_per_msg share amortizes).
+        let t = |rb| {
+            run_wire_workload(Machine::anluc(), 200, 10_000, WireProto::Ws, 10, 0, rb)
+                .throughput()
+        };
+        let (t1, t8) = (t(1), t(8));
+        assert!(t8 > t1 * 1.03, "result batch 8 {t8:.0} vs 1 {t1:.0}");
+    }
+
+    #[test]
+    fn adaptive_bundles_match_fixed_at_depth_and_complete_under_failures() {
+        // Deep-queue regime: adaptive sizing should reach cap-sized
+        // bundles and land near the fixed bundle-10 throughput.
+        let fixed =
+            run_wire_workload(Machine::anluc(), 200, 8_000, WireProto::Ws, 10, 0, 1).throughput();
+        let adaptive =
+            run_wire_workload(Machine::anluc(), 200, 8_000, WireProto::Ws, 1, 10, 1).throughput();
+        assert!(adaptive > 0.85 * fixed, "adaptive {adaptive:.0} vs fixed {fixed:.0}");
+        // Batched + adaptive + node failures: exactly-once still holds.
+        let mut cfg = WorldConfig::new(Machine::bgp(), 256);
+        cfg.adaptive_bundle_cap = 16;
+        cfg.result_batch = 16;
+        cfg.dispatchers = 4;
+        cfg.retry = RetryPolicy { max_attempts: 5, ..Default::default() };
+        cfg.fail_nodes_at = (48..64).map(|n| (1.0, n)).collect();
+        let mut w = World::new(cfg, vec![SimTask::sleep(0.5); 2_000]);
+        w.run(u64::MAX);
+        assert_eq!(w.completed(), 2_000, "buffered results on dead nodes must be retried");
+        assert_eq!(w.campaign().len(), 2_000, "exactly one record per task");
     }
 
     #[test]

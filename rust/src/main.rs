@@ -55,7 +55,10 @@ fn cmd_service(args: &Args) -> i32 {
     }
     let config = ServiceConfig {
         bind: args.get_or("bind", "127.0.0.1:50100").to_string(),
-        dispatch: DispatchConfig { bundle: args.parse_or("bundle", 1usize), data_aware: false },
+        dispatch: DispatchConfig {
+            bundle: args.parse_or("bundle", 1usize),
+            ..Default::default()
+        },
         retry: Default::default(),
         hierarchy: falkon::falkon::coordinator::HierarchyConfig {
             partitions: args.parse_or("partitions", 1usize),
@@ -90,12 +93,10 @@ fn cmd_executor(args: &Args) -> i32 {
     }
     let addr = args.get_or("connect", "127.0.0.1:50100").to_string();
     let cfg = ExecutorConfig {
-        service_addr: addr.clone(),
-        executor_id: args.parse_or("id", 0u64),
         cores: args.parse_or("cores", 1u32),
-        proto: falkon::net::tcpcore::Proto::Tcp,
         initial_credit: args.parse_or("cores", 1u32),
         partition: args.parse_or("partition", 0u32),
+        ..ExecutorConfig::c_style(addr.clone(), args.parse_or("id", 0u64))
     };
     let runner: Arc<dyn falkon::falkon::exec::TaskRunner> = if args.flag("compute") {
         match falkon::runtime::Registry::open_default() {

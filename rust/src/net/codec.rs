@@ -12,7 +12,16 @@ use super::proto::{DecodeError, Msg};
 /// A message encoding.
 pub trait Codec: Send + Sync {
     /// Encode a message body (framing added by the transport).
-    fn encode(&self, msg: &Msg) -> Vec<u8>;
+    fn encode(&self, msg: &Msg) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(msg, &mut out);
+        out
+    }
+    /// Encode a message body by *appending* to `out` — the transport's
+    /// per-connection scratch buffer. The hot-path entry point: the TCP
+    /// codec writes straight into `out` with zero intermediate
+    /// allocation; callers clear and reuse the buffer across frames.
+    fn encode_into(&self, msg: &Msg, out: &mut Vec<u8>);
     /// Decode a message body.
     fn decode(&self, buf: &[u8]) -> Result<Msg, DecodeError>;
     /// Short name for reports ("TCP", "WS").
@@ -29,8 +38,8 @@ pub trait Codec: Send + Sync {
 pub struct TcpCodec;
 
 impl Codec for TcpCodec {
-    fn encode(&self, msg: &Msg) -> Vec<u8> {
-        msg.encode()
+    fn encode_into(&self, msg: &Msg, out: &mut Vec<u8>) {
+        msg.encode_into(out);
     }
 
     fn decode(&self, buf: &[u8]) -> Result<Msg, DecodeError> {
@@ -62,13 +71,15 @@ https://service:50001/wsrf/services/NotificationConsumerService\
 const SOAP_POST: &str = "</falkon:content></falkon:message></soapenv:Body></soapenv:Envelope>";
 
 impl Codec for WsCodec {
-    fn encode(&self, msg: &Msg) -> Vec<u8> {
-        let body = base64_encode(&msg.encode());
-        let mut out = String::with_capacity(SOAP_PRE.len() + body.len() + SOAP_POST.len());
-        out.push_str(SOAP_PRE);
-        out.push_str(&body);
-        out.push_str(SOAP_POST);
-        out.into_bytes()
+    fn encode_into(&self, msg: &Msg, out: &mut Vec<u8>) {
+        // The binary body still allocates once (the envelope is the WS
+        // path's dominant cost anyway); the base64 expansion appends
+        // straight into the caller's buffer.
+        let body = msg.encode();
+        out.reserve(SOAP_PRE.len() + body.len().div_ceil(3) * 4 + SOAP_POST.len());
+        out.extend_from_slice(SOAP_PRE.as_bytes());
+        base64_encode_append(&body, out);
+        out.extend_from_slice(SOAP_POST.as_bytes());
     }
 
     fn decode(&self, buf: &[u8]) -> Result<Msg, DecodeError> {
@@ -118,49 +129,101 @@ pub fn bytes_per_task(codec: &dyn Codec, desc_len: usize, bundle: usize) -> f64 
 
 const B64: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
 
+/// Inverse alphabet: symbol byte → 6-bit value, 0xFF for invalid bytes.
+const B64_INV: [u8; 256] = {
+    let mut t = [0xFFu8; 256];
+    let mut i = 0;
+    while i < 64 {
+        t[B64[i] as usize] = i as u8;
+        i += 1;
+    }
+    t
+};
+
 /// Standard base64 (with padding).
 pub fn base64_encode(data: &[u8]) -> String {
-    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
-    for chunk in data.chunks(3) {
-        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
-        let n = u32::from_be_bytes([0, b[0], b[1], b[2]]);
-        out.push(B64[(n >> 18) as usize & 63] as char);
-        out.push(B64[(n >> 12) as usize & 63] as char);
-        out.push(if chunk.len() > 1 { B64[(n >> 6) as usize & 63] as char } else { '=' });
-        out.push(if chunk.len() > 2 { B64[n as usize & 63] as char } else { '=' });
-    }
-    out
+    let mut out = Vec::with_capacity(data.len().div_ceil(3) * 4);
+    base64_encode_append(data, &mut out);
+    String::from_utf8(out).expect("base64 alphabet is ASCII")
 }
 
-/// Standard base64 decode; `None` on malformed input.
-pub fn base64_decode(s: &str) -> Option<Vec<u8>> {
-    fn val(c: u8) -> Option<u32> {
-        match c {
-            b'A'..=b'Z' => Some((c - b'A') as u32),
-            b'a'..=b'z' => Some((c - b'a' + 26) as u32),
-            b'0'..=b'9' => Some((c - b'0' + 52) as u32),
-            b'+' => Some(62),
-            b'/' => Some(63),
-            _ => None,
-        }
+/// Append the base64 of `data` to `out` as raw ASCII bytes, built
+/// chunk-wise (a 4-byte group per 3 input bytes in one `extend`) instead
+/// of `push`ing one char at a time — the WS envelope's encode hot loop.
+pub fn base64_encode_append(data: &[u8], out: &mut Vec<u8>) {
+    out.reserve(data.len().div_ceil(3) * 4);
+    let mut chunks = data.chunks_exact(3);
+    for c in &mut chunks {
+        let n = u32::from_be_bytes([0, c[0], c[1], c[2]]);
+        out.extend_from_slice(&[
+            B64[(n >> 18) as usize & 63],
+            B64[(n >> 12) as usize & 63],
+            B64[(n >> 6) as usize & 63],
+            B64[n as usize & 63],
+        ]);
     }
+    match *chunks.remainder() {
+        [a] => {
+            let n = (a as u32) << 16;
+            out.extend_from_slice(&[
+                B64[(n >> 18) as usize & 63],
+                B64[(n >> 12) as usize & 63],
+                b'=',
+                b'=',
+            ]);
+        }
+        [a, b] => {
+            let n = ((a as u32) << 16) | ((b as u32) << 8);
+            out.extend_from_slice(&[
+                B64[(n >> 18) as usize & 63],
+                B64[(n >> 12) as usize & 63],
+                B64[(n >> 6) as usize & 63],
+                b'=',
+            ]);
+        }
+        _ => {}
+    }
+}
+
+/// Standard base64 decode; `None` on malformed input. Chunk-wise: each
+/// full 4-symbol group is table-looked-up and emitted as one 3-byte
+/// `extend`; the (at most one) partial tail group is handled after.
+pub fn base64_decode(s: &str) -> Option<Vec<u8>> {
     let s = s.trim_end_matches('=').as_bytes();
-    let mut out = Vec::with_capacity(s.len() * 3 / 4);
-    for chunk in s.chunks(4) {
-        if chunk.len() == 1 {
+    let mut out = Vec::with_capacity(s.len() * 3 / 4 + 2);
+    let mut chunks = s.chunks_exact(4);
+    for c in &mut chunks {
+        let (a, b, cc, d) = (
+            B64_INV[c[0] as usize],
+            B64_INV[c[1] as usize],
+            B64_INV[c[2] as usize],
+            B64_INV[c[3] as usize],
+        );
+        if (a | b | cc | d) == 0xFF {
             return None;
         }
-        let mut n: u32 = 0;
-        for (i, &c) in chunk.iter().enumerate() {
-            n |= val(c)? << (18 - 6 * i);
+        let n = ((a as u32) << 18) | ((b as u32) << 12) | ((cc as u32) << 6) | d as u32;
+        out.extend_from_slice(&[(n >> 16) as u8, (n >> 8) as u8, n as u8]);
+    }
+    match *chunks.remainder() {
+        [] => {}
+        [_] => return None, // 1 leftover symbol can never encode a byte
+        [a, b] => {
+            let (a, b) = (B64_INV[a as usize], B64_INV[b as usize]);
+            if (a | b) == 0xFF {
+                return None;
+            }
+            out.push((((a as u32) << 18 | (b as u32) << 12) >> 16) as u8);
         }
-        out.push((n >> 16) as u8);
-        if chunk.len() > 2 {
-            out.push((n >> 8) as u8);
+        [a, b, c] => {
+            let (a, b, c) = (B64_INV[a as usize], B64_INV[b as usize], B64_INV[c as usize]);
+            if (a | b | c) == 0xFF {
+                return None;
+            }
+            let n = (a as u32) << 18 | (b as u32) << 12 | (c as u32) << 6;
+            out.extend_from_slice(&[(n >> 16) as u8, (n >> 8) as u8]);
         }
-        if chunk.len() > 3 {
-            out.push(n as u8);
-        }
+        _ => unreachable!("chunks_exact(4) remainder is < 4"),
     }
     Some(out)
 }

@@ -18,6 +18,16 @@ pub struct WireTask {
     pub payload: TaskPayload,
 }
 
+/// One task completion as it travels on the wire — the unit of
+/// [`Msg::ResultBatch`]. Field-for-field the payload of [`Msg::Result`];
+/// batching changes the framing, not the information.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResult {
+    pub task_id: TaskId,
+    pub exit_code: i32,
+    pub error: Option<TaskError>,
+}
+
 /// Protocol messages.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
@@ -53,6 +63,13 @@ pub enum Msg {
     /// counts `ok` objects as resident for data-aware placement. `gen`
     /// echoes the triggering `StagePut`'s generation.
     StageAck { executor_id: u64, key: String, bytes: u64, ok: bool, gen: u64 },
+    /// Several task completions in one frame: the result-direction dual
+    /// of `Dispatch` bundling. Executors coalesce completions under a
+    /// small time/count window (flushing immediately when idle, so a
+    /// lone sleep-0 result is not delayed) and the service ingests the
+    /// whole batch under one shard lock. Keeping per-task wire cost flat
+    /// requires batching in *both* directions (arXiv:0808.3540).
+    ResultBatch { results: Vec<WireResult> },
 }
 
 // ---------------------------------------------------------------- wire io
@@ -255,7 +272,21 @@ fn decode_error(r: &mut Reader) -> Result<Option<TaskError>, DecodeError> {
 impl Msg {
     /// Encode to the compact binary form (no framing header).
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::default();
+        let mut buf = Vec::new();
+        self.encode_into(&mut buf);
+        buf
+    }
+
+    /// Encode by *appending* to `out` (the caller's reusable scratch
+    /// buffer — the steady-state allocation-free path; transports clear
+    /// and reuse one buffer per connection). Does not clear `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut w = Writer { buf: std::mem::take(out) };
+        self.write_body(&mut w);
+        *out = w.buf;
+    }
+
+    fn write_body(&self, w: &mut Writer) {
         match self {
             Msg::Register { executor_id, cores, partition } => {
                 w.u8(0);
@@ -274,14 +305,14 @@ impl Msg {
                 w.u32(tasks.len() as u32);
                 for t in tasks {
                     w.u64(t.id);
-                    encode_payload(&mut w, &t.payload);
+                    encode_payload(w, &t.payload);
                 }
             }
             Msg::Result { task_id, exit_code, error } => {
                 w.u8(3);
                 w.u64(*task_id);
                 w.i32(*exit_code);
-                encode_error(&mut w, error);
+                encode_error(w, error);
             }
             Msg::Heartbeat { executor_id } => {
                 w.u8(4);
@@ -306,8 +337,16 @@ impl Msg {
                 w.u8(u8::from(*ok));
                 w.u64(*gen);
             }
+            Msg::ResultBatch { results } => {
+                w.u8(9);
+                w.u32(results.len() as u32);
+                for r in results {
+                    w.u64(r.task_id);
+                    w.i32(r.exit_code);
+                    encode_error(w, &r.error);
+                }
+            }
         }
-        w.buf
     }
 
     /// Decode from the compact binary form.
@@ -338,6 +377,19 @@ impl Msg {
                 ok: r.u8()? != 0,
                 gen: r.u64()?,
             },
+            9 => {
+                let n = r.u32()?;
+                let results = (0..n)
+                    .map(|_| {
+                        Ok::<_, DecodeError>(WireResult {
+                            task_id: r.u64()?,
+                            exit_code: r.i32()?,
+                            error: decode_error(&mut r)?,
+                        })
+                    })
+                    .collect::<Result<_, _>>()?;
+                Msg::ResultBatch { results }
+            }
             t => return Err(DecodeError::BadTag(t)),
         };
         if !r.done() {
@@ -405,6 +457,45 @@ mod tests {
             ok: true,
             gen: 9,
         });
+        roundtrip(Msg::ResultBatch { results: vec![] });
+        roundtrip(Msg::ResultBatch {
+            results: vec![
+                WireResult { task_id: 1, exit_code: 0, error: None },
+                WireResult { task_id: 2, exit_code: -1, error: Some(TaskError::NodeLost) },
+                WireResult { task_id: 3, exit_code: 9, error: Some(TaskError::AppError(9)) },
+            ],
+        });
+    }
+
+    #[test]
+    fn encode_into_appends_and_reuses_capacity() {
+        let m = Msg::Heartbeat { executor_id: 5 };
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(b"PREFIX");
+        m.encode_into(&mut buf);
+        assert_eq!(&buf[..6], b"PREFIX");
+        assert_eq!(Msg::decode(&buf[6..]).unwrap(), m);
+        // Clearing and re-encoding keeps the allocation (the hot-path
+        // contract: one scratch buffer per connection, zero realloc in
+        // steady state).
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        buf.clear();
+        m.encode_into(&mut buf);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf.as_ptr(), ptr);
+        assert_eq!(Msg::decode(&buf).unwrap(), m);
+    }
+
+    #[test]
+    fn result_batch_amortizes_per_message_bytes() {
+        // The batched frame must cost strictly less per task than n
+        // individual Result frames would with their per-frame headers.
+        let single = Msg::Result { task_id: 0, exit_code: 0, error: None }.encode().len() + 4;
+        let results: Vec<WireResult> =
+            (0..10).map(|i| WireResult { task_id: i, exit_code: 0, error: None }).collect();
+        let batch = Msg::ResultBatch { results }.encode().len() + 4;
+        assert!(batch < 10 * single, "batch {batch} vs 10x single {}", 10 * single);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use super::codec::{Codec, TcpCodec, WsCodec};
 use super::proto::Msg;
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -16,6 +17,12 @@ use std::sync::{Arc, Mutex};
 /// Magic bytes negotiating the per-connection codec.
 const MAGIC_TCP: &[u8; 4] = b"FKT1";
 const MAGIC_WS: &[u8; 4] = b"FKW1";
+
+/// Reusable buffers shrink back to this capacity after an oversized
+/// frame (staged objects may be up to 64 MB; dispatch/result traffic is
+/// tens of bytes — without the cap, one staging push would pin the
+/// high-water allocation for the life of the connection or thread).
+const BUF_RETAIN: usize = 1 << 20;
 
 /// Which codec a connection speaks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,16 +40,63 @@ impl Proto {
     }
 }
 
+/// Decode one frame body — statically dispatched on `proto` (both
+/// codecs are zero-sized), so neither direction of the hot path touches
+/// a `Box<dyn Codec>`.
+fn decode_body(proto: Proto, buf: &[u8]) -> Result<Msg, super::proto::DecodeError> {
+    match proto {
+        Proto::Tcp => TcpCodec.decode(buf),
+        Proto::Ws => WsCodec.decode(buf),
+    }
+}
+
+/// Append one length-prefixed frame for `msg` to `buf` — statically
+/// dispatched on `proto` (both codecs are zero-sized), so the encode hot
+/// path costs no `Box<dyn Codec>` and no lookup. The 4-byte little-endian
+/// length prefix is written in place after the body lands.
+fn encode_frame_into(proto: Proto, msg: &Msg, buf: &mut Vec<u8>) {
+    let at = buf.len();
+    buf.extend_from_slice(&[0u8; 4]);
+    match proto {
+        Proto::Tcp => TcpCodec.encode_into(msg, buf),
+        Proto::Ws => WsCodec.encode_into(msg, buf),
+    }
+    let body_len = (buf.len() - at - 4) as u32;
+    buf[at..at + 4].copy_from_slice(&body_len.to_le_bytes());
+}
+
 /// A framed, codec-aware message stream over TCP.
+///
+/// The connection's codec is fixed at negotiation (statically dispatched
+/// on `proto` in both directions — no `Box<dyn Codec>` anywhere on the
+/// hot path) and it owns two reusable buffers: `scratch` for outbound
+/// frames and `rbuf` for inbound bodies. In steady state a `send`/`recv`
+/// cycle does no heap allocation and each outbound frame (prefix + body)
+/// leaves in ONE `write_all` syscall.
 pub struct Framed {
     stream: TcpStream,
     proto: Proto,
+    /// Outbound frame scratch (length prefix written in-place).
+    scratch: Vec<u8>,
+    /// Inbound body scratch.
+    rbuf: Vec<u8>,
     /// Bytes sent/received (for the Fig 10 accounting).
     pub sent_bytes: u64,
     pub recv_bytes: u64,
 }
 
 impl Framed {
+    fn new(stream: TcpStream, proto: Proto, sent_bytes: u64, recv_bytes: u64) -> Framed {
+        Framed {
+            stream,
+            proto,
+            scratch: Vec::new(),
+            rbuf: Vec::new(),
+            sent_bytes,
+            recv_bytes,
+        }
+    }
+
     /// Client side: connect and negotiate `proto`.
     pub fn connect(addr: &str, proto: Proto) -> std::io::Result<Framed> {
         let mut stream = TcpStream::connect(addr)?;
@@ -51,7 +105,7 @@ impl Framed {
             Proto::Tcp => MAGIC_TCP,
             Proto::Ws => MAGIC_WS,
         })?;
-        Ok(Framed { stream, proto, sent_bytes: 4, recv_bytes: 0 })
+        Ok(Framed::new(stream, proto, 4, 0))
     }
 
     /// Server side: accept an incoming stream and read its magic.
@@ -69,24 +123,57 @@ impl Framed {
                 ))
             }
         };
-        Ok(Framed { stream, proto, sent_bytes: 0, recv_bytes: 4 })
+        Ok(Framed::new(stream, proto, 0, 4))
     }
 
     pub fn proto(&self) -> Proto {
         self.proto
     }
 
-    /// Send one message (length-framed).
+    /// Send one message: encode into the connection's scratch buffer
+    /// (length prefix in place) and write the frame with one syscall.
     pub fn send(&mut self, msg: &Msg) -> std::io::Result<()> {
-        let body = self.proto.codec().encode(msg);
-        let len = (body.len() as u32).to_le_bytes();
-        self.stream.write_all(&len)?;
-        self.stream.write_all(&body)?;
-        self.sent_bytes += 4 + body.len() as u64;
+        self.scratch.clear();
+        encode_frame_into(self.proto, msg, &mut self.scratch);
+        self.send_raw()
+    }
+
+    /// Coalesce several messages into contiguous frames in the scratch
+    /// buffer and write them all with ONE syscall (the gathered-write
+    /// fast path `ResultBatch` flushes and `Register`+`Ready` pairs use).
+    pub fn send_many(&mut self, msgs: &[Msg]) -> std::io::Result<()> {
+        if msgs.is_empty() {
+            return Ok(());
+        }
+        self.scratch.clear();
+        for msg in msgs {
+            encode_frame_into(self.proto, msg, &mut self.scratch);
+        }
+        self.send_raw()
+    }
+
+    /// Write pre-framed bytes (already in `scratch`). Kept separate so
+    /// [`WriteHandle`] can encode OUTSIDE the connection lock and only
+    /// serialize the actual socket write.
+    fn send_raw(&mut self) -> std::io::Result<()> {
+        self.stream.write_all(&self.scratch)?;
+        self.sent_bytes += self.scratch.len() as u64;
+        if self.scratch.capacity() > BUF_RETAIN {
+            self.scratch = Vec::new(); // drop an oversized one-off frame's allocation
+        }
         Ok(())
     }
 
-    /// Receive one message (blocking).
+    /// Write caller-encoded frame bytes (the lock-scoped half of
+    /// [`WriteHandle::send`]).
+    fn write_frames(&mut self, frames: &[u8]) -> std::io::Result<()> {
+        self.stream.write_all(frames)?;
+        self.sent_bytes += frames.len() as u64;
+        Ok(())
+    }
+
+    /// Receive one message (blocking). The body buffer is reused across
+    /// calls — no per-frame allocation once warm.
     pub fn recv(&mut self) -> std::io::Result<Msg> {
         let mut len = [0u8; 4];
         self.stream.read_exact(&mut len)?;
@@ -94,13 +181,15 @@ impl Framed {
         if n > 64 << 20 {
             return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "frame too large"));
         }
-        let mut body = vec![0u8; n];
-        self.stream.read_exact(&mut body)?;
+        self.rbuf.resize(n, 0);
+        self.stream.read_exact(&mut self.rbuf)?;
         self.recv_bytes += 4 + n as u64;
-        self.proto
-            .codec()
-            .decode(&body)
-            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+        let msg = decode_body(self.proto, &self.rbuf)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()));
+        if self.rbuf.capacity() > BUF_RETAIN {
+            self.rbuf = Vec::new(); // don't pin a one-off large frame's capacity
+        }
+        msg
     }
 
     /// Split into a read half (this) and a locked write handle sharing the
@@ -109,12 +198,8 @@ impl Framed {
     pub fn split(self) -> std::io::Result<(Framed, WriteHandle)> {
         let write_stream = self.stream.try_clone()?;
         let handle = WriteHandle {
-            inner: Arc::new(Mutex::new(Framed {
-                stream: write_stream,
-                proto: self.proto,
-                sent_bytes: 0,
-                recv_bytes: 0,
-            })),
+            inner: Arc::new(Mutex::new(Framed::new(write_stream, self.proto, 0, 0))),
+            proto: self.proto,
         };
         Ok((self, handle))
     }
@@ -126,14 +211,45 @@ impl Framed {
 }
 
 /// Cloneable, locked write half of a connection.
+///
+/// Encoding happens on the *caller's* side (a thread-local scratch
+/// buffer) before the connection mutex is taken, so one slow socket can
+/// never serialize the encoding work of other senders sharing the handle
+/// — the lock covers only the socket write itself.
 #[derive(Clone)]
 pub struct WriteHandle {
     inner: Arc<Mutex<Framed>>,
+    proto: Proto,
+}
+
+thread_local! {
+    /// Per-thread frame-encode scratch for [`WriteHandle`] sends.
+    static WRITE_SCRATCH: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
 }
 
 impl WriteHandle {
     pub fn send(&self, msg: &Msg) -> std::io::Result<()> {
-        self.inner.lock().expect("write handle poisoned").send(msg)
+        self.send_many(std::slice::from_ref(msg))
+    }
+
+    /// Encode all `msgs` as contiguous frames outside the lock, then
+    /// write them with one locked syscall.
+    pub fn send_many(&self, msgs: &[Msg]) -> std::io::Result<()> {
+        if msgs.is_empty() {
+            return Ok(());
+        }
+        WRITE_SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            buf.clear();
+            for msg in msgs {
+                encode_frame_into(self.proto, msg, &mut buf);
+            }
+            let res = self.inner.lock().expect("write handle poisoned").write_frames(&buf);
+            if buf.capacity() > BUF_RETAIN {
+                *buf = Vec::new(); // a one-off StagePut must not pin thread memory
+            }
+            res
+        })
     }
 
     pub fn shutdown(&self) {
@@ -279,6 +395,43 @@ mod tests {
         assert!(reg.get(6).is_none());
         reg.remove(5).unwrap();
         assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn send_many_coalesces_frames_in_order() {
+        let (mut c, mut s) = pair(Proto::Tcp);
+        let msgs: Vec<Msg> =
+            (0..50).map(|i| Msg::Result { task_id: i, exit_code: 0, error: None }).collect();
+        c.send_many(&msgs).unwrap();
+        c.send_many(&[]).unwrap(); // no-op, must not write a frame
+        for i in 0..50u64 {
+            match s.recv().unwrap() {
+                Msg::Result { task_id, .. } => assert_eq!(task_id, i),
+                m => panic!("unexpected {m:?}"),
+            }
+        }
+        // Byte accounting covers every coalesced frame.
+        assert_eq!(c.sent_bytes, 4 + 50 * (4 + 14));
+    }
+
+    #[test]
+    fn write_handle_send_many_roundtrips_both_protos() {
+        for proto in [Proto::Tcp, Proto::Ws] {
+            let (c, mut s) = pair(proto);
+            let (_read, write) = c.split().unwrap();
+            write
+                .send_many(&[
+                    Msg::ResultBatch {
+                        results: vec![
+                            crate::net::proto::WireResult { task_id: 7, exit_code: 0, error: None },
+                        ],
+                    },
+                    Msg::Ready { executor_id: 1, slots: 1 },
+                ])
+                .unwrap();
+            assert!(matches!(s.recv().unwrap(), Msg::ResultBatch { .. }));
+            assert_eq!(s.recv().unwrap(), Msg::Ready { executor_id: 1, slots: 1 });
+        }
     }
 
     #[test]

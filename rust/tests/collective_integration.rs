@@ -22,7 +22,7 @@ const RECEPTOR: &[u8] = b"HEADER receptor 1abc\nATOM 1 N MET A 1\nEND\n";
 fn live_fabric_roundtrips_staged_object_to_task() {
     let svc = Service::start(ServiceConfig {
         bind: "127.0.0.1:0".into(),
-        dispatch: DispatchConfig { bundle: 1, data_aware: true },
+        dispatch: DispatchConfig { bundle: 1, data_aware: true, ..Default::default() },
         retry: RetryPolicy::default(),
         ..Default::default()
     })

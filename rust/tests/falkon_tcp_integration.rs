@@ -17,7 +17,7 @@ use std::time::Duration;
 fn service(bundle: usize) -> Service {
     Service::start(ServiceConfig {
         bind: "127.0.0.1:0".into(),
-        dispatch: DispatchConfig { bundle, data_aware: false },
+        dispatch: DispatchConfig { bundle, data_aware: false, ..Default::default() },
         retry: RetryPolicy::default(),
         ..Default::default()
     })
@@ -95,12 +95,10 @@ fn ws_protocol_executor_works() {
     let addr = svc.addr().to_string();
     let exec = Executor::start(
         ExecutorConfig {
-            service_addr: addr,
-            executor_id: 0,
             cores: 2,
             proto: Proto::Ws,
             initial_credit: 2,
-            partition: 0,
+            ..ExecutorConfig::c_style(addr, 0)
         },
         Arc::new(DefaultRunner),
     )

@@ -1,0 +1,142 @@
+//! Decoder robustness properties for the wire protocol.
+//!
+//! The transport hands `Msg::decode` exactly the bytes a length prefix
+//! promised, but the prefix itself comes off the network — so the decoder
+//! must treat ANY byte string as potentially hostile: every strict prefix
+//! of a valid encoding must return `DecodeError` (never panic, never
+//! over-read into a bogus success), and arbitrary mutations of tags and
+//! length fields must never panic or hang.
+
+use falkon::falkon::errors::TaskError;
+use falkon::falkon::task::TaskPayload;
+use falkon::net::proto::{DecodeError, Msg, WireResult, WireTask};
+use falkon::util::rng::Rng;
+
+/// One of every message variant, with every payload/error arm exercised.
+fn sample_msgs() -> Vec<Msg> {
+    vec![
+        Msg::Register { executor_id: 7, cores: 4, partition: 3 },
+        Msg::Ready { executor_id: 7, slots: 2 },
+        Msg::Dispatch {
+            shard: 5,
+            tasks: vec![
+                WireTask { id: 1, payload: TaskPayload::Sleep { secs: 4.0 } },
+                WireTask { id: 2, payload: TaskPayload::Echo { payload: b"hello".to_vec() } },
+                WireTask {
+                    id: 3,
+                    payload: TaskPayload::Command {
+                        program: "/bin/dock5".into(),
+                        args: vec!["-i".into(), "lig.mol2".into()],
+                    },
+                },
+                WireTask {
+                    id: 4,
+                    payload: TaskPayload::Compute {
+                        artifact: "mars_batch".into(),
+                        reps: 144,
+                        arg: [0.3, 0.7],
+                    },
+                },
+                WireTask {
+                    id: 5,
+                    payload: TaskPayload::SimApp {
+                        exec_secs: 17.3,
+                        read_bytes: 10_000,
+                        write_bytes: 20_000,
+                        objects: vec![("dock5.bin".into(), 5_000_000)],
+                    },
+                },
+            ],
+        },
+        Msg::Result { task_id: 9, exit_code: 0, error: None },
+        Msg::Result { task_id: 10, exit_code: -1, error: Some(TaskError::StaleNfsHandle) },
+        Msg::Result { task_id: 11, exit_code: 3, error: Some(TaskError::AppError(3)) },
+        Msg::Heartbeat { executor_id: 1 },
+        Msg::Suspend { reason: "too many stale NFS failures".into() },
+        Msg::Shutdown,
+        Msg::StagePut { key: "cache/dock5.bin".into(), data: vec![7u8; 100], gen: 9 },
+        Msg::StageAck {
+            executor_id: 3,
+            key: "cache/dock5.bin".into(),
+            bytes: 1000,
+            ok: true,
+            gen: 9,
+        },
+        Msg::ResultBatch { results: vec![] },
+        Msg::ResultBatch {
+            results: vec![
+                WireResult { task_id: 1, exit_code: 0, error: None },
+                WireResult { task_id: 2, exit_code: -1, error: Some(TaskError::CommError) },
+                WireResult { task_id: 3, exit_code: -1, error: Some(TaskError::NodeLost) },
+                WireResult { task_id: 4, exit_code: -1, error: Some(TaskError::WalltimeExceeded) },
+                WireResult { task_id: 5, exit_code: 7, error: Some(TaskError::AppError(7)) },
+            ],
+        },
+    ]
+}
+
+#[test]
+fn every_strict_prefix_errors_never_panics() {
+    for msg in sample_msgs() {
+        let enc = msg.encode();
+        assert_eq!(Msg::decode(&enc).unwrap(), msg, "full encoding must round-trip");
+        for cut in 0..enc.len() {
+            match Msg::decode(&enc[..cut]) {
+                Err(DecodeError::Truncated(at)) => {
+                    assert!(at <= cut, "truncation offset {at} past prefix length {cut}");
+                }
+                Err(_) => {} // a prefix may also surface as a bad tag
+                Ok(m) => panic!(
+                    "strict prefix ({cut}/{} bytes) of {msg:?} decoded as {m:?}",
+                    enc.len()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn tag_mutations_never_panic() {
+    for msg in sample_msgs() {
+        let enc = msg.encode();
+        if enc.is_empty() {
+            continue;
+        }
+        // Every possible top-level tag byte, including all invalid ones.
+        for tag in 0u8..=255 {
+            let mut buf = enc.clone();
+            buf[0] = tag;
+            let _ = Msg::decode(&buf); // must not panic, hang, or over-read
+        }
+    }
+}
+
+#[test]
+fn mutation_fuzz_over_lengths_and_fields_never_panics() {
+    let mut rng = Rng::new(0x5eed);
+    for msg in sample_msgs() {
+        let enc = msg.encode();
+        if enc.is_empty() {
+            continue;
+        }
+        for _ in 0..500 {
+            let mut buf = enc.clone();
+            // Flip 1–3 bytes anywhere (tags, counts, length prefixes,
+            // payload bytes alike). A corrupted u32 length/count field is
+            // the interesting case: the decoder must fail fast on the
+            // first missing byte instead of allocating or spinning.
+            for _ in 0..1 + rng.below(3) {
+                let at = rng.below(buf.len() as u64) as usize;
+                buf[at] = rng.next_u64() as u8;
+            }
+            let _ = Msg::decode(&buf);
+        }
+        // Saturate every 4-byte window with 0xFFFFFFFF — the worst-case
+        // "4 GiB length" mutation at each possible field offset.
+        for at in 0..enc.len().saturating_sub(3) {
+            let mut buf = enc.clone();
+            buf[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+            let _ = Msg::decode(&buf);
+        }
+    }
+}

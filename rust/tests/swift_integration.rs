@@ -22,7 +22,7 @@ chain app=work in=out/a,out/b out=out/final
 fn live_service() -> Service {
     Service::start(ServiceConfig {
         bind: "127.0.0.1:0".into(),
-        dispatch: DispatchConfig { bundle: 2, data_aware: false },
+        dispatch: DispatchConfig { bundle: 2, data_aware: false, ..Default::default() },
         retry: Default::default(),
         ..Default::default()
     })

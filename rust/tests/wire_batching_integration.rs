@@ -1,0 +1,222 @@
+//! Acceptance tests for the batched, allocation-free wire hot path:
+//!
+//! * the live loopback harness must sustain ≥ 2× the unbatched sleep-0
+//!   dispatch rate with adaptive bundling + result batching enabled;
+//! * zero lost or duplicated task results under a mid-campaign executor
+//!   failure wave (the PR 2 node-kill scenario, live fabric);
+//! * heartbeats are suppressed while result traffic proves liveness,
+//!   and suspension/failure detection timing is unchanged by batching.
+
+use falkon::falkon::coordinator::HierarchyConfig;
+use falkon::falkon::dispatch::DispatchConfig;
+use falkon::falkon::errors::{RetryPolicy, TaskError};
+use falkon::falkon::exec::{
+    spawn_fleet_with, DefaultRunner, Executor, ExecutorConfig, FaultyRunner,
+};
+use falkon::falkon::service::{Service, ServiceConfig};
+use falkon::falkon::task::TaskPayload;
+use std::sync::atomic::AtomicU32;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn wire_service(bundle: usize, adaptive_cap: usize, partitions: usize) -> Service {
+    Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        dispatch: DispatchConfig { bundle, data_aware: false, adaptive_cap },
+        retry: RetryPolicy::default(),
+        hierarchy: HierarchyConfig { partitions, ..Default::default() },
+    })
+    .expect("service start")
+}
+
+fn sleep0_throughput(
+    n_exec: usize,
+    n_tasks: usize,
+    adaptive_cap: usize,
+    credit: u32,
+    result_batch: usize,
+) -> f64 {
+    let svc = wire_service(1, adaptive_cap, 1);
+    let fleet = spawn_fleet_with(
+        &svc.addr().to_string(),
+        n_exec,
+        Arc::new(DefaultRunner),
+        credit,
+        1,
+        |mut cfg| {
+            cfg.result_batch = result_batch;
+            cfg
+        },
+    )
+    .unwrap();
+    assert!(svc.wait_executors(n_exec, Duration::from_secs(10)));
+    let t0 = Instant::now();
+    svc.submit_many((0..n_tasks).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(300)).expect("all done");
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(outcomes.len(), n_tasks);
+    assert!(outcomes.iter().all(|o| o.ok()));
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+    n_tasks as f64 / dt
+}
+
+#[test]
+fn batched_wire_path_sustains_2x_unbatched_sleep0_rate() {
+    // Unbatched baseline: fixed bundle 1, strict pull (credit 1), one
+    // classic Result frame per task — the exact pre-refactor wire path.
+    let base = sleep0_throughput(4, 4_000, 0, 1, 1);
+    // Batched: adaptive bundles (cap 32) + result batching (cap 32),
+    // credit deep enough for bundles to form. More tasks so the timed
+    // window is comparable.
+    let batched = sleep0_throughput(4, 12_000, 32, 32, 32);
+    assert!(
+        batched >= 2.0 * base,
+        "batched wire path {batched:.0} t/s vs unbatched {base:.0} t/s — need >= 2x"
+    );
+}
+
+#[test]
+fn no_lost_or_duplicated_results_under_executor_failure_wave() {
+    // Adaptive bundling + result batching on, 4 partition shards; half
+    // the fleet dies mid-campaign with results potentially buffered in
+    // their batchers. Every submitted task must produce exactly one
+    // outcome (retries absorb the losses; nothing double-completes).
+    let svc = Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        dispatch: DispatchConfig { bundle: 1, data_aware: false, adaptive_cap: 16 },
+        retry: RetryPolicy { max_attempts: 10, suspend_after_failures: 1000, ..Default::default() },
+        hierarchy: HierarchyConfig { partitions: 4, steal_batch: 8 },
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+    let tune = |mut cfg: ExecutorConfig| {
+        cfg.result_batch = 16;
+        cfg.batch_window = Duration::from_millis(5);
+        cfg
+    };
+    let doomed =
+        spawn_fleet_with(&addr, 4, Arc::new(DefaultRunner), 8, 4, tune).unwrap();
+    let survivors: Vec<Executor> = (4..8)
+        .map(|i| {
+            let cfg = ExecutorConfig {
+                initial_credit: 8,
+                partition: (i % 4) as u32,
+                ..tune(ExecutorConfig::c_style(addr.clone(), i as u64))
+            };
+            Executor::start(cfg, Arc::new(DefaultRunner)).unwrap()
+        })
+        .collect();
+    assert!(svc.wait_executors(8, Duration::from_secs(10)));
+
+    let n = 2_000;
+    let ids = svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.002 }));
+    // Let the campaign get going, then kill the wave (their batchers may
+    // hold unflushed results — those tasks must be retried, not lost).
+    std::thread::sleep(Duration::from_millis(150));
+    for e in doomed {
+        e.stop();
+    }
+    let outcomes = svc.wait_all(Duration::from_secs(120)).expect("campaign survives the wave");
+    let mut seen: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
+    seen.sort_unstable();
+    let mut want = ids.clone();
+    want.sort_unstable();
+    assert_eq!(seen, want, "exactly one outcome per task, no losses, no duplicates");
+    assert!(outcomes.iter().all(|o| o.ok()), "retries must absorb the kill wave");
+    for e in survivors {
+        e.stop();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn heartbeats_suppressed_by_results_and_resume_when_idle() {
+    let svc = wire_service(1, 8, 1);
+    let addr = svc.addr().to_string();
+    // A generous period (results flow every few ms, so suppression only
+    // fails if the whole pipeline stalls >200 ms — CI-robust margins).
+    let exec = Executor::start(
+        ExecutorConfig {
+            initial_credit: 4,
+            heartbeat: Some(Duration::from_millis(200)),
+            ..ExecutorConfig::c_style(addr, 0)
+        },
+        Arc::new(DefaultRunner),
+    )
+    .unwrap();
+    assert!(svc.wait_executors(1, Duration::from_secs(5)));
+
+    // Busy phase: a steady stream of results for ~3 heartbeat periods.
+    // Results are proof of liveness — no heartbeat should be sent.
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_millis(600) {
+        svc.submit_many((0..20).map(|_| TaskPayload::Sleep { secs: 0.002 }));
+        svc.wait_all(Duration::from_secs(30)).unwrap();
+    }
+    let busy_beats = exec.heartbeats_sent();
+    assert!(
+        busy_beats <= 1,
+        "heartbeats must be suppressed while the connection carries results (sent {busy_beats})"
+    );
+
+    // Idle phase: no traffic — heartbeats must resume.
+    std::thread::sleep(Duration::from_millis(700));
+    assert!(
+        exec.heartbeats_sent() >= busy_beats + 2,
+        "idle executor must beat (sent {})",
+        exec.heartbeats_sent()
+    );
+    exec.stop();
+    svc.shutdown();
+}
+
+#[test]
+fn suspension_timing_unchanged_with_batched_results() {
+    // Failure detection is driven by task errors, which now arrive in
+    // ResultBatch frames: a fail-fast storm must still trip suspension
+    // after `suspend_after_failures` errors, and the campaign must still
+    // finish on the healthy executor.
+    let svc = Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        dispatch: DispatchConfig { bundle: 1, data_aware: false, adaptive_cap: 4 },
+        retry: RetryPolicy { max_attempts: 10, suspend_after_failures: 3, failure_window_s: 60.0 },
+        hierarchy: HierarchyConfig::default(),
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+    let faulty = Executor::start(
+        ExecutorConfig {
+            initial_credit: 4,
+            result_batch: 8,
+            heartbeat: Some(Duration::from_millis(50)),
+            ..ExecutorConfig::c_style(addr.clone(), 0)
+        },
+        Arc::new(FaultyRunner {
+            inner: DefaultRunner,
+            fail_first: AtomicU32::new(100),
+            error: TaskError::StaleNfsHandle,
+        }),
+    )
+    .unwrap();
+    let healthy = Executor::start(
+        ExecutorConfig { initial_credit: 4, ..ExecutorConfig::c_style(addr, 1) },
+        Arc::new(DefaultRunner),
+    )
+    .unwrap();
+    assert!(svc.wait_executors(2, Duration::from_secs(5)));
+    let n = 100;
+    svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(60)).unwrap();
+    assert_eq!(outcomes.len(), n);
+    assert!(
+        outcomes.iter().all(|o| o.ok()),
+        "suspension must stop the storm and retries must complete everything"
+    );
+    assert!(outcomes.iter().any(|o| o.attempts > 1), "some tasks must have retried");
+    faulty.stop();
+    healthy.stop();
+    svc.shutdown();
+}
