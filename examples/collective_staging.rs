@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         let path = disks[id as usize].root().join("cache/receptor.pdb");
         svc.submit(TaskPayload::Command {
             program: "/bin/sh".into(),
-            args: vec!["-c".into(), format!("test -s {}", path.display())],
+            args: vec!["-c".to_string(), format!("test -s {}", path.display())].into(),
         });
     }
     let outcomes = svc.wait_all(Duration::from_secs(30))?;

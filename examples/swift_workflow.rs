@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
                 // exit 9: simulated DOCK failure on this ligand
                 TaskPayload::Command {
                     program: "/bin/sh".into(),
-                    args: vec!["-c".into(), "exit 9".into()],
+                    args: vec!["-c".to_string(), "exit 9".to_string()].into(),
                 }
             } else {
                 TaskPayload::Sleep { secs: 0.0 }

@@ -1,0 +1,176 @@
+//! Hot-path sustained-rate bench: how fast the *instrument itself* runs.
+//!
+//! The paper's headline is thousands of tasks/sec *sustained*; after the
+//! sharded-dispatch and wire-batching PRs, the remaining per-task cost in
+//! this repo was memory churn (task clones, payload copies, per-event
+//! simulator clones, heap sifts). This bench measures the wall-clock
+//! execution rate of both fabrics plus their allocation rate per task,
+//! and emits `BENCH_hotpath.json`:
+//!
+//! * **sim rows** — the 4096-node BG/P sleep-0 campaign (the
+//!   `bench_dispatch` workload) at 1 and 16 dispatchers: wall tasks/s
+//!   (tasks ÷ wall seconds to replay the campaign), virtual tasks/s (the
+//!   calibrated model output — must NOT move when the engine gets
+//!   faster), events/s, and allocations/task;
+//! * **live row** — loopback TCP sleep-0 through the sharded service:
+//!   tasks/s and allocations/task (whole-process count: all service,
+//!   executor and reader threads included, so it is an upper bound on
+//!   the dispatch path itself — the strict per-path zero-allocation
+//!   assert lives in `tests/alloc_gate.rs`).
+//!
+//! Comparing `tasks_per_s` of the sim rows (and the live row) against the
+//! same rows produced by the previous PR's checkout is the ≥1.5×
+//! acceptance measurement — see EXPERIMENTS.md §"Sustained-rate protocol".
+
+use falkon::falkon::coordinator::HierarchyConfig;
+use falkon::falkon::dispatch::DispatchConfig;
+use falkon::falkon::exec::{spawn_fleet_with, DefaultRunner};
+use falkon::falkon::service::{Service, ServiceConfig};
+use falkon::falkon::simworld::{SimTask, World, WorldConfig};
+use falkon::falkon::task::TaskPayload;
+use falkon::sim::machine::Machine;
+use falkon::util::alloc::{alloc_count, CountingAlloc};
+use falkon::util::bench::{banner, emit_json, Table};
+use falkon::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn quick() -> bool {
+    std::env::var("FALKON_BENCH_QUICK").is_ok()
+}
+
+struct SimRow {
+    dispatchers: usize,
+    wall_tasks_per_s: f64,
+    virtual_tasks_per_s: f64,
+    events_per_s: f64,
+    allocs_per_task: f64,
+}
+
+/// Replay the 4096-node BG/P sleep-0 campaign and measure the engine's
+/// wall-clock rate + allocation rate.
+fn sim_row(dispatchers: usize, n_tasks: usize) -> SimRow {
+    let machine = Machine::bgp_psets(64); // 4096 nodes / 16384 cores
+    let cores = machine.cores();
+    let mut cfg = WorldConfig::new(machine, cores);
+    cfg.dispatchers = dispatchers;
+    let tasks = vec![SimTask::sleep(0.0); n_tasks];
+    let a0 = alloc_count();
+    let t0 = Instant::now();
+    let mut w = World::new(cfg, tasks);
+    let events = w.run(u64::MAX);
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let allocs = alloc_count() - a0;
+    assert_eq!(w.completed(), n_tasks, "bench run must conserve tasks");
+    SimRow {
+        dispatchers,
+        wall_tasks_per_s: n_tasks as f64 / wall,
+        virtual_tasks_per_s: w.campaign().throughput(),
+        events_per_s: events as f64 / wall,
+        allocs_per_task: allocs as f64 / n_tasks as f64,
+    }
+}
+
+/// Live loopback sleep-0 through the sharded service with the batched
+/// wire path; returns (tasks/s, allocs/task — whole process).
+fn live_row(n_exec: usize, n_tasks: usize, partitions: usize) -> (f64, f64) {
+    let svc = Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        dispatch: DispatchConfig { bundle: 1, data_aware: false, adaptive_cap: 16 },
+        retry: Default::default(),
+        hierarchy: HierarchyConfig { partitions, ..Default::default() },
+    })
+    .unwrap();
+    let fleet = spawn_fleet_with(
+        &svc.addr().to_string(),
+        n_exec,
+        Arc::new(DefaultRunner),
+        16,
+        partitions,
+        |cfg| cfg,
+    )
+    .unwrap();
+    assert!(
+        svc.wait_executors(n_exec, Duration::from_secs(10)),
+        "executors never registered"
+    );
+    let a0 = alloc_count();
+    let t0 = Instant::now();
+    svc.submit_many((0..n_tasks).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(600)).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    let allocs = alloc_count() - a0;
+    assert_eq!(outcomes.len(), n_tasks);
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+    (n_tasks as f64 / dt, allocs as f64 / n_tasks as f64)
+}
+
+fn main() {
+    let sim_n = if quick() { 10_000 } else { 100_000 };
+    let live_n = if quick() { 5_000 } else { 50_000 };
+
+    banner("Hot-path sustained rate — wall-clock tasks/s + allocations/task");
+    let mut rows = Vec::new();
+    let mut t = Table::new(&[
+        "row",
+        "tasks/s (wall)",
+        "virtual t/s",
+        "events/s",
+        "allocs/task",
+    ]);
+    for dispatchers in [1usize, 16] {
+        let r = sim_row(dispatchers, sim_n);
+        t.row(&[
+            format!("sim 4096n d={dispatchers}"),
+            format!("{:.0}", r.wall_tasks_per_s),
+            format!("{:.0}", r.virtual_tasks_per_s),
+            format!("{:.0}", r.events_per_s),
+            format!("{:.2}", r.allocs_per_task),
+        ]);
+        let mut row = Json::obj();
+        row.set("mode", Json::Str("sim".into()))
+            .set("dispatchers", Json::Num(r.dispatchers as f64))
+            .set("tasks_per_s", Json::Num(r.wall_tasks_per_s))
+            .set("virtual_tasks_per_s", Json::Num(r.virtual_tasks_per_s))
+            .set("events_per_s", Json::Num(r.events_per_s))
+            .set("allocs_per_task", Json::Num(r.allocs_per_task));
+        rows.push(row);
+    }
+    let (live_tput, live_allocs) = live_row(4, live_n, 4);
+    t.row(&[
+        "live 4exec 4shard".to_string(),
+        format!("{live_tput:.0}"),
+        "-".to_string(),
+        "-".to_string(),
+        format!("{live_allocs:.2}"),
+    ]);
+    let mut row = Json::obj();
+    row.set("mode", Json::Str("live".into()))
+        .set("executors", Json::Num(4.0))
+        .set("tasks_per_s", Json::Num(live_tput))
+        .set("allocs_per_task", Json::Num(live_allocs));
+    rows.push(row);
+    t.print();
+
+    let mut summary = Json::obj();
+    summary
+        .set("nodes", Json::Num(4096.0))
+        .set("sim_tasks", Json::Num(sim_n as f64))
+        .set("live_tasks", Json::Num(live_n as f64))
+        .set(
+            "protocol",
+            Json::Str(
+                "compare tasks_per_s rows against the previous PR's checkout \
+                 (EXPERIMENTS.md, sustained-rate protocol); acceptance: >= 1.5x"
+                    .into(),
+            ),
+        )
+        .set("rows", Json::Arr(rows));
+    emit_json("hotpath", &summary).expect("write BENCH_hotpath.json");
+}

@@ -122,7 +122,7 @@ mod tests {
         assert_eq!(tasks.len(), 100);
         match &tasks[0] {
             TaskPayload::Compute { artifact, reps, arg } => {
-                assert_eq!(artifact, "mars_batch");
+                assert_eq!(&**artifact, "mars_batch");
                 assert_eq!(*reps, BATCH);
                 assert!((0.1..=0.9).contains(&arg[0]));
             }

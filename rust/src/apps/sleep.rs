@@ -20,9 +20,10 @@ pub fn echo_sim(n: usize, desc_len: usize) -> Vec<SimTask> {
     vec![t; n]
 }
 
-/// `n` live echo payloads with `desc_len`-byte strings.
+/// `n` live echo payloads with `desc_len`-byte strings. The body is
+/// allocated once and Arc-shared across all `n` payloads.
 pub fn echo_live(n: usize, desc_len: usize) -> Vec<TaskPayload> {
-    vec![TaskPayload::Echo { payload: vec![b'x'; desc_len] }; n]
+    vec![TaskPayload::Echo { payload: vec![b'x'; desc_len].into() }; n]
 }
 
 #[cfg(test)]

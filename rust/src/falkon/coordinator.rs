@@ -107,6 +107,27 @@ impl ShardedQueues {
         out
     }
 
+    /// Pop up to `n` tasks from shard `s` for dispatch to `executor`,
+    /// appending their ids to `out` (the allocation-free planning path —
+    /// records stay in the shard's slab, borrowable via
+    /// [`ShardedQueues::task`] for wire encoding). Returns how many.
+    pub fn dispatch_into(
+        &mut self,
+        s: usize,
+        executor: usize,
+        n: usize,
+        out: &mut Vec<TaskId>,
+    ) -> usize {
+        let taken = self.shards[s].dispatch_into(executor, n, out);
+        self.dispatched[s] += taken as u64;
+        taken
+    }
+
+    /// Borrow a live task on shard `s` by id (borrowed-encode hook).
+    pub fn task(&self, s: usize, id: TaskId) -> Option<&Task> {
+        self.shards[s].task(id)
+    }
+
     /// Record a completion on shard `s`.
     pub fn complete(&mut self, s: usize, id: TaskId, exit_code: i32) {
         self.shards[s].complete(id, exit_code);
@@ -252,6 +273,22 @@ mod tests {
         assert_eq!(moved, 4);
         assert_eq!(sq.steal(1, 0, 1), 0);
         assert_eq!(sq.steal_events(), 2);
+        assert!(sq.conserved(0));
+    }
+
+    #[test]
+    fn dispatch_into_counts_and_lends_like_take_for_dispatch() {
+        let mut sq = ShardedQueues::new(HierarchyConfig { partitions: 2, steal_batch: 8 });
+        let a = sq.submit_to(0, sleep0());
+        let b = sq.submit_to(0, sleep0());
+        let mut ids = Vec::new();
+        assert_eq!(sq.dispatch_into(0, 5, 10, &mut ids), 2);
+        assert_eq!(ids, vec![a, b]);
+        assert_eq!(sq.stats()[0].dispatched, 2);
+        assert!(sq.task(0, a).is_some(), "dispatched task borrowable from the slab");
+        sq.complete(0, a, 0);
+        assert!(sq.task(0, a).is_none());
+        sq.complete(0, b, 0);
         assert!(sq.conserved(0));
     }
 

@@ -208,7 +208,12 @@ mod tests {
     fn sim_task(id: u64, objects: Vec<(String, u64)>) -> Task {
         Task::new(
             id,
-            TaskPayload::SimApp { exec_secs: 1.0, read_bytes: 0, write_bytes: 0, objects },
+            TaskPayload::SimApp {
+                exec_secs: 1.0,
+                read_bytes: 0,
+                write_bytes: 0,
+                objects: objects.into(),
+            },
         )
     }
 

@@ -46,7 +46,7 @@ impl TaskRunner for DefaultRunner {
                 Ok(0)
             }
             TaskPayload::Command { program, args } => {
-                match std::process::Command::new(program).args(args).output() {
+                match std::process::Command::new(&**program).args(args.iter()).output() {
                     Ok(out) => Ok(out.status.code().unwrap_or(-1)),
                     Err(_) => Err(TaskError::AppError(127)),
                 }
@@ -530,7 +530,7 @@ mod tests {
     fn default_runner_handles_payloads() {
         let r = DefaultRunner;
         assert_eq!(r.run(&TaskPayload::Sleep { secs: 0.0 }).unwrap(), 0);
-        assert_eq!(r.run(&TaskPayload::Echo { payload: b"x".to_vec() }).unwrap(), 0);
+        assert_eq!(r.run(&TaskPayload::Echo { payload: b"x"[..].into() }).unwrap(), 0);
         assert!(matches!(
             r.run(&TaskPayload::Compute { artifact: "m".into(), reps: 1, arg: [0.0, 0.0] }),
             Err(TaskError::AppError(125))
@@ -541,13 +541,15 @@ mod tests {
     fn command_runner_returns_exit_code() {
         let r = DefaultRunner;
         let code = r
-            .run(&TaskPayload::Command { program: "/bin/sh".into(), args: vec!["-c".into(), "exit 3".into()] })
+            .run(&TaskPayload::Command {
+                program: "/bin/sh".into(),
+                args: vec!["-c".to_string(), "exit 3".to_string()].into(),
+            })
             .unwrap();
         assert_eq!(code, 3);
-        assert!(matches!(
-            r.run(&TaskPayload::Command { program: "/no/such/bin".into(), args: vec![] }),
-            Err(TaskError::AppError(127))
-        ));
+        let missing =
+            TaskPayload::Command { program: "/no/such/bin".into(), args: Vec::new().into() };
+        assert!(matches!(r.run(&missing), Err(TaskError::AppError(127))));
     }
 
     #[test]

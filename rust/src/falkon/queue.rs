@@ -1,6 +1,6 @@
 //! Service-side task queues with conservation accounting.
 //!
-//! The wait queue holds tasks ready for dispatch; the pending table tracks
+//! The wait queue holds tasks ready for dispatch; the pending set tracks
 //! tasks that are out at executors. Conservation — every submitted task is
 //! in exactly one of {waiting, pending, done} — is an invariant the
 //! property tests exercise under randomized churn and failures.
@@ -11,6 +11,20 @@
 //! [`TaskQueues::steal_back`] / [`TaskQueues::inject`]. Cross-shard moves
 //! are tracked by transfer counters so conservation stays checkable both
 //! per shard and globally (see `falkon::coordinator::ShardedQueues`).
+//!
+//! # Hot-path memory discipline
+//!
+//! Tasks are stored exactly **once**, in a slab (`slots` + a free list);
+//! the wait queue and the dispatch/steal/retry/fail paths move slot
+//! indices and ids, never cloned `Task`s. [`TaskQueues::dispatch_into`]
+//! appends the dispatched ids to a caller-owned scratch vector, and
+//! [`TaskQueues::task`] lends the stored record out for borrowed wire
+//! encoding (`net::proto::encode_dispatch_into`) — so the steady-state
+//! queue→bundle-encode path performs zero per-task heap allocations (the
+//! gate in `tests/alloc_gate.rs` enforces this). Each failed attempt
+//! builds its `TaskError` exactly once and moves it through the
+//! `Retrying`/`Failed` state into the outcome — retry storms allocate
+//! nothing per attempt.
 
 use crate::falkon::errors::TaskError;
 use crate::falkon::task::{Task, TaskId, TaskPayload, TaskState};
@@ -31,13 +45,28 @@ impl TaskOutcome {
     }
 }
 
+/// One slab entry: the task plus which executor (if any) holds it.
+#[derive(Debug)]
+struct Slot {
+    task: Task,
+    /// `Some(executor)` while the task is out at an executor (pending);
+    /// `None` while it waits in the queue.
+    executor: Option<usize>,
+}
+
 /// The service's task bookkeeping.
 #[derive(Debug, Default)]
 pub struct TaskQueues {
-    waiting: VecDeque<TaskId>,
-    tasks: HashMap<TaskId, Task>,
-    /// Task -> executor currently holding it.
-    pending: HashMap<TaskId, usize>,
+    /// FIFO of waiting tasks, by slab slot index.
+    waiting: VecDeque<u32>,
+    /// The slab: every live (non-terminal) task lives here exactly once.
+    slots: Vec<Option<Slot>>,
+    /// Recycled slot indices (terminal tasks free their slot).
+    free: Vec<u32>,
+    /// TaskId → slot: results come off the wire keyed by id.
+    index: HashMap<TaskId, u32>,
+    /// Tasks out at executors (the executor id lives in the slot).
+    pending: usize,
     done: Vec<TaskOutcome>,
     next_id: TaskId,
     submitted: u64,
@@ -52,6 +81,31 @@ impl TaskQueues {
         TaskQueues::default()
     }
 
+    /// Park `task` in a (possibly recycled) slab slot and index it.
+    fn alloc_slot(&mut self, task: Task) -> u32 {
+        let id = task.id;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize] = Some(Slot { task, executor: None });
+                s
+            }
+            None => {
+                self.slots.push(Some(Slot { task, executor: None }));
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.index.insert(id, slot);
+        slot
+    }
+
+    /// Free `slot`, returning the owned entry (caller consumes the task).
+    fn release_slot(&mut self, slot: u32) -> Slot {
+        let s = self.slots[slot as usize].take().expect("occupied slot");
+        self.index.remove(&s.task.id);
+        self.free.push(slot);
+        s
+    }
+
     /// Submit a payload; returns the assigned task id.
     pub fn submit(&mut self, payload: TaskPayload) -> TaskId {
         let id = self.next_id;
@@ -64,12 +118,12 @@ impl TaskQueues {
     /// allocates globally unique ids across shards). `id` must be unique
     /// within this shard.
     pub fn submit_with_id(&mut self, id: TaskId, payload: TaskPayload) {
-        debug_assert!(!self.tasks.contains_key(&id), "duplicate task id {id}");
+        debug_assert!(!self.index.contains_key(&id), "duplicate task id {id}");
         self.next_id = self.next_id.max(id + 1);
         let mut task = Task::new(id, payload);
         task.advance(TaskState::Queued).expect("Submitted->Queued");
-        self.tasks.insert(id, task);
-        self.waiting.push_back(id);
+        let slot = self.alloc_slot(task);
+        self.waiting.push_back(slot);
         self.submitted += 1;
     }
 
@@ -80,7 +134,7 @@ impl TaskQueues {
 
     /// Number of tasks out at executors.
     pub fn pending_len(&self) -> usize {
-        self.pending.len()
+        self.pending
     }
 
     /// Completed outcomes so far (drain with [`TaskQueues::drain_done`]).
@@ -94,81 +148,129 @@ impl TaskQueues {
 
     /// True when every submitted task reached a terminal state.
     pub fn all_done(&self) -> bool {
-        self.waiting.is_empty() && self.pending.is_empty()
+        self.waiting.is_empty() && self.pending == 0
     }
 
     /// The task at the head of the wait queue (what data-aware placement
     /// scores executors against), without dequeuing it.
     pub fn peek_waiting(&self) -> Option<&Task> {
-        self.waiting.front().and_then(|id| self.tasks.get(id))
+        self.waiting
+            .front()
+            .map(|&slot| &self.slots[slot as usize].as_ref().expect("waiting slot").task)
     }
 
-    /// Pop up to `n` tasks for dispatch to `executor`. Marks them
-    /// Dispatched and moves them to pending.
-    pub fn take_for_dispatch(&mut self, executor: usize, n: usize) -> Vec<Task> {
-        let mut out = Vec::with_capacity(n.min(self.waiting.len()));
+    /// Borrow a live (waiting or pending) task by id — the borrowed-encode
+    /// hook: dispatchers plan ids with [`TaskQueues::dispatch_into`] and
+    /// then encode wire bundles straight from these references, so the
+    /// payload body is never copied between submission and the socket.
+    pub fn task(&self, id: TaskId) -> Option<&Task> {
+        self.index
+            .get(&id)
+            .map(|&slot| &self.slots[slot as usize].as_ref().expect("indexed slot").task)
+    }
+
+    /// Pop up to `n` tasks for dispatch to `executor`, appending their ids
+    /// to `out` (a caller-owned scratch vector, reused across calls).
+    /// Marks them Dispatched in place; the records stay in the slab and
+    /// can be borrowed via [`TaskQueues::task`] for encoding. Returns how
+    /// many ids were appended. Allocation-free in steady state.
+    pub fn dispatch_into(&mut self, executor: usize, n: usize, out: &mut Vec<TaskId>) -> usize {
+        let mut taken = 0;
         for _ in 0..n {
-            let Some(id) = self.waiting.pop_front() else { break };
-            let task = self.tasks.get_mut(&id).expect("waiting task exists");
-            task.advance(TaskState::Dispatched).expect("Queued->Dispatched");
-            self.pending.insert(id, executor);
-            out.push(task.clone());
+            let Some(slot) = self.waiting.pop_front() else { break };
+            let s = self.slots[slot as usize].as_mut().expect("waiting slot");
+            s.task.advance(TaskState::Dispatched).expect("Queued->Dispatched");
+            s.executor = Some(executor);
+            self.pending += 1;
+            out.push(s.task.id);
+            taken += 1;
         }
-        out
+        taken
+    }
+
+    /// Pop up to `n` tasks for dispatch to `executor`, returning clones
+    /// (compatibility/test path — the live dispatchers use
+    /// [`TaskQueues::dispatch_into`] + [`TaskQueues::task`] instead; the
+    /// clones are cheap since payload bodies are `Arc`-shared).
+    pub fn take_for_dispatch(&mut self, executor: usize, n: usize) -> Vec<Task> {
+        let mut ids = Vec::with_capacity(n.min(self.waiting.len()));
+        self.dispatch_into(executor, n, &mut ids);
+        ids.iter().map(|id| self.task(*id).expect("just dispatched").clone()).collect()
     }
 
     /// Record a successful completion from an executor.
     pub fn complete(&mut self, id: TaskId, exit_code: i32) {
-        let Some(_) = self.pending.remove(&id) else {
-            // Duplicate/unknown result (e.g. a retried task's first attempt
-            // raced the retry): ignore — the first terminal result wins.
+        let Some(&slot) = self.index.get(&id) else {
+            // Unknown id: a duplicate result for an already-terminal task.
             return;
         };
-        let task = self.tasks.get_mut(&id).expect("pending task exists");
+        if self.slots[slot as usize].as_ref().expect("indexed slot").executor.is_none() {
+            // The task is back in the wait queue (a retried task's first
+            // attempt raced the retry): ignore — the pending attempt wins.
+            return;
+        }
+        let mut s = self.release_slot(slot);
+        self.pending -= 1;
         // Executors report Running implicitly; normalize the transition.
-        if task.state == TaskState::Dispatched {
-            task.advance(TaskState::Running).unwrap();
+        if s.task.state == TaskState::Dispatched {
+            s.task.advance(TaskState::Running).unwrap();
         }
+        let attempts = s.task.attempts;
         if exit_code == 0 {
-            task.advance(TaskState::Completed { exit_code }).unwrap();
-            self.done.push(TaskOutcome { id, exit_code, error: None, attempts: task.attempts });
+            s.task.advance(TaskState::Completed { exit_code }).unwrap();
+            self.done.push(TaskOutcome { id, exit_code, error: None, attempts });
         } else {
-            // Non-zero exit is an application error: terminal, not retried.
-            let error = TaskError::AppError(exit_code);
-            task.advance(TaskState::Failed { error: error.clone(), attempts: task.attempts })
+            // Non-zero exit is an application error: terminal, not
+            // retried. Built once, moved state → outcome.
+            s.task
+                .advance(TaskState::Failed { error: TaskError::AppError(exit_code), attempts })
                 .unwrap();
-            self.done.push(TaskOutcome { id, exit_code, error: Some(error), attempts: task.attempts });
+            if let TaskState::Failed { error, .. } = s.task.state {
+                self.done.push(TaskOutcome { id, exit_code, error: Some(error), attempts });
+            }
         }
-        self.tasks.remove(&id);
     }
 
     /// Record a failed attempt; either re-queues (retry) or finalizes.
-    /// Returns true if the task was re-queued.
+    /// Returns true if the task was re-queued. The error is constructed
+    /// exactly once per attempt and *moved* through the lifecycle state
+    /// into the outcome — no per-attempt clones.
     pub fn fail_attempt(
         &mut self,
         id: TaskId,
         error: TaskError,
         policy: &crate::falkon::errors::RetryPolicy,
     ) -> bool {
-        let Some(_) = self.pending.remove(&id) else { return false };
-        let task = self.tasks.get_mut(&id).expect("pending task exists");
-        let attempts = task.attempts;
+        let Some(&slot) = self.index.get(&id) else { return false };
+        let attempts = {
+            let s = self.slots[slot as usize].as_ref().expect("indexed slot");
+            if s.executor.is_none() {
+                return false; // not pending (already retried or never out)
+            }
+            s.task.attempts
+        };
         match crate::falkon::errors::on_failure(&error, attempts, policy) {
             crate::falkon::errors::FailureAction::Retry => {
-                task.advance(TaskState::Retrying { attempt: attempts, error }).unwrap();
-                task.advance(TaskState::Queued).unwrap();
-                self.waiting.push_back(id);
+                let s = self.slots[slot as usize].as_mut().expect("indexed slot");
+                s.executor = None;
+                self.pending -= 1;
+                s.task.advance(TaskState::Retrying { attempt: attempts, error }).unwrap();
+                s.task.advance(TaskState::Queued).unwrap();
+                self.waiting.push_back(slot);
                 true
             }
             crate::falkon::errors::FailureAction::Fail => {
-                task.advance(TaskState::Failed { error: error.clone(), attempts }).unwrap();
-                self.done.push(TaskOutcome {
-                    id,
-                    exit_code: -1,
-                    error: Some(error),
-                    attempts,
-                });
-                self.tasks.remove(&id);
+                let mut s = self.release_slot(slot);
+                self.pending -= 1;
+                s.task.advance(TaskState::Failed { error, attempts }).unwrap();
+                if let TaskState::Failed { error, .. } = s.task.state {
+                    self.done.push(TaskOutcome {
+                        id,
+                        exit_code: -1,
+                        error: Some(error),
+                        attempts,
+                    });
+                }
                 false
             }
         }
@@ -176,10 +278,11 @@ impl TaskQueues {
 
     /// All tasks currently pending on `executor` (for node-loss handling).
     pub fn pending_on(&self, executor: usize) -> Vec<TaskId> {
-        self.pending
+        self.slots
             .iter()
-            .filter(|(_, e)| **e == executor)
-            .map(|(id, _)| *id)
+            .flatten()
+            .filter(|s| s.executor == Some(executor))
+            .map(|s| s.task.id)
             .collect()
     }
 
@@ -188,18 +291,27 @@ impl TaskQueues {
         std::mem::take(&mut self.done)
     }
 
+    /// Drain accumulated outcomes by appending to `out`, keeping the
+    /// internal buffer's capacity — the steady-state alternative to
+    /// [`TaskQueues::drain_done`] for callers that poll in a loop (one
+    /// warm buffer on each side, zero allocation per drain).
+    pub fn drain_done_into(&mut self, out: &mut Vec<TaskOutcome>) {
+        out.append(&mut self.done);
+    }
+
     /// Remove up to `n` tasks from the *back* of the wait queue for
     /// transfer to another shard (work stealing steals the coldest work,
     /// preserving the victim's FIFO head). The tasks keep their ids,
-    /// attempt counts and `Queued` state.
+    /// attempt counts and `Queued` state; they are *moved* out of the
+    /// slab, never cloned.
     pub fn steal_back(&mut self, n: usize) -> Vec<Task> {
         let k = n.min(self.waiting.len());
         let mut out = Vec::with_capacity(k);
         for _ in 0..k {
-            let id = self.waiting.pop_back().expect("len checked");
-            let task = self.tasks.remove(&id).expect("waiting task exists");
+            let slot = self.waiting.pop_back().expect("len checked");
+            let s = self.release_slot(slot);
             self.transferred_out += 1;
-            out.push(task);
+            out.push(s.task);
         }
         // Stolen oldest-first, so the thief's push order keeps FIFO.
         out.reverse();
@@ -210,9 +322,9 @@ impl TaskQueues {
     /// shard's wait queue, keeping its id and attempt history.
     pub fn inject(&mut self, task: Task) {
         debug_assert!(task.state == TaskState::Queued, "inject requires a queued task");
-        debug_assert!(!self.tasks.contains_key(&task.id), "duplicate injected id {}", task.id);
-        self.waiting.push_back(task.id);
-        self.tasks.insert(task.id, task);
+        debug_assert!(!self.index.contains_key(&task.id), "duplicate injected id {}", task.id);
+        let slot = self.alloc_slot(task);
+        self.waiting.push_back(slot);
         self.transferred_in += 1;
     }
 
@@ -231,7 +343,7 @@ impl TaskQueues {
     pub fn conserved(&self, drained: u64) -> bool {
         self.submitted + self.transferred_in
             == self.waiting.len() as u64
-                + self.pending.len() as u64
+                + self.pending as u64
                 + self.done.len() as u64
                 + drained
                 + self.transferred_out
@@ -274,6 +386,62 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_into_lends_tasks_for_borrowed_encoding() {
+        // The live dispatcher's path: plan ids into a scratch vector,
+        // then borrow each record for wire encoding — no Task clones.
+        let mut q = TaskQueues::new();
+        let ids: Vec<TaskId> = (0..4).map(|_| q.submit(sleep0())).collect();
+        let mut scratch = Vec::new();
+        assert_eq!(q.dispatch_into(3, 2, &mut scratch), 2);
+        assert_eq!(scratch, ids[..2]);
+        for id in &scratch {
+            let t = q.task(*id).expect("dispatched task stays in the slab");
+            assert_eq!(t.state, TaskState::Dispatched);
+            assert_eq!(t.attempts, 1);
+        }
+        // Scratch is appended to, not replaced.
+        assert_eq!(q.dispatch_into(3, 10, &mut scratch), 2);
+        assert_eq!(scratch, ids);
+        assert_eq!(q.pending_len(), 4);
+        // Terminal tasks leave the slab.
+        q.complete(ids[0], 0);
+        assert!(q.task(ids[0]).is_none());
+        assert!(q.task(ids[1]).is_some());
+    }
+
+    #[test]
+    fn slab_slots_are_recycled() {
+        let mut q = TaskQueues::new();
+        let mut scratch = Vec::new();
+        for round in 0..100 {
+            let id = q.submit(sleep0());
+            scratch.clear();
+            q.dispatch_into(0, 1, &mut scratch);
+            q.complete(id, 0);
+            assert!(q.slots.len() <= 1, "round {round}: slab must reuse its slot");
+        }
+        assert_eq!(q.drain_done().len(), 100);
+        assert!(q.conserved(100));
+    }
+
+    #[test]
+    fn drain_done_into_keeps_both_buffers_warm() {
+        let mut q = TaskQueues::new();
+        let mut out = Vec::with_capacity(8);
+        let mut scratch = Vec::new();
+        for _ in 0..3 {
+            let id = q.submit(sleep0());
+            scratch.clear();
+            q.dispatch_into(0, 1, &mut scratch);
+            q.complete(id, 0);
+        }
+        q.drain_done_into(&mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(q.done_len(), 0);
+        assert!(q.conserved(3));
+    }
+
+    #[test]
     fn comm_error_requeues_then_exhausts() {
         let mut q = TaskQueues::new();
         let policy = RetryPolicy { max_attempts: 2, ..Default::default() };
@@ -307,6 +475,22 @@ mod tests {
         q.complete(id, 0);
         q.complete(id, 0); // duplicate
         assert_eq!(q.drain_done().len(), 1);
+    }
+
+    #[test]
+    fn stale_result_for_requeued_task_ignored() {
+        // A retried task is back in the wait queue when its first
+        // attempt's result straggles in: the result must not complete it.
+        let policy = RetryPolicy::default();
+        let mut q = TaskQueues::new();
+        let id = q.submit(sleep0());
+        q.take_for_dispatch(0, 1);
+        assert!(q.fail_attempt(id, TaskError::CommError, &policy)); // re-queued
+        q.complete(id, 0); // straggler from the failed attempt
+        assert_eq!(q.done_len(), 0, "queued task must ignore stale results");
+        assert_eq!(q.waiting_len(), 1);
+        assert!(!q.fail_attempt(id, TaskError::CommError, &policy), "not pending");
+        assert!(q.conserved(0));
     }
 
     #[test]

@@ -32,9 +32,9 @@ use crate::falkon::dispatch::{
 };
 use crate::falkon::errors::{NodeHealth, RetryPolicy, TaskError};
 use crate::falkon::queue::{TaskOutcome, TaskQueues};
-use crate::falkon::task::{Task, TaskId, TaskPayload};
+use crate::falkon::task::{TaskId, TaskPayload};
 use crate::fs::cache::CacheManager;
-use crate::net::proto::{Msg, WireResult, WireTask};
+use crate::net::proto::{encode_dispatch_into, Msg, WireResult, WireTaskRef};
 use crate::net::tcpcore::{Framed, Registry};
 use std::collections::{HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
@@ -233,6 +233,23 @@ struct RouteScratch {
     shard_loads: Vec<ShardLoad>,
 }
 
+/// Per-dispatcher reusable buffers: the planned bundle's task ids, an
+/// Arc-payload snapshot, and the encoded wire body. Planning fills `ids`
+/// and — still under the shard lock, but paying only a refcount bump per
+/// task — `tasks`; the borrowed-encode step then fills `body` from the
+/// snapshot AFTER the lock drops (so result ingestion and submits never
+/// wait out a payload memcpy), and the socket write frames `body` per
+/// the connection's codec. The steady-state queue→bundle-encode path
+/// never copies a payload body, never builds a `Vec<WireTask>`, and
+/// allocates nothing once these buffers are warm (enforced by
+/// `tests/alloc_gate.rs`).
+#[derive(Default)]
+struct DispatchScratch {
+    ids: Vec<TaskId>,
+    tasks: Vec<(TaskId, TaskPayload)>,
+    body: Vec<u8>,
+}
+
 /// Receivers reject frames over 64 MB (`Framed::recv`); an oversized
 /// staged object would silently tear down the executor's connection, so
 /// refuse it at the send side with a real error instead. The cap is
@@ -330,7 +347,7 @@ impl Service {
         affinity.resize(n, 0);
         if let Some(co) = staged {
             if let TaskPayload::SimApp { objects, .. } = payload {
-                for (key, bytes) in objects {
+                for (key, bytes) in objects.iter() {
                     for node in co.staged.nodes_with(key) {
                         if let Some(&s) = co.node_shard.get(&node) {
                             affinity[s] += bytes;
@@ -471,7 +488,7 @@ impl Service {
             let mut pending = 0usize;
             for shard in &self.inner.shards {
                 let mut st = shard.state.lock().expect("shard poisoned");
-                newly.extend(st.queues.drain_done());
+                st.queues.drain_done_into(&mut newly);
                 all_done &= st.queues.all_done();
                 waiting += st.queues.waiting_len();
                 pending += st.queues.pending_len();
@@ -519,7 +536,7 @@ impl Service {
             let mut newly = Vec::new();
             for shard in &self.inner.shards {
                 let mut st = shard.state.lock().expect("shard poisoned");
-                newly.extend(st.queues.drain_done());
+                st.queues.drain_done_into(&mut newly);
             }
             co = self.inner.coord.lock().expect("coord poisoned");
             if !newly.is_empty() {
@@ -881,31 +898,43 @@ fn handle_results(
 /// own queue drains while it still has idle executors.
 fn dispatcher_loop(inner: Arc<Inner>, shard_idx: usize) {
     let shard = &inner.shards[shard_idx];
+    let mut scratch = DispatchScratch::default();
     loop {
         if inner.shutdown.load(Ordering::SeqCst) {
             break;
         }
-        // Phase 1: plan one dispatch from this shard.
-        if let Some((executor_id, tasks)) = plan_shard(&inner, shard_idx) {
-            // Phase 2 (unlocked): encode + write, with shard provenance.
+        // Phase 1: plan one dispatch from this shard — ids plus an
+        // Arc-payload snapshot into scratch (refcount bumps only under
+        // the shard lock).
+        if let Some(executor_id) = plan_shard(&inner, shard_idx, &mut scratch) {
+            // Phase 2 (unlocked): encode the bundle body from the
+            // snapshot — the payload bytes are copied exactly once,
+            // Arc→body — then frame it for the connection's codec and
+            // write it with one syscall, no owned Msg.
             let t0 = Instant::now();
-            let wire: Vec<WireTask> =
-                tasks.iter().map(|t| WireTask { id: t.id, payload: t.payload.clone() }).collect();
-            let msg = Msg::Dispatch { shard: shard_idx as u32, tasks: wire };
+            scratch.body.clear();
+            encode_dispatch_into(
+                shard_idx as u32,
+                scratch
+                    .tasks
+                    .iter()
+                    .map(|(id, payload)| WireTaskRef { id: *id, payload }),
+                &mut scratch.body,
+            );
             inner.profile.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             let t1 = Instant::now();
             let ok = match inner.registry.get(executor_id) {
-                Some(h) => h.send(&msg).is_ok(),
+                Some(h) => h.send_body(&scratch.body).is_ok(),
                 None => false,
             };
             inner.profile.socket_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
             if ok {
-                shard.dispatched.fetch_add(tasks.len() as u64, Ordering::Relaxed);
+                shard.dispatched.fetch_add(scratch.ids.len() as u64, Ordering::Relaxed);
             } else {
                 // Connection died between planning and writing: retry tasks.
                 let mut st = shard.state.lock().expect("shard poisoned");
-                for t in &tasks {
-                    st.queues.fail_attempt(t.id, TaskError::CommError, &inner.config.retry);
+                for &id in &scratch.ids {
+                    st.queues.fail_attempt(id, TaskError::CommError, &inner.config.retry);
                 }
                 shard.sync_hints(&st);
                 drop(st);
@@ -930,20 +959,27 @@ fn dispatcher_loop(inner: Arc<Inner>, shard_idx: usize) {
     }
 }
 
-/// Plan one (executor, bundle) assignment from shard `shard_idx`. With
-/// `data_aware`, the head task is scored against the coordinator's staged
-/// residency via an affinity snapshot taken *without* holding the shard
-/// lock (lock order: coordinator before shard, never after).
-fn plan_shard(inner: &Arc<Inner>, shard_idx: usize) -> Option<(u64, Vec<Task>)> {
+/// Plan one (executor, bundle) assignment from shard `shard_idx` into
+/// `scratch`: the chosen ids land in `scratch.ids` and an Arc snapshot
+/// of their payloads in `scratch.tasks` (a refcount bump per task — no
+/// body is copied and nothing allocates once the scratch is warm), so
+/// the caller can encode the wire bundle AFTER the shard lock drops.
+/// Returns the target executor. With `data_aware`, the head task is
+/// scored against the coordinator's staged residency via an affinity
+/// snapshot taken *without* holding the shard lock (lock order:
+/// coordinator before shard, never after).
+fn plan_shard(inner: &Arc<Inner>, shard_idx: usize, scratch: &mut DispatchScratch) -> Option<u64> {
     let cfg = &inner.config.dispatch;
     let shard = &inner.shards[shard_idx];
+    scratch.ids.clear();
+    scratch.tasks.clear();
     // Affinity snapshot for the head task (data-aware only).
     let snapshot: Option<(TaskId, HashMap<usize, u64>)> = if cfg.data_aware {
         let head = {
             let st = shard.state.lock().expect("shard poisoned");
             st.queues.peek_waiting().and_then(|t| match &t.payload {
                 TaskPayload::SimApp { objects, .. } if !objects.is_empty() => {
-                    Some((t.id, objects.clone()))
+                    Some((t.id, objects.clone())) // Arc clone: shares the body
                 }
                 _ => None,
             })
@@ -951,7 +987,7 @@ fn plan_shard(inner: &Arc<Inner>, shard_idx: usize) -> Option<(u64, Vec<Task>)> 
         head.map(|(id, objects)| {
             let co = inner.coord.lock().expect("coord poisoned");
             let mut scores: HashMap<usize, u64> = HashMap::new();
-            for (key, bytes) in &objects {
+            for (key, bytes) in objects.iter() {
                 for node in co.staged.nodes_with(key) {
                     *scores.entry(node).or_insert(0) += bytes;
                 }
@@ -967,16 +1003,27 @@ fn plan_shard(inner: &Arc<Inner>, shard_idx: usize) -> Option<(u64, Vec<Task>)> 
         Some((head_id, scores))
             if st.queues.peek_waiting().map(|t| t.id) == Some(head_id) =>
         {
-            plan_one_scored(&mut st, cfg, &scores)
+            plan_one_scored(&mut st, cfg, &scores, &mut scratch.ids)
         }
-        _ => plan_one_fifo(&mut st, cfg),
+        _ => plan_one_fifo(&mut st, cfg, &mut scratch.ids),
     };
+    if planned.is_some() {
+        // Snapshot the planned payloads while the records are pinned by
+        // the lock: Arc clones share the bodies, so this is a refcount
+        // bump per task, not a copy — the byte-level encode happens
+        // outside the lock.
+        for &id in scratch.ids.iter() {
+            let t = st.queues.task(id).expect("just planned");
+            scratch.tasks.push((id, t.payload.clone()));
+        }
+    }
     shard.sync_hints(&st);
     planned
 }
 
-/// FIFO planning over the shard's idle executors.
-fn plan_one_fifo(st: &mut ShardState, cfg: &DispatchConfig) -> Option<(u64, Vec<Task>)> {
+/// FIFO planning over the shard's idle executors; appends the planned
+/// task ids to `ids`.
+fn plan_one_fifo(st: &mut ShardState, cfg: &DispatchConfig, ids: &mut Vec<TaskId>) -> Option<u64> {
     while let Some(&exec_id) = st.idle.front() {
         let Some(meta) = st.execs.get_mut(&exec_id) else {
             st.idle.pop_front();
@@ -988,28 +1035,30 @@ fn plan_one_fifo(st: &mut ShardState, cfg: &DispatchConfig) -> Option<(u64, Vec<
         }
         let credit = meta.credit;
         let n = bundle_for_depth(credit, st.queues.waiting_len(), st.idle.len(), cfg);
-        let tasks = st.queues.take_for_dispatch(exec_id as usize, n);
-        if tasks.is_empty() {
+        let taken = st.queues.dispatch_into(exec_id as usize, n, ids);
+        if taken == 0 {
             return None;
         }
         let meta = st.execs.get_mut(&exec_id).expect("still present");
-        meta.credit -= tasks.len() as u32;
+        meta.credit -= taken as u32;
         if meta.credit == 0 {
             st.idle.pop_front();
         }
-        return Some((exec_id, tasks));
+        return Some(exec_id);
     }
     None
 }
 
 /// Data-aware planning: prune the idle deque, then pick the idle executor
 /// whose node scores the most staged bytes for the head task (FIFO on
-/// ties, exactly like [`choose_executor_scored`]'s strict `>`).
+/// ties, exactly like [`choose_executor_scored`]'s strict `>`). Appends
+/// the planned task ids to `ids`.
 fn plan_one_scored(
     st: &mut ShardState,
     cfg: &DispatchConfig,
     scores: &HashMap<usize, u64>,
-) -> Option<(u64, Vec<Task>)> {
+    ids: &mut Vec<TaskId>,
+) -> Option<u64> {
     // Prune dead / creditless / suspended entries so the deque cannot
     // accumulate stale ids while we bypass the FIFO pop.
     {
@@ -1035,16 +1084,16 @@ fn plan_one_scored(
     let pick = choose_executor_scored(&idles, scores);
     let exec_id = idles[pick].executor_id;
     let n = bundle_for_depth(idles[pick].credit, st.queues.waiting_len(), st.idle.len(), cfg);
-    let tasks = st.queues.take_for_dispatch(exec_id as usize, n);
-    if tasks.is_empty() {
+    let taken = st.queues.dispatch_into(exec_id as usize, n, ids);
+    if taken == 0 {
         return None;
     }
     let meta = st.execs.get_mut(&exec_id).expect("picked executor exists");
-    meta.credit -= tasks.len() as u32;
+    meta.credit -= taken as u32;
     if meta.credit == 0 {
         let _ = st.idle.remove(pick);
     }
-    Some((exec_id, tasks))
+    Some(exec_id)
 }
 
 /// Work stealing: when shard `thief_idx` has usable idle credit but an

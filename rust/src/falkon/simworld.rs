@@ -1245,7 +1245,12 @@ impl World {
     /// Stage-in: wrapper script invocation(s), workdir mkdirs, input reads.
     fn begin_stage_in(&mut self, now: Time, core: usize, task: usize) {
         let node = self.node_of(core);
-        let t = self.tasks[task].clone();
+        // Borrowed access to the task record: the old per-event deep
+        // clone of the whole `SimTask` (objects vector included) is gone
+        // — scalar profile fields are copied out and the object list is
+        // consulted in place. Over a 10⁸-event campaign this was one
+        // clone per dispatch delivery.
+        let t = &self.tasks[task];
         // Ramdisk-side costs are deterministic; accumulate them.
         let mut local_s = self.cfg.machine.exec_overhead_secs;
         // Script invocations.
@@ -1265,9 +1270,9 @@ impl World {
         // Input bytes from the shared FS: per-task reads plus object misses.
         let mut shared_read = t.read_bytes;
         if self.cfg.caching {
-            let objs: Vec<(String, u64)> =
-                t.objects.iter().map(|(k, b)| (k.to_string(), *b)).collect();
-            let plan = self.cache.plan(node, &objs);
+            // Borrowed-key plan: all-hit steady state allocates nothing;
+            // owned keys are built per MISS only (inside plan_refs).
+            let plan = self.cache.plan_refs(node, &t.objects);
             local_s += self.ram.read_secs(plan.hit_bytes);
             for (k, b) in plan.fetch {
                 shared_read += b;

@@ -6,11 +6,19 @@
 //! real service and the simulator so metrics mean the same thing in both.
 
 use crate::falkon::errors::TaskError;
+use std::sync::Arc;
 
 /// Task identifier (unique per service instance).
 pub type TaskId = u64;
 
 /// What the task actually does when it reaches an executor core.
+///
+/// Heavy fields (description bytes, argument lists, object working sets)
+/// are `Arc`-backed so a payload clone is a refcount bump, never a body
+/// copy: retries, re-dispatches, steals and wire-bundle construction all
+/// share one allocation made at submission (or decode) time. This is the
+/// payload half of the allocation-free task lifecycle — the queue half
+/// is the slab table in [`crate::falkon::queue::TaskQueues`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum TaskPayload {
     /// `sleep N` — the paper's no-I/O micro-benchmark payload. In the
@@ -18,12 +26,12 @@ pub enum TaskPayload {
     Sleep { secs: f64 },
     /// `/bin/echo '<payload>'` — the task-description-size benchmark
     /// (Fig 10). The payload travels in the task description.
-    Echo { payload: Vec<u8> },
+    Echo { payload: Arc<[u8]> },
     /// Run a real subprocess (live executors only).
-    Command { program: String, args: Vec<String> },
+    Command { program: Arc<str>, args: Arc<[String]> },
     /// Execute an AOT-compiled artifact via PJRT (live executors): the
     /// MARS / DOCK compute path. `reps` micro-tasks per invocation.
-    Compute { artifact: String, reps: u32, arg: [f64; 2] },
+    Compute { artifact: Arc<str>, reps: u32, arg: [f64; 2] },
     /// Simulated application task with an explicit compute + I/O profile
     /// (used by the DES world for DOCK/MARS campaigns).
     SimApp {
@@ -34,7 +42,7 @@ pub enum TaskPayload {
         /// Per-task output written to shared FS.
         write_bytes: u64,
         /// Cacheable objects (binary, static input): (key, bytes).
-        objects: Vec<(String, u64)>,
+        objects: Arc<[(String, u64)]>,
     },
 }
 
@@ -46,7 +54,12 @@ impl TaskPayload {
             TaskPayload::Sleep { .. } => 12, // "/bin/sleep 0" — paper's figure
             TaskPayload::Echo { payload } => "/bin/echo ''".len() + payload.len(),
             TaskPayload::Command { program, args } => {
-                program.len() + args.iter().map(|a| a.len() + 1).sum::<usize>()
+                // The rendered command line `program arg1 arg2 …`: one
+                // separating space *before each* arg (the space after
+                // `program` is the first arg's separator), no trailing
+                // separator — so `/bin/sleep` + ["0"] is exactly the
+                // paper's 12-byte figure, same as `Sleep`.
+                program.len() + args.iter().map(|a| 1 + a.len()).sum::<usize>()
             }
             TaskPayload::Compute { artifact, .. } => artifact.len() + 24,
             TaskPayload::SimApp { objects, .. } => {
@@ -196,8 +209,50 @@ mod tests {
 
     #[test]
     fn echo_description_scales_with_payload() {
-        let d10 = TaskPayload::Echo { payload: vec![b'x'; 10] }.description_len();
-        let d10k = TaskPayload::Echo { payload: vec![b'x'; 10_000] }.description_len();
+        let d10 = TaskPayload::Echo { payload: vec![b'x'; 10].into() }.description_len();
+        let d10k = TaskPayload::Echo { payload: vec![b'x'; 10_000].into() }.description_len();
         assert_eq!(d10k - d10, 9_990);
+    }
+
+    #[test]
+    fn command_description_counts_separators_like_fig10() {
+        // `/bin/sleep 0` spelled as a Command must weigh exactly the
+        // paper's 12 bytes — identical to the `Sleep` constant.
+        let as_cmd = TaskPayload::Command {
+            program: "/bin/sleep".into(),
+            args: vec!["0".to_string()].into(),
+        };
+        assert_eq!(as_cmd.description_len(), 12);
+        assert_eq!(as_cmd.description_len(), TaskPayload::Sleep { secs: 0.0 }.description_len());
+        // `/bin/echo '<payload>'` spelled as a Command (quotes travel in
+        // the arg) must weigh the same as the dedicated Echo variant, for
+        // every Fig-10 payload size.
+        for n in [0usize, 10, 1_000, 10_000] {
+            let body = vec![b'x'; n];
+            let quoted = format!("'{}'", String::from_utf8(body.clone()).unwrap());
+            let as_echo = TaskPayload::Echo { payload: body.into() }.description_len();
+            let as_cmd = TaskPayload::Command {
+                program: "/bin/echo".into(),
+                args: vec![quoted].into(),
+            }
+            .description_len();
+            assert_eq!(as_cmd, as_echo, "payload {n}");
+        }
+        // No trailing separator: a bare program is just its own length.
+        let bare = TaskPayload::Command { program: "/bin/date".into(), args: Vec::new().into() };
+        assert_eq!(bare.description_len(), "/bin/date".len());
+    }
+
+    #[test]
+    fn payload_clones_share_the_body() {
+        // The Arc-backed payload contract: cloning shares, never copies.
+        let payload = TaskPayload::Echo { payload: vec![b'x'; 1 << 20].into() };
+        let clone = payload.clone();
+        match (&payload, &clone) {
+            (TaskPayload::Echo { payload: a }, TaskPayload::Echo { payload: b }) => {
+                assert!(std::sync::Arc::ptr_eq(a, b), "clone must share the buffer");
+            }
+            _ => unreachable!(),
+        }
     }
 }

@@ -8,7 +8,7 @@
 //! The same policy object drives both the simulator (cost accounting) and
 //! live executors (real staging decisions).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 
 /// Identifies a cacheable object (e.g. "dock5.bin", "static/params.dat").
 pub type ObjectKey = String;
@@ -93,13 +93,27 @@ impl CacheManager {
 
     /// Plan staging for a task on `node` that needs `objects`.
     /// Records hits/misses; the caller performs the fetches and then calls
-    /// [`CacheManager::commit`] for each fetched object.
+    /// [`CacheManager::commit`] for each fetched object. Thin adapter
+    /// over [`CacheManager::plan_refs`] (one source of truth for the
+    /// accounting); the ref-slice build is fine off the hot path.
     pub fn plan(&mut self, node: usize, objects: &[(ObjectKey, u64)]) -> StagePlan {
+        let refs: Vec<(&str, u64)> = objects.iter().map(|(k, b)| (k.as_str(), *b)).collect();
+        self.plan_refs(node, &refs)
+    }
+
+    /// [`CacheManager::plan`] over *borrowed* keys — the simulator's
+    /// per-stage-in path, where object lists are `(&'static str, u64)`
+    /// slices. In the steady state (everything resident) it performs
+    /// zero heap allocations: owned `String` keys are built only for
+    /// the fetch list, i.e. per *miss*, never per hit. The within-task
+    /// dedup is a prefix scan rather than a `HashSet` — task working
+    /// sets are a handful of objects, and a set would allocate on every
+    /// call.
+    pub fn plan_refs(&mut self, node: usize, objects: &[(&str, u64)]) -> StagePlan {
         let cache = &self.nodes[node];
         let mut plan = StagePlan { fetch: Vec::new(), hit_bytes: 0 };
-        let mut seen: HashSet<&str> = HashSet::new();
-        for (key, bytes) in objects {
-            if !seen.insert(key.as_str()) {
+        for (i, &(key, bytes)) in objects.iter().enumerate() {
+            if objects[..i].iter().any(|&(k, _)| k == key) {
                 continue; // duplicate request within one task
             }
             if cache.resident.contains_key(key) {
@@ -107,7 +121,7 @@ impl CacheManager {
                 plan.hit_bytes += bytes;
             } else {
                 self.misses += 1;
-                plan.fetch.push((key.clone(), *bytes));
+                plan.fetch.push((key.to_string(), bytes));
             }
         }
         plan
@@ -207,6 +221,29 @@ mod tests {
         assert!(plan2.fetch.is_empty());
         assert_eq!(plan2.hit_bytes, 40_000_000);
         assert!((cm.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_refs_matches_plan() {
+        // The borrowed-key path must produce identical plans and
+        // hit/miss accounting, including within-task dedup.
+        let objs_owned =
+            [keyed("a", 100), keyed("b", 200), keyed("a", 100), keyed("c", 300)];
+        let objs_refs = [("a", 100u64), ("b", 200), ("a", 100), ("c", 300)];
+        let mut cm_owned = CacheManager::new(1, 1 << 30, 1 << 20);
+        let mut cm_refs = CacheManager::new(1, 1 << 30, 1 << 20);
+        cm_owned.commit(0, "b".into(), 200).unwrap();
+        cm_refs.commit(0, "b".into(), 200).unwrap();
+        let p_owned = cm_owned.plan(0, &objs_owned);
+        let p_refs = cm_refs.plan_refs(0, &objs_refs);
+        assert_eq!(p_refs, p_owned);
+        assert_eq!(p_refs.hit_bytes, 200);
+        assert_eq!(
+            p_refs.fetch,
+            vec![keyed("a", 100), keyed("c", 300)],
+            "dedup keeps first occurrence only"
+        );
+        assert_eq!(cm_refs.hit_rate(), cm_owned.hit_rate());
     }
 
     #[test]

@@ -70,16 +70,24 @@ https://service:50001/wsrf/services/NotificationConsumerService\
 <soapenv:Body><falkon:message><falkon:content encoding=\"base64\">";
 const SOAP_POST: &str = "</falkon:content></falkon:message></soapenv:Body></soapenv:Envelope>";
 
+/// Append the WS/SOAP envelope of an already-encoded binary body to
+/// `out` — the codec's wrapping step, separated from body encoding so
+/// callers holding *borrowed* body bytes (the zero-copy dispatch path)
+/// can frame them without building a `Msg`.
+pub fn wrap_ws_body(body: &[u8], out: &mut Vec<u8>) {
+    out.reserve(SOAP_PRE.len() + body.len().div_ceil(3) * 4 + SOAP_POST.len());
+    out.extend_from_slice(SOAP_PRE.as_bytes());
+    base64_encode_append(body, out);
+    out.extend_from_slice(SOAP_POST.as_bytes());
+}
+
 impl Codec for WsCodec {
     fn encode_into(&self, msg: &Msg, out: &mut Vec<u8>) {
         // The binary body still allocates once (the envelope is the WS
         // path's dominant cost anyway); the base64 expansion appends
         // straight into the caller's buffer.
         let body = msg.encode();
-        out.reserve(SOAP_PRE.len() + body.len().div_ceil(3) * 4 + SOAP_POST.len());
-        out.extend_from_slice(SOAP_PRE.as_bytes());
-        base64_encode_append(&body, out);
-        out.extend_from_slice(SOAP_POST.as_bytes());
+        wrap_ws_body(&body, out);
     }
 
     fn decode(&self, buf: &[u8]) -> Result<Msg, DecodeError> {
@@ -108,10 +116,11 @@ pub fn bytes_per_task(codec: &dyn Codec, desc_len: usize, bundle: usize) -> f64 
     use crate::falkon::task::TaskPayload;
     use crate::net::proto::WireTask;
     let bundle = bundle.max(1);
+    let body: std::sync::Arc<[u8]> = vec![b'x'; desc_len].into();
     let tasks: Vec<WireTask> = (0..bundle)
         .map(|i| WireTask {
             id: i as u64,
-            payload: TaskPayload::Echo { payload: vec![b'x'; desc_len] },
+            payload: TaskPayload::Echo { payload: body.clone() },
         })
         .collect();
     let dispatch = codec.encode(&Msg::Dispatch { shard: 0, tasks }).len() as f64 / bundle as f64;

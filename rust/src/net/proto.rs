@@ -18,6 +18,31 @@ pub struct WireTask {
     pub payload: TaskPayload,
 }
 
+/// A borrowed view of a task about to travel on the wire — the zero-copy
+/// twin of [`WireTask`]. Dispatchers plan task *ids*, then encode bundles
+/// straight from the queue's slab records via
+/// [`encode_dispatch_into`]: the payload body is never cloned between
+/// submission and the socket.
+#[derive(Clone, Copy, Debug)]
+pub struct WireTaskRef<'a> {
+    pub id: TaskId,
+    pub payload: &'a TaskPayload,
+}
+
+/// Append the exact bytes of `Msg::Dispatch { shard, tasks }` to `out`,
+/// encoding from *borrowed* task refs (the allocation-free dispatch hot
+/// path; byte-identical to the owned encoding by construction — the
+/// owned `Msg::Dispatch` arm delegates to the same body writer). Does
+/// not clear `out`.
+pub fn encode_dispatch_into<'a, I>(shard: u32, tasks: I, out: &mut Vec<u8>)
+where
+    I: ExactSizeIterator<Item = WireTaskRef<'a>>,
+{
+    let mut w = Writer { buf: std::mem::take(out) };
+    write_dispatch_body(&mut w, shard, tasks);
+    *out = w.buf;
+}
+
 /// One task completion as it travels on the wire — the unit of
 /// [`Msg::ResultBatch`]. Field-for-field the payload of [`Msg::Result`];
 /// batching changes the framing, not the information.
@@ -177,6 +202,23 @@ impl<'a> Reader<'a> {
 
 // ------------------------------------------------------- payload encoding
 
+/// The single encoding site for the `Dispatch` wire layout (tag 2):
+/// both the owned `Msg::Dispatch` arm and the borrowed
+/// [`encode_dispatch_into`] hot path write through here, so the two can
+/// never drift.
+fn write_dispatch_body<'a, I>(w: &mut Writer, shard: u32, tasks: I)
+where
+    I: ExactSizeIterator<Item = WireTaskRef<'a>>,
+{
+    w.u8(2);
+    w.u32(shard);
+    w.u32(tasks.len() as u32);
+    for t in tasks {
+        w.u64(t.id);
+        encode_payload(w, t.payload);
+    }
+}
+
 fn encode_payload(w: &mut Writer, p: &TaskPayload) {
     match p {
         TaskPayload::Sleep { secs } => {
@@ -191,7 +233,7 @@ fn encode_payload(w: &mut Writer, p: &TaskPayload) {
             w.u8(2);
             w.str(program);
             w.u32(args.len() as u32);
-            for a in args {
+            for a in args.iter() {
                 w.str(a);
             }
         }
@@ -208,7 +250,7 @@ fn encode_payload(w: &mut Writer, p: &TaskPayload) {
             w.u64(*read_bytes);
             w.u64(*write_bytes);
             w.u32(objects.len() as u32);
-            for (k, b) in objects {
+            for (k, b) in objects.iter() {
                 w.str(k);
                 w.u64(*b);
             }
@@ -219,14 +261,21 @@ fn encode_payload(w: &mut Writer, p: &TaskPayload) {
 fn decode_payload(r: &mut Reader) -> Result<TaskPayload, DecodeError> {
     Ok(match r.u8()? {
         0 => TaskPayload::Sleep { secs: r.f64()? },
-        1 => TaskPayload::Echo { payload: r.bytes()?.to_vec() },
+        // The decode side owns its payload, so each Arc body is allocated
+        // exactly once per received task — every later clone (retry,
+        // local queue, result bookkeeping) shares it.
+        1 => TaskPayload::Echo { payload: r.bytes()?.into() },
         2 => {
-            let program = r.str()?;
+            let program = r.str()?.into();
             let n = r.u32()?;
-            let args = (0..n).map(|_| r.str()).collect::<Result<_, _>>()?;
+            let args = (0..n).map(|_| r.str()).collect::<Result<Vec<_>, _>>()?.into();
             TaskPayload::Command { program, args }
         }
-        3 => TaskPayload::Compute { artifact: r.str()?, reps: r.u32()?, arg: [r.f64()?, r.f64()?] },
+        3 => TaskPayload::Compute {
+            artifact: r.str()?.into(),
+            reps: r.u32()?,
+            arg: [r.f64()?, r.f64()?],
+        },
         4 => {
             let exec_secs = r.f64()?;
             let read_bytes = r.u64()?;
@@ -234,7 +283,8 @@ fn decode_payload(r: &mut Reader) -> Result<TaskPayload, DecodeError> {
             let n = r.u32()?;
             let objects = (0..n)
                 .map(|_| Ok::<_, DecodeError>((r.str()?, r.u64()?)))
-                .collect::<Result<_, _>>()?;
+                .collect::<Result<Vec<_>, _>>()?
+                .into();
             TaskPayload::SimApp { exec_secs, read_bytes, write_bytes, objects }
         }
         t => return Err(DecodeError::BadTag(t)),
@@ -300,13 +350,8 @@ impl Msg {
                 w.u32(*slots);
             }
             Msg::Dispatch { shard, tasks } => {
-                w.u8(2);
-                w.u32(*shard);
-                w.u32(tasks.len() as u32);
-                for t in tasks {
-                    w.u64(t.id);
-                    encode_payload(w, &t.payload);
-                }
+                let refs = tasks.iter().map(|t| WireTaskRef { id: t.id, payload: &t.payload });
+                write_dispatch_body(w, *shard, refs);
             }
             Msg::Result { task_id, exit_code, error } => {
                 w.u8(3);
@@ -408,37 +453,43 @@ mod tests {
         assert_eq!(Msg::decode(&enc).unwrap(), m);
     }
 
+    /// One of every payload variant (each Arc-backed arm exercised).
+    fn sample_tasks() -> Vec<WireTask> {
+        vec![
+            WireTask { id: 1, payload: TaskPayload::Sleep { secs: 4.0 } },
+            WireTask { id: 2, payload: TaskPayload::Echo { payload: b"hello"[..].into() } },
+            WireTask {
+                id: 3,
+                payload: TaskPayload::Command {
+                    program: "/bin/dock5".into(),
+                    args: vec!["-i".to_string(), "lig.mol2".to_string()].into(),
+                },
+            },
+            WireTask {
+                id: 4,
+                payload: TaskPayload::Compute {
+                    artifact: "mars_batch".into(),
+                    reps: 144,
+                    arg: [0.3, 0.7],
+                },
+            },
+            WireTask {
+                id: 5,
+                payload: TaskPayload::SimApp {
+                    exec_secs: 17.3,
+                    read_bytes: 10_000,
+                    write_bytes: 20_000,
+                    objects: vec![("dock5.bin".to_string(), 5_000_000)].into(),
+                },
+            },
+        ]
+    }
+
     #[test]
     fn roundtrip_all_variants() {
         roundtrip(Msg::Register { executor_id: 7, cores: 4, partition: 3 });
         roundtrip(Msg::Ready { executor_id: 7, slots: 2 });
-        roundtrip(Msg::Dispatch {
-            shard: 5,
-            tasks: vec![
-                WireTask { id: 1, payload: TaskPayload::Sleep { secs: 4.0 } },
-                WireTask { id: 2, payload: TaskPayload::Echo { payload: b"hello".to_vec() } },
-                WireTask {
-                    id: 3,
-                    payload: TaskPayload::Command {
-                        program: "/bin/dock5".into(),
-                        args: vec!["-i".into(), "lig.mol2".into()],
-                    },
-                },
-                WireTask {
-                    id: 4,
-                    payload: TaskPayload::Compute { artifact: "mars_batch".into(), reps: 144, arg: [0.3, 0.7] },
-                },
-                WireTask {
-                    id: 5,
-                    payload: TaskPayload::SimApp {
-                        exec_secs: 17.3,
-                        read_bytes: 10_000,
-                        write_bytes: 20_000,
-                        objects: vec![("dock5.bin".into(), 5_000_000)],
-                    },
-                },
-            ],
-        });
+        roundtrip(Msg::Dispatch { shard: 5, tasks: sample_tasks() });
         roundtrip(Msg::Result { task_id: 9, exit_code: 0, error: None });
         roundtrip(Msg::Result {
             task_id: 10,
@@ -465,6 +516,31 @@ mod tests {
                 WireResult { task_id: 3, exit_code: 9, error: Some(TaskError::AppError(9)) },
             ],
         });
+    }
+
+    #[test]
+    fn borrowed_dispatch_encoding_is_byte_identical() {
+        // The allocation-free path must produce EXACTLY the bytes of the
+        // owned `Msg::Dispatch` encoding, for every payload variant, so
+        // executors cannot tell which path the service took.
+        let tasks = sample_tasks();
+        let owned = Msg::Dispatch { shard: 7, tasks: tasks.clone() }.encode();
+        let mut borrowed = Vec::new();
+        encode_dispatch_into(
+            7,
+            tasks.iter().map(|t| WireTaskRef { id: t.id, payload: &t.payload }),
+            &mut borrowed,
+        );
+        assert_eq!(borrowed, owned);
+        // Appends without clearing, like `encode_into`.
+        let mut buf = b"PREFIX".to_vec();
+        encode_dispatch_into(
+            7,
+            tasks.iter().map(|t| WireTaskRef { id: t.id, payload: &t.payload }),
+            &mut buf,
+        );
+        assert_eq!(&buf[..6], b"PREFIX");
+        assert_eq!(&buf[6..], &owned[..]);
     }
 
     #[test]

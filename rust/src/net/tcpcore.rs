@@ -65,6 +65,22 @@ fn encode_frame_into(proto: Proto, msg: &Msg, buf: &mut Vec<u8>) {
     buf[at..at + 4].copy_from_slice(&body_len.to_le_bytes());
 }
 
+/// Append one length-prefixed frame for an *already binary-encoded*
+/// message body to `buf`: TCP frames the bytes as-is, WS wraps them in
+/// its envelope. This is the tail of the zero-copy dispatch path — the
+/// body was encoded from borrowed task refs (`proto::encode_dispatch_into`)
+/// and never passes through an owned `Msg`.
+fn frame_body_into(proto: Proto, body: &[u8], buf: &mut Vec<u8>) {
+    let at = buf.len();
+    buf.extend_from_slice(&[0u8; 4]);
+    match proto {
+        Proto::Tcp => buf.extend_from_slice(body),
+        Proto::Ws => super::codec::wrap_ws_body(body, buf),
+    }
+    let body_len = (buf.len() - at - 4) as u32;
+    buf[at..at + 4].copy_from_slice(&body_len.to_le_bytes());
+}
+
 /// A framed, codec-aware message stream over TCP.
 ///
 /// The connection's codec is fixed at negotiation (statically dispatched
@@ -230,6 +246,24 @@ thread_local! {
 impl WriteHandle {
     pub fn send(&self, msg: &Msg) -> std::io::Result<()> {
         self.send_many(std::slice::from_ref(msg))
+    }
+
+    /// Send one message whose binary body the caller already encoded
+    /// (e.g. a `Dispatch` built from borrowed task refs): the body is
+    /// framed for this connection's codec in the thread-local scratch
+    /// outside the lock, then written with one locked syscall. Nothing in
+    /// this path allocates once the scratch buffers are warm.
+    pub fn send_body(&self, body: &[u8]) -> std::io::Result<()> {
+        WRITE_SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            buf.clear();
+            frame_body_into(self.proto, body, &mut buf);
+            let res = self.inner.lock().expect("write handle poisoned").write_frames(&buf);
+            if buf.capacity() > BUF_RETAIN {
+                *buf = Vec::new();
+            }
+            res
+        })
     }
 
     /// Encode all `msgs` as contiguous frames outside the lock, then
@@ -431,6 +465,37 @@ mod tests {
                 .unwrap();
             assert!(matches!(s.recv().unwrap(), Msg::ResultBatch { .. }));
             assert_eq!(s.recv().unwrap(), Msg::Ready { executor_id: 1, slots: 1 });
+        }
+    }
+
+    #[test]
+    fn send_body_matches_send_on_both_protos() {
+        // The zero-copy dispatch tail: a caller-encoded binary body sent
+        // via send_body must arrive as the same Msg a plain send of the
+        // owned message produces — on the compact codec AND under the WS
+        // envelope.
+        use crate::falkon::task::TaskPayload;
+        use crate::net::proto::{encode_dispatch_into, WireTaskRef};
+        for proto in [Proto::Tcp, Proto::Ws] {
+            let (c, mut s) = pair(proto);
+            let (_read, write) = c.split().unwrap();
+            let payload = TaskPayload::Sleep { secs: 0.0 };
+            let mut body = Vec::new();
+            encode_dispatch_into(
+                3,
+                [WireTaskRef { id: 42, payload: &payload }].into_iter(),
+                &mut body,
+            );
+            write.send_body(&body).unwrap();
+            match s.recv().unwrap() {
+                Msg::Dispatch { shard, tasks } => {
+                    assert_eq!(shard, 3);
+                    assert_eq!(tasks.len(), 1);
+                    assert_eq!(tasks[0].id, 42);
+                    assert_eq!(tasks[0].payload, payload);
+                }
+                m => panic!("unexpected {m:?}"),
+            }
         }
     }
 

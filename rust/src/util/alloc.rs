@@ -1,0 +1,49 @@
+//! Counting global allocator for allocation-rate measurements.
+//!
+//! One shared implementation backs both the allocation regression gate
+//! (`tests/alloc_gate.rs`) and the hot-path bench (`benches/
+//! bench_hotpath.rs`), so their per-task allocation numbers can never
+//! drift apart. Each binary installs it with:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static GLOBAL: falkon::util::alloc::CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! Only allocation-side calls (`alloc`, `alloc_zeroed`, `realloc`) are
+//! counted; frees are not — the measurements gate *new* heap traffic on
+//! hot paths, and a free implies a matching earlier allocation anyway.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide allocation calls observed so far (all threads). Diff two
+/// readings around a measured region; on a quiet single-threaded path
+/// the delta is exact.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// A `System` wrapper that counts allocation calls.
+pub struct CountingAlloc;
+
+// SAFETY: defers entirely to `System`; only bookkeeping is added.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

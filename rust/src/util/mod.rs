@@ -5,6 +5,7 @@
 //! `proptest`). Everything those crates would have provided is implemented
 //! here, scoped to what the rest of the crate needs.
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod config;

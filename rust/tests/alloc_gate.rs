@@ -1,0 +1,123 @@
+//! Allocation regression gate for the dispatch hot path.
+//!
+//! A counting global allocator wraps `System`; after a warmup that brings
+//! every reusable buffer (slab, free list, id index, scratch vectors,
+//! encode buffer, outcome buffer) to its steady-state capacity, the test
+//! drives the exact queue→bundle-encode path the live per-shard
+//! dispatchers run — `submit_with_id` → `dispatch_into` (ids into caller
+//! scratch) → `encode_dispatch_into` (borrowed payload refs into a reused
+//! body buffer) → `complete` → `drain_done_into` — and asserts the
+//! steady state performs **zero** heap allocations per task. A second
+//! phase asserts the same for the retry path (`fail_attempt` storms).
+//!
+//! Everything here is deliberately single-threaded and contained in ONE
+//! `#[test]` so no concurrent test pollutes the process-wide counter.
+
+use falkon::falkon::errors::{RetryPolicy, TaskError};
+use falkon::falkon::queue::TaskQueues;
+use falkon::falkon::task::TaskPayload;
+use falkon::net::proto::{encode_dispatch_into, WireTaskRef};
+use falkon::util::alloc::{alloc_count, CountingAlloc};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const BUNDLE: usize = 4;
+const WARMUP: usize = 2_000;
+const MEASURE: usize = 10_000;
+
+/// One steady-state dispatch cycle, mirroring the live dispatcher's
+/// phases: submit a bundle, plan it by id, snapshot Arc payloads (the
+/// under-lock step — refcount bumps only), encode the wire body from the
+/// snapshot (the unlocked step), complete, drain.
+fn dispatch_cycle(
+    q: &mut TaskQueues,
+    next_id: &mut u64,
+    ids: &mut Vec<u64>,
+    snapshot: &mut Vec<(u64, TaskPayload)>,
+    body: &mut Vec<u8>,
+    out: &mut Vec<falkon::falkon::queue::TaskOutcome>,
+) {
+    for _ in 0..BUNDLE {
+        q.submit_with_id(*next_id, TaskPayload::Sleep { secs: 0.0 });
+        *next_id += 1;
+    }
+    ids.clear();
+    let taken = q.dispatch_into(0, BUNDLE, ids);
+    assert_eq!(taken, BUNDLE);
+    snapshot.clear();
+    for &id in ids.iter() {
+        let t = q.task(id).expect("just dispatched");
+        snapshot.push((id, t.payload.clone()));
+    }
+    body.clear();
+    encode_dispatch_into(
+        0,
+        snapshot.iter().map(|(id, payload)| WireTaskRef { id: *id, payload }),
+        body,
+    );
+    assert!(!body.is_empty());
+    for &id in ids.iter() {
+        q.complete(id, 0);
+    }
+    out.clear();
+    q.drain_done_into(out);
+    assert_eq!(out.len(), BUNDLE);
+}
+
+/// One retry-storm cycle: the task fails with a retryable error and is
+/// re-queued; the error must move through the lifecycle without a single
+/// allocation.
+fn retry_cycle(q: &mut TaskQueues, id: u64, ids: &mut Vec<u64>, policy: &RetryPolicy) {
+    ids.clear();
+    assert_eq!(q.dispatch_into(0, 1, ids), 1);
+    assert!(q.fail_attempt(id, TaskError::CommError, policy), "must re-queue");
+}
+
+#[test]
+fn steady_state_dispatch_path_is_allocation_free() {
+    // ---- Phase 1: the queue→bundle-encode dispatch path.
+    let mut q = TaskQueues::new();
+    let mut next_id = 0u64;
+    let mut ids: Vec<u64> = Vec::with_capacity(BUNDLE);
+    let mut snapshot: Vec<(u64, TaskPayload)> = Vec::with_capacity(BUNDLE);
+    let mut body: Vec<u8> = Vec::with_capacity(256);
+    let mut out = Vec::with_capacity(BUNDLE);
+    for _ in 0..WARMUP {
+        dispatch_cycle(&mut q, &mut next_id, &mut ids, &mut snapshot, &mut body, &mut out);
+    }
+    assert!(q.conserved((WARMUP * BUNDLE) as u64));
+    let before = alloc_count();
+    for _ in 0..MEASURE {
+        dispatch_cycle(&mut q, &mut next_id, &mut ids, &mut snapshot, &mut body, &mut out);
+    }
+    let delta = alloc_count() - before;
+    assert_eq!(
+        delta,
+        0,
+        "dispatch hot path allocated {delta} times over {MEASURE} bundles \
+         ({} tasks) — the queue→bundle-encode path must be allocation-free \
+         in steady state",
+        MEASURE * BUNDLE
+    );
+
+    // ---- Phase 2: the retry path (per-attempt error bookkeeping).
+    let policy = RetryPolicy { max_attempts: u32::MAX, ..Default::default() };
+    let mut q = TaskQueues::new();
+    let id = q.submit(TaskPayload::Sleep { secs: 0.0 });
+    for _ in 0..WARMUP {
+        retry_cycle(&mut q, id, &mut ids, &policy);
+    }
+    let before = alloc_count();
+    for _ in 0..MEASURE {
+        retry_cycle(&mut q, id, &mut ids, &policy);
+    }
+    let delta = alloc_count() - before;
+    assert_eq!(
+        delta, 0,
+        "retry storm allocated {delta} times over {MEASURE} attempts — \
+         each attempt's error must be built once and moved, never cloned \
+         into fresh heap"
+    );
+    assert!(q.conserved(0));
+}

@@ -55,9 +55,10 @@ fn live_fabric_roundtrips_staged_object_to_task() {
     svc.submit(TaskPayload::Command {
         program: "/bin/sh".into(),
         args: vec![
-            "-c".into(),
+            "-c".to_string(),
             format!("grep -q 'receptor 1abc' {}", staged_path.display()),
-        ],
+        ]
+        .into(),
     });
     let outcomes = svc.wait_all(Duration::from_secs(30)).unwrap();
     assert_eq!(outcomes.len(), 1);

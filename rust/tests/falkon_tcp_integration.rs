@@ -70,14 +70,14 @@ fn echo_and_command_payloads() {
     let addr = svc.addr().to_string();
     let fleet = spawn_fleet(&addr, 2, Arc::new(DefaultRunner), 1).unwrap();
     assert!(svc.wait_executors(2, Duration::from_secs(5)));
-    svc.submit(TaskPayload::Echo { payload: vec![b'x'; 10_000] });
+    svc.submit(TaskPayload::Echo { payload: vec![b'x'; 10_000].into() });
     svc.submit(TaskPayload::Command {
         program: "/bin/sh".into(),
-        args: vec!["-c".into(), "exit 0".into()],
+        args: vec!["-c".to_string(), "exit 0".to_string()].into(),
     });
     svc.submit(TaskPayload::Command {
         program: "/bin/sh".into(),
-        args: vec!["-c".into(), "exit 7".into()],
+        args: vec!["-c".to_string(), "exit 7".to_string()].into(),
     });
     let outcomes = svc.wait_all(Duration::from_secs(30)).unwrap();
     assert_eq!(outcomes.len(), 3);

@@ -21,12 +21,12 @@ fn sample_msgs() -> Vec<Msg> {
             shard: 5,
             tasks: vec![
                 WireTask { id: 1, payload: TaskPayload::Sleep { secs: 4.0 } },
-                WireTask { id: 2, payload: TaskPayload::Echo { payload: b"hello".to_vec() } },
+                WireTask { id: 2, payload: TaskPayload::Echo { payload: b"hello"[..].into() } },
                 WireTask {
                     id: 3,
                     payload: TaskPayload::Command {
                         program: "/bin/dock5".into(),
-                        args: vec!["-i".into(), "lig.mol2".into()],
+                        args: vec!["-i".to_string(), "lig.mol2".to_string()].into(),
                     },
                 },
                 WireTask {
@@ -43,7 +43,7 @@ fn sample_msgs() -> Vec<Msg> {
                         exec_secs: 17.3,
                         read_bytes: 10_000,
                         write_bytes: 20_000,
-                        objects: vec![("dock5.bin".into(), 5_000_000)],
+                        objects: vec![("dock5.bin".to_string(), 5_000_000)].into(),
                     },
                 },
             ],

@@ -1,0 +1,156 @@
+//! Property test: the calendar-queue `Scheduler` (bucketed time wheel +
+//! sorted-overflow fallback) is observationally identical to a plain
+//! `BinaryHeap` reference model — same pop order (including tie-by-`seq`
+//! insertion order), same clamp-to-now semantics for past events, same
+//! pending counts — under randomized workloads that interleave schedule
+//! bursts and pops across every time regime the wheel distinguishes
+//! (same-bucket, cross-bucket, beyond-horizon, multi-lap gaps).
+
+use falkon::sim::engine::{Scheduler, BUCKET_NS, WHEEL_BUCKETS};
+use falkon::util::rng::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// The reference model: the exact semantics the pre-calendar engine had —
+/// a global min-heap on (at, seq) with clamp-to-now on insert.
+struct HeapModel {
+    heap: BinaryHeap<Reverse<(u64, u64, u64)>>,
+    now: u64,
+    seq: u64,
+}
+
+impl HeapModel {
+    fn new() -> HeapModel {
+        HeapModel { heap: BinaryHeap::new(), now: 0, seq: 0 }
+    }
+
+    fn at(&mut self, at: u64, ev: u64) {
+        let at = at.max(self.now);
+        self.seq += 1;
+        self.heap.push(Reverse((at, self.seq, ev)));
+    }
+
+    fn next(&mut self) -> Option<(u64, u64)> {
+        let Reverse((at, _, ev)) = self.heap.pop()?;
+        self.now = at;
+        Some((at, ev))
+    }
+
+    fn pending(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Draw a schedule time exercising a specific wheel regime.
+fn draw_time(rng: &mut Rng, now: u64) -> u64 {
+    let horizon = WHEEL_BUCKETS as u64 * BUCKET_NS;
+    match rng.below(6) {
+        // Same instant / same bucket (tie and near-tie pressure).
+        0 => now + rng.below(BUCKET_NS),
+        // Within the wheel.
+        1 => now + rng.below(horizon),
+        // Just straddling the horizon boundary.
+        2 => now + horizon - BUCKET_NS + rng.below(4 * BUCKET_NS),
+        // Deep overflow (promotion pressure, multi-lap gaps).
+        3 => now + horizon * rng.range(1, 50),
+        // Deliberately in the past (must clamp to now).
+        4 => now.saturating_sub(rng.below(horizon)),
+        // Exactly now.
+        _ => now,
+    }
+}
+
+#[test]
+fn calendar_scheduler_matches_heap_reference_on_random_workloads() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(0xCA1E.wrapping_add(seed));
+        let mut cal: Scheduler<u64> = Scheduler::new();
+        let mut model = HeapModel::new();
+        let mut ev = 0u64;
+        for step in 0..3_000 {
+            if rng.chance(0.55) {
+                // Schedule a burst — occasionally a same-instant storm
+                // big enough to trip the current-bucket spillover.
+                if rng.chance(0.04) {
+                    let t = draw_time(&mut rng, cal.now());
+                    for _ in 0..100 {
+                        cal.at(t, ev);
+                        model.at(t, ev);
+                        ev += 1;
+                    }
+                }
+                for _ in 0..rng.range(1, 8) {
+                    let t = draw_time(&mut rng, cal.now());
+                    cal.at(t, ev);
+                    model.at(t, ev);
+                    ev += 1;
+                }
+            } else {
+                // Pop a burst; both must agree pop-for-pop.
+                for _ in 0..rng.range(1, 8) {
+                    let got = cal.next();
+                    let want = model.next();
+                    assert_eq!(
+                        got, want,
+                        "seed {seed} step {step}: calendar diverged from heap"
+                    );
+                    if got.is_none() {
+                        break;
+                    }
+                }
+            }
+            assert_eq!(cal.pending(), model.pending(), "seed {seed} step {step}");
+            assert_eq!(cal.now(), model.now, "seed {seed} step {step}");
+        }
+        // Drain both to the end.
+        loop {
+            let got = cal.next();
+            let want = model.next();
+            assert_eq!(got, want, "seed {seed} drain");
+            if got.is_none() {
+                break;
+            }
+        }
+    }
+}
+
+#[test]
+fn calendar_scheduler_matches_heap_under_cascading_handlers() {
+    // The simulator's real usage: handlers schedule follow-up events
+    // relative to the popped time (including at exactly `now`, the
+    // TryDispatch re-arm pattern). Both queues run the same cascade.
+    for seed in 0..10u64 {
+        let mut rng_a = Rng::new(7_000 + seed);
+        let mut rng_b = Rng::new(7_000 + seed); // identical stream
+        let mut cal: Scheduler<u64> = Scheduler::new();
+        let mut model = HeapModel::new();
+        for i in 0..50 {
+            cal.at(i * 313, i);
+            model.at(i * 313, i);
+        }
+        let mut popped_cal = Vec::new();
+        let mut popped_model = Vec::new();
+        let mut budget = 20_000;
+        while budget > 0 {
+            budget -= 1;
+            let (got, want) = (cal.next(), model.next());
+            assert_eq!(got, want, "seed {seed}");
+            let (Some((t, e)), Some((tm, em))) = (got, want) else { break };
+            popped_cal.push((t, e));
+            popped_model.push((tm, em));
+            // Cascade: sometimes schedule follow-ups from the handler.
+            if e % 3 != 0 && popped_cal.len() < 5_000 {
+                for _ in 0..rng_a.below(3) {
+                    let d = draw_time(&mut rng_a, t);
+                    cal.at(d, e + 1);
+                }
+                for _ in 0..rng_b.below(3) {
+                    let d = draw_time(&mut rng_b, tm);
+                    model.at(d, em + 1);
+                }
+            }
+        }
+        assert_eq!(popped_cal, popped_model);
+        assert_eq!(cal.pending(), model.pending());
+    }
+}

@@ -98,7 +98,7 @@ fn app_failure_propagates_to_workflow() {
             if app.name == "work" {
                 TaskPayload::Command {
                     program: "/bin/sh".into(),
-                    args: vec!["-c".into(), "exit 3".into()],
+                    args: vec!["-c".to_string(), "exit 3".to_string()].into(),
                 }
             } else {
                 TaskPayload::Sleep { secs: 0.0 }
