@@ -105,6 +105,7 @@ fn main() {
                 tasks_per_node: 10,
                 idle_release_s: 60.0,
                 walltime_s: 7200.0,
+                growth: falkon::falkon::provision::GrowthPolicy::Singles,
             },
         ),
     ] {

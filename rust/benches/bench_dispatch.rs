@@ -48,6 +48,7 @@ fn live_wire_throughput(
         dispatch: DispatchConfig { bundle, data_aware: false, adaptive_cap },
         retry: Default::default(),
         hierarchy: HierarchyConfig { partitions, ..Default::default() },
+        provision: None,
     })
     .unwrap();
     let fleet = spawn_fleet_with(

@@ -82,6 +82,7 @@ fn live_row(n_exec: usize, n_tasks: usize, partitions: usize) -> (f64, f64) {
         dispatch: DispatchConfig { bundle: 1, data_aware: false, adaptive_cap: 16 },
         retry: Default::default(),
         hierarchy: HierarchyConfig { partitions, ..Default::default() },
+        provision: None,
     })
     .unwrap();
     let fleet = spawn_fleet_with(

@@ -1,0 +1,182 @@
+//! Elastic multi-level scheduling ablation (§3.2.1 + the allocation
+//! granularity/waste argument): static full-machine provisioning vs the
+//! dynamic policy under each allocation-growth strategy, on the
+//! simulated BG/P (Cobalt: PSET rounding + boot storms through the
+//! shared FS) at 1024 and 4096 nodes.
+//!
+//! Reported per row: sustained tasks/s, makespan, allocated core-hours
+//! (what the LRM charged, boot included), busy core-hours (useful work),
+//! and the queue-time CDF (p50/p90/p99) — emitted to
+//! `BENCH_provision.json`.
+//!
+//! The headline gate (also asserted here): Dynamic(exponential) reaches
+//! ≥ 90% of Static's sustained tasks/s at 4096 nodes while consuming
+//! measurably fewer allocated core-hours on a ramp-up/ramp-down
+//! workload.
+
+use falkon::falkon::errors::RetryPolicy;
+use falkon::falkon::provision::{GrowthPolicy, ProvisionPolicy};
+use falkon::falkon::simworld::{SimProvisionConfig, SimTask, World, WorldConfig};
+use falkon::sim::machine::Machine;
+use falkon::util::bench::{banner, emit_json, Table};
+use falkon::util::json::Json;
+use falkon::util::stats::percentile_sorted;
+
+fn quick() -> bool {
+    std::env::var("FALKON_BENCH_QUICK").is_ok()
+}
+
+struct RunOut {
+    tput: f64,
+    makespan_s: f64,
+    alloc_core_h: f64,
+    busy_core_h: f64,
+    q50: f64,
+    q90: f64,
+    q99: f64,
+    grants: u64,
+    expirations: u64,
+}
+
+/// One provisioned campaign: `n_tasks` sleep-`task_s` tasks on a BG/P of
+/// `psets` PSETs, all submitted at t=0 (ramp-up = allocation growth from
+/// zero, ramp-down = the drain tail releasing idle allocations).
+fn run_policy(psets: usize, n_tasks: usize, task_s: f64, policy: ProvisionPolicy) -> RunOut {
+    let machine = Machine::bgp_psets(psets);
+    let cores = machine.cores();
+    let mut cfg = WorldConfig::new(machine, cores);
+    cfg.provision = Some(SimProvisionConfig::new(policy));
+    cfg.retry = RetryPolicy { max_attempts: 20, ..Default::default() };
+    let mut w = World::new(cfg, vec![SimTask::sleep(task_s); n_tasks]);
+    w.run(u64::MAX);
+    assert_eq!(w.completed(), n_tasks, "ablation run must conserve tasks");
+    let c = w.campaign();
+    let mut q: Vec<f64> = c.records.iter().map(|r| r.queue_secs()).collect();
+    q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    RunOut {
+        tput: c.throughput(),
+        makespan_s: c.makespan_s(),
+        alloc_core_h: w.allocated_core_secs() / 3600.0,
+        busy_core_h: c.busy_s() / 3600.0,
+        q50: percentile_sorted(&q, 0.50),
+        q90: percentile_sorted(&q, 0.90),
+        q99: percentile_sorted(&q, 0.99),
+        grants: w.allocations_granted(),
+        expirations: w.provision_expirations(),
+    }
+}
+
+fn policies(nodes: usize) -> Vec<(&'static str, ProvisionPolicy)> {
+    let dynamic = |growth| ProvisionPolicy::Dynamic {
+        min_nodes: 1,
+        max_nodes: nodes,
+        tasks_per_node: 4, // one requested node per 4 queued tasks (4 cores/node)
+        idle_release_s: 30.0,
+        walltime_s: 7200.0,
+        growth,
+    };
+    vec![
+        ("static", ProvisionPolicy::Static { nodes, walltime_s: 7200.0 }),
+        ("one-at-a-time", dynamic(GrowthPolicy::OneAtATime)),
+        ("additive-64", dynamic(GrowthPolicy::Additive { chunk: 64 })),
+        ("exponential", dynamic(GrowthPolicy::Exponential)),
+        ("all-at-once", dynamic(GrowthPolicy::AllAtOnce)),
+    ]
+}
+
+fn main() {
+    banner("Elastic multi-level scheduling — static vs dynamic growth (BENCH_provision.json)");
+    // Sizes: (psets, nodes, tasks). Sleep-4 tasks; the 4096-node row is
+    // the acceptance configuration.
+    let sizes: Vec<(usize, usize, usize)> = if quick() {
+        vec![(16, 1024, 8_000), (64, 4096, 20_000)]
+    } else {
+        vec![(16, 1024, 16_000), (64, 4096, 50_000)]
+    };
+
+    let mut size_rows = Vec::new();
+    for (psets, nodes, n_tasks) in sizes {
+        banner(&format!("{nodes} BG/P nodes, {n_tasks} × sleep-4 tasks"));
+        let mut t = Table::new(&[
+            "policy",
+            "tasks/s",
+            "makespan",
+            "alloc core-h",
+            "busy core-h",
+            "q50 s",
+            "q90 s",
+            "q99 s",
+            "allocs",
+        ]);
+        let mut rows = Vec::new();
+        let mut by_name: std::collections::HashMap<&str, RunOut> = Default::default();
+        for (name, policy) in policies(nodes) {
+            let out = run_policy(psets, n_tasks, 4.0, policy);
+            t.row(&[
+                name.to_string(),
+                format!("{:.0}", out.tput),
+                format!("{:.0}s", out.makespan_s),
+                format!("{:.0}", out.alloc_core_h),
+                format!("{:.1}", out.busy_core_h),
+                format!("{:.1}", out.q50),
+                format!("{:.1}", out.q90),
+                format!("{:.1}", out.q99),
+                out.grants.to_string(),
+            ]);
+            let mut row = Json::obj();
+            row.set("policy", Json::Str(name.to_string()))
+                .set("tasks_per_s", Json::Num(out.tput))
+                .set("makespan_s", Json::Num(out.makespan_s))
+                .set("allocated_core_h", Json::Num(out.alloc_core_h))
+                .set("busy_core_h", Json::Num(out.busy_core_h))
+                .set("queue_p50_s", Json::Num(out.q50))
+                .set("queue_p90_s", Json::Num(out.q90))
+                .set("queue_p99_s", Json::Num(out.q99))
+                .set("allocations", Json::Num(out.grants as f64))
+                .set("expirations", Json::Num(out.expirations as f64));
+            rows.push(row);
+            by_name.insert(name, out);
+        }
+        t.print();
+
+        // Every dynamic policy must beat static on allocated core-hours
+        // (the boot storm alone makes the full up-front allocation pay
+        // for hundreds of idle seconds on 4096 nodes).
+        let st = &by_name["static"];
+        let exp = &by_name["exponential"];
+        println!(
+            "exponential vs static: {:.2}x tasks/s at {:.2}x allocated core-hours",
+            exp.tput / st.tput,
+            exp.alloc_core_h / st.alloc_core_h
+        );
+        if nodes == 4096 {
+            assert!(
+                exp.tput >= 0.9 * st.tput,
+                "Dynamic(exponential) must reach >= 90% of Static tasks/s: {:.0} vs {:.0}",
+                exp.tput,
+                st.tput
+            );
+            assert!(
+                exp.alloc_core_h < 0.9 * st.alloc_core_h,
+                "Dynamic(exponential) must consume measurably fewer core-hours: {:.0} vs {:.0}",
+                exp.alloc_core_h,
+                st.alloc_core_h
+            );
+        }
+
+        let mut size_row = Json::obj();
+        size_row
+            .set("nodes", Json::Num(nodes as f64))
+            .set("tasks", Json::Num(n_tasks as f64))
+            .set("task_s", Json::Num(4.0))
+            .set("rows", Json::Arr(rows));
+        size_rows.push(size_row);
+    }
+
+    let mut summary = Json::obj();
+    summary
+        .set("machine", Json::Str("bgp-cobalt".into()))
+        .set("workload", Json::Str("sleep-4, all submitted at t=0".into()))
+        .set("sizes", Json::Arr(size_rows));
+    emit_json("provision", &summary).expect("write BENCH_provision.json");
+}

@@ -42,6 +42,18 @@ impl HierarchyConfig {
     }
 }
 
+/// Machine partition an executor on `node` should register as: its PSET
+/// index on a PSET machine, the node itself otherwise. The service maps
+/// the partition onto a queue shard modulo the shard count, so a
+/// provisioned allocation's PSET neighbors land on the same partition
+/// dispatcher (PR-2's partition registration, fed by the provisioner).
+pub fn partition_for_node(node: usize, nodes_per_pset: Option<usize>) -> u32 {
+    match nodes_per_pset {
+        Some(npp) if npp > 0 => (node / npp) as u32,
+        _ => node as u32,
+    }
+}
+
 /// Per-shard observability counters (dispatch rate inputs, steal counts,
 /// imbalance — surfaced by `Service::shard_stats` and the dispatch bench).
 #[derive(Clone, Debug, Default, PartialEq)]

@@ -4,11 +4,51 @@
 //!
 //! The paper implements **static** provisioning on the BG/P and SiCortex
 //! (GRAM4-based dynamic provisioning didn't port); we implement static
-//! plus the dynamic policy Falkon uses elsewhere (grow with wait-queue
-//! length, release after idling), so the ablation bench can compare them.
+//! plus Falkon's dynamic policy (grow with wait-queue length, release
+//! after idling) with the full set of allocation-growth policies —
+//! one-at-a-time, additive, exponential, all-at-once — so the
+//! `bench_provision` ablation can compare them.
+//!
+//! # Accounting: requested vs granted
+//!
+//! A PSET-granularity LRM (Cobalt) rounds a 1-node request up to a whole
+//! 64-node PSET. The provisioner therefore tracks TWO currencies per
+//! allocation: what it *requested* (the policy's currency — `want`,
+//! `min_nodes`, `max_nodes` are all in requested units) and what the LRM
+//! *granted* ([`Provisioner::held_nodes`], the executor fleet's size).
+//! Growth and the idle-release floor both operate in requested units;
+//! mixing them (the pre-fix code released granted counts from a
+//! requested-unit counter) lets one release of a rounded-up grant
+//! saturate the counter and corrupt every later grow/shrink decision.
+//!
+//! Held allocations expire: every tick reclaims allocations whose
+//! walltime elapsed on the LRM clock ([`ProvisionEvent::Expired`]) so the
+//! fabric can kill their executors and bounce in-flight tasks through the
+//! ordinary retry path before dispatching into the void.
 
 use crate::lrm::{AllocId, AllocReady, AllocRequest, Lrm};
-use crate::sim::engine::{to_secs, Time};
+use crate::sim::engine::{secs, to_secs, Time};
+use std::collections::BTreeMap;
+
+/// How a [`ProvisionPolicy::Dynamic`] provisioner covers the gap between
+/// the nodes it wants and the nodes it has requested (Falkon's
+/// allocation-growth policies; requested units, before LRM rounding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GrowthPolicy {
+    /// Cover the whole deficit with single-node allocations in one tick
+    /// (GRAM4-style: each node individually releasable; a PSET LRM rounds
+    /// every one up — the paper's waste argument at its worst).
+    Singles,
+    /// One single-node allocation per tick.
+    OneAtATime,
+    /// One allocation of at most `chunk` nodes per tick.
+    Additive { chunk: usize },
+    /// One allocation per tick, doubling in size (1, 2, 4, …) while the
+    /// deficit persists; the ladder resets once demand is met.
+    Exponential,
+    /// One allocation covering the entire current deficit.
+    AllAtOnce,
+}
 
 /// Provisioning policy.
 #[derive(Clone, Debug)]
@@ -16,14 +56,16 @@ pub enum ProvisionPolicy {
     /// One up-front allocation of `nodes` for `walltime_s` (paper §3.2.1).
     Static { nodes: usize, walltime_s: f64 },
     /// Grow/shrink with load: keep at least one node per
-    /// `tasks_per_node` queued tasks (bounded by `min_nodes..=max_nodes`);
-    /// release allocations idle longer than `idle_release_s`.
+    /// `tasks_per_node` queued tasks (bounded by `min_nodes..=max_nodes`,
+    /// all in requested units); release allocations idle longer than
+    /// `idle_release_s`.
     Dynamic {
         min_nodes: usize,
         max_nodes: usize,
         tasks_per_node: usize,
         idle_release_s: f64,
         walltime_s: f64,
+        growth: GrowthPolicy,
     },
 }
 
@@ -36,21 +78,47 @@ pub enum ProvisionEvent {
     Ready(AllocReady),
     /// Released an allocation (its nodes' executors must stop).
     Released { alloc: AllocId, nodes: Vec<usize> },
+    /// An allocation's walltime elapsed: the LRM killed it. Its
+    /// executors are gone; in-flight tasks must bounce through retry.
+    Expired { alloc: AllocId, nodes: Vec<usize> },
+}
+
+/// Per-node busy view a tick can consume: the caller's global flag, or a
+/// per-node bitmap so each *allocation* ages its own idle clock.
+#[derive(Clone, Copy)]
+enum BusyView<'a> {
+    All(bool),
+    PerNode(&'a [bool]),
 }
 
 struct Held {
     nodes: Vec<usize>,
+    /// Nodes *requested* from the LRM for this allocation (pre-rounding
+    /// — the policy currency; `nodes.len()` is the granted currency).
+    requested: usize,
+    cores: usize,
+    /// When the LRM started charging for this allocation (boot start):
+    /// the nodes left the free pool here, so consumption counts from it.
+    charge_from: Time,
     /// Last time the allocation had work.
     last_busy: Time,
 }
 
-/// The provisioner. Drive with [`Provisioner::tick`].
+/// The provisioner. Drive with [`Provisioner::tick`] (or
+/// [`Provisioner::tick_nodes`] for per-allocation idle tracking).
 pub struct Provisioner<L: Lrm> {
     policy: ProvisionPolicy,
     lrm: L,
-    requested_nodes: usize,
-    held: std::collections::BTreeMap<AllocId, Held>,
+    /// Requested node count per in-flight (queued or booting) allocation.
+    pending: BTreeMap<AllocId, usize>,
+    held: BTreeMap<AllocId, Held>,
     static_submitted: bool,
+    /// Doubling ladder for [`GrowthPolicy::Exponential`].
+    next_exp: usize,
+    /// Core-seconds consumed by allocations already released/expired.
+    consumed: f64,
+    /// Walltime expirations observed so far.
+    expirations: u64,
 }
 
 impl<L: Lrm> Provisioner<L> {
@@ -58,9 +126,12 @@ impl<L: Lrm> Provisioner<L> {
         Provisioner {
             policy,
             lrm,
-            requested_nodes: 0,
-            held: Default::default(),
+            pending: BTreeMap::new(),
+            held: BTreeMap::new(),
             static_submitted: false,
+            next_exp: 1,
+            consumed: 0.0,
+            expirations: 0,
         }
     }
 
@@ -68,9 +139,38 @@ impl<L: Lrm> Provisioner<L> {
         &self.lrm
     }
 
-    /// Nodes currently held (ready allocations only).
+    /// Nodes currently held (ready allocations only), in granted units.
     pub fn held_nodes(&self) -> usize {
         self.held.values().map(|h| h.nodes.len()).sum()
+    }
+
+    /// Nodes requested from the LRM (pre-rounding) across pending and
+    /// held allocations — the currency `min_nodes`/`max_nodes` bound.
+    pub fn requested_nodes(&self) -> usize {
+        self.pending.values().sum::<usize>()
+            + self.held.values().map(|h| h.requested).sum::<usize>()
+    }
+
+    /// Ready allocations currently held.
+    pub fn allocations(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Walltime expirations observed so far.
+    pub fn expirations(&self) -> u64 {
+        self.expirations
+    }
+
+    /// Core-seconds the fleet has consumed through `now`: everything the
+    /// LRM charged for — boot included — over released, expired, and
+    /// still-held allocations (the ablation's "allocated core-hours").
+    pub fn consumed_core_secs(&self, now: Time) -> f64 {
+        self.consumed
+            + self
+                .held
+                .values()
+                .map(|h| h.cores as f64 * to_secs(now.saturating_sub(h.charge_from)))
+                .sum::<f64>()
     }
 
     /// Earliest LRM event (boot completion) to schedule a wakeup for.
@@ -78,33 +178,124 @@ impl<L: Lrm> Provisioner<L> {
         self.lrm.next_event()
     }
 
+    /// Earliest walltime kill among held allocations.
+    pub fn next_expiry(&self) -> Option<Time> {
+        self.lrm.next_expiry()
+    }
+
+    /// True when this provisioner can never produce capacity again:
+    /// nothing held, nothing in flight, and the policy will never submit
+    /// another request — a Static allocation already spent (released or
+    /// walltime-expired), or a Dynamic policy clamped to zero nodes.
+    /// Drivers use this to stop ticking (and let stranded work fail)
+    /// instead of spinning forever against a dead fleet.
+    pub fn exhausted(&self) -> bool {
+        if !self.held.is_empty() || !self.pending.is_empty() {
+            return false;
+        }
+        match &self.policy {
+            ProvisionPolicy::Static { .. } => self.static_submitted,
+            ProvisionPolicy::Dynamic { max_nodes, .. } => *max_nodes == 0,
+        }
+    }
+
+    /// Collect allocations that finished booting into `held`.
+    fn collect_ready(&mut self, now: Time, events: &mut Vec<ProvisionEvent>) {
+        for ready in self.lrm.advance(now) {
+            let requested = self.pending.remove(&ready.id).unwrap_or(ready.nodes.len());
+            self.held.insert(
+                ready.id,
+                Held {
+                    nodes: ready.nodes.clone(),
+                    requested,
+                    cores: ready.cores,
+                    charge_from: ready.ready_at.saturating_sub(secs(ready.boot_s)),
+                    last_busy: now,
+                },
+            );
+            events.push(ProvisionEvent::Ready(ready));
+        }
+    }
+
+    /// Remove `id` from `held`, settle its consumption, and release it at
+    /// the LRM. Returns its nodes.
+    fn settle_and_release(&mut self, now: Time, id: AllocId) -> Vec<usize> {
+        let held = self.held.remove(&id).expect("held allocation");
+        self.consumed += held.cores as f64 * to_secs(now.saturating_sub(held.charge_from));
+        self.lrm.release(now, id);
+        held.nodes
+    }
+
     /// Advance provisioning logic.
     ///
     /// * `queue_len` — tasks waiting at the Falkon service;
-    /// * `busy` — true if any executor is currently running a task.
+    /// * `busy` — true if any executor is currently running a task (the
+    ///   coarse view: every held allocation's idle clock refreshes
+    ///   together; use [`Provisioner::tick_nodes`] for per-allocation
+    ///   idle tracking).
     pub fn tick(&mut self, now: Time, queue_len: usize, busy: bool) -> Vec<ProvisionEvent> {
+        self.tick_inner(now, queue_len, BusyView::All(busy))
+    }
+
+    /// [`Provisioner::tick`] with a per-node busy bitmap: an allocation
+    /// counts as busy only while one of *its* nodes has work, so drained
+    /// allocations idle-age (and release) while others keep working.
+    /// Nodes beyond the slice are treated as idle.
+    pub fn tick_nodes(
+        &mut self,
+        now: Time,
+        queue_len: usize,
+        node_busy: &[bool],
+    ) -> Vec<ProvisionEvent> {
+        self.tick_inner(now, queue_len, BusyView::PerNode(node_busy))
+    }
+
+    fn tick_inner(
+        &mut self,
+        now: Time,
+        queue_len: usize,
+        busy: BusyView<'_>,
+    ) -> Vec<ProvisionEvent> {
         let mut events = Vec::new();
 
         // 1. Collect allocations that finished booting.
-        for ready in self.lrm.advance(now) {
-            self.held.insert(ready.id, Held { nodes: ready.nodes.clone(), last_busy: now });
-            events.push(ProvisionEvent::Ready(ready));
+        self.collect_ready(now, &mut events);
+
+        // 2. Walltime expiry on the LRM clock: the LRM kills these; we
+        //    reclaim them so the fabric can bounce their tasks.
+        for id in self.lrm.expired(now) {
+            if self.held.contains_key(&id) {
+                let nodes = self.settle_and_release(now, id);
+                self.expirations += 1;
+                events.push(ProvisionEvent::Expired { alloc: id, nodes });
+            }
         }
 
-        // 2. Policy-specific growth / shrink.
+        // 3. Refresh per-allocation idle clocks. Queued demand keeps
+        //    every allocation warm (it is about to get work); otherwise
+        //    an allocation stays warm only while its own nodes do.
+        for h in self.held.values_mut() {
+            let alloc_busy = queue_len > 0
+                || match busy {
+                    BusyView::All(b) => b,
+                    BusyView::PerNode(bits) => h
+                        .nodes
+                        .iter()
+                        .any(|&n| bits.get(n).copied().unwrap_or(false)),
+                };
+            if alloc_busy {
+                h.last_busy = now;
+            }
+        }
+
+        // 4. Policy-specific growth / shrink.
         match self.policy.clone() {
             ProvisionPolicy::Static { nodes, walltime_s } => {
                 if !self.static_submitted {
                     self.static_submitted = true;
                     let alloc = self.lrm.submit(now, AllocRequest { nodes, walltime_s });
-                    self.requested_nodes += nodes;
+                    self.pending.insert(alloc, nodes);
                     events.push(ProvisionEvent::Requested { alloc, nodes });
-                    // Grants may be immediate (SLURM): collect them.
-                    for ready in self.lrm.advance(now) {
-                        self.held
-                            .insert(ready.id, Held { nodes: ready.nodes.clone(), last_busy: now });
-                        events.push(ProvisionEvent::Ready(ready));
-                    }
                 }
             }
             ProvisionPolicy::Dynamic {
@@ -113,65 +304,80 @@ impl<L: Lrm> Provisioner<L> {
                 tasks_per_node,
                 idle_release_s,
                 walltime_s,
+                growth,
             } => {
+                let mut requested = self.requested_nodes();
                 let want = (queue_len.div_ceil(tasks_per_node.max(1)))
                     .clamp(min_nodes, max_nodes);
-                if want > self.requested_nodes {
-                    // Grow with single-node allocations so they are
-                    // individually releasable (as Falkon's GRAM4-based
-                    // provisioning does); a PSET-granularity LRM rounds
-                    // each one up, which is exactly the paper's waste
-                    // argument the ablation bench quantifies.
-                    let grow = want - self.requested_nodes;
-                    for _ in 0..grow {
-                        let alloc = self.lrm.submit(now, AllocRequest { nodes: 1, walltime_s });
-                        self.requested_nodes += 1;
-                        events.push(ProvisionEvent::Requested { alloc, nodes: 1 });
-                    }
-                    for ready in self.lrm.advance(now) {
-                        self.held
-                            .insert(ready.id, Held { nodes: ready.nodes.clone(), last_busy: now });
-                        events.push(ProvisionEvent::Ready(ready));
-                    }
-                }
-                // Track busyness; release idle allocations beyond the floor.
-                if busy || queue_len > 0 {
-                    for h in self.held.values_mut() {
-                        h.last_busy = now;
-                    }
-                } else {
-                    let idle_ids: Vec<AllocId> = self
-                        .held
-                        .iter()
-                        .filter(|(_, h)| to_secs(now - h.last_busy) >= idle_release_s)
-                        .map(|(id, _)| *id)
-                        .collect();
-                    for id in idle_ids {
-                        let size = self.held.get(&id).map(|h| h.nodes.len()).unwrap_or(0);
-                        if self.held_nodes().saturating_sub(size) < min_nodes {
-                            continue; // releasing this one would break the floor
+                if want > requested {
+                    let deficit = want - requested;
+                    // Sizes (requested units) to submit this tick.
+                    let mut submit_one = |p: &mut Self, k: usize| {
+                        let alloc = p.lrm.submit(now, AllocRequest { nodes: k, walltime_s });
+                        p.pending.insert(alloc, k);
+                        events.push(ProvisionEvent::Requested { alloc, nodes: k });
+                    };
+                    match growth {
+                        GrowthPolicy::Singles => {
+                            for _ in 0..deficit {
+                                submit_one(self, 1);
+                            }
                         }
-                        let held = self.held.remove(&id).unwrap();
-                        self.requested_nodes = self.requested_nodes.saturating_sub(held.nodes.len());
-                        self.lrm.release(now, id);
-                        events.push(ProvisionEvent::Released { alloc: id, nodes: held.nodes });
+                        GrowthPolicy::OneAtATime => submit_one(self, 1),
+                        GrowthPolicy::Additive { chunk } => {
+                            submit_one(self, deficit.min(chunk.max(1)))
+                        }
+                        GrowthPolicy::Exponential => {
+                            let k = deficit.min(self.next_exp.max(1));
+                            submit_one(self, k);
+                            self.next_exp = (self.next_exp.max(1) * 2).min(max_nodes.max(1));
+                        }
+                        GrowthPolicy::AllAtOnce => submit_one(self, deficit),
                     }
+                    requested = self.requested_nodes();
+                } else {
+                    self.next_exp = 1;
+                }
+                // Release allocations whose own idle clock aged out, as
+                // long as the floor holds IN REQUESTED UNITS (the same
+                // currency growth clamps `want` in — a rounded-up grant
+                // must not distort the floor arithmetic).
+                let idle_ids: Vec<AllocId> = self
+                    .held
+                    .iter()
+                    .filter(|(_, h)| to_secs(now.saturating_sub(h.last_busy)) >= idle_release_s)
+                    .map(|(id, _)| *id)
+                    .collect();
+                for id in idle_ids {
+                    let req = self.held.get(&id).map(|h| h.requested).unwrap_or(0);
+                    if requested.saturating_sub(req) < min_nodes {
+                        continue; // releasing this one would break the floor
+                    }
+                    requested -= req;
+                    let nodes = self.settle_and_release(now, id);
+                    events.push(ProvisionEvent::Released { alloc: id, nodes });
                 }
             }
         }
+
+        // 5. Collect grants unlocked this tick (immediate SLURM grants,
+        //    queued requests started by a release).
+        self.collect_ready(now, &mut events);
         events
     }
 
-    /// Release everything (end of campaign).
+    /// Release everything (end of campaign), pending requests included.
     pub fn release_all(&mut self, now: Time) -> Vec<ProvisionEvent> {
         let ids: Vec<AllocId> = self.held.keys().copied().collect();
         let mut events = Vec::new();
         for id in ids {
-            let held = self.held.remove(&id).unwrap();
-            self.lrm.release(now, id);
-            events.push(ProvisionEvent::Released { alloc: id, nodes: held.nodes });
+            let nodes = self.settle_and_release(now, id);
+            events.push(ProvisionEvent::Released { alloc: id, nodes });
         }
-        self.requested_nodes = 0;
+        for (id, _) in std::mem::take(&mut self.pending) {
+            // Queued or still booting: nothing consumed, nothing to stop.
+            self.lrm.release(now, id);
+        }
         events
     }
 }
@@ -208,6 +414,11 @@ impl<L: Lrm> PartitionedProvisioner<L> {
     /// Earliest boot-completion event across partitions.
     pub fn next_event(&self) -> Option<Time> {
         self.parts.iter().filter_map(|p| p.next_event()).min()
+    }
+
+    /// Earliest walltime kill across partitions.
+    pub fn next_expiry(&self) -> Option<Time> {
+        self.parts.iter().filter_map(|p| p.next_expiry()).min()
     }
 
     /// Advance every partition with its own (queue_len, busy) load;
@@ -255,6 +466,17 @@ mod tests {
     use crate::sim::engine::SECS;
     use crate::sim::machine::Machine;
 
+    fn dynamic(min: usize, max: usize, growth: GrowthPolicy) -> ProvisionPolicy {
+        ProvisionPolicy::Dynamic {
+            min_nodes: min,
+            max_nodes: max,
+            tasks_per_node: 10,
+            idle_release_s: 30.0,
+            walltime_s: 3600.0,
+            growth,
+        }
+    }
+
     #[test]
     fn static_provisioning_on_cobalt_boots_once() {
         let mut p = Provisioner::new(
@@ -293,13 +515,7 @@ mod tests {
     #[test]
     fn dynamic_grows_with_queue() {
         let mut p = Provisioner::new(
-            ProvisionPolicy::Dynamic {
-                min_nodes: 1,
-                max_nodes: 100,
-                tasks_per_node: 10,
-                idle_release_s: 60.0,
-                walltime_s: 3600.0,
-            },
+            dynamic(1, 100, GrowthPolicy::Singles),
             Slurm::new(Machine::sicortex()),
         );
         // 500 queued tasks -> want 50 nodes (as 50 single-node allocs).
@@ -313,6 +529,7 @@ mod tests {
         // More load -> grow to max.
         p.tick(SECS, 5000, true);
         assert_eq!(p.held_nodes(), 100);
+        assert_eq!(p.requested_nodes(), 100);
     }
 
     #[test]
@@ -324,6 +541,7 @@ mod tests {
                 tasks_per_node: 1,
                 idle_release_s: 30.0,
                 walltime_s: 3600.0,
+                growth: GrowthPolicy::Singles,
             },
             Slurm::new(Machine::sicortex()),
         );
@@ -338,20 +556,238 @@ mod tests {
     }
 
     #[test]
+    fn growth_policies_ladder_shapes() {
+        // Deficit 40 against SLURM (exact grants). One tick each; compare
+        // how much each policy requests per tick.
+        let sizes = |growth: GrowthPolicy, ticks: usize| -> Vec<usize> {
+            let mut p = Provisioner::new(
+                ProvisionPolicy::Dynamic {
+                    min_nodes: 0,
+                    max_nodes: 40,
+                    tasks_per_node: 10,
+                    idle_release_s: 1e9,
+                    walltime_s: 3600.0,
+                    growth,
+                },
+                Slurm::new(Machine::sicortex()),
+            );
+            (0..ticks)
+                .map(|i| {
+                    p.tick(i as u64 * SECS, 400, true)
+                        .iter()
+                        .filter_map(|e| match e {
+                            ProvisionEvent::Requested { nodes, .. } => Some(*nodes),
+                            _ => None,
+                        })
+                        .sum()
+                })
+                .collect()
+        };
+        assert_eq!(sizes(GrowthPolicy::OneAtATime, 3), vec![1, 1, 1]);
+        assert_eq!(sizes(GrowthPolicy::Additive { chunk: 8 }, 3), vec![8, 8, 8]);
+        assert_eq!(sizes(GrowthPolicy::Exponential, 5), vec![1, 2, 4, 8, 16]);
+        assert_eq!(sizes(GrowthPolicy::AllAtOnce, 2), vec![40, 0]);
+        assert_eq!(sizes(GrowthPolicy::Singles, 2), vec![40, 0]);
+    }
+
+    #[test]
+    fn exponential_ladder_resets_once_demand_met() {
+        let mut p = Provisioner::new(
+            dynamic(0, 100, GrowthPolicy::Exponential),
+            Slurm::new(Machine::sicortex()),
+        );
+        // Grow 1, 2, 4 against persistent demand (want 7).
+        for i in 0..3 {
+            p.tick(i * SECS, 70, true);
+        }
+        assert_eq!(p.requested_nodes(), 7);
+        // Demand met -> ladder resets; new demand starts at 1 again.
+        p.tick(3 * SECS, 70, true);
+        let ev = p.tick(4 * SECS, 200, true);
+        let first: usize = ev
+            .iter()
+            .filter_map(|e| match e {
+                ProvisionEvent::Requested { nodes, .. } => Some(*nodes),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(first, 1, "ladder must restart after demand was met");
+    }
+
+    /// Satellite regression (issue 5): Cobalt rounds 1-node requests to
+    /// whole 64-node PSETs. Releasing one such allocation must subtract
+    /// the REQUESTED share (1), not the granted 64 — the old code
+    /// saturated the requested counter to zero and corrupted every later
+    /// grow/shrink decision.
+    #[test]
+    fn pset_rounding_release_keeps_requested_accounting_exact() {
+        let mut p = Provisioner::new(
+            ProvisionPolicy::Dynamic {
+                min_nodes: 1,
+                max_nodes: 100,
+                tasks_per_node: 10,
+                idle_release_s: 10.0,
+                walltime_s: 3600.0,
+                growth: GrowthPolicy::Singles,
+            },
+            Cobalt::new(Machine::bgp()),
+        );
+        // 20 queued -> want 2 -> two 1-node requests -> two 64-node PSETs.
+        p.tick(0, 20, false);
+        let boot = p.next_event().expect("booting");
+        p.tick(boot, 20, true);
+        assert_eq!(p.held_nodes(), 128, "two rounded-up PSET grants");
+        assert_eq!(p.requested_nodes(), 2, "requested stays pre-rounding");
+        // Queue drains; after the idle window ONE allocation releases
+        // (the floor keeps the other).
+        p.tick(boot + SECS, 0, false);
+        let ev = p.tick(boot + 15 * SECS, 0, false);
+        assert_eq!(
+            ev.iter().filter(|e| matches!(e, ProvisionEvent::Released { .. })).count(),
+            1
+        );
+        assert_eq!(p.held_nodes(), 64);
+        assert_eq!(p.requested_nodes(), 1, "release subtracts requested (1), not granted (64)");
+        // Re-grow: want 3 > 1 fires correctly and grows by exactly 2.
+        let ev = p.tick(boot + 16 * SECS, 30, false);
+        let grown = ev
+            .iter()
+            .filter(|e| matches!(e, ProvisionEvent::Requested { .. }))
+            .count();
+        assert_eq!(grown, 2, "growth must neither be suppressed nor run away");
+        assert_eq!(p.requested_nodes(), 3);
+    }
+
+    /// Satellite regression: held allocations expire on the LRM clock.
+    #[test]
+    fn walltime_expiry_reclaims_allocation() {
+        let mut p = Provisioner::new(
+            ProvisionPolicy::Static { nodes: 64, walltime_s: 10.0 },
+            Cobalt::new(Machine::bgp()),
+        );
+        p.tick(0, 0, false);
+        let boot = p.next_event().expect("booting");
+        p.tick(boot, 0, true);
+        assert_eq!(p.held_nodes(), 64);
+        let kill = p.next_expiry().expect("armed expiry");
+        assert_eq!(kill, boot + 10 * SECS);
+        // Still alive just before the kill, even while busy.
+        assert!(p.tick(kill - 1, 0, true).is_empty());
+        let ev = p.tick(kill + 1, 0, true);
+        assert!(
+            matches!(&ev[0], ProvisionEvent::Expired { nodes, .. } if nodes.len() == 64),
+            "{ev:?}"
+        );
+        assert_eq!(p.held_nodes(), 0);
+        assert_eq!(p.expirations(), 1);
+        assert_eq!(p.lrm().free_nodes(), 1024, "LRM reclaimed the PSET");
+    }
+
+    /// Satellite regression: the idle-release floor is checked in
+    /// requested units — the same currency growth clamps `want` in — so
+    /// a rounded-up grant can neither dodge the floor nor (via the old
+    /// saturating subtraction) trigger unbounded re-growth past
+    /// `max_nodes`.
+    #[test]
+    fn rounded_grants_never_push_requested_past_max() {
+        let mut p = Provisioner::new(
+            ProvisionPolicy::Dynamic {
+                min_nodes: 1,
+                max_nodes: 4,
+                tasks_per_node: 1,
+                idle_release_s: 5.0,
+                walltime_s: 3600.0,
+                growth: GrowthPolicy::Singles,
+            },
+            Cobalt::new(Machine::bgp()),
+        );
+        let mut now = 0u64;
+        for cycle in 0..6 {
+            // Burst of demand, then a drain long enough to idle-release.
+            let _ = p.tick(now, 100, false);
+            if let Some(t) = p.next_event() {
+                now = t;
+                let _ = p.tick(now, 100, true);
+            }
+            assert!(
+                p.requested_nodes() <= 4,
+                "cycle {cycle}: requested {} > max 4",
+                p.requested_nodes()
+            );
+            now += 20 * SECS;
+            let _ = p.tick(now, 0, false);
+            assert!(p.requested_nodes() >= 1, "floor holds in requested units");
+            assert!(p.requested_nodes() <= 4);
+            now += SECS;
+        }
+    }
+
+    #[test]
+    fn per_node_busy_view_releases_only_drained_allocations() {
+        let mut p = Provisioner::new(
+            ProvisionPolicy::Dynamic {
+                min_nodes: 0,
+                max_nodes: 10,
+                tasks_per_node: 1,
+                idle_release_s: 10.0,
+                walltime_s: 3600.0,
+                growth: GrowthPolicy::Singles,
+            },
+            Slurm::new(Machine::sicortex()),
+        );
+        let ev = p.tick(0, 2, false);
+        let nodes: Vec<usize> = ev
+            .iter()
+            .filter_map(|e| match e {
+                ProvisionEvent::Ready(r) => Some(r.nodes[0]),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nodes.len(), 2);
+        // Only the first allocation's node stays busy; the queue is empty.
+        let mut busy = vec![false; 972];
+        busy[nodes[0]] = true;
+        p.tick_nodes(5 * SECS, 0, &busy);
+        let ev = p.tick_nodes(20 * SECS, 0, &busy);
+        let released: Vec<&ProvisionEvent> = ev
+            .iter()
+            .filter(|e| matches!(e, ProvisionEvent::Released { .. }))
+            .collect();
+        assert_eq!(released.len(), 1, "only the idle allocation releases: {ev:?}");
+        assert!(
+            matches!(released[0], ProvisionEvent::Released { nodes: n, .. } if n[0] == nodes[1])
+        );
+        assert_eq!(p.held_nodes(), 1);
+    }
+
+    #[test]
+    fn consumed_core_secs_counts_boot_and_held_time() {
+        let mut p = Provisioner::new(
+            ProvisionPolicy::Static { nodes: 64, walltime_s: 3600.0 },
+            Cobalt::new(Machine::bgp()),
+        );
+        p.tick(0, 0, false);
+        let boot = p.next_event().unwrap();
+        p.tick(boot, 0, true);
+        // Consumption counts from boot START (grant), not boot end.
+        let at_ready = p.consumed_core_secs(boot);
+        let boot_s = to_secs(boot);
+        assert!((at_ready - 256.0 * boot_s).abs() < 1e-6, "{at_ready} vs {}", 256.0 * boot_s);
+        let later = boot + 100 * SECS;
+        assert!((p.consumed_core_secs(later) - 256.0 * (boot_s + 100.0)).abs() < 1e-6);
+        // Released: the clock stops.
+        p.release_all(later);
+        assert!((p.consumed_core_secs(later + 50 * SECS) - 256.0 * (boot_s + 100.0)).abs() < 1e-6);
+    }
+
+    #[test]
     fn partitioned_provisioner_scales_per_shard_load() {
         // Two partitions under dynamic policy: only the loaded shard's
         // partition grows; the idle one stays at its floor and releases.
-        let dynamic = |max: usize| ProvisionPolicy::Dynamic {
-            min_nodes: 1,
-            max_nodes: max,
-            tasks_per_node: 10,
-            idle_release_s: 30.0,
-            walltime_s: 3600.0,
+        let part = || {
+            Provisioner::new(dynamic(1, 50, GrowthPolicy::Singles), Slurm::new(Machine::sicortex()))
         };
-        let mut pp = PartitionedProvisioner::new(vec![
-            Provisioner::new(dynamic(50), Slurm::new(Machine::sicortex())),
-            Provisioner::new(dynamic(50), Slurm::new(Machine::sicortex())),
-        ]);
+        let mut pp = PartitionedProvisioner::new(vec![part(), part()]);
         assert_eq!(pp.partitions(), 2);
         // Shard 0 backed up (400 queued), shard 1 idle.
         let ev = pp.tick(0, &[(400, true), (0, false)]);
@@ -385,5 +821,20 @@ mod tests {
         assert_eq!(ev.len(), 1);
         assert_eq!(p.held_nodes(), 0);
         assert_eq!(p.lrm().free_nodes(), 972);
+    }
+
+    #[test]
+    fn release_all_cancels_pending_boots() {
+        // A static request still booting at release_all must not leak its
+        // PSETs: the LRM frees them even though the boot never completed.
+        let mut p = Provisioner::new(
+            ProvisionPolicy::Static { nodes: 256, walltime_s: 3600.0 },
+            Cobalt::new(Machine::bgp()),
+        );
+        p.tick(0, 0, false);
+        assert_eq!(p.held_nodes(), 0, "still booting");
+        p.release_all(SECS);
+        assert_eq!(p.lrm().free_nodes(), 1024);
+        assert_eq!(p.requested_nodes(), 0);
     }
 }

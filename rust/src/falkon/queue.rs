@@ -67,6 +67,11 @@ pub struct TaskQueues {
     index: HashMap<TaskId, u32>,
     /// Tasks out at executors (the executor id lives in the slot).
     pending: usize,
+    /// Pending-task count per executor — the O(#executors) busy view the
+    /// live provisioner polls every tick ([`TaskQueues::pending_nodes`]).
+    /// Counts drop to 0 but entries are never removed, so the warm
+    /// steady-state dispatch/complete path never reallocates the map.
+    pending_by_exec: HashMap<usize, u32>,
     done: Vec<TaskOutcome>,
     next_id: TaskId,
     submitted: u64,
@@ -185,7 +190,20 @@ impl TaskQueues {
             out.push(s.task.id);
             taken += 1;
         }
+        if taken > 0 {
+            *self.pending_by_exec.entry(executor).or_insert(0) += taken as u32;
+        }
         taken
+    }
+
+    /// Decrement the per-executor pending counter for a task leaving the
+    /// pending state.
+    fn pending_exec_done(&mut self, executor: Option<usize>) {
+        if let Some(e) = executor {
+            if let Some(n) = self.pending_by_exec.get_mut(&e) {
+                *n = n.saturating_sub(1);
+            }
+        }
     }
 
     /// Pop up to `n` tasks for dispatch to `executor`, returning clones
@@ -211,6 +229,7 @@ impl TaskQueues {
         }
         let mut s = self.release_slot(slot);
         self.pending -= 1;
+        self.pending_exec_done(s.executor);
         // Executors report Running implicitly; normalize the transition.
         if s.task.state == TaskState::Dispatched {
             s.task.advance(TaskState::Running).unwrap();
@@ -252,8 +271,10 @@ impl TaskQueues {
         match crate::falkon::errors::on_failure(&error, attempts, policy) {
             crate::falkon::errors::FailureAction::Retry => {
                 let s = self.slots[slot as usize].as_mut().expect("indexed slot");
-                s.executor = None;
+                let exec = s.executor.take();
                 self.pending -= 1;
+                self.pending_exec_done(exec);
+                let s = self.slots[slot as usize].as_mut().expect("indexed slot");
                 s.task.advance(TaskState::Retrying { attempt: attempts, error }).unwrap();
                 s.task.advance(TaskState::Queued).unwrap();
                 self.waiting.push_back(slot);
@@ -262,6 +283,7 @@ impl TaskQueues {
             crate::falkon::errors::FailureAction::Fail => {
                 let mut s = self.release_slot(slot);
                 self.pending -= 1;
+                self.pending_exec_done(s.executor);
                 s.task.advance(TaskState::Failed { error, attempts }).unwrap();
                 if let TaskState::Failed { error, .. } = s.task.state {
                     self.done.push(TaskOutcome {
@@ -272,6 +294,18 @@ impl TaskQueues {
                     });
                 }
                 false
+            }
+        }
+    }
+
+    /// Visit the executor ids currently holding at least one pending
+    /// (dispatched, unfinished) task — the live provisioner's per-node
+    /// busy view. O(#executors ever seen), NOT O(tasks): the per-executor
+    /// counters are maintained on the dispatch/complete/fail paths.
+    pub fn pending_nodes(&self, mut f: impl FnMut(usize)) {
+        for (&e, &n) in &self.pending_by_exec {
+            if n > 0 {
+                f(e);
             }
         }
     }

@@ -25,17 +25,23 @@
 //! shard mutex, never after one; at most one shard mutex is held at a
 //! time (stealing locks the victim, releases it, then locks the thief).
 
-use crate::falkon::coordinator::{HierarchyConfig, ShardStat};
+use crate::falkon::coordinator::{partition_for_node, HierarchyConfig, ShardStat};
 use crate::falkon::dispatch::{
     bundle_for_depth, choose_executor_scored, choose_shard, DispatchConfig, IdleExecutor,
     ShardLoad,
 };
 use crate::falkon::errors::{NodeHealth, RetryPolicy, TaskError};
+use crate::falkon::exec::{Executor, ExecutorConfig, TaskRunner};
+use crate::falkon::provision::{ProvisionEvent, ProvisionPolicy, Provisioner};
 use crate::falkon::queue::{TaskOutcome, TaskQueues};
 use crate::falkon::task::{TaskId, TaskPayload};
 use crate::fs::cache::CacheManager;
+use crate::lrm::cobalt::Cobalt;
+use crate::lrm::slurm::Slurm;
+use crate::lrm::{AllocId, Lrm};
 use crate::net::proto::{encode_dispatch_into, Msg, WireResult, WireTaskRef};
 use crate::net::tcpcore::{Framed, Registry};
+use crate::sim::machine::Machine;
 use std::collections::{HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -51,6 +57,11 @@ pub struct ServiceConfig {
     pub retry: RetryPolicy,
     /// Dispatch hierarchy: number of partition shards and steal batch.
     pub hierarchy: HierarchyConfig,
+    /// Elastic multi-level scheduling: `Some` runs a provisioner thread
+    /// that grows/shrinks an in-process executor fleet against a mock
+    /// LRM, driven by the service's own queue depth. `None` = executors
+    /// are managed externally (the classic layout).
+    pub provision: Option<ProvisionSpec>,
 }
 
 impl Default for ServiceConfig {
@@ -60,7 +71,42 @@ impl Default for ServiceConfig {
             dispatch: DispatchConfig::default(),
             retry: RetryPolicy::default(),
             hierarchy: HierarchyConfig::default(),
+            provision: None,
         }
+    }
+}
+
+/// Live elastic provisioning (§3.2.1, both directions): a provisioner
+/// thread inside the service acquires allocations from an in-process
+/// mock LRM (the same Cobalt/SLURM simulators the sim fabric uses, run
+/// on the wall clock) and starts one [`Executor`] per granted node —
+/// registered with its machine partition so it lands on the right queue
+/// shard. Idle release and walltime expiry stop those executors; their
+/// in-flight tasks bounce through the ordinary disconnect-retry path.
+#[derive(Clone)]
+pub struct ProvisionSpec {
+    pub policy: ProvisionPolicy,
+    /// Machine the mock LRM fronts. PSET machines (`nodes_per_pset`
+    /// set) get Cobalt rounding + its boot-delay model in REAL seconds —
+    /// keep `node_boot_secs`/`boot_serial_per_node_secs` tiny (or use a
+    /// node-granularity machine) unless you want to wait.
+    pub machine: Machine,
+    /// Provisioner tick period (also the fleet start/stop latency).
+    pub tick: Duration,
+    /// Worker threads (cores) per provisioned executor.
+    pub exec_cores: u32,
+    /// Runner the provisioned executors execute payloads with.
+    pub runner: Arc<dyn TaskRunner>,
+}
+
+impl std::fmt::Debug for ProvisionSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProvisionSpec")
+            .field("policy", &self.policy)
+            .field("machine", &self.machine.name)
+            .field("tick", &self.tick)
+            .field("exec_cores", &self.exec_cores)
+            .finish_non_exhaustive()
     }
 }
 
@@ -210,6 +256,13 @@ struct Inner {
     /// Service start time: the clock `NodeHealth`'s failure window is
     /// measured on.
     epoch: Instant,
+    /// Provisioner observability (updated once per provisioner tick):
+    /// nodes currently held, nodes requested, walltime expirations, and
+    /// allocations granted so far. All zero when provisioning is off.
+    prov_held: AtomicUsize,
+    prov_requested: AtomicUsize,
+    prov_expirations: AtomicU64,
+    prov_granted: AtomicU64,
 }
 
 impl Inner {
@@ -303,6 +356,10 @@ impl Service {
             stage_gen: AtomicU64::new(0),
             steals_in_transit: AtomicUsize::new(0),
             epoch: Instant::now(),
+            prov_held: AtomicUsize::new(0),
+            prov_requested: AtomicUsize::new(0),
+            prov_expirations: AtomicU64::new(0),
+            prov_granted: AtomicU64::new(0),
         });
 
         let mut threads = Vec::new();
@@ -313,6 +370,10 @@ impl Service {
         for shard_idx in 0..n_shards {
             let inner = inner.clone();
             threads.push(std::thread::spawn(move || dispatcher_loop(inner, shard_idx)));
+        }
+        if inner.config.provision.is_some() {
+            let inner = inner.clone();
+            threads.push(std::thread::spawn(move || provisioner_loop(inner, addr)));
         }
         Ok(Service { inner, addr, threads })
     }
@@ -672,6 +733,28 @@ impl Service {
             .collect()
     }
 
+    /// Nodes the provisioner currently holds (0 when provisioning is off
+    /// or before the first grant).
+    pub fn provisioned_held(&self) -> usize {
+        self.inner.prov_held.load(Ordering::Relaxed)
+    }
+
+    /// Nodes the provisioner has requested from the mock LRM
+    /// (pre-rounding; the policy's `min_nodes`/`max_nodes` currency).
+    pub fn provisioned_requested(&self) -> usize {
+        self.inner.prov_requested.load(Ordering::Relaxed)
+    }
+
+    /// Walltime expirations the provisioner observed so far.
+    pub fn provision_expirations(&self) -> u64 {
+        self.inner.prov_expirations.load(Ordering::Relaxed)
+    }
+
+    /// Allocations the mock LRM granted so far.
+    pub fn provision_grants(&self) -> u64 {
+        self.inner.prov_granted.load(Ordering::Relaxed)
+    }
+
     /// Stage-time profile (Fig 7).
     pub fn profile(&self) -> &Profile {
         &self.inner.profile
@@ -957,6 +1040,108 @@ fn dispatcher_loop(inner: Arc<Inner>, shard_idx: usize) {
                 .expect("shard poisoned");
         }
     }
+}
+
+/// The provisioner thread: drives a [`Provisioner`] over an in-process
+/// mock LRM on the wall clock (`Time` = nanoseconds since service
+/// start), starting an executor fleet for every granted allocation and
+/// stopping fleets the policy releases or the LRM expires. Queue depth
+/// comes from the shards' lock-free hints; the per-node busy view from
+/// each shard's pending set (one lock per shard per tick).
+fn provisioner_loop(inner: Arc<Inner>, addr: std::net::SocketAddr) {
+    let spec = inner.config.provision.clone().expect("provision spec");
+    let machine = spec.machine.clone();
+    let lrm: Box<dyn Lrm> = if machine.nodes_per_pset.is_some() {
+        Box::new(Cobalt::new(machine.clone()))
+    } else {
+        Box::new(Slurm::new(machine.clone()))
+    };
+    let mut prov = Provisioner::new(spec.policy.clone(), lrm);
+    let mut fleets: HashMap<AllocId, Vec<Executor>> = HashMap::new();
+    let mut busy = vec![false; machine.nodes];
+    let addr = addr.to_string();
+    let cores = spec.exec_cores.max(1);
+
+    let stop_fleet = |fleet: Vec<Executor>| {
+        for e in fleet {
+            e.stop();
+        }
+    };
+
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let now = inner.epoch.elapsed().as_nanos() as u64;
+        let queue_len: usize =
+            inner.shards.iter().map(|s| s.queued_hint.load(Ordering::Relaxed)).sum();
+        busy.fill(false);
+        for shard in &inner.shards {
+            let st = shard.state.lock().expect("shard poisoned");
+            st.queues.pending_nodes(|node| {
+                if node < busy.len() {
+                    busy[node] = true;
+                }
+            });
+        }
+        for ev in prov.tick_nodes(now, queue_len, &busy) {
+            match ev {
+                ProvisionEvent::Requested { .. } => {}
+                ProvisionEvent::Ready(r) => {
+                    // Executor ids are node indices, so a node re-granted
+                    // right after a release reuses its id. If the OLD
+                    // connection's reader is still mid-cleanup it can
+                    // momentarily deregister the new executor ("dark"
+                    // until the next grant) and CommError-retry tasks the
+                    // new executor is running — the service's id-keyed
+                    // bookkeeping still records each task exactly once
+                    // (straggler results for retried ids are dropped).
+                    inner.prov_granted.fetch_add(1, Ordering::Relaxed);
+                    let mut execs = Vec::with_capacity(r.nodes.len());
+                    for &node in &r.nodes {
+                        let cfg = ExecutorConfig {
+                            cores,
+                            initial_credit: cores,
+                            partition: partition_for_node(node, machine.nodes_per_pset),
+                            ..ExecutorConfig::c_style(addr.clone(), node as u64)
+                        };
+                        // A node whose executor cannot connect simply
+                        // stays dark; the allocation still counts.
+                        if let Ok(e) = Executor::start(cfg, spec.runner.clone()) {
+                            execs.push(e);
+                        }
+                    }
+                    fleets.insert(r.id, execs);
+                }
+                ProvisionEvent::Released { alloc, .. } => {
+                    if let Some(f) = fleets.remove(&alloc) {
+                        stop_fleet(f);
+                    }
+                }
+                ProvisionEvent::Expired { alloc, .. } => {
+                    // The LRM killed the allocation at walltime: its
+                    // executors die NOW; in-flight tasks bounce through
+                    // the disconnect-retry path (reader_loop fails their
+                    // pending attempts with CommError).
+                    inner.prov_expirations.fetch_add(1, Ordering::Relaxed);
+                    if let Some(f) = fleets.remove(&alloc) {
+                        stop_fleet(f);
+                    }
+                }
+            }
+        }
+        inner.prov_held.store(prov.held_nodes(), Ordering::Relaxed);
+        inner.prov_requested.store(prov.requested_nodes(), Ordering::Relaxed);
+        std::thread::sleep(spec.tick.max(Duration::from_millis(1)));
+    }
+    // Shutdown: release everything and stop the fleets.
+    let now = inner.epoch.elapsed().as_nanos() as u64;
+    prov.release_all(now);
+    for (_, f) in fleets.drain() {
+        stop_fleet(f);
+    }
+    inner.prov_held.store(0, Ordering::Relaxed);
+    inner.prov_requested.store(0, Ordering::Relaxed);
 }
 
 /// Plan one (executor, bundle) assignment from shard `shard_idx` into

@@ -22,9 +22,13 @@ use crate::collective::ifs::{FlushPolicy, PartitionCollector};
 use crate::collective::tree::BroadcastTree;
 use crate::falkon::dispatch::{choose_shard, ShardLoad};
 use crate::falkon::errors::{RetryPolicy, TaskError};
+use crate::falkon::provision::{ProvisionEvent, ProvisionPolicy, Provisioner};
 use crate::fs::cache::CacheManager;
 use crate::fs::ramdisk::RamdiskModel;
 use crate::fs::shared::{FsOp, OpId, SharedFs};
+use crate::lrm::cobalt::Cobalt;
+use crate::lrm::slurm::Slurm;
+use crate::lrm::{AllocId, AllocReady, Lrm};
 use crate::metrics::{Campaign, TaskTimes};
 use crate::net::codec::{bytes_per_task, Codec, TcpCodec, WsCodec};
 use crate::sim::engine::{secs, to_secs, Scheduler, Time};
@@ -94,6 +98,45 @@ impl CollectiveConfig {
             link_bps: machine.node_link_bps,
             ifs: true,
             ifs_flush: FlushPolicy::default(),
+        }
+    }
+}
+
+/// Which LRM simulator fronts a provisioned world.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimLrmKind {
+    /// Cobalt on PSET machines (`nodes_per_pset` set), SLURM otherwise.
+    Auto,
+    Cobalt,
+    Slurm,
+}
+
+/// Elastic multi-level scheduling (§3.2.1): instead of all executors
+/// existing from t=0, a [`Provisioner`] acquires allocations from a
+/// simulated LRM and the world's executors come and go with them. Cobalt
+/// boot storms charge the shared-FS contention model (every booting node
+/// reads its kernel image); walltime expiry kills a held allocation's
+/// executors and bounces their in-flight tasks through the retry path.
+#[derive(Clone, Debug)]
+pub struct SimProvisionConfig {
+    pub policy: ProvisionPolicy,
+    pub lrm: SimLrmKind,
+    /// Provisioner tick period, virtual seconds.
+    pub tick_s: f64,
+    /// Kernel-image bytes each Cobalt-booted node reads from the shared
+    /// FS before its executors come up (0 disables the contention
+    /// charge; boot *duration* from the LRM's serialized model applies
+    /// either way).
+    pub boot_image_bytes: u64,
+}
+
+impl SimProvisionConfig {
+    pub fn new(policy: ProvisionPolicy) -> SimProvisionConfig {
+        SimProvisionConfig {
+            policy,
+            lrm: SimLrmKind::Auto,
+            tick_s: 1.0,
+            boot_image_bytes: 2 << 20, // ~2 MiB ZeptoOS kernel+ramdisk image
         }
     }
 }
@@ -182,6 +225,10 @@ pub struct WorldConfig {
     /// after it was buffered, even while longer tasks keep the core
     /// busy. Only meaningful when `result_batch >= 2`.
     pub result_window_s: f64,
+    /// Elastic multi-level scheduling: `Some` starts the world with ZERO
+    /// live executors and lets a [`Provisioner`] bring nodes up and down
+    /// through a simulated LRM. `None` = the classic always-on fleet.
+    pub provision: Option<SimProvisionConfig>,
 }
 
 impl WorldConfig {
@@ -210,6 +257,7 @@ impl WorldConfig {
             result_batch: 0,
             adaptive_bundle_cap: 0,
             result_window_s: 0.002,
+            provision: None,
         }
     }
 }
@@ -311,6 +359,10 @@ enum Stage {
     Bcast,
     /// A collector's batched write-back (write-behind: no task waits).
     IfsFlush,
+    /// A booting node's kernel-image read (provisioned mode; the carried
+    /// task index is the allocation id). The allocation's executors come
+    /// up when every node's image read completes.
+    Boot,
 }
 
 #[derive(Debug)]
@@ -321,8 +373,10 @@ enum Ev {
     Deliver { core: usize, tasks: Vec<usize> },
     /// A service->forwarder bundle reaches forwarder `fwd` (3-tier).
     FwdDeliver { fwd: usize, assignments: Vec<(usize, usize)> },
-    /// A core finished the compute phase of a task.
-    ExecDone { core: usize, task: usize },
+    /// A core finished the compute phase of a task. `epoch` pins the
+    /// core's incarnation: a task killed by decommission must not
+    /// complete on the node's next boot.
+    ExecDone { core: usize, task: usize, epoch: u32 },
     /// A result notification reaches the service.
     Result { core: usize, task: usize, error: Option<TaskError> },
     /// A batched result message (result-direction modeling on): `k`
@@ -351,6 +405,15 @@ enum Ev {
     ShardArrive { shard: usize, tasks: Vec<usize> },
     /// Hierarchical mode: shard `shard` tries to dispatch from its queue.
     ShardDispatch { shard: usize },
+    /// Provisioned mode: periodic provisioner drive (queue-depth growth,
+    /// idle release).
+    ProvisionTick,
+    /// Provisioned mode: an allocation's LRM boot completes around now —
+    /// collect it promptly instead of waiting out the tick period.
+    AllocBoot,
+    /// Provisioned mode: an allocation's walltime elapses around now —
+    /// reclaim it promptly so expired executors stop absorbing work.
+    AllocExpire,
 }
 
 #[derive(Debug, Default, Clone)]
@@ -382,6 +445,10 @@ struct CoreState {
     /// on reaching the batch cap, and lost if the node dies first).
     result_buf: Vec<usize>,
     alive: bool,
+    /// Incarnation counter: bumped when the core goes down AND when it
+    /// comes back up (provisioned mode revives cores), so in-flight
+    /// events from a previous life can never complete in the next one.
+    epoch: u32,
 }
 
 /// The simulated world. Build, [`World::run`], then read
@@ -404,8 +471,11 @@ pub struct World {
     fwd_busy_until: Vec<Time>,
     service_busy_until: Time,
     dispatch_scheduled: bool,
-    /// fs OpId -> (core, task, stage that just finished when op completes)
-    fs_ops: HashMap<OpId, (usize, usize, Stage)>,
+    /// fs OpId -> (core, task, stage that just finished when op
+    /// completes, core epoch at submission — a stale epoch means the
+    /// core went down, and possibly back up, since; the op's task was
+    /// bounced and must not complete here)
+    fs_ops: HashMap<OpId, (usize, usize, Stage, u32)>,
     /// Earliest outstanding FsWake event time (dedup: without this, every
     /// FS submit armed its own wake and the population of live wake
     /// events scaled with in-flight ops — EXPERIMENTS.md §Perf L3-2).
@@ -437,9 +507,29 @@ pub struct World {
     stolen_tasks_n: u64,
     /// Event counts by kind (TryDispatch, Deliver, ExecDone, Result,
     /// FsWake, NodeFail, FwdDeliver, BcastRecv, IfsArrive, CoordForward,
-    /// ShardArrive, ShardDispatch, ResultMsg, ResultFlush) — cheap
-    /// observability for perf work.
-    pub event_tally: [u64; 14],
+    /// ShardArrive, ShardDispatch, ResultMsg, ResultFlush,
+    /// ProvisionTick, AllocBoot, AllocExpire) — cheap observability for
+    /// perf work.
+    pub event_tally: [u64; 17],
+    /// Elastic provisioning (None = the classic always-on fleet).
+    prov: Option<Provisioner<Box<dyn Lrm>>>,
+    /// Allocations whose kernel-image boot reads are still in flight:
+    /// alloc → (nodes, outstanding reads).
+    boot_allocs: HashMap<AllocId, (Vec<usize>, u32)>,
+    /// Earliest outstanding AllocBoot / AllocExpire wakeups (dedup, same
+    /// pattern as `fs_wake_target`).
+    boot_wake_target: Option<Time>,
+    expire_wake_target: Option<Time>,
+    /// Reusable per-node busy bitmap for provisioner ticks.
+    node_busy_scratch: Vec<bool>,
+    /// Nodes killed permanently (MTBF / injected failures): a later
+    /// allocation grant must NOT revive them.
+    condemned: HashSet<usize>,
+    /// Initial dispatch credit per core (also used when a provisioned
+    /// node boots).
+    credit0: u32,
+    expirations_n: u64,
+    allocs_granted_n: u64,
 }
 
 /// One partition dispatcher in the simulated fabric: its queue shard,
@@ -493,6 +583,30 @@ impl World {
         let base_wire_bytes = bytes_per_task(codec, 12, 1);
         let n = tasks.len();
         let sharded = cfg.dispatchers > 1;
+        let provisioned = cfg.provision.is_some();
+        assert!(
+            !(provisioned && cfg.collective.is_some()),
+            "provisioned worlds do not support collective staging yet \
+             (the broadcast would target nodes that are not booted)"
+        );
+        let credit0 = cfg
+            .prefetch
+            .max(cfg.bundle as u32)
+            .max(cfg.adaptive_bundle_cap as u32)
+            .max(1);
+        let prov: Option<Provisioner<Box<dyn Lrm>>> = cfg.provision.as_ref().map(|pc| {
+            let pset = match pc.lrm {
+                SimLrmKind::Cobalt => true,
+                SimLrmKind::Slurm => false,
+                SimLrmKind::Auto => cfg.machine.nodes_per_pset.is_some(),
+            };
+            let lrm: Box<dyn Lrm> = if pset {
+                Box::new(Cobalt::new(cfg.machine.clone()))
+            } else {
+                Box::new(Slurm::new(cfg.machine.clone()))
+            };
+            Provisioner::new(pc.policy.clone(), lrm)
+        });
         // Shard geometry: contiguous node slices, aligned up to the
         // collective staging partition when one is configured so a
         // dispatch shard never splits a staging partition.
@@ -520,16 +634,15 @@ impl World {
                     // the executor beyond its free cores (the paper's
                     // executors unbundle into a local queue). Adaptive
                     // bundles need credit up to their cap to form.
-                    credit: cfg
-                        .prefetch
-                        .max(cfg.bundle as u32)
-                        .max(cfg.adaptive_bundle_cap as u32)
-                        .max(1),
+                    credit: credit0,
                     result_buf: Vec::new(),
-                    alive: true,
+                    // A provisioned world starts with NO executors: nodes
+                    // come up when the LRM grants them.
+                    alive: !provisioned,
+                    epoch: 0,
                 })
                 .collect(),
-            idle: if sharded { VecDeque::new() } else { (0..cores).collect() },
+            idle: if sharded || provisioned { VecDeque::new() } else { (0..cores).collect() },
             fwd_busy_until: vec![0; cfg.forwarders],
             service_busy_until: 0,
             dispatch_scheduled: false,
@@ -550,11 +663,20 @@ impl World {
             shard_live_cores: vec![0; n_shards],
             steal_events_n: 0,
             stolen_tasks_n: 0,
-            event_tally: [0; 14],
+            event_tally: [0; 17],
+            prov,
+            boot_allocs: HashMap::new(),
+            boot_wake_target: None,
+            expire_wake_target: None,
+            node_busy_scratch: Vec::new(),
+            condemned: HashSet::new(),
+            credit0,
+            expirations_n: 0,
+            allocs_granted_n: 0,
             tasks,
             cfg,
         };
-        if sharded {
+        if sharded && !provisioned {
             for core in 0..cores {
                 let s = w.shard_of_core(core);
                 w.shards[s].idle.push_back(core);
@@ -582,6 +704,9 @@ impl World {
         } else {
             w.sched.at(0, Ev::TryDispatch);
             w.dispatch_scheduled = true;
+        }
+        if provisioned {
+            w.sched.at(0, Ev::ProvisionTick);
         }
         w
     }
@@ -641,7 +766,7 @@ impl World {
                     };
                     let id = self.fs.submit(0, head_core, FsOp::Read { bytes: b });
                     // The "task" slot carries the object index for Bcast ops.
-                    self.fs_ops.insert(id, (head_core, obj, Stage::Bcast));
+                    self.fs_ops.insert(id, (head_core, obj, Stage::Bcast, 0));
                 }
             }
         }
@@ -701,7 +826,7 @@ impl World {
         if let Some(flush) = self.collectors[part].add(bytes) {
             let head_core = part * cc.partition_nodes * self.cfg.machine.cores_per_node;
             let op = self.fs.submit(now, head_core, FsOp::Write { bytes: flush });
-            self.fs_ops.insert(op, (head_core, usize::MAX, Stage::IfsFlush));
+            self.fs_ops.insert(op, (head_core, usize::MAX, Stage::IfsFlush, 0));
             self.arm_fs_wake();
         }
         self.stageout_write_done(now, core, task);
@@ -717,7 +842,7 @@ impl World {
             if let Some(flush) = self.collectors[part].flush() {
                 let head_core = part * cc.partition_nodes * cpn;
                 let op = self.fs.submit(now, head_core, FsOp::Write { bytes: flush });
-                self.fs_ops.insert(op, (head_core, usize::MAX, Stage::IfsFlush));
+                self.fs_ops.insert(op, (head_core, usize::MAX, Stage::IfsFlush, 0));
             }
         }
     }
@@ -1306,7 +1431,7 @@ impl World {
             self.tstate[task].stage_ops = pending.len() as u32;
             for op in pending {
                 let id = self.fs.submit(start_after, core, op);
-                self.fs_ops.insert(id, (core, task, Stage::StageIn));
+                self.fs_ops.insert(id, (core, task, Stage::StageIn, self.cores[core].epoch));
             }
             self.arm_fs_wake();
         }
@@ -1315,7 +1440,8 @@ impl World {
     fn begin_exec(&mut self, now: Time, core: usize, task: usize) {
         self.tstate[task].start_exec = now;
         let dur = self.tasks[task].exec_secs;
-        self.sched.at(now + secs(dur), Ev::ExecDone { core, task });
+        let epoch = self.cores[core].epoch;
+        self.sched.at(now + secs(dur), Ev::ExecDone { core, task, epoch });
     }
 
     fn begin_stage_out(&mut self, now: Time, core: usize, task: usize) {
@@ -1345,7 +1471,7 @@ impl World {
             self.tstate[task].stage_ops = appends; // reuse the op counter
             for _ in 0..appends {
                 let op = self.fs.submit(now, core, FsOp::Write { bytes: 1024 });
-                self.fs_ops.insert(op, (core, task, Stage::LogAppend));
+                self.fs_ops.insert(op, (core, task, Stage::LogAppend, self.cores[core].epoch));
             }
             self.arm_fs_wake();
         }
@@ -1364,14 +1490,14 @@ impl World {
             match self.cache.buffer_output(node, wb) {
                 Some(flush) => {
                     let op = self.fs.submit(now + secs(local), core, FsOp::Write { bytes: flush });
-                    self.fs_ops.insert(op, (core, task, Stage::StageOut));
+                    self.fs_ops.insert(op, (core, task, Stage::StageOut, self.cores[core].epoch));
                     self.arm_fs_wake();
                 }
                 None => self.stageout_write_done(now + secs(local), core, task),
             }
         } else {
             let op = self.fs.submit(now, core, FsOp::Write { bytes: wb });
-            self.fs_ops.insert(op, (core, task, Stage::StageOut));
+            self.fs_ops.insert(op, (core, task, Stage::StageOut, self.cores[core].epoch));
             self.arm_fs_wake();
         }
     }
@@ -1460,6 +1586,11 @@ impl World {
 
     fn handle_result(&mut self, now: Time, core: usize, task: usize, error: Option<TaskError>) {
         let shard = if self.sharded() { Some(self.shard_of_core(core)) } else { None };
+        // Error results are bounces from a core that went down — its
+        // credit died with it, and a provisioned core that came back up
+        // meanwhile already started with fresh credit. Only results from
+        // a live execution return credit below.
+        let bounced = error.is_some();
         if let Some(d) = shard {
             // One outstanding attempt ended in this shard (re-admissions
             // below go through the coordinator again).
@@ -1503,7 +1634,7 @@ impl World {
             }
         }
         // Credit returns with the result.
-        if self.cores[core].alive {
+        if !bounced && self.cores[core].alive {
             self.cores[core].credit += 1;
             if self.cores[core].credit == 1 {
                 match shard {
@@ -1518,7 +1649,19 @@ impl World {
         }
     }
 
+    /// A node fails permanently (MTBF draw / injected kill): it can never
+    /// be revived, even if a later allocation re-grants it.
     fn handle_node_fail(&mut self, now: Time, node: usize) {
+        self.condemned.insert(node);
+        self.take_node_down(now, node);
+    }
+
+    /// Take one node's cores out of service, bouncing everything they
+    /// held through the retry path. Used by permanent failures AND by
+    /// provisioning decommission (release / walltime expiry) — the
+    /// latter may bring the node back later, which is why each core's
+    /// epoch is bumped here.
+    fn take_node_down(&mut self, now: Time, node: usize) {
         let cpn = self.cfg.machine.cores_per_node;
         let first = node * cpn;
         for core in first..(first + cpn).min(self.cores.len()) {
@@ -1526,6 +1669,7 @@ impl World {
                 continue;
             }
             self.cores[core].alive = false;
+            self.cores[core].epoch = self.cores[core].epoch.wrapping_add(1);
             if self.sharded() {
                 let d = self.shard_of_core(core);
                 self.shard_live_cores[d] = self.shard_live_cores[d].saturating_sub(1);
@@ -1544,8 +1688,8 @@ impl World {
             let staging: Vec<(OpId, usize)> = self
                 .fs_ops
                 .iter()
-                .filter(|(_, (c, _, stage))| *c == core && *stage == Stage::StageIn)
-                .map(|(op, (_, t, _))| (*op, *t))
+                .filter(|(_, (c, _, stage, _))| *c == core && *stage == Stage::StageIn)
+                .map(|(op, (_, t, _, _))| (*op, *t))
                 .collect();
             let mut seen = std::collections::HashSet::new();
             for (op, t) in staging {
@@ -1577,6 +1721,153 @@ impl World {
         }
     }
 
+    // ------------------------------------------------ elastic provisioning
+
+    /// Drive the provisioner: feed it the current queue depth and a
+    /// per-node busy view, then apply whatever it decided (boot storms,
+    /// executor start/stop, expiry bounces).
+    fn drive_provisioner(&mut self, now: Time) {
+        let Some(mut prov) = self.prov.take() else { return };
+        let cpn = self.cfg.machine.cores_per_node;
+        self.node_busy_scratch.clear();
+        self.node_busy_scratch.resize(self.cfg.machine.nodes, false);
+        for (c, core) in self.cores.iter().enumerate() {
+            if core.alive
+                && (core.current.is_some()
+                    || core.staging > 0
+                    || !core.staged.is_empty()
+                    || !core.result_buf.is_empty())
+            {
+                self.node_busy_scratch[c / cpn] = true;
+            }
+        }
+        let queue_len = if self.sharded() {
+            self.coord_q.len() + self.shards.iter().map(|s| s.waiting.len()).sum::<usize>()
+        } else {
+            self.waiting.len()
+        };
+        let scratch = std::mem::take(&mut self.node_busy_scratch);
+        let events = prov.tick_nodes(now, queue_len, &scratch);
+        self.node_busy_scratch = scratch;
+        for ev in events {
+            match ev {
+                ProvisionEvent::Requested { .. } => {}
+                ProvisionEvent::Ready(r) => self.alloc_ready(now, r),
+                ProvisionEvent::Released { alloc, nodes } => self.alloc_down(now, alloc, &nodes),
+                ProvisionEvent::Expired { alloc, nodes } => {
+                    self.expirations_n += 1;
+                    self.alloc_down(now, alloc, &nodes);
+                }
+            }
+        }
+        // Arm precise wakeups for the next boot completion and the next
+        // walltime kill (deduplicated like the FS wake).
+        if let Some(t) = prov.next_event() {
+            let t = t.max(now);
+            match self.boot_wake_target {
+                Some(armed) if armed <= t => {}
+                _ => {
+                    self.boot_wake_target = Some(t);
+                    self.sched.at(t, Ev::AllocBoot);
+                }
+            }
+        }
+        if let Some(t) = prov.next_expiry() {
+            let t = t.max(now);
+            match self.expire_wake_target {
+                Some(armed) if armed <= t => {}
+                _ => {
+                    self.expire_wake_target = Some(t);
+                    self.sched.at(t, Ev::AllocExpire);
+                }
+            }
+        }
+        self.prov = Some(prov);
+    }
+
+    /// An allocation's nodes finished their LRM boot. On a Cobalt-style
+    /// machine each node then reads its kernel image from the shared FS
+    /// — the boot-storm contention charge — and the executors come up
+    /// when every image read completes; SLURM-style nodes (no boot) come
+    /// up immediately.
+    fn alloc_ready(&mut self, now: Time, r: AllocReady) {
+        self.allocs_granted_n += 1;
+        let image = self.cfg.provision.as_ref().map(|p| p.boot_image_bytes).unwrap_or(0);
+        if r.boot_s > 0.0 && image > 0 {
+            let cpn = self.cfg.machine.cores_per_node;
+            let mut reads = 0u32;
+            for &node in &r.nodes {
+                let core = node * cpn;
+                if core >= self.cores.len() {
+                    continue;
+                }
+                let id = self.fs.submit(now, core, FsOp::Read { bytes: image });
+                self.fs_ops.insert(id, (core, r.id as usize, Stage::Boot, 0));
+                reads += 1;
+            }
+            if reads > 0 {
+                self.boot_allocs.insert(r.id, (r.nodes, reads));
+                self.arm_fs_wake();
+                return;
+            }
+        }
+        self.revive_nodes(now, &r.nodes);
+    }
+
+    /// Bring an allocation's nodes into service: fresh executors with
+    /// full credit, registered with their shard. Permanently-failed
+    /// nodes stay down.
+    fn revive_nodes(&mut self, now: Time, nodes: &[usize]) {
+        let cpn = self.cfg.machine.cores_per_node;
+        for &node in nodes {
+            if self.condemned.contains(&node) {
+                continue;
+            }
+            for core in (node * cpn)..(node * cpn + cpn).min(self.cores.len()) {
+                if self.cores[core].alive {
+                    continue;
+                }
+                {
+                    let c = &mut self.cores[core];
+                    c.alive = true;
+                    c.credit = self.credit0;
+                    c.current = None;
+                    c.staging = 0;
+                    c.staged.clear();
+                    c.result_buf.clear();
+                    c.epoch = c.epoch.wrapping_add(1);
+                }
+                if self.sharded() {
+                    let d = self.shard_of_core(core);
+                    self.shards[d].idle.push_back(core);
+                    self.shard_live_cores[d] += 1;
+                } else {
+                    self.idle.push_back(core);
+                }
+            }
+        }
+        self.wake_dispatch(now);
+    }
+
+    /// An allocation went away (idle release or walltime expiry): stop
+    /// its executors and bounce whatever they held through the retry
+    /// path. A boot still in flight is simply cancelled.
+    fn alloc_down(&mut self, now: Time, alloc: AllocId, nodes: &[usize]) {
+        self.boot_allocs.remove(&alloc);
+        for &node in nodes {
+            self.take_node_down(now, node);
+        }
+    }
+
+    /// End of campaign: release every held allocation so consumption
+    /// accounting stops at the makespan.
+    fn finish_provision(&mut self) {
+        let now = self.sched.now();
+        if let Some(prov) = self.prov.as_mut() {
+            prov.release_all(now);
+        }
+    }
+
     /// Run to completion (or until `max_events`). Returns events processed.
     pub fn run(&mut self, max_events: u64) -> u64 {
         let start = self.sched.processed();
@@ -1584,6 +1875,7 @@ impl World {
             // Completion condition: all tasks terminal.
             if self.completed + self.failed == self.tasks.len() {
                 self.flush_collectors();
+                self.finish_provision();
                 break;
             }
             let Some((now, ev)) = self.sched.next() else {
@@ -1623,6 +1915,9 @@ impl World {
                 Ev::ShardDispatch { .. } => 11,
                 Ev::ResultMsg { .. } => 12,
                 Ev::ResultFlush { .. } => 13,
+                Ev::ProvisionTick => 14,
+                Ev::AllocBoot => 15,
+                Ev::AllocExpire => 16,
             }] += 1;
             match ev {
                 Ev::TryDispatch => self.try_dispatch(now),
@@ -1645,8 +1940,12 @@ impl World {
                         }
                     }
                 }
-                Ev::ExecDone { core, task } => {
-                    if self.cores[core].alive {
+                Ev::ExecDone { core, task, epoch } => {
+                    // The epoch check rejects completions from a previous
+                    // incarnation of a decommissioned-then-rebooted core:
+                    // the task was bounced at decommission and must not
+                    // ALSO complete here.
+                    if self.cores[core].alive && self.cores[core].epoch == epoch {
                         self.tstate[task].end_exec = now;
                         self.begin_stage_out(now, core, task);
                     }
@@ -1668,7 +1967,28 @@ impl World {
                         self.fs_wake_target = None;
                     }
                     for op in self.fs.advance(now) {
-                        if let Some((core, task, stage)) = self.fs_ops.remove(&op) {
+                        if let Some((core, task, stage, epoch)) = self.fs_ops.remove(&op) {
+                            if stage == Stage::Boot {
+                                // One node's kernel-image read finished;
+                                // the allocation's executors come up when
+                                // every node holds its image. A vanished
+                                // entry means the allocation was released
+                                // or expired mid-boot: ignore.
+                                let alloc = task as AllocId;
+                                let booted = match self.boot_allocs.get_mut(&alloc) {
+                                    Some((_, left)) => {
+                                        *left -= 1;
+                                        *left == 0
+                                    }
+                                    None => false,
+                                };
+                                if booted {
+                                    let (nodes, _) =
+                                        self.boot_allocs.remove(&alloc).expect("boot entry");
+                                    self.revive_nodes(now, &nodes);
+                                }
+                                continue;
+                            }
                             if stage == Stage::Bcast {
                                 // One striped head-read chunk finished; the
                                 // head holds the object when all stripes do.
@@ -1694,8 +2014,8 @@ impl World {
                             if stage == Stage::IfsFlush {
                                 continue; // write-behind: nothing waits on it
                             }
-                            if !self.cores[core].alive {
-                                continue;
+                            if !self.cores[core].alive || self.cores[core].epoch != epoch {
+                                continue; // core went down (maybe back up) since
                             }
                             match stage {
                                 Stage::StageIn => {
@@ -1715,7 +2035,7 @@ impl World {
                                         self.finish_task(now, core, task, None);
                                     }
                                 }
-                                Stage::Bcast | Stage::IfsFlush => {
+                                Stage::Bcast | Stage::IfsFlush | Stage::Boot => {
                                     unreachable!("handled before the liveness check")
                                 }
                             }
@@ -1727,6 +2047,39 @@ impl World {
                 Ev::CoordForward => self.coord_forward(now),
                 Ev::ShardArrive { shard, tasks } => self.shard_arrive(now, shard, tasks),
                 Ev::ShardDispatch { shard } => self.shard_dispatch(now, shard),
+                Ev::ProvisionTick => {
+                    self.drive_provisioner(now);
+                    // Re-arm the periodic drive while the campaign runs
+                    // (the outer loop breaks on completion before this
+                    // event could fire again) — UNLESS the provisioner
+                    // can never grant capacity again (a Static
+                    // allocation spent by walltime expiry): ticking on
+                    // would spin forever over a dead fleet. Stopping
+                    // lets the scheduler drain, and the all-nodes-dead
+                    // branch below fails the stranded tasks terminally.
+                    let dead = self.prov.as_ref().map(|p| p.exhausted()).unwrap_or(true);
+                    if !dead {
+                        let tick_s = self
+                            .cfg
+                            .provision
+                            .as_ref()
+                            .map(|p| p.tick_s.max(1e-3))
+                            .unwrap_or(1.0);
+                        self.sched.after_secs(tick_s, Ev::ProvisionTick);
+                    }
+                }
+                Ev::AllocBoot => {
+                    if self.boot_wake_target == Some(now) {
+                        self.boot_wake_target = None;
+                    }
+                    self.drive_provisioner(now);
+                }
+                Ev::AllocExpire => {
+                    if self.expire_wake_target == Some(now) {
+                        self.expire_wake_target = None;
+                    }
+                    self.drive_provisioner(now);
+                }
             }
         }
         self.sched.processed() - start
@@ -1795,6 +2148,29 @@ impl World {
     /// Cores still alive.
     pub fn live_cores(&self) -> usize {
         self.cores.iter().filter(|c| c.alive).count()
+    }
+
+    /// Walltime expirations the provisioner observed (provisioned mode).
+    pub fn provision_expirations(&self) -> u64 {
+        self.expirations_n
+    }
+
+    /// Allocations the LRM granted over the campaign (provisioned mode).
+    pub fn allocations_granted(&self) -> u64 {
+        self.allocs_granted_n
+    }
+
+    /// Nodes currently held by the provisioner (0 when unprovisioned or
+    /// after the end-of-campaign release).
+    pub fn held_nodes(&self) -> usize {
+        self.prov.as_ref().map(|p| p.held_nodes()).unwrap_or(0)
+    }
+
+    /// Core-seconds of allocation the campaign consumed (boot included),
+    /// per the provisioner's requested-vs-granted accounting — the
+    /// ablation's "allocated core-hours" numerator. 0 when unprovisioned.
+    pub fn allocated_core_secs(&self) -> f64 {
+        self.prov.as_ref().map(|p| p.consumed_core_secs(self.sched.now())).unwrap_or(0.0)
     }
 
     /// Virtual time now (campaign end after `run`).
@@ -2234,6 +2610,158 @@ mod tests {
             let mut w = World::new(cfg, vec![SimTask::sleep(1.0); 200]);
             w.run(u64::MAX);
             (w.completed(), w.failed(), w.campaign().makespan_s())
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn provisioned_static_cobalt_boots_then_serves() {
+        use crate::falkon::provision::ProvisionPolicy;
+        // One BG/P PSET via Cobalt: the world starts with ZERO executors,
+        // boots 64 nodes (LRM boot model + kernel-image reads through the
+        // shared FS), then runs the whole campaign on them.
+        let mut cfg = WorldConfig::new(Machine::bgp(), 256);
+        cfg.provision = Some(SimProvisionConfig::new(ProvisionPolicy::Static {
+            nodes: 64,
+            walltime_s: 7200.0,
+        }));
+        let mut w = World::new(cfg, vec![SimTask::sleep(1.0); 2_000]);
+        w.run(u64::MAX);
+        assert_eq!(w.completed(), 2_000);
+        assert_eq!(w.failed(), 0);
+        assert_eq!(w.allocations_granted(), 1);
+        assert_eq!(w.held_nodes(), 0, "end-of-campaign release");
+        // Makespan includes the boot phase: 64 nodes ≈ 5 + 0.12·64 s of
+        // LRM boot, plus the image reads.
+        assert!(w.campaign().makespan_s() > 12.0, "{}", w.campaign().makespan_s());
+        // Queue time of the FIRST tasks includes the boot wait.
+        assert!(w.allocated_core_secs() > 0.0);
+    }
+
+    #[test]
+    fn provisioned_dynamic_consumes_less_than_static() {
+        use crate::falkon::provision::{GrowthPolicy, ProvisionPolicy};
+        // SiCortex/SLURM (instant grants), ramp-down workload: a burst of
+        // short tasks plus a thin 30 s tail. Static holds all 972 nodes
+        // through the tail; dynamic (single-node allocations, so release
+        // granularity is per node) drains back and holds only the
+        // straggler nodes — far fewer core-hours at comparable tasks/s.
+        let mk_tasks = || {
+            let mut tasks = vec![SimTask::sleep(2.0); 4_000];
+            tasks.extend(vec![SimTask::sleep(30.0); 30]);
+            tasks
+        };
+        let run = |policy: ProvisionPolicy| {
+            let mut cfg = WorldConfig::new(Machine::sicortex(), 972 * 6);
+            cfg.provision = Some(SimProvisionConfig::new(policy));
+            let mut w = World::new(cfg, mk_tasks());
+            w.run(u64::MAX);
+            assert_eq!(w.completed(), 4_030);
+            (w.allocated_core_secs(), w.campaign().throughput())
+        };
+        let (static_core_s, static_tput) =
+            run(ProvisionPolicy::Static { nodes: 972, walltime_s: 7200.0 });
+        let (dyn_core_s, dyn_tput) = run(ProvisionPolicy::Dynamic {
+            min_nodes: 1,
+            max_nodes: 972,
+            tasks_per_node: 6,
+            idle_release_s: 5.0,
+            walltime_s: 7200.0,
+            growth: GrowthPolicy::Singles,
+        });
+        assert!(
+            dyn_core_s < 0.5 * static_core_s,
+            "dynamic {dyn_core_s:.0} vs static {static_core_s:.0} core-s"
+        );
+        assert!(
+            dyn_tput > 0.7 * static_tput,
+            "dynamic {dyn_tput:.0} vs static {static_tput:.0} tasks/s"
+        );
+    }
+
+    #[test]
+    fn walltime_expiry_bounces_tasks_with_zero_lost_or_duplicated() {
+        use crate::falkon::provision::{GrowthPolicy, ProvisionPolicy};
+        // Short walltime against long tasks: allocations expire
+        // mid-campaign, their in-flight tasks bounce through NodeLost
+        // retry, fresh allocations pick them up — every task completes
+        // exactly once.
+        let mut cfg = WorldConfig::new(Machine::sicortex(), 120);
+        cfg.retry = RetryPolicy { max_attempts: 50, ..Default::default() };
+        let mut pc = SimProvisionConfig::new(ProvisionPolicy::Dynamic {
+            min_nodes: 1,
+            max_nodes: 20,
+            tasks_per_node: 10,
+            idle_release_s: 300.0,
+            walltime_s: 9.5, // kills mid-flight 2 s tasks repeatedly
+            growth: GrowthPolicy::AllAtOnce,
+        });
+        pc.tick_s = 0.5;
+        cfg.provision = Some(pc);
+        let mut w = World::new(cfg, vec![SimTask::sleep(2.0); 1_500]);
+        w.run(u64::MAX);
+        assert!(w.provision_expirations() > 0, "walltime must have fired");
+        assert_eq!(w.completed(), 1_500, "no task lost across expiries");
+        assert_eq!(w.failed(), 0);
+        assert_eq!(w.campaign().len(), 1_500, "exactly one record per task");
+    }
+
+    #[test]
+    fn provisioned_sharded_world_completes() {
+        use crate::falkon::provision::{GrowthPolicy, ProvisionPolicy};
+        let mut cfg = WorldConfig::new(Machine::bgp(), 1024);
+        cfg.dispatchers = 4;
+        cfg.provision = Some(SimProvisionConfig::new(ProvisionPolicy::Dynamic {
+            min_nodes: 1,
+            max_nodes: 256,
+            tasks_per_node: 4,
+            idle_release_s: 60.0,
+            walltime_s: 7200.0,
+            growth: GrowthPolicy::Exponential,
+        }));
+        let mut w = World::new(cfg, vec![SimTask::sleep(0.5); 4_000]);
+        w.run(u64::MAX);
+        assert_eq!(w.completed(), 4_000);
+        assert_eq!(w.campaign().len(), 4_000);
+    }
+
+    #[test]
+    fn spent_static_allocation_fails_stranded_tasks_instead_of_hanging() {
+        use crate::falkon::provision::ProvisionPolicy;
+        // A Static allocation whose walltime expires mid-campaign is
+        // never resubmitted; the world must stop ticking a dead fleet
+        // and fail the stranded tasks terminally rather than spin
+        // forever (run() would otherwise never return).
+        let mut cfg = WorldConfig::new(Machine::sicortex(), 60);
+        cfg.provision = Some(SimProvisionConfig::new(ProvisionPolicy::Static {
+            nodes: 10,
+            walltime_s: 5.0, // far less than the campaign needs
+        }));
+        let mut w = World::new(cfg, vec![SimTask::sleep(1.0); 2_000]);
+        w.run(u64::MAX);
+        assert_eq!(w.provision_expirations(), 1);
+        assert!(w.completed() > 0, "work done before expiry");
+        assert!(w.failed() > 0, "stranded tasks fail terminally");
+        assert_eq!(w.completed() + w.failed(), 2_000, "every task terminal");
+    }
+
+    #[test]
+    fn provisioned_deterministic() {
+        use crate::falkon::provision::{GrowthPolicy, ProvisionPolicy};
+        let mk = || {
+            let mut cfg = WorldConfig::new(Machine::bgp(), 256);
+            cfg.provision = Some(SimProvisionConfig::new(ProvisionPolicy::Dynamic {
+                min_nodes: 1,
+                max_nodes: 64,
+                tasks_per_node: 4,
+                idle_release_s: 20.0,
+                walltime_s: 40.0,
+                growth: GrowthPolicy::Additive { chunk: 8 },
+            }));
+            cfg.retry = RetryPolicy { max_attempts: 20, ..Default::default() };
+            let mut w = World::new(cfg, vec![SimTask::sleep(1.0); 1_000]);
+            w.run(u64::MAX);
+            (w.completed(), w.failed(), w.provision_expirations(), w.campaign().makespan_s())
         };
         assert_eq!(mk(), mk());
     }

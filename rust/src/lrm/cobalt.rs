@@ -104,13 +104,12 @@ impl Cobalt {
         }
     }
 
-    /// Allocations whose walltime expired by `now` (killed by the LRM).
-    pub fn expired(&self, now: Time) -> Vec<AllocId> {
-        self.active
-            .iter()
-            .filter(|(_, a)| a.kill_at <= now)
-            .map(|(id, _)| *id)
-            .collect()
+    /// Free the PSETs backing `nodes` (whole-PSET node lists only).
+    fn free_pset_nodes(&mut self, nodes: &[usize]) {
+        let npp = self.nodes_per_pset();
+        for chunk in nodes.chunks(npp) {
+            self.free_psets.push(chunk[0] / npp);
+        }
     }
 }
 
@@ -126,16 +125,40 @@ impl Lrm for Cobalt {
 
     fn release(&mut self, now: Time, id: AllocId) {
         if let Some(a) = self.active.remove(&id) {
-            let npp = self.nodes_per_pset();
-            for chunk in a.nodes.chunks(npp) {
-                self.free_psets.push(chunk[0] / npp);
-            }
+            let nodes = a.nodes;
+            self.free_pset_nodes(&nodes);
+            self.try_start(now);
+        } else if let Some((ready, _)) = self.booting.remove(&id) {
+            // Cancelled mid-boot: the PSETs were already ours — free them.
+            let nodes = ready.nodes;
+            self.free_pset_nodes(&nodes);
+            self.try_start(now);
+        } else {
+            // Withdraw a queued request; removing the head may unblock
+            // the rest of the FIFO.
+            self.queue.retain(|q| q.id != id);
             self.try_start(now);
         }
     }
 
     fn next_event(&self) -> Option<Time> {
         self.booting.values().map(|(r, _)| r.ready_at).min()
+    }
+
+    fn expired(&self, now: Time) -> Vec<AllocId> {
+        self.active
+            .iter()
+            .filter(|(_, a)| a.kill_at <= now)
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    fn next_expiry(&self) -> Option<Time> {
+        self.active.values().map(|a| a.kill_at).min()
+    }
+
+    fn granted_nodes(&self) -> usize {
+        self.active.values().map(|a| a.nodes.len()).sum()
     }
 
     fn advance(&mut self, now: Time) -> Vec<AllocReady> {

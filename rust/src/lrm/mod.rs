@@ -57,18 +57,61 @@ pub enum Granularity {
 pub trait Lrm {
     /// Submit an allocation request; it queues FIFO.
     fn submit(&mut self, now: Time, req: AllocRequest) -> AllocId;
-    /// Release an allocation's nodes back to the free pool.
+    /// Release an allocation's nodes back to the free pool. Works on any
+    /// allocation state: active nodes are freed, a still-booting grant is
+    /// cancelled and freed, a queued request is withdrawn.
     fn release(&mut self, now: Time, id: AllocId);
     /// Earliest time a queued allocation could become ready.
     fn next_event(&self) -> Option<Time>;
     /// Advance to `now`; returns allocations that became ready.
     fn advance(&mut self, now: Time) -> Vec<AllocReady>;
+    /// Active allocations whose walltime elapsed by `now`. The LRM kills
+    /// these; the provisioner must observe them (and `release`) so its
+    /// executors stop absorbing dispatches on reclaimed nodes.
+    fn expired(&self, now: Time) -> Vec<AllocId>;
+    /// Earliest walltime kill among active allocations.
+    fn next_expiry(&self) -> Option<Time>;
+    /// Nodes currently granted to active (post-boot) allocations.
+    fn granted_nodes(&self) -> usize;
     /// Allocation granularity.
     fn granularity(&self) -> Granularity;
     /// The machine this LRM fronts.
     fn machine(&self) -> &Machine;
     /// Free nodes right now.
     fn free_nodes(&self) -> usize;
+}
+
+impl<L: Lrm + ?Sized> Lrm for Box<L> {
+    fn submit(&mut self, now: Time, req: AllocRequest) -> AllocId {
+        (**self).submit(now, req)
+    }
+    fn release(&mut self, now: Time, id: AllocId) {
+        (**self).release(now, id)
+    }
+    fn next_event(&self) -> Option<Time> {
+        (**self).next_event()
+    }
+    fn advance(&mut self, now: Time) -> Vec<AllocReady> {
+        (**self).advance(now)
+    }
+    fn expired(&self, now: Time) -> Vec<AllocId> {
+        (**self).expired(now)
+    }
+    fn next_expiry(&self) -> Option<Time> {
+        (**self).next_expiry()
+    }
+    fn granted_nodes(&self) -> usize {
+        (**self).granted_nodes()
+    }
+    fn granularity(&self) -> Granularity {
+        (**self).granularity()
+    }
+    fn machine(&self) -> &Machine {
+        (**self).machine()
+    }
+    fn free_nodes(&self) -> usize {
+        (**self).free_nodes()
+    }
 }
 
 /// Worst-case utilization of running a 1-core serial job through the raw

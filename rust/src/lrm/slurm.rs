@@ -60,14 +60,6 @@ impl Slurm {
         }
     }
 
-    /// Allocations whose walltime expired by `now`.
-    pub fn expired(&self, now: Time) -> Vec<AllocId> {
-        self.active
-            .iter()
-            .filter(|(_, (_, kill))| *kill <= now)
-            .map(|(id, _)| *id)
-            .collect()
-    }
 }
 
 impl Lrm for Slurm {
@@ -82,7 +74,13 @@ impl Lrm for Slurm {
 
     fn release(&mut self, now: Time, id: AllocId) {
         if let Some((nodes, _)) = self.active.remove(&id) {
+            // Also drop any uncollected grant notification for it.
+            self.pending_ready.retain(|r| r.id != id);
             self.free_nodes.extend(nodes);
+            self.try_start(now);
+        } else {
+            // Withdraw a queued request.
+            self.queue.retain(|q| q.id != id);
             self.try_start(now);
         }
     }
@@ -91,6 +89,22 @@ impl Lrm for Slurm {
         // Grants are immediate (no boot): anything pending is ready "now";
         // we signal with the earliest ready_at among pending grants.
         self.pending_ready.iter().map(|r| r.ready_at).min()
+    }
+
+    fn expired(&self, now: Time) -> Vec<AllocId> {
+        self.active
+            .iter()
+            .filter(|(_, (_, kill))| *kill <= now)
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    fn next_expiry(&self) -> Option<Time> {
+        self.active.values().map(|(_, kill)| *kill).min()
+    }
+
+    fn granted_nodes(&self) -> usize {
+        self.active.values().map(|(nodes, _)| nodes.len()).sum()
     }
 
     fn advance(&mut self, _now: Time) -> Vec<AllocReady> {

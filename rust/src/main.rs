@@ -64,6 +64,7 @@ fn cmd_service(args: &Args) -> i32 {
             partitions: args.parse_or("partitions", 1usize),
             ..Default::default()
         },
+        provision: None,
     };
     match Service::start(config) {
         Ok(svc) => {

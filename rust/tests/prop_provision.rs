@@ -1,0 +1,153 @@
+//! Property tests for the provisioner's requested-vs-granted accounting:
+//! random grow / idle / expire / round-up sequences must keep the
+//! provisioner's held view identical to the LRM's granted view, and must
+//! never push the requested-node total past `max_nodes` — the invariant
+//! the old saturating-subtraction accounting violated after one release
+//! of a PSET-rounded grant.
+
+use falkon::falkon::provision::{GrowthPolicy, ProvisionEvent, ProvisionPolicy, Provisioner};
+use falkon::lrm::cobalt::Cobalt;
+use falkon::lrm::slurm::Slurm;
+use falkon::lrm::Lrm;
+use falkon::sim::engine::SECS;
+use falkon::sim::machine::Machine;
+use falkon::util::prop::{check, Gen};
+
+fn gen_growth(g: &mut Gen) -> GrowthPolicy {
+    match g.rng.below(5) {
+        0 => GrowthPolicy::Singles,
+        1 => GrowthPolicy::OneAtATime,
+        2 => GrowthPolicy::Additive { chunk: 1 + g.rng.below(16) as usize },
+        3 => GrowthPolicy::Exponential,
+        _ => GrowthPolicy::AllAtOnce,
+    }
+}
+
+#[test]
+fn random_grow_idle_expire_sequences_preserve_lrm_agreement() {
+    check("provisioner == LRM granted view", 120, |g| {
+        // Alternate between the PSET-rounding LRM (Cobalt/BG-P, rounds
+        // 1 → 64) and the exact one (SLURM/SiCortex).
+        let cobalt = g.rng.below(2) == 0;
+        let lrm: Box<dyn Lrm> = if cobalt {
+            Box::new(Cobalt::new(Machine::bgp()))
+        } else {
+            Box::new(Slurm::new(Machine::sicortex()))
+        };
+        let max_nodes = 1 + g.size_range(0, 199) as usize;
+        let min_nodes = g.rng.below(max_nodes as u64 + 1) as usize;
+        // Short walltimes force expiries inside the random schedule.
+        let walltime_s = g.f64_range(5.0, 120.0);
+        let policy = ProvisionPolicy::Dynamic {
+            min_nodes,
+            max_nodes,
+            tasks_per_node: 1 + g.rng.below(8) as usize,
+            idle_release_s: g.f64_range(1.0, 40.0),
+            walltime_s,
+            growth: gen_growth(g),
+        };
+        let mut prov = Provisioner::new(policy, lrm);
+
+        let mut now = 0u64;
+        let steps = g.size_range(1, 60);
+        let mut expired_seen = 0u64;
+        for step in 0..steps {
+            // Mostly small advances; occasionally a long idle gap that
+            // triggers idle release and walltime expiry.
+            now += if g.rng.below(4) == 0 {
+                g.rng.range(30, 150) * SECS
+            } else {
+                1 + g.rng.below(10 * SECS)
+            };
+            let queue_len = if g.rng.below(3) == 0 { 0 } else { g.rng.below(3000) as usize };
+            let busy = g.rng.below(2) == 0;
+            let events = prov.tick(now, queue_len, busy);
+            expired_seen += events
+                .iter()
+                .filter(|e| matches!(e, ProvisionEvent::Expired { .. }))
+                .count() as u64;
+
+            // Invariant 1: the provisioner's held view IS the LRM's
+            // granted (active) view — no leaked or phantom allocations.
+            if prov.held_nodes() != prov.lrm().granted_nodes() {
+                return Err(format!(
+                    "step {step}: held {} != LRM granted {}",
+                    prov.held_nodes(),
+                    prov.lrm().granted_nodes()
+                ));
+            }
+            // Invariant 2: requested units never exceed max_nodes, no
+            // matter how the LRM rounded the grants.
+            if prov.requested_nodes() > max_nodes {
+                return Err(format!(
+                    "step {step}: requested {} > max {max_nodes}",
+                    prov.requested_nodes()
+                ));
+            }
+            // Invariant 3: expiration counter matches observed events.
+            if prov.expirations() != expired_seen {
+                return Err(format!(
+                    "step {step}: expirations {} != observed {expired_seen}",
+                    prov.expirations()
+                ));
+            }
+        }
+
+        // Final teardown reconciles both sides to zero.
+        prov.release_all(now + 1);
+        if prov.held_nodes() != 0 || prov.lrm().granted_nodes() != 0 {
+            return Err(format!(
+                "release_all left held {} / granted {}",
+                prov.held_nodes(),
+                prov.lrm().granted_nodes()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cobalt_rounding_never_distorts_the_floor_or_ceiling() {
+    // Focused version of the satellite bug: tiny requested bounds on a
+    // PSET machine, long alternating busy/idle phases — requested stays
+    // inside [min, max] across every release/regrow cycle.
+    check("rounded grants respect requested bounds", 80, |g| {
+        let max_nodes = 1 + g.rng.below(6) as usize;
+        let min_nodes = g.rng.below(max_nodes as u64) as usize;
+        let mut prov = Provisioner::new(
+            ProvisionPolicy::Dynamic {
+                min_nodes,
+                max_nodes,
+                tasks_per_node: 1,
+                idle_release_s: 5.0,
+                walltime_s: 3600.0,
+                growth: gen_growth(g),
+            },
+            Cobalt::new(Machine::bgp()),
+        );
+        let mut now = 0u64;
+        for cycle in 0..g.size_range(1, 12) {
+            let _ = prov.tick(now, 500, false);
+            if let Some(boot) = prov.next_event() {
+                now = now.max(boot);
+                let _ = prov.tick(now, 500, true);
+            }
+            if prov.requested_nodes() > max_nodes {
+                return Err(format!(
+                    "cycle {cycle}: requested {} > max {max_nodes} while busy",
+                    prov.requested_nodes()
+                ));
+            }
+            now += 30 * SECS;
+            let _ = prov.tick(now, 0, false);
+            if prov.requested_nodes() > max_nodes || prov.requested_nodes() < min_nodes {
+                return Err(format!(
+                    "cycle {cycle}: requested {} outside [{min_nodes}, {max_nodes}] after drain",
+                    prov.requested_nodes()
+                ));
+            }
+            now += SECS;
+        }
+        Ok(())
+    });
+}

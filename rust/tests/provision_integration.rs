@@ -1,0 +1,172 @@
+//! Live elastic-provisioning acceptance: the service starts with ZERO
+//! executors, a provisioner thread grows an in-process fleet against a
+//! mock LRM to serve a 10K-task campaign, drains back to the floor when
+//! the queue empties, and survives forced walltime expiry with zero lost
+//! or duplicated tasks.
+
+use falkon::falkon::coordinator::HierarchyConfig;
+use falkon::falkon::exec::DefaultRunner;
+use falkon::falkon::provision::{GrowthPolicy, ProvisionPolicy};
+use falkon::falkon::service::{ProvisionSpec, Service, ServiceConfig};
+use falkon::falkon::task::TaskPayload;
+use falkon::sim::machine::{FsProfile, Machine};
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A small node-granularity machine for the mock LRM: instant grants
+/// (no boot model), 8 nodes.
+fn mock_machine(nodes: usize) -> Machine {
+    Machine {
+        name: format!("mock-{nodes}n"),
+        nodes,
+        cores_per_node: 1,
+        nodes_per_pset: None,
+        fs: FsProfile::ramdisk(),
+        node_boot_secs: 0.0,
+        boot_serial_per_node_secs: 0.0,
+        dispatch_tcp_secs: 1e-4,
+        dispatch_ws_secs: None,
+        net_rtt_secs: 1e-4,
+        exec_overhead_secs: 0.0,
+        node_link_bps: 1e9,
+    }
+}
+
+fn provisioned_service(policy: ProvisionPolicy, partitions: usize, nodes: usize) -> Service {
+    Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        hierarchy: HierarchyConfig { partitions, steal_batch: 8 },
+        provision: Some(ProvisionSpec {
+            policy,
+            machine: mock_machine(nodes),
+            tick: Duration::from_millis(20),
+            exec_cores: 1,
+            runner: Arc::new(DefaultRunner),
+        }),
+        ..Default::default()
+    })
+    .expect("service starts")
+}
+
+/// Poll until `f()` holds or `timeout` elapses; returns whether it held.
+fn eventually(timeout: Duration, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    f()
+}
+
+/// The headline acceptance: 0 executors → grow → serve 10K sleep-0 →
+/// drain back to the floor. Zero lost, zero duplicated.
+#[test]
+fn live_fleet_grows_serves_10k_and_drains_to_floor() {
+    let svc = provisioned_service(
+        ProvisionPolicy::Dynamic {
+            min_nodes: 1,
+            max_nodes: 8,
+            tasks_per_node: 1000,
+            idle_release_s: 0.25,
+            walltime_s: 3600.0,
+            // Single-node allocations: release granularity is per node,
+            // so the drain can land exactly on the floor.
+            growth: GrowthPolicy::Singles,
+        },
+        2, // sharded service: provisioned executors register per partition
+        8,
+    );
+    let ids = svc.submit_many((0..10_000).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(120)).expect("campaign completes");
+    assert_eq!(outcomes.len(), 10_000, "no task lost");
+    let unique: HashSet<u64> = outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(unique.len(), 10_000, "no task duplicated");
+    assert_eq!(unique, ids.into_iter().collect::<HashSet<u64>>());
+    assert!(outcomes.iter().all(|o| o.ok()), "all sleep-0 tasks succeed");
+    assert!(svc.provision_grants() >= 1, "the fleet actually grew");
+
+    // Queue empty → idle release pulls the fleet back to the floor.
+    assert!(
+        eventually(Duration::from_secs(20), || svc.provisioned_held() <= 1),
+        "fleet must drain to the 1-node floor, held {}",
+        svc.provisioned_held()
+    );
+    assert!(
+        eventually(Duration::from_secs(10), || svc.provisioned_held() == 1),
+        "floor is 1 requested node, held {}",
+        svc.provisioned_held()
+    );
+    svc.shutdown();
+}
+
+/// Forced walltime expiry mid-campaign: the mock LRM kills allocations
+/// every 700 ms while 10K tasks flow; executors die mid-flight, their
+/// pending tasks bounce through the disconnect-retry path, and the
+/// campaign still completes exactly-once.
+#[test]
+fn live_walltime_expiry_bounces_without_loss_or_duplication() {
+    let mut cfg = ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        provision: Some(ProvisionSpec {
+            policy: ProvisionPolicy::Dynamic {
+                min_nodes: 1,
+                max_nodes: 6,
+                tasks_per_node: 500,
+                idle_release_s: 60.0, // releases only via expiry here
+                walltime_s: 0.7,
+                growth: GrowthPolicy::AllAtOnce,
+            },
+            machine: mock_machine(6),
+            tick: Duration::from_millis(20),
+            exec_cores: 1,
+            runner: Arc::new(DefaultRunner),
+        }),
+        ..Default::default()
+    };
+    // Expiry bounces surface as CommError retries; give them headroom.
+    cfg.retry.max_attempts = 25;
+    let svc = Service::start(cfg).expect("service starts");
+
+    let ids = svc.submit_many((0..10_000).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(180)).expect("campaign completes");
+    assert_eq!(outcomes.len(), 10_000, "no task lost across expiries");
+    let unique: HashSet<u64> = outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(unique.len(), 10_000, "no task duplicated across expiries");
+    assert_eq!(unique, ids.into_iter().collect::<HashSet<u64>>());
+    assert!(outcomes.iter().all(|o| o.ok()), "every task eventually succeeded");
+    assert!(
+        svc.provision_expirations() >= 1,
+        "at least one forced walltime expiry must have fired"
+    );
+    svc.shutdown();
+}
+
+/// Provisioned executors land on the queue shard of their machine
+/// partition (PR-2's partition registration, fed by the provisioner).
+#[test]
+fn provisioned_executors_register_with_their_partition() {
+    let svc = provisioned_service(
+        ProvisionPolicy::Static { nodes: 4, walltime_s: 3600.0 },
+        2,
+        4,
+    );
+    assert!(
+        eventually(Duration::from_secs(10), || svc.executors() == 4),
+        "static fleet comes up, got {}",
+        svc.executors()
+    );
+    let outcomes = {
+        svc.submit_many((0..2_000).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+        svc.wait_all(Duration::from_secs(60)).expect("completes")
+    };
+    assert_eq!(outcomes.len(), 2_000);
+    // Node-granularity machine: partition == node, mapped node % 2 onto
+    // the two shards — both shards must have dispatched work.
+    let stats = svc.shard_stats();
+    assert_eq!(stats.len(), 2);
+    assert!(stats.iter().all(|s| s.dispatched > 0), "{stats:?}");
+    svc.shutdown();
+}

@@ -25,6 +25,7 @@ fn wire_service(bundle: usize, adaptive_cap: usize, partitions: usize) -> Servic
         dispatch: DispatchConfig { bundle, data_aware: false, adaptive_cap },
         retry: RetryPolicy::default(),
         hierarchy: HierarchyConfig { partitions, ..Default::default() },
+        provision: None,
     })
     .expect("service start")
 }
@@ -89,6 +90,7 @@ fn no_lost_or_duplicated_results_under_executor_failure_wave() {
         dispatch: DispatchConfig { bundle: 1, data_aware: false, adaptive_cap: 16 },
         retry: RetryPolicy { max_attempts: 10, suspend_after_failures: 1000, ..Default::default() },
         hierarchy: HierarchyConfig { partitions: 4, steal_batch: 8 },
+        provision: None,
     })
     .unwrap();
     let addr = svc.addr().to_string();
@@ -184,6 +186,7 @@ fn suspension_timing_unchanged_with_batched_results() {
         dispatch: DispatchConfig { bundle: 1, data_aware: false, adaptive_cap: 4 },
         retry: RetryPolicy { max_attempts: 10, suspend_after_failures: 3, failure_window_s: 60.0 },
         hierarchy: HierarchyConfig::default(),
+        provision: None,
     })
     .unwrap();
     let addr = svc.addr().to_string();
