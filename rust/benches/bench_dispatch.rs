@@ -49,6 +49,7 @@ fn live_wire_throughput(
         retry: Default::default(),
         hierarchy: HierarchyConfig { partitions, ..Default::default() },
         provision: None,
+        ..Default::default()
     })
     .unwrap();
     let fleet = spawn_fleet_with(

@@ -83,6 +83,7 @@ fn live_row(n_exec: usize, n_tasks: usize, partitions: usize) -> (f64, f64) {
         retry: Default::default(),
         hierarchy: HierarchyConfig { partitions, ..Default::default() },
         provision: None,
+        ..Default::default()
     })
     .unwrap();
     let fleet = spawn_fleet_with(

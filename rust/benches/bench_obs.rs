@@ -1,0 +1,159 @@
+//! Observability overhead ablation: what tracing costs on the hot path.
+//!
+//! Replays the 4096-node BG/P sleep-0 campaign (the `bench_hotpath` sim
+//! workload) under four observability modes and emits `BENCH_obs.json`:
+//!
+//! * **off**        — `ObsConfig::off()`: no `Obs` exists, hooks cost one
+//!                    `Option` branch;
+//! * **registry**   — counters only, flight recorder disabled;
+//! * **full_1**     — counters + recorder sampling EVERY task (worst case);
+//! * **full_64**    — counters + recorder at the default 1-in-64 sampling.
+//!
+//! The acceptance gate (asserted here, not just reported): full tracing
+//! at the default sampling must cost <= 5% of the `off` row's wall
+//! sim-throughput. Each mode also reports virtual tasks/s, which must be
+//! IDENTICAL across modes — telemetry observes the simulation, it must
+//! never perturb it.
+//!
+//! A separate 10K-task run at 1-in-64 dumps its flight recorder as
+//! `TRACE_obs.json` (Chrome trace-event JSON, Perfetto-loadable) and
+//! asserts the span count equals the sampled task count exactly.
+
+use falkon::falkon::simworld::{SimTask, World, WorldConfig};
+use falkon::obs::chrome::span_count;
+use falkon::obs::ObsConfig;
+use falkon::sim::machine::Machine;
+use falkon::util::bench::{banner, emit_json, Table};
+use falkon::util::json::Json;
+use std::time::Instant;
+
+fn quick() -> bool {
+    std::env::var("FALKON_BENCH_QUICK").is_ok()
+}
+
+/// Wall and virtual throughput of the 4096-node sleep-0 campaign under
+/// one obs config. Best of `repeats` wall rates (the virtual rate is
+/// deterministic and identical across repeats).
+fn run_mode(obs: &ObsConfig, n_tasks: usize, repeats: usize) -> (f64, f64) {
+    let mut best_wall = 0.0f64;
+    let mut virtual_tps = 0.0f64;
+    for _ in 0..repeats {
+        let machine = Machine::bgp_psets(64); // 4096 nodes / 16384 cores
+        let cores = machine.cores();
+        let mut cfg = WorldConfig::new(machine, cores);
+        cfg.obs = obs.clone();
+        let tasks = vec![SimTask::sleep(0.0); n_tasks];
+        let t0 = Instant::now();
+        let mut w = World::new(cfg, tasks);
+        w.run(u64::MAX);
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(w.completed(), n_tasks, "obs must not perturb completion");
+        best_wall = best_wall.max(n_tasks as f64 / wall);
+        virtual_tps = w.campaign().throughput();
+    }
+    (best_wall, virtual_tps)
+}
+
+fn main() {
+    let n = if quick() { 20_000 } else { 200_000 };
+    let repeats = 2;
+
+    banner("Observability overhead — 4096-node sleep-0 sim, wall tasks/s per mode");
+    let modes: [(&str, ObsConfig); 4] = [
+        ("off", ObsConfig::off()),
+        ("registry", ObsConfig::registry_only()),
+        ("full_1", ObsConfig::full(1)),
+        ("full_64", ObsConfig::full(64)),
+    ];
+    let mut measured: Vec<(&str, f64, f64)> = Vec::new();
+    for (name, cfg) in &modes {
+        let (wall, virt) = run_mode(cfg, n, repeats);
+        measured.push((name, wall, virt));
+    }
+    let off_wall = measured[0].1;
+    let off_virt = measured[0].2;
+
+    let mut t = Table::new(&["mode", "tasks/s (wall)", "virtual t/s", "overhead %"]);
+    let mut rows = Vec::new();
+    for (name, wall, virt) in &measured {
+        let overhead_pct = (off_wall - wall) / off_wall * 100.0;
+        t.row(&[
+            name.to_string(),
+            format!("{wall:.0}"),
+            format!("{virt:.0}"),
+            format!("{overhead_pct:+.1}"),
+        ]);
+        let mut row = Json::obj();
+        row.set("mode", Json::Str(name.to_string()))
+            .set("tasks_per_s", Json::Num(*wall))
+            .set("virtual_tasks_per_s", Json::Num(*virt))
+            .set("overhead_pct", Json::Num(overhead_pct));
+        rows.push(row);
+        // Telemetry observes; it must not move the model's answer.
+        assert_eq!(
+            *virt, off_virt,
+            "virtual throughput must be identical across obs modes ({name})"
+        );
+    }
+    t.print();
+
+    // The acceptance gate: default-sampling full tracing within 5%.
+    let full_64_wall = measured[3].1;
+    let overhead = (off_wall - full_64_wall) / off_wall * 100.0;
+    assert!(
+        overhead <= 5.0,
+        "full tracing at 1-in-64 costs {overhead:.1}% (> 5%) vs off \
+         ({off_wall:.0} -> {full_64_wall:.0} tasks/s)"
+    );
+
+    // Trace artifact: a 10K-task campaign at the default sampling, ring
+    // sized so nothing wraps — the span count must equal the sampled
+    // task count exactly (ids 0..n, id % 64 == 0).
+    let trace_tasks = 10_000usize;
+    let machine = Machine::bgp_psets(64);
+    let cores = machine.cores();
+    let mut cfg = WorldConfig::new(machine, cores);
+    cfg.obs = ObsConfig { enabled: true, sample: 64, rings: 2, ring_cap: 1 << 15 };
+    let mut w = World::new(cfg, vec![SimTask::sleep(0.0); trace_tasks]);
+    w.run(u64::MAX);
+    assert_eq!(w.completed(), trace_tasks);
+    let trace = w.chrome_json();
+    let expected_spans = (0..trace_tasks as u64).filter(|id| id % 64 == 0).count();
+    let spans = span_count(&trace);
+    assert_eq!(
+        spans, expected_spans,
+        "dumped trace must hold exactly one span per sampled task"
+    );
+    std::fs::write("TRACE_obs.json", trace.to_string_compact())
+        .expect("write TRACE_obs.json");
+    println!(
+        "TRACE_obs.json: {spans} spans from {trace_tasks} tasks at 1-in-64 \
+         (status: {})",
+        w.status_line()
+    );
+
+    let mut trace_meta = Json::obj();
+    trace_meta
+        .set("tasks", Json::Num(trace_tasks as f64))
+        .set("sample", Json::Num(64.0))
+        .set("expected_spans", Json::Num(expected_spans as f64))
+        .set("spans", Json::Num(spans as f64))
+        .set("file", Json::Str("TRACE_obs.json".into()));
+
+    let mut summary = Json::obj();
+    summary
+        .set("nodes", Json::Num(4096.0))
+        .set("sim_tasks", Json::Num(n as f64))
+        .set(
+            "protocol",
+            Json::Str(
+                "overhead_pct is vs the off row on the 4096-node sleep-0 \
+                 campaign (EXPERIMENTS.md, observability overhead protocol); \
+                 acceptance: full_64 <= 5%"
+                    .into(),
+            ),
+        )
+        .set("rows", Json::Arr(rows))
+        .set("trace", trace_meta);
+    emit_json("obs", &summary).expect("write BENCH_obs.json");
+}

@@ -52,11 +52,19 @@ pub struct PartitionCollector {
     pub absorbed_records: u64,
     /// Bytes absorbed so far (including the pending batch).
     pub absorbed_bytes: u64,
+    /// Optional shared telemetry registry; mirrors the lifetime stats as
+    /// `stage_*` counters so staging shows up next to queue/wire metrics.
+    obs: Option<std::sync::Arc<crate::obs::Obs>>,
 }
 
 impl PartitionCollector {
     pub fn new(policy: FlushPolicy) -> PartitionCollector {
         PartitionCollector { policy, ..Default::default() }
+    }
+
+    /// Mirror this collector's activity into a shared telemetry registry.
+    pub fn attach_obs(&mut self, obs: std::sync::Arc<crate::obs::Obs>) {
+        self.obs = Some(obs);
     }
 
     pub fn policy(&self) -> FlushPolicy {
@@ -79,6 +87,10 @@ impl PartitionCollector {
         self.pending_records += 1;
         self.absorbed_records += 1;
         self.absorbed_bytes += bytes;
+        if let Some(o) = &self.obs {
+            o.registry.inc(crate::obs::Ctr::StageRecords);
+            o.registry.add(crate::obs::Ctr::StageBytes, bytes);
+        }
         if self.policy.should_flush(self.pending_bytes, self.pending_records) {
             Some(self.take_batch())
         } else {
@@ -102,6 +114,10 @@ impl PartitionCollector {
         self.pending_records = 0;
         self.flushes += 1;
         self.flushed_bytes += batch;
+        if let Some(o) = &self.obs {
+            o.registry.inc(crate::obs::Ctr::StageFlushes);
+            o.registry.add(crate::obs::Ctr::StageFlushedBytes, batch);
+        }
         batch
     }
 }
@@ -145,6 +161,22 @@ mod tests {
         assert_eq!(c.add(0), None);
         assert_eq!(c.add(0), Some(0));
         assert_eq!(c.flush(), None);
+    }
+
+    #[test]
+    fn attached_obs_mirrors_stage_counters() {
+        use crate::obs::{Ctr, Obs, ObsConfig};
+        let obs = Obs::new(ObsConfig::registry_only());
+        let mut c = PartitionCollector::new(FlushPolicy { max_bytes: 100, max_records: 1 << 30 });
+        c.attach_obs(obs.clone());
+        c.add(60);
+        c.add(60); // crosses max_bytes -> one flush of 120
+        c.add(5);
+        c.flush(); // drains the residue -> second flush of 5
+        assert_eq!(obs.registry.counter(Ctr::StageRecords), 3);
+        assert_eq!(obs.registry.counter(Ctr::StageBytes), 125);
+        assert_eq!(obs.registry.counter(Ctr::StageFlushes), 2);
+        assert_eq!(obs.registry.counter(Ctr::StageFlushedBytes), 125);
     }
 
     #[test]

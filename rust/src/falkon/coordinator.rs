@@ -82,6 +82,9 @@ pub struct ShardedQueues {
     next_id: TaskId,
     /// Steal *events* (not tasks) — a drained shard pulling one batch.
     steal_events: u64,
+    /// Optional observability hub (steal counters live here; per-task
+    /// lifecycle hooks live inside each shard's `TaskQueues`).
+    obs: Option<std::sync::Arc<crate::obs::Obs>>,
 }
 
 impl ShardedQueues {
@@ -92,7 +95,17 @@ impl ShardedQueues {
             dispatched: vec![0; n],
             next_id: 0,
             steal_events: 0,
+            obs: None,
         }
+    }
+
+    /// Attach an observability hub, propagated into every shard's
+    /// `TaskQueues` so lifecycle hooks fire wherever tasks move.
+    pub fn attach_obs(&mut self, obs: std::sync::Arc<crate::obs::Obs>) {
+        for q in &mut self.shards {
+            q.attach_obs(obs.clone());
+        }
+        self.obs = Some(obs);
     }
 
     pub fn shard_count(&self) -> usize {
@@ -167,6 +180,10 @@ impl ShardedQueues {
         }
         if moved > 0 {
             self.steal_events += 1;
+            if let Some(o) = &self.obs {
+                o.registry.inc(crate::obs::Ctr::StealEvents);
+                o.registry.add(crate::obs::Ctr::StolenTasks, moved as u64);
+            }
         }
         moved
     }
@@ -302,6 +319,25 @@ mod tests {
         assert!(sq.task(0, a).is_none());
         sq.complete(0, b, 0);
         assert!(sq.conserved(0));
+    }
+
+    #[test]
+    fn attached_obs_sees_steals_and_lifecycle() {
+        use crate::obs::{Ctr, Obs, ObsConfig};
+        let o = Obs::new(ObsConfig::registry_only());
+        let mut sq = ShardedQueues::new(HierarchyConfig { partitions: 2, steal_batch: 8 });
+        sq.attach_obs(o.clone());
+        for _ in 0..6 {
+            sq.submit_to(0, sleep0());
+        }
+        assert_eq!(sq.steal(0, 1, 2), 2);
+        assert_eq!(o.registry.counter(Ctr::TasksSubmitted), 6);
+        assert_eq!(o.registry.counter(Ctr::StealEvents), 1);
+        assert_eq!(o.registry.counter(Ctr::StolenTasks), 2);
+        // Dispatch on the thief shard counts through its TaskQueues.
+        let batch = sq.take_for_dispatch(1, 0, 2);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(o.registry.counter(Ctr::TasksDispatched), 2);
     }
 
     #[test]

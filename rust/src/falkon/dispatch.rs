@@ -196,6 +196,15 @@ pub fn bundle_for_depth(
         .min((credit as usize).max(1))
 }
 
+/// Feed a planned bundle size into the observability histogram — one
+/// shared helper so the live per-shard dispatchers and the simulator
+/// record bundle-size distributions into the same `Hist::BundleSize`
+/// layout (mergeable across fabrics and threads).
+#[inline]
+pub fn observe_bundle(obs: &crate::obs::Obs, bundle: usize) {
+    obs.registry.observe(crate::obs::Hist::BundleSize, bundle as u64);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -354,6 +363,18 @@ mod tests {
         assert_eq!(choose_shard(&loads), Some(1));
         loads[1].alive = false;
         assert_eq!(choose_shard(&loads), None);
+    }
+
+    #[test]
+    fn observe_bundle_lands_in_the_shared_histogram() {
+        use crate::obs::{Hist, Obs, ObsConfig};
+        let o = Obs::new(ObsConfig::registry_only());
+        for n in [1usize, 4, 4, 16] {
+            observe_bundle(&o, n);
+        }
+        let snap = o.registry.hist(Hist::BundleSize);
+        assert_eq!(snap.count, 4);
+        assert_eq!(snap.quantile(0.5), 4);
     }
 
     #[test]

@@ -144,6 +144,30 @@ impl ExecutorConfig {
     }
 }
 
+/// Why a batch left the executor — attribution for the flush-policy
+/// counters shipped to the service as [`Msg::WireStats`].
+#[derive(Clone, Copy)]
+enum FlushReason {
+    /// Executor went idle (no task left in flight).
+    Idle,
+    /// Batch reached the `cap` results ceiling.
+    Cap,
+    /// The `window` timer expired (includes the stop-drain tail flush).
+    Window,
+}
+
+/// Executor-side wire counters. Cumulative since connect; shipped to the
+/// service as `Msg::WireStats` snapshots, which the service differences
+/// per connection into its telemetry registry.
+#[derive(Debug, Default)]
+struct WireCounters {
+    hb_sent: AtomicU64,
+    hb_suppressed: AtomicU64,
+    flush_idle: AtomicU64,
+    flush_cap: AtomicU64,
+    flush_window: AtomicU64,
+}
+
 /// Executor-side completion coalescer: workers push finished results
 /// here; batches flush as one `[ResultBatch, Ready]` gathered write.
 ///
@@ -168,6 +192,7 @@ struct ResultBatcher {
     last_send_ms: AtomicU64,
     epoch: Instant,
     stop: AtomicBool,
+    wire: WireCounters,
 }
 
 impl ResultBatcher {
@@ -183,6 +208,7 @@ impl ResultBatcher {
             last_send_ms: AtomicU64::new(0),
             epoch: Instant::now(),
             stop: AtomicBool::new(false),
+            wire: WireCounters::default(),
         }
     }
 
@@ -201,8 +227,10 @@ impl ResultBatcher {
             buf.push(r);
             full = buf.len() >= self.cap;
         }
-        if idle || full {
-            self.flush();
+        if idle {
+            self.flush(FlushReason::Idle);
+        } else if full {
+            self.flush(FlushReason::Cap);
         } else {
             self.cv.notify_one(); // arm the window flusher
         }
@@ -210,13 +238,18 @@ impl ResultBatcher {
 
     /// Drain the buffer and ship it: one gathered write carrying the
     /// results and the matching credit grant. No-op when empty.
-    fn flush(&self) {
+    fn flush(&self, reason: FlushReason) {
         let batch = {
             let mut buf = self.buf.lock().expect("batcher poisoned");
             if buf.is_empty() {
                 return;
             }
             std::mem::take(&mut *buf)
+        };
+        match reason {
+            FlushReason::Idle => self.wire.flush_idle.fetch_add(1, Ordering::Relaxed),
+            FlushReason::Cap => self.wire.flush_cap.fetch_add(1, Ordering::Relaxed),
+            FlushReason::Window => self.wire.flush_window.fetch_add(1, Ordering::Relaxed),
         };
         let slots = batch.len() as u32;
         let sent = if self.cap <= 1 {
@@ -266,11 +299,24 @@ impl ResultBatcher {
                 }
             }
             if self.stop.load(Ordering::SeqCst) {
-                self.flush(); // ship any tail before exiting
+                self.flush(FlushReason::Window); // ship any tail before exiting
                 return;
             }
             std::thread::sleep(self.window);
-            self.flush();
+            self.flush(FlushReason::Window);
+        }
+    }
+
+    /// Cumulative counter snapshot for the service (it differences
+    /// consecutive snapshots per connection, so resends are harmless).
+    fn wire_stats_msg(&self) -> Msg {
+        Msg::WireStats {
+            executor_id: self.executor_id,
+            hb_sent: self.wire.hb_sent.load(Ordering::Relaxed),
+            hb_suppressed: self.wire.hb_suppressed.load(Ordering::Relaxed),
+            flush_idle: self.wire.flush_idle.load(Ordering::Relaxed),
+            flush_cap: self.wire.flush_cap.load(Ordering::Relaxed),
+            flush_window: self.wire.flush_window.load(Ordering::Relaxed),
         }
     }
 }
@@ -281,8 +327,6 @@ pub struct Executor {
     threads: Vec<std::thread::JoinHandle<()>>,
     framed_shutdown: WriteHandle,
     batcher: Arc<ResultBatcher>,
-    /// Heartbeats actually sent (suppressed ones never count).
-    heartbeats: Arc<AtomicU64>,
 }
 
 impl Executor {
@@ -323,7 +367,6 @@ impl Executor {
             config.result_batch,
             config.batch_window,
         ));
-        let heartbeats = Arc::new(AtomicU64::new(0));
 
         // Worker threads.
         for _ in 0..config.cores.max(1) {
@@ -371,7 +414,6 @@ impl Executor {
             let batcher = batcher.clone();
             let write = write_half.clone();
             let stop = stop.clone();
-            let heartbeats = heartbeats.clone();
             let executor_id = config.executor_id;
             threads.push(std::thread::spawn(move || {
                 // Tick is capped so stop() never blocks long joining this
@@ -384,15 +426,25 @@ impl Executor {
                     if stop.load(Ordering::SeqCst) {
                         break;
                     }
-                    if batcher.since_last_send() >= period.as_millis() as u64
-                        && last_beat.elapsed() >= period
-                    {
+                    if last_beat.elapsed() < period {
+                        continue; // beat not due yet
+                    }
+                    if batcher.since_last_send() >= period.as_millis() as u64 {
                         if write.send(&Msg::Heartbeat { executor_id }).is_err() {
                             break;
                         }
-                        heartbeats.fetch_add(1, Ordering::Relaxed);
-                        last_beat = Instant::now();
+                        batcher.wire.hb_sent.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        // A beat was due, but result traffic inside the
+                        // period already proved liveness — suppress it.
+                        batcher.wire.hb_suppressed.fetch_add(1, Ordering::Relaxed);
                     }
+                    last_beat = Instant::now();
+                    // Beat boundaries double as the wire-stats cadence:
+                    // ship a cumulative counter snapshot for the service
+                    // registry (a lost send costs nothing — snapshots
+                    // are absolute, not deltas).
+                    let _ = write.send(&batcher.wire_stats_msg());
                 }
             }));
         }
@@ -444,13 +496,19 @@ impl Executor {
             }));
         }
 
-        Ok(Executor { stop, threads, framed_shutdown: write_half, batcher, heartbeats })
+        Ok(Executor { stop, threads, framed_shutdown: write_half, batcher })
     }
 
     /// Heartbeats actually sent on the wire so far (suppressed beats are
     /// never counted) — observability for the suppression policy.
     pub fn heartbeats_sent(&self) -> u64 {
-        self.heartbeats.load(Ordering::Relaxed)
+        self.batcher.wire.hb_sent.load(Ordering::Relaxed)
+    }
+
+    /// Heartbeats that came due but were suppressed because result
+    /// traffic inside the period already proved liveness.
+    pub fn heartbeats_suppressed(&self) -> u64 {
+        self.batcher.wire.hb_suppressed.load(Ordering::Relaxed)
     }
 
     /// Stop the executor and join its threads.
@@ -458,6 +516,11 @@ impl Executor {
         self.stop.store(true, Ordering::SeqCst);
         self.batcher.stop.store(true, Ordering::SeqCst);
         self.batcher.cv.notify_all();
+        // Ship buffered results plus a final wire-stats snapshot before
+        // tearing the connection down, so the service registry sees the
+        // tail of this executor's flush/heartbeat activity.
+        self.batcher.flush(FlushReason::Idle);
+        let _ = self.framed_shutdown.send(&self.batcher.wire_stats_msg());
         self.framed_shutdown.shutdown();
         for t in self.threads.drain(..) {
             let _ = t.join();

@@ -119,6 +119,10 @@ pub struct Provisioner<L: Lrm> {
     consumed: f64,
     /// Walltime expirations observed so far.
     expirations: u64,
+    /// Optional observability hub: request/grant/release/expiry counters
+    /// and flight records are emitted at the single event-push sites
+    /// below, so both fabrics' drivers see identical accounting.
+    obs: Option<std::sync::Arc<crate::obs::Obs>>,
 }
 
 impl<L: Lrm> Provisioner<L> {
@@ -132,6 +136,21 @@ impl<L: Lrm> Provisioner<L> {
             next_exp: 1,
             consumed: 0.0,
             expirations: 0,
+            obs: None,
+        }
+    }
+
+    /// Attach an observability hub; provisioning events stamp flight
+    /// records with the driver's `now` (virtual ns in the sim, epoch ns
+    /// in the live service — one clock domain per fabric either way).
+    pub fn attach_obs(&mut self, obs: std::sync::Arc<crate::obs::Obs>) {
+        self.obs = Some(obs);
+    }
+
+    fn obs_event(&self, now: Time, kind: crate::obs::RecKind, ctr: crate::obs::Ctr, alloc: AllocId, nodes: usize) {
+        if let Some(o) = &self.obs {
+            o.registry.inc(ctr);
+            o.event_at(now, kind, alloc, nodes as u64);
         }
     }
 
@@ -213,6 +232,13 @@ impl<L: Lrm> Provisioner<L> {
                     last_busy: now,
                 },
             );
+            self.obs_event(
+                now,
+                crate::obs::RecKind::ProvGrant,
+                crate::obs::Ctr::ProvGranted,
+                ready.id,
+                ready.nodes.len(),
+            );
             events.push(ProvisionEvent::Ready(ready));
         }
     }
@@ -267,6 +293,13 @@ impl<L: Lrm> Provisioner<L> {
             if self.held.contains_key(&id) {
                 let nodes = self.settle_and_release(now, id);
                 self.expirations += 1;
+                self.obs_event(
+                    now,
+                    crate::obs::RecKind::ProvExpire,
+                    crate::obs::Ctr::ProvExpired,
+                    id,
+                    nodes.len(),
+                );
                 events.push(ProvisionEvent::Expired { alloc: id, nodes });
             }
         }
@@ -295,6 +328,13 @@ impl<L: Lrm> Provisioner<L> {
                     self.static_submitted = true;
                     let alloc = self.lrm.submit(now, AllocRequest { nodes, walltime_s });
                     self.pending.insert(alloc, nodes);
+                    self.obs_event(
+                        now,
+                        crate::obs::RecKind::ProvRequest,
+                        crate::obs::Ctr::ProvRequested,
+                        alloc,
+                        nodes,
+                    );
                     events.push(ProvisionEvent::Requested { alloc, nodes });
                 }
             }
@@ -315,6 +355,13 @@ impl<L: Lrm> Provisioner<L> {
                     let mut submit_one = |p: &mut Self, k: usize| {
                         let alloc = p.lrm.submit(now, AllocRequest { nodes: k, walltime_s });
                         p.pending.insert(alloc, k);
+                        p.obs_event(
+                            now,
+                            crate::obs::RecKind::ProvRequest,
+                            crate::obs::Ctr::ProvRequested,
+                            alloc,
+                            k,
+                        );
                         events.push(ProvisionEvent::Requested { alloc, nodes: k });
                     };
                     match growth {
@@ -355,6 +402,13 @@ impl<L: Lrm> Provisioner<L> {
                     }
                     requested -= req;
                     let nodes = self.settle_and_release(now, id);
+                    self.obs_event(
+                        now,
+                        crate::obs::RecKind::ProvRelease,
+                        crate::obs::Ctr::ProvReleased,
+                        id,
+                        nodes.len(),
+                    );
                     events.push(ProvisionEvent::Released { alloc: id, nodes });
                 }
             }
@@ -372,6 +426,13 @@ impl<L: Lrm> Provisioner<L> {
         let mut events = Vec::new();
         for id in ids {
             let nodes = self.settle_and_release(now, id);
+            self.obs_event(
+                now,
+                crate::obs::RecKind::ProvRelease,
+                crate::obs::Ctr::ProvReleased,
+                id,
+                nodes.len(),
+            );
             events.push(ProvisionEvent::Released { alloc: id, nodes });
         }
         for (id, _) in std::mem::take(&mut self.pending) {
@@ -499,6 +560,27 @@ mod tests {
         }
         // Second tick: nothing new (static submits once).
         assert!(p.tick(boot_done + SECS, 100, true).is_empty());
+    }
+
+    #[test]
+    fn obs_counts_request_grant_release() {
+        use crate::obs::{Ctr, Obs, ObsConfig};
+        let o = Obs::new(ObsConfig::full(1));
+        let mut p = Provisioner::new(
+            ProvisionPolicy::Static { nodes: 64, walltime_s: 3600.0 },
+            Slurm::new(Machine::sicortex()),
+        );
+        p.attach_obs(o.clone());
+        p.tick(0, 0, false); // immediate grant on SLURM
+        assert_eq!(o.registry.counter(Ctr::ProvRequested), 1);
+        assert_eq!(o.registry.counter(Ctr::ProvGranted), 1);
+        p.release_all(10 * SECS);
+        assert_eq!(o.registry.counter(Ctr::ProvReleased), 1);
+        assert_eq!(o.registry.counter(Ctr::ProvExpired), 0);
+        // Provision records are unsampled instants in virtual time.
+        let d = o.recorder.dump();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[2].ts, 10 * SECS);
     }
 
     #[test]

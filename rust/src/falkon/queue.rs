@@ -28,7 +28,9 @@
 
 use crate::falkon::errors::TaskError;
 use crate::falkon::task::{Task, TaskId, TaskPayload, TaskState};
+use crate::obs::{Ctr, Obs, RecKind};
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 /// Outcome of a finished task as reported to clients.
 #[derive(Clone, Debug, PartialEq)]
@@ -79,11 +81,21 @@ pub struct TaskQueues {
     transferred_out: u64,
     /// Queued tasks injected from another shard.
     transferred_in: u64,
+    /// Optional observability hub: lifecycle counters + sampled flight
+    /// records on the submit/dispatch/complete/retry paths. All hooks
+    /// are allocation-free, so the alloc gate holds with tracing on.
+    obs: Option<Arc<Obs>>,
 }
 
 impl TaskQueues {
     pub fn new() -> TaskQueues {
         TaskQueues::default()
+    }
+
+    /// Attach an observability hub; subsequent lifecycle transitions
+    /// feed its registry and (for sampled ids) its flight recorder.
+    pub fn attach_obs(&mut self, obs: Arc<Obs>) {
+        self.obs = Some(obs);
     }
 
     /// Park `task` in a (possibly recycled) slab slot and index it.
@@ -130,6 +142,10 @@ impl TaskQueues {
         let slot = self.alloc_slot(task);
         self.waiting.push_back(slot);
         self.submitted += 1;
+        if let Some(o) = &self.obs {
+            o.registry.inc(Ctr::TasksSubmitted);
+            o.task_event(RecKind::Submit, id, 0);
+        }
     }
 
     /// Number of tasks waiting for dispatch.
@@ -192,6 +208,12 @@ impl TaskQueues {
         }
         if taken > 0 {
             *self.pending_by_exec.entry(executor).or_insert(0) += taken as u32;
+            if let Some(o) = &self.obs {
+                o.registry.add(Ctr::TasksDispatched, taken as u64);
+                for &id in &out[out.len() - taken..] {
+                    o.task_event(RecKind::Dispatch, id, executor as u64);
+                }
+            }
         }
         taken
     }
@@ -235,6 +257,14 @@ impl TaskQueues {
             s.task.advance(TaskState::Running).unwrap();
         }
         let attempts = s.task.attempts;
+        if let Some(o) = &self.obs {
+            if exit_code == 0 {
+                o.registry.inc(Ctr::TasksCompleted);
+            } else {
+                o.registry.inc(Ctr::TasksFailed);
+            }
+            o.task_event(RecKind::Result, id, exit_code as u64);
+        }
         if exit_code == 0 {
             s.task.advance(TaskState::Completed { exit_code }).unwrap();
             self.done.push(TaskOutcome { id, exit_code, error: None, attempts });
@@ -278,6 +308,10 @@ impl TaskQueues {
                 s.task.advance(TaskState::Retrying { attempt: attempts, error }).unwrap();
                 s.task.advance(TaskState::Queued).unwrap();
                 self.waiting.push_back(slot);
+                if let Some(o) = &self.obs {
+                    o.registry.inc(Ctr::TasksRetried);
+                    o.task_event(RecKind::Retry, id, attempts as u64);
+                }
                 true
             }
             crate::falkon::errors::FailureAction::Fail => {
@@ -292,6 +326,10 @@ impl TaskQueues {
                         error: Some(error),
                         attempts,
                     });
+                }
+                if let Some(o) = &self.obs {
+                    o.registry.inc(Ctr::TasksFailed);
+                    o.task_event(RecKind::Result, id, u64::MAX);
                 }
                 false
             }
@@ -586,6 +624,32 @@ mod tests {
         q.submit(sleep0());
         q.take_for_dispatch(0, 1); // nothing waiting, one pending
         assert!(q.steal_back(4).is_empty());
+        assert!(q.conserved(0));
+    }
+
+    #[test]
+    fn obs_hooks_count_lifecycle() {
+        use crate::obs::{Obs, ObsConfig};
+        let o = Obs::new(ObsConfig::full(1));
+        let mut q = TaskQueues::new();
+        q.attach_obs(o.clone());
+        let policy = RetryPolicy { max_attempts: 2, ..Default::default() };
+        let a = q.submit(sleep0());
+        let b = q.submit(sleep0());
+        q.take_for_dispatch(0, 2);
+        q.complete(a, 0);
+        assert!(q.fail_attempt(b, TaskError::CommError, &policy)); // retry
+        q.take_for_dispatch(0, 1);
+        assert!(!q.fail_attempt(b, TaskError::CommError, &policy)); // exhausted
+        use crate::obs::Ctr;
+        assert_eq!(o.registry.counter(Ctr::TasksSubmitted), 2);
+        assert_eq!(o.registry.counter(Ctr::TasksDispatched), 3);
+        assert_eq!(o.registry.counter(Ctr::TasksCompleted), 1);
+        assert_eq!(o.registry.counter(Ctr::TasksRetried), 1);
+        assert_eq!(o.registry.counter(Ctr::TasksFailed), 1);
+        // At 1-in-1 sampling every transition left a record:
+        // 2 submits + 3 dispatches + 1 retry + 2 results.
+        assert_eq!(o.recorder.written(), 8);
         assert!(q.conserved(0));
     }
 

@@ -41,6 +41,7 @@ use crate::lrm::slurm::Slurm;
 use crate::lrm::{AllocId, Lrm};
 use crate::net::proto::{encode_dispatch_into, Msg, WireResult, WireTaskRef};
 use crate::net::tcpcore::{Framed, Registry};
+use crate::obs::{Ctr, Gauge, Obs, ObsConfig};
 use crate::sim::machine::Machine;
 use std::collections::{HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
@@ -62,6 +63,10 @@ pub struct ServiceConfig {
     /// LRM, driven by the service's own queue depth. `None` = executors
     /// are managed externally (the classic layout).
     pub provision: Option<ProvisionSpec>,
+    /// Observability: telemetry registry + flight recorder. The default
+    /// is enabled at 1-in-64 task sampling; [`ObsConfig::off`] removes
+    /// every hook from the hot paths.
+    pub obs: ObsConfig,
 }
 
 impl Default for ServiceConfig {
@@ -72,6 +77,7 @@ impl Default for ServiceConfig {
             retry: RetryPolicy::default(),
             hierarchy: HierarchyConfig::default(),
             provision: None,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -132,6 +138,25 @@ impl Profile {
             ("notify", f(&self.notify_ns)),
         ]
     }
+}
+
+/// Fleet-aggregated executor wire counters (satellite of the obs
+/// registry): every executor ships cumulative `Msg::WireStats` snapshots
+/// at its heartbeat cadence and once at stop; the service differences
+/// consecutive snapshots per connection into registry counters, and this
+/// view reads them back out.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Heartbeats actually sent on the wire.
+    pub hb_sent: u64,
+    /// Heartbeats that came due but were suppressed by result traffic.
+    pub hb_suppressed: u64,
+    /// Result batches flushed because the executor went idle.
+    pub flush_idle: u64,
+    /// Result batches flushed at the batch-size cap.
+    pub flush_cap: u64,
+    /// Result batches flushed by the window timer.
+    pub flush_window: u64,
 }
 
 #[derive(Debug)]
@@ -263,6 +288,9 @@ struct Inner {
     prov_requested: AtomicUsize,
     prov_expirations: AtomicU64,
     prov_granted: AtomicU64,
+    /// Shared telemetry registry + flight recorder (`None` = obs off:
+    /// every hook compiles down to a branch on a never-taken `Option`).
+    obs: Option<Arc<Obs>>,
 }
 
 impl Inner {
@@ -344,6 +372,7 @@ impl Service {
         let listener = TcpListener::bind(&config.bind)?;
         let addr = listener.local_addr()?;
         let n_shards = config.hierarchy.shards();
+        let obs = Obs::from_config(&config.obs);
         let inner = Arc::new(Inner {
             shards: (0..n_shards).map(|_| Shard::new()).collect(),
             coord: Mutex::new(CoordState::default()),
@@ -360,7 +389,13 @@ impl Service {
             prov_requested: AtomicUsize::new(0),
             prov_expirations: AtomicU64::new(0),
             prov_granted: AtomicU64::new(0),
+            obs,
         });
+        if let Some(o) = &inner.obs {
+            for shard in &inner.shards {
+                shard.state.lock().expect("shard poisoned").queues.attach_obs(o.clone());
+            }
+        }
 
         let mut threads = Vec::new();
         {
@@ -760,6 +795,61 @@ impl Service {
         &self.inner.profile
     }
 
+    /// The service's observability handle (`None` when obs is off).
+    pub fn obs(&self) -> Option<&Arc<Obs>> {
+        self.inner.obs.as_ref()
+    }
+
+    /// One human-readable status line over the registry: uptime, task
+    /// lifecycle counters, wire/staging/provision activity, live gauges,
+    /// and how many flight-recorder records exist. Cheap enough to log
+    /// periodically. Returns a stub when obs is off.
+    pub fn status_line(&self) -> String {
+        let Some(o) = &self.inner.obs else { return "obs off".into() };
+        // Refresh the gauges from the lock-free hints at read time —
+        // gauges are point-in-time, so nothing on the hot path needs to
+        // maintain them.
+        let mut waiting = 0usize;
+        let mut load = 0usize;
+        let mut execs = 0usize;
+        for s in &self.inner.shards {
+            waiting += s.queued_hint.load(Ordering::Relaxed);
+            load += s.load_hint.load(Ordering::Relaxed);
+            execs += s.execs_up.load(Ordering::Relaxed);
+        }
+        o.registry.gauge_set(Gauge::TasksWaiting, waiting as u64);
+        o.registry.gauge_set(Gauge::TasksPending, load.saturating_sub(waiting) as u64);
+        o.registry.gauge_set(Gauge::ExecsUp, execs as u64);
+        o.registry
+            .gauge_set(Gauge::NodesHeld, self.inner.prov_held.load(Ordering::Relaxed) as u64);
+        o.status_line(o.now_ns())
+    }
+
+    /// Aggregated executor-side wire counters (see [`WireStats`]). All
+    /// zero when obs is off or no executor has reported yet.
+    pub fn wire_stats(&self) -> WireStats {
+        match &self.inner.obs {
+            Some(o) => WireStats {
+                hb_sent: o.registry.counter(Ctr::HbSent),
+                hb_suppressed: o.registry.counter(Ctr::HbSuppressed),
+                flush_idle: o.registry.counter(Ctr::FlushIdle),
+                flush_cap: o.registry.counter(Ctr::FlushCap),
+                flush_window: o.registry.counter(Ctr::FlushWindow),
+            },
+            None => WireStats::default(),
+        }
+    }
+
+    /// Dump the flight recorder as a Chrome trace-event JSON document
+    /// (load in Perfetto / `chrome://tracing`). An empty-but-valid trace
+    /// when obs or the recorder is off.
+    pub fn chrome_json(&self) -> crate::util::json::Json {
+        match &self.inner.obs {
+            Some(o) => o.chrome_json(),
+            None => crate::obs::chrome::chrome_trace(&[]),
+        }
+    }
+
     /// Stop the service and all connections.
     pub fn shutdown(mut self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
@@ -792,8 +882,14 @@ fn acceptor_loop(listener: TcpListener, inner: Arc<Inner>) {
 }
 
 /// Per-connection reader: handles Register, then Ready/Result/Heartbeat.
-fn reader_loop(framed: Framed, inner: Arc<Inner>) {
+fn reader_loop(mut framed: Framed, inner: Arc<Inner>) {
+    if let Some(o) = &inner.obs {
+        framed.attach_obs(o.clone()); // read half: recv frame/byte counters
+    }
     let Ok((mut read_half, write_half)) = framed.split() else { return };
+    if let Some(o) = &inner.obs {
+        write_half.attach_obs(o.clone()); // write half: send counters
+    }
     // First message must be Register; it pins the connection to a shard.
     let (executor_id, shard_idx) = match read_half.recv() {
         Ok(Msg::Register { executor_id, cores, partition }) => {
@@ -824,6 +920,11 @@ fn reader_loop(framed: Framed, inner: Arc<Inner>) {
         _ => return,
     };
     let shard = &inner.shards[shard_idx];
+    // Last-seen cumulative `WireStats` snapshot from this connection, in
+    // declaration order (hb_sent, hb_suppressed, flush idle/cap/window).
+    // Registry counters get the deltas, so fleet aggregates stay monotone
+    // even though each executor reports absolute values.
+    let mut last_ws = [0u64; 5];
 
     loop {
         match read_half.recv() {
@@ -877,6 +978,29 @@ fn reader_loop(framed: Framed, inner: Arc<Inner>) {
                 shard.work_cv.notify_one();
             }
             Ok(Msg::Heartbeat { .. }) => {}
+            Ok(Msg::WireStats {
+                executor_id: _,
+                hb_sent,
+                hb_suppressed,
+                flush_idle,
+                flush_cap,
+                flush_window,
+            }) => {
+                if let Some(o) = &inner.obs {
+                    let cur = [hb_sent, hb_suppressed, flush_idle, flush_cap, flush_window];
+                    const WS_CTRS: [Ctr; 5] = [
+                        Ctr::HbSent,
+                        Ctr::HbSuppressed,
+                        Ctr::FlushIdle,
+                        Ctr::FlushCap,
+                        Ctr::FlushWindow,
+                    ];
+                    for (i, &v) in cur.iter().enumerate() {
+                        o.registry.add(WS_CTRS[i], v.saturating_sub(last_ws[i]));
+                        last_ws[i] = v;
+                    }
+                }
+            }
             Ok(_) | Err(_) => break, // protocol violation or disconnect
         }
         if inner.shutdown.load(Ordering::SeqCst) {
@@ -1013,6 +1137,9 @@ fn dispatcher_loop(inner: Arc<Inner>, shard_idx: usize) {
             inner.profile.socket_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
             if ok {
                 shard.dispatched.fetch_add(scratch.ids.len() as u64, Ordering::Relaxed);
+                if let Some(o) = &inner.obs {
+                    crate::falkon::dispatch::observe_bundle(o, scratch.ids.len());
+                }
             } else {
                 // Connection died between planning and writing: retry tasks.
                 let mut st = shard.state.lock().expect("shard poisoned");
@@ -1057,6 +1184,12 @@ fn provisioner_loop(inner: Arc<Inner>, addr: std::net::SocketAddr) {
         Box::new(Slurm::new(machine.clone()))
     };
     let mut prov = Provisioner::new(spec.policy.clone(), lrm);
+    if let Some(o) = &inner.obs {
+        // Provision events are recorded at the provisioner's own clock
+        // (wall ns since service start — same domain as the obs epoch to
+        // within startup microseconds).
+        prov.attach_obs(o.clone());
+    }
     let mut fleets: HashMap<AllocId, Vec<Executor>> = HashMap::new();
     let mut busy = vec![false; machine.nodes];
     let addr = addr.to_string();
@@ -1328,6 +1461,10 @@ fn try_steal(inner: &Arc<Inner>, thief_idx: usize) -> bool {
         inner.signal_done();
         return false;
     }
+    if let Some(o) = &inner.obs {
+        o.registry.inc(Ctr::StealEvents);
+        o.registry.add(Ctr::StolenTasks, tasks.len() as u64);
+    }
     {
         let mut st = thief.state.lock().expect("shard poisoned");
         for t in tasks {
@@ -1407,6 +1544,31 @@ mod tests {
         // shard sees some waiting work.
         let stats = svc.shard_stats();
         assert!(stats.iter().all(|s| s.waiting > 0), "{stats:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn obs_surface_status_wire_stats_and_trace() {
+        let svc = Service::start(ServiceConfig::default()).unwrap();
+        svc.submit(TaskPayload::Sleep { secs: 0.0 });
+        let line = svc.status_line();
+        assert!(line.starts_with("t="), "{line}");
+        assert!(line.contains("submit=1"), "{line}");
+        // No executor has reported wire stats yet.
+        assert_eq!(svc.wire_stats(), WireStats::default());
+        let trace = svc.chrome_json();
+        assert!(trace.get("traceEvents").is_some());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn obs_off_service_still_answers() {
+        let svc =
+            Service::start(ServiceConfig { obs: ObsConfig::off(), ..Default::default() }).unwrap();
+        svc.submit(TaskPayload::Sleep { secs: 0.0 });
+        assert_eq!(svc.status_line(), "obs off");
+        assert_eq!(svc.wire_stats(), WireStats::default());
+        assert!(svc.chrome_json().get("traceEvents").is_some());
         svc.shutdown();
     }
 

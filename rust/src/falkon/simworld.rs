@@ -31,10 +31,12 @@ use crate::lrm::slurm::Slurm;
 use crate::lrm::{AllocId, AllocReady, Lrm};
 use crate::metrics::{Campaign, TaskTimes};
 use crate::net::codec::{bytes_per_task, Codec, TcpCodec, WsCodec};
+use crate::obs::{Ctr, Gauge, Obs, ObsConfig, RecKind};
 use crate::sim::engine::{secs, to_secs, Scheduler, Time};
 use crate::sim::machine::Machine;
 use crate::util::rng::Rng;
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
 
 /// A simulated task: compute plus an explicit I/O profile.
 #[derive(Clone, Debug, Default)]
@@ -229,6 +231,11 @@ pub struct WorldConfig {
     /// live executors and lets a [`Provisioner`] bring nodes up and down
     /// through a simulated LRM. `None` = the classic always-on fleet.
     pub provision: Option<SimProvisionConfig>,
+    /// Observability: telemetry registry + flight recorder. Trace
+    /// timestamps are *virtual* nanoseconds ([`Time`]), so a dumped
+    /// Chrome trace shows the simulated campaign timeline, not wall
+    /// time. `ObsConfig::off()` removes every hook from the hot path.
+    pub obs: ObsConfig,
 }
 
 impl WorldConfig {
@@ -258,6 +265,7 @@ impl WorldConfig {
             adaptive_bundle_cap: 0,
             result_window_s: 0.002,
             provision: None,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -530,6 +538,9 @@ pub struct World {
     credit0: u32,
     expirations_n: u64,
     allocs_granted_n: u64,
+    /// Telemetry registry + flight recorder twin (None = tracing off —
+    /// zero hooks on the hot path). Records carry *virtual* timestamps.
+    obs: Option<Arc<Obs>>,
 }
 
 /// One partition dispatcher in the simulated fabric: its queue shard,
@@ -616,6 +627,7 @@ impl World {
             shard_nodes = shard_nodes.div_ceil(cc.partition_nodes) * cc.partition_nodes;
         }
         let n_shards = if sharded { alloc_nodes.div_ceil(shard_nodes) } else { 0 };
+        let obs = Obs::from_config(&cfg.obs);
         let mut w = World {
             model,
             sched: Scheduler::new(),
@@ -673,6 +685,7 @@ impl World {
             credit0,
             expirations_n: 0,
             allocs_granted_n: 0,
+            obs,
             tasks,
             cfg,
         };
@@ -687,6 +700,15 @@ impl World {
         for t in &mut w.tstate {
             t.submit = 0;
         }
+        if let Some(o) = w.obs.clone() {
+            o.registry.add(Ctr::TasksSubmitted, n as u64);
+            for id in 0..n as u64 {
+                o.task_event_at(0, RecKind::Submit, id, 0);
+            }
+            if let Some(p) = w.prov.as_mut() {
+                p.attach_obs(o.clone());
+            }
+        }
         if let Some(mtbf) = w.cfg.node_mtbf_s {
             for node in 0..w.cfg.machine.nodes {
                 let at = w.rng.exp(mtbf);
@@ -698,6 +720,11 @@ impl World {
             w.sched.at(secs(at_s), Ev::NodeFail { node });
         }
         w.init_collective();
+        if let Some(o) = w.obs.clone() {
+            for c in &mut w.collectors {
+                c.attach_obs(o.clone());
+            }
+        }
         if sharded {
             w.sched.at(0, Ev::CoordForward);
             w.coord_scheduled = true;
@@ -1014,6 +1041,13 @@ impl World {
             self.tstate[t].dispatch = self.service_busy_until;
             self.tstate[t].attempts += 1;
         }
+        if let Some(o) = &self.obs {
+            o.registry.add(Ctr::TasksDispatched, batch.len() as u64);
+            for &t in &batch {
+                o.task_event_at(self.service_busy_until, RecKind::Dispatch, t as u64, core as u64);
+            }
+            crate::falkon::dispatch::observe_bundle(o, batch.len());
+        }
         // Network: half RTT + transmission.
         let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
         let deliver_at = self.service_busy_until + secs(latency);
@@ -1084,6 +1118,13 @@ impl World {
         for &(_, t) in &assignments {
             self.tstate[t].dispatch = self.service_busy_until;
             self.tstate[t].attempts += 1;
+        }
+        if let Some(o) = &self.obs {
+            o.registry.add(Ctr::TasksDispatched, assignments.len() as u64);
+            for &(core, t) in &assignments {
+                o.task_event_at(self.service_busy_until, RecKind::Dispatch, t as u64, core as u64);
+            }
+            crate::falkon::dispatch::observe_bundle(o, assignments.len());
         }
         let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
         self.sched.at(
@@ -1297,6 +1338,13 @@ impl World {
             self.tstate[t].dispatch = self.shards[d].busy_until;
             self.tstate[t].attempts += 1;
         }
+        if let Some(o) = &self.obs {
+            o.registry.add(Ctr::TasksDispatched, batch.len() as u64);
+            for &t in &batch {
+                o.task_event_at(self.shards[d].busy_until, RecKind::Dispatch, t as u64, core as u64);
+            }
+            crate::falkon::dispatch::observe_bundle(o, batch.len());
+        }
         let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
         let deliver_at = self.shards[d].busy_until + secs(latency);
         self.sched.at(deliver_at, Ev::Deliver { core, tasks: batch });
@@ -1341,6 +1389,10 @@ impl World {
         self.shard_load[d] += tasks.len();
         self.steal_events_n += 1;
         self.stolen_tasks_n += tasks.len() as u64;
+        if let Some(o) = &self.obs {
+            o.registry.inc(Ctr::StealEvents);
+            o.registry.add(Ctr::StolenTasks, tasks.len() as u64);
+        }
         self.shards[d].steal_pending = true;
         let hop = secs(self.cfg.machine.net_rtt_secs); // victim → coord → thief
         self.sched.at(now + hop, Ev::ShardArrive { shard: d, tasks });
@@ -1369,6 +1421,9 @@ impl World {
 
     /// Stage-in: wrapper script invocation(s), workdir mkdirs, input reads.
     fn begin_stage_in(&mut self, now: Time, core: usize, task: usize) {
+        if let Some(o) = &self.obs {
+            o.task_event_at(now, RecKind::StageIn, task as u64, core as u64);
+        }
         let node = self.node_of(core);
         // Borrowed access to the task record: the old per-event deep
         // clone of the whole `SimTask` (objects vector included) is gone
@@ -1439,6 +1494,9 @@ impl World {
 
     fn begin_exec(&mut self, now: Time, core: usize, task: usize) {
         self.tstate[task].start_exec = now;
+        if let Some(o) = &self.obs {
+            o.task_event_at(now, RecKind::Start, task as u64, core as u64);
+        }
         let dur = self.tasks[task].exec_secs;
         let epoch = self.cores[core].epoch;
         self.sched.at(now + secs(dur), Ev::ExecDone { core, task, epoch });
@@ -1531,6 +1589,9 @@ impl World {
         self.core_next(now, core);
         let idle = self.cores[core].current.is_none();
         if idle || self.cores[core].result_buf.len() >= self.cfg.result_batch {
+            if let Some(o) = &self.obs {
+                o.registry.inc(if idle { Ctr::FlushIdle } else { Ctr::FlushCap });
+            }
             let results = std::mem::take(&mut self.cores[core].result_buf);
             self.sched.at(now + latency, Ev::ResultMsg { core, results });
         } else if self.cores[core].result_buf.len() == 1 {
@@ -1548,6 +1609,9 @@ impl World {
     fn result_window_flush(&mut self, now: Time, core: usize) {
         if self.cores[core].result_buf.is_empty() {
             return;
+        }
+        if let Some(o) = &self.obs {
+            o.registry.inc(Ctr::FlushWindow);
         }
         let latency = secs(self.cfg.machine.net_rtt_secs / 2.0);
         let results = std::mem::take(&mut self.cores[core].result_buf);
@@ -1611,11 +1675,19 @@ impl World {
                     shard: shard.unwrap_or(0) as u32,
                     exit_code: 0,
                 });
+                if let Some(o) = &self.obs {
+                    o.registry.inc(Ctr::TasksCompleted);
+                    o.task_event_at(now, RecKind::Result, task as u64, 0);
+                }
             }
             Some(err) => {
                 let attempts = self.tstate[task].attempts;
                 match crate::falkon::errors::on_failure(&err, attempts, &self.cfg.retry) {
                     crate::falkon::errors::FailureAction::Retry => {
+                        if let Some(o) = &self.obs {
+                            o.registry.inc(Ctr::TasksRetried);
+                            o.task_event_at(now, RecKind::Retry, task as u64, attempts as u64);
+                        }
                         if self.sharded() {
                             // Re-admit via the coordinator so a retried
                             // task is re-routed (a dead partition's tasks
@@ -1629,6 +1701,12 @@ impl World {
                     crate::falkon::errors::FailureAction::Fail => {
                         self.failed += 1;
                         self.tstate[task].done = true;
+                        if let Some(o) = &self.obs {
+                            o.registry.inc(Ctr::TasksFailed);
+                            // Close the span even on terminal failure so
+                            // the trace never leaks an open task.
+                            o.task_event_at(now, RecKind::Result, task as u64, u64::MAX);
+                        }
                     }
                 }
             }
@@ -1947,6 +2025,9 @@ impl World {
                     // ALSO complete here.
                     if self.cores[core].alive && self.cores[core].epoch == epoch {
                         self.tstate[task].end_exec = now;
+                        if let Some(o) = &self.obs {
+                            o.task_event_at(now, RecKind::End, task as u64, core as u64);
+                        }
                         self.begin_stage_out(now, core, task);
                     }
                 }
@@ -2176,6 +2257,37 @@ impl World {
     /// Virtual time now (campaign end after `run`).
     pub fn now(&self) -> Time {
         self.sched.now()
+    }
+
+    /// The world's telemetry handle (None when tracing is off).
+    pub fn obs(&self) -> Option<&Arc<Obs>> {
+        self.obs.as_ref()
+    }
+
+    /// One-line operator status at the current *virtual* time: the sim
+    /// twin of [`crate::falkon::service::Service::status_line`]. Gauges
+    /// are refreshed from world state at call time.
+    pub fn status_line(&self) -> String {
+        let Some(o) = &self.obs else { return "obs off".to_string() };
+        let waiting = self.waiting.len()
+            + self.coord_q.len()
+            + self.shards.iter().map(|s| s.waiting.len()).sum::<usize>();
+        let undone = self.tstate.iter().filter(|t| !t.done).count();
+        o.registry.gauge_set(Gauge::TasksWaiting, waiting as u64);
+        o.registry.gauge_set(Gauge::TasksPending, undone.saturating_sub(waiting) as u64);
+        o.registry.gauge_set(Gauge::ExecsUp, self.live_cores() as u64);
+        o.registry.gauge_set(Gauge::NodesHeld, self.held_nodes() as u64);
+        o.status_line(self.sched.now())
+    }
+
+    /// Dump the flight recorder as Chrome trace-event JSON. Timestamps
+    /// are virtual microseconds — the trace shows the simulated
+    /// campaign's timeline.
+    pub fn chrome_json(&self) -> crate::util::json::Json {
+        match &self.obs {
+            Some(o) => o.chrome_json(),
+            None => crate::obs::chrome::chrome_trace(&[]),
+        }
     }
 }
 
@@ -2764,5 +2876,69 @@ mod tests {
             (w.completed(), w.failed(), w.provision_expirations(), w.campaign().makespan_s())
         };
         assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn sim_obs_counts_lifecycle_and_trace_spans_match_sampled_tasks() {
+        let mut cfg = WorldConfig::new(Machine::anluc(), 16);
+        cfg.obs = ObsConfig::full(1); // sample every task
+        let n = 500;
+        let mut w = World::new(cfg, vec![SimTask::sleep(0.1); n]);
+        w.run(u64::MAX);
+        assert_eq!(w.completed(), n);
+        {
+            let r = &w.obs().expect("obs on").registry;
+            assert_eq!(r.counter(Ctr::TasksSubmitted), n as u64);
+            assert_eq!(r.counter(Ctr::TasksDispatched), n as u64);
+            assert_eq!(r.counter(Ctr::TasksCompleted), n as u64);
+            assert_eq!(r.counter(Ctr::TasksFailed), 0);
+        }
+        let line = w.status_line();
+        assert!(line.starts_with("t="), "{line}");
+        assert!(line.contains("submit=500"), "{line}");
+        assert!(line.contains("done=500"), "{line}");
+        // Exactly one closed span per sampled task — no lost or
+        // duplicated records (sample = 1 ⇒ every task).
+        let trace = w.chrome_json();
+        assert_eq!(crate::obs::chrome::span_count(&trace), n);
+        // Timestamps are virtual: the campaign takes seconds of virtual
+        // time but wall-milliseconds, so span times prove the clock
+        // domain (0.1 s tasks ⇒ last result well past 1e5 µs).
+        let secs = to_secs(w.now());
+        assert!(secs > 1.0, "virtual makespan {secs}");
+    }
+
+    #[test]
+    fn sim_obs_sampling_reduces_records_but_counters_stay_exact() {
+        let run = |sample: u32| {
+            let mut cfg = WorldConfig::new(Machine::anluc(), 16);
+            cfg.obs = ObsConfig::full(sample);
+            let mut w = World::new(cfg, vec![SimTask::sleep(0.05); 512]);
+            w.run(u64::MAX);
+            let written = w.obs().unwrap().recorder.written();
+            let done = w.obs().unwrap().registry.counter(Ctr::TasksCompleted);
+            (written, done)
+        };
+        let (rec_all, done_all) = run(1);
+        let (rec_64, done_64) = run(64);
+        assert_eq!(done_all, 512, "counters are exact regardless of sampling");
+        assert_eq!(done_64, 512);
+        assert!(
+            rec_64 * 8 < rec_all,
+            "1-in-64 sampling must cut record volume: {rec_64} vs {rec_all}"
+        );
+    }
+
+    #[test]
+    fn sim_obs_off_removes_the_handle_entirely() {
+        let mut cfg = WorldConfig::new(Machine::anluc(), 8);
+        cfg.obs = ObsConfig::off();
+        let mut w = World::new(cfg, vec![SimTask::sleep(0.0); 100]);
+        w.run(u64::MAX);
+        assert_eq!(w.completed(), 100);
+        assert!(w.obs().is_none());
+        assert_eq!(w.status_line(), "obs off");
+        let trace = w.chrome_json();
+        assert!(trace.get("traceEvents").is_some());
     }
 }

@@ -31,6 +31,9 @@
 //!   artifacts (`artifacts/*.hlo.txt`), so executors run *real* compute.
 //! * [`metrics`] — per-task lifecycle records and the paper's
 //!   efficiency/speedup/summary views.
+//! * [`obs`] — live observability: a lock-free sharded telemetry
+//!   registry plus a sampling flight recorder with Chrome trace-event
+//!   export, shared by both fabrics.
 //! * [`util`] — self-contained substrate (PRNG, stats, CLI, config, JSON,
 //!   bench harness, property testing) — the offline registry lacks the
 //!   usual crates, so these are implemented here.
@@ -45,6 +48,7 @@ pub mod fs;
 pub mod lrm;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod swift;

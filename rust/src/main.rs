@@ -65,6 +65,7 @@ fn cmd_service(args: &Args) -> i32 {
             ..Default::default()
         },
         provision: None,
+        ..Default::default()
     };
     match Service::start(config) {
         Ok(svc) => {

@@ -187,18 +187,23 @@ impl Campaign {
     }
 
     /// Emit a CSV of per-task records (secs relative to campaign start).
+    /// Timestamps clamp at 0 rather than underflowing: a task that never
+    /// reached a phase (e.g. `start == 0` on a terminally failed task)
+    /// must not panic in debug builds or wrap to ~585 years in release.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("task,core,submit_s,dispatch_s,start_s,end_s,result_s,exit\n");
+        let mut s =
+            String::from("task,core,shard,submit_s,dispatch_s,start_s,end_s,result_s,exit\n");
         for (i, r) in self.records.iter().enumerate() {
             s.push_str(&format!(
-                "{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{}\n",
+                "{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{}\n",
                 i,
                 r.core,
-                to_secs(r.submit - self.t0),
-                to_secs(r.dispatch - self.t0),
-                to_secs(r.start - self.t0),
-                to_secs(r.end - self.t0),
-                to_secs(r.result - self.t0),
+                r.shard,
+                to_secs(r.submit.saturating_sub(self.t0)),
+                to_secs(r.dispatch.saturating_sub(self.t0)),
+                to_secs(r.start.saturating_sub(self.t0)),
+                to_secs(r.end.saturating_sub(self.t0)),
+                to_secs(r.result.saturating_sub(self.t0)),
                 r.exit_code
             ));
         }
@@ -323,5 +328,68 @@ mod tests {
         assert_eq!(c.makespan_s(), 0.0);
         assert_eq!(c.efficiency(), 0.0);
         assert!(c.summary_view(10).is_empty());
+    }
+
+    #[test]
+    fn csv_emits_shard_and_never_underflows() {
+        // A terminally-failed task never starts: its start/end/result stay
+        // at 0 while t0 (first submit) is late. Before the saturating_sub
+        // fix this underflowed Time (panic in debug, ~585 years in
+        // release).
+        let mut c = Campaign::new(2);
+        c.record(TaskTimes {
+            submit: secs(5.0),
+            dispatch: secs(6.0),
+            start: 0,
+            end: 0,
+            result: 0,
+            core: 1,
+            shard: 3,
+            exit_code: -1,
+        });
+        let csv = c.to_csv();
+        assert!(csv.starts_with("task,core,shard,"));
+        let row = csv.lines().nth(1).unwrap();
+        assert_eq!(row, "0,1,3,0.000000,1.000000,0.000000,0.000000,0.000000,-1");
+    }
+
+    #[test]
+    fn views_on_empty_campaign() {
+        let c = Campaign::new(4);
+        assert!(c.summary_view(1).is_empty());
+        assert!(c.per_shard_view().is_empty());
+        assert_eq!(c.shard_imbalance(), 0.0);
+        assert_eq!(c.to_csv().lines().count(), 1, "header only");
+    }
+
+    #[test]
+    fn views_on_single_record() {
+        let mut c = Campaign::new(1);
+        c.record(rec(0, 0.0, 1.0, 3.0));
+        let v = c.per_shard_view();
+        assert_eq!(v, vec![(0, 1, 1.0 / 3.0)]);
+        assert!((c.shard_imbalance() - 1.0).abs() < 1e-9, "one shard is balanced");
+        // bins=1 samples the midpoint (1.5 s): the task is running there.
+        assert_eq!(c.summary_view(1), vec![(1.5, 1)]);
+    }
+
+    #[test]
+    fn views_all_one_shard() {
+        let mut c = Campaign::new(4);
+        for _ in 0..5 {
+            c.record(rec(0, 0.0, 0.0, 10.0)); // core 0 → shard 0
+        }
+        let v = c.per_shard_view();
+        assert_eq!(v.len(), 1);
+        assert_eq!((v[0].0, v[0].1), (0, 5));
+        assert!((c.shard_imbalance() - 1.0).abs() < 1e-9, "a single shard cannot be imbalanced");
+    }
+
+    #[test]
+    fn summary_view_bins_one_counts_midpoint() {
+        let c = two_core_campaign();
+        // Midpoint of the 20 s makespan: only the 10–20 s task runs.
+        assert_eq!(c.summary_view(1), vec![(10.0, 1)]);
+        assert!(c.summary_view(0).is_empty());
     }
 }

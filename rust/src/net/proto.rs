@@ -95,6 +95,20 @@ pub enum Msg {
     /// whole batch under one shard lock. Keeping per-task wire cost flat
     /// requires batching in *both* directions (arXiv:0808.3540).
     ResultBatch { results: Vec<WireResult> },
+    /// Executor-side wire telemetry pushed to the service: cumulative
+    /// heartbeat and result-batch-flush counters since the executor
+    /// started. Sent on each heartbeat tick and once at executor stop;
+    /// the service differences consecutive values per connection and
+    /// feeds the deltas into its telemetry registry
+    /// (`Service::wire_stats`).
+    WireStats {
+        executor_id: u64,
+        hb_sent: u64,
+        hb_suppressed: u64,
+        flush_idle: u64,
+        flush_cap: u64,
+        flush_window: u64,
+    },
 }
 
 // ---------------------------------------------------------------- wire io
@@ -391,6 +405,22 @@ impl Msg {
                     encode_error(w, &r.error);
                 }
             }
+            Msg::WireStats {
+                executor_id,
+                hb_sent,
+                hb_suppressed,
+                flush_idle,
+                flush_cap,
+                flush_window,
+            } => {
+                w.u8(10);
+                w.u64(*executor_id);
+                w.u64(*hb_sent);
+                w.u64(*hb_suppressed);
+                w.u64(*flush_idle);
+                w.u64(*flush_cap);
+                w.u64(*flush_window);
+            }
         }
     }
 
@@ -435,6 +465,14 @@ impl Msg {
                     .collect::<Result<_, _>>()?;
                 Msg::ResultBatch { results }
             }
+            10 => Msg::WireStats {
+                executor_id: r.u64()?,
+                hb_sent: r.u64()?,
+                hb_suppressed: r.u64()?,
+                flush_idle: r.u64()?,
+                flush_cap: r.u64()?,
+                flush_window: r.u64()?,
+            },
             t => return Err(DecodeError::BadTag(t)),
         };
         if !r.done() {
@@ -515,6 +553,14 @@ mod tests {
                 WireResult { task_id: 2, exit_code: -1, error: Some(TaskError::NodeLost) },
                 WireResult { task_id: 3, exit_code: 9, error: Some(TaskError::AppError(9)) },
             ],
+        });
+        roundtrip(Msg::WireStats {
+            executor_id: 42,
+            hb_sent: 17,
+            hb_suppressed: 983,
+            flush_idle: 120,
+            flush_cap: 31,
+            flush_window: 7,
         });
     }
 

@@ -99,6 +99,12 @@ pub struct Framed {
     /// Bytes sent/received (for the Fig 10 accounting).
     pub sent_bytes: u64,
     pub recv_bytes: u64,
+    /// Optional observability hub: wire-level frame/byte counters plus
+    /// sampled `WireSend`/`WireRecv` flight records.
+    obs: Option<Arc<crate::obs::Obs>>,
+    /// Ordinals feeding the flight recorder's 1-in-N wire sampling.
+    send_ordinal: u64,
+    recv_ordinal: u64,
 }
 
 impl Framed {
@@ -110,6 +116,36 @@ impl Framed {
             rbuf: Vec::new(),
             sent_bytes,
             recv_bytes,
+            obs: None,
+            send_ordinal: 0,
+            recv_ordinal: 0,
+        }
+    }
+
+    /// Attach an observability hub to this half of the connection.
+    pub fn attach_obs(&mut self, obs: Arc<crate::obs::Obs>) {
+        self.obs = Some(obs);
+    }
+
+    #[inline]
+    fn obs_sent(&mut self, bytes: u64) {
+        if let Some(o) = &self.obs {
+            use crate::obs::{Ctr, RecKind};
+            o.registry.inc(Ctr::WireSends);
+            o.registry.add(Ctr::WireSendBytes, bytes);
+            o.wire_event(RecKind::WireSend, self.send_ordinal, bytes);
+            self.send_ordinal += 1;
+        }
+    }
+
+    #[inline]
+    fn obs_recv(&mut self, bytes: u64) {
+        if let Some(o) = &self.obs {
+            use crate::obs::{Ctr, RecKind};
+            o.registry.inc(Ctr::WireRecvs);
+            o.registry.add(Ctr::WireRecvBytes, bytes);
+            o.wire_event(RecKind::WireRecv, self.recv_ordinal, bytes);
+            self.recv_ordinal += 1;
         }
     }
 
@@ -174,6 +210,7 @@ impl Framed {
     fn send_raw(&mut self) -> std::io::Result<()> {
         self.stream.write_all(&self.scratch)?;
         self.sent_bytes += self.scratch.len() as u64;
+        self.obs_sent(self.scratch.len() as u64);
         if self.scratch.capacity() > BUF_RETAIN {
             self.scratch = Vec::new(); // drop an oversized one-off frame's allocation
         }
@@ -185,6 +222,7 @@ impl Framed {
     fn write_frames(&mut self, frames: &[u8]) -> std::io::Result<()> {
         self.stream.write_all(frames)?;
         self.sent_bytes += frames.len() as u64;
+        self.obs_sent(frames.len() as u64);
         Ok(())
     }
 
@@ -200,6 +238,7 @@ impl Framed {
         self.rbuf.resize(n, 0);
         self.stream.read_exact(&mut self.rbuf)?;
         self.recv_bytes += 4 + n as u64;
+        self.obs_recv(4 + n as u64);
         let msg = decode_body(self.proto, &self.rbuf)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()));
         if self.rbuf.capacity() > BUF_RETAIN {
@@ -244,6 +283,12 @@ thread_local! {
 }
 
 impl WriteHandle {
+    /// Attach an observability hub to the write half (the read half is
+    /// attached separately by whoever owns it).
+    pub fn attach_obs(&self, obs: Arc<crate::obs::Obs>) {
+        self.inner.lock().expect("write handle poisoned").attach_obs(obs);
+    }
+
     pub fn send(&self, msg: &Msg) -> std::io::Result<()> {
         self.send_many(std::slice::from_ref(msg))
     }
@@ -497,6 +542,27 @@ mod tests {
                 m => panic!("unexpected {m:?}"),
             }
         }
+    }
+
+    #[test]
+    fn attached_obs_counts_wire_frames_and_bytes() {
+        use crate::obs::{Ctr, Obs, ObsConfig};
+        let o = Obs::new(ObsConfig::full(1));
+        let (mut c, mut s) = pair(Proto::Tcp);
+        c.attach_obs(o.clone());
+        s.attach_obs(o.clone());
+        c.send(&Msg::Heartbeat { executor_id: 1 }).unwrap();
+        c.send_many(&[Msg::Shutdown, Msg::Shutdown]).unwrap();
+        for _ in 0..3 {
+            s.recv().unwrap();
+        }
+        // send + coalesced send_many = 2 wire sends; 3 received frames.
+        assert_eq!(o.registry.counter(Ctr::WireSends), 2);
+        assert_eq!(o.registry.counter(Ctr::WireRecvs), 3);
+        assert_eq!(o.registry.counter(Ctr::WireSendBytes), c.sent_bytes - 4); // minus magic
+        assert_eq!(o.registry.counter(Ctr::WireRecvBytes), s.recv_bytes - 4);
+        // Sampled wire instants were recorded.
+        assert!(o.recorder.written() >= 2);
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Chrome trace-event JSON export for flight-recorder dumps.
+//!
+//! Produces the `{"traceEvents": [...]}` object format loadable in
+//! Perfetto / chrome://tracing. Task-lifecycle records group by task id
+//! into one complete (`ph:"X"`) span each — `ts` is the earliest record
+//! and `dur` spans to the latest — so the span count equals the sampled
+//! task count exactly. Non-task records (wire, provision) export as
+//! instant (`ph:"i"`) events. All timestamps convert from the recorder's
+//! nanoseconds to Chrome's microseconds; `tid` is the ring index the
+//! record landed on, `pid` is always 0.
+
+use std::collections::BTreeMap;
+
+use super::recorder::Rec;
+use crate::util::json::Json;
+
+/// Build the trace-event object from a recorder dump.
+pub fn chrome_trace(recs: &[Rec]) -> Json {
+    let mut spans: BTreeMap<u64, (u64, u64, u16)> = BTreeMap::new();
+    let mut events = Vec::new();
+    for r in recs {
+        if r.kind.is_task() {
+            let e = spans.entry(r.id).or_insert((r.ts, r.ts, r.ring));
+            e.0 = e.0.min(r.ts);
+            e.1 = e.1.max(r.ts);
+        } else {
+            let mut args = Json::obj();
+            args.set("id", Json::Num(r.id as f64)).set("aux", Json::Num(r.aux as f64));
+            let mut ev = Json::obj();
+            ev.set("name", Json::Str(r.kind.name().to_string()))
+                .set("ph", Json::Str("i".to_string()))
+                .set("ts", Json::Num(r.ts as f64 / 1e3))
+                .set("pid", Json::Num(0.0))
+                .set("tid", Json::Num(r.ring as f64))
+                .set("s", Json::Str("t".to_string()))
+                .set("args", args);
+            events.push(ev);
+        }
+    }
+    for (id, (t0, t1, ring)) in spans {
+        let mut args = Json::obj();
+        args.set("task", Json::Num(id as f64));
+        let mut ev = Json::obj();
+        ev.set("name", Json::Str(format!("task {id}")))
+            .set("ph", Json::Str("X".to_string()))
+            .set("ts", Json::Num(t0 as f64 / 1e3))
+            .set("dur", Json::Num((t1 - t0) as f64 / 1e3))
+            .set("pid", Json::Num(0.0))
+            .set("tid", Json::Num(ring as f64))
+            .set("args", args);
+        events.push(ev);
+    }
+    let mut root = Json::obj();
+    root.set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", Json::Str("ms".to_string()));
+    root
+}
+
+/// Count complete-span (`ph:"X"`) events in a trace object — the figure
+/// tests compare this against the expected sampled task count.
+pub fn span_count(trace: &Json) -> usize {
+    trace
+        .get("traceEvents")
+        .and_then(|t| t.as_arr())
+        .map(|evs| {
+            evs.iter()
+                .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::recorder::{Rec, RecKind};
+    use super::*;
+    use crate::util::json::parse;
+
+    fn rec(ts: u64, kind: RecKind, id: u64) -> Rec {
+        Rec { ts, id, aux: 0, kind, ring: 0 }
+    }
+
+    #[test]
+    fn spans_group_by_task_id() {
+        let recs = vec![
+            rec(1_000, RecKind::Submit, 7),
+            rec(5_000, RecKind::Dispatch, 7),
+            rec(9_000, RecKind::Result, 7),
+            rec(2_000, RecKind::Submit, 8),
+            rec(4_000, RecKind::Result, 8),
+        ];
+        let t = chrome_trace(&recs);
+        assert_eq!(span_count(&t), 2);
+        let evs = t.get("traceEvents").unwrap().as_arr().unwrap();
+        // Span for task 7: ts 1us, dur 8us.
+        let s7 = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("task 7"))
+            .unwrap();
+        assert_eq!(s7.get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s7.get("dur").unwrap().as_f64(), Some(8.0));
+        assert_eq!(s7.get("ph").and_then(|p| p.as_str()), Some("X"));
+    }
+
+    #[test]
+    fn wire_and_prov_records_are_instants() {
+        let recs = vec![rec(1_000, RecKind::WireSend, 1), rec(2_000, RecKind::ProvGrant, 2)];
+        let t = chrome_trace(&recs);
+        assert_eq!(span_count(&t), 0);
+        let evs = t.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        for e in evs {
+            assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("i"));
+            assert!(e.get("ts").is_some() && e.get("pid").is_some() && e.get("tid").is_some());
+        }
+    }
+
+    #[test]
+    fn trace_json_roundtrips_with_required_keys() {
+        let recs = vec![
+            rec(1_000, RecKind::Submit, 0),
+            rec(3_000, RecKind::Result, 0),
+            rec(2_000, RecKind::WireRecv, 5),
+        ];
+        let s = chrome_trace(&recs).to_string_compact();
+        let back = parse(&s).expect("valid JSON");
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        for e in evs {
+            for key in ["ph", "ts", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "missing {key}");
+            }
+        }
+        assert_eq!(span_count(&back), 1);
+    }
+
+    #[test]
+    fn empty_dump_is_valid_trace() {
+        let t = chrome_trace(&[]);
+        assert_eq!(span_count(&t), 0);
+        let back = parse(&t.to_string_compact()).unwrap();
+        assert!(back.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+}

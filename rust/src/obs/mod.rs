@@ -1,0 +1,258 @@
+//! Observability: lock-free telemetry registry + flight recorder.
+//!
+//! One [`Obs`] instance per fabric (a live [`crate::falkon::service::Service`]
+//! or a simulated `World`), shared by `Arc` with every component it
+//! instruments: task queues, coordinator, wire framing, provisioner, and
+//! staging collectors. The two halves have different cost/coverage
+//! trade-offs:
+//!
+//! * the **registry** ([`registry::Registry`]) counts *everything* —
+//!   lock-free sharded atomics, always on when observability is enabled;
+//! * the **flight recorder** ([`recorder::Recorder`]) captures *sampled*
+//!   per-task event records into fixed rings, exportable as a Chrome
+//!   trace ([`chrome`]).
+//!
+//! Clock domains: the live fabric stamps records with wall nanoseconds
+//! since the `Obs` epoch (`now_ns()`); the simulator stamps them with
+//! virtual `sim::engine::Time` nanoseconds via the `*_at` methods. A
+//! single fabric never mixes domains, so a dumped trace is internally
+//! consistent either way.
+
+pub mod chrome;
+pub mod recorder;
+pub mod registry;
+
+pub use recorder::{Rec, RecKind, Recorder};
+pub use registry::{Ctr, Gauge, Hist, HistSnapshot, Registry};
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Observability knobs, carried by both fabrics' configs.
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Master switch. Off means no `Obs` is constructed at all — the
+    /// instrumentation sites see `None` and cost one branch.
+    pub enabled: bool,
+    /// Flight-recorder sampling: record task `id` iff `id % sample == 0`.
+    /// `0` disables the recorder (registry-only mode); `1` records every
+    /// task.
+    pub sample: u32,
+    /// Number of ring buffers (writer threads map onto rings; more rings
+    /// mean less mutex sharing).
+    pub rings: usize,
+    /// Records per ring; oldest records are overwritten on wrap.
+    pub ring_cap: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig { enabled: true, sample: 64, rings: 8, ring_cap: 1 << 14 }
+    }
+}
+
+impl ObsConfig {
+    /// Everything off (the "tracing off" ablation row).
+    pub fn off() -> ObsConfig {
+        ObsConfig { enabled: false, ..ObsConfig::default() }
+    }
+
+    /// Counters only, no flight recorder.
+    pub fn registry_only() -> ObsConfig {
+        ObsConfig { sample: 0, ..ObsConfig::default() }
+    }
+
+    /// Full tracing at 1-in-`sample`.
+    pub fn full(sample: u32) -> ObsConfig {
+        ObsConfig { sample, ..ObsConfig::default() }
+    }
+}
+
+/// The per-fabric observability hub.
+#[derive(Debug)]
+pub struct Obs {
+    cfg: ObsConfig,
+    pub registry: Registry,
+    pub recorder: Recorder,
+    epoch: Instant,
+}
+
+impl Obs {
+    pub fn new(cfg: ObsConfig) -> Arc<Obs> {
+        let recorder = Recorder::new(cfg.sample, cfg.rings, cfg.ring_cap);
+        Arc::new(Obs { cfg, registry: Registry::new(), recorder, epoch: Instant::now() })
+    }
+
+    /// Build from a config, honoring the master switch: `None` when
+    /// observability is disabled so instrumentation sites cost a branch.
+    pub fn from_config(cfg: &ObsConfig) -> Option<Arc<Obs>> {
+        if cfg.enabled { Some(Obs::new(cfg.clone())) } else { None }
+    }
+
+    pub fn cfg(&self) -> &ObsConfig {
+        &self.cfg
+    }
+
+    /// Wall-clock nanoseconds since this `Obs` was created (the live
+    /// fabric's trace clock domain).
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Is task `id` selected by the 1-in-N sampler?
+    #[inline]
+    pub fn sampled(&self, id: u64) -> bool {
+        self.recorder.sampled(id)
+    }
+
+    /// Record a task-lifecycle event at wall time (live fabric); gated
+    /// on the sampler.
+    #[inline]
+    pub fn task_event(&self, kind: RecKind, id: u64, aux: u64) {
+        if self.recorder.sampled(id) {
+            self.recorder.record(self.now_ns(), kind, id, aux);
+        }
+    }
+
+    /// Record a task-lifecycle event at a caller-supplied virtual time
+    /// (sim fabric); gated on the sampler.
+    #[inline]
+    pub fn task_event_at(&self, ts: u64, kind: RecKind, id: u64, aux: u64) {
+        if self.recorder.sampled(id) {
+            self.recorder.record(ts, kind, id, aux);
+        }
+    }
+
+    /// Record a high-volume instant event (wire frames), sampled 1-in-N
+    /// by its ordinal so trace volume stays bounded.
+    #[inline]
+    pub fn wire_event(&self, kind: RecKind, ordinal: u64, bytes: u64) {
+        if self.recorder.sampled(ordinal) {
+            self.recorder.record(self.now_ns(), kind, ordinal, bytes);
+        }
+    }
+
+    /// Record a rare instant event (provisioning) unconditionally, at
+    /// wall time.
+    #[inline]
+    pub fn event(&self, kind: RecKind, id: u64, aux: u64) {
+        if self.recorder.enabled() {
+            self.recorder.record(self.now_ns(), kind, id, aux);
+        }
+    }
+
+    /// Record a rare instant event at a caller-supplied virtual time.
+    #[inline]
+    pub fn event_at(&self, ts: u64, kind: RecKind, id: u64, aux: u64) {
+        if self.recorder.enabled() {
+            self.recorder.record(ts, kind, id, aux);
+        }
+    }
+
+    /// Export the current flight-recorder contents as a Chrome
+    /// trace-event JSON object.
+    pub fn chrome_json(&self) -> Json {
+        chrome::chrome_trace(&self.recorder.dump())
+    }
+
+    /// One-line text status snapshot at time `now_ns` (pass `now_ns()`
+    /// for the live fabric, virtual ns for the sim).
+    pub fn status_line(&self, now_ns: u64) -> String {
+        let r = &self.registry;
+        format!(
+            "t={:.3}s submit={} disp={} done={} fail={} retry={} steal={}/{} \
+             wire tx={}f/{}B rx={}f/{}B hb={}+{}supp flush=i:{},c:{},w:{} \
+             prov r:{},g:{},x:{} waiting={} pending={} execs={} trace={}rec",
+            now_ns as f64 / 1e9,
+            r.counter(Ctr::TasksSubmitted),
+            r.counter(Ctr::TasksDispatched),
+            r.counter(Ctr::TasksCompleted),
+            r.counter(Ctr::TasksFailed),
+            r.counter(Ctr::TasksRetried),
+            r.counter(Ctr::StealEvents),
+            r.counter(Ctr::StolenTasks),
+            r.counter(Ctr::WireSends),
+            r.counter(Ctr::WireSendBytes),
+            r.counter(Ctr::WireRecvs),
+            r.counter(Ctr::WireRecvBytes),
+            r.counter(Ctr::HbSent),
+            r.counter(Ctr::HbSuppressed),
+            r.counter(Ctr::FlushIdle),
+            r.counter(Ctr::FlushCap),
+            r.counter(Ctr::FlushWindow),
+            r.counter(Ctr::ProvRequested),
+            r.counter(Ctr::ProvGranted),
+            r.counter(Ctr::ProvExpired),
+            r.gauge(Gauge::TasksWaiting),
+            r.gauge(Gauge::TasksPending),
+            r.gauge(Gauge::ExecsUp),
+            self.recorder.written(),
+        )
+    }
+
+    /// Counter snapshot as a JSON object (name -> value), for exporters.
+    pub fn counters_json(&self) -> Json {
+        let mut o = Json::obj();
+        for c in registry::ALL_CTRS {
+            o.set(c.name(), Json::Num(self.registry.counter(c) as f64));
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_presets() {
+        assert!(!ObsConfig::off().enabled);
+        assert_eq!(ObsConfig::registry_only().sample, 0);
+        assert_eq!(ObsConfig::full(1).sample, 1);
+        assert!(Obs::from_config(&ObsConfig::off()).is_none());
+        assert!(Obs::from_config(&ObsConfig::default()).is_some());
+    }
+
+    #[test]
+    fn registry_only_keeps_counters_but_drops_records() {
+        let o = Obs::new(ObsConfig::registry_only());
+        o.registry.inc(Ctr::TasksSubmitted);
+        o.task_event(RecKind::Submit, 0, 0);
+        o.event(RecKind::ProvGrant, 1, 64);
+        assert_eq!(o.registry.counter(Ctr::TasksSubmitted), 1);
+        assert_eq!(o.recorder.written(), 0);
+    }
+
+    #[test]
+    fn virtual_time_records_use_supplied_ts() {
+        let o = Obs::new(ObsConfig::full(1));
+        o.task_event_at(5_000_000_000, RecKind::Submit, 0, 0);
+        o.event_at(6_000_000_000, RecKind::ProvGrant, 0, 32);
+        let d = o.recorder.dump();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].ts, 5_000_000_000);
+        assert_eq!(d[1].ts, 6_000_000_000);
+    }
+
+    #[test]
+    fn status_line_mentions_core_counters() {
+        let o = Obs::new(ObsConfig::full(1));
+        o.registry.add(Ctr::TasksSubmitted, 42);
+        let s = o.status_line(1_500_000_000);
+        assert!(s.starts_with("t=1.500s"), "{s}");
+        assert!(s.contains("submit=42"), "{s}");
+        assert!(s.contains("trace="), "{s}");
+    }
+
+    #[test]
+    fn counters_json_has_every_name() {
+        let o = Obs::new(ObsConfig::registry_only());
+        o.registry.add(Ctr::WireSends, 3);
+        let j = o.counters_json();
+        assert_eq!(j.get("wire_sends").unwrap().as_f64(), Some(3.0));
+        assert!(j.get("prov_expired").is_some());
+    }
+}

@@ -1,0 +1,264 @@
+//! Flight recorder: fixed-size binary trace records in per-thread ring
+//! buffers.
+//!
+//! Records are 32-byte POD structs written into pre-allocated rings —
+//! the steady-state record path performs zero heap allocation (verified
+//! by `tests/alloc_gate.rs` with tracing enabled). Each writer thread
+//! maps onto one ring via the registry's thread-shard index, so in the
+//! common per-dispatcher/per-reader layout the ring mutex is uncontended
+//! and costs one CAS. Rings overwrite oldest-first on wrap; `dump()`
+//! reconstructs exactly the last `min(written, cap)` records per ring,
+//! in write order, with no loss or duplication at the wrap seam.
+//!
+//! Sampling is deterministic: task `id` is recorded iff `id % sample ==
+//! 0` (`sample == 0` disables the recorder entirely, leaving only the
+//! registry). Determinism is what lets tests assert the dumped span
+//! count equals the sampled task count *exactly*.
+
+use std::sync::Mutex;
+
+/// Record kind. Discriminants are stable (they are the on-ring binary
+/// encoding); kinds at or below `Retry` are task-lifecycle records that
+/// assemble into spans, the rest are instant events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RecKind {
+    Submit = 0,
+    Dispatch = 1,
+    StageIn = 2,
+    Start = 3,
+    End = 4,
+    Result = 5,
+    Retry = 6,
+    WireSend = 7,
+    WireRecv = 8,
+    ProvRequest = 9,
+    ProvGrant = 10,
+    ProvRelease = 11,
+    ProvExpire = 12,
+}
+
+impl RecKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RecKind::Submit => "submit",
+            RecKind::Dispatch => "dispatch",
+            RecKind::StageIn => "stage_in",
+            RecKind::Start => "start",
+            RecKind::End => "end",
+            RecKind::Result => "result",
+            RecKind::Retry => "retry",
+            RecKind::WireSend => "wire_send",
+            RecKind::WireRecv => "wire_recv",
+            RecKind::ProvRequest => "prov_request",
+            RecKind::ProvGrant => "prov_grant",
+            RecKind::ProvRelease => "prov_release",
+            RecKind::ProvExpire => "prov_expire",
+        }
+    }
+
+    /// Task-lifecycle kinds group by task id into one span each.
+    pub fn is_task(self) -> bool {
+        (self as u8) <= (RecKind::Retry as u8)
+    }
+}
+
+/// One trace record. `ts` is nanoseconds in the owning fabric's clock
+/// domain (wall ns since the `Obs` epoch for the live service, virtual
+/// `sim::engine::Time` ns for the simulator). `id` is the task id for
+/// task kinds, a frame/allocation ordinal otherwise. `aux` is
+/// kind-specific (executor id, byte count, node count, exit code).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rec {
+    pub ts: u64,
+    pub id: u64,
+    pub aux: u64,
+    pub kind: RecKind,
+    pub ring: u16,
+}
+
+impl Rec {
+    const ZERO: Rec = Rec { ts: 0, id: 0, aux: 0, kind: RecKind::Submit, ring: 0 };
+}
+
+#[derive(Debug)]
+struct Ring {
+    buf: Vec<Rec>,
+    head: usize,
+    written: u64,
+}
+
+/// The recorder: N rings of fixed capacity, plus the sampling rate.
+#[derive(Debug)]
+pub struct Recorder {
+    sample: u32,
+    rings: Vec<Mutex<Ring>>,
+}
+
+impl Recorder {
+    /// `sample == 0` (or `rings == 0` / `cap == 0`) builds a disabled
+    /// recorder that drops every record: registry-only mode.
+    pub fn new(sample: u32, rings: usize, cap: usize) -> Recorder {
+        let rings = if sample == 0 || cap == 0 {
+            Vec::new()
+        } else {
+            (0..rings)
+                .map(|_| Mutex::new(Ring { buf: vec![Rec::ZERO; cap], head: 0, written: 0 }))
+                .collect()
+        };
+        Recorder { sample, rings }
+    }
+
+    pub fn enabled(&self) -> bool {
+        !self.rings.is_empty()
+    }
+
+    pub fn sample(&self) -> u32 {
+        self.sample
+    }
+
+    /// Should task `id` be recorded? Deterministic 1-in-N by id.
+    #[inline]
+    pub fn sampled(&self, id: u64) -> bool {
+        self.enabled() && id % self.sample as u64 == 0
+    }
+
+    /// Write one record (allocation-free; callers gate on `sampled()`
+    /// for task kinds).
+    #[inline]
+    pub fn record(&self, ts: u64, kind: RecKind, id: u64, aux: u64) {
+        if self.rings.is_empty() {
+            return;
+        }
+        let r = super::registry::thread_shard() % self.rings.len();
+        let mut ring = self.rings[r].lock().unwrap();
+        let cap = ring.buf.len();
+        let head = ring.head;
+        ring.buf[head] = Rec { ts, id, aux, kind, ring: r as u16 };
+        ring.head = (head + 1) % cap;
+        ring.written += 1;
+    }
+
+    /// Total records ever written (across wraps).
+    pub fn written(&self) -> u64 {
+        self.rings.iter().map(|r| r.lock().unwrap().written).sum()
+    }
+
+    /// Drain a copy of every surviving record, merged across rings and
+    /// sorted by timestamp. Cold path — allocates freely. Per ring this
+    /// returns exactly `min(written, cap)` records in write order: on a
+    /// wrapped ring the oldest surviving record sits at `head`.
+    pub fn dump(&self) -> Vec<Rec> {
+        let mut out = Vec::new();
+        for r in &self.rings {
+            let ring = r.lock().unwrap();
+            let cap = ring.buf.len();
+            if ring.written >= cap as u64 {
+                out.extend_from_slice(&ring.buf[ring.head..]);
+                out.extend_from_slice(&ring.buf[..ring.head]);
+            } else {
+                out.extend_from_slice(&ring.buf[..ring.head]);
+            }
+        }
+        out.sort_by_key(|r| r.ts);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_drops_everything() {
+        let r = Recorder::new(0, 8, 1024);
+        assert!(!r.enabled());
+        assert!(!r.sampled(0));
+        r.record(1, RecKind::Submit, 0, 0);
+        assert_eq!(r.written(), 0);
+        assert!(r.dump().is_empty());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_one_in_n() {
+        let r = Recorder::new(4, 1, 64);
+        let picked: Vec<u64> = (0..16).filter(|&id| r.sampled(id)).collect();
+        assert_eq!(picked, vec![0, 4, 8, 12]);
+        let r1 = Recorder::new(1, 1, 64);
+        assert!((0..16).all(|id| r1.sampled(id)));
+    }
+
+    #[test]
+    fn dump_before_wrap_returns_all_in_order() {
+        let r = Recorder::new(1, 1, 8);
+        for i in 0..5u64 {
+            r.record(i * 10, RecKind::Dispatch, i, 0);
+        }
+        let d = r.dump();
+        assert_eq!(d.len(), 5);
+        assert_eq!(d.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(r.written(), 5);
+    }
+
+    #[test]
+    fn wrap_keeps_exactly_last_cap_records_no_loss_no_dup() {
+        // Write 3.5x capacity; the dump must hold exactly the last `cap`
+        // records, in order, with no duplicates and no gaps at the seam.
+        let cap = 16usize;
+        let n = 56u64;
+        let r = Recorder::new(1, 1, cap);
+        for i in 0..n {
+            r.record(i, RecKind::Result, i, 0);
+        }
+        assert_eq!(r.written(), n);
+        let d = r.dump();
+        assert_eq!(d.len(), cap);
+        let ids: Vec<u64> = d.iter().map(|x| x.id).collect();
+        let want: Vec<u64> = (n - cap as u64..n).collect();
+        assert_eq!(ids, want);
+    }
+
+    #[test]
+    fn exact_wrap_boundary() {
+        // written == cap exactly: head is back at 0, the full buffer is
+        // live, and the dump is the whole sequence.
+        let cap = 8usize;
+        let r = Recorder::new(1, 1, cap);
+        for i in 0..cap as u64 {
+            r.record(i, RecKind::Start, i, 0);
+        }
+        let ids: Vec<u64> = r.dump().iter().map(|x| x.id).collect();
+        assert_eq!(ids, (0..cap as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dump_merges_rings_sorted_by_ts() {
+        let r = std::sync::Arc::new(Recorder::new(1, 4, 64));
+        // Write from several threads so multiple rings are populated;
+        // timestamps are globally ordered by construction.
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10u64 {
+                    r.record(t * 1000 + i, RecKind::WireSend, t, i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let d = r.dump();
+        assert_eq!(d.len(), 40);
+        assert!(d.windows(2).all(|w| w[0].ts <= w[1].ts), "dump not ts-sorted");
+    }
+
+    #[test]
+    fn task_kind_partition() {
+        assert!(RecKind::Submit.is_task());
+        assert!(RecKind::Retry.is_task());
+        assert!(!RecKind::WireSend.is_task());
+        assert!(!RecKind::ProvExpire.is_task());
+        assert_eq!(RecKind::ProvExpire.name(), "prov_expire");
+    }
+}

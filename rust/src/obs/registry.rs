@@ -1,0 +1,418 @@
+//! Lock-free sharded telemetry registry.
+//!
+//! Monotonic counters, gauges, and log-linear HDR-style histograms, all
+//! registered by static name (the [`Ctr`]/[`Gauge`]/[`Hist`] enums index
+//! fixed atomic arrays — no hashing, no registration order, no locks).
+//! Writers land on one of [`SHARDS`] shards chosen per thread, so
+//! per-dispatcher and per-executor-reader threads never contend on a
+//! cache line; readers aggregate every shard on demand. The write path
+//! performs zero heap allocation (the `tests/alloc_gate.rs` discipline).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Writer shards. More than the dispatcher-thread count of any
+/// configuration we run; threads map onto shards round-robin.
+pub const SHARDS: usize = 16;
+
+/// Monotonic counters, by static name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Ctr {
+    TasksSubmitted,
+    TasksDispatched,
+    TasksCompleted,
+    TasksFailed,
+    TasksRetried,
+    StealEvents,
+    StolenTasks,
+    WireSends,
+    WireSendBytes,
+    WireRecvs,
+    WireRecvBytes,
+    HbSent,
+    HbSuppressed,
+    FlushIdle,
+    FlushCap,
+    FlushWindow,
+    ProvRequested,
+    ProvGranted,
+    ProvReleased,
+    ProvExpired,
+    StageRecords,
+    StageBytes,
+    StageFlushes,
+    StageFlushedBytes,
+}
+
+pub const CTR_COUNT: usize = 24;
+
+/// Every counter, for snapshot/export loops.
+pub const ALL_CTRS: [Ctr; CTR_COUNT] = [
+    Ctr::TasksSubmitted,
+    Ctr::TasksDispatched,
+    Ctr::TasksCompleted,
+    Ctr::TasksFailed,
+    Ctr::TasksRetried,
+    Ctr::StealEvents,
+    Ctr::StolenTasks,
+    Ctr::WireSends,
+    Ctr::WireSendBytes,
+    Ctr::WireRecvs,
+    Ctr::WireRecvBytes,
+    Ctr::HbSent,
+    Ctr::HbSuppressed,
+    Ctr::FlushIdle,
+    Ctr::FlushCap,
+    Ctr::FlushWindow,
+    Ctr::ProvRequested,
+    Ctr::ProvGranted,
+    Ctr::ProvReleased,
+    Ctr::ProvExpired,
+    Ctr::StageRecords,
+    Ctr::StageBytes,
+    Ctr::StageFlushes,
+    Ctr::StageFlushedBytes,
+];
+
+impl Ctr {
+    pub fn name(self) -> &'static str {
+        match self {
+            Ctr::TasksSubmitted => "tasks_submitted",
+            Ctr::TasksDispatched => "tasks_dispatched",
+            Ctr::TasksCompleted => "tasks_completed",
+            Ctr::TasksFailed => "tasks_failed",
+            Ctr::TasksRetried => "tasks_retried",
+            Ctr::StealEvents => "steal_events",
+            Ctr::StolenTasks => "stolen_tasks",
+            Ctr::WireSends => "wire_sends",
+            Ctr::WireSendBytes => "wire_send_bytes",
+            Ctr::WireRecvs => "wire_recvs",
+            Ctr::WireRecvBytes => "wire_recv_bytes",
+            Ctr::HbSent => "hb_sent",
+            Ctr::HbSuppressed => "hb_suppressed",
+            Ctr::FlushIdle => "flush_idle",
+            Ctr::FlushCap => "flush_cap",
+            Ctr::FlushWindow => "flush_window",
+            Ctr::ProvRequested => "prov_requested",
+            Ctr::ProvGranted => "prov_granted",
+            Ctr::ProvReleased => "prov_released",
+            Ctr::ProvExpired => "prov_expired",
+            Ctr::StageRecords => "stage_records",
+            Ctr::StageBytes => "stage_bytes",
+            Ctr::StageFlushes => "stage_flushes",
+            Ctr::StageFlushedBytes => "stage_flushed_bytes",
+        }
+    }
+}
+
+/// Last-write-wins gauges (single writer per gauge in practice).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Gauge {
+    TasksWaiting,
+    TasksPending,
+    ExecsUp,
+    NodesHeld,
+}
+
+pub const GAUGE_COUNT: usize = 4;
+
+impl Gauge {
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::TasksWaiting => "tasks_waiting",
+            Gauge::TasksPending => "tasks_pending",
+            Gauge::ExecsUp => "execs_up",
+            Gauge::NodesHeld => "nodes_held",
+        }
+    }
+}
+
+/// Log-linear histograms (value domain: non-negative integers — bundle
+/// sizes, microsecond latencies).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Hist {
+    BundleSize,
+    TaskSpanUs,
+    QueueUs,
+}
+
+pub const HIST_COUNT: usize = 3;
+
+impl Hist {
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::BundleSize => "bundle_size",
+            Hist::TaskSpanUs => "task_span_us",
+            Hist::QueueUs => "queue_us",
+        }
+    }
+}
+
+/// Fixed log-linear bucket layout: exact below 8, then 8 sub-buckets per
+/// octave (HdrHistogram-style, ~9% worst-case relative error). The layout
+/// is identical for every histogram and every shard, so snapshots merge
+/// bucket-by-bucket.
+pub const HIST_BUCKETS: usize = 496;
+
+/// Bucket index of a value (total order preserved; full u64 domain).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v < 8 {
+        v as usize
+    } else {
+        let octave = 63 - v.leading_zeros() as usize; // >= 3
+        let sub = ((v >> (octave - 3)) & 7) as usize;
+        octave * 8 - 16 + sub
+    }
+}
+
+/// Lower bound of a bucket (the value a quantile read reports).
+pub fn bucket_lower(idx: usize) -> u64 {
+    if idx < 8 {
+        idx as u64
+    } else {
+        let octave = (idx + 16) / 8;
+        let sub = (idx + 16) % 8;
+        ((8 + sub) as u64) << (octave - 3)
+    }
+}
+
+#[derive(Debug)]
+struct Shard {
+    counters: [AtomicU64; CTR_COUNT],
+    gauges: [AtomicU64; GAUGE_COUNT],
+    hists: [Box<[AtomicU64]>; HIST_COUNT],
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| {
+                (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect::<Vec<_>>().into_boxed_slice()
+            }),
+        }
+    }
+}
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// This thread's writer shard (assigned round-robin on first use;
+    /// const-initialized so the TLS access itself never allocates).
+    static SHARD_IDX: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// The calling thread's shard index in `[0, SHARDS)`. Shared with the
+/// flight recorder's ring selection so one thread's telemetry stays on
+/// one cache-warm shard.
+#[inline]
+pub(crate) fn thread_shard() -> usize {
+    SHARD_IDX.with(|c| {
+        let mut v = c.get();
+        if v == usize::MAX {
+            v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+            c.set(v);
+        }
+        v
+    })
+}
+
+/// A merged histogram snapshot (one bucket array, aggregated over shards).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    /// Merge another snapshot into this one (bucket layouts are fixed, so
+    /// merging is elementwise addition — the "mergeable across threads"
+    /// property).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    /// Quantile `q ∈ [0,1]`: lower bound of the bucket holding the rank.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return bucket_lower(i);
+            }
+        }
+        bucket_lower(HIST_BUCKETS - 1)
+    }
+}
+
+/// The sharded registry. One instance per fabric (service or sim world);
+/// deliberately NOT process-global so parallel tests never share state.
+#[derive(Debug)]
+pub struct Registry {
+    shards: Vec<Shard>,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { shards: (0..SHARDS).map(|_| Shard::new()).collect() }
+    }
+
+    /// Add `n` to a counter (lock-free, allocation-free).
+    #[inline]
+    pub fn add(&self, c: Ctr, n: u64) {
+        self.shards[thread_shard()].counters[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment a counter by one.
+    #[inline]
+    pub fn inc(&self, c: Ctr) {
+        self.add(c, 1);
+    }
+
+    /// Aggregated counter value (sums every shard).
+    pub fn counter(&self, c: Ctr) -> u64 {
+        self.shards.iter().map(|s| s.counters[c as usize].load(Ordering::Relaxed)).sum()
+    }
+
+    /// Set a gauge (last write wins; stored on shard 0 — gauges are
+    /// point-in-time values, not per-thread accumulations).
+    #[inline]
+    pub fn gauge_set(&self, g: Gauge, v: u64) {
+        self.shards[0].gauges[g as usize].store(v, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.shards[0].gauges[g as usize].load(Ordering::Relaxed)
+    }
+
+    /// Record one value into a histogram (lock-free, allocation-free).
+    #[inline]
+    pub fn observe(&self, h: Hist, v: u64) {
+        self.shards[thread_shard()].hists[h as usize][bucket_of(v)]
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Merged snapshot of one histogram across all shards.
+    pub fn hist(&self, h: Hist) -> HistSnapshot {
+        let mut buckets = vec![0u64; HIST_BUCKETS];
+        let mut count = 0u64;
+        for s in &self.shards {
+            for (i, b) in s.hists[h as usize].iter().enumerate() {
+                let v = b.load(Ordering::Relaxed);
+                buckets[i] += v;
+                count += v;
+            }
+        }
+        HistSnapshot { buckets, count }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_monotonic_and_total() {
+        let mut last = 0usize;
+        for v in [0u64, 1, 7, 8, 9, 15, 16, 100, 1000, 1 << 20, u64::MAX / 2, u64::MAX] {
+            let b = bucket_of(v);
+            assert!(b < HIST_BUCKETS, "bucket {b} out of range for {v}");
+            assert!(b >= last, "bucket order violated at {v}");
+            last = b;
+            // The lower bound of a value's bucket never exceeds the value.
+            assert!(bucket_lower(b) <= v, "lower({b})={} > {v}", bucket_lower(b));
+        }
+        // Exact below 8.
+        for v in 0..8u64 {
+            assert_eq!(bucket_of(v), v as usize);
+            assert_eq!(bucket_lower(v as usize), v);
+        }
+        // Relative error bounded by one sub-bucket (~12.5%).
+        for v in [100u64, 12345, 1 << 30] {
+            let lo = bucket_lower(bucket_of(v));
+            assert!((v - lo) as f64 / v as f64 <= 0.125, "{v} -> {lo}");
+        }
+    }
+
+    #[test]
+    fn counters_aggregate_across_threads() {
+        let r = std::sync::Arc::new(Registry::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    r.inc(Ctr::TasksSubmitted);
+                }
+                r.add(Ctr::WireSendBytes, 64);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter(Ctr::TasksSubmitted), 4000);
+        assert_eq!(r.counter(Ctr::WireSendBytes), 256);
+        assert_eq!(r.counter(Ctr::TasksFailed), 0);
+    }
+
+    #[test]
+    fn gauges_last_write_wins() {
+        let r = Registry::new();
+        r.gauge_set(Gauge::TasksWaiting, 10);
+        r.gauge_set(Gauge::TasksWaiting, 3);
+        assert_eq!(r.gauge(Gauge::TasksWaiting), 3);
+        assert_eq!(r.gauge(Gauge::ExecsUp), 0);
+    }
+
+    #[test]
+    fn histogram_quantiles_and_merge() {
+        let r = Registry::new();
+        for v in 1..=100u64 {
+            r.observe(Hist::QueueUs, v);
+        }
+        let snap = r.hist(Hist::QueueUs);
+        assert_eq!(snap.count, 100);
+        // p50 within one sub-bucket of 50, p100 within one of 100.
+        let p50 = snap.quantile(0.50);
+        assert!((44..=50).contains(&p50), "p50 {p50}");
+        let p100 = snap.quantile(1.0);
+        assert!((88..=100).contains(&p100), "p100 {p100}");
+        // Merge doubles the counts, quantiles unchanged.
+        let mut merged = snap.clone();
+        merged.merge(&snap);
+        assert_eq!(merged.count, 200);
+        assert_eq!(merged.quantile(0.50), p50);
+        // Empty histogram is safe.
+        assert_eq!(r.hist(Hist::BundleSize).quantile(0.99), 0);
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Ctr::TasksSubmitted.name(), "tasks_submitted");
+        assert_eq!(Gauge::NodesHeld.name(), "nodes_held");
+        assert_eq!(Hist::BundleSize.name(), "bundle_size");
+        assert_eq!(ALL_CTRS.len(), CTR_COUNT);
+        // Every counter's discriminant matches its ALL_CTRS slot.
+        for (i, c) in ALL_CTRS.iter().enumerate() {
+            assert_eq!(*c as usize, i);
+        }
+    }
+}

@@ -11,13 +11,24 @@ pub struct Summary {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
     /// Compute a summary; returns all-zero summary for an empty sample.
     pub fn of(xs: &[f64]) -> Summary {
         if xs.is_empty() {
-            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p99: 0.0 };
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                p999: 0.0,
+            };
         }
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
@@ -33,6 +44,7 @@ impl Summary {
             p50: percentile_sorted(&sorted, 0.50),
             p90: percentile_sorted(&sorted, 0.90),
             p99: percentile_sorted(&sorted, 0.99),
+            p999: percentile_sorted(&sorted, 0.999),
         }
     }
 }
@@ -147,6 +159,35 @@ mod tests {
         assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
         assert!((percentile_sorted(&xs, 0.0) - 0.0).abs() < 1e-12);
         assert!((percentile_sorted(&xs, 1.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p999_exact_on_1001_points() {
+        // 0..=1000: position 0.999 · 1000 = 999 lands exactly on an
+        // element — no interpolation, the answer is the value itself.
+        let xs: Vec<f64> = (0..=1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.p999, 999.0);
+        assert_eq!(s.max, 1000.0);
+        assert!(s.p999 >= s.p99 && s.p99 >= s.p90);
+    }
+
+    #[test]
+    fn p999_interpolates_between_tail_values() {
+        // Two points: position 0.999 · 1 = 0.999 → 0.001·lo + 0.999·hi.
+        let xs = [0.0, 1000.0];
+        let s = Summary::of(&xs);
+        assert!((s.p999 - 999.0).abs() < 1e-9, "p999 {}", s.p999);
+        // 101 points 0..=100: position 99.9 → between 99 and 100.
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&xs, 0.999) - 99.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p999_single_sample_and_empty() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.p999, 7.0);
+        assert_eq!(Summary::of(&[]).p999, 0.0);
     }
 
     #[test]

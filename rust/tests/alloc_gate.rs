@@ -10,6 +10,12 @@
 //! steady state performs **zero** heap allocations per task. A second
 //! phase asserts the same for the retry path (`fail_attempt` storms).
 //!
+//! Both phases run with FULL observability attached (registry counters +
+//! flight recorder sampling every task): telemetry must never allocate
+//! in steady state, including ring-buffer wrap, or it cannot be left on
+//! in production. The `Obs` is created before warmup so ring allocation
+//! happens outside the measured window.
+//!
 //! Everything here is deliberately single-threaded and contained in ONE
 //! `#[test]` so no concurrent test pollutes the process-wide counter.
 
@@ -17,6 +23,7 @@ use falkon::falkon::errors::{RetryPolicy, TaskError};
 use falkon::falkon::queue::TaskQueues;
 use falkon::falkon::task::TaskPayload;
 use falkon::net::proto::{encode_dispatch_into, WireTaskRef};
+use falkon::obs::{Obs, ObsConfig};
 use falkon::util::alloc::{alloc_count, CountingAlloc};
 
 #[global_allocator]
@@ -76,8 +83,12 @@ fn retry_cycle(q: &mut TaskQueues, id: u64, ids: &mut Vec<u64>, policy: &RetryPo
 
 #[test]
 fn steady_state_dispatch_path_is_allocation_free() {
-    // ---- Phase 1: the queue→bundle-encode dispatch path.
+    // ---- Phase 1: the queue→bundle-encode dispatch path, with full
+    // tracing on (sample=1: every task records Submit/Dispatch/Result;
+    // the rings wrap many times over MEASURE — overwrite, never grow).
+    let obs = Obs::new(ObsConfig::full(1));
     let mut q = TaskQueues::new();
+    q.attach_obs(obs.clone());
     let mut next_id = 0u64;
     let mut ids: Vec<u64> = Vec::with_capacity(BUNDLE);
     let mut snapshot: Vec<(u64, TaskPayload)> = Vec::with_capacity(BUNDLE);
@@ -97,13 +108,25 @@ fn steady_state_dispatch_path_is_allocation_free() {
         0,
         "dispatch hot path allocated {delta} times over {MEASURE} bundles \
          ({} tasks) — the queue→bundle-encode path must be allocation-free \
-         in steady state",
+         in steady state, WITH full tracing attached",
         MEASURE * BUNDLE
     );
+    // Tracing actually ran: every measured task recorded its lifecycle.
+    assert!(
+        obs.recorder.written() as usize >= MEASURE * BUNDLE,
+        "recorder must have been live during the measured window"
+    );
+    assert_eq!(
+        obs.registry.counter(falkon::obs::Ctr::TasksCompleted),
+        ((WARMUP + MEASURE) * BUNDLE) as u64
+    );
 
-    // ---- Phase 2: the retry path (per-attempt error bookkeeping).
+    // ---- Phase 2: the retry path (per-attempt error bookkeeping),
+    // tracing on here too.
     let policy = RetryPolicy { max_attempts: u32::MAX, ..Default::default() };
+    let obs2 = Obs::new(ObsConfig::full(1));
     let mut q = TaskQueues::new();
+    q.attach_obs(obs2.clone());
     let id = q.submit(TaskPayload::Sleep { secs: 0.0 });
     for _ in 0..WARMUP {
         retry_cycle(&mut q, id, &mut ids, &policy);

@@ -26,6 +26,7 @@ fn wire_service(bundle: usize, adaptive_cap: usize, partitions: usize) -> Servic
         retry: RetryPolicy::default(),
         hierarchy: HierarchyConfig { partitions, ..Default::default() },
         provision: None,
+        ..Default::default()
     })
     .expect("service start")
 }
@@ -91,6 +92,7 @@ fn no_lost_or_duplicated_results_under_executor_failure_wave() {
         retry: RetryPolicy { max_attempts: 10, suspend_after_failures: 1000, ..Default::default() },
         hierarchy: HierarchyConfig { partitions: 4, steal_batch: 8 },
         provision: None,
+        ..Default::default()
     })
     .unwrap();
     let addr = svc.addr().to_string();
@@ -187,6 +189,7 @@ fn suspension_timing_unchanged_with_batched_results() {
         retry: RetryPolicy { max_attempts: 10, suspend_after_failures: 3, failure_window_s: 60.0 },
         hierarchy: HierarchyConfig::default(),
         provision: None,
+        ..Default::default()
     })
     .unwrap();
     let addr = svc.addr().to_string();
