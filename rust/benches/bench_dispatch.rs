@@ -14,15 +14,17 @@
 
 use falkon::falkon::coordinator::HierarchyConfig;
 use falkon::falkon::dispatch::DispatchConfig;
-use falkon::falkon::exec::{spawn_fleet_with, DefaultRunner};
+use falkon::falkon::exec::{spawn_fleet_with, spawn_lite_fleet, DefaultRunner};
 use falkon::falkon::service::{Service, ServiceConfig};
 use falkon::falkon::simworld::{
     run_sleep_workload, run_wire_workload, SimTask, WireProto, World, WorldConfig,
 };
 use falkon::falkon::task::TaskPayload;
+use falkon::net::reactor::raise_fd_limit;
 use falkon::sim::machine::Machine;
 use falkon::util::bench::{banner, emit_json, Table};
 use falkon::util::json::Json;
+use falkon::util::stats::Summary;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -145,13 +147,132 @@ fn wire_sweep() {
         }
     }
     t.print();
+
+    // C10K connection scaling: lite executors (zero threads per
+    // connection) against the reactor service on 4 I/O threads. Quick
+    // mode runs a 256-connection mini row (what CI smokes); the full run
+    // adds the old-scale 512 row and the headline >= 10K row.
+    banner("C10K — reactor connection scaling (lite fleet, 4 I/O threads)");
+    let mut t = Table::new(&[
+        "connections",
+        "tasks/s",
+        "p50 ms",
+        "p99 ms",
+        "p99.9 ms",
+        "dropped",
+        "lost",
+        "dup",
+    ]);
+    let mut c10k_rows = Vec::new();
+    let scales: &[(usize, usize, usize)] = if quick() {
+        &[(256, 2_000, 200)]
+    } else {
+        &[(512, 20_000, 500), (10_000, 20_000, 500)]
+    };
+    for &(conns, n, probes) in scales {
+        let r = c10k_row(conns, n, probes);
+        t.row(&[
+            conns.to_string(),
+            format!("{:.0}", r.tput),
+            format!("{:.3}", r.p50),
+            format!("{:.3}", r.p99),
+            format!("{:.3}", r.p999),
+            r.dropped.to_string(),
+            r.lost.to_string(),
+            r.dup.to_string(),
+        ]);
+        let mut row = Json::obj();
+        row.set("connections", Json::Num(conns as f64))
+            .set("io_threads", Json::Num(C10K_IO_THREADS as f64))
+            .set("tasks_per_s", Json::Num(r.tput))
+            .set("p50_ms", Json::Num(r.p50))
+            .set("p99_ms", Json::Num(r.p99))
+            .set("p999_ms", Json::Num(r.p999))
+            .set("disconnected", Json::Num(r.dropped as f64))
+            .set("lost", Json::Num(r.lost as f64))
+            .set("duplicated", Json::Num(r.dup as f64));
+        c10k_rows.push(row);
+    }
+    t.print();
+
     let mut wire_summary = Json::obj();
     wire_summary
         .set("executors", Json::Num(4.0))
         .set("tasks", Json::Num(wire_n as f64))
         .set("sim_machine", Json::Str("anluc-ws".into()))
-        .set("sweep", Json::Arr(wire_rows));
+        .set("sweep", Json::Arr(wire_rows))
+        .set("c10k", Json::Arr(c10k_rows));
     emit_json("wire", &wire_summary).expect("write BENCH_wire.json");
+}
+
+/// Reactor I/O threads for every C10K row (the headline constraint: the
+/// service must sustain the fleet on no more than this many).
+const C10K_IO_THREADS: usize = 4;
+
+struct C10kResult {
+    tput: f64,
+    p50: f64,
+    p99: f64,
+    p999: f64,
+    dropped: usize,
+    lost: usize,
+    dup: usize,
+}
+
+/// One C10K-style row (protocol in EXPERIMENTS.md): ramp `conns` lite
+/// executors (one live registered connection each, zero threads), bulk-
+/// submit `n` sleep-0 tasks for sustained tasks/s — dropping an eighth
+/// of the fleet mid-campaign to exercise the disconnect-retry path —
+/// then measure submit→outcome RTT over `probes` sequential tasks for
+/// latency percentiles.
+fn c10k_row(conns: usize, n: usize, probes: usize) -> C10kResult {
+    raise_fd_limit(conns as u64 * 2 + 1024);
+    let svc = Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        dispatch: DispatchConfig { bundle: 1, data_aware: false, adaptive_cap: 0 },
+        io_threads: C10K_IO_THREADS,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+    let mut fleet = spawn_lite_fleet(&addr, conns, Arc::new(DefaultRunner), 1).unwrap();
+    assert!(
+        svc.wait_executors(conns, Duration::from_secs(120)),
+        "C10K fleet must fully register"
+    );
+
+    // Phase A: sustained throughput, with a mid-run disconnect wave.
+    let wave = conns / 8;
+    let t0 = Instant::now();
+    let ids = svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let dropped: Vec<_> = fleet.drain(..wave).collect();
+    for e in dropped {
+        e.stop();
+    }
+    let outcomes = svc.wait_all(Duration::from_secs(600)).expect("campaign must finish");
+    let dt = t0.elapsed().as_secs_f64();
+    let mut seen: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
+    seen.sort_unstable();
+    let dup = seen.windows(2).filter(|w| w[0] == w[1]).count();
+    let lost = ids.iter().filter(|&&id| seen.binary_search(&id).is_err()).count();
+
+    // Phase B: submit→outcome RTT, one probe task at a time on the
+    // otherwise-idle (but fully connected) fabric.
+    let mut rtts = Vec::with_capacity(probes);
+    for _ in 0..probes {
+        let t = Instant::now();
+        svc.submit(TaskPayload::Sleep { secs: 0.0 });
+        let got = svc.wait_all(Duration::from_secs(60)).expect("probe must finish");
+        assert_eq!(got.len(), 1);
+        rtts.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let s = Summary::of(&rtts);
+
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+    C10kResult { tput: n as f64 / dt, p50: s.p50, p99: s.p99, p999: s.p999, dropped: wave, lost, dup }
 }
 
 fn main() {

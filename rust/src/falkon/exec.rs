@@ -11,7 +11,9 @@ use crate::falkon::errors::TaskError;
 use crate::falkon::task::TaskPayload;
 use crate::fs::ramdisk::Ramdisk;
 use crate::net::proto::{Msg, WireResult, WireTask};
-use crate::net::tcpcore::{Framed, Proto, WriteHandle};
+use crate::net::reactor::{client_reactor, ConnCtx, ConnHandler};
+use crate::net::tcpcore::{Proto, WriteHandle};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -138,6 +140,26 @@ impl ExecutorConfig {
             initial_credit: cores,
             partition: 0,
             result_batch: 16,
+            batch_window: Duration::from_millis(2),
+            heartbeat: None,
+        }
+    }
+
+    /// Lite executor for connection-scaling runs (the C10K bench rows):
+    /// `cores = 0` means no worker pool — every dispatched task runs
+    /// inline on the reactor I/O thread that decoded it — and with
+    /// `result_batch <= 1` and heartbeats off the executor owns ZERO
+    /// threads, so one process can hold 10K+ live registered connections
+    /// on nothing but the shared client reactor's thread pool.
+    pub fn lite(service_addr: String, executor_id: u64) -> ExecutorConfig {
+        ExecutorConfig {
+            service_addr,
+            executor_id,
+            cores: 0,
+            proto: Proto::Tcp,
+            initial_credit: 1,
+            partition: 0,
+            result_batch: 1,
             batch_window: Duration::from_millis(2),
             heartbeat: None,
         }
@@ -345,9 +367,37 @@ impl Executor {
         runner: Arc<dyn TaskRunner>,
         ramdisk: Option<Arc<Ramdisk>>,
     ) -> anyhow::Result<Executor> {
-        let mut framed = Framed::connect(&config.service_addr, config.proto)?;
+        let stream = TcpStream::connect(&config.service_addr)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let lite = config.cores == 0;
+        // Worker channel: absent in lite mode, where the connection's
+        // reactor thread runs tasks inline.
+        let (tx, rx) = if lite {
+            (None, None)
+        } else {
+            let (tx, rx) = mpsc::channel::<WireTask>();
+            (Some(tx), Some(Arc::new(Mutex::new(rx))))
+        };
+
+        // Hand the socket to the shared client reactor. The maker runs
+        // synchronously once the connection has a write handle, so it can
+        // build the batcher around that handle and pass both out.
+        let mut made: Option<Arc<ResultBatcher>> = None;
+        let write_half = {
+            let executor_id = config.executor_id;
+            let (cap, window) = (config.result_batch, config.batch_window);
+            let (runner, ramdisk) = (runner.clone(), ramdisk.clone());
+            let (stop, tx) = (stop.clone(), tx.clone());
+            let made = &mut made;
+            client_reactor().add_client(stream, config.proto, move |w| {
+                let batcher = Arc::new(ResultBatcher::new(w.clone(), executor_id, cap, window));
+                *made = Some(batcher.clone());
+                Box::new(ExecConn { executor_id, batcher, tx, runner, ramdisk, stop })
+            })?
+        };
+        let batcher = made.expect("connection maker did not run");
         // Registration + initial credit ride one gathered write.
-        framed.send_many(&[
+        write_half.send_many(&[
             Msg::Register {
                 executor_id: config.executor_id,
                 cores: config.cores,
@@ -355,46 +405,38 @@ impl Executor {
             },
             Msg::Ready { executor_id: config.executor_id, slots: config.initial_credit },
         ])?;
-        let (mut read_half, write_half) = framed.split()?;
 
-        let stop = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::channel::<WireTask>();
-        let rx = Arc::new(Mutex::new(rx));
         let mut threads = Vec::new();
-        let batcher = Arc::new(ResultBatcher::new(
-            write_half.clone(),
-            config.executor_id,
-            config.result_batch,
-            config.batch_window,
-        ));
 
-        // Worker threads.
-        for _ in 0..config.cores.max(1) {
-            let rx = rx.clone();
-            let batcher = batcher.clone();
-            let runner = runner.clone();
-            let stop = stop.clone();
-            threads.push(std::thread::spawn(move || loop {
-                let task = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv_timeout(Duration::from_millis(50))
-                };
-                match task {
-                    Ok(task) => {
-                        let (exit_code, error) = match runner.run(&task.payload) {
-                            Ok(code) => (code, None),
-                            Err(e) => (-1, Some(e)),
-                        };
-                        batcher.complete(WireResult { task_id: task.id, exit_code, error });
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if stop.load(Ordering::SeqCst) {
-                            break;
+        // Worker threads (none in lite mode).
+        if let Some(rx) = rx {
+            for _ in 0..config.cores {
+                let rx = rx.clone();
+                let batcher = batcher.clone();
+                let runner = runner.clone();
+                let stop = stop.clone();
+                threads.push(std::thread::spawn(move || loop {
+                    let task = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv_timeout(Duration::from_millis(50))
+                    };
+                    match task {
+                        Ok(task) => {
+                            let (exit_code, error) = match runner.run(&task.payload) {
+                                Ok(code) => (code, None),
+                                Err(e) => (-1, Some(e)),
+                            };
+                            batcher.complete(WireResult { task_id: task.id, exit_code, error });
                         }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                }
-            }));
+                }));
+            }
         }
 
         // Window flusher: bounds how long a completed result can wait
@@ -449,53 +491,6 @@ impl Executor {
             }));
         }
 
-        // Reader thread: receives Dispatch bundles and feeds workers;
-        // handles staging pushes inline (writes are ramdisk-fast).
-        {
-            let stop = stop.clone();
-            let ack_write = write_half.clone();
-            let batcher = batcher.clone();
-            let executor_id = config.executor_id;
-            threads.push(std::thread::spawn(move || {
-                loop {
-                    match read_half.recv() {
-                        Ok(Msg::Dispatch { shard: _, tasks }) => {
-                            batcher.task_received(tasks.len() as u32);
-                            for t in tasks {
-                                if tx.send(t).is_err() {
-                                    return;
-                                }
-                            }
-                        }
-                        Ok(Msg::StagePut { key, data, gen }) => {
-                            let ok = match (&ramdisk, stage_key_ok(&key)) {
-                                (Some(rd), true) => {
-                                    rd.write(&format!("cache/{key}"), &data).is_ok()
-                                }
-                                _ => false,
-                            };
-                            let _ = ack_write.send(&Msg::StageAck {
-                                executor_id,
-                                key,
-                                bytes: data.len() as u64,
-                                ok,
-                                gen,
-                            });
-                        }
-                        Ok(Msg::Suspend { .. }) => {
-                            // Stop granting credit; drain and idle.
-                        }
-                        Ok(Msg::Shutdown) | Err(_) => break,
-                        Ok(_) => {}
-                    }
-                    if stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                }
-                stop.store(true, Ordering::SeqCst);
-            }));
-        }
-
         Ok(Executor { stop, threads, framed_shutdown: write_half, batcher })
     }
 
@@ -525,6 +520,83 @@ impl Executor {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+    }
+}
+
+/// The executor's protocol state machine, driven by the shared client
+/// reactor (the old dedicated reader thread, as a per-frame handler):
+/// receives Dispatch bundles and feeds workers — or, in lite mode, runs
+/// them inline — and answers staging pushes with acks (writes are
+/// ramdisk-fast, safe on an I/O thread).
+struct ExecConn {
+    executor_id: u64,
+    batcher: Arc<ResultBatcher>,
+    /// `Some` = worker-pool mode; `None` = lite mode (`cores == 0`).
+    tx: Option<mpsc::Sender<WireTask>>,
+    runner: Arc<dyn TaskRunner>,
+    ramdisk: Option<Arc<Ramdisk>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ConnHandler for ExecConn {
+    fn on_msg(&mut self, ctx: &ConnCtx<'_>, msg: Msg) -> bool {
+        match msg {
+            Msg::Dispatch { shard: _, tasks } => {
+                if self.stop.load(Ordering::SeqCst) {
+                    return false; // stopping: refuse new work
+                }
+                self.batcher.task_received(tasks.len() as u32);
+                match &self.tx {
+                    Some(tx) => {
+                        for t in tasks {
+                            if tx.send(t).is_err() {
+                                return false;
+                            }
+                        }
+                    }
+                    None => {
+                        for t in tasks {
+                            let (exit_code, error) = match self.runner.run(&t.payload) {
+                                Ok(code) => (code, None),
+                                Err(e) => (-1, Some(e)),
+                            };
+                            self.batcher.complete(WireResult {
+                                task_id: t.id,
+                                exit_code,
+                                error,
+                            });
+                        }
+                    }
+                }
+            }
+            Msg::StagePut { key, data, gen } => {
+                let ok = match (&self.ramdisk, stage_key_ok(&key)) {
+                    (Some(rd), true) => rd.write(&format!("cache/{key}"), &data).is_ok(),
+                    _ => false,
+                };
+                let _ = ctx.write.send(&Msg::StageAck {
+                    executor_id: self.executor_id,
+                    key,
+                    bytes: data.len() as u64,
+                    ok,
+                    gen,
+                });
+            }
+            Msg::Suspend { .. } => {
+                // Stop granting credit; drain and idle.
+            }
+            Msg::Shutdown => return false,
+            _ => {}
+        }
+        !self.stop.load(Ordering::SeqCst)
+    }
+
+    fn on_close(&mut self) {
+        // Connection gone (peer shutdown or our own close): stop workers
+        // and the flusher; buffered results have nowhere to go.
+        self.stop.store(true, Ordering::SeqCst);
+        self.batcher.stop.store(true, Ordering::SeqCst);
+        self.batcher.cv.notify_all();
     }
 }
 
@@ -581,6 +653,27 @@ pub fn spawn_fleet_with(
                 ..ExecutorConfig::c_style(addr.to_string(), i as u64)
             };
             Executor::start(tune(cfg), runner.clone())
+        })
+        .collect()
+}
+
+/// Spawn `n` zero-thread lite executors (see [`ExecutorConfig::lite`]) —
+/// the connection-scaling fleet for the C10K benches: `n` live
+/// registered connections cost the process only the shared client
+/// reactor's I/O threads.
+pub fn spawn_lite_fleet(
+    addr: &str,
+    n: usize,
+    runner: Arc<dyn TaskRunner>,
+    initial_credit: u32,
+) -> anyhow::Result<Vec<Executor>> {
+    (0..n)
+        .map(|i| {
+            let cfg = ExecutorConfig {
+                initial_credit,
+                ..ExecutorConfig::lite(addr.to_string(), i as u64)
+            };
+            Executor::start(cfg, runner.clone())
         })
         .collect()
 }

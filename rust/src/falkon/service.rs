@@ -40,7 +40,8 @@ use crate::lrm::cobalt::Cobalt;
 use crate::lrm::slurm::Slurm;
 use crate::lrm::{AllocId, Lrm};
 use crate::net::proto::{encode_dispatch_into, Msg, WireResult, WireTaskRef};
-use crate::net::tcpcore::{Framed, Registry};
+use crate::net::reactor::{listen_with_backlog, ConnCtx, ConnHandler, Reactor, LISTEN_BACKLOG};
+use crate::net::tcpcore::Registry;
 use crate::obs::{Ctr, Gauge, Obs, ObsConfig};
 use crate::sim::machine::Machine;
 use std::collections::{HashMap, VecDeque};
@@ -67,6 +68,9 @@ pub struct ServiceConfig {
     /// is enabled at 1-in-64 task sampling; [`ObsConfig::off`] removes
     /// every hook from the hot paths.
     pub obs: ObsConfig,
+    /// Reactor I/O threads multiplexing the executor connections.
+    /// `0` = auto (`min(4, cores)`).
+    pub io_threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -78,6 +82,7 @@ impl Default for ServiceConfig {
             hierarchy: HierarchyConfig::default(),
             provision: None,
             obs: ObsConfig::default(),
+            io_threads: 0,
         }
     }
 }
@@ -291,6 +296,9 @@ struct Inner {
     /// Shared telemetry registry + flight recorder (`None` = obs off:
     /// every hook compiles down to a branch on a never-taken `Option`).
     obs: Option<Arc<Obs>>,
+    /// Readiness-driven I/O core: every executor connection's reads and
+    /// writes are multiplexed over its small thread pool.
+    reactor: Arc<Reactor>,
 }
 
 impl Inner {
@@ -369,10 +377,11 @@ impl Service {
     /// Start the service (binds, spawns acceptor + one dispatcher thread
     /// per partition shard).
     pub fn start(config: ServiceConfig) -> anyhow::Result<Service> {
-        let listener = TcpListener::bind(&config.bind)?;
+        let listener = listen_with_backlog(&config.bind, LISTEN_BACKLOG)?;
         let addr = listener.local_addr()?;
         let n_shards = config.hierarchy.shards();
         let obs = Obs::from_config(&config.obs);
+        let reactor = Reactor::start(config.io_threads, obs.clone())?;
         let inner = Arc::new(Inner {
             shards: (0..n_shards).map(|_| Shard::new()).collect(),
             coord: Mutex::new(CoordState::default()),
@@ -390,6 +399,7 @@ impl Service {
             prov_expirations: AtomicU64::new(0),
             prov_granted: AtomicU64::new(0),
             obs,
+            reactor,
         });
         if let Some(o) = &inner.obs {
             for shard in &inner.shards {
@@ -822,6 +832,10 @@ impl Service {
         o.registry.gauge_set(Gauge::ExecsUp, execs as u64);
         o.registry
             .gauge_set(Gauge::NodesHeld, self.inner.prov_held.load(Ordering::Relaxed) as u64);
+        // Reactor health: open multiplexed connections + the outbound-
+        // ring high-water mark (bytes queued behind the slowest drain).
+        o.registry.gauge_set(Gauge::ConnsOpen, self.inner.reactor.conns_open() as u64);
+        o.registry.gauge_set(Gauge::RingHiwat, self.inner.reactor.ring_hiwat());
         o.status_line(o.now_ns())
     }
 
@@ -850,10 +864,14 @@ impl Service {
         }
     }
 
-    /// Stop the service and all connections.
+    /// Stop the service and all connections. The shutdown broadcast is
+    /// enqueued on every connection's outbound ring BEFORE the reactor
+    /// stops, so its final drain pass flushes the goodbyes; then the
+    /// reactor teardown fires each connection's `on_close` cleanup.
     pub fn shutdown(mut self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
         self.inner.registry.broadcast(&Msg::Shutdown);
+        self.inner.reactor.shutdown();
         for shard in &self.inner.shards {
             shard.work_cv.notify_all();
         }
@@ -866,73 +884,94 @@ impl Service {
     }
 }
 
+/// Accept loop: blocking `accept` stays on its own thread (it costs one
+/// thread total, not one per connection), but every accepted socket is
+/// handed straight to the reactor — the per-connection reader threads of
+/// the old design are gone.
 fn acceptor_loop(listener: TcpListener, inner: Arc<Inner>) {
     loop {
         let Ok((stream, _)) = listener.accept() else { break };
         if inner.shutdown.load(Ordering::SeqCst) {
             break;
         }
-        let inner = inner.clone();
-        std::thread::spawn(move || {
-            if let Ok(framed) = Framed::accept(stream) {
-                reader_loop(framed, inner);
-            }
-        });
+        let conn_inner = inner.clone();
+        let _ = inner
+            .reactor
+            .add_accepted(stream, move |_write| Box::new(SvcConn::new(conn_inner)));
     }
 }
 
-/// Per-connection reader: handles Register, then Ready/Result/Heartbeat.
-fn reader_loop(mut framed: Framed, inner: Arc<Inner>) {
-    if let Some(o) = &inner.obs {
-        framed.attach_obs(o.clone()); // read half: recv frame/byte counters
-    }
-    let Ok((mut read_half, write_half)) = framed.split() else { return };
-    if let Some(o) = &inner.obs {
-        write_half.attach_obs(o.clone()); // write half: send counters
-    }
-    // First message must be Register; it pins the connection to a shard.
-    let (executor_id, shard_idx) = match read_half.recv() {
-        Ok(Msg::Register { executor_id, cores, partition }) => {
-            let shard_idx = (partition as usize) % inner.shards.len();
-            inner.registry.insert(executor_id, write_half);
-            let node = executor_id as usize;
-            {
-                let shard = &inner.shards[shard_idx];
-                let mut st = shard.state.lock().expect("shard poisoned");
-                st.execs.insert(
-                    executor_id,
-                    ExecMeta { credit: 0, node, health: NodeHealth::default(), cores },
-                );
-                shard.execs_up.store(st.execs.len(), Ordering::Relaxed);
-            }
-            {
-                let mut co = inner.coord.lock().expect("coord poisoned");
-                if node < MAX_TRACKED_NODES {
-                    co.staged.ensure_nodes(node + 1);
-                }
-                co.node_shard.insert(node, shard_idx);
-                co.registered += 1;
-                co.events += 1;
-            }
-            inner.done_cv.notify_all();
-            (executor_id, shard_idx)
-        }
-        _ => return,
-    };
-    let shard = &inner.shards[shard_idx];
-    // Last-seen cumulative `WireStats` snapshot from this connection, in
-    // declaration order (hb_sent, hb_suppressed, flush idle/cap/window).
-    // Registry counters get the deltas, so fleet aggregates stay monotone
-    // even though each executor reports absolute values.
-    let mut last_ws = [0u64; 5];
+/// Per-connection protocol state machine, driven by the reactor: handles
+/// Register, then Ready/Result/Heartbeat — the same arms, state
+/// transitions and cleanup as the old per-connection reader thread, now
+/// invoked per decoded frame instead of per blocking `recv`.
+struct SvcConn {
+    inner: Arc<Inner>,
+    /// `Some((executor_id, shard_idx))` once the peer has registered; the
+    /// first message on a connection must be `Register` and pins it to a
+    /// shard.
+    registered: Option<(u64, usize)>,
+    /// Last-seen cumulative `WireStats` snapshot from this connection, in
+    /// declaration order (hb_sent, hb_suppressed, flush idle/cap/window).
+    /// Registry counters get the deltas, so fleet aggregates stay
+    /// monotone even though each executor reports absolute values.
+    last_ws: [u64; 5],
+}
 
-    loop {
-        match read_half.recv() {
-            Ok(Msg::Ready { executor_id: _, slots }) => {
+impl SvcConn {
+    fn new(inner: Arc<Inner>) -> SvcConn {
+        SvcConn { inner, registered: None, last_ws: [0; 5] }
+    }
+
+    fn register(&mut self, ctx: &ConnCtx<'_>, executor_id: u64, cores: u32, partition: u32) {
+        let inner = &self.inner;
+        let shard_idx = (partition as usize) % inner.shards.len();
+        inner.registry.insert(executor_id, ctx.write.clone());
+        let node = executor_id as usize;
+        {
+            let shard = &inner.shards[shard_idx];
+            let mut st = shard.state.lock().expect("shard poisoned");
+            st.execs.insert(
+                executor_id,
+                ExecMeta { credit: 0, node, health: NodeHealth::default(), cores },
+            );
+            shard.execs_up.store(st.execs.len(), Ordering::Relaxed);
+        }
+        {
+            let mut co = inner.coord.lock().expect("coord poisoned");
+            if node < MAX_TRACKED_NODES {
+                co.staged.ensure_nodes(node + 1);
+            }
+            co.node_shard.insert(node, shard_idx);
+            co.registered += 1;
+            co.events += 1;
+        }
+        inner.done_cv.notify_all();
+        self.registered = Some((executor_id, shard_idx));
+    }
+}
+
+impl ConnHandler for SvcConn {
+    fn on_msg(&mut self, ctx: &ConnCtx<'_>, msg: Msg) -> bool {
+        let Some((executor_id, shard_idx)) = self.registered else {
+            // First message must be Register; anything else is a
+            // protocol violation and tears the connection down.
+            return match msg {
+                Msg::Register { executor_id, cores, partition } => {
+                    self.register(ctx, executor_id, cores, partition);
+                    true
+                }
+                _ => false,
+            };
+        };
+        let inner = &self.inner;
+        let shard = &inner.shards[shard_idx];
+        match msg {
+            Msg::Ready { executor_id: _, slots } => {
                 let mut st = shard.state.lock().expect("shard poisoned");
                 if let Some(meta) = st.execs.get_mut(&executor_id) {
                     if meta.health.suspended {
-                        continue; // no credit for suspended nodes
+                        return true; // no credit for suspended nodes
                     }
                     let was_zero = meta.credit == 0;
                     meta.credit += slots;
@@ -943,18 +982,18 @@ fn reader_loop(mut framed: Framed, inner: Arc<Inner>) {
                 drop(st);
                 shard.work_cv.notify_one();
             }
-            Ok(Msg::Result { task_id, exit_code, error }) => {
+            Msg::Result { task_id, exit_code, error } => {
                 handle_results(
-                    &inner,
+                    inner,
                     shard_idx,
                     executor_id,
                     &[WireResult { task_id, exit_code, error }],
                 );
             }
-            Ok(Msg::ResultBatch { results }) => {
-                handle_results(&inner, shard_idx, executor_id, &results);
+            Msg::ResultBatch { results } => {
+                handle_results(inner, shard_idx, executor_id, &results);
             }
-            Ok(Msg::StageAck { executor_id: _, key, bytes, ok, gen }) => {
+            Msg::StageAck { executor_id: _, key, bytes, ok, gen } => {
                 let node = executor_id as usize;
                 let mut co = inner.coord.lock().expect("coord poisoned");
                 // Stale generation: an ack for an older push of this key.
@@ -962,7 +1001,7 @@ fn reader_loop(mut framed: Framed, inner: Arc<Inner>) {
                 // the ack-identity race — only the newest push's ack can
                 // complete the rendezvous.
                 if co.stage_expect.get(&(executor_id, key.clone())) != Some(&gen) {
-                    continue;
+                    return true;
                 }
                 // An object only counts as staged if the residency commit
                 // also succeeds — otherwise wait_staged and data-aware
@@ -977,15 +1016,15 @@ fn reader_loop(mut framed: Framed, inner: Arc<Inner>) {
                 inner.done_cv.notify_all();
                 shard.work_cv.notify_one();
             }
-            Ok(Msg::Heartbeat { .. }) => {}
-            Ok(Msg::WireStats {
+            Msg::Heartbeat { .. } => {}
+            Msg::WireStats {
                 executor_id: _,
                 hb_sent,
                 hb_suppressed,
                 flush_idle,
                 flush_cap,
                 flush_window,
-            }) => {
+            } => {
                 if let Some(o) = &inner.obs {
                     let cur = [hb_sent, hb_suppressed, flush_idle, flush_cap, flush_window];
                     const WS_CTRS: [Ctr; 5] = [
@@ -996,51 +1035,56 @@ fn reader_loop(mut framed: Framed, inner: Arc<Inner>) {
                         Ctr::FlushWindow,
                     ];
                     for (i, &v) in cur.iter().enumerate() {
-                        o.registry.add(WS_CTRS[i], v.saturating_sub(last_ws[i]));
-                        last_ws[i] = v;
+                        o.registry.add(WS_CTRS[i], v.saturating_sub(self.last_ws[i]));
+                        self.last_ws[i] = v;
                     }
                 }
             }
-            Ok(_) | Err(_) => break, // protocol violation or disconnect
+            _ => return false, // protocol violation
         }
-        if inner.shutdown.load(Ordering::SeqCst) {
-            break;
-        }
+        !inner.shutdown.load(Ordering::SeqCst)
     }
 
-    // Connection lost: retry everything pending on this executor.
-    inner.registry.remove(executor_id);
-    let node;
-    {
-        let mut st = shard.state.lock().expect("shard poisoned");
-        node = st.execs.get(&executor_id).map(|m| m.node);
-        st.execs.remove(&executor_id);
-        st.idle.retain(|e| *e != executor_id);
-        shard.execs_up.store(st.execs.len(), Ordering::Relaxed);
-        let lost = st.queues.pending_on(executor_id as usize);
-        for id in lost {
-            st.queues.fail_attempt(id, TaskError::CommError, &inner.config.retry);
-        }
-        shard.sync_hints(&st);
-    }
-    {
-        let mut co = inner.coord.lock().expect("coord poisoned");
-        // Its ramdisk died with it: drop staged residency and pending
-        // acks so data-aware placement stops steering work at objects
-        // that are gone (the simulator's invalidate_node, live side).
-        if let Some(node) = node {
-            if node < co.staged.node_count() {
-                co.staged.invalidate_node(node);
+    /// Connection lost (or torn down by us): retry everything pending on
+    /// this executor and unwind its registrations. Runs exactly once per
+    /// connection, on the reactor thread that owned it.
+    fn on_close(&mut self) {
+        let Some((executor_id, shard_idx)) = self.registered.take() else { return };
+        let inner = &self.inner;
+        let shard = &inner.shards[shard_idx];
+        inner.registry.remove(executor_id);
+        let node;
+        {
+            let mut st = shard.state.lock().expect("shard poisoned");
+            node = st.execs.get(&executor_id).map(|m| m.node);
+            st.execs.remove(&executor_id);
+            st.idle.retain(|e| *e != executor_id);
+            shard.execs_up.store(st.execs.len(), Ordering::Relaxed);
+            let lost = st.queues.pending_on(executor_id as usize);
+            for id in lost {
+                st.queues.fail_attempt(id, TaskError::CommError, &inner.config.retry);
             }
-            co.node_shard.remove(&node);
+            shard.sync_hints(&st);
         }
-        co.stage_acks.retain(|(e, _), _| *e != executor_id);
-        co.stage_expect.retain(|(e, _), _| *e != executor_id);
-        co.registered = co.registered.saturating_sub(1);
-        co.events += 1;
+        {
+            let mut co = inner.coord.lock().expect("coord poisoned");
+            // Its ramdisk died with it: drop staged residency and pending
+            // acks so data-aware placement stops steering work at objects
+            // that are gone (the simulator's invalidate_node, live side).
+            if let Some(node) = node {
+                if node < co.staged.node_count() {
+                    co.staged.invalidate_node(node);
+                }
+                co.node_shard.remove(&node);
+            }
+            co.stage_acks.retain(|(e, _), _| *e != executor_id);
+            co.stage_expect.retain(|(e, _), _| *e != executor_id);
+            co.registered = co.registered.saturating_sub(1);
+            co.events += 1;
+        }
+        shard.work_cv.notify_all();
+        inner.done_cv.notify_all();
     }
-    shard.work_cv.notify_all();
-    inner.done_cv.notify_all();
 }
 
 /// Ingest a batch of completions from one executor under ONE shard lock
@@ -1254,8 +1298,9 @@ fn provisioner_loop(inner: Arc<Inner>, addr: std::net::SocketAddr) {
                 ProvisionEvent::Expired { alloc, .. } => {
                     // The LRM killed the allocation at walltime: its
                     // executors die NOW; in-flight tasks bounce through
-                    // the disconnect-retry path (reader_loop fails their
-                    // pending attempts with CommError).
+                    // the disconnect-retry path (the connection's
+                    // `on_close` fails their pending attempts with
+                    // CommError).
                     inner.prov_expirations.fetch_add(1, Ordering::Relaxed);
                     if let Some(f) = fleets.remove(&alloc) {
                         stop_fleet(f);

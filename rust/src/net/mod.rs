@@ -17,4 +17,5 @@
 
 pub mod codec;
 pub mod proto;
+pub mod reactor;
 pub mod tcpcore;

@@ -22,7 +22,19 @@ const MAGIC_WS: &[u8; 4] = b"FKW1";
 /// frame (staged objects may be up to 64 MB; dispatch/result traffic is
 /// tens of bytes — without the cap, one staging push would pin the
 /// high-water allocation for the life of the connection or thread).
-const BUF_RETAIN: usize = 1 << 20;
+/// Shared with the reactor's outbound rings and frame decoders.
+pub(crate) const BUF_RETAIN: usize = 1 << 20;
+
+/// Hard ceiling on a single frame body.
+const MAX_FRAME: usize = 64 << 20;
+
+/// The 4-byte preamble a client sends to negotiate `proto`.
+pub(crate) fn magic_for(proto: Proto) -> &'static [u8; 4] {
+    match proto {
+        Proto::Tcp => MAGIC_TCP,
+        Proto::Ws => MAGIC_WS,
+    }
+}
 
 /// Which codec a connection speaks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,7 +66,7 @@ fn decode_body(proto: Proto, buf: &[u8]) -> Result<Msg, super::proto::DecodeErro
 /// dispatched on `proto` (both codecs are zero-sized), so the encode hot
 /// path costs no `Box<dyn Codec>` and no lookup. The 4-byte little-endian
 /// length prefix is written in place after the body lands.
-fn encode_frame_into(proto: Proto, msg: &Msg, buf: &mut Vec<u8>) {
+pub fn encode_frame_into(proto: Proto, msg: &Msg, buf: &mut Vec<u8>) {
     let at = buf.len();
     buf.extend_from_slice(&[0u8; 4]);
     match proto {
@@ -232,7 +244,7 @@ impl Framed {
         let mut len = [0u8; 4];
         self.stream.read_exact(&mut len)?;
         let n = u32::from_le_bytes(len) as usize;
-        if n > 64 << 20 {
+        if n > MAX_FRAME {
             return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "frame too large"));
         }
         self.rbuf.resize(n, 0);
@@ -253,8 +265,10 @@ impl Framed {
     pub fn split(self) -> std::io::Result<(Framed, WriteHandle)> {
         let write_stream = self.stream.try_clone()?;
         let handle = WriteHandle {
-            inner: Arc::new(Mutex::new(Framed::new(write_stream, self.proto, 0, 0))),
-            proto: self.proto,
+            sink: Sink::Lock {
+                inner: Arc::new(Mutex::new(Framed::new(write_stream, self.proto, 0, 0))),
+                proto: self.proto,
+            },
         };
         Ok((self, handle))
     }
@@ -265,16 +279,169 @@ impl Framed {
     }
 }
 
-/// Cloneable, locked write half of a connection.
+/// Incremental frame decoder — the nonblocking counterpart of
+/// [`Framed::recv`]. Bytes arrive in whatever chunks the kernel hands a
+/// nonblocking read; the state machine resumes mid-magic, mid-length-
+/// prefix, or mid-body across calls, reusing ONE body buffer (shrunk
+/// after oversized frames, exactly like the blocking path). The reactor
+/// owns one per connection.
+pub struct FrameDecoder {
+    /// `None` until the peer's magic negotiates the codec (server side).
+    proto: Option<Proto>,
+    /// Partial 4-byte header (connection magic or frame length prefix).
+    hdr: [u8; 4],
+    hdr_len: usize,
+    /// Body target length once a prefix completes.
+    body_len: Option<usize>,
+    body: Vec<u8>,
+    /// Bytes consumed, including magic (Fig 10 accounting parity with
+    /// `Framed::recv_bytes`).
+    pub recv_bytes: u64,
+    obs: Option<Arc<crate::obs::Obs>>,
+    recv_ordinal: u64,
+}
+
+impl FrameDecoder {
+    /// Client side: the codec was chosen locally; inbound bytes are
+    /// frames from byte one.
+    pub fn with_proto(proto: Proto) -> FrameDecoder {
+        FrameDecoder {
+            proto: Some(proto),
+            hdr: [0; 4],
+            hdr_len: 0,
+            body_len: None,
+            body: Vec::new(),
+            recv_bytes: 0,
+            obs: None,
+            recv_ordinal: 0,
+        }
+    }
+
+    /// Server side: the first four bytes are the peer's codec magic.
+    pub fn negotiating() -> FrameDecoder {
+        let mut d = FrameDecoder::with_proto(Proto::Tcp);
+        d.proto = None;
+        d
+    }
+
+    /// Attach an observability hub (wire recv counters + sampled
+    /// flight-recorder instants, one tick per decoded frame).
+    pub fn attach_obs(&mut self, obs: Arc<crate::obs::Obs>) {
+        self.obs = Some(obs);
+    }
+
+    /// The negotiated codec, once known.
+    pub fn proto(&self) -> Option<Proto> {
+        self.proto
+    }
+
+    /// Feed one chunk of inbound bytes. `on_proto` fires once when the
+    /// magic negotiates the codec (before any message is delivered);
+    /// `on_msg` fires per decoded frame and returns `false` to stop.
+    /// Returns `Ok(false)` when the handler requested a close, `Err` on
+    /// protocol violations (bad magic, oversized frame, decode failure).
+    pub fn feed(
+        &mut self,
+        mut chunk: &[u8],
+        on_proto: &mut dyn FnMut(Proto),
+        on_msg: &mut dyn FnMut(Msg) -> bool,
+    ) -> std::io::Result<bool> {
+        loop {
+            if let Some(need) = self.body_len {
+                if self.body.len() < need {
+                    if chunk.is_empty() {
+                        return Ok(true);
+                    }
+                    let take = (need - self.body.len()).min(chunk.len());
+                    self.body.extend_from_slice(&chunk[..take]);
+                    chunk = &chunk[take..];
+                }
+                if self.body.len() < need {
+                    return Ok(true);
+                }
+                let proto = self.proto.expect("frame body implies negotiated codec");
+                self.recv_bytes += 4 + need as u64;
+                if let Some(o) = &self.obs {
+                    use crate::obs::{Ctr, RecKind};
+                    o.registry.inc(Ctr::WireRecvs);
+                    o.registry.add(Ctr::WireRecvBytes, 4 + need as u64);
+                    o.wire_event(RecKind::WireRecv, self.recv_ordinal, 4 + need as u64);
+                    self.recv_ordinal += 1;
+                }
+                let msg = decode_body(proto, &self.body).map_err(|e| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+                })?;
+                self.body_len = None;
+                self.body.clear();
+                if self.body.capacity() > BUF_RETAIN {
+                    self.body = Vec::new(); // don't pin a one-off large frame
+                }
+                if !on_msg(msg) {
+                    return Ok(false);
+                }
+                continue;
+            }
+            if chunk.is_empty() {
+                return Ok(true);
+            }
+            let take = (4 - self.hdr_len).min(chunk.len());
+            self.hdr[self.hdr_len..self.hdr_len + take].copy_from_slice(&chunk[..take]);
+            self.hdr_len += take;
+            chunk = &chunk[take..];
+            if self.hdr_len < 4 {
+                return Ok(true);
+            }
+            self.hdr_len = 0;
+            if self.proto.is_none() {
+                let proto = match &self.hdr {
+                    m if m == MAGIC_TCP => Proto::Tcp,
+                    m if m == MAGIC_WS => Proto::Ws,
+                    _ => {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            "bad protocol magic",
+                        ))
+                    }
+                };
+                self.proto = Some(proto);
+                self.recv_bytes += 4;
+                on_proto(proto);
+                continue;
+            }
+            let n = u32::from_le_bytes(self.hdr) as usize;
+            if n > MAX_FRAME {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "frame too large",
+                ));
+            }
+            self.body_len = Some(n);
+            self.body.clear();
+            self.body.reserve(n);
+        }
+    }
+}
+
+/// Cloneable write half of a connection.
 ///
-/// Encoding happens on the *caller's* side (a thread-local scratch
-/// buffer) before the connection mutex is taken, so one slow socket can
-/// never serialize the encoding work of other senders sharing the handle
-/// — the lock covers only the socket write itself.
+/// Encoding always happens on the *caller's* side (a thread-local
+/// scratch buffer) before the sink is touched. Two sinks exist behind
+/// the same API: the blocking `Framed::split` path serializes socket
+/// writes under a mutex, and the reactor path enqueues into the
+/// connection's outbound ring (inline vectored drain, `EPOLLOUT`
+/// completion) — so one slow socket never serializes the encoding work
+/// of other senders, and on the reactor path never blocks them at all.
 #[derive(Clone)]
 pub struct WriteHandle {
-    inner: Arc<Mutex<Framed>>,
-    proto: Proto,
+    sink: Sink,
+}
+
+#[derive(Clone)]
+enum Sink {
+    /// Blocking socket guarded by a mutex (the `Framed::split` path).
+    Lock { inner: Arc<Mutex<Framed>>, proto: Proto },
+    /// Reactor-managed outbound ring.
+    Ring(Arc<super::reactor::OutRing>),
 }
 
 thread_local! {
@@ -283,10 +450,45 @@ thread_local! {
 }
 
 impl WriteHandle {
+    /// Wrap a reactor outbound ring (reactor-internal constructor).
+    pub(crate) fn from_ring(ring: Arc<super::reactor::OutRing>) -> WriteHandle {
+        WriteHandle { sink: Sink::Ring(ring) }
+    }
+
+    /// The connection's codec. Errors on a server-side reactor
+    /// connection whose peer hasn't sent its magic yet — nothing may be
+    /// sent before negotiation decides how to frame it.
+    fn proto(&self) -> std::io::Result<Proto> {
+        match &self.sink {
+            Sink::Lock { proto, .. } => Ok(*proto),
+            Sink::Ring(r) => r.proto().ok_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::NotConnected, "codec not negotiated")
+            }),
+        }
+    }
+
+    /// Ship caller-encoded frames through whichever sink backs this
+    /// handle (one locked `write_all`, or one ring enqueue + inline
+    /// drain).
+    fn ship(&self, frames: &[u8]) -> std::io::Result<()> {
+        match &self.sink {
+            Sink::Lock { inner, .. } => {
+                inner.lock().expect("write handle poisoned").write_frames(frames)
+            }
+            Sink::Ring(r) => super::reactor::OutRing::enqueue(r, frames, true),
+        }
+    }
+
     /// Attach an observability hub to the write half (the read half is
-    /// attached separately by whoever owns it).
+    /// attached separately by whoever owns it). Reactor-backed handles
+    /// are wired to their reactor's hub at creation; this is a no-op.
     pub fn attach_obs(&self, obs: Arc<crate::obs::Obs>) {
-        self.inner.lock().expect("write handle poisoned").attach_obs(obs);
+        match &self.sink {
+            Sink::Lock { inner, .. } => {
+                inner.lock().expect("write handle poisoned").attach_obs(obs)
+            }
+            Sink::Ring(_) => {}
+        }
     }
 
     pub fn send(&self, msg: &Msg) -> std::io::Result<()> {
@@ -296,14 +498,15 @@ impl WriteHandle {
     /// Send one message whose binary body the caller already encoded
     /// (e.g. a `Dispatch` built from borrowed task refs): the body is
     /// framed for this connection's codec in the thread-local scratch
-    /// outside the lock, then written with one locked syscall. Nothing in
-    /// this path allocates once the scratch buffers are warm.
+    /// outside any lock, then shipped. Nothing in this path allocates
+    /// once the scratch buffers are warm.
     pub fn send_body(&self, body: &[u8]) -> std::io::Result<()> {
+        let proto = self.proto()?;
         WRITE_SCRATCH.with(|cell| {
             let mut buf = cell.borrow_mut();
             buf.clear();
-            frame_body_into(self.proto, body, &mut buf);
-            let res = self.inner.lock().expect("write handle poisoned").write_frames(&buf);
+            frame_body_into(proto, body, &mut buf);
+            let res = self.ship(&buf);
             if buf.capacity() > BUF_RETAIN {
                 *buf = Vec::new();
             }
@@ -311,19 +514,20 @@ impl WriteHandle {
         })
     }
 
-    /// Encode all `msgs` as contiguous frames outside the lock, then
-    /// write them with one locked syscall.
+    /// Encode all `msgs` as contiguous frames outside any lock, then
+    /// ship them as one contiguous write.
     pub fn send_many(&self, msgs: &[Msg]) -> std::io::Result<()> {
         if msgs.is_empty() {
             return Ok(());
         }
+        let proto = self.proto()?;
         WRITE_SCRATCH.with(|cell| {
             let mut buf = cell.borrow_mut();
             buf.clear();
             for msg in msgs {
-                encode_frame_into(self.proto, msg, &mut buf);
+                encode_frame_into(proto, msg, &mut buf);
             }
-            let res = self.inner.lock().expect("write handle poisoned").write_frames(&buf);
+            let res = self.ship(&buf);
             if buf.capacity() > BUF_RETAIN {
                 *buf = Vec::new(); // a one-off StagePut must not pin thread memory
             }
@@ -331,8 +535,23 @@ impl WriteHandle {
         })
     }
 
+    /// Close the connection. On the reactor path this is graceful:
+    /// already-queued frames drain before the socket closes, and
+    /// subsequent sends fail fast.
     pub fn shutdown(&self) {
-        self.inner.lock().expect("write handle poisoned").shutdown();
+        match &self.sink {
+            Sink::Lock { inner, .. } => inner.lock().expect("write handle poisoned").shutdown(),
+            Sink::Ring(r) => super::reactor::OutRing::close_soon(r),
+        }
+    }
+
+    /// Current outbound-ring buffer capacity (`None` on the blocking
+    /// path) — lets tests assert the post-staging shrink.
+    pub fn ring_capacity(&self) -> Option<usize> {
+        match &self.sink {
+            Sink::Lock { .. } => None,
+            Sink::Ring(r) => Some(r.capacity()),
+        }
     }
 }
 
@@ -577,5 +796,64 @@ mod tests {
         let (stream, _) = listener.accept().unwrap();
         assert!(Framed::accept(stream).is_err());
         t.join().unwrap();
+    }
+
+    #[test]
+    fn frame_decoder_negotiates_then_decodes_split_frames() {
+        // Server-mode stream: magic, then two frames, fed in chunks that
+        // split the magic, the length prefix, and the body.
+        let msgs =
+            [Msg::Register { executor_id: 3, cores: 2, partition: 0 }, Msg::Shutdown];
+        let mut wire = MAGIC_WS.to_vec();
+        for m in &msgs {
+            encode_frame_into(Proto::Ws, m, &mut wire);
+        }
+        for split in 1..wire.len() {
+            let mut dec = FrameDecoder::negotiating();
+            let mut seen_proto = None;
+            let mut seen = Vec::new();
+            for chunk in wire.chunks(split) {
+                let more = dec
+                    .feed(chunk, &mut |p| seen_proto = Some(p), &mut |m| {
+                        seen.push(m);
+                        true
+                    })
+                    .unwrap();
+                assert!(more);
+            }
+            assert_eq!(seen_proto, Some(Proto::Ws), "split={split}");
+            assert_eq!(seen, msgs, "split={split}");
+            assert_eq!(dec.recv_bytes, wire.len() as u64);
+        }
+    }
+
+    #[test]
+    fn frame_decoder_rejects_bad_magic_and_oversized_frames() {
+        let mut dec = FrameDecoder::negotiating();
+        let err =
+            dec.feed(b"EVIL", &mut |_| {}, &mut |_| true).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+        let mut dec = FrameDecoder::with_proto(Proto::Tcp);
+        let huge = (u32::MAX).to_le_bytes();
+        let err = dec.feed(&huge, &mut |_| {}, &mut |_| true).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn frame_decoder_handler_can_request_close() {
+        let mut wire = Vec::new();
+        encode_frame_into(Proto::Tcp, &Msg::Shutdown, &mut wire);
+        encode_frame_into(Proto::Tcp, &Msg::Shutdown, &mut wire);
+        let mut dec = FrameDecoder::with_proto(Proto::Tcp);
+        let mut n = 0;
+        let more = dec
+            .feed(&wire, &mut |_| {}, &mut |_| {
+                n += 1;
+                false // close after the first message
+            })
+            .unwrap();
+        assert!(!more);
+        assert_eq!(n, 1, "no delivery past a requested close");
     }
 }

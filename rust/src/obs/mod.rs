@@ -165,7 +165,8 @@ impl Obs {
         format!(
             "t={:.3}s submit={} disp={} done={} fail={} retry={} steal={}/{} \
              wire tx={}f/{}B rx={}f/{}B hb={}+{}supp flush=i:{},c:{},w:{} \
-             prov r:{},g:{},x:{} waiting={} pending={} execs={} trace={}rec",
+             prov r:{},g:{},x:{} waiting={} pending={} execs={} \
+             react wake={}({:.0}/s) stall={} conns={} ringhw={} trace={}rec",
             now_ns as f64 / 1e9,
             r.counter(Ctr::TasksSubmitted),
             r.counter(Ctr::TasksDispatched),
@@ -189,6 +190,11 @@ impl Obs {
             r.gauge(Gauge::TasksWaiting),
             r.gauge(Gauge::TasksPending),
             r.gauge(Gauge::ExecsUp),
+            r.counter(Ctr::ReactorWakeups),
+            r.counter(Ctr::ReactorWakeups) as f64 / (now_ns as f64 / 1e9).max(1e-9),
+            r.counter(Ctr::WriteStalls),
+            r.gauge(Gauge::ConnsOpen),
+            r.gauge(Gauge::RingHiwat),
             self.recorder.written(),
         )
     }
@@ -244,6 +250,7 @@ mod tests {
         let s = o.status_line(1_500_000_000);
         assert!(s.starts_with("t=1.500s"), "{s}");
         assert!(s.contains("submit=42"), "{s}");
+        assert!(s.contains("react wake="), "{s}");
         assert!(s.contains("trace="), "{s}");
     }
 

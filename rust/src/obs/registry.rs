@@ -43,9 +43,11 @@ pub enum Ctr {
     StageBytes,
     StageFlushes,
     StageFlushedBytes,
+    ReactorWakeups,
+    WriteStalls,
 }
 
-pub const CTR_COUNT: usize = 24;
+pub const CTR_COUNT: usize = 26;
 
 /// Every counter, for snapshot/export loops.
 pub const ALL_CTRS: [Ctr; CTR_COUNT] = [
@@ -73,6 +75,8 @@ pub const ALL_CTRS: [Ctr; CTR_COUNT] = [
     Ctr::StageBytes,
     Ctr::StageFlushes,
     Ctr::StageFlushedBytes,
+    Ctr::ReactorWakeups,
+    Ctr::WriteStalls,
 ];
 
 impl Ctr {
@@ -102,6 +106,8 @@ impl Ctr {
             Ctr::StageBytes => "stage_bytes",
             Ctr::StageFlushes => "stage_flushes",
             Ctr::StageFlushedBytes => "stage_flushed_bytes",
+            Ctr::ReactorWakeups => "reactor_wakeups",
+            Ctr::WriteStalls => "write_stalls",
         }
     }
 }
@@ -114,9 +120,11 @@ pub enum Gauge {
     TasksPending,
     ExecsUp,
     NodesHeld,
+    ConnsOpen,
+    RingHiwat,
 }
 
-pub const GAUGE_COUNT: usize = 4;
+pub const GAUGE_COUNT: usize = 6;
 
 impl Gauge {
     pub fn name(self) -> &'static str {
@@ -125,6 +133,8 @@ impl Gauge {
             Gauge::TasksPending => "tasks_pending",
             Gauge::ExecsUp => "execs_up",
             Gauge::NodesHeld => "nodes_held",
+            Gauge::ConnsOpen => "conns_open",
+            Gauge::RingHiwat => "ring_hiwat",
         }
     }
 }

@@ -8,7 +8,9 @@
 //! scratch) → `encode_dispatch_into` (borrowed payload refs into a reused
 //! body buffer) → `complete` → `drain_done_into` — and asserts the
 //! steady state performs **zero** heap allocations per task. A second
-//! phase asserts the same for the retry path (`fail_attempt` storms).
+//! phase asserts the same for the retry path (`fail_attempt` storms),
+//! and a third for the reactor wire path (frame encode → outbound ring
+//! push/drain → resumable decode).
 //!
 //! Both phases run with FULL observability attached (registry counters +
 //! flight recorder sampling every task): telemetry must never allocate
@@ -22,7 +24,9 @@
 use falkon::falkon::errors::{RetryPolicy, TaskError};
 use falkon::falkon::queue::TaskQueues;
 use falkon::falkon::task::TaskPayload;
-use falkon::net::proto::{encode_dispatch_into, WireTaskRef};
+use falkon::net::proto::{encode_dispatch_into, Msg, WireTaskRef};
+use falkon::net::reactor::ByteRing;
+use falkon::net::tcpcore::{encode_frame_into, FrameDecoder, Proto};
 use falkon::obs::{Obs, ObsConfig};
 use falkon::util::alloc::{alloc_count, CountingAlloc};
 
@@ -143,4 +147,47 @@ fn steady_state_dispatch_path_is_allocation_free() {
          into fresh heap"
     );
     assert!(q.conserved(0));
+
+    // ---- Phase 3: the reactor wire path. One result frame per cycle
+    // flows encode→outbound-ring→decode, exactly what a steady-state
+    // reactor connection does per completed task: `encode_frame_into`
+    // into a warmed scratch, `ByteRing::push`/`consume` (the enqueue +
+    // drain halves of the write path), and `FrameDecoder::feed` on the
+    // receive side. After warmup brings scratch, ring and decoder body
+    // to capacity, the cycle must not allocate.
+    let mut scratch: Vec<u8> = Vec::with_capacity(256);
+    let mut ring = ByteRing::new();
+    let mut dec = FrameDecoder::with_proto(Proto::Tcp);
+    let mut decoded = 0u64;
+    let mut wire_cycle = |decoded: &mut u64, scratch: &mut Vec<u8>, ring: &mut ByteRing| {
+        scratch.clear();
+        let msg = Msg::Result { task_id: *decoded, exit_code: 0, error: None };
+        encode_frame_into(Proto::Tcp, &msg, scratch);
+        ring.push(scratch);
+        // Feed both wraparound halves (a vectored drain's two iovecs).
+        let (a, b) = ring.as_slices();
+        let took = a.len() + b.len();
+        let mut on_msg = |m: Msg| {
+            assert!(matches!(m, Msg::Result { error: None, .. }));
+            *decoded += 1;
+            true
+        };
+        assert!(dec.feed(a, &mut |_| {}, &mut on_msg).unwrap());
+        assert!(dec.feed(b, &mut |_| {}, &mut on_msg).unwrap());
+        ring.consume(took);
+    };
+    for _ in 0..WARMUP {
+        wire_cycle(&mut decoded, &mut scratch, &mut ring);
+    }
+    let before = alloc_count();
+    for _ in 0..MEASURE {
+        wire_cycle(&mut decoded, &mut scratch, &mut ring);
+    }
+    let delta = alloc_count() - before;
+    assert_eq!(
+        delta, 0,
+        "reactor wire path allocated {delta} times over {MEASURE} frames — \
+         encode→ring→decode must be allocation-free once buffers are warm"
+    );
+    assert_eq!(decoded, (WARMUP + MEASURE) as u64);
 }

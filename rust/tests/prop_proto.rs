@@ -10,6 +10,7 @@
 use falkon::falkon::errors::TaskError;
 use falkon::falkon::task::TaskPayload;
 use falkon::net::proto::{DecodeError, Msg, WireResult, WireTask};
+use falkon::net::tcpcore::{encode_frame_into, FrameDecoder, Framed, Proto};
 use falkon::util::rng::Rng;
 
 /// One of every message variant, with every payload/error arm exercised.
@@ -137,6 +138,141 @@ fn mutation_fuzz_over_lengths_and_fields_never_panics() {
             let mut buf = enc.clone();
             buf[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
             let _ = Msg::decode(&buf);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Resumable decode: the reactor's nonblocking state machine must decode
+// ANY chunking of the byte stream identically to the blocking path.
+// ---------------------------------------------------------------------
+
+/// The connection magics, hardcoded as the wire contract (what
+/// `Framed::connect` puts on the wire before the first frame).
+const MAGICS: [(Proto, &[u8; 4]); 2] = [(Proto::Tcp, b"FKT1"), (Proto::Ws, b"FKW1")];
+
+/// A server-perspective inbound stream: connection magic, then one frame
+/// per message.
+fn wire_for(proto: Proto, magic: &[u8; 4], msgs: &[Msg]) -> Vec<u8> {
+    let mut wire = magic.to_vec();
+    for m in msgs {
+        encode_frame_into(proto, m, &mut wire);
+    }
+    wire
+}
+
+/// Decode `wire` through the blocking `Framed` path over a real loopback
+/// socket — the reference the resumable decoder must match byte-for-byte.
+fn blocking_reference(wire: &[u8], n: usize) -> Vec<Msg> {
+    let lis = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = lis.local_addr().unwrap();
+    let wire = wire.to_vec();
+    let writer = std::thread::spawn(move || {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(&wire).unwrap();
+    });
+    let (conn, _) = lis.accept().unwrap();
+    let mut framed = Framed::accept(conn).unwrap();
+    let out: Vec<Msg> = (0..n).map(|_| framed.recv().unwrap()).collect();
+    writer.join().unwrap();
+    out
+}
+
+/// Feed `wire` to a negotiating decoder in the given chunk sizes and
+/// return (negotiated proto, decoded messages, counted bytes).
+fn decode_chunked(wire: &[u8], chunk_sizes: &[usize]) -> (Option<Proto>, Vec<Msg>, u64) {
+    let mut dec = FrameDecoder::negotiating();
+    let mut got = Vec::new();
+    let mut negotiated = None;
+    let mut at = 0;
+    for &n in chunk_sizes {
+        let end = (at + n).min(wire.len());
+        let keep_going = dec
+            .feed(&wire[at..end], &mut |p| negotiated = Some(p), &mut |m| {
+                got.push(m);
+                true
+            })
+            .unwrap();
+        assert!(keep_going, "handler never asked to close");
+        at = end;
+    }
+    assert_eq!(at, wire.len(), "chunk sizes must cover the whole wire");
+    (negotiated, got, dec.recv_bytes)
+}
+
+#[test]
+fn resumable_decode_byte_at_a_time_matches_blocking_path() {
+    let msgs = sample_msgs();
+    for (proto, magic) in MAGICS {
+        let wire = wire_for(proto, magic, &msgs);
+        let reference = blocking_reference(&wire, msgs.len());
+        assert_eq!(reference, msgs, "blocking path must round-trip");
+        // Worst-case chunking: every read returns one byte, so every
+        // header, magic and body is split across resumptions.
+        let ones = vec![1usize; wire.len()];
+        let (p, got, bytes) = decode_chunked(&wire, &ones);
+        assert_eq!(p, Some(proto));
+        assert_eq!(got, reference);
+        assert_eq!(bytes, wire.len() as u64);
+    }
+}
+
+#[test]
+fn resumable_decode_randomized_splits_match_blocking_path() {
+    let msgs = sample_msgs();
+    let mut rng = Rng::new(0xdec0de);
+    for (proto, magic) in MAGICS {
+        let wire = wire_for(proto, magic, &msgs);
+        let reference = blocking_reference(&wire, msgs.len());
+        for _ in 0..50 {
+            let mut sizes = Vec::new();
+            let mut left = wire.len();
+            while left > 0 {
+                let n = 1 + rng.below(left.min(4096) as u64) as usize;
+                sizes.push(n);
+                left -= n;
+            }
+            let (p, got, bytes) = decode_chunked(&wire, &sizes);
+            assert_eq!(p, Some(proto));
+            assert_eq!(got, reference);
+            assert_eq!(bytes, wire.len() as u64);
+        }
+    }
+}
+
+#[test]
+fn resumable_decode_client_mode_needs_no_magic() {
+    // Client side: the codec was chosen locally, so inbound bytes are
+    // frames from byte one and no negotiation callback ever fires.
+    let msgs = sample_msgs();
+    let mut rng = Rng::new(0xc11e47);
+    for proto in [Proto::Tcp, Proto::Ws] {
+        let mut wire = Vec::new();
+        for m in &msgs {
+            encode_frame_into(proto, m, &mut wire);
+        }
+        for _ in 0..20 {
+            let mut dec = FrameDecoder::with_proto(proto);
+            let mut got = Vec::new();
+            let mut at = 0;
+            while at < wire.len() {
+                let n = 1 + rng.below((wire.len() - at).min(1024) as u64) as usize;
+                let keep_going = dec
+                    .feed(
+                        &wire[at..at + n],
+                        &mut |_| panic!("client mode must not negotiate"),
+                        &mut |m| {
+                            got.push(m);
+                            true
+                        },
+                    )
+                    .unwrap();
+                assert!(keep_going);
+                at += n;
+            }
+            assert_eq!(got, msgs);
+            assert_eq!(dec.recv_bytes, wire.len() as u64);
         }
     }
 }

@@ -1,0 +1,67 @@
+//! Reactor-core integration: a lite executor fleet (zero threads per
+//! connection) multiplexed over the client reactor, against the
+//! reactor-backed service — connection scaling, a mid-run disconnect
+//! wave with exactly-once outcomes, and reactor health surfacing.
+
+use falkon::falkon::dispatch::DispatchConfig;
+use falkon::falkon::exec::{spawn_lite_fleet, DefaultRunner};
+use falkon::falkon::service::{Service, ServiceConfig};
+use falkon::falkon::task::TaskPayload;
+use falkon::net::reactor::raise_fd_limit;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn lite_fleet_survives_disconnect_wave_exactly_once() {
+    raise_fd_limit(4096);
+    let svc = Service::start(ServiceConfig {
+        dispatch: DispatchConfig { bundle: 1, data_aware: false, ..Default::default() },
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+    let conns = 96;
+    let mut fleet = spawn_lite_fleet(&addr, conns, Arc::new(DefaultRunner), 1).unwrap();
+    assert!(svc.wait_executors(conns, Duration::from_secs(10)));
+
+    let n = 3000;
+    let ids = svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    // Mid-run disconnect wave: a third of the fleet drops while the
+    // campaign is in flight. Their in-flight tasks must bounce through
+    // the CommError retry path onto survivors — no task lost, none
+    // completed twice.
+    std::thread::sleep(Duration::from_millis(50));
+    let wave: Vec<_> = fleet.drain(..conns / 3).collect();
+    for e in wave {
+        e.stop();
+    }
+    let outcomes = svc.wait_all(Duration::from_secs(60)).expect("campaign must finish");
+    let mut seen: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
+    seen.sort_unstable();
+    let mut want = ids.clone();
+    want.sort_unstable();
+    assert_eq!(seen, want, "no lost or duplicated outcomes across the disconnect wave");
+    assert!(outcomes.iter().all(|o| o.ok()));
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn status_line_reports_reactor_health() {
+    let svc = Service::start(ServiceConfig::default()).unwrap();
+    let addr = svc.addr().to_string();
+    let fleet = spawn_lite_fleet(&addr, 8, Arc::new(DefaultRunner), 1).unwrap();
+    assert!(svc.wait_executors(8, Duration::from_secs(5)));
+    svc.submit_many((0..100).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    svc.wait_all(Duration::from_secs(30)).unwrap();
+    let line = svc.status_line();
+    assert!(line.contains("react wake="), "{line}");
+    assert!(line.contains("conns=8"), "all 8 lite connections live: {line}");
+    assert!(line.contains("ringhw="), "{line}");
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+}
