@@ -59,11 +59,102 @@ pub struct RetryPolicy {
     pub suspend_after_failures: u32,
     /// Sliding window for failure counting, seconds.
     pub failure_window_s: f64,
+    /// First-retry backoff delay, seconds. 0 disables backoff entirely
+    /// (the pre-existing immediate-requeue behavior, and the default so
+    /// every earlier experiment stays bit-identical).
+    pub backoff_base_s: f64,
+    /// Ceiling for the un-jittered exponential schedule, seconds.
+    pub backoff_cap_s: f64,
+    /// Jitter fraction: the delay is scaled by a seeded uniform factor in
+    /// `[1 - jitter, 1 + jitter]` so synchronized failure bursts
+    /// (correlated MTBF events) don't retry in lockstep.
+    pub backoff_jitter: f64,
+    /// Suspended nodes re-enter service after this many seconds of
+    /// probation. 0 = never (suspension is permanent until an operator
+    /// resumes the node, the pre-existing behavior).
+    pub probation_s: f64,
 }
 
 impl Default for RetryPolicy {
     fn default() -> Self {
-        RetryPolicy { max_attempts: 3, suspend_after_failures: 3, failure_window_s: 60.0 }
+        RetryPolicy {
+            max_attempts: 3,
+            suspend_after_failures: 3,
+            failure_window_s: 60.0,
+            backoff_base_s: 0.0,
+            backoff_cap_s: 2.0,
+            backoff_jitter: 0.5,
+            probation_s: 0.0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The un-jittered exponential schedule: `base * 2^(attempt-1)`,
+    /// capped at `backoff_cap_s`. Monotone non-decreasing in `attempt`.
+    pub fn backoff_raw_s(&self, attempt: u32) -> f64 {
+        if self.backoff_base_s <= 0.0 {
+            return 0.0;
+        }
+        let shift = attempt.saturating_sub(1).min(16);
+        (self.backoff_base_s * (1u64 << shift) as f64).min(self.backoff_cap_s)
+    }
+
+    /// Backoff delay before re-dispatching attempt `attempt + 1`, with
+    /// seeded jitter: deterministic for a given `(attempt, seed)` pair,
+    /// within `[raw*(1-jitter), raw*(1+jitter)]`. Callers seed with the
+    /// task id so each task gets an independent but reproducible stream.
+    pub fn backoff_s(&self, attempt: u32, seed: u64) -> f64 {
+        let raw = self.backoff_raw_s(attempt);
+        if raw <= 0.0 || self.backoff_jitter <= 0.0 {
+            return raw;
+        }
+        let mut rng = crate::util::rng::Rng::new(
+            seed ^ (attempt as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        raw * (1.0 + self.backoff_jitter * (2.0 * rng.f64() - 1.0))
+    }
+}
+
+/// Global retry-rate token bucket — the storm damper. When a correlated
+/// failure burst (arXiv:1703.00924: failures cluster) requeues thousands
+/// of tasks at once, the budget spreads their re-dispatch out instead of
+/// hammering the surviving nodes. An exhausted budget never *drops* a
+/// retry; it only delays it by the backoff cap.
+#[derive(Clone, Debug)]
+pub struct RetryBudget {
+    /// Tokens replenished per second.
+    pub rate_per_s: f64,
+    /// Bucket capacity (burst allowance).
+    pub burst: f64,
+    tokens: f64,
+    last_s: f64,
+}
+
+impl RetryBudget {
+    /// A bucket that starts full.
+    pub fn new(rate_per_s: f64, burst: f64) -> RetryBudget {
+        RetryBudget { rate_per_s, burst, tokens: burst, last_s: 0.0 }
+    }
+
+    /// Take one token at `now_s`; false when the budget is exhausted
+    /// (caller should delay the retry rather than drop it).
+    pub fn try_take(&mut self, now_s: f64) -> bool {
+        if now_s > self.last_s {
+            self.tokens = (self.tokens + (now_s - self.last_s) * self.rate_per_s).min(self.burst);
+            self.last_s = now_s;
+        }
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current token count (for tests/telemetry).
+    pub fn tokens(&self) -> f64 {
+        self.tokens
     }
 }
 
@@ -73,29 +164,45 @@ pub struct NodeHealth {
     /// Recent failure timestamps (seconds), pruned to the window.
     recent_failures: Vec<f64>,
     pub suspended: bool,
+    /// When set, the node is on timed probation: it re-enters service
+    /// automatically once `now_s >= suspended_until` (see
+    /// [`NodeHealth::probation_over`]).
+    pub suspended_until: Option<f64>,
 }
 
 impl NodeHealth {
     /// Record a failure at `now_s`; returns true if the node should now be
-    /// suspended under `policy`.
+    /// suspended under `policy`. When the policy has a probation period,
+    /// a newly-triggered suspension is timed and the node becomes
+    /// eligible for reinstatement at `now_s + policy.probation_s`.
     pub fn record_failure(&mut self, now_s: f64, policy: &RetryPolicy) -> bool {
         self.recent_failures.retain(|t| now_s - *t <= policy.failure_window_s);
         self.recent_failures.push(now_s);
         if self.recent_failures.len() as u32 >= policy.suspend_after_failures {
+            if !self.suspended && policy.probation_s > 0.0 {
+                self.suspended_until = Some(now_s + policy.probation_s);
+            }
             self.suspended = true;
         }
         self.suspended
     }
 
     /// Record a success: clears the failure streak (but not suspension —
-    /// a suspended node stays out until explicitly resumed).
+    /// a suspended node stays out until resumed or its probation ends).
     pub fn record_success(&mut self) {
         self.recent_failures.clear();
+    }
+
+    /// True when a timed suspension has served its probation and the node
+    /// should be reinstated.
+    pub fn probation_over(&self, now_s: f64) -> bool {
+        self.suspended && self.suspended_until.is_some_and(|t| now_s >= t)
     }
 
     /// Administratively resume the node.
     pub fn resume(&mut self) {
         self.suspended = false;
+        self.suspended_until = None;
         self.recent_failures.clear();
     }
 }
@@ -164,6 +271,98 @@ mod tests {
         // 20s later: the first two aged out.
         assert!(!h.record_failure(20.0, &p));
         assert!(!h.suspended);
+    }
+
+    #[test]
+    fn backoff_disabled_by_default() {
+        let p = RetryPolicy::default();
+        for a in 1..6 {
+            assert_eq!(p.backoff_s(a, 42), 0.0);
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let p = RetryPolicy {
+            backoff_base_s: 0.1,
+            backoff_cap_s: 1.0,
+            backoff_jitter: 0.0,
+            ..Default::default()
+        };
+        assert_eq!(p.backoff_raw_s(1), 0.1);
+        assert_eq!(p.backoff_raw_s(2), 0.2);
+        assert_eq!(p.backoff_raw_s(3), 0.4);
+        assert_eq!(p.backoff_raw_s(4), 0.8);
+        assert_eq!(p.backoff_raw_s(5), 1.0); // capped
+        assert_eq!(p.backoff_raw_s(60), 1.0); // shift clamp, no overflow
+        assert_eq!(p.backoff_s(3, 7), 0.4); // jitter 0 -> raw
+    }
+
+    #[test]
+    fn backoff_jitter_seeded_and_bounded() {
+        let p = RetryPolicy {
+            backoff_base_s: 0.1,
+            backoff_cap_s: 2.0,
+            backoff_jitter: 0.5,
+            ..Default::default()
+        };
+        for attempt in 1..8 {
+            for seed in 0..50u64 {
+                let d = p.backoff_s(attempt, seed);
+                assert_eq!(d, p.backoff_s(attempt, seed), "deterministic per (attempt, seed)");
+                let raw = p.backoff_raw_s(attempt);
+                assert!(d >= raw * 0.5 && d <= raw * 1.5, "jitter out of bounds: {d} vs {raw}");
+            }
+        }
+        // Distinct seeds actually spread.
+        assert_ne!(p.backoff_s(2, 1), p.backoff_s(2, 2));
+    }
+
+    #[test]
+    fn retry_budget_throttles_then_refills() {
+        let mut b = RetryBudget::new(10.0, 3.0);
+        assert!(b.try_take(0.0));
+        assert!(b.try_take(0.0));
+        assert!(b.try_take(0.0));
+        assert!(!b.try_take(0.0), "burst exhausted");
+        assert!(b.try_take(0.1), "0.1s at 10/s refills one token");
+        assert!(!b.try_take(0.1));
+        // A long quiet period refills to the burst cap, no further.
+        assert!(b.tokens() <= 3.0);
+        for _ in 0..3 {
+            assert!(b.try_take(100.0));
+        }
+        assert!(!b.try_take(100.0));
+    }
+
+    #[test]
+    fn probation_times_out_suspension() {
+        let p = RetryPolicy {
+            suspend_after_failures: 2,
+            failure_window_s: 10.0,
+            probation_s: 5.0,
+            ..Default::default()
+        };
+        let mut h = NodeHealth::default();
+        h.record_failure(0.0, &p);
+        assert!(h.record_failure(1.0, &p));
+        assert!(h.suspended);
+        assert_eq!(h.suspended_until, Some(6.0));
+        assert!(!h.probation_over(5.9));
+        assert!(h.probation_over(6.0));
+        h.resume();
+        assert!(!h.suspended);
+        assert_eq!(h.suspended_until, None);
+        assert!(!h.probation_over(100.0), "reinstated node has no pending probation");
+    }
+
+    #[test]
+    fn permanent_suspension_without_probation() {
+        let p = RetryPolicy { suspend_after_failures: 1, probation_s: 0.0, ..Default::default() };
+        let mut h = NodeHealth::default();
+        assert!(h.record_failure(0.0, &p));
+        assert_eq!(h.suspended_until, None);
+        assert!(!h.probation_over(1e9));
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use crate::falkon::errors::TaskError;
 use crate::falkon::task::TaskPayload;
+use crate::faults::{ExecFaultSpec, ExecFaultState, TaskAction};
 use crate::fs::ramdisk::Ramdisk;
 use crate::net::proto::{Msg, WireResult, WireTask};
 use crate::net::reactor::{client_reactor, ConnCtx, ConnHandler};
@@ -112,6 +113,10 @@ pub struct ExecutorConfig {
     /// are *suppressed* while the connection is already carrying results
     /// within the interval — results are proof of liveness.
     pub heartbeat: Option<Duration>,
+    /// Chaos-harness arm (tests/benches only): count-triggered faults
+    /// this executor injects on itself — crash, hang-with-heartbeats,
+    /// stragglers, stage-ack loss. `None` in production.
+    pub fault: Option<ExecFaultSpec>,
 }
 
 impl ExecutorConfig {
@@ -127,6 +132,7 @@ impl ExecutorConfig {
             result_batch: 16,
             batch_window: Duration::from_millis(2),
             heartbeat: None,
+            fault: None,
         }
     }
 
@@ -142,6 +148,7 @@ impl ExecutorConfig {
             result_batch: 16,
             batch_window: Duration::from_millis(2),
             heartbeat: None,
+            fault: None,
         }
     }
 
@@ -162,6 +169,7 @@ impl ExecutorConfig {
             result_batch: 1,
             batch_window: Duration::from_millis(2),
             heartbeat: None,
+            fault: None,
         }
     }
 }
@@ -214,6 +222,11 @@ struct ResultBatcher {
     last_send_ms: AtomicU64,
     epoch: Instant,
     stop: AtomicBool,
+    /// `Msg::Suspend` received: results still ship, but the matching
+    /// `Ready` credit grants are withheld (accumulated in `withheld`)
+    /// until `Msg::Resume` releases them in one grant.
+    suspended: AtomicBool,
+    withheld: AtomicU32,
     wire: WireCounters,
 }
 
@@ -230,6 +243,8 @@ impl ResultBatcher {
             last_send_ms: AtomicU64::new(0),
             epoch: Instant::now(),
             stop: AtomicBool::new(false),
+            suspended: AtomicBool::new(false),
+            withheld: AtomicU32::new(0),
             wire: WireCounters::default(),
         }
     }
@@ -274,6 +289,10 @@ impl ResultBatcher {
             FlushReason::Window => self.wire.flush_window.fetch_add(1, Ordering::Relaxed),
         };
         let slots = batch.len() as u32;
+        // While suspended, results still ship (the service must see
+        // completions) but the Ready grants are banked instead — a
+        // suspended node earning fresh work would defeat the suspension.
+        let grant = !self.suspended.load(Ordering::SeqCst);
         let sent = if self.cap <= 1 {
             // Batching off: classic per-task frames (one Result + one
             // Ready each — usually a single pair; workers racing a flush
@@ -285,19 +304,48 @@ impl ResultBatcher {
                     exit_code: r.exit_code,
                     error: r.error,
                 });
-                msgs.push(Msg::Ready { executor_id: self.executor_id, slots: 1 });
+                if grant {
+                    msgs.push(Msg::Ready { executor_id: self.executor_id, slots: 1 });
+                }
             }
             self.write.send_many(&msgs)
-        } else {
+        } else if grant {
             self.write.send_many(&[
                 Msg::ResultBatch { results: batch },
                 Msg::Ready { executor_id: self.executor_id, slots },
             ])
+        } else {
+            self.write.send_many(&[Msg::ResultBatch { results: batch }])
         };
+        if !grant {
+            self.withheld.fetch_add(slots, Ordering::SeqCst);
+            // A Resume racing this flush may have already swapped the
+            // withheld bank out; re-check and release ours if so. The
+            // swap is atomic, so credit is granted exactly once either
+            // way — by Resume's swap or by this one.
+            if !self.suspended.load(Ordering::SeqCst) {
+                let w = self.withheld.swap(0, Ordering::SeqCst);
+                if w > 0 {
+                    let _ = self
+                        .write
+                        .send(&Msg::Ready { executor_id: self.executor_id, slots: w });
+                }
+            }
+        }
         if sent.is_ok() {
             self.last_send_ms
                 .store(self.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
         }
+    }
+
+    /// Abrupt, fault-injected death: stop the batcher and sever the
+    /// connection WITHOUT flushing — buffered and in-flight work dies
+    /// with the node, which is exactly what a crashed executor looks
+    /// like from the service side.
+    fn teardown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+        self.write.shutdown();
     }
 
     /// Millis since the connection last carried results.
@@ -349,6 +397,7 @@ pub struct Executor {
     threads: Vec<std::thread::JoinHandle<()>>,
     framed_shutdown: WriteHandle,
     batcher: Arc<ResultBatcher>,
+    faults: Option<Arc<ExecFaultState>>,
 }
 
 impl Executor {
@@ -369,6 +418,7 @@ impl Executor {
     ) -> anyhow::Result<Executor> {
         let stream = TcpStream::connect(&config.service_addr)?;
         let stop = Arc::new(AtomicBool::new(false));
+        let faults = config.fault.clone().map(|s| Arc::new(ExecFaultState::new(s)));
         let lite = config.cores == 0;
         // Worker channel: absent in lite mode, where the connection's
         // reactor thread runs tasks inline.
@@ -388,11 +438,12 @@ impl Executor {
             let (cap, window) = (config.result_batch, config.batch_window);
             let (runner, ramdisk) = (runner.clone(), ramdisk.clone());
             let (stop, tx) = (stop.clone(), tx.clone());
+            let faults = faults.clone();
             let made = &mut made;
             client_reactor().add_client(stream, config.proto, move |w| {
                 let batcher = Arc::new(ResultBatcher::new(w.clone(), executor_id, cap, window));
                 *made = Some(batcher.clone());
-                Box::new(ExecConn { executor_id, batcher, tx, runner, ramdisk, stop })
+                Box::new(ExecConn { executor_id, batcher, tx, runner, ramdisk, stop, faults })
             })?
         };
         let batcher = made.expect("connection maker did not run");
@@ -415,6 +466,7 @@ impl Executor {
                 let batcher = batcher.clone();
                 let runner = runner.clone();
                 let stop = stop.clone();
+                let faults = faults.clone();
                 threads.push(std::thread::spawn(move || loop {
                     let task = {
                         let guard = rx.lock().unwrap();
@@ -422,6 +474,18 @@ impl Executor {
                     };
                     match task {
                         Ok(task) => {
+                            // Chaos arm: the fault plan decides this
+                            // task's fate at the point of execution.
+                            match faults.as_deref().map_or(TaskAction::Run, |f| f.on_task()) {
+                                TaskAction::Run => {}
+                                TaskAction::Slow(extra) => std::thread::sleep(extra),
+                                TaskAction::Swallow => continue,
+                                TaskAction::Crash => {
+                                    stop.store(true, Ordering::SeqCst);
+                                    batcher.teardown();
+                                    break;
+                                }
+                            }
                             let (exit_code, error) = match runner.run(&task.payload) {
                                 Ok(code) => (code, None),
                                 Err(e) => (-1, Some(e)),
@@ -491,7 +555,7 @@ impl Executor {
             }));
         }
 
-        Ok(Executor { stop, threads, framed_shutdown: write_half, batcher })
+        Ok(Executor { stop, threads, framed_shutdown: write_half, batcher, faults })
     }
 
     /// Heartbeats actually sent on the wire so far (suppressed beats are
@@ -504,6 +568,22 @@ impl Executor {
     /// traffic inside the period already proved liveness.
     pub fn heartbeats_suppressed(&self) -> u64 {
         self.batcher.wire.hb_suppressed.load(Ordering::Relaxed)
+    }
+
+    /// Is the executor currently withholding credit after `Msg::Suspend`?
+    pub fn is_suspended(&self) -> bool {
+        self.batcher.suspended.load(Ordering::SeqCst)
+    }
+
+    /// Credit earned while suspended and not yet granted (released in one
+    /// `Ready` by `Msg::Resume`).
+    pub fn withheld_credit(&self) -> u32 {
+        self.batcher.withheld.load(Ordering::SeqCst)
+    }
+
+    /// Faults this executor's chaos arm has actually fired (0 unarmed).
+    pub fn faults_injected(&self) -> u64 {
+        self.faults.as_deref().map_or(0, |f| f.injected())
     }
 
     /// Stop the executor and join its threads.
@@ -536,6 +616,7 @@ struct ExecConn {
     runner: Arc<dyn TaskRunner>,
     ramdisk: Option<Arc<Ramdisk>>,
     stop: Arc<AtomicBool>,
+    faults: Option<Arc<ExecFaultState>>,
 }
 
 impl ConnHandler for ExecConn {
@@ -556,6 +637,16 @@ impl ConnHandler for ExecConn {
                     }
                     None => {
                         for t in tasks {
+                            // Lite mode runs inline, so the chaos arm is
+                            // consulted here (sleeping on the reactor
+                            // thread is lite mode's normal behavior).
+                            match self.faults.as_deref().map_or(TaskAction::Run, |f| f.on_task())
+                            {
+                                TaskAction::Run => {}
+                                TaskAction::Slow(extra) => std::thread::sleep(extra),
+                                TaskAction::Swallow => continue,
+                                TaskAction::Crash => return false,
+                            }
                             let (exit_code, error) = match self.runner.run(&t.payload) {
                                 Ok(code) => (code, None),
                                 Err(e) => (-1, Some(e)),
@@ -574,16 +665,33 @@ impl ConnHandler for ExecConn {
                     (Some(rd), true) => rd.write(&format!("cache/{key}"), &data).is_ok(),
                     _ => false,
                 };
-                let _ = ctx.write.send(&Msg::StageAck {
-                    executor_id: self.executor_id,
-                    key,
-                    bytes: data.len() as u64,
-                    ok,
-                    gen,
-                });
+                if self.faults.as_deref().is_some_and(|f| f.drop_ack()) {
+                    // Injected stage-ack loss: the write (if any) landed,
+                    // but the service never hears about it — its staging
+                    // rendezvous must survive the silence.
+                } else {
+                    let _ = ctx.write.send(&Msg::StageAck {
+                        executor_id: self.executor_id,
+                        key,
+                        bytes: data.len() as u64,
+                        ok,
+                        gen,
+                    });
+                }
             }
             Msg::Suspend { .. } => {
-                // Stop granting credit; drain and idle.
+                // Stop granting credit: results keep shipping, but their
+                // Ready grants are banked until the service reinstates us.
+                self.batcher.suspended.store(true, Ordering::SeqCst);
+            }
+            Msg::Resume => {
+                self.batcher.suspended.store(false, Ordering::SeqCst);
+                let slots = self.batcher.withheld.swap(0, Ordering::SeqCst);
+                if slots > 0 {
+                    let _ = ctx
+                        .write
+                        .send(&Msg::Ready { executor_id: self.executor_id, slots });
+                }
             }
             Msg::Shutdown => return false,
             _ => {}

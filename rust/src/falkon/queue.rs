@@ -54,6 +54,47 @@ struct Slot {
     /// `Some(executor)` while the task is out at an executor (pending);
     /// `None` while it waits in the queue.
     executor: Option<usize>,
+    /// A second, speculative attempt in flight on another executor
+    /// (straggler mitigation). The task is still counted ONCE in
+    /// `pending`; the duplicate is pure metadata plus a
+    /// `pending_by_exec` entry so node-loss reclaim can find it.
+    spec_executor: Option<usize>,
+    /// Queue clock at dispatch (straggler age checks).
+    dispatched_at_s: f64,
+    /// Absolute reclaim deadline for the current attempt
+    /// (`f64::INFINITY` = no deadline).
+    deadline_s: f64,
+    /// Earliest re-dispatch time (retry backoff); 0 = immediately.
+    not_before_s: f64,
+}
+
+impl Slot {
+    fn new(task: Task) -> Slot {
+        Slot {
+            task,
+            executor: None,
+            spec_executor: None,
+            dispatched_at_s: 0.0,
+            deadline_s: f64::INFINITY,
+            not_before_s: 0.0,
+        }
+    }
+}
+
+/// What happened to a result delivered to [`TaskQueues::complete_ex`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompleteOutcome {
+    /// The task reached a terminal state. `speculated` is true when a
+    /// duplicate (speculative) attempt was still in flight — its
+    /// eventual result will be dropped, so the caller should count the
+    /// duplicate's work as wasted.
+    Done { speculated: bool },
+    /// Unknown id: a duplicate result for an already-terminal task
+    /// (first-result-wins arbitration dropped the loser).
+    DuplicateDrop,
+    /// The task is back in the wait queue (a reclaimed/retried task's
+    /// earlier attempt straggled in); the pending retry wins.
+    StaleDrop,
 }
 
 /// The service's task bookkeeping.
@@ -85,6 +126,14 @@ pub struct TaskQueues {
     /// records on the submit/dispatch/complete/retry paths. All hooks
     /// are allocation-free, so the alloc gate holds with tracing on.
     obs: Option<Arc<Obs>>,
+    /// The shard's liveness clock, seconds (advanced by the owner via
+    /// [`TaskQueues::set_clock`]; backoff and deadlines compare against
+    /// it). Stays 0 when liveness is unused — every comparison then
+    /// degenerates to the pre-liveness behavior.
+    clock_s: f64,
+    /// Per-attempt dispatch deadline applied at dispatch time
+    /// (0 = deadlines off).
+    task_deadline_s: f64,
 }
 
 impl TaskQueues {
@@ -98,16 +147,34 @@ impl TaskQueues {
         self.obs = Some(obs);
     }
 
+    /// Advance the shard's liveness clock (monotone; callers pass their
+    /// epoch-relative seconds).
+    pub fn set_clock(&mut self, now_s: f64) {
+        if now_s > self.clock_s {
+            self.clock_s = now_s;
+        }
+    }
+
+    /// Current liveness clock.
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Set the per-attempt dispatch deadline (0 disables).
+    pub fn set_task_deadline(&mut self, deadline_s: f64) {
+        self.task_deadline_s = deadline_s;
+    }
+
     /// Park `task` in a (possibly recycled) slab slot and index it.
     fn alloc_slot(&mut self, task: Task) -> u32 {
         let id = task.id;
         let slot = match self.free.pop() {
             Some(s) => {
-                self.slots[s as usize] = Some(Slot { task, executor: None });
+                self.slots[s as usize] = Some(Slot::new(task));
                 s
             }
             None => {
-                self.slots.push(Some(Slot { task, executor: None }));
+                self.slots.push(Some(Slot::new(task)));
                 (self.slots.len() - 1) as u32
             }
         };
@@ -197,11 +264,29 @@ impl TaskQueues {
     /// many ids were appended. Allocation-free in steady state.
     pub fn dispatch_into(&mut self, executor: usize, n: usize, out: &mut Vec<TaskId>) -> usize {
         let mut taken = 0;
-        for _ in 0..n {
+        // Bounded scan: a task still serving retry backoff rotates to the
+        // back of the queue instead of blocking the head. With backoff
+        // unused every `not_before_s` is 0, nothing rotates, and this is
+        // exactly the old front-pop loop.
+        let mut scanned = 0;
+        let budget = self.waiting.len();
+        while taken < n && scanned < budget {
             let Some(slot) = self.waiting.pop_front() else { break };
+            scanned += 1;
             let s = self.slots[slot as usize].as_mut().expect("waiting slot");
+            if s.not_before_s > self.clock_s {
+                self.waiting.push_back(slot);
+                continue;
+            }
             s.task.advance(TaskState::Dispatched).expect("Queued->Dispatched");
             s.executor = Some(executor);
+            s.spec_executor = None;
+            s.dispatched_at_s = self.clock_s;
+            s.deadline_s = if self.task_deadline_s > 0.0 {
+                self.clock_s + self.task_deadline_s
+            } else {
+                f64::INFINITY
+            };
             self.pending += 1;
             out.push(s.task.id);
             taken += 1;
@@ -240,18 +325,33 @@ impl TaskQueues {
 
     /// Record a successful completion from an executor.
     pub fn complete(&mut self, id: TaskId, exit_code: i32) {
+        self.complete_ex(id, exit_code);
+    }
+
+    /// Record a completion from an executor, reporting what happened —
+    /// the first-result-wins arbitration point for speculative execution:
+    /// whichever attempt (primary or duplicate) reports first finalizes
+    /// the task; the loser's result finds no live slot and is dropped.
+    pub fn complete_ex(&mut self, id: TaskId, exit_code: i32) -> CompleteOutcome {
         let Some(&slot) = self.index.get(&id) else {
             // Unknown id: a duplicate result for an already-terminal task.
-            return;
+            return CompleteOutcome::DuplicateDrop;
         };
         if self.slots[slot as usize].as_ref().expect("indexed slot").executor.is_none() {
             // The task is back in the wait queue (a retried task's first
             // attempt raced the retry): ignore — the pending attempt wins.
-            return;
+            return CompleteOutcome::StaleDrop;
         }
         let mut s = self.release_slot(slot);
         self.pending -= 1;
         self.pending_exec_done(s.executor);
+        let speculated = s.spec_executor.is_some();
+        if speculated {
+            self.pending_exec_done(s.spec_executor);
+            if let Some(o) = &self.obs {
+                o.registry.inc(Ctr::SpeculativeWasted);
+            }
+        }
         // Executors report Running implicitly; normalize the transition.
         if s.task.state == TaskState::Dispatched {
             s.task.advance(TaskState::Running).unwrap();
@@ -278,6 +378,7 @@ impl TaskQueues {
                 self.done.push(TaskOutcome { id, exit_code, error: Some(error), attempts });
             }
         }
+        CompleteOutcome::Done { speculated }
     }
 
     /// Record a failed attempt; either re-queues (retry) or finalizes.
@@ -290,6 +391,22 @@ impl TaskQueues {
         error: TaskError,
         policy: &crate::falkon::errors::RetryPolicy,
     ) -> bool {
+        self.fail_attempt_delayed(id, error, policy, 0.0)
+    }
+
+    /// Like [`TaskQueues::fail_attempt`], with `extra_delay_s` added to
+    /// the policy's backoff before the task becomes dispatchable again
+    /// (the global retry budget's storm-damping hook). When the failed
+    /// primary attempt has a surviving speculative twin, the twin is
+    /// promoted to primary instead of requeueing — the task stays
+    /// pending and the twin's result will finalize it.
+    pub fn fail_attempt_delayed(
+        &mut self,
+        id: TaskId,
+        error: TaskError,
+        policy: &crate::falkon::errors::RetryPolicy,
+        extra_delay_s: f64,
+    ) -> bool {
         let Some(&slot) = self.index.get(&id) else { return false };
         let attempts = {
             let s = self.slots[slot as usize].as_ref().expect("indexed slot");
@@ -298,6 +415,18 @@ impl TaskQueues {
             }
             s.task.attempts
         };
+        {
+            let s = self.slots[slot as usize].as_mut().expect("indexed slot");
+            if let Some(spec) = s.spec_executor.take() {
+                let old = s.executor.replace(spec);
+                s.dispatched_at_s = self.clock_s;
+                if self.task_deadline_s > 0.0 {
+                    s.deadline_s = self.clock_s + self.task_deadline_s;
+                }
+                self.pending_exec_done(old);
+                return true;
+            }
+        }
         match crate::falkon::errors::on_failure(&error, attempts, policy) {
             crate::falkon::errors::FailureAction::Retry => {
                 let s = self.slots[slot as usize].as_mut().expect("indexed slot");
@@ -307,6 +436,7 @@ impl TaskQueues {
                 let s = self.slots[slot as usize].as_mut().expect("indexed slot");
                 s.task.advance(TaskState::Retrying { attempt: attempts, error }).unwrap();
                 s.task.advance(TaskState::Queued).unwrap();
+                s.not_before_s = self.clock_s + policy.backoff_s(attempts, id) + extra_delay_s;
                 self.waiting.push_back(slot);
                 if let Some(o) = &self.obs {
                     o.registry.inc(Ctr::TasksRetried);
@@ -356,6 +486,106 @@ impl TaskQueues {
             .filter(|s| s.executor == Some(executor))
             .map(|s| s.task.id)
             .collect()
+    }
+
+    /// Append every pending task whose attempt deadline has passed at
+    /// `now_s`, with its primary executor. Callers reclaim the stragglers
+    /// through [`TaskQueues::fail_attempt`] (NodeLost → retriable).
+    pub fn overdue_into(&self, now_s: f64, out: &mut Vec<(TaskId, usize)>) {
+        for s in self.slots.iter().flatten() {
+            if let Some(e) = s.executor {
+                if s.deadline_s <= now_s {
+                    out.push((s.task.id, e));
+                }
+            }
+        }
+    }
+
+    /// Age in seconds of `id`'s current dispatched attempt (`None` when
+    /// the id is unknown or the task is not out at an executor) — the
+    /// completion-duration sample the speculation threshold's p99
+    /// estimate is built from.
+    pub fn attempt_age_s(&self, id: TaskId, now_s: f64) -> Option<f64> {
+        let &slot = self.index.get(&id)?;
+        let s = self.slots[slot as usize].as_ref()?;
+        s.executor.map(|_| (now_s - s.dispatched_at_s).max(0.0))
+    }
+
+    /// Append up to `max` pending tasks that have been out longer than
+    /// `age_s` and have no duplicate attempt yet — the speculation
+    /// candidates — with their primary executor (the duplicate must land
+    /// elsewhere).
+    pub fn speculation_candidates(
+        &self,
+        now_s: f64,
+        age_s: f64,
+        max: usize,
+        out: &mut Vec<(TaskId, usize)>,
+    ) {
+        if max == 0 {
+            return;
+        }
+        for s in self.slots.iter().flatten() {
+            if let Some(e) = s.executor {
+                if s.spec_executor.is_none() && now_s - s.dispatched_at_s >= age_s {
+                    out.push((s.task.id, e));
+                    if out.len() >= max {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Record a speculative duplicate launch of pending task `id` on
+    /// `executor`. The task stays counted once in `pending`; the
+    /// duplicate only adds a `pending_by_exec` entry. Returns false when
+    /// the task is no longer pending, already has a twin, or `executor`
+    /// is the primary (a duplicate there buys nothing).
+    pub fn mark_speculative(&mut self, id: TaskId, executor: usize) -> bool {
+        let Some(&slot) = self.index.get(&id) else { return false };
+        let s = self.slots[slot as usize].as_mut().expect("indexed slot");
+        if s.executor.is_none() || s.spec_executor.is_some() || s.executor == Some(executor) {
+            return false;
+        }
+        s.spec_executor = Some(executor);
+        *self.pending_by_exec.entry(executor).or_insert(0) += 1;
+        if let Some(o) = &self.obs {
+            o.registry.inc(Ctr::SpeculativeLaunches);
+        }
+        true
+    }
+
+    /// Handle the loss of `executor` (disconnect or suspicion): every
+    /// speculative twin it held is cancelled; every primary attempt it
+    /// held is either handed over to a surviving twin (promoted in
+    /// place — the task stays pending, nothing is re-run) or, with no
+    /// twin, appended to `retry` for the caller to route through
+    /// [`TaskQueues::fail_attempt`] with `CommError`.
+    pub fn executor_lost(&mut self, executor: usize, retry: &mut Vec<TaskId>) {
+        let mut lost_specs = 0u32;
+        let mut promotions = 0u32;
+        for s in self.slots.iter_mut().flatten() {
+            if s.spec_executor == Some(executor) {
+                s.spec_executor = None;
+                lost_specs += 1;
+            }
+            if s.executor == Some(executor) {
+                if let Some(spec) = s.spec_executor.take() {
+                    s.executor = Some(spec);
+                    s.dispatched_at_s = self.clock_s;
+                    if self.task_deadline_s > 0.0 {
+                        s.deadline_s = self.clock_s + self.task_deadline_s;
+                    }
+                    promotions += 1;
+                } else {
+                    retry.push(s.task.id);
+                }
+            }
+        }
+        if let Some(n) = self.pending_by_exec.get_mut(&executor) {
+            *n = n.saturating_sub(lost_specs + promotions);
+        }
     }
 
     /// Drain accumulated outcomes.
@@ -651,6 +881,147 @@ mod tests {
         // 2 submits + 3 dispatches + 1 retry + 2 results.
         assert_eq!(o.recorder.written(), 8);
         assert!(q.conserved(0));
+    }
+
+    #[test]
+    fn deadline_stamped_and_overdue_reclaimed() {
+        let mut q = TaskQueues::new();
+        q.set_task_deadline(5.0);
+        let id = q.submit(sleep0());
+        q.set_clock(1.0);
+        q.take_for_dispatch(0, 1);
+        let mut over = Vec::new();
+        q.overdue_into(5.9, &mut over);
+        assert!(over.is_empty(), "deadline is 6.0");
+        q.overdue_into(6.0, &mut over);
+        assert_eq!(over, vec![(id, 0)]);
+        // Reclaim through the retry path; the slot re-arms on re-dispatch.
+        let policy = RetryPolicy::default();
+        assert!(q.fail_attempt(id, TaskError::NodeLost, &policy));
+        over.clear();
+        q.overdue_into(1e9, &mut over);
+        assert!(over.is_empty(), "queued tasks have no deadline");
+        q.set_clock(10.0);
+        q.take_for_dispatch(1, 1);
+        over.clear();
+        q.overdue_into(14.9, &mut over);
+        assert!(over.is_empty());
+        q.overdue_into(15.0, &mut over);
+        assert_eq!(over, vec![(id, 1)]);
+        assert!(q.conserved(0));
+    }
+
+    #[test]
+    fn backoff_defers_redispatch_without_blocking_head() {
+        let policy = RetryPolicy {
+            max_attempts: 5,
+            backoff_base_s: 2.0,
+            backoff_cap_s: 2.0,
+            backoff_jitter: 0.0,
+            ..Default::default()
+        };
+        let mut q = TaskQueues::new();
+        let slow = q.submit(sleep0());
+        let fresh = q.submit(sleep0());
+        q.take_for_dispatch(0, 1); // slow is out
+        q.set_clock(1.0);
+        assert!(q.fail_attempt(slow, TaskError::CommError, &policy)); // not_before = 3.0
+        // At t=1 the backed-off task is skipped but the fresh one flows.
+        let batch = q.take_for_dispatch(0, 2);
+        assert_eq!(batch.iter().map(|t| t.id).collect::<Vec<_>>(), vec![fresh]);
+        assert_eq!(q.waiting_len(), 1);
+        // Clock catches up past the backoff: the task dispatches again.
+        q.set_clock(3.0);
+        let batch = q.take_for_dispatch(0, 2);
+        assert_eq!(batch.iter().map(|t| t.id).collect::<Vec<_>>(), vec![slow]);
+        assert!(q.conserved(0));
+    }
+
+    #[test]
+    fn speculative_first_result_wins_exactly_once() {
+        let mut q = TaskQueues::new();
+        let id = q.submit(sleep0());
+        q.take_for_dispatch(0, 1);
+        assert!(q.mark_speculative(id, 1));
+        assert!(!q.mark_speculative(id, 2), "one twin at a time");
+        assert!(!q.mark_speculative(id, 0), "twin must not land on the primary");
+        assert_eq!(q.pending_len(), 1, "the task is still counted once");
+        assert_eq!(q.complete_ex(id, 0), CompleteOutcome::Done { speculated: true });
+        assert_eq!(q.complete_ex(id, 0), CompleteOutcome::DuplicateDrop);
+        assert_eq!(q.drain_done().len(), 1);
+        // Both executors' pending views drained.
+        let mut busy = Vec::new();
+        q.pending_nodes(|e| busy.push(e));
+        assert!(busy.is_empty(), "{busy:?}");
+        assert!(q.conserved(1));
+    }
+
+    #[test]
+    fn executor_loss_promotes_surviving_twin() {
+        let mut q = TaskQueues::new();
+        let id = q.submit(sleep0());
+        q.take_for_dispatch(0, 1);
+        assert!(q.mark_speculative(id, 1));
+        let mut retry = Vec::new();
+        q.executor_lost(0, &mut retry);
+        assert!(retry.is_empty(), "the twin carries the task, nothing re-runs");
+        assert_eq!(q.pending_len(), 1);
+        assert_eq!(q.pending_on(1), vec![id]);
+        assert!(q.pending_on(0).is_empty());
+        // The promoted attempt finishes normally — and no longer counts
+        // as speculated (the twin IS the attempt now).
+        assert_eq!(q.complete_ex(id, 0), CompleteOutcome::Done { speculated: false });
+        assert!(q.conserved(1));
+    }
+
+    #[test]
+    fn executor_loss_cancels_twin_keeps_primary() {
+        let mut q = TaskQueues::new();
+        let id = q.submit(sleep0());
+        q.take_for_dispatch(0, 1);
+        assert!(q.mark_speculative(id, 1));
+        let mut retry = Vec::new();
+        q.executor_lost(1, &mut retry);
+        assert!(retry.is_empty());
+        assert_eq!(q.pending_on(0), vec![id]);
+        // A new twin may be launched after the old one died.
+        assert!(q.mark_speculative(id, 2));
+        assert_eq!(q.complete_ex(id, 0), CompleteOutcome::Done { speculated: true });
+        assert!(q.conserved(1));
+    }
+
+    #[test]
+    fn executor_loss_without_twin_routes_to_retry() {
+        let policy = RetryPolicy::default();
+        let mut q = TaskQueues::new();
+        let a = q.submit(sleep0());
+        let b = q.submit(sleep0());
+        q.take_for_dispatch(0, 1);
+        q.take_for_dispatch(1, 1);
+        let mut retry = Vec::new();
+        q.executor_lost(0, &mut retry);
+        assert_eq!(retry, vec![a]);
+        assert!(q.fail_attempt(a, TaskError::CommError, &policy));
+        assert_eq!(q.waiting_len(), 1);
+        assert_eq!(q.pending_on(1), vec![b]);
+        assert!(q.conserved(0));
+    }
+
+    #[test]
+    fn failed_primary_hands_over_to_twin() {
+        let policy = RetryPolicy { max_attempts: 1, ..Default::default() };
+        let mut q = TaskQueues::new();
+        let id = q.submit(sleep0());
+        q.take_for_dispatch(0, 1);
+        assert!(q.mark_speculative(id, 1));
+        // Even at max_attempts, the surviving twin gets its chance: the
+        // failure promotes it instead of finalizing the task.
+        assert!(q.fail_attempt(id, TaskError::CommError, &policy));
+        assert_eq!(q.pending_on(1), vec![id]);
+        assert_eq!(q.done_len(), 0);
+        assert_eq!(q.complete_ex(id, 0), CompleteOutcome::Done { speculated: false });
+        assert!(q.drain_done()[0].ok());
+        assert!(q.conserved(1));
     }
 
     #[test]

@@ -30,10 +30,10 @@ use crate::falkon::dispatch::{
     bundle_for_depth, choose_executor_scored, choose_shard, DispatchConfig, IdleExecutor,
     ShardLoad,
 };
-use crate::falkon::errors::{NodeHealth, RetryPolicy, TaskError};
+use crate::falkon::errors::{NodeHealth, RetryBudget, RetryPolicy, TaskError};
 use crate::falkon::exec::{Executor, ExecutorConfig, TaskRunner};
 use crate::falkon::provision::{ProvisionEvent, ProvisionPolicy, Provisioner};
-use crate::falkon::queue::{TaskOutcome, TaskQueues};
+use crate::falkon::queue::{CompleteOutcome, TaskOutcome, TaskQueues};
 use crate::falkon::task::{TaskId, TaskPayload};
 use crate::fs::cache::CacheManager;
 use crate::lrm::cobalt::Cobalt;
@@ -71,6 +71,16 @@ pub struct ServiceConfig {
     /// Reactor I/O threads multiplexing the executor connections.
     /// `0` = auto (`min(4, cores)`).
     pub io_threads: usize,
+    /// Liveness machinery: heartbeat-based failure detection, per-attempt
+    /// dispatch deadlines, speculative re-execution and the global retry
+    /// budget. The default is all-off: no sweeper thread runs and every
+    /// hot path stays the pre-liveness code.
+    pub liveness: LivenessConfig,
+    /// Chaos harness: wire-level fault injection armed on every accepted
+    /// executor connection (outbound frame drops/delays, deterministic
+    /// per the spec's seed). `None` in production; the chaos tests use it
+    /// to exercise the liveness machinery.
+    pub wire_fault: Option<crate::faults::WireFaultSpec>,
 }
 
 impl Default for ServiceConfig {
@@ -83,7 +93,76 @@ impl Default for ServiceConfig {
             provision: None,
             obs: ObsConfig::default(),
             io_threads: 0,
+            liveness: LivenessConfig::default(),
+            wire_fault: None,
         }
+    }
+}
+
+/// Liveness and robustness knobs (the failure-detection tentpole). Every
+/// prong is independently optional; [`LivenessConfig::default`] turns
+/// them all off.
+#[derive(Clone, Debug)]
+pub struct LivenessConfig {
+    /// Expected executor heartbeat cadence, seconds. `0` disables the
+    /// failure detector — a hung-but-connected executor is then only
+    /// noticed if the OS ever reports the socket dead (possibly never).
+    pub heartbeat_s: f64,
+    /// Suspect a node after this many heartbeat intervals with no
+    /// traffic at all (heartbeats, results, credit and stage acks all
+    /// count as liveness). The suspected connection is hard-closed and
+    /// its in-flight tasks reclaimed through the disconnect-retry path.
+    pub suspect_after: f64,
+    /// Per-attempt dispatch deadline, seconds (`0` = off): an attempt
+    /// out at an executor longer than this is failed with `NodeLost`
+    /// (retriable) and requeued — the only prong that catches a hang
+    /// that keeps heartbeating.
+    pub task_deadline_s: f64,
+    /// Speculative re-execution: duplicate a straggling attempt onto a
+    /// second executor once its age exceeds this multiple of the
+    /// observed p99 completion time (`0` = off). First result wins;
+    /// the loser is dropped by the queue's arbitration.
+    pub speculate_after_p99x: f64,
+    /// Floor for the speculation age threshold, seconds (guards against
+    /// a tiny p99 when all completions so far were instant).
+    pub speculate_min_s: f64,
+    /// Speculative duplicates launched per shard per sweep, at most.
+    pub speculate_max_per_sweep: usize,
+    /// Sweeper cadence, milliseconds.
+    pub sweep_ms: u64,
+    /// Global retry-rate budget, tokens per second (`0` = unlimited).
+    /// When the bucket runs dry a retry is not dropped — it is pushed
+    /// out by an extra backoff-cap delay, braking correlated retry
+    /// storms fleet-wide.
+    pub retry_rate_per_s: f64,
+    /// Retry-budget bucket capacity (burst allowance).
+    pub retry_burst: f64,
+}
+
+impl Default for LivenessConfig {
+    fn default() -> Self {
+        LivenessConfig {
+            heartbeat_s: 0.0,
+            suspect_after: 3.0,
+            task_deadline_s: 0.0,
+            speculate_after_p99x: 0.0,
+            speculate_min_s: 1.0,
+            speculate_max_per_sweep: 4,
+            sweep_ms: 50,
+            retry_rate_per_s: 0.0,
+            retry_burst: 32.0,
+        }
+    }
+}
+
+impl LivenessConfig {
+    /// Whether any prong (or the retry policy's probation) requires the
+    /// sweeper thread.
+    fn sweeper_needed(&self, retry: &RetryPolicy) -> bool {
+        self.heartbeat_s > 0.0
+            || self.task_deadline_s > 0.0
+            || self.speculate_after_p99x > 0.0
+            || retry.probation_s > 0.0
     }
 }
 
@@ -169,9 +248,49 @@ struct ExecMeta {
     credit: u32,
     node: usize,
     health: NodeHealth,
+    /// Last time any traffic arrived from this executor (service-epoch
+    /// seconds) — the failure detector's input. Heartbeats, results,
+    /// credit and stage acks all refresh it.
+    last_live_s: f64,
+    /// The detector has condemned this connection (hard-close issued);
+    /// never condemn it twice.
+    suspected: bool,
     /// Executor announced this many cores at registration.
     #[allow(dead_code)]
     cores: u32,
+}
+
+/// Fixed ring of recent completion durations (seconds) feeding the
+/// speculation threshold's p99 estimate. Only written when speculation
+/// is configured on.
+#[derive(Debug)]
+struct DurationRing {
+    buf: [f64; 256],
+    len: usize,
+    at: usize,
+}
+
+impl DurationRing {
+    fn new() -> DurationRing {
+        DurationRing { buf: [0.0; 256], len: 0, at: 0 }
+    }
+
+    fn push(&mut self, v: f64) {
+        self.buf[self.at] = v;
+        self.at = (self.at + 1) % self.buf.len();
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    /// p99 over the window; `None` until enough samples exist for the
+    /// tail to mean anything.
+    fn p99(&self) -> Option<f64> {
+        if self.len < 16 {
+            return None;
+        }
+        let mut v = self.buf[..self.len].to_vec();
+        v.sort_by(f64::total_cmp);
+        Some(v[(self.len - 1) * 99 / 100])
+    }
 }
 
 /// One partition dispatcher's queue shard + executor set.
@@ -299,6 +418,14 @@ struct Inner {
     /// Readiness-driven I/O core: every executor connection's reads and
     /// writes are multiplexed over its small thread pool.
     reactor: Arc<Reactor>,
+    /// Global retry-rate token bucket (see
+    /// [`LivenessConfig::retry_rate_per_s`]). Leaf lock: taken briefly,
+    /// possibly under a shard lock, never the other way around.
+    retry_budget: Mutex<RetryBudget>,
+    /// Recent completion durations, the speculation p99 input. Leaf
+    /// lock: the sweeper reads it before taking any shard lock, and
+    /// `handle_results` pushes samples after dropping its shard lock.
+    durations: Mutex<DurationRing>,
 }
 
 impl Inner {
@@ -382,6 +509,10 @@ impl Service {
         let n_shards = config.hierarchy.shards();
         let obs = Obs::from_config(&config.obs);
         let reactor = Reactor::start(config.io_threads, obs.clone())?;
+        let retry_budget = RetryBudget::new(
+            config.liveness.retry_rate_per_s,
+            config.liveness.retry_burst.max(1.0),
+        );
         let inner = Arc::new(Inner {
             shards: (0..n_shards).map(|_| Shard::new()).collect(),
             coord: Mutex::new(CoordState::default()),
@@ -400,10 +531,22 @@ impl Service {
             prov_granted: AtomicU64::new(0),
             obs,
             reactor,
+            retry_budget: Mutex::new(retry_budget),
+            durations: Mutex::new(DurationRing::new()),
         });
         if let Some(o) = &inner.obs {
             for shard in &inner.shards {
                 shard.state.lock().expect("shard poisoned").queues.attach_obs(o.clone());
+            }
+        }
+        if inner.config.liveness.task_deadline_s > 0.0 {
+            for shard in &inner.shards {
+                shard
+                    .state
+                    .lock()
+                    .expect("shard poisoned")
+                    .queues
+                    .set_task_deadline(inner.config.liveness.task_deadline_s);
             }
         }
 
@@ -419,6 +562,10 @@ impl Service {
         if inner.config.provision.is_some() {
             let inner = inner.clone();
             threads.push(std::thread::spawn(move || provisioner_loop(inner, addr)));
+        }
+        if inner.config.liveness.sweeper_needed(&inner.config.retry) {
+            let inner = inner.clone();
+            threads.push(std::thread::spawn(move || liveness_loop(inner)));
         }
         Ok(Service { inner, addr, threads })
     }
@@ -895,9 +1042,12 @@ fn acceptor_loop(listener: TcpListener, inner: Arc<Inner>) {
             break;
         }
         let conn_inner = inner.clone();
-        let _ = inner
-            .reactor
-            .add_accepted(stream, move |_write| Box::new(SvcConn::new(conn_inner)));
+        let _ = inner.reactor.add_accepted(stream, move |write| {
+            if let Some(spec) = &conn_inner.config.wire_fault {
+                write.arm_wire_fault(Arc::new(crate::faults::WireFault::new(spec.clone())));
+            }
+            Box::new(SvcConn::new(conn_inner.clone()))
+        });
     }
 }
 
@@ -933,7 +1083,14 @@ impl SvcConn {
             let mut st = shard.state.lock().expect("shard poisoned");
             st.execs.insert(
                 executor_id,
-                ExecMeta { credit: 0, node, health: NodeHealth::default(), cores },
+                ExecMeta {
+                    credit: 0,
+                    node,
+                    health: NodeHealth::default(),
+                    last_live_s: inner.epoch.elapsed().as_secs_f64(),
+                    suspected: false,
+                    cores,
+                },
             );
             shard.execs_up.store(st.execs.len(), Ordering::Relaxed);
         }
@@ -970,11 +1127,18 @@ impl ConnHandler for SvcConn {
             Msg::Ready { executor_id: _, slots } => {
                 let mut st = shard.state.lock().expect("shard poisoned");
                 if let Some(meta) = st.execs.get_mut(&executor_id) {
-                    if meta.health.suspended {
-                        return true; // no credit for suspended nodes
-                    }
+                    meta.last_live_s = inner.epoch.elapsed().as_secs_f64();
+                    // Bank credit even while suspended: a grant already in
+                    // flight when `Suspend` shipped must not evaporate (the
+                    // executor's withheld bank only covers grants earned
+                    // AFTER `Suspend` arrived). The planners skip suspended
+                    // executors, so banked credit cannot dispatch until
+                    // probation re-idles the node.
                     let was_zero = meta.credit == 0;
                     meta.credit += slots;
+                    if meta.health.suspended {
+                        return true;
+                    }
                     if was_zero {
                         st.idle.push_back(executor_id);
                     }
@@ -994,6 +1158,7 @@ impl ConnHandler for SvcConn {
                 handle_results(inner, shard_idx, executor_id, &results);
             }
             Msg::StageAck { executor_id: _, key, bytes, ok, gen } => {
+                touch_liveness(inner, shard, executor_id);
                 let node = executor_id as usize;
                 let mut co = inner.coord.lock().expect("coord poisoned");
                 // Stale generation: an ack for an older push of this key.
@@ -1016,7 +1181,13 @@ impl ConnHandler for SvcConn {
                 inner.done_cv.notify_all();
                 shard.work_cv.notify_one();
             }
-            Msg::Heartbeat { .. } => {}
+            Msg::Heartbeat { .. } => {
+                // The failure detector's primary food: refresh the
+                // node's last-seen time. Result/credit/ack traffic also
+                // counts (see the other arms), which is what lets busy
+                // executors suppress heartbeats without being suspected.
+                touch_liveness(inner, shard, executor_id);
+            }
             Msg::WireStats {
                 executor_id: _,
                 hb_sent,
@@ -1025,6 +1196,7 @@ impl ConnHandler for SvcConn {
                 flush_cap,
                 flush_window,
             } => {
+                touch_liveness(inner, shard, executor_id);
                 if let Some(o) = &inner.obs {
                     let cur = [hb_sent, hb_suppressed, flush_idle, flush_cap, flush_window];
                     const WS_CTRS: [Ctr; 5] = [
@@ -1060,9 +1232,22 @@ impl ConnHandler for SvcConn {
             st.execs.remove(&executor_id);
             st.idle.retain(|e| *e != executor_id);
             shard.execs_up.store(st.execs.len(), Ordering::Relaxed);
-            let lost = st.queues.pending_on(executor_id as usize);
-            for id in lost {
-                st.queues.fail_attempt(id, TaskError::CommError, &inner.config.retry);
+            let now_s = inner.epoch.elapsed().as_secs_f64();
+            st.queues.set_clock(now_s);
+            // Speculative twins on this executor are cancelled; primary
+            // attempts with a surviving twin are promoted in place (the
+            // task stays pending, nothing re-runs); only sole attempts
+            // bounce through the retry path.
+            let mut retry = Vec::new();
+            st.queues.executor_lost(executor_id as usize, &mut retry);
+            for id in retry {
+                let extra = retry_extra_delay(inner, now_s);
+                st.queues.fail_attempt_delayed(
+                    id,
+                    TaskError::CommError,
+                    &inner.config.retry,
+                    extra,
+                );
             }
             shard.sync_hints(&st);
         }
@@ -1104,6 +1289,12 @@ fn handle_results(
     let t0 = Instant::now();
     let shard = &inner.shards[shard_idx];
     let mut suspend = false;
+    // Completion-duration samples are collected under the shard lock and
+    // pushed into the p99 ring only after it drops (the ring is a leaf
+    // lock the sweeper takes with no shard lock held). Empty — and
+    // allocation-free — unless speculation is on.
+    let speculating = inner.config.liveness.speculate_after_p99x > 0.0;
+    let mut ages: Vec<f64> = Vec::new();
     {
         let mut st = shard.state.lock().expect("shard poisoned");
         // Failure timestamps on the service epoch, so the suspension
@@ -1111,19 +1302,38 @@ fn handle_results(
         // batch share a timestamp — at most a flush window (~ms) apart
         // from their true times, so suspension timing is unchanged.
         let now_s = inner.epoch.elapsed().as_secs_f64();
+        st.queues.set_clock(now_s);
+        if let Some(meta) = st.execs.get_mut(&executor_id) {
+            meta.last_live_s = now_s; // result traffic counts as liveness
+        }
         let policy = inner.config.retry.clone();
         for r in results {
             match &r.error {
                 None => {
-                    st.queues.complete(r.task_id, r.exit_code);
-                    if let Some(meta) = st.execs.get_mut(&executor_id) {
-                        meta.health.record_success();
+                    if speculating {
+                        if let Some(age) = st.queues.attempt_age_s(r.task_id, now_s) {
+                            ages.push(age);
+                        }
+                    }
+                    match st.queues.complete_ex(r.task_id, r.exit_code) {
+                        CompleteOutcome::Done { .. } => {
+                            if let Some(meta) = st.execs.get_mut(&executor_id) {
+                                meta.health.record_success();
+                            }
+                        }
+                        // A speculative loser, or a reclaimed attempt's
+                        // straggling result: the task was already
+                        // finalized (or retried) elsewhere — first
+                        // result won, this one is dropped.
+                        CompleteOutcome::DuplicateDrop | CompleteOutcome::StaleDrop => {}
                     }
                 }
                 Some(err) => {
-                    st.queues.fail_attempt(r.task_id, err.clone(), &inner.config.retry);
+                    let extra = retry_extra_delay(inner, now_s);
+                    st.queues.fail_attempt_delayed(r.task_id, err.clone(), &policy, extra);
                     if let Some(meta) = st.execs.get_mut(&executor_id) {
-                        suspend |= meta.health.record_failure(now_s, &policy);
+                        let was = meta.health.suspended;
+                        suspend |= meta.health.record_failure(now_s, &policy) && !was;
                     }
                 }
             }
@@ -1133,7 +1343,16 @@ fn handle_results(
         }
         shard.sync_hints(&st);
     }
+    if !ages.is_empty() {
+        let mut ring = inner.durations.lock().expect("durations poisoned");
+        for a in ages {
+            ring.push(a);
+        }
+    }
     if suspend {
+        if let Some(o) = &inner.obs {
+            o.registry.inc(Ctr::NodesSuspended);
+        }
         if let Some(h) = inner.registry.get(executor_id) {
             let _ = h.send(&Msg::Suspend { reason: "failure storm".into() });
         }
@@ -1142,6 +1361,31 @@ fn handle_results(
     inner.profile.tasks.fetch_add(results.len() as u64, Ordering::Relaxed);
     inner.signal_done();
     shard.work_cv.notify_one(); // completions may free retried work
+}
+
+/// Refresh `executor_id`'s liveness timestamp — any inbound traffic
+/// counts as proof of life for the failure detector.
+fn touch_liveness(inner: &Inner, shard: &Shard, executor_id: u64) {
+    let mut st = shard.state.lock().expect("shard poisoned");
+    if let Some(meta) = st.execs.get_mut(&executor_id) {
+        meta.last_live_s = inner.epoch.elapsed().as_secs_f64();
+    }
+}
+
+/// One retry-budget token per retried attempt: when the bucket is dry
+/// the retry is still scheduled, just pushed out by a full backoff cap —
+/// a global brake on correlated retry storms, never a drop. Zero with
+/// the budget unconfigured.
+fn retry_extra_delay(inner: &Inner, now_s: f64) -> f64 {
+    if inner.config.liveness.retry_rate_per_s <= 0.0 {
+        return 0.0;
+    }
+    let mut budget = inner.retry_budget.lock().expect("budget poisoned");
+    if budget.try_take(now_s) {
+        0.0
+    } else {
+        inner.config.retry.backoff_cap_s.max(1.0)
+    }
 }
 
 /// One partition dispatcher: matches its shard's queued tasks to its
@@ -1322,6 +1566,199 @@ fn provisioner_loop(inner: Arc<Inner>, addr: std::net::SocketAddr) {
     inner.prov_requested.store(0, Ordering::Relaxed);
 }
 
+/// Reusable buffers for the liveness sweeper (one sweep allocates
+/// nothing once warm; speculative payload snapshots are Arc clones).
+#[derive(Default)]
+struct SweepScratch {
+    close: Vec<u64>,
+    resume: Vec<u64>,
+    overdue: Vec<(TaskId, usize)>,
+    spec: Vec<(TaskId, usize)>,
+    launches: Vec<(u64, TaskId, TaskPayload)>,
+    body: Vec<u8>,
+}
+
+/// The liveness sweeper: one thread periodically advancing the shard
+/// clocks and running the four liveness prongs — failure detection
+/// (traffic silence → hard-close), dispatch-deadline reclaim,
+/// speculative re-execution of stragglers, and probation reinstatement.
+/// Only spawned when some prong is configured on.
+fn liveness_loop(inner: Arc<Inner>) {
+    let cfg = inner.config.liveness.clone();
+    let tick = Duration::from_millis(cfg.sweep_ms.max(5));
+    let mut scratch = SweepScratch::default();
+    loop {
+        std::thread::sleep(tick);
+        if inner.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let now_s = inner.epoch.elapsed().as_secs_f64();
+        // The speculation age threshold (p99 × multiplier, floored) is
+        // computed before any shard lock is taken, so the ring lock
+        // never nests inside one.
+        let spec_age = if cfg.speculate_after_p99x > 0.0 {
+            inner
+                .durations
+                .lock()
+                .expect("durations poisoned")
+                .p99()
+                .map(|p| (p * cfg.speculate_after_p99x).max(cfg.speculate_min_s))
+        } else {
+            None
+        };
+        for shard_idx in 0..inner.shards.len() {
+            sweep_shard(&inner, shard_idx, now_s, spec_age, &mut scratch);
+        }
+    }
+}
+
+/// One liveness sweep over one shard. State transitions happen under the
+/// shard lock; every side effect with I/O (hard-closes, `Resume` sends,
+/// speculative dispatches) happens after it drops.
+fn sweep_shard(
+    inner: &Arc<Inner>,
+    shard_idx: usize,
+    now_s: f64,
+    spec_age: Option<f64>,
+    scratch: &mut SweepScratch,
+) {
+    let cfg = &inner.config.liveness;
+    let policy = &inner.config.retry;
+    let shard = &inner.shards[shard_idx];
+    scratch.close.clear();
+    scratch.resume.clear();
+    scratch.launches.clear();
+    let mut reclaimed = 0u64;
+    {
+        let mut st = shard.state.lock().expect("shard poisoned");
+        st.queues.set_clock(now_s);
+        // (1) Failure detector: no traffic of any kind for
+        // `suspect_after` heartbeat intervals → suspect. The connection
+        // is hard-closed below; task reclaim rides the ordinary
+        // disconnect path (`on_close` → `executor_lost`).
+        if cfg.heartbeat_s > 0.0 {
+            let horizon = cfg.suspect_after * cfg.heartbeat_s;
+            for (&id, meta) in st.execs.iter_mut() {
+                if !meta.suspected && now_s - meta.last_live_s > horizon {
+                    meta.suspected = true;
+                    scratch.close.push(id);
+                }
+            }
+        }
+        // (2) Deadline reclaim: attempts out past their dispatch
+        // deadline are failed (NodeLost, retriable) and requeued with
+        // backoff — the only prong that catches a hang that keeps
+        // heartbeating. The executor may still finish the old attempt;
+        // its straggling result is dropped by the queue's arbitration.
+        if cfg.task_deadline_s > 0.0 {
+            scratch.overdue.clear();
+            st.queues.overdue_into(now_s, &mut scratch.overdue);
+            for &(id, _exec) in &scratch.overdue {
+                let extra = retry_extra_delay(inner, now_s);
+                if st.queues.fail_attempt_delayed(id, TaskError::NodeLost, policy, extra) {
+                    reclaimed += 1;
+                }
+            }
+        }
+        // (3) Speculation: duplicate a long-running attempt onto a
+        // different idle executor. First result wins; `executor_lost`
+        // cancels or promotes twins if either side dies.
+        if let Some(age) = spec_age {
+            scratch.spec.clear();
+            st.queues.speculation_candidates(
+                now_s,
+                age,
+                cfg.speculate_max_per_sweep,
+                &mut scratch.spec,
+            );
+            for &(id, primary) in &scratch.spec {
+                let Some(pos) = st.idle.iter().position(|e| {
+                    st.execs
+                        .get(e)
+                        .map(|m| {
+                            m.credit > 0 && !m.health.suspended && !m.suspected && m.node != primary
+                        })
+                        .unwrap_or(false)
+                }) else {
+                    continue;
+                };
+                let exec_id = st.idle[pos];
+                if !st.queues.mark_speculative(id, exec_id as usize) {
+                    continue;
+                }
+                let meta = st.execs.get_mut(&exec_id).expect("just found idle");
+                meta.credit -= 1;
+                if meta.credit == 0 {
+                    let _ = st.idle.remove(pos);
+                }
+                let payload = st.queues.task(id).expect("pending candidate").payload.clone();
+                scratch.launches.push((exec_id, id, payload));
+            }
+        }
+        // (4) Probation: timed suspensions re-enter service. Credit the
+        // service banked while the node was suspended (grants that were
+        // in flight when `Suspend` shipped) re-idles here; credit the
+        // executor banked comes back with the `Resume` round-trip (one
+        // `Ready` for the withheld slots).
+        if policy.probation_s > 0.0 {
+            let ShardState { ref mut execs, ref mut idle, .. } = *st;
+            for (&id, meta) in execs.iter_mut() {
+                if meta.health.probation_over(now_s) {
+                    meta.health.resume();
+                    if meta.credit > 0 && !idle.contains(&id) {
+                        idle.push_back(id);
+                    }
+                    scratch.resume.push(id);
+                }
+            }
+        }
+        if reclaimed > 0 {
+            shard.sync_hints(&st);
+        }
+    }
+    if let Some(o) = &inner.obs {
+        o.registry.add(Ctr::TaskReclaims, reclaimed);
+        o.registry.add(Ctr::NodesSuspended, scratch.close.len() as u64);
+        o.registry.add(Ctr::NodesReinstated, scratch.resume.len() as u64);
+    }
+    for &id in &scratch.close {
+        if let Some(h) = inner.registry.get(id) {
+            h.close_now();
+        }
+    }
+    for &id in &scratch.resume {
+        if let Some(h) = inner.registry.get(id) {
+            let _ = h.send(&Msg::Resume);
+        }
+    }
+    for (exec_id, task_id, payload) in scratch.launches.drain(..) {
+        scratch.body.clear();
+        encode_dispatch_into(
+            shard_idx as u32,
+            std::iter::once(WireTaskRef { id: task_id, payload: &payload }),
+            &mut scratch.body,
+        );
+        let sent = inner
+            .registry
+            .get(exec_id)
+            .is_some_and(|h| h.send_body(&scratch.body).is_ok());
+        if sent {
+            shard.dispatched.fetch_add(1, Ordering::Relaxed);
+        }
+        // A failed send means the twin's connection just died — its
+        // `on_close` cancels the speculative mark.
+    }
+    if reclaimed > 0 || !scratch.resume.is_empty() {
+        // Reclaimed tasks become dispatchable once their backoff elapses,
+        // and reinstated executors may hold banked credit; poke the
+        // dispatcher (and, for reclaims, any client waiters).
+        shard.work_cv.notify_one();
+    }
+    if reclaimed > 0 {
+        inner.signal_done();
+    }
+}
+
 /// Plan one (executor, bundle) assignment from shard `shard_idx` into
 /// `scratch`: the chosen ids land in `scratch.ids` and an Arc snapshot
 /// of their payloads in `scratch.tasks` (a refcount bump per task — no
@@ -1362,6 +1799,12 @@ fn plan_shard(inner: &Arc<Inner>, shard_idx: usize, scratch: &mut DispatchScratc
     };
 
     let mut st = shard.state.lock().expect("shard poisoned");
+    // Deadline/straggler stamps read the queue clock at dispatch;
+    // advance it here so attempts aren't aged by up to a sweep tick.
+    let lv = &inner.config.liveness;
+    if lv.task_deadline_s > 0.0 || lv.speculate_after_p99x > 0.0 {
+        st.queues.set_clock(inner.epoch.elapsed().as_secs_f64());
+    }
     let planned = match snapshot {
         Some((head_id, scores))
             if st.queues.peek_waiting().map(|t| t.id) == Some(head_id) =>
@@ -1614,6 +2057,24 @@ mod tests {
         assert_eq!(svc.status_line(), "obs off");
         assert_eq!(svc.wire_stats(), WireStats::default());
         assert!(svc.chrome_json().get("traceEvents").is_some());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn liveness_sweeper_service_starts_and_shuts_down() {
+        let svc = Service::start(ServiceConfig {
+            liveness: LivenessConfig {
+                heartbeat_s: 0.05,
+                task_deadline_s: 5.0,
+                speculate_after_p99x: 8.0,
+                sweep_ms: 10,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        svc.submit(TaskPayload::Sleep { secs: 0.0 });
+        std::thread::sleep(Duration::from_millis(40));
         svc.shutdown();
     }
 

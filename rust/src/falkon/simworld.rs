@@ -208,6 +208,17 @@ pub struct WorldConfig {
     /// Deterministic failure injection: (virtual seconds, node) pairs —
     /// each kills a node at an exact time (unlike `node_mtbf_s` draws).
     pub fail_nodes_at: Vec<(f64, usize)>,
+    /// Chaos harness: a seeded [`FaultPlan`](crate::faults::FaultPlan)
+    /// generalizing `fail_nodes_at` — crashes (node kill), hangs-with-
+    /// heartbeats (the node computes but never reports until the
+    /// detector reclaims it), and stragglers (executions stretch by the
+    /// event's factor for its duration). The same plan drives the live
+    /// fabric via [`FaultPlan::live_spec`](crate::faults::FaultPlan::live_spec).
+    pub faults: crate::faults::FaultPlan,
+    /// How long a hung node survives before the failure detector
+    /// condemns it (the sim twin of the live `suspect_after ×
+    /// heartbeat_s` horizon / task-deadline reclaim).
+    pub fault_detect_s: f64,
     /// Result-direction modeling + batching (the wire hot-path refactor).
     /// `0` = the legacy calibration: result notifications are free and
     /// their cost is folded into the dispatch per-task constant. `k >= 1`
@@ -261,6 +272,8 @@ impl WorldConfig {
             dispatchers: 1,
             steal_batch: 64,
             fail_nodes_at: Vec::new(),
+            faults: crate::faults::FaultPlan::none(),
+            fault_detect_s: 1.5,
             result_batch: 0,
             adaptive_bundle_cap: 0,
             result_window_s: 0.002,
@@ -399,6 +412,15 @@ enum Ev {
     FsWake,
     /// A node dies (failure injection).
     NodeFail { node: usize },
+    /// Chaos: a node hangs — it keeps computing (and, conceptually,
+    /// heartbeating) but its completions never reach the service.
+    FaultHang { node: usize },
+    /// Chaos: a node turns straggler — executions stretch by `factor`
+    /// for `duration_s` virtual seconds.
+    FaultSlow { node: usize, factor: f64, duration_s: f64 },
+    /// The failure detector notices a hung node (after the configured
+    /// detection horizon): condemn it and bounce everything it held.
+    FaultDetect { node: usize },
     /// Tree broadcast: `node` finished receiving staged object `obj`
     /// from its parent and will forward it down its subtree.
     BcastRecv { node: usize, obj: usize },
@@ -516,9 +538,9 @@ pub struct World {
     /// Event counts by kind (TryDispatch, Deliver, ExecDone, Result,
     /// FsWake, NodeFail, FwdDeliver, BcastRecv, IfsArrive, CoordForward,
     /// ShardArrive, ShardDispatch, ResultMsg, ResultFlush,
-    /// ProvisionTick, AllocBoot, AllocExpire) — cheap observability for
-    /// perf work.
-    pub event_tally: [u64; 17],
+    /// ProvisionTick, AllocBoot, AllocExpire, FaultHang, FaultSlow,
+    /// FaultDetect) — cheap observability for perf work.
+    pub event_tally: [u64; 20],
     /// Elastic provisioning (None = the classic always-on fleet).
     prov: Option<Provisioner<Box<dyn Lrm>>>,
     /// Allocations whose kernel-image boot reads are still in flight:
@@ -533,6 +555,16 @@ pub struct World {
     /// Nodes killed permanently (MTBF / injected failures): a later
     /// allocation grant must NOT revive them.
     condemned: HashSet<usize>,
+    /// Chaos: nodes currently hung (computing, never reporting) —
+    /// awaiting their `FaultDetect`.
+    hung: HashSet<usize>,
+    /// Chaos: node → (until, factor) straggler stretch applied to
+    /// executions begun before `until`.
+    slow_until: HashMap<usize, (Time, f64)>,
+    /// Chaos: nodes whose scheduled `NodeFail` came from the fault plan
+    /// (so its firing counts toward `Ctr::FaultsInjected`, unlike MTBF
+    /// draws and `fail_nodes_at` kills).
+    crash_faults: HashSet<usize>,
     /// Initial dispatch credit per core (also used when a provisioned
     /// node boots).
     credit0: u32,
@@ -675,13 +707,16 @@ impl World {
             shard_live_cores: vec![0; n_shards],
             steal_events_n: 0,
             stolen_tasks_n: 0,
-            event_tally: [0; 17],
+            event_tally: [0; 20],
             prov,
             boot_allocs: HashMap::new(),
             boot_wake_target: None,
             expire_wake_target: None,
             node_busy_scratch: Vec::new(),
             condemned: HashSet::new(),
+            hung: HashSet::new(),
+            slow_until: HashMap::new(),
+            crash_faults: HashSet::new(),
             credit0,
             expirations_n: 0,
             allocs_granted_n: 0,
@@ -718,6 +753,25 @@ impl World {
         let injected = w.cfg.fail_nodes_at.clone();
         for (at_s, node) in injected {
             w.sched.at(secs(at_s), Ev::NodeFail { node });
+        }
+        // Chaos plan: crashes ride the NodeFail path (tagged so their
+        // firing counts as an injected fault); hangs and stragglers get
+        // their own events.
+        let plan = w.cfg.faults.clone();
+        for ev in plan.events {
+            match ev.kind {
+                crate::faults::FaultKind::Crash => {
+                    w.crash_faults.insert(ev.node);
+                    w.sched.at(secs(ev.at_s), Ev::NodeFail { node: ev.node });
+                }
+                crate::faults::FaultKind::Hang => {
+                    w.sched.at(secs(ev.at_s), Ev::FaultHang { node: ev.node });
+                }
+                crate::faults::FaultKind::Slow { factor, duration_s } => {
+                    w.sched
+                        .at(secs(ev.at_s), Ev::FaultSlow { node: ev.node, factor, duration_s });
+                }
+            }
         }
         w.init_collective();
         if let Some(o) = w.obs.clone() {
@@ -1497,7 +1551,14 @@ impl World {
         if let Some(o) = &self.obs {
             o.task_event_at(now, RecKind::Start, task as u64, core as u64);
         }
-        let dur = self.tasks[task].exec_secs;
+        let mut dur = self.tasks[task].exec_secs;
+        // Straggler fault: executions begun while the node is slow
+        // stretch by the event's factor.
+        if let Some(&(until, factor)) = self.slow_until.get(&self.node_of(core)) {
+            if now < until {
+                dur *= factor;
+            }
+        }
         let epoch = self.cores[core].epoch;
         self.sched.at(now + secs(dur), Ev::ExecDone { core, task, epoch });
     }
@@ -1730,6 +1791,12 @@ impl World {
     /// A node fails permanently (MTBF draw / injected kill): it can never
     /// be revived, even if a later allocation re-grants it.
     fn handle_node_fail(&mut self, now: Time, node: usize) {
+        if self.crash_faults.remove(&node) {
+            if let Some(o) = &self.obs {
+                o.registry.inc(Ctr::FaultsInjected);
+            }
+        }
+        self.hung.remove(&node);
         self.condemned.insert(node);
         self.take_node_down(now, node);
     }
@@ -1996,6 +2063,9 @@ impl World {
                 Ev::ProvisionTick => 14,
                 Ev::AllocBoot => 15,
                 Ev::AllocExpire => 16,
+                Ev::FaultHang { .. } => 17,
+                Ev::FaultSlow { .. } => 18,
+                Ev::FaultDetect { .. } => 19,
             }] += 1;
             match ev {
                 Ev::TryDispatch => self.try_dispatch(now),
@@ -2022,8 +2092,15 @@ impl World {
                     // The epoch check rejects completions from a previous
                     // incarnation of a decommissioned-then-rebooted core:
                     // the task was bounced at decommission and must not
-                    // ALSO complete here.
-                    if self.cores[core].alive && self.cores[core].epoch == epoch {
+                    // ALSO complete here. A hung node swallows the
+                    // completion instead: the task keeps occupying the
+                    // core (never reported) until `FaultDetect` bounces
+                    // it — the service sees the first and only outcome
+                    // from the retry, so exactly-once is preserved.
+                    if self.cores[core].alive
+                        && self.cores[core].epoch == epoch
+                        && !self.hung.contains(&self.node_of(core))
+                    {
                         self.tstate[task].end_exec = now;
                         if let Some(o) = &self.obs {
                             o.task_event_at(now, RecKind::End, task as u64, core as u64);
@@ -2125,6 +2202,38 @@ impl World {
                     self.arm_fs_wake();
                 }
                 Ev::NodeFail { node } => self.handle_node_fail(now, node),
+                Ev::FaultHang { node } => {
+                    // Already-dead nodes can't hang; otherwise arm the
+                    // hang and schedule its detection.
+                    if !self.condemned.contains(&node) && self.hung.insert(node) {
+                        if let Some(o) = &self.obs {
+                            o.registry.inc(Ctr::FaultsInjected);
+                        }
+                        self.sched.after_secs(
+                            self.cfg.fault_detect_s.max(1e-3),
+                            Ev::FaultDetect { node },
+                        );
+                    }
+                }
+                Ev::FaultSlow { node, factor, duration_s } => {
+                    if !self.condemned.contains(&node) {
+                        if let Some(o) = &self.obs {
+                            o.registry.inc(Ctr::FaultsInjected);
+                        }
+                        self.slow_until.insert(node, (now + secs(duration_s), factor.max(1.0)));
+                    }
+                }
+                Ev::FaultDetect { node } => {
+                    // The detector's sim twin: the hang horizon elapsed —
+                    // condemn the node and bounce everything it held
+                    // (NodeLost, retriable) through the retry path.
+                    if self.hung.contains(&node) {
+                        if let Some(o) = &self.obs {
+                            o.registry.inc(Ctr::NodesSuspended);
+                        }
+                        self.handle_node_fail(now, node);
+                    }
+                }
                 Ev::CoordForward => self.coord_forward(now),
                 Ev::ShardArrive { shard, tasks } => self.shard_arrive(now, shard, tasks),
                 Ev::ShardDispatch { shard } => self.shard_dispatch(now, shard),
@@ -2448,6 +2557,49 @@ mod tests {
         // (tasks stuck on dead nodes get NodeLost and are re-run elsewhere).
         assert_eq!(w.completed() + w.failed(), 1000);
         assert!(w.completed() >= 990, "completed {}", w.completed());
+    }
+
+    #[test]
+    fn chaos_plan_drives_sim_and_replays_bit_identically() {
+        // One seeded plan (2 crashes + 2 hangs + 2 stragglers over 10
+        // SiCortex nodes) must: fire every event, detect both hangs,
+        // conserve every task exactly once, and replay bit-identically.
+        use crate::faults::{FaultMix, FaultPlan};
+        let run = || {
+            let mut cfg = WorldConfig::new(Machine::sicortex(), 60);
+            cfg.obs = ObsConfig::full(1);
+            cfg.retry = RetryPolicy { max_attempts: 10, ..Default::default() };
+            cfg.faults = FaultPlan::seeded(
+                11,
+                10,
+                &FaultMix {
+                    crashes: 2,
+                    hangs: 2,
+                    slows: 2,
+                    window_s: (2.0, 15.0),
+                    slow_factor: 6.0,
+                    slow_duration_s: 30.0,
+                },
+            );
+            let tasks = vec![SimTask::sleep(2.0); 800];
+            let mut w = World::new(cfg, tasks);
+            w.run(u64::MAX);
+            let reg = &w.obs().expect("obs on").registry;
+            (
+                w.completed(),
+                w.failed(),
+                w.campaign().makespan_s(),
+                reg.counter(Ctr::FaultsInjected),
+                reg.counter(Ctr::NodesSuspended),
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must replay bit-identically");
+        let (completed, failed, _makespan, injected, suspended) = a;
+        assert_eq!(completed, 800, "faults must not lose tasks (failed {failed})");
+        assert_eq!(injected, 6, "all six planned faults fire");
+        assert_eq!(suspended, 2, "both hangs detected and condemned");
     }
 
     #[test]

@@ -1,0 +1,431 @@
+//! Deterministic chaos harness: seeded fault plans for both fabrics.
+//!
+//! The liveness machinery (failure detector, task deadlines, speculative
+//! re-execution — `falkon::service`) is only trustworthy if it can be
+//! *exercised* reproducibly. This module generates seeded fault schedules
+//! that both fabrics consume: the simulator replays [`FaultEvent`]s at
+//! their virtual times (generalizing `WorldConfig::fail_nodes_at`), and
+//! the live fabric arms per-executor [`ExecFaultSpec`]s (count-based, so
+//! wall-clock jitter cannot change *which* tasks are hit) plus
+//! [`WireFaultSpec`]s on connections (frame drop/delay at the transport
+//! seam). Same seed → same plan → same injected faults, which is what
+//! lets `bench_faults` assert bit-identical sim results across runs.
+
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::time::Duration;
+
+/// What happens to the victim node.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The node dies abruptly: connection drops, in-flight tasks are
+    /// lost until the service reclaims them.
+    Crash,
+    /// The node stops completing tasks but keeps heartbeating — the
+    /// failure mode only task deadlines can catch.
+    Hang,
+    /// The node turns into a straggler: task executions stretch by
+    /// `factor` for `duration_s` (sim) / tasks slow down by a fixed
+    /// extra delay (live), feeding the speculation path.
+    Slow { factor: f64, duration_s: f64 },
+}
+
+/// One scheduled fault.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual seconds into the campaign (sim fabric trigger).
+    pub at_s: f64,
+    /// Victim node / executor index.
+    pub node: usize,
+    /// Live-fabric trigger: the fault arms after the victim has handled
+    /// this many tasks (count-based so the plan stays deterministic
+    /// under wall-clock jitter).
+    pub after_tasks: u32,
+    pub kind: FaultKind,
+}
+
+/// Shape of a generated schedule.
+#[derive(Clone, Debug)]
+pub struct FaultMix {
+    pub crashes: usize,
+    pub hangs: usize,
+    pub slows: usize,
+    /// Injection window, virtual seconds (events uniform within).
+    pub window_s: (f64, f64),
+    /// Straggler stretch factor (sim) for `Slow` events.
+    pub slow_factor: f64,
+    /// How long a `Slow` node stays slow, virtual seconds.
+    pub slow_duration_s: f64,
+}
+
+impl FaultMix {
+    /// Only crashes.
+    pub fn crashes(n: usize, window_s: (f64, f64)) -> FaultMix {
+        FaultMix { crashes: n, hangs: 0, slows: 0, window_s, slow_factor: 1.0, slow_duration_s: 0.0 }
+    }
+
+    /// Only hangs-with-heartbeats.
+    pub fn hangs(n: usize, window_s: (f64, f64)) -> FaultMix {
+        FaultMix { crashes: 0, hangs: n, slows: 0, window_s, slow_factor: 1.0, slow_duration_s: 0.0 }
+    }
+
+    /// Only stragglers.
+    pub fn stragglers(n: usize, window_s: (f64, f64), factor: f64, duration_s: f64) -> FaultMix {
+        FaultMix {
+            crashes: 0,
+            hangs: 0,
+            slows: n,
+            window_s,
+            slow_factor: factor,
+            slow_duration_s: duration_s,
+        }
+    }
+}
+
+/// A deterministic, seeded schedule of faults over `nodes` victims.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults — the clean baseline).
+    pub fn none() -> FaultPlan {
+        FaultPlan { seed: 0, events: Vec::new() }
+    }
+
+    /// Generate a plan: victims are drawn without replacement from
+    /// `[0, nodes)`, times uniform in the mix's window, live triggers in
+    /// `[1, 40]` tasks. Same `(seed, nodes, mix counts)` → same plan.
+    pub fn seeded(seed: u64, nodes: usize, mix: &FaultMix) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let total = mix.crashes + mix.hangs + mix.slows;
+        assert!(total <= nodes, "more faults ({total}) than nodes ({nodes})");
+        let mut victims: Vec<usize> = (0..nodes).collect();
+        rng.shuffle(&mut victims);
+        let (lo, hi) = mix.window_s;
+        let mut events = Vec::with_capacity(total);
+        for (i, &node) in victims[..total].iter().enumerate() {
+            let kind = if i < mix.crashes {
+                FaultKind::Crash
+            } else if i < mix.crashes + mix.hangs {
+                FaultKind::Hang
+            } else {
+                FaultKind::Slow { factor: mix.slow_factor, duration_s: mix.slow_duration_s }
+            };
+            events.push(FaultEvent {
+                at_s: rng.uniform(lo, hi.max(lo + 1e-9)),
+                node,
+                after_tasks: rng.range(1, 40) as u32,
+                kind,
+            });
+        }
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.node.cmp(&b.node)));
+        FaultPlan { seed, events }
+    }
+
+    /// The live-fabric arm for executor `node`: its fault (if any) as a
+    /// count-triggered spec. At most one fault per node by construction.
+    pub fn live_spec(&self, node: usize) -> Option<ExecFaultSpec> {
+        self.events.iter().find(|e| e.node == node).map(|e| {
+            let mut s = ExecFaultSpec::default();
+            match &e.kind {
+                FaultKind::Crash => s.crash_after_tasks = Some(e.after_tasks),
+                FaultKind::Hang => s.hang_after_tasks = Some(e.after_tasks),
+                FaultKind::Slow { factor, .. } => {
+                    s.slow_every = 1;
+                    // A live straggler stretches every task by a fixed
+                    // extra delay proportional to the sim factor.
+                    s.slow_extra = Duration::from_millis((10.0 * factor.max(1.0)) as u64);
+                }
+            }
+            s
+        })
+    }
+}
+
+/// Count-triggered executor faults (the live arm of a [`FaultPlan`]).
+#[derive(Clone, Debug, Default)]
+pub struct ExecFaultSpec {
+    /// Tear the connection down abruptly after handling this many tasks
+    /// (in-flight work dies with it).
+    pub crash_after_tasks: Option<u32>,
+    /// Swallow every task after this many — the executor keeps its
+    /// connection and heartbeats but never completes again.
+    pub hang_after_tasks: Option<u32>,
+    /// Every `slow_every`-th task sleeps `slow_extra` longer (0 = off).
+    pub slow_every: u32,
+    pub slow_extra: Duration,
+    /// Drop the first N `StageAck` replies (staging-rendezvous faults).
+    pub drop_stage_acks: u32,
+}
+
+/// Runtime state for an armed [`ExecFaultSpec`] (shared by an executor's
+/// connection handler and workers).
+#[derive(Debug)]
+pub struct ExecFaultState {
+    spec: ExecFaultSpec,
+    handled: AtomicU32,
+    acks_dropped: AtomicU32,
+    injected: AtomicU64,
+}
+
+impl ExecFaultState {
+    pub fn new(spec: ExecFaultSpec) -> ExecFaultState {
+        ExecFaultState {
+            spec,
+            handled: AtomicU32::new(0),
+            acks_dropped: AtomicU32::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Account one dispatched task; reports what the fault plan wants
+    /// done with it. Exactly one of the actions fires per task.
+    pub fn on_task(&self) -> TaskAction {
+        let n = self.handled.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(c) = self.spec.crash_after_tasks {
+            if n >= c {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                return TaskAction::Crash;
+            }
+        }
+        if let Some(h) = self.spec.hang_after_tasks {
+            if n > h {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                return TaskAction::Swallow;
+            }
+        }
+        if self.spec.slow_every > 0 && n % self.spec.slow_every == 0 {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return TaskAction::Slow(self.spec.slow_extra);
+        }
+        TaskAction::Run
+    }
+
+    /// Should this `StageAck` be dropped?
+    pub fn drop_ack(&self) -> bool {
+        loop {
+            let d = self.acks_dropped.load(Ordering::SeqCst);
+            if d >= self.spec.drop_stage_acks {
+                return false;
+            }
+            if self
+                .acks_dropped
+                .compare_exchange(d, d + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+    }
+
+    /// Faults actually fired so far (telemetry reconciliation).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+/// What to do with one dispatched task under the armed fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskAction {
+    /// Run normally.
+    Run,
+    /// Run, but sleep this much extra first (straggler).
+    Slow(Duration),
+    /// Never run or report it (hang-with-heartbeats).
+    Swallow,
+    /// Tear the connection down now (crash).
+    Crash,
+}
+
+/// Wire-level faults applied at the frame-ship choke point
+/// (`WriteHandle::ship`): whole frame batches are dropped or delayed —
+/// never corrupted, since framing integrity is the transport's invariant
+/// and TCP would not deliver torn frames either.
+#[derive(Clone, Debug)]
+pub struct WireFaultSpec {
+    /// Drop roughly 1 in N ship calls (0 = off). Deterministic per
+    /// connection: decided by a seeded hash of the ship ordinal.
+    pub drop_1_in: u32,
+    /// Delay roughly 1 in N ship calls (0 = off).
+    pub delay_1_in: u32,
+    /// How long a delayed ship sleeps (skipped on reactor threads, which
+    /// must never block).
+    pub delay: Duration,
+    pub seed: u64,
+}
+
+impl WireFaultSpec {
+    pub fn drops(drop_1_in: u32, seed: u64) -> WireFaultSpec {
+        WireFaultSpec { drop_1_in, delay_1_in: 0, delay: Duration::ZERO, seed }
+    }
+}
+
+/// Verdict for one ship call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShipAction {
+    Pass,
+    Drop,
+    Delay(Duration),
+}
+
+/// Armed wire fault: a spec plus the per-connection ship ordinal.
+#[derive(Debug)]
+pub struct WireFault {
+    spec: WireFaultSpec,
+    ordinal: AtomicU64,
+    injected: AtomicU64,
+}
+
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl WireFault {
+    pub fn new(spec: WireFaultSpec) -> WireFault {
+        WireFault { spec, ordinal: AtomicU64::new(0), injected: AtomicU64::new(0) }
+    }
+
+    /// Decide this ship call's fate. The decision depends only on
+    /// `(seed, ordinal)`, so a connection's fault sequence is fixed at
+    /// arm time.
+    pub fn next_action(&self) -> ShipAction {
+        let n = self.ordinal.fetch_add(1, Ordering::Relaxed);
+        let h = mix64(self.spec.seed ^ n);
+        if self.spec.drop_1_in > 0 && h % self.spec.drop_1_in as u64 == 0 {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return ShipAction::Drop;
+        }
+        if self.spec.delay_1_in > 0 && (h >> 32) % self.spec.delay_1_in as u64 == 0 {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return ShipAction::Delay(self.spec.delay);
+        }
+        ShipAction::Pass
+    }
+
+    /// Ship calls actually dropped/delayed so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_deterministic_per_seed() {
+        let mix = FaultMix {
+            crashes: 3,
+            hangs: 2,
+            slows: 2,
+            window_s: (1.0, 9.0),
+            slow_factor: 8.0,
+            slow_duration_s: 5.0,
+        };
+        let a = FaultPlan::seeded(42, 64, &mix);
+        let b = FaultPlan::seeded(42, 64, &mix);
+        assert_eq!(a.events, b.events);
+        let c = FaultPlan::seeded(43, 64, &mix);
+        assert_ne!(a.events, c.events);
+        assert_eq!(a.events.len(), 7);
+        // Victims are distinct; times inside the window; sorted.
+        let mut nodes: Vec<usize> = a.events.iter().map(|e| e.node).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 7);
+        for w in a.events.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+        for e in &a.events {
+            assert!(e.at_s >= 1.0 && e.at_s < 9.0, "{e:?}");
+            assert!((1..=40).contains(&e.after_tasks), "{e:?}");
+        }
+    }
+
+    #[test]
+    fn live_spec_maps_kinds() {
+        let plan = FaultPlan::seeded(7, 16, &FaultMix::crashes(4, (0.0, 4.0)));
+        let victim = plan.events[0].node;
+        let spec = plan.live_spec(victim).expect("victim has a spec");
+        assert_eq!(spec.crash_after_tasks, Some(plan.events[0].after_tasks));
+        assert!(spec.hang_after_tasks.is_none());
+        let bystander = (0..16).find(|n| plan.events.iter().all(|e| e.node != *n)).unwrap();
+        assert!(plan.live_spec(bystander).is_none());
+    }
+
+    #[test]
+    fn exec_fault_crash_fires_once_at_threshold() {
+        let f = ExecFaultState::new(ExecFaultSpec {
+            crash_after_tasks: Some(3),
+            ..Default::default()
+        });
+        assert_eq!(f.on_task(), TaskAction::Run);
+        assert_eq!(f.on_task(), TaskAction::Run);
+        assert_eq!(f.on_task(), TaskAction::Crash);
+        assert_eq!(f.injected(), 1);
+    }
+
+    #[test]
+    fn exec_fault_hang_swallows_after_threshold() {
+        let f = ExecFaultState::new(ExecFaultSpec {
+            hang_after_tasks: Some(2),
+            ..Default::default()
+        });
+        assert_eq!(f.on_task(), TaskAction::Run);
+        assert_eq!(f.on_task(), TaskAction::Run);
+        assert_eq!(f.on_task(), TaskAction::Swallow);
+        assert_eq!(f.on_task(), TaskAction::Swallow);
+        assert_eq!(f.injected(), 2);
+    }
+
+    #[test]
+    fn exec_fault_slow_hits_every_kth() {
+        let f = ExecFaultState::new(ExecFaultSpec {
+            slow_every: 2,
+            slow_extra: Duration::from_millis(5),
+            ..Default::default()
+        });
+        assert_eq!(f.on_task(), TaskAction::Run);
+        assert_eq!(f.on_task(), TaskAction::Slow(Duration::from_millis(5)));
+        assert_eq!(f.on_task(), TaskAction::Run);
+        assert_eq!(f.on_task(), TaskAction::Slow(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn stage_ack_drops_bounded() {
+        let f = ExecFaultState::new(ExecFaultSpec { drop_stage_acks: 2, ..Default::default() });
+        assert!(f.drop_ack());
+        assert!(f.drop_ack());
+        assert!(!f.drop_ack());
+        assert!(!f.drop_ack());
+        assert_eq!(f.injected(), 2);
+    }
+
+    #[test]
+    fn wire_fault_sequence_is_deterministic() {
+        let spec = WireFaultSpec { drop_1_in: 4, delay_1_in: 0, delay: Duration::ZERO, seed: 9 };
+        let a = WireFault::new(spec.clone());
+        let b = WireFault::new(spec);
+        let seq_a: Vec<ShipAction> = (0..64).map(|_| a.next_action()).collect();
+        let seq_b: Vec<ShipAction> = (0..64).map(|_| b.next_action()).collect();
+        assert_eq!(seq_a, seq_b);
+        let drops = seq_a.iter().filter(|&&x| x == ShipAction::Drop).count();
+        assert!(drops > 0, "a 1-in-4 drop rate must fire within 64 ships");
+        assert!(drops < 40, "drop rate wildly off: {drops}/64");
+        assert_eq!(a.injected() as usize, drops);
+    }
+
+    #[test]
+    fn empty_plan_is_clean() {
+        let p = FaultPlan::none();
+        assert!(p.events.is_empty());
+        assert!(p.live_spec(0).is_none());
+    }
+}

@@ -34,6 +34,10 @@
 //! * [`obs`] — live observability: a lock-free sharded telemetry
 //!   registry plus a sampling flight recorder with Chrome trace-event
 //!   export, shared by both fabrics.
+//! * [`faults`] — deterministic chaos harness: seeded fault plans
+//!   (crashes, hangs-with-heartbeats, stragglers, wire frame drop/delay,
+//!   stage-ack loss) injectable into both fabrics to exercise the
+//!   liveness machinery reproducibly.
 //! * [`util`] — self-contained substrate (PRNG, stats, CLI, config, JSON,
 //!   bench harness, property testing) — the offline registry lacks the
 //!   usual crates, so these are implemented here.
@@ -44,6 +48,7 @@
 pub mod apps;
 pub mod collective;
 pub mod falkon;
+pub mod faults;
 pub mod fs;
 pub mod lrm;
 pub mod metrics;

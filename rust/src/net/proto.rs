@@ -74,6 +74,10 @@ pub enum Msg {
     /// Service tells the executor to stop accepting work (§3.3 node
     /// suspension after repeated fail-fast errors).
     Suspend { reason: String },
+    /// Service lifts a suspension (probation served): the executor may
+    /// request work again and immediately re-grants any credit it
+    /// withheld while suspended.
+    Resume,
     /// Orderly shutdown.
     Shutdown,
     /// Collective staging: push a common object (binary, static input)
@@ -421,6 +425,7 @@ impl Msg {
                 w.u64(*flush_cap);
                 w.u64(*flush_window);
             }
+            Msg::Resume => w.u8(11),
         }
     }
 
@@ -473,6 +478,7 @@ impl Msg {
                 flush_cap: r.u64()?,
                 flush_window: r.u64()?,
             },
+            11 => Msg::Resume,
             t => return Err(DecodeError::BadTag(t)),
         };
         if !r.done() {
@@ -537,6 +543,7 @@ mod tests {
         roundtrip(Msg::Result { task_id: 11, exit_code: 3, error: Some(TaskError::AppError(3)) });
         roundtrip(Msg::Heartbeat { executor_id: 1 });
         roundtrip(Msg::Suspend { reason: "too many stale NFS failures".into() });
+        roundtrip(Msg::Resume);
         roundtrip(Msg::Shutdown);
         roundtrip(Msg::StagePut { key: "cache/dock5.bin".into(), data: vec![7u8; 1000], gen: 9 });
         roundtrip(Msg::StageAck {

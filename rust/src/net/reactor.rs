@@ -40,8 +40,14 @@ pub const LISTEN_BACKLOG: i32 = 1024;
 /// overshoot the cap rather than deadlock the event loop.
 const SOFT_CAP: usize = 4 << 20;
 
-/// How long a backpressured sender waits before giving up on a peer.
-const BACKPRESSURE_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long a backpressured sender waits before giving up on a peer
+/// (millis). Mutable only so tests can exercise the timeout-teardown
+/// path without a 10-second stall.
+static BACKPRESSURE_TIMEOUT_MS: AtomicU64 = AtomicU64::new(10_000);
+
+fn backpressure_timeout() -> Duration {
+    Duration::from_millis(BACKPRESSURE_TIMEOUT_MS.load(Ordering::Relaxed))
+}
 
 /// Poll token reserved for each worker's wake pipe.
 const WAKE_TOKEN: u64 = u64::MAX;
@@ -518,6 +524,9 @@ pub(crate) struct OutRing {
     pub(crate) sent_bytes: AtomicU64,
     /// Reactor-global ring depth high-water mark (bytes).
     hiwat: Arc<AtomicU64>,
+    /// Chaos-harness arm: seeded frame drop/delay at the enqueue
+    /// boundary (whole frame batches — framing integrity is sacred).
+    wire_fault: OnceLock<Arc<crate::faults::WireFault>>,
 }
 
 impl OutRing {
@@ -544,7 +553,14 @@ impl OutRing {
             send_ordinal: AtomicU64::new(0),
             sent_bytes: AtomicU64::new(0),
             hiwat,
+            wire_fault: OnceLock::new(),
         }
+    }
+
+    /// Arm seeded wire faults (first arm wins; re-arming is a no-op so
+    /// the fault sequence stays a function of one seed).
+    pub(crate) fn arm_wire_fault(&self, fault: Arc<crate::faults::WireFault>) {
+        let _ = self.wire_fault.set(fault);
     }
 
     pub(crate) fn proto(&self) -> Option<Proto> {
@@ -575,6 +591,23 @@ impl OutRing {
     /// `count_frame=false` is the codec-magic preamble (bytes accounted,
     /// no wire-frame counter tick — mirroring `Framed::connect`).
     pub(crate) fn enqueue(self_: &Arc<OutRing>, frames: &[u8], count_frame: bool) -> io::Result<()> {
+        // Chaos arm: the codec-magic preamble (`count_frame=false`) is
+        // exempt — losing it models a broken transport, not a flaky one.
+        if count_frame {
+            if let Some(f) = self_.wire_fault.get() {
+                match f.next_action() {
+                    crate::faults::ShipAction::Pass => {}
+                    crate::faults::ShipAction::Drop => return Ok(()),
+                    crate::faults::ShipAction::Delay(d) => {
+                        // Reactor threads must never sleep; the delayed
+                        // batch just ships on time there.
+                        if !on_reactor_thread() {
+                            std::thread::sleep(d);
+                        }
+                    }
+                }
+            }
+        }
         let mut inner = self_.inner.lock().expect("out ring poisoned");
         loop {
             if inner.closed || inner.closing {
@@ -585,10 +618,21 @@ impl OutRing {
             }
             let (next, timeout) = self_
                 .drained
-                .wait_timeout(inner, BACKPRESSURE_TIMEOUT)
+                .wait_timeout(inner, backpressure_timeout())
                 .expect("out ring poisoned");
             inner = next;
             if timeout.timed_out() && inner.ring.len() >= SOFT_CAP && !inner.closed {
+                // A peer that can't drain SOFT_CAP within the deadline is
+                // dead weight. Fail this send AND sever the connection:
+                // the worker's teardown fires `on_close` exactly once, so
+                // the peer's in-flight work reclaims through the normal
+                // disconnect path instead of senders queueing behind a
+                // zombie forever.
+                inner.closed = true;
+                inner.ring = ByteRing::new();
+                drop(inner);
+                self_.drained.notify_all();
+                self_.worker.notify_dirty(self_.clone());
                 return Err(io::Error::new(io::ErrorKind::TimedOut, "outbound ring full"));
             }
         }
@@ -699,6 +743,22 @@ impl OutRing {
         inner.ring = ByteRing::new();
         drop(inner);
         self.drained.notify_all();
+    }
+
+    /// Hard close: abandon queued bytes and tear the connection down the
+    /// moment the worker runs (its `on_close` still fires exactly once,
+    /// on the worker). The failure detector uses this to sever a
+    /// suspected executor without waiting for its ring to drain.
+    pub(crate) fn close_now(self_: &Arc<OutRing>) {
+        let mut inner = self_.inner.lock().expect("out ring poisoned");
+        if inner.closed {
+            return;
+        }
+        inner.closed = true;
+        inner.ring = ByteRing::new();
+        drop(inner);
+        self_.drained.notify_all();
+        self_.worker.notify_dirty(self_.clone());
     }
 
     /// Graceful close: already-queued frames drain first, then the I/O
@@ -1394,6 +1454,53 @@ mod tests {
             s.join().unwrap();
         }
         reactor.shutdown();
+    }
+
+    #[test]
+    fn backpressure_deadline_fails_send_and_tears_down() {
+        // Shrink the deadline so the test doesn't stall 10 s; restore it
+        // on exit. No other test blocks on backpressure (they all have a
+        // reading peer), so the brief global change is safe.
+        BACKPRESSURE_TIMEOUT_MS.store(200, Ordering::Relaxed);
+        let reactor = Reactor::start(1, None).unwrap();
+        let closes = Arc::new(AtomicUsize::new(0));
+        let listener = listen_with_backlog("127.0.0.1:0", 16).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || listener.accept().unwrap().0);
+        let out = TcpStream::connect(addr).unwrap();
+        let flag = closes.clone();
+        let w = reactor.add_client(out, Proto::Tcp, move |_| Box::new(CloseFlag(flag))).unwrap();
+        // The peer never reads: queue well past SOFT_CAP so a subsequent
+        // sender blocks on backpressure and then hits the deadline.
+        let _held = t.join().unwrap();
+        let chunk = vec![7u8; 1 << 20];
+        let mut timed_out = false;
+        for gen in 0..64 {
+            match w.send(&Msg::StagePut { key: "cache/x".into(), data: chunk.clone(), gen }) {
+                Ok(()) => {}
+                Err(e) => {
+                    assert_eq!(e.kind(), io::ErrorKind::TimedOut, "unexpected error {e}");
+                    timed_out = true;
+                    break;
+                }
+            }
+        }
+        assert!(timed_out, "an unread peer must eventually time a sender out");
+        // The deadline must also sever the connection: on_close fires
+        // exactly once and later sends fail fast (BrokenPipe, not a wait).
+        for _ in 0..500 {
+            if closes.load(Ordering::SeqCst) == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(closes.load(Ordering::SeqCst), 1, "teardown must fire on_close");
+        let err = w.send(&Msg::Shutdown).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+        assert_eq!(reactor.conns_open(), 0);
+        reactor.shutdown();
+        assert_eq!(closes.load(Ordering::SeqCst), 1, "shutdown must not re-close");
+        BACKPRESSURE_TIMEOUT_MS.store(10_000, Ordering::Relaxed);
     }
 
     #[test]

@@ -117,6 +117,8 @@ pub struct Framed {
     /// Ordinals feeding the flight recorder's 1-in-N wire sampling.
     send_ordinal: u64,
     recv_ordinal: u64,
+    /// Chaos-harness arm: seeded frame drop/delay at the ship boundary.
+    wire_fault: Option<Arc<crate::faults::WireFault>>,
 }
 
 impl Framed {
@@ -131,12 +133,33 @@ impl Framed {
             obs: None,
             send_ordinal: 0,
             recv_ordinal: 0,
+            wire_fault: None,
         }
     }
 
     /// Attach an observability hub to this half of the connection.
     pub fn attach_obs(&mut self, obs: Arc<crate::obs::Obs>) {
         self.obs = Some(obs);
+    }
+
+    /// Arm seeded wire faults on this half: whole outbound frames are
+    /// dropped or delayed per the fault's deterministic sequence.
+    pub fn arm_wire_fault(&mut self, fault: Arc<crate::faults::WireFault>) {
+        self.wire_fault = Some(fault);
+    }
+
+    /// Consult the armed wire fault (if any) for one outbound ship.
+    /// Returns `false` when the frames should vanish.
+    fn fault_pass(&self) -> bool {
+        let Some(f) = &self.wire_fault else { return true };
+        match f.next_action() {
+            crate::faults::ShipAction::Pass => true,
+            crate::faults::ShipAction::Drop => false,
+            crate::faults::ShipAction::Delay(d) => {
+                std::thread::sleep(d);
+                true
+            }
+        }
     }
 
     #[inline]
@@ -220,6 +243,9 @@ impl Framed {
     /// [`WriteHandle`] can encode OUTSIDE the connection lock and only
     /// serialize the actual socket write.
     fn send_raw(&mut self) -> std::io::Result<()> {
+        if !self.fault_pass() {
+            return Ok(()); // injected frame loss: bytes never hit the wire
+        }
         self.stream.write_all(&self.scratch)?;
         self.sent_bytes += self.scratch.len() as u64;
         self.obs_sent(self.scratch.len() as u64);
@@ -232,6 +258,9 @@ impl Framed {
     /// Write caller-encoded frame bytes (the lock-scoped half of
     /// [`WriteHandle::send`]).
     fn write_frames(&mut self, frames: &[u8]) -> std::io::Result<()> {
+        if !self.fault_pass() {
+            return Ok(()); // injected frame loss
+        }
         self.stream.write_all(frames)?;
         self.sent_bytes += frames.len() as u64;
         self.obs_sent(frames.len() as u64);
@@ -545,6 +574,29 @@ impl WriteHandle {
         }
     }
 
+    /// Hard close: sever the connection immediately, abandoning queued
+    /// frames (the failure detector's path — a suspected executor gets
+    /// no farewell drain). On the blocking path this equals `shutdown`.
+    pub fn close_now(&self) {
+        match &self.sink {
+            Sink::Lock { inner, .. } => inner.lock().expect("write handle poisoned").shutdown(),
+            Sink::Ring(r) => super::reactor::OutRing::close_now(r),
+        }
+    }
+
+    /// Arm seeded wire faults on this connection's outbound path. The
+    /// fault state lives on the shared sink, so every clone of this
+    /// handle (and every future clone) ships through the same fault
+    /// sequence.
+    pub fn arm_wire_fault(&self, fault: Arc<crate::faults::WireFault>) {
+        match &self.sink {
+            Sink::Lock { inner, .. } => {
+                inner.lock().expect("write handle poisoned").arm_wire_fault(fault)
+            }
+            Sink::Ring(r) => r.arm_wire_fault(fault),
+        }
+    }
+
     /// Current outbound-ring buffer capacity (`None` on the blocking
     /// path) — lets tests assert the post-staging shrink.
     pub fn ring_capacity(&self) -> Option<usize> {
@@ -782,6 +834,25 @@ mod tests {
         assert_eq!(o.registry.counter(Ctr::WireRecvBytes), s.recv_bytes - 4);
         // Sampled wire instants were recorded.
         assert!(o.recorder.written() >= 2);
+    }
+
+    #[test]
+    fn framed_wire_fault_drops_frames_deterministically() {
+        use crate::faults::{WireFault, WireFaultSpec};
+        let (mut c, mut s) = pair(Proto::Tcp);
+        let f = Arc::new(WireFault::new(WireFaultSpec::drops(3, 77)));
+        c.arm_wire_fault(f.clone());
+        for i in 0..30u64 {
+            c.send(&Msg::Heartbeat { executor_id: i }).unwrap();
+        }
+        c.shutdown();
+        let mut got = 0u64;
+        while let Ok(m) = s.recv() {
+            assert!(matches!(m, Msg::Heartbeat { .. }), "surviving frames stay intact");
+            got += 1;
+        }
+        assert_eq!(got + f.injected(), 30, "every frame either arrived or was counted dropped");
+        assert!(f.injected() > 0, "a 1-in-3 drop must fire within 30 frames");
     }
 
     #[test]

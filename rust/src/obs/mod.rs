@@ -166,6 +166,7 @@ impl Obs {
             "t={:.3}s submit={} disp={} done={} fail={} retry={} steal={}/{} \
              wire tx={}f/{}B rx={}f/{}B hb={}+{}supp flush=i:{},c:{},w:{} \
              prov r:{},g:{},x:{} waiting={} pending={} execs={} \
+             live recl={} spec={}+{}waste susp={}-{} faults={} \
              react wake={}({:.0}/s) stall={} conns={} ringhw={} trace={}rec",
             now_ns as f64 / 1e9,
             r.counter(Ctr::TasksSubmitted),
@@ -190,6 +191,12 @@ impl Obs {
             r.gauge(Gauge::TasksWaiting),
             r.gauge(Gauge::TasksPending),
             r.gauge(Gauge::ExecsUp),
+            r.counter(Ctr::TaskReclaims),
+            r.counter(Ctr::SpeculativeLaunches),
+            r.counter(Ctr::SpeculativeWasted),
+            r.counter(Ctr::NodesSuspended),
+            r.counter(Ctr::NodesReinstated),
+            r.counter(Ctr::FaultsInjected),
             r.counter(Ctr::ReactorWakeups),
             r.counter(Ctr::ReactorWakeups) as f64 / (now_ns as f64 / 1e9).max(1e-9),
             r.counter(Ctr::WriteStalls),
@@ -251,6 +258,8 @@ mod tests {
         assert!(s.starts_with("t=1.500s"), "{s}");
         assert!(s.contains("submit=42"), "{s}");
         assert!(s.contains("react wake="), "{s}");
+        assert!(s.contains("live recl="), "{s}");
+        assert!(s.contains("faults="), "{s}");
         assert!(s.contains("trace="), "{s}");
     }
 

@@ -45,9 +45,15 @@ pub enum Ctr {
     StageFlushedBytes,
     ReactorWakeups,
     WriteStalls,
+    TaskReclaims,
+    SpeculativeLaunches,
+    SpeculativeWasted,
+    NodesSuspended,
+    NodesReinstated,
+    FaultsInjected,
 }
 
-pub const CTR_COUNT: usize = 26;
+pub const CTR_COUNT: usize = 32;
 
 /// Every counter, for snapshot/export loops.
 pub const ALL_CTRS: [Ctr; CTR_COUNT] = [
@@ -77,6 +83,12 @@ pub const ALL_CTRS: [Ctr; CTR_COUNT] = [
     Ctr::StageFlushedBytes,
     Ctr::ReactorWakeups,
     Ctr::WriteStalls,
+    Ctr::TaskReclaims,
+    Ctr::SpeculativeLaunches,
+    Ctr::SpeculativeWasted,
+    Ctr::NodesSuspended,
+    Ctr::NodesReinstated,
+    Ctr::FaultsInjected,
 ];
 
 impl Ctr {
@@ -108,6 +120,12 @@ impl Ctr {
             Ctr::StageFlushedBytes => "stage_flushed_bytes",
             Ctr::ReactorWakeups => "reactor_wakeups",
             Ctr::WriteStalls => "write_stalls",
+            Ctr::TaskReclaims => "task_reclaims",
+            Ctr::SpeculativeLaunches => "speculative_launches",
+            Ctr::SpeculativeWasted => "speculative_wasted",
+            Ctr::NodesSuspended => "nodes_suspended",
+            Ctr::NodesReinstated => "nodes_reinstated",
+            Ctr::FaultsInjected => "faults_injected",
         }
     }
 }

@@ -1,0 +1,214 @@
+//! Live-fabric chaos soak: the liveness machinery (failure detector, task
+//! deadlines, backoff, probation, speculation) against injected crashes,
+//! hangs-with-heartbeats, stragglers, and wire frame drops — with
+//! exactly-once delivery asserted throughout.
+
+use falkon::falkon::errors::{RetryPolicy, TaskError};
+use falkon::falkon::exec::{
+    spawn_fleet_with, DefaultRunner, Executor, ExecutorConfig, FaultyRunner,
+};
+use falkon::falkon::service::{LivenessConfig, Service, ServiceConfig};
+use falkon::falkon::task::TaskPayload;
+use falkon::faults::{FaultMix, FaultPlan, WireFaultSpec};
+use falkon::net::proto::Msg;
+use falkon::net::tcpcore::{Framed, Proto};
+use falkon::obs::{Ctr, ObsConfig};
+use std::sync::atomic::AtomicU32;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The 10K-task chaos campaign: 12 executors, a seeded plan arming one
+/// crash, two hangs-with-heartbeats, and two stragglers, plus seeded
+/// frame drops on every service-side connection. Every task must complete
+/// exactly once; the hangs' swallowed tasks must come back through the
+/// deadline-reclaim path.
+#[test]
+fn chaos_soak_preserves_exactly_once_under_mixed_faults() {
+    let plan = FaultPlan::seeded(
+        0xC405,
+        12,
+        &FaultMix {
+            crashes: 1,
+            hangs: 2,
+            slows: 2,
+            window_s: (0.0, 1.0), // live arms are count-based; times unused
+            slow_factor: 4.0,
+            slow_duration_s: 10.0,
+        },
+    );
+    let svc = Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        retry: RetryPolicy {
+            max_attempts: 10,
+            suspend_after_failures: 1000, // suspension covered by its own test
+            backoff_base_s: 0.02,
+            backoff_cap_s: 0.2,
+            ..Default::default()
+        },
+        liveness: LivenessConfig {
+            heartbeat_s: 0.2,
+            suspect_after: 3.0,
+            task_deadline_s: 2.0,
+            speculate_after_p99x: 8.0,
+            speculate_min_s: 0.5,
+            sweep_ms: 20,
+            ..Default::default()
+        },
+        wire_fault: Some(WireFaultSpec::drops(300, 0xD209)),
+        obs: ObsConfig::registry_only(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+    let fleet = spawn_fleet_with(&addr, 12, Arc::new(DefaultRunner), 1, 1, |cfg| ExecutorConfig {
+        heartbeat: Some(Duration::from_millis(100)),
+        fault: plan.live_spec(cfg.executor_id as usize),
+        ..cfg
+    })
+    .unwrap();
+    assert!(svc.wait_executors(12, Duration::from_secs(5)));
+
+    let n = 10_000;
+    let ids = svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.001 }));
+    let outcomes = svc.wait_all(Duration::from_secs(180)).expect("chaos campaign drains");
+
+    // Exactly-once: every submitted id, one outcome, no extras, all ok.
+    let mut seen: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
+    seen.sort_unstable();
+    assert_eq!(seen.windows(2).filter(|w| w[0] == w[1]).count(), 0, "duplicated outcomes");
+    let mut want = ids.clone();
+    want.sort_unstable();
+    assert_eq!(seen, want, "lost outcomes");
+    assert!(outcomes.iter().all(|o| o.ok()), "liveness must absorb every fault");
+    assert!(outcomes.iter().any(|o| o.attempts > 1), "faults must have forced retries");
+
+    // Reconcile: every armed fault actually fired (each victim sees far
+    // more than its `after_tasks` trigger in a 10K campaign), and the
+    // swallowed / dropped work came back through the reclaim path.
+    let armed: Vec<&Executor> =
+        fleet.iter().enumerate().filter(|(i, _)| plan.live_spec(*i).is_some()).map(|(_, e)| e).collect();
+    assert_eq!(armed.len(), 5, "plan must arm 5 of 12 executors");
+    for e in &armed {
+        assert!(e.faults_injected() >= 1, "armed fault never fired");
+    }
+    let obs = svc.obs().expect("registry on").clone();
+    assert!(
+        obs.registry.counter(Ctr::TaskReclaims) >= 1,
+        "hangs/drops must force deadline reclaims"
+    );
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+}
+
+/// Failure-detector end-to-end: a raw "executor" that registers, takes a
+/// task, then goes completely silent (no heartbeats, no results) must be
+/// suspected within the detection horizon, its connection hard-closed,
+/// and its in-flight task reclaimed onto a healthy executor.
+#[test]
+fn silent_executor_is_suspected_and_its_task_reclaimed() {
+    let hb = 0.1;
+    let svc = Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        liveness: LivenessConfig { heartbeat_s: hb, suspect_after: 3.0, sweep_ms: 10, ..Default::default() },
+        obs: ObsConfig::registry_only(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+
+    // The silent node: registers, grants one credit, then plays dead.
+    let mut fake = Framed::connect(&addr, Proto::Tcp).unwrap();
+    fake.send(&Msg::Register { executor_id: 7, cores: 1, partition: 0 }).unwrap();
+    fake.send(&Msg::Ready { executor_id: 7, slots: 1 }).unwrap();
+    assert!(svc.wait_executors(1, Duration::from_secs(5)));
+
+    svc.submit(TaskPayload::Sleep { secs: 0.0 });
+    match fake.recv().unwrap() {
+        Msg::Dispatch { .. } => {}
+        m => panic!("expected Dispatch to the silent node, got {m:?}"),
+    }
+    let t0 = Instant::now();
+
+    // A healthy, heartbeating executor stands by to absorb the reclaim.
+    let healthy = Executor::start(
+        ExecutorConfig {
+            heartbeat: Some(Duration::from_millis(50)),
+            ..ExecutorConfig::c_style(addr, 1)
+        },
+        Arc::new(DefaultRunner),
+    )
+    .unwrap();
+
+    let outcomes = svc.wait_all(Duration::from_secs(10)).expect("task reclaimed");
+    let waited = t0.elapsed().as_secs_f64();
+    assert_eq!(outcomes.len(), 1);
+    assert!(outcomes[0].ok());
+    assert!(outcomes[0].attempts > 1, "reclaim must be a second attempt");
+    // "Within 3 heartbeat intervals" of the horizon elapsing, plus sweep
+    // cadence and scheduling slack.
+    let horizon = 3.0 * hb;
+    assert!(
+        waited < horizon + 3.0 * hb + 1.0,
+        "reclaim took {waited:.2}s (horizon {horizon:.2}s)"
+    );
+    let obs = svc.obs().expect("registry on");
+    assert_eq!(obs.registry.counter(Ctr::NodesSuspended), 1, "exactly the silent node");
+    assert_eq!(svc.executors(), 1, "silent node deregistered, healthy one remains");
+    healthy.stop();
+    svc.shutdown();
+}
+
+/// Suspend → probation → resume regression (the executor-side credit
+/// protocol): a failure storm suspends the node, Ready credit is
+/// withheld while suspended, and the timed probation reinstates it with
+/// `Msg::Resume` — after which the banked credit returns and the
+/// campaign completes on the recovered node.
+#[test]
+fn suspension_probation_resume_roundtrip_completes_campaign() {
+    let svc = Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        retry: RetryPolicy {
+            max_attempts: 6,
+            suspend_after_failures: 3,
+            failure_window_s: 60.0,
+            probation_s: 0.4,
+            ..Default::default()
+        },
+        liveness: LivenessConfig { sweep_ms: 10, ..Default::default() },
+        obs: ObsConfig::registry_only(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+    // The ONLY executor fails its first 3 tasks (stale-NFS storm), which
+    // trips the suspension threshold; it is healthy afterwards. The
+    // campaign can only finish if the probation → Resume → banked-credit
+    // round-trip actually works.
+    let exec = Executor::start(
+        ExecutorConfig::c_style(addr, 0),
+        Arc::new(FaultyRunner {
+            inner: DefaultRunner,
+            fail_first: AtomicU32::new(3),
+            error: TaskError::StaleNfsHandle,
+        }),
+    )
+    .unwrap();
+    assert!(svc.wait_executors(1, Duration::from_secs(5)));
+
+    let n = 10;
+    svc.submit_many((0..n).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(30)).expect("campaign survives suspension");
+    assert_eq!(outcomes.len(), n);
+    assert!(outcomes.iter().all(|o| o.ok()), "failed tasks must retry to success");
+    assert!(outcomes.iter().any(|o| o.attempts > 1), "the 3 storm failures retried");
+
+    let obs = svc.obs().expect("registry on");
+    assert!(obs.registry.counter(Ctr::NodesSuspended) >= 1, "storm must suspend the node");
+    assert!(obs.registry.counter(Ctr::NodesReinstated) >= 1, "probation must reinstate it");
+    assert!(!exec.is_suspended(), "executor must end the campaign unsuspended");
+    assert_eq!(exec.withheld_credit(), 0, "banked credit must be released by Resume");
+    exec.stop();
+    svc.shutdown();
+}

@@ -1,0 +1,197 @@
+//! Property tests for the liveness machinery: backoff determinism and
+//! bounds, retry-budget conservation, fault-plan invariants, and the
+//! failure detector's no-false-positive guarantee on a live service.
+
+use falkon::falkon::errors::{RetryBudget, RetryPolicy};
+use falkon::falkon::exec::{spawn_fleet_with, DefaultRunner, ExecutorConfig};
+use falkon::falkon::service::{LivenessConfig, Service, ServiceConfig};
+use falkon::falkon::task::TaskPayload;
+use falkon::faults::{FaultMix, FaultPlan};
+use falkon::obs::{Ctr, ObsConfig};
+use falkon::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn policy(base: f64, cap: f64, jitter: f64) -> RetryPolicy {
+    RetryPolicy { backoff_base_s: base, backoff_cap_s: cap, backoff_jitter: jitter, ..Default::default() }
+}
+
+#[test]
+fn backoff_is_deterministic_per_seed() {
+    let p = policy(0.1, 30.0, 0.5);
+    let mut rng = Rng::new(0xB0FF);
+    for _ in 0..500 {
+        let attempt = rng.range(1, 20) as u32;
+        let seed = rng.below(u64::MAX);
+        assert_eq!(
+            p.backoff_s(attempt, seed).to_bits(),
+            p.backoff_s(attempt, seed).to_bits(),
+            "same (attempt, seed) must give bit-identical delay"
+        );
+    }
+    // Different seeds must (overwhelmingly) give different jitter.
+    let distinct = (0..100)
+        .map(|s| p.backoff_s(3, s).to_bits())
+        .collect::<std::collections::HashSet<_>>();
+    assert!(distinct.len() > 90, "jitter must vary with seed: {}", distinct.len());
+}
+
+#[test]
+fn backoff_raw_is_monotone_and_capped() {
+    let mut rng = Rng::new(7);
+    for _ in 0..200 {
+        let base = rng.uniform(0.001, 2.0);
+        let cap = rng.uniform(base, 120.0);
+        let p = policy(base, cap, 0.0);
+        let mut prev = 0.0;
+        for attempt in 1..40 {
+            let d = p.backoff_raw_s(attempt);
+            assert!(d >= prev, "raw backoff must be monotone: {prev} -> {d}");
+            assert!(d <= cap + 1e-12, "raw backoff must respect the cap: {d} > {cap}");
+            prev = d;
+        }
+        // The doubling sequence must actually reach the cap.
+        assert_eq!(p.backoff_raw_s(64), cap);
+    }
+}
+
+#[test]
+fn backoff_jitter_stays_in_bounds() {
+    let mut rng = Rng::new(99);
+    for _ in 0..200 {
+        let base = rng.uniform(0.01, 1.0);
+        let jitter = rng.uniform(0.0, 1.0);
+        let p = policy(base, 60.0, jitter);
+        let attempt = rng.range(1, 12) as u32;
+        let raw = p.backoff_raw_s(attempt);
+        let seed = rng.below(u64::MAX);
+        let d = p.backoff_s(attempt, seed);
+        assert!(
+            d >= raw * (1.0 - jitter) - 1e-12 && d <= raw * (1.0 + jitter) + 1e-12,
+            "jittered {d} outside [{}, {}]",
+            raw * (1.0 - jitter),
+            raw * (1.0 + jitter)
+        );
+    }
+}
+
+#[test]
+fn backoff_zero_base_stays_off() {
+    // The default policy (base 0) must never delay a retry — every
+    // pre-existing experiment depends on immediate requeue.
+    let p = RetryPolicy::default();
+    for attempt in 0..10 {
+        assert_eq!(p.backoff_raw_s(attempt), 0.0);
+        assert_eq!(p.backoff_s(attempt, 42), 0.0);
+    }
+}
+
+#[test]
+fn retry_budget_never_overdraws_and_refills_at_rate() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..50 {
+        let rate = rng.uniform(0.5, 50.0);
+        let burst = rng.uniform(1.0, 20.0);
+        let mut b = RetryBudget::new(rate, burst);
+        // Drain the full burst at t=0; the next take must fail.
+        let mut taken = 0;
+        while b.try_take(0.0) {
+            taken += 1;
+            assert!(taken <= burst.ceil() as u32 + 1, "overdraw past burst");
+        }
+        assert!((taken as f64 - burst.floor()).abs() <= 1.0, "burst {burst} gave {taken}");
+        // After dt seconds, roughly rate*dt tokens (capped at burst) return.
+        let dt = rng.uniform(0.1, 5.0);
+        let expect = (rate * dt).min(burst).floor() as u32;
+        let mut refilled = 0;
+        while b.try_take(dt) {
+            refilled += 1;
+        }
+        assert!(
+            (refilled as i64 - expect as i64).abs() <= 1,
+            "rate {rate} dt {dt}: refilled {refilled}, expected ~{expect}"
+        );
+    }
+}
+
+#[test]
+fn fault_plan_victims_unique_and_window_respected() {
+    let mut rng = Rng::new(0xFA17);
+    for _ in 0..100 {
+        let nodes = rng.range(8, 200) as usize;
+        let crashes = rng.below(4) as usize;
+        let hangs = rng.below(4) as usize;
+        let slows = rng.below(4) as usize;
+        if crashes + hangs + slows > nodes {
+            continue;
+        }
+        let lo = rng.uniform(0.0, 10.0);
+        let hi = lo + rng.uniform(0.1, 50.0);
+        let mix = FaultMix {
+            crashes,
+            hangs,
+            slows,
+            window_s: (lo, hi),
+            slow_factor: 4.0,
+            slow_duration_s: 10.0,
+        };
+        let seed = rng.below(u64::MAX);
+        let plan = FaultPlan::seeded(seed, nodes, &mix);
+        assert_eq!(plan.events.len(), crashes + hangs + slows);
+        let mut victims: Vec<usize> = plan.events.iter().map(|e| e.node).collect();
+        victims.sort_unstable();
+        victims.dedup();
+        assert_eq!(victims.len(), plan.events.len(), "victims must be distinct");
+        for e in &plan.events {
+            assert!(e.node < nodes);
+            assert!(e.at_s >= lo && e.at_s < hi, "{} outside [{lo}, {hi})", e.at_s);
+            assert!((1..=40).contains(&e.after_tasks));
+        }
+        // Regenerating with the same inputs is bit-identical.
+        assert_eq!(plan.events, FaultPlan::seeded(seed, nodes, &mix).events);
+    }
+}
+
+#[test]
+fn detector_never_suspects_a_heartbeating_executor() {
+    // An executor whose heartbeats arrive well within the suspicion
+    // horizon (cadence 50ms vs horizon 3 x 100ms) must never be
+    // suspected, even when it is completely idle — no tasks, no results,
+    // heartbeats are its only sign of life.
+    let svc = Service::start(ServiceConfig {
+        bind: "127.0.0.1:0".into(),
+        liveness: LivenessConfig {
+            heartbeat_s: 0.1,
+            suspect_after: 3.0,
+            sweep_ms: 10,
+            ..Default::default()
+        },
+        obs: ObsConfig::registry_only(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = svc.addr().to_string();
+    let fleet = spawn_fleet_with(&addr, 1, Arc::new(DefaultRunner), 1, 1, |cfg| ExecutorConfig {
+        heartbeat: Some(Duration::from_millis(50)),
+        ..cfg
+    })
+    .unwrap();
+    assert!(svc.wait_executors(1, Duration::from_secs(5)));
+
+    // Idle across many horizons: only heartbeats keep it alive.
+    std::thread::sleep(Duration::from_millis(900));
+    assert_eq!(svc.executors(), 1, "heartbeating executor must stay registered");
+    let obs = svc.obs().expect("registry on");
+    assert_eq!(obs.registry.counter(Ctr::NodesSuspended), 0, "no false suspicion");
+
+    // And it still works: the connection was never torn down.
+    svc.submit_many((0..20).map(|_| TaskPayload::Sleep { secs: 0.0 }));
+    let outcomes = svc.wait_all(Duration::from_secs(10)).unwrap();
+    assert_eq!(outcomes.len(), 20);
+    assert!(outcomes.iter().all(|o| o.ok()));
+    assert_eq!(obs.registry.counter(Ctr::NodesSuspended), 0);
+    for e in fleet {
+        e.stop();
+    }
+    svc.shutdown();
+}

@@ -54,6 +54,7 @@ fn sample_msgs() -> Vec<Msg> {
         Msg::Result { task_id: 11, exit_code: 3, error: Some(TaskError::AppError(3)) },
         Msg::Heartbeat { executor_id: 1 },
         Msg::Suspend { reason: "too many stale NFS failures".into() },
+        Msg::Resume,
         Msg::Shutdown,
         Msg::StagePut { key: "cache/dock5.bin".into(), data: vec![7u8; 100], gen: 9 },
         Msg::StageAck {
