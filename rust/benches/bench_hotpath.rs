@@ -12,6 +12,11 @@
 //!   (tasks ÷ wall seconds to replay the campaign), virtual tasks/s (the
 //!   calibrated model output — must NOT move when the engine gets
 //!   faster), events/s, and allocations/task;
+//! * **par_sim rows** — the petascale 160K-core, 640-dispatcher sleep-0
+//!   campaign on the partition-parallel fabric at 1, 4 and 16 worker
+//!   threads: wall tasks/s, wall seconds, speedup vs the 1-thread row,
+//!   and the virtual outputs (which must be bit-identical across the
+//!   three rows — the determinism gate CI asserts);
 //! * **live row** — loopback TCP sleep-0 through the sharded service:
 //!   tasks/s and allocations/task (whole-process count: all service,
 //!   executor and reader threads included, so it is an upper bound on
@@ -25,6 +30,7 @@
 use falkon::falkon::coordinator::HierarchyConfig;
 use falkon::falkon::dispatch::DispatchConfig;
 use falkon::falkon::exec::{spawn_fleet_with, DefaultRunner};
+use falkon::falkon::parworld::{ParConfig, ParWorld};
 use falkon::falkon::service::{Service, ServiceConfig};
 use falkon::falkon::simworld::{SimTask, World, WorldConfig};
 use falkon::falkon::task::TaskPayload;
@@ -72,6 +78,21 @@ fn sim_row(dispatchers: usize, n_tasks: usize) -> SimRow {
         events_per_s: events as f64 / wall,
         allocs_per_task: allocs as f64 / n_tasks as f64,
     }
+}
+
+/// Replay the petascale (160K-core, 640-dispatcher) sleep-0 campaign on
+/// the partition-parallel fabric at a given worker-thread count. The
+/// model (640 lanes) is fixed; only the thread count varies, so virtual
+/// results must be bit-identical across rows — the scaling protocol's
+/// determinism check (EXPERIMENTS.md §"Parallel-simulation scaling").
+fn par_row(threads: usize, n_tasks: u64) -> (falkon::falkon::parworld::ParResult, f64) {
+    let machine = Machine::bgp_psets(640); // 40960 nodes / 163840 cores
+    let cfg = ParConfig::new(machine, 640);
+    let t0 = Instant::now();
+    let r = ParWorld::new(cfg, n_tasks).run(threads);
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    assert_eq!(r.completed, n_tasks, "par bench must conserve tasks");
+    (r, wall)
 }
 
 /// Live loopback sleep-0 through the sharded service with the batched
@@ -144,6 +165,38 @@ fn main() {
             .set("allocs_per_task", Json::Num(r.allocs_per_task));
         rows.push(row);
     }
+    // Partition-parallel rows: same 640-lane model at 1, 4 and 16 worker
+    // threads. Speedup is wall-clock only; virtual output must not move.
+    let par_n: u64 = if quick() { 200_000 } else { 100_000_000 };
+    let mut base_wall = f64::NAN;
+    for threads in [1usize, 4, 16] {
+        let (r, wall) = par_row(threads, par_n);
+        if threads == 1 {
+            base_wall = wall;
+        }
+        t.row(&[
+            format!("par 160Kc t={threads}"),
+            format!("{:.0}", par_n as f64 / wall),
+            format!("{:.0}", r.virtual_tasks_per_s),
+            format!("{:.0}", r.events as f64 / wall),
+            format!("x{:.2}", base_wall / wall),
+        ]);
+        let mut row = Json::obj();
+        row.set("mode", Json::Str("par_sim".into()))
+            .set("shards", Json::Num(threads as f64))
+            .set("dispatchers", Json::Num(640.0))
+            .set("tasks", Json::Num(par_n as f64))
+            .set("tasks_per_s", Json::Num(par_n as f64 / wall))
+            .set("virtual_tasks_per_s", Json::Num(r.virtual_tasks_per_s))
+            .set("completed", Json::Num(r.completed as f64))
+            .set("failed", Json::Num(r.failed as f64))
+            .set("windows", Json::Num(r.windows as f64))
+            .set("events", Json::Num(r.events as f64))
+            .set("wall_s", Json::Num(wall))
+            .set("speedup_vs_1", Json::Num(base_wall / wall));
+        rows.push(row);
+    }
+
     let (live_tput, live_allocs) = live_row(4, live_n, 4);
     t.row(&[
         "live 4exec 4shard".to_string(),
@@ -164,6 +217,7 @@ fn main() {
     summary
         .set("nodes", Json::Num(4096.0))
         .set("sim_tasks", Json::Num(sim_n as f64))
+        .set("par_tasks", Json::Num(par_n as f64))
         .set("live_tasks", Json::Num(live_n as f64))
         .set(
             "protocol",

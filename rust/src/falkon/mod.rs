@@ -14,6 +14,10 @@
 //!   bundling, caching and retry policies driven by the discrete-event
 //!   engine against the machine models, used to replay the paper's
 //!   4096–160K-core experiments.
+//! * [`parworld`] — the simulated fabric sharded across worker threads
+//!   along partition-dispatcher boundaries with conservative time-window
+//!   sync, for petascale replay campaigns where one sim thread is the
+//!   wall-clock bottleneck.
 //!
 //! Since the hierarchical-dispatch refactor both fabrics run a two-level
 //! core: a coordinator admits submissions and shards them over N
@@ -33,6 +37,7 @@ pub mod coordinator;
 pub mod dispatch;
 pub mod errors;
 pub mod exec;
+pub mod parworld;
 pub mod provision;
 pub mod queue;
 pub mod service;

@@ -386,55 +386,64 @@ enum Stage {
     Boot,
 }
 
+/// Compact task-index list for event payloads: the calendar queue stores
+/// one `Ev` per slot, so every variant pays the max-variant size — `u32`
+/// ids (160K cores and 10⁸ tasks both fit with room) behind a fat
+/// pointer keep the whole enum within the 64-byte budget the
+/// `ev_payload_stays_compact` test pins.
+fn ids(v: Vec<usize>) -> Box<[u32]> {
+    v.into_iter().map(|t| t as u32).collect()
+}
+
 #[derive(Debug)]
 enum Ev {
     /// Service becomes free / should try to dispatch.
     TryDispatch,
     /// A dispatch message reaches a core.
-    Deliver { core: usize, tasks: Vec<usize> },
+    Deliver { core: u32, tasks: Box<[u32]> },
     /// A service->forwarder bundle reaches forwarder `fwd` (3-tier).
-    FwdDeliver { fwd: usize, assignments: Vec<(usize, usize)> },
+    FwdDeliver { fwd: u32, assignments: Box<[(u32, u32)]> },
     /// A core finished the compute phase of a task. `epoch` pins the
     /// core's incarnation: a task killed by decommission must not
     /// complete on the node's next boot.
-    ExecDone { core: usize, task: usize, epoch: u32 },
+    ExecDone { core: u32, task: u32, epoch: u32 },
     /// A result notification reaches the service.
-    Result { core: usize, task: usize, error: Option<TaskError> },
+    Result { core: u32, task: u32, error: Option<TaskError> },
     /// A batched result message (result-direction modeling on): `k`
     /// successful completions from one core in one wire message; the
     /// service pays [`ServiceModel::result_cost_s`]`(k)` once.
-    ResultMsg { core: usize, results: Vec<usize> },
+    ResultMsg { core: u32, results: Box<[u32]> },
     /// Result-batch window expiry for `core`: flush whatever completions
     /// are still buffered (armed when the first result lands in an empty
     /// buffer — the sim twin of the live window flusher thread).
-    ResultFlush { core: usize },
+    ResultFlush { core: u32 },
     /// Shared-FS progress wakeup (deduplicated via `fs_wake_target`).
     FsWake,
     /// A node dies (failure injection).
-    NodeFail { node: usize },
+    NodeFail { node: u32 },
     /// Chaos: a node hangs — it keeps computing (and, conceptually,
     /// heartbeating) but its completions never reach the service.
-    FaultHang { node: usize },
+    FaultHang { node: u32 },
     /// Chaos: a node turns straggler — executions stretch by `factor`
     /// for `duration_s` virtual seconds.
-    FaultSlow { node: usize, factor: f64, duration_s: f64 },
+    FaultSlow { node: u32, factor: f64, duration_s: f64 },
     /// The failure detector notices a hung node (after the configured
     /// detection horizon): condemn it and bounce everything it held.
-    FaultDetect { node: usize },
+    FaultDetect { node: u32 },
     /// Tree broadcast: `node` finished receiving staged object `obj`
     /// from its parent and will forward it down its subtree.
-    BcastRecv { node: usize, obj: usize },
+    BcastRecv { node: u32, obj: u32 },
     /// An IFS output record (task output + absorbed log appends) reaches
     /// its partition collector.
-    IfsArrive { core: usize, task: usize, bytes: u64 },
+    IfsArrive { core: u32, task: u32, bytes: u64 },
     /// Hierarchical mode: the coordinator is free to forward a bundle to
     /// a partition dispatcher.
     CoordForward,
     /// Hierarchical mode: a forwarded (or stolen) bundle reaches shard
     /// `shard`'s dispatcher queue.
-    ShardArrive { shard: usize, tasks: Vec<usize> },
+    ShardArrive { shard: u32, tasks: Box<[u32]> },
     /// Hierarchical mode: shard `shard` tries to dispatch from its queue.
-    ShardDispatch { shard: usize },
+    ShardDispatch { shard: u32 },
     /// Provisioned mode: periodic provisioner drive (queue-depth growth,
     /// idle release).
     ProvisionTick,
@@ -490,7 +499,6 @@ pub struct World {
     fs: SharedFs,
     ram: RamdiskModel,
     cache: CacheManager,
-    rng: Rng,
     tasks: Vec<SimTask>,
     tstate: Vec<TaskState>,
     waiting: VecDeque<usize>,
@@ -666,7 +674,6 @@ impl World {
             fs,
             ram: RamdiskModel::new(),
             cache,
-            rng: Rng::new(cfg.seed),
             tstate: vec![TaskState::default(); n],
             waiting: if sharded { VecDeque::new() } else { (0..n).collect() },
             cores: (0..cores)
@@ -745,14 +752,18 @@ impl World {
             }
         }
         if let Some(mtbf) = w.cfg.node_mtbf_s {
+            // Per-NODE split streams (not one sequential generator): the
+            // draw for node k is a pure function of (seed, k), so the
+            // fault schedule is identical across dispatcher counts and
+            // across the serial and partition-parallel engines.
             for node in 0..w.cfg.machine.nodes {
-                let at = w.rng.exp(mtbf);
-                w.sched.after_secs(at, Ev::NodeFail { node });
+                let at = Rng::split(w.cfg.seed, node as u64).exp(mtbf);
+                w.sched.after_secs(at, Ev::NodeFail { node: node as u32 });
             }
         }
         let injected = w.cfg.fail_nodes_at.clone();
         for (at_s, node) in injected {
-            w.sched.at(secs(at_s), Ev::NodeFail { node });
+            w.sched.at(secs(at_s), Ev::NodeFail { node: node as u32 });
         }
         // Chaos plan: crashes ride the NodeFail path (tagged so their
         // firing counts as an injected fault); hangs and stragglers get
@@ -762,14 +773,16 @@ impl World {
             match ev.kind {
                 crate::faults::FaultKind::Crash => {
                     w.crash_faults.insert(ev.node);
-                    w.sched.at(secs(ev.at_s), Ev::NodeFail { node: ev.node });
+                    w.sched.at(secs(ev.at_s), Ev::NodeFail { node: ev.node as u32 });
                 }
                 crate::faults::FaultKind::Hang => {
-                    w.sched.at(secs(ev.at_s), Ev::FaultHang { node: ev.node });
+                    w.sched.at(secs(ev.at_s), Ev::FaultHang { node: ev.node as u32 });
                 }
                 crate::faults::FaultKind::Slow { factor, duration_s } => {
-                    w.sched
-                        .at(secs(ev.at_s), Ev::FaultSlow { node: ev.node, factor, duration_s });
+                    w.sched.at(
+                        secs(ev.at_s),
+                        Ev::FaultSlow { node: ev.node as u32, factor, duration_s },
+                    );
                 }
             }
         }
@@ -887,7 +900,8 @@ impl World {
         let mut free = st.uplink_free.get(&node).copied().unwrap_or(0).max(now);
         for child in tree.children(node - base) {
             free += xfer;
-            self.sched.at(free, Ev::BcastRecv { node: base + child, obj });
+            self.sched
+                .at(free, Ev::BcastRecv { node: (base + child) as u32, obj: obj as u32 });
         }
         st.uplink_free.insert(node, free);
         st.remaining -= 1;
@@ -1105,7 +1119,7 @@ impl World {
         // Network: half RTT + transmission.
         let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
         let deliver_at = self.service_busy_until + secs(latency);
-        self.sched.at(deliver_at, Ev::Deliver { core, tasks: batch });
+        self.sched.at(deliver_at, Ev::Deliver { core: core as u32, tasks: ids(batch) });
     }
 
     /// 3-tier dispatch: the service packs up to 64 (core, task)
@@ -1183,19 +1197,23 @@ impl World {
         let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
         self.sched.at(
             self.service_busy_until + secs(latency),
-            Ev::FwdDeliver { fwd, assignments },
+            Ev::FwdDeliver {
+                fwd: fwd as u32,
+                assignments: assignments.into_iter().map(|(c, t)| (c as u32, t as u32)).collect(),
+            },
         );
     }
 
     /// Forwarder fan-out: pays its own per-task dispatch cost (same class
     /// of host as the service), in parallel with other forwarders.
-    fn fwd_deliver(&mut self, now: Time, fwd: usize, assignments: Vec<(usize, usize)>) {
+    fn fwd_deliver(&mut self, now: Time, fwd: usize, assignments: Box<[(u32, u32)]>) {
         let per_task = secs(self.model.per_msg_s + self.model.per_task_s);
         let mut busy = self.fwd_busy_until[fwd].max(now);
         let latency = secs(self.cfg.machine.net_rtt_secs / 2.0);
-        for (core, task) in assignments {
+        for &(core, task) in assignments.iter() {
             busy += per_task;
-            self.sched.at(busy + latency, Ev::Deliver { core, tasks: vec![task] });
+            self.sched
+                .at(busy + latency, Ev::Deliver { core, tasks: vec![task].into_boxed_slice() });
         }
         self.fwd_busy_until[fwd] = busy;
     }
@@ -1232,7 +1250,8 @@ impl World {
         }
         let stealable = || self.shards.iter().enumerate().any(|(v, s)| v != d && !s.waiting.is_empty());
         if !self.shards[d].waiting.is_empty() || stealable() {
-            self.sched.at(now.max(self.shards[d].busy_until), Ev::ShardDispatch { shard: d });
+            self.sched
+                .at(now.max(self.shards[d].busy_until), Ev::ShardDispatch { shard: d as u32 });
             self.shards[d].scheduled = true;
         }
     }
@@ -1283,7 +1302,7 @@ impl World {
         let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
         self.sched.at(
             self.coord_busy_until + secs(latency),
-            Ev::ShardArrive { shard: dst, tasks: batch },
+            Ev::ShardArrive { shard: dst as u32, tasks: ids(batch) },
         );
         if !self.coord_q.is_empty() {
             self.sched.at(self.coord_busy_until, Ev::CoordForward);
@@ -1295,16 +1314,16 @@ impl World {
     /// in flight to a partition that lost its last core bounces back to
     /// the coordinator for re-routing (otherwise it would strand: no
     /// result ever wakes a dead shard).
-    fn shard_arrive(&mut self, now: Time, d: usize, tasks: Vec<usize>) {
+    fn shard_arrive(&mut self, now: Time, d: usize, tasks: Box<[u32]>) {
         if self.shard_live_cores[d] == 0 {
             self.shards[d].steal_pending = false;
             self.shard_load[d] = self.shard_load[d].saturating_sub(tasks.len());
-            self.coord_q.extend(tasks);
+            self.coord_q.extend(tasks.iter().map(|&t| t as usize));
             self.wake_coord(now);
             return;
         }
         self.shards[d].steal_pending = false;
-        self.shards[d].waiting.extend(tasks);
+        self.shards[d].waiting.extend(tasks.iter().map(|&t| t as usize));
         self.wake_shard(d, now);
     }
 
@@ -1317,7 +1336,7 @@ impl World {
             return;
         }
         if self.shards[d].busy_until > now {
-            self.sched.at(self.shards[d].busy_until, Ev::ShardDispatch { shard: d });
+            self.sched.at(self.shards[d].busy_until, Ev::ShardDispatch { shard: d as u32 });
             self.shards[d].scheduled = true;
             return;
         }
@@ -1401,10 +1420,10 @@ impl World {
         }
         let latency = self.cfg.machine.net_rtt_secs / 2.0 + wire * 8.0 / self.model.nic_bps;
         let deliver_at = self.shards[d].busy_until + secs(latency);
-        self.sched.at(deliver_at, Ev::Deliver { core, tasks: batch });
+        self.sched.at(deliver_at, Ev::Deliver { core: core as u32, tasks: ids(batch) });
         // Keep dispatching while there is work and credit.
         if !self.shards[d].waiting.is_empty() && !self.shards[d].idle.is_empty() {
-            self.sched.at(self.shards[d].busy_until, Ev::ShardDispatch { shard: d });
+            self.sched.at(self.shards[d].busy_until, Ev::ShardDispatch { shard: d as u32 });
             self.shards[d].scheduled = true;
         }
     }
@@ -1449,7 +1468,7 @@ impl World {
         }
         self.shards[d].steal_pending = true;
         let hop = secs(self.cfg.machine.net_rtt_secs); // victim → coord → thief
-        self.sched.at(now + hop, Ev::ShardArrive { shard: d, tasks });
+        self.sched.at(now + hop, Ev::ShardArrive { shard: d as u32, tasks: ids(tasks) });
     }
 
     /// Start the next fully-staged task on a free core.
@@ -1560,7 +1579,8 @@ impl World {
             }
         }
         let epoch = self.cores[core].epoch;
-        self.sched.at(now + secs(dur), Ev::ExecDone { core, task, epoch });
+        self.sched
+            .at(now + secs(dur), Ev::ExecDone { core: core as u32, task: task as u32, epoch });
     }
 
     fn begin_stage_out(&mut self, now: Time, core: usize, task: usize) {
@@ -1578,7 +1598,10 @@ impl World {
             let local = self.ram.write_secs(wb);
             let hop = self.cfg.machine.net_rtt_secs / 2.0 + payload as f64 * 8.0 / cc.link_bps;
             self.tstate[task].awaiting_write = true;
-            self.sched.at(now + secs(local + hop), Ev::IfsArrive { core, task, bytes: payload });
+            self.sched.at(
+                now + secs(local + hop),
+                Ev::IfsArrive { core: core as u32, task: task as u32, bytes: payload },
+            );
             return;
         }
         let node = self.node_of(core);
@@ -1634,7 +1657,8 @@ impl World {
         let latency = secs(self.cfg.machine.net_rtt_secs / 2.0);
         // Errors (and the legacy model) ship per-task, immediately.
         if self.cfg.result_batch == 0 || error.is_some() {
-            self.sched.at(now + latency, Ev::Result { core, task, error });
+            self.sched
+                .at(now + latency, Ev::Result { core: core as u32, task: task as u32, error });
             // The core is free as soon as the result is sent (C executor
             // sends Result + Ready back-to-back); start the next task.
             self.cores[core].current = None;
@@ -1654,13 +1678,14 @@ impl World {
                 o.registry.inc(if idle { Ctr::FlushIdle } else { Ctr::FlushCap });
             }
             let results = std::mem::take(&mut self.cores[core].result_buf);
-            self.sched.at(now + latency, Ev::ResultMsg { core, results });
+            self.sched
+                .at(now + latency, Ev::ResultMsg { core: core as u32, results: ids(results) });
         } else if self.cores[core].result_buf.len() == 1 {
             // First completion in an empty buffer while the core stays
             // busy: arm the window so it cannot hide behind a
             // long-running neighbor (live `batch_window` twin).
             self.sched
-                .after_secs(self.cfg.result_window_s.max(0.0), Ev::ResultFlush { core });
+                .after_secs(self.cfg.result_window_s.max(0.0), Ev::ResultFlush { core: core as u32 });
         }
     }
 
@@ -1676,7 +1701,7 @@ impl World {
         }
         let latency = secs(self.cfg.machine.net_rtt_secs / 2.0);
         let results = std::mem::take(&mut self.cores[core].result_buf);
-        self.sched.at(now + latency, Ev::ResultMsg { core, results });
+        self.sched.at(now + latency, Ev::ResultMsg { core: core as u32, results: ids(results) });
     }
 
     /// Advance the (shard's) service busy horizon by the ingest cost of
@@ -1702,10 +1727,10 @@ impl World {
 
     /// A batched result message reaches the service: pay the message's
     /// ingest cost once, then run the per-completion bookkeeping.
-    fn handle_result_msg(&mut self, now: Time, core: usize, results: Vec<usize>) {
+    fn handle_result_msg(&mut self, now: Time, core: usize, results: Box<[u32]>) {
         self.charge_result_cost(now, core, results.len());
-        for task in results {
-            self.handle_result(now, core, task, None);
+        for &task in results.iter() {
+            self.handle_result(now, core, task as usize, None);
         }
     }
 
@@ -1847,7 +1872,11 @@ impl World {
             for task in lost {
                 self.sched.after_secs(
                     self.cfg.machine.net_rtt_secs,
-                    Ev::Result { core, task, error: Some(TaskError::NodeLost) },
+                    Ev::Result {
+                        core: core as u32,
+                        task: task as u32,
+                        error: Some(TaskError::NodeLost),
+                    },
                 );
             }
         }
@@ -2070,25 +2099,31 @@ impl World {
             match ev {
                 Ev::TryDispatch => self.try_dispatch(now),
                 Ev::Deliver { core, tasks } => {
+                    let core = core as usize;
                     if self.cores[core].alive {
                         // Stage-in starts immediately — pre-fetched tasks
                         // overlap their staging with the current task's
                         // execution (§6 task pre-fetching).
-                        for t in tasks {
+                        for &t in tasks.iter() {
                             self.cores[core].staging += 1;
-                            self.begin_stage_in(now, core, t);
+                            self.begin_stage_in(now, core, t as usize);
                         }
                     } else {
                         // Delivered into the void: comm error, retry.
-                        for task in tasks {
+                        for &task in tasks.iter() {
                             self.sched.after_secs(
                                 self.cfg.machine.net_rtt_secs,
-                                Ev::Result { core, task, error: Some(TaskError::CommError) },
+                                Ev::Result {
+                                    core: core as u32,
+                                    task,
+                                    error: Some(TaskError::CommError),
+                                },
                             );
                         }
                     }
                 }
                 Ev::ExecDone { core, task, epoch } => {
+                    let (core, task) = (core as usize, task as usize);
                     // The epoch check rejects completions from a previous
                     // incarnation of a decommissioned-then-rebooted core:
                     // the task was bounced at decommission and must not
@@ -2112,14 +2147,22 @@ impl World {
                     // Per-task result frames pay their message cost too
                     // when the result direction is modeled (failure
                     // notifications always ship unbatched).
-                    self.charge_result_cost(now, core, 1);
-                    self.handle_result(now, core, task, error)
+                    self.charge_result_cost(now, core as usize, 1);
+                    self.handle_result(now, core as usize, task as usize, error)
                 }
-                Ev::ResultMsg { core, results } => self.handle_result_msg(now, core, results),
-                Ev::ResultFlush { core } => self.result_window_flush(now, core),
-                Ev::FwdDeliver { fwd, assignments } => self.fwd_deliver(now, fwd, assignments),
-                Ev::BcastRecv { node, obj } => self.bcast_received(now, node, obj),
-                Ev::IfsArrive { core, task, bytes } => self.ifs_arrive(now, core, task, bytes),
+                Ev::ResultMsg { core, results } => {
+                    self.handle_result_msg(now, core as usize, results)
+                }
+                Ev::ResultFlush { core } => self.result_window_flush(now, core as usize),
+                Ev::FwdDeliver { fwd, assignments } => {
+                    self.fwd_deliver(now, fwd as usize, assignments)
+                }
+                Ev::BcastRecv { node, obj } => {
+                    self.bcast_received(now, node as usize, obj as usize)
+                }
+                Ev::IfsArrive { core, task, bytes } => {
+                    self.ifs_arrive(now, core as usize, task as usize, bytes)
+                }
                 Ev::FsWake => {
                     if self.fs_wake_target == Some(now) {
                         self.fs_wake_target = None;
@@ -2201,8 +2244,9 @@ impl World {
                     }
                     self.arm_fs_wake();
                 }
-                Ev::NodeFail { node } => self.handle_node_fail(now, node),
+                Ev::NodeFail { node } => self.handle_node_fail(now, node as usize),
                 Ev::FaultHang { node } => {
+                    let node = node as usize;
                     // Already-dead nodes can't hang; otherwise arm the
                     // hang and schedule its detection.
                     if !self.condemned.contains(&node) && self.hung.insert(node) {
@@ -2211,11 +2255,12 @@ impl World {
                         }
                         self.sched.after_secs(
                             self.cfg.fault_detect_s.max(1e-3),
-                            Ev::FaultDetect { node },
+                            Ev::FaultDetect { node: node as u32 },
                         );
                     }
                 }
                 Ev::FaultSlow { node, factor, duration_s } => {
+                    let node = node as usize;
                     if !self.condemned.contains(&node) {
                         if let Some(o) = &self.obs {
                             o.registry.inc(Ctr::FaultsInjected);
@@ -2224,6 +2269,7 @@ impl World {
                     }
                 }
                 Ev::FaultDetect { node } => {
+                    let node = node as usize;
                     // The detector's sim twin: the hang horizon elapsed —
                     // condemn the node and bounce everything it held
                     // (NodeLost, retriable) through the retry path.
@@ -2235,8 +2281,10 @@ impl World {
                     }
                 }
                 Ev::CoordForward => self.coord_forward(now),
-                Ev::ShardArrive { shard, tasks } => self.shard_arrive(now, shard, tasks),
-                Ev::ShardDispatch { shard } => self.shard_dispatch(now, shard),
+                Ev::ShardArrive { shard, tasks } => {
+                    self.shard_arrive(now, shard as usize, tasks)
+                }
+                Ev::ShardDispatch { shard } => self.shard_dispatch(now, shard as usize),
                 Ev::ProvisionTick => {
                     self.drive_provisioner(now);
                     // Re-arm the periodic drive while the campaign runs
@@ -2447,6 +2495,21 @@ pub fn run_wire_workload(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ev_payload_stays_compact() {
+        // Every calendar-queue slot stores a full `Ev` — the per-shard
+        // queues of the parallel engine multiply that footprint by the
+        // lane count, so the enum is pinned at ≤ 64 bytes. Growing a
+        // variant past this means boxing its payload, not raising the
+        // bound.
+        let sz = std::mem::size_of::<Ev>();
+        assert!(sz <= 64, "Ev grew to {sz} bytes — box the offending variant");
+        // The ids are u32: a task/core/node index above u32::MAX would
+        // silently truncate, so the constructors' casts rely on this
+        // world-size ceiling (160K cores, ≤4G tasks) staying far below.
+        assert!(std::mem::size_of::<Option<TaskError>>() <= 8);
+    }
 
     #[test]
     fn sleep0_throughput_matches_calibration_bgp() {

@@ -125,6 +125,22 @@ impl FaultPlan {
         FaultPlan { seed, events }
     }
 
+    /// Split the plan by owning sim shard for the partition-parallel
+    /// world: shard `d` owns nodes `[d·shard_nodes, (d+1)·shard_nodes)`,
+    /// with the last shard taking any remainder. Event order is preserved
+    /// within each part, so routing can never reorder a node's fault
+    /// sequence, and the union of the parts is exactly the plan.
+    pub fn partition_by_node(&self, shards: usize, shard_nodes: usize) -> Vec<FaultPlan> {
+        assert!(shards > 0 && shard_nodes > 0, "degenerate shard geometry");
+        let mut parts: Vec<FaultPlan> =
+            (0..shards).map(|_| FaultPlan { seed: self.seed, events: Vec::new() }).collect();
+        for ev in &self.events {
+            let d = (ev.node / shard_nodes).min(shards - 1);
+            parts[d].events.push(ev.clone());
+        }
+        parts
+    }
+
     /// The live-fabric arm for executor `node`: its fault (if any) as a
     /// count-triggered spec. At most one fault per node by construction.
     pub fn live_spec(&self, node: usize) -> Option<ExecFaultSpec> {
@@ -420,6 +436,38 @@ mod tests {
         assert!(drops > 0, "a 1-in-4 drop rate must fire within 64 ships");
         assert!(drops < 40, "drop rate wildly off: {drops}/64");
         assert_eq!(a.injected() as usize, drops);
+    }
+
+    #[test]
+    fn partition_routes_every_event_to_its_owner() {
+        let mix = FaultMix {
+            crashes: 5,
+            hangs: 3,
+            slows: 4,
+            window_s: (0.5, 8.0),
+            slow_factor: 4.0,
+            slow_duration_s: 2.0,
+        };
+        let plan = FaultPlan::seeded(11, 64, &mix);
+        let parts = plan.partition_by_node(4, 16);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts.iter().map(|p| p.events.len()).sum::<usize>(), plan.events.len());
+        for (d, part) in parts.iter().enumerate() {
+            assert_eq!(part.seed, plan.seed);
+            for e in &part.events {
+                assert_eq!(e.node / 16, d, "event for node {} routed to shard {d}", e.node);
+            }
+            // Order within a part mirrors plan order (a stable filter).
+            let want: Vec<&FaultEvent> =
+                plan.events.iter().filter(|e| e.node / 16 == d).collect();
+            assert_eq!(part.events.iter().collect::<Vec<_>>(), want);
+        }
+        // Remainder nodes fold into the last shard.
+        let tail = plan.partition_by_node(3, 21); // nodes 63 belongs to shard 2
+        assert_eq!(tail.iter().map(|p| p.events.len()).sum::<usize>(), plan.events.len());
+        for e in &tail[2].events {
+            assert!(e.node >= 42);
+        }
     }
 
     #[test]

@@ -62,6 +62,22 @@ impl Campaign {
         self.records.push(t);
     }
 
+    /// Merge per-shard campaigns (the partition-parallel simulator records
+    /// one part per sim lane) into a single campaign over `processors`
+    /// cores, concatenating records in the order the parts are given.
+    /// Callers pass shards in lane-index order, which makes the merged
+    /// record sequence — and therefore `to_csv()` — deterministic; every
+    /// aggregate here is record-order-independent anyway, so the merged
+    /// campaign reports identically to one recorded serially.
+    pub fn merge(processors: usize, parts: impl IntoIterator<Item = Campaign>) -> Campaign {
+        let mut all = Campaign::new(processors);
+        for p in parts {
+            all.t0 = all.t0.min(p.t0);
+            all.records.extend(p.records);
+        }
+        all
+    }
+
     pub fn len(&self) -> usize {
         self.records.len()
     }
@@ -320,6 +336,34 @@ mod tests {
         let j = c.to_json();
         assert_eq!(j.get("tasks").unwrap().as_f64(), Some(3.0));
         assert!((j.get("efficiency").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_serial_recording() {
+        // Recording shard-by-shard and merging in lane order must produce
+        // the same campaign as recording everything into one.
+        let mut serial = Campaign::new(2);
+        let mut shard0 = Campaign::new(1);
+        let mut shard1 = Campaign::new(1);
+        for i in 0..6 {
+            let r = rec(i % 2, i as f64, i as f64 + 1.0, i as f64 + 3.0);
+            serial.record(r);
+            if i % 2 == 0 {
+                shard0.record(r);
+            } else {
+                shard1.record(r);
+            }
+        }
+        let merged = Campaign::merge(2, [shard0, shard1]);
+        assert_eq!(merged.len(), serial.len());
+        assert_eq!(merged.t0, serial.t0);
+        assert!((merged.makespan_s() - serial.makespan_s()).abs() < 1e-12);
+        assert!((merged.busy_s() - serial.busy_s()).abs() < 1e-12);
+        assert_eq!(merged.per_shard_view(), serial.per_shard_view());
+        // Empty parts are harmless and keep t0 untouched.
+        let with_empty = Campaign::merge(2, [merged, Campaign::new(1)]);
+        assert_eq!(with_empty.t0, serial.t0);
+        assert_eq!(with_empty.len(), serial.len());
     }
 
     #[test]

@@ -126,6 +126,16 @@ impl Obs {
         }
     }
 
+    /// Record a task-lifecycle event at a virtual time from an explicit
+    /// ring (the partition-parallel simulator: ring = sim lane, so trace
+    /// placement is identical whichever worker thread drained the lane).
+    #[inline]
+    pub fn task_event_in_ring(&self, ring: usize, ts: u64, kind: RecKind, id: u64, aux: u64) {
+        if self.recorder.sampled(id) {
+            self.recorder.record_in_ring(ring, ts, kind, id, aux);
+        }
+    }
+
     /// Record a high-volume instant event (wire frames), sampled 1-in-N
     /// by its ordinal so trace volume stays bounded.
     #[inline]

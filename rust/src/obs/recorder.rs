@@ -130,7 +130,20 @@ impl Recorder {
         if self.rings.is_empty() {
             return;
         }
-        let r = super::registry::thread_shard() % self.rings.len();
+        self.record_in_ring(super::registry::thread_shard(), ts, kind, id, aux);
+    }
+
+    /// Write one record into an explicit ring. The partition-parallel
+    /// simulator records from whichever worker thread happens to drain a
+    /// sim shard that window, so ring identity must come from the *shard*,
+    /// not the OS thread — otherwise trace placement (and the per-ring
+    /// survivor set after wrap) would vary with the thread count.
+    #[inline]
+    pub fn record_in_ring(&self, ring: usize, ts: u64, kind: RecKind, id: u64, aux: u64) {
+        if self.rings.is_empty() {
+            return;
+        }
+        let r = ring % self.rings.len();
         let mut ring = self.rings[r].lock().unwrap();
         let cap = ring.buf.len();
         let head = ring.head;
@@ -251,6 +264,18 @@ mod tests {
         let d = r.dump();
         assert_eq!(d.len(), 40);
         assert!(d.windows(2).all(|w| w[0].ts <= w[1].ts), "dump not ts-sorted");
+    }
+
+    #[test]
+    fn explicit_ring_placement_is_caller_controlled() {
+        // Sharded-sim path: ring identity comes from the sim shard, not
+        // the writing thread, and wraps modulo the ring count.
+        let r = Recorder::new(1, 4, 8);
+        r.record_in_ring(10, 1, RecKind::Dispatch, 7, 0); // 10 % 4 == 2
+        r.record_in_ring(2, 2, RecKind::Result, 7, 0);
+        let d = r.dump();
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|rec| rec.ring == 2), "{d:?}");
     }
 
     #[test]

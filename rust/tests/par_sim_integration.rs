@@ -1,0 +1,124 @@
+//! Integration tests for the partition-parallel simulated fabric
+//! (`falkon::falkon::parworld`): the determinism contract (bit-identical
+//! virtual results at every worker-thread count), the in-transit
+//! completion rule (a campaign cannot be declared done while a
+//! cross-shard forward is between lanes at a barrier), fault bounce and
+//! reclaim paths, and coordinator-mediated work stealing.
+
+use falkon::falkon::parworld::{ParConfig, ParWorld};
+use falkon::faults::{FaultEvent, FaultKind, FaultMix, FaultPlan};
+use falkon::sim::machine::Machine;
+
+/// A chaos-heavy campaign config: crashes, hangs, stragglers AND MTBF
+/// draws, with full per-task recording — the hardest case for the
+/// thread-count invariance claim.
+fn chaotic_config() -> ParConfig {
+    let m = Machine::bgp_psets(2); // 128 nodes, 512 cores
+    let nodes = m.nodes;
+    let mut cfg = ParConfig::new(m, 8);
+    cfg.exec_secs = 0.02;
+    cfg.seed = 42;
+    cfg.fwd_bundle = 32;
+    cfg.steal_batch = 16;
+    cfg.node_mtbf_s = Some(20.0);
+    cfg.fault_detect_s = 0.3;
+    cfg.record_campaign = true;
+    let mut plan = FaultPlan::seeded(11, nodes, &FaultMix::crashes(3, (0.05, 0.3)));
+    let hangs = FaultPlan::seeded(12, nodes, &FaultMix::hangs(2, (0.05, 0.3)));
+    let slows = FaultPlan::seeded(13, nodes, &FaultMix::stragglers(2, (0.02, 0.2), 4.0, 0.5));
+    plan.events.extend(hangs.events);
+    plan.events.extend(slows.events);
+    cfg.faults = plan;
+    cfg
+}
+
+#[test]
+fn virtual_results_are_bit_identical_across_thread_counts() {
+    const N: u64 = 4000;
+    let base = ParWorld::new(chaotic_config(), N).run(1);
+    assert_eq!(base.completed + base.failed, N, "every task must reach a terminal state");
+    assert!(base.completed > 0);
+
+    for threads in [3usize, 9] {
+        let r = ParWorld::new(chaotic_config(), N).run(threads);
+        assert_eq!(r.completed, base.completed, "{threads} threads");
+        assert_eq!(r.failed, base.failed, "{threads} threads");
+        assert_eq!(r.windows, base.windows, "{threads} threads");
+        assert_eq!(r.events, base.events, "{threads} threads");
+        assert_eq!(r.per_shard, base.per_shard, "{threads} threads");
+        assert!(r.makespan_s == base.makespan_s, "{threads} threads: makespan drifted");
+        // Strongest form: the merged per-task campaign — every dispatch,
+        // start, end, result timestamp and core/shard placement — is
+        // byte-identical as CSV.
+        let (a, b) = (base.campaign.as_ref().unwrap(), r.campaign.as_ref().unwrap());
+        assert_eq!(a.to_csv(), b.to_csv(), "{threads} threads: campaign records diverged");
+    }
+}
+
+#[test]
+fn dead_shard_bounces_in_flight_work_and_campaign_still_completes() {
+    // Satellite regression for the in-transit completion rule: kill every
+    // node of shard 1 while its bundle is queued/running, so the only
+    // thing keeping the campaign alive at that barrier is the Readmit
+    // sitting in a cross-shard outbox. A completion check that ran before
+    // the exchange (or trusted "all calendars drained") would declare the
+    // campaign done with those tasks forever lost; the counter-based
+    // post-exchange check must instead re-forward and finish them all.
+    let m = Machine::bgp_psets(1); // 64 nodes, 2 shards of 32
+    let mut cfg = ParConfig::new(m, 2);
+    cfg.exec_secs = 0.05;
+    cfg.fwd_bundle = 32;
+    let mut plan = FaultPlan::none();
+    for node in 32..64 {
+        plan.events.push(FaultEvent {
+            at_s: 0.002,
+            node,
+            after_tasks: 1,
+            kind: FaultKind::Crash,
+        });
+    }
+    cfg.faults = plan;
+    let r = ParWorld::new(cfg, 64).run(2);
+    assert_eq!(r.completed, 64, "bounced tasks must be re-forwarded and finish");
+    assert_eq!(r.failed, 0);
+    assert_eq!(r.per_shard[1].completed, 0, "shard 1 died before any 50 ms task could finish");
+    assert_eq!(r.per_shard[0].completed, 64, "shard 0 must absorb the bounced work");
+}
+
+#[test]
+fn hung_nodes_are_reclaimed_after_the_detect_horizon() {
+    let m = Machine::bgp_psets(1);
+    let mut cfg = ParConfig::new(m, 2);
+    cfg.exec_secs = 0.01;
+    cfg.fault_detect_s = 0.1;
+    let mut plan = FaultPlan::none();
+    for node in 0..4 {
+        plan.events.push(FaultEvent { at_s: 0.005, node, after_tasks: 1, kind: FaultKind::Hang });
+    }
+    cfg.faults = plan;
+    let r = ParWorld::new(cfg, 256).run(2);
+    // Tasks swallowed by hung nodes are readmitted once the detect
+    // horizon fires, and finish elsewhere — nothing fails, nothing is
+    // lost to a silent node.
+    assert_eq!(r.completed, 256);
+    assert_eq!(r.failed, 0);
+    assert!(r.makespan_s > 0.1, "reclaim cannot happen before the detect horizon");
+}
+
+#[test]
+fn stealing_rebalances_a_single_loaded_shard() {
+    // Force the pathological placement: one giant bundle puts the whole
+    // campaign on shard 0. The other shards must pull work over through
+    // coordinator-mediated steals rather than idling.
+    const N: u64 = 2000;
+    let m = Machine::bgp_psets(1);
+    let mut cfg = ParConfig::new(m, 4);
+    cfg.exec_secs = 0.05;
+    cfg.fwd_bundle = N as usize;
+    cfg.steal_batch = 64;
+    let r = ParWorld::new(cfg, N).run(4);
+    assert_eq!(r.completed, N);
+    assert_eq!(r.failed, 0);
+    let stolen: u64 = r.per_shard[1..].iter().map(|s| s.completed).sum();
+    assert!(stolen > 0, "idle shards never stole: {:?}", r.per_shard);
+}

@@ -154,3 +154,137 @@ fn calendar_scheduler_matches_heap_under_cascading_handlers() {
         assert_eq!(cal.pending(), model.pending());
     }
 }
+
+// ---------------------------------------------------------------------
+// Windowed (sharded) equivalence: the conservative-window protocol over
+// calendar lanes must match the same protocol over heap reference lanes
+// pop-for-pop, including cross-lane arrivals that land exactly at the
+// window edge, straddle the wheel horizon, and sit deep in overflow
+// (the promotion-at-horizon path fed from *injections*, not just
+// handler-local scheduling).
+
+use falkon::sim::engine::{CrossEvent, ShardedScheduler};
+use falkon::util::rng::split_seed;
+
+/// Window width for the sharded property run: a few buckets plus an
+/// odd offset so window edges never align with bucket boundaries.
+const WIN_LA: u64 = 3 * BUCKET_NS + 17;
+
+impl HeapModel {
+    fn next_time(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse((at, _, _))| *at)
+    }
+
+    fn next_limited(&mut self, limit: u64) -> Option<(u64, u64)> {
+        if self.next_time()? >= limit {
+            return None;
+        }
+        self.next()
+    }
+}
+
+/// Deterministic children of a popped event — pure in `(t, e)`, so the
+/// calendar and heap sides generate byte-identical workloads. Returns
+/// (lane-local follow-ups, cross-lane events). Event ids carry their
+/// cascade depth in the low 2 bits; depth is capped so the tree is
+/// finite.
+fn windowed_children(lanes: usize, t: u64, e: u64) -> (Vec<(u64, u64)>, Vec<(usize, u64, u64)>) {
+    let depth = e & 3;
+    if depth >= 3 {
+        return (Vec::new(), Vec::new());
+    }
+    let horizon = WHEEL_BUCKETS as u64 * BUCKET_NS;
+    let h = split_seed(t, e);
+    let id = e >> 2;
+    let mut local = Vec::new();
+    let mut cross = Vec::new();
+    if h & 1 == 1 {
+        // Lane-local follow-up across the wheel regimes (same-bucket,
+        // in-wheel, horizon straddle, deep overflow, exactly-now).
+        let d = match (h >> 2) % 5 {
+            0 => (h >> 8) % BUCKET_NS,
+            1 => (h >> 8) % horizon,
+            2 => horizon - BUCKET_NS + ((h >> 8) % (3 * BUCKET_NS)),
+            3 => horizon * (1 + (h >> 8) % 7),
+            _ => 0,
+        };
+        local.push((t + d, ((id * 4 + 1) << 2) | (depth + 1)));
+    }
+    if h & 2 == 2 {
+        // Cross-lane event: the protocol's lookahead floor plus a
+        // regime offset — arrivals at the exact window edge, inside the
+        // wheel, straddling the horizon, and multiple laps out.
+        let d = match (h >> 3) % 4 {
+            0 => 0,
+            1 => (h >> 8) % BUCKET_NS,
+            2 => horizon - BUCKET_NS + ((h >> 8) % (3 * BUCKET_NS)),
+            _ => horizon * (1 + (h >> 8) % 5),
+        };
+        let to = ((h >> 24) as usize) % lanes;
+        cross.push((to, t + WIN_LA + d, ((id * 4 + 2) << 2) | (depth + 1)));
+    }
+    (local, cross)
+}
+
+#[test]
+fn windowed_sharded_lanes_match_heap_reference() {
+    let lanes = 5usize;
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(0x57A6 + seed);
+        let mut sh: ShardedScheduler<u64> = ShardedScheduler::new(lanes, WIN_LA);
+        let mut refs: Vec<HeapModel> = (0..lanes).map(|_| HeapModel::new()).collect();
+        let mut id = 0u64;
+        for li in 0..lanes {
+            for _ in 0..25 {
+                let t = draw_time(&mut rng, 0);
+                sh.lane_mut(li).at(t, id << 2);
+                refs[li].at(t, id << 2);
+                id += 1;
+            }
+        }
+
+        // Calendar side: the real windowed driver.
+        let mut log_cal: Vec<(usize, u64, u64)> = Vec::new();
+        let cal_events = sh.run_windowed(|lane, li, t, e, out| {
+            log_cal.push((li, t, e));
+            let (local, cross) = windowed_children(lanes, t, e);
+            for (at, ev) in local {
+                lane.at(at, ev);
+            }
+            for (to, at, ev) in cross {
+                out.push(CrossEvent { at, to, ev });
+            }
+        });
+
+        // Heap side: the same window algorithm, hand-rolled — lane-index
+        // drain order, outbox concatenation order at the exchange.
+        let mut log_ref: Vec<(usize, u64, u64)> = Vec::new();
+        let mut ref_events = 0u64;
+        loop {
+            let Some(start) = refs.iter().filter_map(|m| m.next_time()).min() else {
+                break;
+            };
+            let end = start.saturating_add(WIN_LA);
+            let mut outbox: Vec<(usize, u64, u64)> = Vec::new();
+            for (li, m) in refs.iter_mut().enumerate() {
+                while let Some((t, e)) = m.next_limited(end) {
+                    ref_events += 1;
+                    log_ref.push((li, t, e));
+                    let (local, cross) = windowed_children(lanes, t, e);
+                    for (at, ev) in local {
+                        m.at(at, ev);
+                    }
+                    outbox.extend(cross);
+                }
+            }
+            for (to, at, ev) in outbox {
+                assert!(at >= end, "generator violated the lookahead contract");
+                refs[to].at(at, ev);
+            }
+        }
+
+        assert_eq!(cal_events, ref_events, "seed {seed}: event counts diverged");
+        assert_eq!(log_cal, log_ref, "seed {seed}: sharded calendar diverged from heap");
+        assert_eq!(sh.pending(), refs.iter().map(|m| m.pending()).sum::<usize>());
+    }
+}
