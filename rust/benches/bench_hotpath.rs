@@ -16,7 +16,9 @@
 //!   campaign on the partition-parallel fabric at 1, 4 and 16 worker
 //!   threads: wall tasks/s, wall seconds, speedup vs the 1-thread row,
 //!   and the virtual outputs (which must be bit-identical across the
-//!   three rows — the determinism gate CI asserts);
+//!   three rows — the determinism gate CI asserts). Emitted twice: bare
+//!   (`layers: none`) and with the full layer stack folded in
+//!   (`layers: staging+provision+wirebatch`) — the ablation pair;
 //! * **live row** — loopback TCP sleep-0 through the sharded service:
 //!   tasks/s and allocations/task (whole-process count: all service,
 //!   executor and reader threads included, so it is an upper bound on
@@ -31,8 +33,9 @@ use falkon::falkon::coordinator::HierarchyConfig;
 use falkon::falkon::dispatch::DispatchConfig;
 use falkon::falkon::exec::{spawn_fleet_with, DefaultRunner};
 use falkon::falkon::parworld::{ParConfig, ParWorld};
+use falkon::falkon::provision::ProvisionPolicy;
 use falkon::falkon::service::{Service, ServiceConfig};
-use falkon::falkon::simworld::{SimTask, World, WorldConfig};
+use falkon::falkon::simworld::{CollectiveConfig, SimProvisionConfig, SimTask, World, WorldConfig};
 use falkon::falkon::task::TaskPayload;
 use falkon::sim::machine::Machine;
 use falkon::util::alloc::{alloc_count, CountingAlloc};
@@ -92,6 +95,31 @@ fn par_row(threads: usize, n_tasks: u64) -> (falkon::falkon::parworld::ParResult
     let r = ParWorld::new(cfg, n_tasks).run(threads);
     let wall = t0.elapsed().as_secs_f64().max(1e-9);
     assert_eq!(r.completed, n_tasks, "par bench must conserve tasks");
+    (r, wall)
+}
+
+/// Same petascale campaign with the full layer stack folded in:
+/// collective staging of a 40 MB working set, a static LRM grant with
+/// modeled boot storm, and 4-way result wire-batching. Measures the
+/// *layered* engine rate (the ablation row EXPERIMENTS.md's protocol
+/// diffs against the bare `par_sim` row) and carries the layer outputs
+/// the CI smoke gate asserts on.
+fn par_layered_row(threads: usize, n_tasks: u64) -> (falkon::falkon::parworld::ParResult, f64) {
+    let machine = Machine::bgp_psets(640);
+    let nodes = machine.nodes;
+    let mut cfg = ParConfig::new(machine.clone(), 640);
+    cfg.collective = Some(CollectiveConfig::for_machine(&machine));
+    cfg.stage_bytes = vec![40 << 20];
+    cfg.provision = Some(SimProvisionConfig::new(ProvisionPolicy::Static {
+        nodes,
+        walltime_s: 1e7,
+    }));
+    cfg.result_batch = 4;
+    let t0 = Instant::now();
+    let r = ParWorld::new(cfg, n_tasks).run(threads);
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    assert_eq!(r.completed, n_tasks, "layered par bench must conserve tasks");
+    assert!(r.staging_done_s.is_some(), "staging barrier never closed");
     (r, wall)
 }
 
@@ -183,6 +211,7 @@ fn main() {
         ]);
         let mut row = Json::obj();
         row.set("mode", Json::Str("par_sim".into()))
+            .set("layers", Json::Str("none".into()))
             .set("shards", Json::Num(threads as f64))
             .set("dispatchers", Json::Num(640.0))
             .set("tasks", Json::Num(par_n as f64))
@@ -194,6 +223,45 @@ fn main() {
             .set("events", Json::Num(r.events as f64))
             .set("wall_s", Json::Num(wall))
             .set("speedup_vs_1", Json::Num(base_wall / wall));
+        rows.push(row);
+    }
+    // Layered ablation rows: the same model with staging + provisioning +
+    // result batching folded into the lanes. Virtual output must again be
+    // bit-identical across thread counts, and the layer outputs (staging
+    // completion, grant count, batched-flush makespan) feed the CI smoke
+    // gate and the EXPERIMENTS.md ablation table.
+    let parl_n: u64 = if quick() { 100_000 } else { 10_000_000 };
+    let mut base_layered_wall = f64::NAN;
+    for threads in [1usize, 4, 16] {
+        let (r, wall) = par_layered_row(threads, parl_n);
+        if threads == 1 {
+            base_layered_wall = wall;
+        }
+        t.row(&[
+            format!("par 160Kc layered t={threads}"),
+            format!("{:.0}", parl_n as f64 / wall),
+            format!("{:.0}", r.virtual_tasks_per_s),
+            format!("{:.0}", r.events as f64 / wall),
+            format!("x{:.2}", base_layered_wall / wall),
+        ]);
+        let mut row = Json::obj();
+        row.set("mode", Json::Str("par_sim".into()))
+            .set("layers", Json::Str("staging+provision+wirebatch".into()))
+            .set("shards", Json::Num(threads as f64))
+            .set("dispatchers", Json::Num(640.0))
+            .set("tasks", Json::Num(parl_n as f64))
+            .set("tasks_per_s", Json::Num(parl_n as f64 / wall))
+            .set("virtual_tasks_per_s", Json::Num(r.virtual_tasks_per_s))
+            .set("completed", Json::Num(r.completed as f64))
+            .set("failed", Json::Num(r.failed as f64))
+            .set("windows", Json::Num(r.windows as f64))
+            .set("events", Json::Num(r.events as f64))
+            .set("staging_done_s", Json::Num(r.staging_done_s.unwrap_or(-1.0)))
+            .set("staged_mb", Json::Num(r.staged_bytes as f64 / (1u64 << 20) as f64))
+            .set("prov_grants", Json::Num(r.prov_grants as f64))
+            .set("allocated_core_secs", Json::Num(r.allocated_core_secs))
+            .set("wall_s", Json::Num(wall))
+            .set("speedup_vs_1", Json::Num(base_layered_wall / wall));
         rows.push(row);
     }
 

@@ -13,6 +13,22 @@ use crate::fs::shared::{FsOp, SharedFs};
 use crate::sim::engine::to_secs;
 use crate::sim::machine::FsProfile;
 
+/// Split one object of `bytes` into `stripes` parallel head-read
+/// chunks: equal chunks, the last absorbing the remainder, every chunk
+/// at least 1 byte. Shared by the standalone staging models here and
+/// the worlds' staging layer (`falkon::layers::staging`), which used to
+/// carry this arithmetic as separate copies.
+pub fn stripe_chunks(bytes: u64, stripes: u32) -> impl Iterator<Item = u64> {
+    let chunk = (bytes / stripes as u64).max(1);
+    (0..stripes).map(move |s| {
+        if s == stripes - 1 {
+            bytes.saturating_sub(chunk * (stripes as u64 - 1)).max(1)
+        } else {
+            chunk
+        }
+    })
+}
+
 /// Outcome of a modeled staging phase.
 #[derive(Clone, Copy, Debug)]
 pub struct StagingOutcome {
@@ -86,13 +102,7 @@ pub fn tree_staging(
     for part in 0..n_parts {
         let head_core = part * partition_nodes * cores_per_node;
         for (obj, (_, bytes)) in objects.iter().enumerate() {
-            let chunk = (bytes / stripes as u64).max(1);
-            for s in 0..stripes {
-                let b = if s == stripes - 1 {
-                    bytes.saturating_sub(chunk * (stripes as u64 - 1)).max(1)
-                } else {
-                    chunk
-                };
+            for b in stripe_chunks(*bytes, stripes) {
                 let id = fs.submit(0, head_core, FsOp::Read { bytes: b });
                 op_owner.insert(id, (part, obj));
             }

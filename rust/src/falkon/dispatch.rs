@@ -169,6 +169,50 @@ pub fn choose_shard(loads: &[ShardLoad]) -> Option<usize> {
     best.map(|l| l.shard)
 }
 
+/// Pop the next target core from an idle FIFO honoring eligibility and
+/// (optionally) data-aware placement: among the first `scan` idle cores,
+/// pick the one scoring the most affinity bytes (strict `>` keeps FIFO
+/// order on ties, including all-zero). The bounded scan keeps dispatch
+/// O(1)-ish. `simworld` used to carry this loop twice (classic
+/// `pick_core` and the per-shard dispatcher) — this is the one copy.
+///
+/// `eligible` must at least encode liveness/credit: ineligible entries
+/// at the front are dropped permanently (they re-enter the FIFO when
+/// they become eligible again); ineligible entries deeper in are
+/// skipped, not removed.
+pub fn pick_core_scored(
+    idle: &mut std::collections::VecDeque<usize>,
+    eligible: impl Fn(usize) -> bool,
+    affinity_bytes: Option<&dyn Fn(usize) -> u64>,
+    scan: usize,
+) -> Option<usize> {
+    loop {
+        match idle.front() {
+            None => return None,
+            Some(&c) if !eligible(c) => {
+                idle.pop_front();
+            }
+            _ => break,
+        }
+    }
+    if let Some(score) = affinity_bytes {
+        let scan = idle.len().min(scan);
+        let mut best = (0usize, 0u64);
+        for i in 0..scan {
+            let c = idle[i];
+            if !eligible(c) {
+                continue;
+            }
+            let bytes = score(c);
+            if bytes > best.1 {
+                best = (i, bytes);
+            }
+        }
+        return idle.remove(best.0);
+    }
+    idle.pop_front()
+}
+
 /// Bundle size for an executor: limited by both policy and credit.
 pub fn bundle_for(credit: u32, cfg: &DispatchConfig) -> usize {
     (credit as usize).min(cfg.bundle.max(1))

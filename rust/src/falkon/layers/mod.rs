@@ -1,0 +1,73 @@
+//! Reusable **world layers**: the cost-model subsystems of the simulated
+//! fabric, extracted from the `simworld` monolith so both sim worlds
+//! instantiate the same calibrated machinery.
+//!
+//! Each layer owns one slice of per-shard state plus its decision logic,
+//! and is deliberately *shard-local*: a layer instance only ever touches
+//! nodes inside one partition-dispatcher's span, so the serial
+//! [`super::simworld`] hosts D instances inside one thread while the
+//! partition-parallel [`super::parworld`] hosts one instance per lane —
+//! with no new cross-lane edges. The hops that DO cross lanes (staging
+//! completion reports to the coordinator, provisioner grants and
+//! decommissions, coordinator forwards) all ride the existing
+//! outbox/barrier exchange and carry at least the forwarding-cost
+//! lookahead, so folding the layers in does not change the conservative
+//! window protocol.
+//!
+//! Layers never touch a [`crate::sim::Scheduler`] or the shared-FS event
+//! queue directly: they return *decisions* (deliveries to schedule, reads
+//! to submit, buffers to flush) and the host applies them. That keeps
+//! every layer a pure state machine — trivially testable against the
+//! pre-refactor logic (see `tests/prop_layers.rs`) and trivially safe to
+//! run under any thread interleaving, because the host's lane already
+//! serializes access.
+//!
+//! The three layers:
+//! * [`staging::CollectiveStaging`] — the collective-staging phase:
+//!   striped partition-head reads, k-ary broadcast trees with serialized
+//!   uplinks, the staging barrier, and intermediate-FS write-behind
+//!   collectors (arXiv:0901.0134).
+//! * [`provision::ProvisionLayer`] — elastic provisioning: LRM ticks,
+//!   Cobalt boot storms charged through shared-FS reads, incarnation
+//!   epochs, walltime expiry, and the boot/expire wake dedup.
+//! * [`wirebatch::WireBatch`] — the wire-batching cost model: adaptive
+//!   dispatch bundle sizing and result-direction coalescing
+//!   (flush-on-idle / cap / window), with the split dispatch-cost
+//!   identity.
+//!
+//! The shared fault-replay state machine lives with the plans in
+//! [`crate::faults`] ([`crate::faults::ChaosState`],
+//! [`crate::faults::mtbf_schedule`]); the shared dispatch-scoring
+//! helpers live in [`super::dispatch`]
+//! ([`super::dispatch::choose_shard`],
+//! [`super::dispatch::pick_core_scored`]). Both are re-exported here so
+//! hosts can treat "the layer surface" as one import.
+
+pub mod provision;
+pub mod staging;
+pub mod wirebatch;
+
+pub use crate::falkon::dispatch::{choose_shard, pick_core_scored, ShardLoad};
+pub use crate::faults::{mtbf_schedule, ChaosState};
+pub use provision::{ProvAction, ProvisionLayer};
+pub use staging::{head_read_secs, BcastForward, CollectiveStaging, HeadRead};
+pub use wirebatch::{BufferVerdict, FlushKind, WireBatch};
+
+/// The narrow contract every world layer satisfies: state confined to
+/// one shard's node span, with a uniform node-death hook so hosts can
+/// notify all layers without knowing their internals. Everything else a
+/// layer exposes is its own typed decision API — the trait is
+/// deliberately thin because the *locality guarantee* is the point, not
+/// dynamic dispatch.
+pub trait ShardLocalLayer {
+    /// Layer name for diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// A node in this layer's span left service (crash, hang reclaim, or
+    /// decommission). Layers drop any per-node state; the host owns
+    /// bouncing the affected tasks.
+    fn node_down(&mut self, node: usize);
+
+    /// True when the layer holds no in-flight state (safe to finalize).
+    fn quiescent(&self) -> bool;
+}

@@ -1,0 +1,288 @@
+//! Elastic-provisioning layer: the LRM-facing state machine extracted
+//! from `simworld`'s `drive_provisioner` / `alloc_ready` / `alloc_down`
+//! and the `Ev::AllocBoot` / `Ev::AllocExpire` wake plumbing.
+//!
+//! The layer wraps a [`Provisioner`] (policy + LRM simulator) and owns
+//! the pieces the world used to carry inline: picking the LRM flavor
+//! from the machine profile, the boot-storm bookkeeping (which granted
+//! nodes still owe a kernel-image read), grant/expiry counters, and the
+//! deduplicated boot/expire wake targets. It returns [`ProvAction`]s;
+//! the host charges the image reads to its shared-FS model (event-driven
+//! in `simworld`, closed-form in `parworld`'s coordinator lane),
+//! schedules the wake events, and brings executors up/down.
+//!
+//! Shard-locality: the whole layer lives on ONE lane (the serial world,
+//! or the parallel world's coordinator — provisioning is a per-campaign
+//! singleton, like the real Falkon provisioner sitting next to the
+//! service). Grants and decommissions reach the shard lanes as ordinary
+//! cross-lane events carrying the lookahead floor.
+
+use crate::falkon::provision::{ProvisionEvent, Provisioner};
+use crate::falkon::simworld::{SimLrmKind, SimProvisionConfig};
+use crate::lrm::cobalt::Cobalt;
+use crate::lrm::slurm::Slurm;
+use crate::lrm::{AllocId, Lrm};
+use crate::obs::Obs;
+use crate::sim::engine::Time;
+use crate::sim::machine::Machine;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::ShardLocalLayer;
+
+/// What the provisioner decided this tick; the host applies each in
+/// order.
+#[derive(Clone, Debug)]
+pub enum ProvAction {
+    /// A Cobalt-style grant finished its LRM boot: each listed node now
+    /// reads the kernel image from the shared FS (the boot-storm
+    /// contention charge). The host charges one read per node and calls
+    /// [`ProvisionLayer::boot_read_done`] as each completes; executors
+    /// come up only when the whole allocation has read its images.
+    BootReads { alloc: AllocId, nodes: Vec<usize> },
+    /// Nodes are in service now (SLURM-style: no modeled boot read).
+    /// The host revives their executors (skipping condemned nodes).
+    Up(Vec<usize>),
+    /// An allocation left service (idle release or walltime expiry):
+    /// stop its executors and bounce whatever they held.
+    Down { alloc: AllocId, nodes: Vec<usize> },
+}
+
+/// Per-campaign elastic-provisioning state + policy.
+pub struct ProvisionLayer {
+    // `+ Send` so the parallel world's coordinator lane (which owns the
+    // layer) can live behind a Mutex shared with scoped worker threads.
+    prov: Provisioner<Box<dyn Lrm + Send>>,
+    tick_s: f64,
+    boot_image_bytes: u64,
+    cores_per_node: usize,
+    /// Cores actually modeled by the host (grants may cover more nodes
+    /// than the campaign uses; out-of-range nodes boot for free).
+    total_cores: usize,
+    /// Allocations whose boot-storm reads are in flight:
+    /// alloc -> (granted nodes, reads outstanding).
+    boot_allocs: HashMap<AllocId, (Vec<usize>, u32)>,
+    boot_wake_target: Option<Time>,
+    expire_wake_target: Option<Time>,
+    grants_n: u64,
+    expirations_n: u64,
+}
+
+impl ProvisionLayer {
+    /// Build from the world-level config: LRM flavor `Auto` follows the
+    /// machine (PSET granularity => Cobalt, else SLURM), matching how
+    /// the serial world always chose.
+    pub fn new(
+        cfg: &SimProvisionConfig,
+        machine: &Machine,
+        total_cores: usize,
+    ) -> ProvisionLayer {
+        let pset = match cfg.lrm {
+            SimLrmKind::Cobalt => true,
+            SimLrmKind::Slurm => false,
+            SimLrmKind::Auto => machine.nodes_per_pset.is_some(),
+        };
+        let lrm: Box<dyn Lrm + Send> = if pset {
+            Box::new(Cobalt::new(machine.clone()))
+        } else {
+            Box::new(Slurm::new(machine.clone()))
+        };
+        ProvisionLayer {
+            prov: Provisioner::new(cfg.policy.clone(), lrm),
+            tick_s: cfg.tick_s,
+            boot_image_bytes: cfg.boot_image_bytes,
+            cores_per_node: machine.cores_per_node,
+            total_cores,
+            boot_allocs: HashMap::new(),
+            boot_wake_target: None,
+            expire_wake_target: None,
+            grants_n: 0,
+            expirations_n: 0,
+        }
+    }
+
+    /// Provisioner tick period, virtual seconds.
+    pub fn tick_s(&self) -> f64 {
+        self.tick_s
+    }
+
+    pub fn boot_image_bytes(&self) -> u64 {
+        self.boot_image_bytes
+    }
+
+    /// One provisioner tick: feed the queue depth and per-node busy
+    /// view through the policy + LRM, and translate what came back.
+    pub fn tick(&mut self, now: Time, queue_len: usize, busy: &[bool]) -> Vec<ProvAction> {
+        let events = self.prov.tick_nodes(now, queue_len, busy);
+        let mut actions = Vec::new();
+        for ev in events {
+            match ev {
+                ProvisionEvent::Requested { .. } => {}
+                ProvisionEvent::Ready(r) => {
+                    self.grants_n += 1;
+                    if r.boot_s > 0.0 && self.boot_image_bytes > 0 {
+                        let cpn = self.cores_per_node;
+                        let in_range: Vec<usize> = r
+                            .nodes
+                            .iter()
+                            .copied()
+                            .filter(|&node| node * cpn < self.total_cores)
+                            .collect();
+                        if !in_range.is_empty() {
+                            self.boot_allocs
+                                .insert(r.id, (r.nodes, in_range.len() as u32));
+                            actions.push(ProvAction::BootReads { alloc: r.id, nodes: in_range });
+                            continue;
+                        }
+                    }
+                    actions.push(ProvAction::Up(r.nodes));
+                }
+                ProvisionEvent::Released { alloc, nodes } => {
+                    self.boot_allocs.remove(&alloc);
+                    actions.push(ProvAction::Down { alloc, nodes });
+                }
+                ProvisionEvent::Expired { alloc, nodes } => {
+                    self.expirations_n += 1;
+                    self.boot_allocs.remove(&alloc);
+                    actions.push(ProvAction::Down { alloc, nodes });
+                }
+            }
+        }
+        actions
+    }
+
+    /// Precise wake targets for the next boot completion and the next
+    /// walltime kill, deduplicated: `Some(t)` means the host must
+    /// schedule its AllocBoot / AllocExpire event at `t`; `None` means
+    /// an earlier-or-equal wake is already armed.
+    pub fn arm_wakes(&mut self, now: Time) -> (Option<Time>, Option<Time>) {
+        let boot = self.prov.next_event().and_then(|t| {
+            let t = t.max(now);
+            match self.boot_wake_target {
+                Some(armed) if armed <= t => None,
+                _ => {
+                    self.boot_wake_target = Some(t);
+                    Some(t)
+                }
+            }
+        });
+        let expire = self.prov.next_expiry().and_then(|t| {
+            let t = t.max(now);
+            match self.expire_wake_target {
+                Some(armed) if armed <= t => None,
+                _ => {
+                    self.expire_wake_target = Some(t);
+                    Some(t)
+                }
+            }
+        });
+        (boot, expire)
+    }
+
+    /// The host's AllocBoot wake fired (clear the dedup target before
+    /// ticking again).
+    pub fn boot_wake_fired(&mut self, now: Time) {
+        if self.boot_wake_target == Some(now) {
+            self.boot_wake_target = None;
+        }
+    }
+
+    /// The host's AllocExpire wake fired.
+    pub fn expire_wake_fired(&mut self, now: Time) {
+        if self.expire_wake_target == Some(now) {
+            self.expire_wake_target = None;
+        }
+    }
+
+    /// One boot-storm image read completed. Returns the allocation's
+    /// granted nodes once the LAST read lands (executors come up
+    /// together); `None` while reads remain or if the allocation was
+    /// already cancelled/released mid-boot.
+    pub fn boot_read_done(&mut self, alloc: AllocId) -> Option<Vec<usize>> {
+        let (_, reads) = self.boot_allocs.get_mut(&alloc)?;
+        *reads -= 1;
+        if *reads == 0 {
+            let (nodes, _) = self.boot_allocs.remove(&alloc).expect("boot entry");
+            Some(nodes)
+        } else {
+            None
+        }
+    }
+
+    /// True when a boot-storm read for `alloc` is still expected (a
+    /// completed read for a cancelled boot must be dropped, not
+    /// counted).
+    pub fn booting(&self, alloc: AllocId) -> bool {
+        self.boot_allocs.contains_key(&alloc)
+    }
+
+    /// The policy can never grant again (static pool exhausted /
+    /// dynamic limit hit with nothing held): with all executors dead
+    /// and no grant coming, remaining work is stranded.
+    pub fn exhausted(&self) -> bool {
+        self.prov.exhausted()
+    }
+
+    /// End of campaign: release every held allocation so consumption
+    /// accounting stops at the makespan (the returned release events
+    /// are for the accountant only — the campaign is over, nothing left
+    /// to bounce).
+    pub fn release_all(&mut self, now: Time) {
+        let _ = self.prov.release_all(now);
+    }
+
+    pub fn held_nodes(&self) -> usize {
+        self.prov.held_nodes()
+    }
+
+    pub fn requested_nodes(&self) -> usize {
+        self.prov.requested_nodes()
+    }
+
+    pub fn consumed_core_secs(&self, now: Time) -> f64 {
+        self.prov.consumed_core_secs(now)
+    }
+
+    /// Grants brought into service (the world-level `allocs_granted`).
+    pub fn grants(&self) -> u64 {
+        self.grants_n
+    }
+
+    /// Walltime expiries observed (the world-level `expirations`).
+    pub fn expirations(&self) -> u64 {
+        self.expirations_n
+    }
+
+    pub fn attach_obs(&mut self, obs: Arc<Obs>) {
+        self.prov.attach_obs(obs);
+    }
+}
+
+impl std::fmt::Debug for ProvisionLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProvisionLayer")
+            .field("tick_s", &self.tick_s)
+            .field("boot_image_bytes", &self.boot_image_bytes)
+            .field("boot_allocs", &self.boot_allocs.len())
+            .field("grants", &self.grants_n)
+            .field("expirations", &self.expirations_n)
+            .finish()
+    }
+}
+
+impl ShardLocalLayer for ProvisionLayer {
+    fn name(&self) -> &'static str {
+        "provision"
+    }
+
+    fn node_down(&mut self, _node: usize) {
+        // Allocation lifecycle is alloc-keyed, not node-keyed: a node
+        // that crashes inside a granted allocation simply never revives
+        // (the host's condemned set gates revival), and its walltime
+        // keeps running — exactly the serial world's behavior.
+    }
+
+    fn quiescent(&self) -> bool {
+        self.boot_allocs.is_empty()
+    }
+}

@@ -1,0 +1,301 @@
+//! Collective-staging layer: the tree-broadcast phase and the
+//! intermediate-FS collectors, extracted from `simworld`'s
+//! `StageState` / `init_collective` / `bcast_received` / `ifs_arrive`.
+//!
+//! All state is shard-local by construction: a staging partition never
+//! spans a dispatch shard (the worlds align shard geometry up to
+//! `partition_nodes`), so head reads, tree hops and collector traffic
+//! all stay inside one lane. The only cross-lane edge is the staging
+//! *barrier* — dispatch holds until every partition holds the working
+//! set — which the serial world checks directly and the parallel world
+//! implements as one staging-done report per lane to the coordinator
+//! (a hop that trivially satisfies the lookahead floor).
+//!
+//! The layer returns decisions; hosts own the event queues:
+//! * [`CollectiveStaging::begin_broadcast`] plans the striped
+//!   partition-head reads (the host submits them to its shared-FS model,
+//!   or charges the closed-form [`head_read_secs`] when it has no global
+//!   FS event queue);
+//! * [`CollectiveStaging::head_stripe_done`] counts stripes down and
+//!   says when a head holds an object;
+//! * [`CollectiveStaging::forward`] runs the store-and-forward k-ary
+//!   tree hop — ONE serialized uplink per node, persisting across
+//!   objects — and reports the child deliveries to schedule.
+
+use crate::collective::bcast::stripe_chunks;
+use crate::collective::ifs::PartitionCollector;
+use crate::collective::tree::BroadcastTree;
+use crate::falkon::simworld::CollectiveConfig;
+use crate::obs::Obs;
+use crate::sim::engine::{secs, Time};
+use crate::sim::machine::FsProfile;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::ShardLocalLayer;
+
+/// One striped partition-head read the host must charge to its
+/// shared-FS model (the carried `obj` index comes back through
+/// [`CollectiveStaging::head_stripe_done`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeadRead {
+    /// First core of the partition head node (FS client id).
+    pub head_core: usize,
+    /// Object index within the staging working set.
+    pub obj: usize,
+    /// Chunk bytes for this stripe.
+    pub bytes: u64,
+}
+
+/// Outcome of one tree hop: schedule `BcastRecv(node, obj)` at each
+/// delivery time; when `done`, the staging barrier lifts.
+#[derive(Clone, Debug)]
+pub struct BcastForward {
+    pub key: &'static str,
+    pub bytes: u64,
+    /// (child node, delivery time) pairs down this node's subtree.
+    pub deliveries: Vec<(usize, Time)>,
+    /// The whole working set landed on every node.
+    pub done: bool,
+}
+
+/// In-flight broadcast bookkeeping (the old `simworld::StageState`).
+#[derive(Debug)]
+struct BcastState {
+    /// Objects being staged (dedup union of all task objects).
+    objects: Vec<(&'static str, u64)>,
+    /// (node, object) deliveries still outstanding.
+    remaining: usize,
+    /// Striped head reads outstanding per (partition, object).
+    head_pending: HashMap<(usize, usize), u32>,
+    /// Per-node uplink busy horizon: a node has ONE interconnect uplink,
+    /// so its forwards serialize across children AND across objects.
+    uplink_free: HashMap<usize, Time>,
+    /// Virtual time staging completed.
+    done_at: Option<Time>,
+}
+
+/// Per-shard collective-staging state: the broadcast phase (when a
+/// working set exists) plus the partition output collectors (when the
+/// intermediate FS is on).
+#[derive(Debug)]
+pub struct CollectiveStaging {
+    cc: CollectiveConfig,
+    /// Cores per node (for head-core arithmetic).
+    cpn: usize,
+    /// Nodes covered by this instance (the allocation or the lane span).
+    nodes: usize,
+    bcast: Option<BcastState>,
+    /// Per-partition IFS output collectors (empty when IFS is off).
+    collectors: Vec<PartitionCollector>,
+}
+
+impl CollectiveStaging {
+    /// Build the layer over `nodes` nodes. Collectors are created when
+    /// the config routes outputs through the intermediate FS; the
+    /// broadcast phase starts separately via [`Self::begin_broadcast`].
+    pub fn new(cc: CollectiveConfig, cpn: usize, nodes: usize) -> CollectiveStaging {
+        assert!(cc.partition_nodes >= 1, "collective.partition_nodes must be >= 1");
+        assert!(cc.arity >= 1, "collective.arity must be >= 1");
+        assert!(cc.stripes >= 1, "collective.stripes must be >= 1");
+        assert!(cc.link_bps > 0.0, "collective.link_bps must be positive");
+        let n_parts = nodes.div_ceil(cc.partition_nodes);
+        let collectors = if cc.ifs {
+            (0..n_parts).map(|_| PartitionCollector::new(cc.ifs_flush)).collect()
+        } else {
+            Vec::new()
+        };
+        CollectiveStaging { cc, cpn, nodes, bcast: None, collectors }
+    }
+
+    pub fn config(&self) -> &CollectiveConfig {
+        &self.cc
+    }
+
+    pub fn partitions(&self) -> usize {
+        self.nodes.div_ceil(self.cc.partition_nodes)
+    }
+
+    pub fn partition_of_node(&self, node: usize) -> usize {
+        node / self.cc.partition_nodes
+    }
+
+    /// First core of partition `part`'s head node (the FS client that
+    /// issues its striped reads and collector write-backs).
+    pub fn head_core(&self, part: usize) -> usize {
+        part * self.cc.partition_nodes * self.cpn
+    }
+
+    /// Start the broadcast of `objects` (the dedup working-set union):
+    /// every partition head reads every object as striped chunks.
+    /// Returns the reads to charge; an empty working set is a no-op.
+    pub fn begin_broadcast(&mut self, objects: Vec<(&'static str, u64)>) -> Vec<HeadRead> {
+        assert!(self.bcast.is_none(), "broadcast already started");
+        if objects.is_empty() {
+            return Vec::new();
+        }
+        let n_parts = self.partitions();
+        let mut reads = Vec::new();
+        let mut head_pending = HashMap::new();
+        for part in 0..n_parts {
+            let head_core = self.head_core(part);
+            for (obj, &(_, bytes)) in objects.iter().enumerate() {
+                head_pending.insert((part, obj), self.cc.stripes);
+                for b in stripe_chunks(bytes, self.cc.stripes) {
+                    reads.push(HeadRead { head_core, obj, bytes: b });
+                }
+            }
+        }
+        self.bcast = Some(BcastState {
+            remaining: self.nodes * objects.len(),
+            objects,
+            head_pending,
+            uplink_free: HashMap::new(),
+            done_at: None,
+        });
+        reads
+    }
+
+    /// True while the pre-dispatch broadcast is still in flight (the
+    /// staging barrier: hosts hold dispatch while this is set).
+    pub fn active(&self) -> bool {
+        self.bcast.as_ref().is_some_and(|s| s.remaining > 0)
+    }
+
+    /// One striped head-read chunk finished; the head holds the object
+    /// when all stripes do — then the host calls [`Self::forward`] for
+    /// the head node.
+    pub fn head_stripe_done(&mut self, part: usize, obj: usize) -> bool {
+        match self.bcast.as_mut() {
+            Some(st) => {
+                let left =
+                    st.head_pending.get_mut(&(part, obj)).expect("unknown bcast stripe");
+                *left -= 1;
+                *left == 0
+            }
+            None => false,
+        }
+    }
+
+    /// `node` now holds staged object `obj`: compute its forwards down
+    /// the partition-local spanning tree. Store-and-forward on ONE
+    /// uplink: this node's sends serialize across its children and
+    /// across any other objects it is still forwarding (the busy
+    /// horizon persists between objects). The host commits the object
+    /// to its node cache and schedules each delivery.
+    pub fn forward(&mut self, now: Time, node: usize, obj: usize) -> Option<BcastForward> {
+        let total_nodes = self.nodes;
+        let cc = self.cc;
+        let st = self.bcast.as_mut()?;
+        let (key, bytes) = st.objects[obj];
+        let base = (node / cc.partition_nodes) * cc.partition_nodes;
+        let size = cc.partition_nodes.min(total_nodes - base);
+        let tree = BroadcastTree::new(size, cc.arity);
+        let xfer = secs(bytes as f64 * 8.0 / cc.link_bps);
+        let mut free = st.uplink_free.get(&node).copied().unwrap_or(0).max(now);
+        let mut deliveries = Vec::new();
+        for child in tree.children(node - base) {
+            free += xfer;
+            deliveries.push((base + child, free));
+        }
+        st.uplink_free.insert(node, free);
+        st.remaining -= 1;
+        let done = st.remaining == 0;
+        if done {
+            st.done_at = Some(now);
+        }
+        Some(BcastForward { key, bytes, deliveries, done })
+    }
+
+    /// Virtual time the broadcast completed (None while in flight or
+    /// when nothing was staged).
+    pub fn done_at(&self) -> Option<Time> {
+        self.bcast.as_ref().and_then(|s| s.done_at)
+    }
+
+    /// Bytes landed on nodes by the broadcast (working set × nodes).
+    pub fn staged_bytes(&self) -> u64 {
+        match &self.bcast {
+            Some(st) => {
+                st.objects.iter().map(|(_, b)| *b).sum::<u64>() * self.nodes as u64
+            }
+            None => 0,
+        }
+    }
+
+    pub fn objects(&self) -> &[(&'static str, u64)] {
+        self.bcast.as_ref().map(|s| s.objects.as_slice()).unwrap_or(&[])
+    }
+
+    /// A task's output record landed at its partition collector; when
+    /// the write-back policy trips, the host charges the returned bytes
+    /// as one batched shared-FS write from the partition head.
+    pub fn ifs_add(&mut self, part: usize, bytes: u64) -> Option<u64> {
+        self.collectors[part].add(bytes)
+    }
+
+    /// End of campaign: drain collector residues as one batched write
+    /// each (write-behind — does not extend the campaign makespan).
+    /// Returns (partition, bytes) per non-empty collector.
+    pub fn ifs_flush_all(&mut self) -> Vec<(usize, u64)> {
+        let mut out = Vec::new();
+        for part in 0..self.collectors.len() {
+            if let Some(flush) = self.collectors[part].flush() {
+                out.push((part, flush));
+            }
+        }
+        out
+    }
+
+    pub fn collectors(&self) -> &[PartitionCollector] {
+        &self.collectors
+    }
+
+    pub fn attach_obs(&mut self, obs: Arc<Obs>) {
+        for c in &mut self.collectors {
+            c.attach_obs(obs.clone());
+        }
+    }
+}
+
+impl ShardLocalLayer for CollectiveStaging {
+    fn name(&self) -> &'static str {
+        "staging"
+    }
+
+    fn node_down(&mut self, node: usize) {
+        // A dead node's uplink never forwards again; pending deliveries
+        // into its subtree still count (the broadcast happens before
+        // dispatch — mid-broadcast death is handled by the host bouncing
+        // the whole campaign, not modeled per-subtree).
+        if let Some(st) = self.bcast.as_mut() {
+            st.uplink_free.remove(&node);
+        }
+    }
+
+    fn quiescent(&self) -> bool {
+        !self.active()
+            && self.collectors.iter().all(|c| c.pending_bytes() == 0)
+    }
+}
+
+/// Closed-form head-read time for hosts without a global shared-FS
+/// event queue (the partition-parallel lanes): `concurrent_heads`
+/// partition heads machine-wide each read the object as `stripes`
+/// parallel chunk streams, so a stream gets
+/// `min(per_client_bps, read_bps / (heads × stripes))` and the object
+/// lands after the slowest chunk. Geometry is static, so every lane
+/// computes the same figure — deterministic across thread counts by
+/// construction. Conservative vs. the serial world's event-driven FS
+/// (which lets early finishers release bandwidth).
+pub fn head_read_secs(
+    profile: &FsProfile,
+    bytes: u64,
+    stripes: u32,
+    concurrent_heads: usize,
+) -> f64 {
+    let streams = (concurrent_heads.max(1) as f64) * f64::from(stripes.max(1));
+    let per_stream_bps = profile.per_client_bps.min(profile.read_bps / streams).max(1.0);
+    let max_chunk = stripe_chunks(bytes, stripes.max(1)).max().unwrap_or(1);
+    profile.op_latency_s + max_chunk as f64 * 8.0 / per_stream_bps
+}

@@ -1,0 +1,179 @@
+//! Wire-batching layer: the result-direction coalescing policy and the
+//! dispatch bundle-sizing rule, extracted from `simworld`'s
+//! `finish_task` / `result_window_flush` / `bundle_target`.
+//!
+//! The layer is a pure slot-indexed state machine: the host decides what
+//! a *slot* is (the serial world batches per **core** — its executors
+//! pre-fetch, so a core can complete while still busy; the parallel
+//! world batches per **node**, the live executor-coalescing twin) and
+//! what an *entry* carries (`simworld` stores task ids; `parworld`
+//! stores completion records, because its cores are reassigned before
+//! the batched message lands). Decisions come back as [`BufferVerdict`]s
+//! and the host schedules the actual `ResultMsg` / `ResultFlush` events.
+
+use crate::falkon::simworld::ServiceModel;
+use super::ShardLocalLayer;
+
+/// Why a buffered batch shipped (drives the `Ctr::Flush*` counters).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushKind {
+    /// The completing slot went idle: ship immediately so sleep-0
+    /// latency is unhurt (a core/node with nothing left never waits).
+    Idle,
+    /// The buffer reached the batch cap.
+    Cap,
+    /// The batch window expired with completions still buffered.
+    Window,
+}
+
+/// What to do after buffering one completion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufferVerdict {
+    /// Ship the slot's buffer now (take it with [`WireBatch::take`]).
+    Flush(FlushKind),
+    /// First completion in an empty buffer while the slot stays busy:
+    /// arm the flush window so the batch cannot hide behind a
+    /// long-running neighbor (the live `batch_window` twin).
+    ArmWindow,
+    /// Keep buffering.
+    Hold,
+}
+
+/// Per-shard wire-batching state + policy. `T` is the per-completion
+/// entry the host needs back at flush time.
+#[derive(Debug)]
+pub struct WireBatch<T = usize> {
+    /// Completions per result message (0 = legacy: the result direction
+    /// is folded into the dispatch per-task constant and the layer is
+    /// inert).
+    batch: usize,
+    /// Flush-window width, seconds.
+    window_s: f64,
+    /// Fixed dispatch bundle size (used when `adaptive_cap == 0`).
+    bundle: usize,
+    /// Adaptive bundle cap (> 0 sizes bundles from queue depth over
+    /// idle slots, same rule as the live `bundle_for_depth`).
+    adaptive_cap: usize,
+    bufs: Vec<Vec<T>>,
+}
+
+impl<T> WireBatch<T> {
+    pub fn new(
+        batch: usize,
+        window_s: f64,
+        bundle: usize,
+        adaptive_cap: usize,
+        slots: usize,
+    ) -> WireBatch<T> {
+        WireBatch {
+            batch,
+            window_s,
+            bundle,
+            adaptive_cap,
+            bufs: (0..slots).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// True when the result direction is modeled explicitly.
+    pub fn modeled(&self) -> bool {
+        self.batch > 0
+    }
+
+    /// Flush-window width, seconds (clamped non-negative).
+    pub fn window_s(&self) -> f64 {
+        self.window_s.max(0.0)
+    }
+
+    /// Dispatch bundle target before credit/queue clamping: fixed
+    /// policy, or adaptive from queue depth over idle slots.
+    pub fn bundle_target(&self, queued: usize, idle_slots: usize) -> usize {
+        if self.adaptive_cap == 0 {
+            self.bundle.max(1)
+        } else {
+            queued.div_ceil(idle_slots.max(1)).clamp(1, self.adaptive_cap)
+        }
+    }
+
+    /// Service CPU for one dispatch of `n` tasks: the legacy folded
+    /// model, or the split model when the result direction is charged
+    /// explicitly (the A6 identity: split + result(1) = folded at
+    /// batch 1).
+    pub fn dispatch_cost_s(&self, model: &ServiceModel, n: usize, extra_bytes: f64) -> f64 {
+        if self.batch == 0 {
+            model.dispatch_cost_s(n, extra_bytes)
+        } else {
+            model.dispatch_cost_split_s(n, extra_bytes)
+        }
+    }
+
+    /// Ingest cost of one result message carrying `k` completions, or
+    /// `None` in legacy mode (folded into the dispatch constant).
+    pub fn result_cost_s(&self, model: &ServiceModel, k: usize) -> Option<f64> {
+        if self.batch == 0 {
+            None
+        } else {
+            Some(model.result_cost_s(k))
+        }
+    }
+
+    /// Buffer one completion on `slot` and decide what ships.
+    /// `slot_idle` is whether the slot has nothing left to run *after*
+    /// this completion (the host evaluates it post-`core_next`).
+    pub fn buffer(&mut self, slot: usize, entry: T, slot_idle: bool) -> BufferVerdict {
+        debug_assert!(self.batch > 0, "buffer() called in legacy mode");
+        let buf = &mut self.bufs[slot];
+        buf.push(entry);
+        if slot_idle {
+            BufferVerdict::Flush(FlushKind::Idle)
+        } else if buf.len() >= self.batch {
+            BufferVerdict::Flush(FlushKind::Cap)
+        } else if buf.len() == 1 {
+            BufferVerdict::ArmWindow
+        } else {
+            BufferVerdict::Hold
+        }
+    }
+
+    /// Take a slot's buffered completions for shipping.
+    pub fn take(&mut self, slot: usize) -> Vec<T> {
+        std::mem::take(&mut self.bufs[slot])
+    }
+
+    /// The flush window expired: whatever is still buffered (a no-op —
+    /// `None` — when a full/idle flush, node death, or an earlier window
+    /// already drained the slot).
+    pub fn window_expired(&mut self, slot: usize) -> Option<Vec<T>> {
+        if self.bufs[slot].is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.bufs[slot]))
+        }
+    }
+
+    /// The slot's node died: its buffered completions never reached the
+    /// service, so their tasks must be retried elsewhere (exactly-once
+    /// is preserved — the service never saw the first completion).
+    pub fn drop_slot(&mut self, slot: usize) -> Vec<T> {
+        std::mem::take(&mut self.bufs[slot])
+    }
+
+    /// True when `slot` holds completed-but-unsent results (a
+    /// provisioner must consider such a slot busy).
+    pub fn slot_occupied(&self, slot: usize) -> bool {
+        !self.bufs[slot].is_empty()
+    }
+}
+
+impl<T> ShardLocalLayer for WireBatch<T> {
+    fn name(&self) -> &'static str {
+        "wirebatch"
+    }
+
+    fn node_down(&mut self, slot: usize) {
+        self.bufs[slot].clear();
+    }
+
+    fn quiescent(&self) -> bool {
+        self.bufs.iter().all(|b| b.is_empty())
+    }
+}

@@ -28,6 +28,12 @@
 //! stats, and the reference sharded-queue composition the property tests
 //! verify conservation against.
 //!
+//! The cost-model subsystems both simulated fabrics share — collective
+//! staging, elastic provisioning, wire batching — live in [`layers`] as
+//! shard-local components: `simworld` hosts D instances inside one
+//! thread, `parworld` one per worker lane, so the calibrations are
+//! maintained once and replayed identically in both worlds.
+//!
 //! Supporting pieces: [`task`] (lifecycle model), [`queue`] (wait/pending
 //! accounting with conservation invariants), [`errors`] (the §3.3 failure
 //! taxonomy and retry/suspension policy), [`theory`] (the Figure 1–2
@@ -37,6 +43,7 @@ pub mod coordinator;
 pub mod dispatch;
 pub mod errors;
 pub mod exec;
+pub mod layers;
 pub mod parworld;
 pub mod provision;
 pub mod queue;

@@ -19,22 +19,23 @@
 //!   model; the [`CacheManager`] decides what hits where.
 
 use crate::collective::ifs::{FlushPolicy, PartitionCollector};
-use crate::collective::tree::BroadcastTree;
-use crate::falkon::dispatch::{choose_shard, ShardLoad};
+use crate::falkon::dispatch::{choose_shard, pick_core_scored, ShardLoad};
 use crate::falkon::errors::{RetryPolicy, TaskError};
-use crate::falkon::provision::{ProvisionEvent, ProvisionPolicy, Provisioner};
+use crate::falkon::layers::{
+    BufferVerdict, ChaosState, CollectiveStaging, FlushKind, ProvAction, ProvisionLayer,
+    WireBatch,
+};
+use crate::falkon::provision::ProvisionPolicy;
+use crate::faults::mtbf_schedule;
 use crate::fs::cache::CacheManager;
 use crate::fs::ramdisk::RamdiskModel;
 use crate::fs::shared::{FsOp, OpId, SharedFs};
-use crate::lrm::cobalt::Cobalt;
-use crate::lrm::slurm::Slurm;
-use crate::lrm::{AllocId, AllocReady, Lrm};
+use crate::lrm::AllocId;
 use crate::metrics::{Campaign, TaskTimes};
 use crate::net::codec::{bytes_per_task, Codec, TcpCodec, WsCodec};
 use crate::obs::{Ctr, Gauge, Obs, ObsConfig, RecKind};
 use crate::sim::engine::{secs, to_secs, Scheduler, Time};
 use crate::sim::machine::Machine;
-use crate::util::rng::Rng;
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
@@ -114,7 +115,7 @@ pub enum SimLrmKind {
 }
 
 /// Elastic multi-level scheduling (§3.2.1): instead of all executors
-/// existing from t=0, a [`Provisioner`] acquires allocations from a
+/// existing from t=0, a [`ProvisionLayer`] acquires allocations from a
 /// simulated LRM and the world's executors come and go with them. Cobalt
 /// boot storms charge the shared-FS contention model (every booting node
 /// reads its kernel image); walltime expiry kills a held allocation's
@@ -239,7 +240,7 @@ pub struct WorldConfig {
     /// busy. Only meaningful when `result_batch >= 2`.
     pub result_window_s: f64,
     /// Elastic multi-level scheduling: `Some` starts the world with ZERO
-    /// live executors and lets a [`Provisioner`] bring nodes up and down
+    /// live executors and lets a [`ProvisionLayer`] bring nodes up and down
     /// through a simulated LRM. `None` = the classic always-on fleet.
     pub provision: Option<SimProvisionConfig>,
     /// Observability: telemetry registry + flight recorder. Trace
@@ -480,9 +481,6 @@ struct CoreState {
     current: Option<usize>,
     /// Dispatch credit (pre-fetch depth remaining).
     credit: u32,
-    /// Completed-but-unsent results (result batching; flushed on idle,
-    /// on reaching the batch cap, and lost if the node dies first).
-    result_buf: Vec<usize>,
     alive: bool,
     /// Incarnation counter: bumped when the core goes down AND when it
     /// comes back up (provisioned mode revives cores), so in-flight
@@ -523,10 +521,13 @@ pub struct World {
     failed: usize,
     /// Wire-byte baseline of a sleep-0 dispatch (per task).
     base_wire_bytes: f64,
-    /// Collective staging state (None when disabled or nothing to stage).
-    stage: Option<StageState>,
-    /// Per-partition IFS output collectors (empty when IFS is off).
-    collectors: Vec<PartitionCollector>,
+    /// Collective-staging layer (None when staging is disabled). Owns the
+    /// broadcast bookkeeping AND the per-partition IFS collectors.
+    staging: Option<CollectiveStaging>,
+    /// Wire-batching layer: result-direction coalescing per core slot +
+    /// the dispatch bundle-sizing rule. Inert (`modeled() == false`) in
+    /// the legacy calibration.
+    wire: WireBatch<usize>,
     /// Hierarchical mode (dispatchers > 1): per-partition dispatcher
     /// state. Empty in classic single-dispatcher mode.
     shards: Vec<SimShard>,
@@ -549,35 +550,17 @@ pub struct World {
     /// ProvisionTick, AllocBoot, AllocExpire, FaultHang, FaultSlow,
     /// FaultDetect) — cheap observability for perf work.
     pub event_tally: [u64; 20],
-    /// Elastic provisioning (None = the classic always-on fleet).
-    prov: Option<Provisioner<Box<dyn Lrm>>>,
-    /// Allocations whose kernel-image boot reads are still in flight:
-    /// alloc → (nodes, outstanding reads).
-    boot_allocs: HashMap<AllocId, (Vec<usize>, u32)>,
-    /// Earliest outstanding AllocBoot / AllocExpire wakeups (dedup, same
-    /// pattern as `fs_wake_target`).
-    boot_wake_target: Option<Time>,
-    expire_wake_target: Option<Time>,
+    /// Elastic-provisioning layer (None = the classic always-on fleet).
+    /// Owns the LRM, boot-storm bookkeeping and boot/expire wake dedup.
+    prov: Option<ProvisionLayer>,
     /// Reusable per-node busy bitmap for provisioner ticks.
     node_busy_scratch: Vec<bool>,
-    /// Nodes killed permanently (MTBF / injected failures): a later
-    /// allocation grant must NOT revive them.
-    condemned: HashSet<usize>,
-    /// Chaos: nodes currently hung (computing, never reporting) —
-    /// awaiting their `FaultDetect`.
-    hung: HashSet<usize>,
-    /// Chaos: node → (until, factor) straggler stretch applied to
-    /// executions begun before `until`.
-    slow_until: HashMap<usize, (Time, f64)>,
-    /// Chaos: nodes whose scheduled `NodeFail` came from the fault plan
-    /// (so its firing counts toward `Ctr::FaultsInjected`, unlike MTBF
-    /// draws and `fail_nodes_at` kills).
-    crash_faults: HashSet<usize>,
+    /// Shared fault-replay state (condemned / hung / straggler nodes and
+    /// plan-crash tags), keyed by global node index.
+    chaos: ChaosState,
     /// Initial dispatch credit per core (also used when a provisioned
     /// node boots).
     credit0: u32,
-    expirations_n: u64,
-    allocs_granted_n: u64,
     /// Telemetry registry + flight recorder twin (None = tracing off —
     /// zero hooks on the hot path). Records carry *virtual* timestamps.
     obs: Option<Arc<Obs>>,
@@ -596,24 +579,6 @@ struct SimShard {
     /// steal until it lands (one outstanding steal per thief, matching
     /// the live dispatcher's synchronous steal-then-replan loop).
     steal_pending: bool,
-}
-
-/// In-flight broadcast bookkeeping.
-#[derive(Debug)]
-struct StageState {
-    /// Nodes covered by the broadcast (the allocation, not the machine).
-    nodes: usize,
-    /// Objects being staged (dedup union of all task objects).
-    objects: Vec<(&'static str, u64)>,
-    /// (node, object) deliveries still outstanding.
-    remaining: usize,
-    /// Striped head reads outstanding per (partition, object).
-    head_pending: HashMap<(usize, usize), u32>,
-    /// Per-node uplink busy horizon: a node has ONE interconnect uplink,
-    /// so its forwards serialize across children AND across objects.
-    uplink_free: HashMap<usize, Time>,
-    /// Virtual time staging completed.
-    done_at: Option<Time>,
 }
 
 impl World {
@@ -645,19 +610,7 @@ impl World {
             .max(cfg.bundle as u32)
             .max(cfg.adaptive_bundle_cap as u32)
             .max(1);
-        let prov: Option<Provisioner<Box<dyn Lrm>>> = cfg.provision.as_ref().map(|pc| {
-            let pset = match pc.lrm {
-                SimLrmKind::Cobalt => true,
-                SimLrmKind::Slurm => false,
-                SimLrmKind::Auto => cfg.machine.nodes_per_pset.is_some(),
-            };
-            let lrm: Box<dyn Lrm> = if pset {
-                Box::new(Cobalt::new(cfg.machine.clone()))
-            } else {
-                Box::new(Slurm::new(cfg.machine.clone()))
-            };
-            Provisioner::new(pc.policy.clone(), lrm)
-        });
+        let prov = cfg.provision.as_ref().map(|pc| ProvisionLayer::new(pc, &cfg.machine, cores));
         // Shard geometry: contiguous node slices, aligned up to the
         // collective staging partition when one is configured so a
         // dispatch shard never splits a staging partition.
@@ -686,7 +639,6 @@ impl World {
                     // executors unbundle into a local queue). Adaptive
                     // bundles need credit up to their cap to form.
                     credit: credit0,
-                    result_buf: Vec::new(),
                     // A provisioned world starts with NO executors: nodes
                     // come up when the LRM grants them.
                     alive: !provisioned,
@@ -703,8 +655,14 @@ impl World {
             completed: 0,
             failed: 0,
             base_wire_bytes,
-            stage: None,
-            collectors: Vec::new(),
+            staging: None,
+            wire: WireBatch::new(
+                cfg.result_batch,
+                cfg.result_window_s,
+                cfg.bundle,
+                cfg.adaptive_bundle_cap,
+                cores,
+            ),
             shards: (0..n_shards).map(|_| SimShard::default()).collect(),
             shard_nodes,
             coord_q: if sharded { (0..n).collect() } else { VecDeque::new() },
@@ -716,17 +674,9 @@ impl World {
             stolen_tasks_n: 0,
             event_tally: [0; 20],
             prov,
-            boot_allocs: HashMap::new(),
-            boot_wake_target: None,
-            expire_wake_target: None,
             node_busy_scratch: Vec::new(),
-            condemned: HashSet::new(),
-            hung: HashSet::new(),
-            slow_until: HashMap::new(),
-            crash_faults: HashSet::new(),
+            chaos: ChaosState::new(),
             credit0,
-            expirations_n: 0,
-            allocs_granted_n: 0,
             obs,
             tasks,
             cfg,
@@ -756,8 +706,7 @@ impl World {
             // draw for node k is a pure function of (seed, k), so the
             // fault schedule is identical across dispatcher counts and
             // across the serial and partition-parallel engines.
-            for node in 0..w.cfg.machine.nodes {
-                let at = Rng::split(w.cfg.seed, node as u64).exp(mtbf);
+            for (node, at) in mtbf_schedule(w.cfg.seed, 0..w.cfg.machine.nodes, mtbf) {
                 w.sched.after_secs(at, Ev::NodeFail { node: node as u32 });
             }
         }
@@ -772,7 +721,7 @@ impl World {
         for ev in plan.events {
             match ev.kind {
                 crate::faults::FaultKind::Crash => {
-                    w.crash_faults.insert(ev.node);
+                    w.chaos.tag_crash(ev.node);
                     w.sched.at(secs(ev.at_s), Ev::NodeFail { node: ev.node as u32 });
                 }
                 crate::faults::FaultKind::Hang => {
@@ -788,8 +737,8 @@ impl World {
         }
         w.init_collective();
         if let Some(o) = w.obs.clone() {
-            for c in &mut w.collectors {
-                c.attach_obs(o.clone());
+            if let Some(st) = w.staging.as_mut() {
+                st.attach_obs(o.clone());
             }
         }
         if sharded {
@@ -818,21 +767,12 @@ impl World {
     /// striped partition-head reads that seed the broadcast trees.
     fn init_collective(&mut self) {
         let Some(cc) = self.cfg.collective else { return };
-        assert!(cc.partition_nodes >= 1, "collective.partition_nodes must be >= 1");
-        assert!(cc.arity >= 1, "collective.arity must be >= 1");
-        assert!(cc.stripes >= 1, "collective.stripes must be >= 1");
-        assert!(cc.link_bps > 0.0, "collective.link_bps must be positive");
         let cpn = self.cfg.machine.cores_per_node;
         // Stage only the allocation. `WorldConfig::new` already trims the
         // machine to the requested cores; the min guards hand-built
         // configs whose `cores` undershoots the machine.
         let nodes = self.cfg.machine.nodes.min(self.cores.len().div_ceil(cpn));
-        let n_parts = nodes.div_ceil(cc.partition_nodes);
-        if cc.ifs {
-            self.collectors = (0..n_parts)
-                .map(|_| PartitionCollector::new(cc.ifs_flush))
-                .collect();
-        }
+        let mut st = CollectiveStaging::new(cc, cpn, nodes);
         // Dedup union of every task's cacheable objects, submission order.
         let mut objects: Vec<(&'static str, u64)> = Vec::new();
         let mut seen: HashSet<&'static str> = HashSet::new();
@@ -844,69 +784,33 @@ impl World {
             }
         }
         if objects.is_empty() || !self.cfg.caching {
+            self.staging = Some(st);
             return;
         }
-        let mut head_pending = HashMap::new();
-        for part in 0..n_parts {
-            let head_core = part * cc.partition_nodes * cpn;
-            for (obj, &(_, bytes)) in objects.iter().enumerate() {
-                head_pending.insert((part, obj), cc.stripes);
-                let chunk = (bytes / cc.stripes as u64).max(1);
-                for s in 0..cc.stripes {
-                    let b = if s == cc.stripes - 1 {
-                        bytes.saturating_sub(chunk * (cc.stripes as u64 - 1)).max(1)
-                    } else {
-                        chunk
-                    };
-                    let id = self.fs.submit(0, head_core, FsOp::Read { bytes: b });
-                    // The "task" slot carries the object index for Bcast ops.
-                    self.fs_ops.insert(id, (head_core, obj, Stage::Bcast, 0));
-                }
-            }
+        for r in st.begin_broadcast(objects) {
+            let id = self.fs.submit(0, r.head_core, FsOp::Read { bytes: r.bytes });
+            // The "task" slot carries the object index for Bcast ops.
+            self.fs_ops.insert(id, (r.head_core, r.obj, Stage::Bcast, 0));
         }
-        self.stage = Some(StageState {
-            nodes,
-            remaining: nodes * objects.len(),
-            objects,
-            head_pending,
-            uplink_free: HashMap::new(),
-            done_at: None,
-        });
+        self.staging = Some(st);
         self.arm_fs_wake();
     }
 
     /// True while the pre-dispatch broadcast is still in flight.
     fn staging_active(&self) -> bool {
-        self.stage.as_ref().is_some_and(|s| s.remaining > 0)
+        self.staging.as_ref().is_some_and(|s| s.active())
     }
 
     /// `node` now holds staged object `obj`: commit it to the node cache
     /// and forward it down the partition-local spanning tree.
     fn bcast_received(&mut self, now: Time, node: usize, obj: usize) {
-        let Some(cc) = self.cfg.collective else { return };
-        let ((key, bytes), total_nodes) = match self.stage.as_ref() {
-            Some(s) => (s.objects[obj], s.nodes),
-            None => return,
-        };
-        let _ = self.cache.commit(node, key.to_string(), bytes);
-        let base = (node / cc.partition_nodes) * cc.partition_nodes;
-        let size = cc.partition_nodes.min(total_nodes - base);
-        let tree = BroadcastTree::new(size, cc.arity);
-        let xfer = secs(bytes as f64 * 8.0 / cc.link_bps);
-        // Store-and-forward on ONE uplink: this node's sends serialize
-        // across its children and across any other objects it is still
-        // forwarding (the busy horizon persists between objects).
-        let st = self.stage.as_mut().expect("staging state");
-        let mut free = st.uplink_free.get(&node).copied().unwrap_or(0).max(now);
-        for child in tree.children(node - base) {
-            free += xfer;
-            self.sched
-                .at(free, Ev::BcastRecv { node: (base + child) as u32, obj: obj as u32 });
+        let Some(st) = self.staging.as_mut() else { return };
+        let Some(fwd) = st.forward(now, node, obj) else { return };
+        let _ = self.cache.commit(node, fwd.key.to_string(), fwd.bytes);
+        for (child, at) in fwd.deliveries {
+            self.sched.at(at, Ev::BcastRecv { node: child as u32, obj: obj as u32 });
         }
-        st.uplink_free.insert(node, free);
-        st.remaining -= 1;
-        if st.remaining == 0 {
-            st.done_at = Some(now);
+        if fwd.done {
             self.wake_dispatch(now);
         }
     }
@@ -916,10 +820,13 @@ impl World {
         if !self.cores[core].alive {
             return; // the node died mid-hop; NodeLost handling owns the task
         }
-        let cc = self.cfg.collective.expect("IfsArrive without collective config");
-        let part = self.node_of(core) / cc.partition_nodes;
-        if let Some(flush) = self.collectors[part].add(bytes) {
-            let head_core = part * cc.partition_nodes * self.cfg.machine.cores_per_node;
+        let node = self.node_of(core);
+        let flush = {
+            let st = self.staging.as_mut().expect("IfsArrive without collective config");
+            let part = st.partition_of_node(node);
+            st.ifs_add(part, bytes).map(|b| (st.head_core(part), b))
+        };
+        if let Some((head_core, flush)) = flush {
             let op = self.fs.submit(now, head_core, FsOp::Write { bytes: flush });
             self.fs_ops.insert(op, (head_core, usize::MAX, Stage::IfsFlush, 0));
             self.arm_fs_wake();
@@ -930,15 +837,18 @@ impl World {
     /// End of campaign: drain collector residues as one batched write
     /// each (write-behind — does not extend the campaign makespan).
     fn flush_collectors(&mut self) {
-        let Some(cc) = self.cfg.collective else { return };
         let now = self.sched.now();
-        let cpn = self.cfg.machine.cores_per_node;
-        for part in 0..self.collectors.len() {
-            if let Some(flush) = self.collectors[part].flush() {
-                let head_core = part * cc.partition_nodes * cpn;
-                let op = self.fs.submit(now, head_core, FsOp::Write { bytes: flush });
-                self.fs_ops.insert(op, (head_core, usize::MAX, Stage::IfsFlush, 0));
-            }
+        let flushes: Vec<(usize, u64)> = match self.staging.as_mut() {
+            Some(st) => st
+                .ifs_flush_all()
+                .into_iter()
+                .map(|(part, bytes)| (st.head_core(part), bytes))
+                .collect(),
+            None => return,
+        };
+        for (head_core, flush) in flushes {
+            let op = self.fs.submit(now, head_core, FsOp::Write { bytes: flush });
+            self.fs_ops.insert(op, (head_core, usize::MAX, Stage::IfsFlush, 0));
         }
     }
 
@@ -958,21 +868,13 @@ impl World {
     /// or adaptive from queue depth over idle slots (same rule as the
     /// live `bundle_for_depth`).
     fn bundle_target(&self, queued: usize, idle_slots: usize) -> usize {
-        if self.cfg.adaptive_bundle_cap == 0 {
-            self.cfg.bundle.max(1)
-        } else {
-            queued.div_ceil(idle_slots.max(1)).clamp(1, self.cfg.adaptive_bundle_cap)
-        }
+        self.wire.bundle_target(queued, idle_slots)
     }
 
     /// Service CPU for one dispatch: the legacy folded model, or the
     /// split model when the result direction is charged explicitly.
     fn dispatch_cost(&self, n: usize, extra_bytes: f64) -> f64 {
-        if self.cfg.result_batch == 0 {
-            self.model.dispatch_cost_s(n, extra_bytes)
-        } else {
-            self.model.dispatch_cost_split_s(n, extra_bytes)
-        }
+        self.wire.dispatch_cost_s(&self.model, n, extra_bytes)
     }
 
     /// Schedule the shared-FS wakeup, keeping at most one outstanding
@@ -995,43 +897,28 @@ impl World {
     /// the one whose node caches the most bytes of the head task's
     /// objects (bounded scan keeps dispatch O(1)-ish).
     fn pick_core(&mut self) -> Option<usize> {
-        // Drop dead/creditless entries at the front.
-        loop {
-            match self.idle.front() {
-                None => return None,
-                Some(&c) if !self.cores[c].alive || self.cores[c].credit == 0 => {
-                    self.idle.pop_front();
-                }
-                _ => break,
+        let cores = &self.cores;
+        let cache = &self.cache;
+        let cpn = self.cfg.machine.cores_per_node;
+        let eligible = |c: usize| cores[c].alive && cores[c].credit > 0;
+        let head_objs = if self.cfg.data_aware {
+            self.waiting.front().map(|&t| &self.tasks[t].objects).filter(|o| !o.is_empty())
+        } else {
+            None
+        };
+        match head_objs {
+            Some(objs) => {
+                let score = |c: usize| {
+                    let node = c / cpn;
+                    objs.iter()
+                        .filter(|(k, _)| cache.contains(node, k))
+                        .map(|(_, b)| *b)
+                        .sum()
+                };
+                pick_core_scored(&mut self.idle, eligible, Some(&score), 32)
             }
+            None => pick_core_scored(&mut self.idle, eligible, None, 32),
         }
-        if self.cfg.data_aware {
-            if let Some(&head) = self.waiting.front() {
-                let objs = &self.tasks[head].objects;
-                if !objs.is_empty() {
-                    let scan = self.idle.len().min(32);
-                    let mut best = (0usize, 0u64);
-                    for i in 0..scan {
-                        let c = self.idle[i];
-                        if !self.cores[c].alive || self.cores[c].credit == 0 {
-                            continue;
-                        }
-                        let node = c / self.cfg.machine.cores_per_node;
-                        let bytes: u64 = objs
-                            .iter()
-                            .filter(|(k, _)| self.cache.contains(node, k))
-                            .map(|(_, b)| *b)
-                            .sum();
-                        if bytes > best.1 {
-                            best = (i, bytes);
-                        }
-                    }
-                    let c = self.idle.remove(best.0).unwrap();
-                    return Some(c);
-                }
-            }
-        }
-        self.idle.pop_front()
     }
 
     /// Try to dispatch from the service (event handler).
@@ -1344,51 +1231,39 @@ impl World {
             self.try_steal_sim(now, d);
             return;
         }
-        // Pick a core: drop dead/creditless entries at the front, then
-        // (data-aware) a bounded scan for the node caching the head
-        // task's objects — the same policy as the classic path, scoped to
-        // this shard's idle set.
+        // Pick a core: the same scored policy as the classic path
+        // ([`pick_core_scored`]), scoped to this shard's idle set.
         let mut idle = std::mem::take(&mut self.shards[d].idle);
-        loop {
-            match idle.front() {
-                None => break,
-                Some(&c) if !self.cores[c].alive || self.cores[c].credit == 0 => {
-                    idle.pop_front();
-                }
-                _ => break,
-            }
-        }
-        if idle.is_empty() {
-            self.shards[d].idle = idle;
-            return;
-        }
-        let mut pick = 0usize;
-        if self.cfg.data_aware {
-            if let Some(&head) = self.shards[d].waiting.front() {
-                let objs = &self.tasks[head].objects;
-                if !objs.is_empty() {
-                    let scan = idle.len().min(32);
-                    let mut best = (0usize, 0u64);
-                    for (i, &c) in idle.iter().take(scan).enumerate() {
-                        if !self.cores[c].alive || self.cores[c].credit == 0 {
-                            continue;
-                        }
-                        let node = c / self.cfg.machine.cores_per_node;
-                        let bytes: u64 = objs
-                            .iter()
-                            .filter(|(k, _)| self.cache.contains(node, k))
+        let picked = {
+            let cores = &self.cores;
+            let cache = &self.cache;
+            let cpn = self.cfg.machine.cores_per_node;
+            let eligible = |c: usize| cores[c].alive && cores[c].credit > 0;
+            let head_objs = if self.cfg.data_aware {
+                self.shards[d]
+                    .waiting
+                    .front()
+                    .map(|&t| &self.tasks[t].objects)
+                    .filter(|o| !o.is_empty())
+            } else {
+                None
+            };
+            match head_objs {
+                Some(objs) => {
+                    let score = |c: usize| {
+                        let node = c / cpn;
+                        objs.iter()
+                            .filter(|(k, _)| cache.contains(node, k))
                             .map(|(_, b)| *b)
-                            .sum();
-                        if bytes > best.1 {
-                            best = (i, bytes);
-                        }
-                    }
-                    pick = best.0;
+                            .sum()
+                    };
+                    pick_core_scored(&mut idle, eligible, Some(&score), 32)
                 }
+                None => pick_core_scored(&mut idle, eligible, None, 32),
             }
-        }
-        let core = idle.remove(pick).expect("picked idle core");
+        };
         self.shards[d].idle = idle;
+        let Some(core) = picked else { return };
 
         let credit = self.cores[core].credit as usize;
         let n = self
@@ -1573,11 +1448,7 @@ impl World {
         let mut dur = self.tasks[task].exec_secs;
         // Straggler fault: executions begun while the node is slow
         // stretch by the event's factor.
-        if let Some(&(until, factor)) = self.slow_until.get(&self.node_of(core)) {
-            if now < until {
-                dur *= factor;
-            }
-        }
+        dur *= self.chaos.stretch(self.node_of(core), now);
         let epoch = self.cores[core].epoch;
         self.sched
             .at(now + secs(dur), Ev::ExecDone { core: core as u32, task: task as u32, epoch });
@@ -1656,7 +1527,7 @@ impl World {
     fn finish_task(&mut self, now: Time, core: usize, task: usize, error: Option<TaskError>) {
         let latency = secs(self.cfg.machine.net_rtt_secs / 2.0);
         // Errors (and the legacy model) ship per-task, immediately.
-        if self.cfg.result_batch == 0 || error.is_some() {
+        if !self.wire.modeled() || error.is_some() {
             self.sched
                 .at(now + latency, Ev::Result { core: core as u32, task: task as u32, error });
             // The core is free as soon as the result is sent (C executor
@@ -1669,23 +1540,29 @@ impl World {
         // then flush when the batch is full or the core went idle (the
         // flush-on-idle rule that keeps sleep-0 latency unhurt — a core
         // with nothing left to run always flushes right away).
-        self.cores[core].result_buf.push(task);
         self.cores[core].current = None;
         self.core_next(now, core);
         let idle = self.cores[core].current.is_none();
-        if idle || self.cores[core].result_buf.len() >= self.cfg.result_batch {
-            if let Some(o) = &self.obs {
-                o.registry.inc(if idle { Ctr::FlushIdle } else { Ctr::FlushCap });
+        match self.wire.buffer(core, task, idle) {
+            BufferVerdict::Flush(kind) => {
+                if let Some(o) = &self.obs {
+                    o.registry.inc(match kind {
+                        FlushKind::Idle => Ctr::FlushIdle,
+                        FlushKind::Cap => Ctr::FlushCap,
+                        FlushKind::Window => Ctr::FlushWindow,
+                    });
+                }
+                let results = self.wire.take(core);
+                self.sched
+                    .at(now + latency, Ev::ResultMsg { core: core as u32, results: ids(results) });
             }
-            let results = std::mem::take(&mut self.cores[core].result_buf);
-            self.sched
-                .at(now + latency, Ev::ResultMsg { core: core as u32, results: ids(results) });
-        } else if self.cores[core].result_buf.len() == 1 {
             // First completion in an empty buffer while the core stays
             // busy: arm the window so it cannot hide behind a
             // long-running neighbor (live `batch_window` twin).
-            self.sched
-                .after_secs(self.cfg.result_window_s.max(0.0), Ev::ResultFlush { core: core as u32 });
+            BufferVerdict::ArmWindow => self
+                .sched
+                .after_secs(self.wire.window_s(), Ev::ResultFlush { core: core as u32 }),
+            BufferVerdict::Hold => {}
         }
     }
 
@@ -1693,30 +1570,26 @@ impl World {
     /// when a full/idle flush, node death, or an earlier window already
     /// drained the buffer).
     fn result_window_flush(&mut self, now: Time, core: usize) {
-        if self.cores[core].result_buf.is_empty() {
-            return;
-        }
+        let Some(results) = self.wire.window_expired(core) else { return };
         if let Some(o) = &self.obs {
             o.registry.inc(Ctr::FlushWindow);
         }
         let latency = secs(self.cfg.machine.net_rtt_secs / 2.0);
-        let results = std::mem::take(&mut self.cores[core].result_buf);
         self.sched.at(now + latency, Ev::ResultMsg { core: core as u32, results: ids(results) });
     }
 
     /// Advance the (shard's) service busy horizon by the ingest cost of
     /// one result message carrying `k` completions (split model only).
     fn charge_result_cost(&mut self, now: Time, core: usize, k: usize) {
-        if self.cfg.result_batch == 0 {
-            return; // legacy: folded into the dispatch per-task constant
-        }
         if self.cfg.forwarders > 0 {
             // 3-tier keeps its own custom dispatch formula, which never
             // paid the per_task_s constant the result share is carved
             // from — charging here would double-bill (A6 identity).
             return;
         }
-        let cost = secs(self.model.result_cost_s(k));
+        // `None` = legacy: folded into the dispatch per-task constant.
+        let Some(cost) = self.wire.result_cost_s(&self.model, k) else { return };
+        let cost = secs(cost);
         if self.sharded() {
             let d = self.shard_of_core(core);
             self.shards[d].busy_until = self.shards[d].busy_until.max(now) + cost;
@@ -1816,13 +1689,11 @@ impl World {
     /// A node fails permanently (MTBF draw / injected kill): it can never
     /// be revived, even if a later allocation re-grants it.
     fn handle_node_fail(&mut self, now: Time, node: usize) {
-        if self.crash_faults.remove(&node) {
+        if self.chaos.node_failed(node) {
             if let Some(o) = &self.obs {
                 o.registry.inc(Ctr::FaultsInjected);
             }
         }
-        self.hung.remove(&node);
-        self.condemned.insert(node);
         self.take_node_down(now, node);
     }
 
@@ -1850,7 +1721,7 @@ impl World {
             // must be retried elsewhere (exactly-once is preserved — the
             // service never saw the first completion).
             let mut lost: Vec<usize> = self.cores[core].staged.drain(..).collect();
-            lost.extend(self.cores[core].result_buf.drain(..));
+            lost.extend(self.wire.drop_slot(core));
             if let Some(cur) = self.cores[core].current.take() {
                 lost.push(cur);
             }
@@ -1910,7 +1781,7 @@ impl World {
                 && (core.current.is_some()
                     || core.staging > 0
                     || !core.staged.is_empty()
-                    || !core.result_buf.is_empty())
+                    || self.wire.slot_occupied(c))
             {
                 self.node_busy_scratch[c / cpn] = true;
             }
@@ -1921,71 +1792,46 @@ impl World {
             self.waiting.len()
         };
         let scratch = std::mem::take(&mut self.node_busy_scratch);
-        let events = prov.tick_nodes(now, queue_len, &scratch);
+        let actions = prov.tick(now, queue_len, &scratch);
         self.node_busy_scratch = scratch;
-        for ev in events {
-            match ev {
-                ProvisionEvent::Requested { .. } => {}
-                ProvisionEvent::Ready(r) => self.alloc_ready(now, r),
-                ProvisionEvent::Released { alloc, nodes } => self.alloc_down(now, alloc, &nodes),
-                ProvisionEvent::Expired { alloc, nodes } => {
-                    self.expirations_n += 1;
-                    self.alloc_down(now, alloc, &nodes);
+        for act in actions {
+            match act {
+                // A Cobalt-style grant: each in-range node reads its
+                // kernel image from the shared FS (the boot-storm
+                // contention charge); executors come up in the FsWake
+                // handler when the LAST read lands. SLURM-style grants
+                // (no modeled boot) come up immediately.
+                ProvAction::BootReads { alloc, nodes } => {
+                    for node in nodes {
+                        let core = node * cpn;
+                        let id = self
+                            .fs
+                            .submit(now, core, FsOp::Read { bytes: prov.boot_image_bytes() });
+                        self.fs_ops.insert(id, (core, alloc as usize, Stage::Boot, 0));
+                    }
+                    self.arm_fs_wake();
+                }
+                ProvAction::Up(nodes) => self.revive_nodes(now, &nodes),
+                // An allocation went away (idle release or walltime
+                // expiry): stop its executors and bounce whatever they
+                // held through the retry path.
+                ProvAction::Down { nodes, .. } => {
+                    for node in nodes {
+                        self.take_node_down(now, node);
+                    }
                 }
             }
         }
         // Arm precise wakeups for the next boot completion and the next
         // walltime kill (deduplicated like the FS wake).
-        if let Some(t) = prov.next_event() {
-            let t = t.max(now);
-            match self.boot_wake_target {
-                Some(armed) if armed <= t => {}
-                _ => {
-                    self.boot_wake_target = Some(t);
-                    self.sched.at(t, Ev::AllocBoot);
-                }
-            }
+        let (boot, expire) = prov.arm_wakes(now);
+        if let Some(t) = boot {
+            self.sched.at(t, Ev::AllocBoot);
         }
-        if let Some(t) = prov.next_expiry() {
-            let t = t.max(now);
-            match self.expire_wake_target {
-                Some(armed) if armed <= t => {}
-                _ => {
-                    self.expire_wake_target = Some(t);
-                    self.sched.at(t, Ev::AllocExpire);
-                }
-            }
+        if let Some(t) = expire {
+            self.sched.at(t, Ev::AllocExpire);
         }
         self.prov = Some(prov);
-    }
-
-    /// An allocation's nodes finished their LRM boot. On a Cobalt-style
-    /// machine each node then reads its kernel image from the shared FS
-    /// — the boot-storm contention charge — and the executors come up
-    /// when every image read completes; SLURM-style nodes (no boot) come
-    /// up immediately.
-    fn alloc_ready(&mut self, now: Time, r: AllocReady) {
-        self.allocs_granted_n += 1;
-        let image = self.cfg.provision.as_ref().map(|p| p.boot_image_bytes).unwrap_or(0);
-        if r.boot_s > 0.0 && image > 0 {
-            let cpn = self.cfg.machine.cores_per_node;
-            let mut reads = 0u32;
-            for &node in &r.nodes {
-                let core = node * cpn;
-                if core >= self.cores.len() {
-                    continue;
-                }
-                let id = self.fs.submit(now, core, FsOp::Read { bytes: image });
-                self.fs_ops.insert(id, (core, r.id as usize, Stage::Boot, 0));
-                reads += 1;
-            }
-            if reads > 0 {
-                self.boot_allocs.insert(r.id, (r.nodes, reads));
-                self.arm_fs_wake();
-                return;
-            }
-        }
-        self.revive_nodes(now, &r.nodes);
     }
 
     /// Bring an allocation's nodes into service: fresh executors with
@@ -1994,7 +1840,7 @@ impl World {
     fn revive_nodes(&mut self, now: Time, nodes: &[usize]) {
         let cpn = self.cfg.machine.cores_per_node;
         for &node in nodes {
-            if self.condemned.contains(&node) {
+            if self.chaos.is_condemned(node) {
                 continue;
             }
             for core in (node * cpn)..(node * cpn + cpn).min(self.cores.len()) {
@@ -2008,9 +1854,9 @@ impl World {
                     c.current = None;
                     c.staging = 0;
                     c.staged.clear();
-                    c.result_buf.clear();
                     c.epoch = c.epoch.wrapping_add(1);
                 }
+                let _ = self.wire.drop_slot(core);
                 if self.sharded() {
                     let d = self.shard_of_core(core);
                     self.shards[d].idle.push_back(core);
@@ -2021,16 +1867,6 @@ impl World {
             }
         }
         self.wake_dispatch(now);
-    }
-
-    /// An allocation went away (idle release or walltime expiry): stop
-    /// its executors and bounce whatever they held through the retry
-    /// path. A boot still in flight is simply cancelled.
-    fn alloc_down(&mut self, now: Time, alloc: AllocId, nodes: &[usize]) {
-        self.boot_allocs.remove(&alloc);
-        for &node in nodes {
-            self.take_node_down(now, node);
-        }
     }
 
     /// End of campaign: release every held allocation so consumption
@@ -2134,7 +1970,7 @@ impl World {
                     // from the retry, so exactly-once is preserved.
                     if self.cores[core].alive
                         && self.cores[core].epoch == epoch
-                        && !self.hung.contains(&self.node_of(core))
+                        && !self.chaos.is_hung(self.node_of(core))
                     {
                         self.tstate[task].end_exec = now;
                         if let Some(o) = &self.obs {
@@ -2176,16 +2012,9 @@ impl World {
                                 // entry means the allocation was released
                                 // or expired mid-boot: ignore.
                                 let alloc = task as AllocId;
-                                let booted = match self.boot_allocs.get_mut(&alloc) {
-                                    Some((_, left)) => {
-                                        *left -= 1;
-                                        *left == 0
-                                    }
-                                    None => false,
-                                };
-                                if booted {
-                                    let (nodes, _) =
-                                        self.boot_allocs.remove(&alloc).expect("boot entry");
+                                if let Some(nodes) =
+                                    self.prov.as_mut().and_then(|p| p.boot_read_done(alloc))
+                                {
                                     self.revive_nodes(now, &nodes);
                                 }
                                 continue;
@@ -2194,16 +2023,10 @@ impl World {
                                 // One striped head-read chunk finished; the
                                 // head holds the object when all stripes do.
                                 let node = self.node_of(core);
-                                let part = node
-                                    / self.cfg.collective.expect("bcast without config").partition_nodes;
-                                let head_ready = match self.stage.as_mut() {
+                                let head_ready = match self.staging.as_mut() {
                                     Some(st) => {
-                                        let left = st
-                                            .head_pending
-                                            .get_mut(&(part, task))
-                                            .expect("unknown bcast stripe");
-                                        *left -= 1;
-                                        *left == 0
+                                        let part = st.partition_of_node(node);
+                                        st.head_stripe_done(part, task)
                                     }
                                     None => false,
                                 };
@@ -2249,7 +2072,7 @@ impl World {
                     let node = node as usize;
                     // Already-dead nodes can't hang; otherwise arm the
                     // hang and schedule its detection.
-                    if !self.condemned.contains(&node) && self.hung.insert(node) {
+                    if self.chaos.hang(node) {
                         if let Some(o) = &self.obs {
                             o.registry.inc(Ctr::FaultsInjected);
                         }
@@ -2261,11 +2084,10 @@ impl World {
                 }
                 Ev::FaultSlow { node, factor, duration_s } => {
                     let node = node as usize;
-                    if !self.condemned.contains(&node) {
+                    if self.chaos.slow(node, now + secs(duration_s), factor) {
                         if let Some(o) = &self.obs {
                             o.registry.inc(Ctr::FaultsInjected);
                         }
-                        self.slow_until.insert(node, (now + secs(duration_s), factor.max(1.0)));
                     }
                 }
                 Ev::FaultDetect { node } => {
@@ -2273,7 +2095,7 @@ impl World {
                     // The detector's sim twin: the hang horizon elapsed —
                     // condemn the node and bounce everything it held
                     // (NodeLost, retriable) through the retry path.
-                    if self.hung.contains(&node) {
+                    if self.chaos.is_hung(node) {
                         if let Some(o) = &self.obs {
                             o.registry.inc(Ctr::NodesSuspended);
                         }
@@ -2297,24 +2119,20 @@ impl World {
                     // branch below fails the stranded tasks terminally.
                     let dead = self.prov.as_ref().map(|p| p.exhausted()).unwrap_or(true);
                     if !dead {
-                        let tick_s = self
-                            .cfg
-                            .provision
-                            .as_ref()
-                            .map(|p| p.tick_s.max(1e-3))
-                            .unwrap_or(1.0);
+                        let tick_s =
+                            self.prov.as_ref().map(|p| p.tick_s().max(1e-3)).unwrap_or(1.0);
                         self.sched.after_secs(tick_s, Ev::ProvisionTick);
                     }
                 }
                 Ev::AllocBoot => {
-                    if self.boot_wake_target == Some(now) {
-                        self.boot_wake_target = None;
+                    if let Some(p) = self.prov.as_mut() {
+                        p.boot_wake_fired(now);
                     }
                     self.drive_provisioner(now);
                 }
                 Ev::AllocExpire => {
-                    if self.expire_wake_target == Some(now) {
-                        self.expire_wake_target = None;
+                    if let Some(p) = self.prov.as_mut() {
+                        p.expire_wake_fired(now);
                     }
                     self.drive_provisioner(now);
                 }
@@ -2346,15 +2164,12 @@ impl World {
     /// Seconds the pre-dispatch broadcast took (None: staging disabled,
     /// nothing to stage, or still in flight).
     pub fn staging_done_secs(&self) -> Option<f64> {
-        self.stage.as_ref().and_then(|s| s.done_at).map(to_secs)
+        self.staging.as_ref().and_then(|s| s.done_at()).map(to_secs)
     }
 
     /// Bytes the broadcast landed on node ramdisks (nodes × working set).
     pub fn staged_bytes(&self) -> u64 {
-        match &self.stage {
-            Some(s) => s.objects.iter().map(|(_, b)| *b).sum::<u64>() * s.nodes as u64,
-            None => 0,
-        }
+        self.staging.as_ref().map(|s| s.staged_bytes()).unwrap_or(0)
     }
 
     /// Total shared-FS operations the campaign issued (staging reads,
@@ -2365,7 +2180,7 @@ impl World {
 
     /// Per-partition IFS collectors (empty when IFS is off).
     pub fn collectors(&self) -> &[PartitionCollector] {
-        &self.collectors
+        self.staging.as_ref().map(|s| s.collectors()).unwrap_or(&[])
     }
 
     /// Cross-shard work-steal events (hierarchical mode; 0 otherwise).
@@ -2390,12 +2205,12 @@ impl World {
 
     /// Walltime expirations the provisioner observed (provisioned mode).
     pub fn provision_expirations(&self) -> u64 {
-        self.expirations_n
+        self.prov.as_ref().map(|p| p.expirations()).unwrap_or(0)
     }
 
     /// Allocations the LRM granted over the campaign (provisioned mode).
     pub fn allocations_granted(&self) -> u64 {
-        self.allocs_granted_n
+        self.prov.as_ref().map(|p| p.grants()).unwrap_or(0)
     }
 
     /// Nodes currently held by the provisioner (0 when unprovisioned or

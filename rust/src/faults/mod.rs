@@ -11,9 +11,100 @@
 //! seam). Same seed → same plan → same injected faults, which is what
 //! lets `bench_faults` assert bit-identical sim results across runs.
 
+use crate::sim::engine::Time;
 use crate::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::time::Duration;
+
+/// Per-node MTBF draws as split RNG streams: the failure time of node
+/// `k` is a pure function of `(seed, k)`, never threaded through a
+/// shared generator, so the schedule is identical across dispatcher
+/// counts and across the serial and partition-parallel engines. Both
+/// worlds used to carry this loop as private copies; this is the one
+/// implementation. Yields `(node, fail_at_seconds)`.
+pub fn mtbf_schedule(
+    seed: u64,
+    nodes: std::ops::Range<usize>,
+    mtbf_s: f64,
+) -> impl Iterator<Item = (usize, f64)> {
+    nodes.map(move |node| (node, Rng::split(seed, node as u64).exp(mtbf_s)))
+}
+
+/// Shard-local chaos runtime state, shared by the serial and
+/// partition-parallel sim worlds (which previously carried near-identical
+/// private copies — the fault-replay dedup target).
+///
+/// Node indices are whatever the host uses (global in `simworld`, local
+/// in `parworld` lanes); the state never crosses a lane boundary.
+#[derive(Debug, Default)]
+pub struct ChaosState {
+    /// Nodes killed permanently (MTBF / injected failures): a later
+    /// allocation grant must NOT revive them.
+    condemned: HashSet<usize>,
+    /// Nodes currently hung (computing, never reporting) — awaiting
+    /// their detection event.
+    hung: HashSet<usize>,
+    /// node → (until, factor) straggler stretch applied to executions
+    /// begun before `until`.
+    slow_until: HashMap<usize, (Time, f64)>,
+    /// Nodes whose scheduled kill came from the fault plan (so its
+    /// firing counts toward `Ctr::FaultsInjected`, unlike MTBF draws).
+    crash_tagged: HashSet<usize>,
+}
+
+impl ChaosState {
+    pub fn new() -> ChaosState {
+        ChaosState::default()
+    }
+
+    /// Mark a planned crash at arm time, so its firing is attributable.
+    pub fn tag_crash(&mut self, node: usize) {
+        self.crash_tagged.insert(node);
+    }
+
+    /// A kill fired for `node`: clear any hang, condemn it permanently.
+    /// Returns true when the kill was a tagged plan crash (count it as
+    /// an injected fault).
+    pub fn node_failed(&mut self, node: usize) -> bool {
+        let tagged = self.crash_tagged.remove(&node);
+        self.hung.remove(&node);
+        self.condemned.insert(node);
+        tagged
+    }
+
+    pub fn is_condemned(&self, node: usize) -> bool {
+        self.condemned.contains(&node)
+    }
+
+    /// A hang fired. Returns true when the node newly hangs (the caller
+    /// arms the failure detector); dead nodes can't hang.
+    pub fn hang(&mut self, node: usize) -> bool {
+        !self.condemned.contains(&node) && self.hung.insert(node)
+    }
+
+    pub fn is_hung(&self, node: usize) -> bool {
+        self.hung.contains(&node)
+    }
+
+    /// A straggler fault fired. Returns true when applied.
+    pub fn slow(&mut self, node: usize, until: Time, factor: f64) -> bool {
+        if self.condemned.contains(&node) {
+            return false;
+        }
+        self.slow_until.insert(node, (until, factor.max(1.0)));
+        true
+    }
+
+    /// Execution-stretch factor for a task starting on `node` at `t`
+    /// (1.0 when the node is not currently slow).
+    pub fn stretch(&self, node: usize, t: Time) -> f64 {
+        match self.slow_until.get(&node) {
+            Some(&(until, factor)) if t < until => factor,
+            _ => 1.0,
+        }
+    }
+}
 
 /// What happens to the victim node.
 #[derive(Clone, Debug, PartialEq)]

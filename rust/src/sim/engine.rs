@@ -522,6 +522,47 @@ impl<E> ShardedScheduler<E> {
     }
 }
 
+/// Sense-reversing spin barrier for multi-threaded window drivers. The
+/// window cadence is sub-millisecond (one barrier pair per lookahead of
+/// virtual time), so a futex-parking barrier would dominate the run;
+/// spinning costs ~100 ns per round. Lives here, next to the window
+/// protocol it synchronizes, so every parallel host (the partition
+/// parallel world today, bench harnesses tomorrow) shares one
+/// implementation.
+pub struct SpinBarrier {
+    n: usize,
+    count: std::sync::atomic::AtomicUsize,
+    generation: std::sync::atomic::AtomicUsize,
+}
+
+impl SpinBarrier {
+    pub fn new(n: usize) -> SpinBarrier {
+        use std::sync::atomic::AtomicUsize;
+        SpinBarrier { n, count: AtomicUsize::new(0), generation: AtomicUsize::new(0) }
+    }
+
+    pub fn wait(&self) {
+        use std::sync::atomic::Ordering;
+        let g = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == g {
+                spins += 1;
+                if spins < 128 {
+                    std::hint::spin_loop();
+                } else {
+                    // Oversubscribed (more workers than cores): stop
+                    // burning the timeslice the straggler needs.
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

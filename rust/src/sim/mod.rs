@@ -11,6 +11,6 @@ pub mod engine;
 pub mod link;
 pub mod machine;
 
-pub use engine::{CrossEvent, Scheduler, ShardedScheduler, Time, SECS};
+pub use engine::{CrossEvent, Scheduler, ShardedScheduler, SpinBarrier, Time, SECS};
 pub use link::SharedLink;
 pub use machine::Machine;

@@ -1,11 +1,14 @@
 //! Integration tests for the partition-parallel simulated fabric
 //! (`falkon::falkon::parworld`): the determinism contract (bit-identical
-//! virtual results at every worker-thread count), the in-transit
-//! completion rule (a campaign cannot be declared done while a
-//! cross-shard forward is between lanes at a barrier), fault bounce and
-//! reclaim paths, and coordinator-mediated work stealing.
+//! virtual results at every worker-thread count, with and without the
+//! staging / provisioning / wire-batching layers folded in), the
+//! in-transit completion rule (a campaign cannot be declared done while
+//! a cross-shard forward is between lanes at a barrier), fault bounce
+//! and reclaim paths, and coordinator-mediated work stealing.
 
 use falkon::falkon::parworld::{ParConfig, ParWorld};
+use falkon::falkon::provision::ProvisionPolicy;
+use falkon::falkon::simworld::{CollectiveConfig, SimProvisionConfig};
 use falkon::faults::{FaultEvent, FaultKind, FaultMix, FaultPlan};
 use falkon::sim::machine::Machine;
 
@@ -50,6 +53,54 @@ fn virtual_results_are_bit_identical_across_thread_counts() {
         // Strongest form: the merged per-task campaign — every dispatch,
         // start, end, result timestamp and core/shard placement — is
         // byte-identical as CSV.
+        let (a, b) = (base.campaign.as_ref().unwrap(), r.campaign.as_ref().unwrap());
+        assert_eq!(a.to_csv(), b.to_csv(), "{threads} threads: campaign records diverged");
+    }
+}
+
+#[test]
+fn layered_virtual_results_are_bit_identical_at_160k_cores() {
+    // The full layer stack — collective staging, elastic provisioning,
+    // result wire-batching — plus MTBF crash draws, on the paper's
+    // 160K-core BG/P geometry (640 psets = 40 960 nodes). The virtual
+    // results must be bit-identical at 1, 4 and 16 worker threads: the
+    // layers are shard-local state machines, so folding them into the
+    // lanes must not leak wall-clock scheduling into virtual time.
+    const N: u64 = 8000;
+    let m = Machine::bgp_psets(640); // 40 960 nodes, 163 840 cores
+    let nodes = m.nodes;
+    let mk = || {
+        let mut cfg = ParConfig::new(m.clone(), 16);
+        cfg.collective = Some(CollectiveConfig::for_machine(&m));
+        cfg.stage_bytes = vec![4 << 20];
+        cfg.provision = Some(SimProvisionConfig::new(ProvisionPolicy::Static {
+            nodes,
+            walltime_s: 1e6,
+        }));
+        cfg.result_batch = 4;
+        cfg.result_window_s = 0.002;
+        cfg.node_mtbf_s = Some(200_000.0);
+        cfg.seed = 7;
+        cfg.record_campaign = true;
+        cfg
+    };
+    let base = ParWorld::new(mk(), N).run(1);
+    assert_eq!(base.completed + base.failed, N, "every task must reach a terminal state");
+    assert!(base.completed > 0);
+    assert!(base.staging_done_s.is_some(), "staging barrier never closed");
+    assert!(base.prov_grants >= 1, "static pool was never granted");
+
+    for threads in [4usize, 16] {
+        let r = ParWorld::new(mk(), N).run(threads);
+        assert_eq!(r.completed, base.completed, "{threads} threads");
+        assert_eq!(r.failed, base.failed, "{threads} threads");
+        assert_eq!(r.windows, base.windows, "{threads} threads");
+        assert_eq!(r.events, base.events, "{threads} threads");
+        assert_eq!(r.per_shard, base.per_shard, "{threads} threads");
+        assert!(r.makespan_s == base.makespan_s, "{threads} threads: makespan drifted");
+        assert!(r.staging_done_s == base.staging_done_s, "{threads} threads: staging drifted");
+        assert_eq!(r.staged_bytes, base.staged_bytes, "{threads} threads");
+        assert_eq!(r.prov_grants, base.prov_grants, "{threads} threads");
         let (a, b) = (base.campaign.as_ref().unwrap(), r.campaign.as_ref().unwrap());
         assert_eq!(a.to_csv(), b.to_csv(), "{threads} threads: campaign records diverged");
     }

@@ -1,0 +1,348 @@
+//! Property tests for the shared world layers (`falkon::falkon::layers`):
+//! each layer's decision functions are checked against the pre-refactor
+//! reference formulas they were extracted from, then the layered serial
+//! world is checked for run-to-run determinism and the layered parallel
+//! world for consistency with the serial calibration anchors at D = 1.
+
+use falkon::collective::bcast::stripe_chunks;
+use falkon::falkon::layers::{
+    head_read_secs, mtbf_schedule, BufferVerdict, ChaosState, CollectiveStaging, FlushKind,
+    WireBatch,
+};
+use falkon::falkon::parworld::{ParConfig, ParWorld};
+use falkon::falkon::provision::{GrowthPolicy, ProvisionPolicy};
+use falkon::falkon::simworld::{
+    CollectiveConfig, ServiceModel, SimProvisionConfig, SimTask, WireProto, World, WorldConfig,
+};
+use falkon::sim::engine::{secs, SECS};
+use falkon::sim::machine::Machine;
+use falkon::util::rng::Rng;
+
+// ---------------------------------------------------------------- wirebatch
+
+#[test]
+fn bundle_target_matches_reference_formula() {
+    // Fixed policy: always the configured bundle, floored at 1.
+    let fixed: WireBatch<usize> = WireBatch::new(0, 0.0, 24, 0, 4);
+    for queued in [0usize, 1, 7, 1000] {
+        for idle in [0usize, 1, 5, 300] {
+            assert_eq!(fixed.bundle_target(queued, idle), 24);
+        }
+    }
+    let degenerate: WireBatch<usize> = WireBatch::new(0, 0.0, 0, 0, 4);
+    assert_eq!(degenerate.bundle_target(10, 10), 1);
+
+    // Adaptive policy: ceil(queued / idle) clamped to [1, cap] — the
+    // live `bundle_for_depth` rule.
+    let cap = 32usize;
+    let adaptive: WireBatch<usize> = WireBatch::new(0, 0.0, 24, cap, 4);
+    for queued in [0usize, 1, 31, 32, 33, 500, 10_000] {
+        for idle in [0usize, 1, 2, 17, 256] {
+            let reference = queued.div_ceil(idle.max(1)).clamp(1, cap);
+            assert_eq!(
+                adaptive.bundle_target(queued, idle),
+                reference,
+                "queued={queued} idle={idle}"
+            );
+        }
+    }
+}
+
+#[test]
+fn split_dispatch_plus_single_result_equals_folded_cost() {
+    // The A6 identity the batched calibration depends on: carving the
+    // result direction out of the dispatch per-task constant must leave
+    // per-task totals EXACTLY unchanged at batch size 1.
+    for machine in [Machine::bgp(), Machine::sicortex()] {
+        for proto in [WireProto::Tcp, WireProto::Ws] {
+            let m = ServiceModel::for_machine(&machine, proto);
+            let legacy: WireBatch<usize> = WireBatch::new(0, 0.0, 1, 0, 1);
+            let split: WireBatch<usize> = WireBatch::new(1, 0.0, 1, 0, 1);
+            assert!(legacy.result_cost_s(&m, 1).is_none());
+            for n in [1usize, 4, 64] {
+                let folded = legacy.dispatch_cost_s(&m, n, 0.0);
+                let carved = split.dispatch_cost_s(&m, n, 0.0)
+                    + n as f64 * split.result_cost_s(&m, 1).unwrap();
+                assert!(
+                    (folded - carved).abs() < 1e-15,
+                    "{proto:?} n={n}: folded {folded} vs split+result {carved}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn buffer_verdicts_follow_the_flush_policy() {
+    let mut wb: WireBatch<u32> = WireBatch::new(3, 0.01, 1, 0, 2);
+    assert!(wb.modeled());
+    // First completion on a still-busy slot arms the window; the next
+    // holds; the cap-th ships.
+    assert_eq!(wb.buffer(0, 10, false), BufferVerdict::ArmWindow);
+    assert_eq!(wb.buffer(0, 11, false), BufferVerdict::Hold);
+    assert_eq!(wb.buffer(0, 12, false), BufferVerdict::Flush(FlushKind::Cap));
+    assert_eq!(wb.take(0), vec![10, 11, 12]);
+    // A completion that idles the slot ships immediately regardless of
+    // fill level (sleep-0 latency is unhurt by batching).
+    assert_eq!(wb.buffer(0, 13, true), BufferVerdict::Flush(FlushKind::Idle));
+    assert_eq!(wb.take(0), vec![13]);
+    // The window flush drains only what a cap/idle flush did not.
+    assert_eq!(wb.buffer(1, 20, false), BufferVerdict::ArmWindow);
+    assert_eq!(wb.window_expired(1), Some(vec![20]));
+    assert_eq!(wb.window_expired(1), None, "already drained");
+    // Node death bounces buffered completions back to the caller.
+    assert_eq!(wb.buffer(1, 21, false), BufferVerdict::ArmWindow);
+    assert!(wb.slot_occupied(1));
+    assert_eq!(wb.drop_slot(1), vec![21]);
+    assert!(!wb.slot_occupied(1));
+}
+
+// ----------------------------------------------------------------- staging
+
+#[test]
+fn stripe_chunks_cover_every_byte_with_no_empty_chunk() {
+    for bytes in [1u64, 2, 3, 1000, 5_000_000, 35_000_001] {
+        for stripes in [1u32, 2, 4, 7, 64] {
+            let chunks: Vec<u64> = stripe_chunks(bytes, stripes).collect();
+            assert!(chunks.len() as u64 <= u64::from(stripes));
+            assert_eq!(chunks.iter().sum::<u64>(), bytes, "{bytes}/{stripes}");
+            assert!(chunks.iter().all(|&c| c >= 1), "{bytes}/{stripes}: {chunks:?}");
+        }
+    }
+}
+
+#[test]
+fn head_read_secs_matches_reference_formula() {
+    let fs = Machine::bgp().fs;
+    for bytes in [1u64, 5_000_000, 35_000_000] {
+        for stripes in [1u32, 4] {
+            for heads in [1usize, 16, 640] {
+                let got = head_read_secs(&fs, bytes, stripes, heads);
+                // Reference: op latency + slowest chunk over the
+                // per-stream share of the FS read capacity.
+                let streams = heads as f64 * f64::from(stripes);
+                let bps = fs.per_client_bps.min(fs.read_bps / streams).max(1.0);
+                let max_chunk = stripe_chunks(bytes, stripes).max().unwrap();
+                let want = fs.op_latency_s + max_chunk as f64 * 8.0 / bps;
+                assert!(
+                    (got - want).abs() < 1e-12,
+                    "bytes={bytes} stripes={stripes} heads={heads}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn broadcast_uplink_serializes_per_node() {
+    // One 16-node partition, binary tree: the head's children must be
+    // delivered at now + k·xfer (store-and-forward on one uplink), and
+    // the busy horizon must persist into the next object's forwards.
+    let m = Machine::bgp_psets(1);
+    let cc = CollectiveConfig { partition_nodes: 16, ..CollectiveConfig::for_machine(&m) };
+    let mut stg = CollectiveStaging::new(cc, m.cores_per_node, 16);
+    let bytes = 4_000_000u64;
+    let reads = stg.begin_broadcast(vec![("a", bytes), ("b", bytes)]);
+    // stripes chunks per object per partition head.
+    assert_eq!(reads.len(), 2 * cc.stripes as usize);
+    for _ in 0..cc.stripes {
+        stg.head_stripe_done(0, 0);
+    }
+    let xfer = secs(bytes as f64 * 8.0 / cc.link_bps);
+    let now = 7 * SECS;
+    let fwd_a = stg.forward(now, 0, 0).expect("head forwards object a");
+    for (k, &(_, at)) in fwd_a.deliveries.iter().enumerate() {
+        assert_eq!(at, now + (k as u64 + 1) * xfer, "child {k} of object a");
+    }
+    let kids = fwd_a.deliveries.len() as u64;
+    // Second object from the same head: its transfers queue behind the
+    // first object's sends on the shared uplink.
+    let fwd_b = stg.forward(now, 0, 1).expect("head forwards object b");
+    for (k, &(_, at)) in fwd_b.deliveries.iter().enumerate() {
+        assert_eq!(at, now + (kids + k as u64 + 1) * xfer, "child {k} of object b");
+    }
+    assert!(!fwd_a.done && !fwd_b.done);
+    assert_eq!(stg.staged_bytes(), 2 * bytes * 16);
+}
+
+// ------------------------------------------------------------ faults layer
+
+#[test]
+fn mtbf_schedule_equals_raw_split_stream_draws() {
+    // The shared schedule must be exactly the per-node split draws both
+    // worlds used to make privately — same seed, same node, same time.
+    let seed = 0xfeed_beef;
+    let mtbf = 3600.0;
+    let sched: Vec<(usize, f64)> = mtbf_schedule(seed, 0..256, mtbf).collect();
+    assert_eq!(sched.len(), 256);
+    for &(node, at) in &sched {
+        let want = Rng::split(seed, node as u64).exp(mtbf);
+        assert_eq!(at, want, "node {node}");
+    }
+    // And it is a pure function: a different dispatcher count slicing
+    // the same range yields the same draws.
+    let lo: Vec<(usize, f64)> = mtbf_schedule(seed, 0..128, mtbf).collect();
+    assert_eq!(&sched[..128], &lo[..]);
+}
+
+#[test]
+fn chaos_state_lifecycle_matches_the_inline_machines() {
+    let mut cs = ChaosState::new();
+    // Straggler: stretch applies strictly inside the window, condemned
+    // nodes are immune.
+    assert!(cs.slow(3, 10 * SECS, 4.0));
+    assert_eq!(cs.stretch(3, 9 * SECS), 4.0);
+    assert_eq!(cs.stretch(3, 10 * SECS), 1.0);
+    assert_eq!(cs.stretch(4, 5 * SECS), 1.0);
+    // Hang is sticky until the node is failed, and cannot re-arm.
+    assert!(cs.hang(5));
+    assert!(!cs.hang(5), "second hang must not re-arm the detector");
+    assert!(cs.is_hung(5));
+    // Failing the node condemns it and clears the hang.
+    cs.node_failed(5);
+    assert!(cs.is_condemned(5));
+    assert!(!cs.is_hung(5));
+    assert!(!cs.hang(5), "condemned nodes cannot hang");
+    assert!(!cs.slow(5, 100 * SECS, 2.0), "condemned nodes cannot slow");
+    // A planned crash counts as an injected fault exactly once.
+    cs.tag_crash(7);
+    assert!(cs.node_failed(7));
+    assert!(!cs.node_failed(7), "second failure of the same node is not re-counted");
+}
+
+// -------------------------------------------- layered serial determinism
+
+#[test]
+fn staged_and_batched_simworld_is_deterministic() {
+    let run = || {
+        let mut cfg = WorldConfig::new(Machine::bgp(), 256);
+        cfg.collective = Some(CollectiveConfig::for_machine(&cfg.machine));
+        cfg.result_batch = 4;
+        cfg.adaptive_bundle_cap = 16;
+        let tasks = vec![
+            SimTask {
+                exec_secs: 0.5,
+                write_bytes: 10_000,
+                desc_len: 64,
+                objects: vec![("dock5.bin", 5_000_000)],
+                ..Default::default()
+            };
+            300
+        ];
+        let mut w = World::new(cfg, tasks);
+        w.run(u64::MAX);
+        (
+            w.completed(),
+            w.failed(),
+            w.campaign().makespan_s(),
+            w.staging_done_secs(),
+            w.shared_fs_ops(),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, 300);
+    assert_eq!(a, b, "layered serial world must be run-to-run deterministic");
+}
+
+#[test]
+fn provisioned_and_batched_simworld_is_deterministic() {
+    let run = || {
+        let mut cfg = WorldConfig::new(Machine::bgp(), 1024);
+        cfg.provision = Some(SimProvisionConfig::new(ProvisionPolicy::Dynamic {
+            min_nodes: 8,
+            max_nodes: 256,
+            tasks_per_node: 4,
+            idle_release_s: 5.0,
+            walltime_s: 3600.0,
+            growth: GrowthPolicy::Exponential,
+        }));
+        cfg.result_batch = 2;
+        let mut w = World::new(cfg, vec![SimTask::sleep(0.5); 1500]);
+        w.run(u64::MAX);
+        (w.completed(), w.campaign().makespan_s(), w.allocated_core_secs())
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, 1500);
+    assert_eq!(a, b, "layered provisioning must be run-to-run deterministic");
+}
+
+// ------------------------------------------- parallel vs serial anchors
+
+#[test]
+fn parworld_d1_sleep0_rate_sits_in_the_bgp_anchor_band() {
+    // At D = 1 the parallel fabric is one coordinator feeding one
+    // dispatcher — the same service pipeline the serial world
+    // calibrates against the paper's single-dispatcher BG/P anchor
+    // (~1758 sleep-0 tasks/s, Table 4 regime). The parallel engine adds
+    // forwarding ahead of that dispatcher, so it must land in the same
+    // band, just under the anchor.
+    let mut cfg = ParConfig::new(Machine::bgp_psets(1), 1);
+    cfg.fwd_bundle = 64;
+    let n = 4000;
+    let r = ParWorld::new(cfg, n).run(1);
+    assert_eq!(r.completed, n);
+    assert!(
+        r.virtual_tasks_per_s > 1400.0 && r.virtual_tasks_per_s < 1900.0,
+        "D=1 sleep-0 rate off the anchor band: {}",
+        r.virtual_tasks_per_s
+    );
+}
+
+#[test]
+fn parworld_d1_layered_stays_consistent_with_serial_anchors() {
+    // Staging + batching at D = 1: the parallel world's closed-form
+    // staging charge must be conservative (>= the serial world's
+    // event-driven FS figure for the same geometry, which lets early
+    // finishers release bandwidth) without wildly overshooting it, and
+    // the dispatch regime after the barrier lifts must stay consistent
+    // with the single-dispatcher anchor. Provisioned boot overlaps the
+    // staging phase nondeterministically in wall terms, so the boot
+    // layer gets its own consistency checks (`provisioned_campaign_*`
+    // in the module tests) instead of riding this rate assertion.
+    let m = Machine::bgp_psets(1);
+    let nodes = m.nodes;
+    let mut cfg = ParConfig::new(m.clone(), 1);
+    cfg.collective = Some(CollectiveConfig::for_machine(&m));
+    cfg.stage_bytes = vec![5_000_000, 35_000_000];
+    cfg.result_batch = 4;
+    let n = 2000;
+    let r = ParWorld::new(cfg, n).run(1);
+    assert_eq!(r.completed, n, "failed={}", r.failed);
+    let staged = r.staging_done_s.expect("staging must have completed");
+
+    // Serial reference for the same staging geometry.
+    let mut scfg = WorldConfig::new(Machine::bgp_psets(1), 256);
+    scfg.collective = Some(CollectiveConfig::for_machine(&scfg.machine));
+    let tasks = vec![
+        SimTask {
+            objects: vec![("a", 5_000_000), ("b", 35_000_000)],
+            desc_len: 64,
+            ..Default::default()
+        };
+        64
+    ];
+    let mut w = World::new(scfg, tasks);
+    w.run(u64::MAX);
+    let serial_staged = w.staging_done_secs().expect("serial staging must complete");
+    assert!(
+        staged >= serial_staged * 0.9,
+        "closed-form staging ({staged}s) must not undercut the serial FS model ({serial_staged}s)"
+    );
+    assert!(
+        staged < serial_staged * 20.0,
+        "closed-form staging ({staged}s) wildly over the serial figure ({serial_staged}s)"
+    );
+    // Post-barrier dispatch throughput: tasks/s over the dispatch phase
+    // only (makespan minus the staging + boot prologue) stays in the
+    // single-dispatcher anchor band.
+    let dispatch_s = r.makespan_s - staged;
+    assert!(dispatch_s > 0.0);
+    let rate = r.completed as f64 / dispatch_s;
+    assert!(
+        rate > 1200.0 && rate < 2200.0,
+        "post-staging dispatch rate off the anchor band: {rate}"
+    );
+    assert_eq!(r.staged_bytes, 40_000_000 * nodes as u64);
+}
